@@ -1,0 +1,35 @@
+//! Extremely-low-memory survival (paper §V-C, Figs 15–17): progressively
+//! shrink the cluster memory and watch baselines fall over (OOM/OOT) while
+//! LIME keeps serving Llama3.3-70B.
+//!
+//! Run with: `cargo run --release --example lowmem_survival`
+
+use lime::baselines::all;
+use lime::cluster::Cluster;
+use lime::model::ModelSpec;
+use lime::net::BandwidthTrace;
+use lime::workload::Pattern;
+
+fn main() {
+    let spec = ModelSpec::llama33_70b();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let settings = [
+        ("Setting 1 (Orin64 + 2xOrin32 + 2xNX16)", Cluster::lowmem_setting1()),
+        ("Setting 2 (one NX16 halved to 8 GB)", Cluster::lowmem_setting2()),
+        ("Setting 3 (8 GB removed from an Orin32)", Cluster::lowmem_setting3()),
+    ];
+    for (name, cluster) in settings {
+        println!("\n=== {name}: total usable {} ===", lime::util::bytes::fmt_bytes(cluster.total_usable_mem()));
+        for method in all() {
+            for pattern in [Pattern::Sporadic, Pattern::Bursty] {
+                let out = method.run(&spec, &cluster, &bw, pattern, 16);
+                let label = match out.ms_per_token() {
+                    None => "OOM".to_string(),
+                    Some(ms) if ms > pattern.oot_limit_ms() => format!("OOT ({ms:.0} ms/tok)"),
+                    Some(ms) => format!("{ms:9.1} ms/tok"),
+                };
+                println!("  {:32} {:9}  {}", method.name(), format!("{pattern:?}"), label);
+            }
+        }
+    }
+}

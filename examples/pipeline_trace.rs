@@ -1,0 +1,12 @@
+//! Reproduce the paper's schedule figures (Figs 3, 4): print Gantt traces
+//! of the traditional pipeline-with-offloading schedule next to LIME's
+//! interleaved schedule, under both request patterns.
+//!
+//! Run with: `cargo run --release --example pipeline_trace`
+
+fn main() {
+    lime::experiments::fig34_schedules(3);
+    println!("\nLegend: '#' compute, 'L' SSD load, 'S' SSD store, '~' activation hop, 'K' KV transfer, '.' stall");
+    println!("Note how the traditional schedule (Figs 3a/4a) stalls ('.') on every load,");
+    println!("while the interleaved schedule hides loads behind other devices' compute.");
+}

@@ -1,0 +1,59 @@
+//! Quickstart: plan Llama3.3-70B over four heterogeneous Jetsons, predict
+//! per-token latency with the Eq. 1 cost model, simulate LIME vs the naive
+//! pipeline, and print the interleaved schedule.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use lime::cluster::Cluster;
+use lime::model::ModelSpec;
+use lime::net::BandwidthTrace;
+use lime::pipeline::{run_interleaved, run_traditional, ExecOptions, TradOptions};
+use lime::plan::{plan, PlanOptions};
+use lime::util::bytes::mbps;
+
+fn main() {
+    // 1. Describe the deployment: the paper's low-memory Setting 1 —
+    //    Llama3.3-70B across five Jetson boards that cannot hold it.
+    let spec = ModelSpec::llama33_70b();
+    let cluster = Cluster::lowmem_setting1();
+    println!(
+        "model: {} ({} layers, {:.1} GiB)",
+        spec.name,
+        spec.layers,
+        spec.total_bytes() as f64 / (1u64 << 30) as f64
+    );
+    for (i, d) in cluster.devices.iter().enumerate() {
+        println!("  dev{i}: {:14} usable {}", d.name, lime::util::bytes::fmt_bytes(d.usable_mem()));
+    }
+
+    // 2. Offline scheduler (Alg. 1): layers, offload sets, #Seg.
+    let opts = PlanOptions {
+        empirical_tokens: 256,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    };
+    let report = plan(&spec, &cluster, &opts).expect("planning failed");
+    print!("\n{}", report.allocation.describe());
+    println!(
+        "cost model: comp {:.0} ms + comm {:.0} ms + uncovered {:.0} ms = {:.0} ms/token",
+        report.cost.t_comp * 1e3,
+        report.cost.t_comm * 1e3,
+        report.cost.t_uncover * 1e3,
+        report.cost.total() * 1e3
+    );
+
+    // 3. Simulate 32 decode steps: LIME vs traditional pipeline+offload.
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let lime_run = run_interleaved(&report.allocation, &cluster, &bw, 1, 32, &ExecOptions::default());
+    let trad_run = run_traditional(&report.allocation, &cluster, &bw, 1, 32, &TradOptions::default());
+    println!(
+        "\nsimulated 32 tokens @200 Mbps (sporadic):\n  LIME interleaved:        {:8.1} ms/token\n  traditional PP+offload:  {:8.1} ms/token\n  speedup:                 {:8.2}x",
+        lime_run.ms_per_token(),
+        trad_run.ms_per_token(),
+        trad_run.ms_per_token() / lime_run.ms_per_token()
+    );
+
+    // 4. Show the interleaved schedule (compare with paper Figs 3b/6).
+    println!("\ninterleaved schedule (first steps):");
+    println!("{}", lime_run.trace.render(cluster.len(), 110));
+}

@@ -1,0 +1,72 @@
+//! End-to-end driver (DESIGN.md deliverable (b)/e2e): load the real TinyLM
+//! artifacts, deploy them across a memory-constrained virtual edge cluster
+//! with the offline scheduler, serve batched requests through the PJRT
+//! runtime with *real* SSD weight streaming, report latency/throughput, and
+//! verify losslessness against the fully resident engine.
+//!
+//! Requires `make artifacts` first. Run:
+//! `cargo run --release --example serve_cluster`
+
+use lime::runtime::Manifest;
+use lime::serve::{
+    make_requests, plan_tiny, residency_plan, serve, virtual_cluster, Engine, LayerResidency,
+};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let manifest = Manifest::load(&artifacts)?;
+    let cfg = manifest.model.clone();
+    let mut engine = Engine::new(manifest)?;
+    println!(
+        "loaded {} ({} layers, hidden {}, vocab {}) on PJRT [{}], artifacts: {:?}",
+        cfg.name,
+        cfg.layers,
+        cfg.hidden,
+        cfg.vocab,
+        engine.runtime.platform(),
+        engine.runtime.artifact_names(),
+    );
+
+    // Deploy over 4 virtual devices that each hold ~1 layer resident: the
+    // offline scheduler must offload the rest, exactly like the paper's
+    // memory-constrained Jetsons.
+    let cluster = virtual_cluster(4, &[1, 1, 1, 1]);
+    let alloc = plan_tiny(&cluster, 48).map_err(|e| anyhow::anyhow!("{e}"))?;
+    print!("\noffline plan over the virtual edge cluster:\n{}", alloc.describe());
+    let plan = residency_plan(&alloc);
+    engine.set_residency(&plan)?;
+
+    // Serve a burst of 8 requests, 24 decode steps each.
+    let reqs = make_requests(true, 8, 24, cfg.prefill_len, cfg.vocab, 42);
+    let reqs_copy = reqs.clone();
+    let report = serve(&mut engine, reqs, false)?;
+    println!(
+        "\nburst of {} requests x {} tokens:\n  prefill   {:8.2} ms mean\n  decode    {:8.2} ms/token p50, {:8.2} ms/token p99\n  throughput {:7.1} tokens/s\n  SSD weight re-reads: {}",
+        report.requests,
+        report.tokens / report.requests,
+        report.prefill_mean * 1e3,
+        report.token_p50 * 1e3,
+        report.token_p99 * 1e3,
+        report.throughput,
+        engine.weights.loads_from_disk()
+    );
+    for (i, g) in report.generations.iter().take(3).enumerate() {
+        println!("  request {i}: {:?}", g.tokens);
+    }
+
+    // Losslessness: the offloaded deployment must match the fully resident
+    // engine token-for-token and bit-for-bit on logits.
+    engine.set_residency(&vec![LayerResidency::Resident; cfg.layers])?;
+    let resident = serve(&mut engine, reqs_copy, false)?;
+    let identical = resident
+        .generations
+        .iter()
+        .zip(&report.generations)
+        .all(|(a, b)| a == b);
+    if identical {
+        println!("\nLOSSLESS: offloaded serving is bit-identical to resident serving ✓");
+        Ok(())
+    } else {
+        anyhow::bail!("losslessness check FAILED");
+    }
+}

@@ -1,0 +1,174 @@
+"""AOT compile path: lower every TinyLM entry point to HLO text + export weights.
+
+Run once at build time (`make artifacts`); Python never touches the request
+path afterwards. Interchange format is **HLO text**, not a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+xla_extension 0.5.1 (the version behind the published `xla` 0.1.6 crate)
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  <entry>.hlo.txt        one per entry point
+  weights/<tensor>.bin   raw little-endian f32 blobs
+  manifest.json          model config + per-artifact parameter order +
+                         tensor inventory (written LAST: build sentinel)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import CFG
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_specs():
+    """Every AOT entry point: name -> (fn, [(param_name, ShapeDtypeStruct)]).
+
+    Param order here IS the PJRT parameter order the Rust runtime must feed.
+    """
+    cfg = CFG
+    H, P, S = cfg.hidden, cfg.prefill_len, cfg.max_seq
+    KVH, hd, F, V = cfg.kv_heads, cfg.head_dim, cfg.ffn, cfg.vocab
+    nH = cfg.heads
+
+    x1 = ("x", _sds((1, 1, H)))
+    xp = ("x", _sds((1, P, H)))
+    kc = ("k_cache", _sds((1, S, KVH, hd)))
+    vc = ("v_cache", _sds((1, S, KVH, hd)))
+    pos = ("pos", _sds((), jnp.int32))
+    attn_w = [
+        ("ln1", _sds((H,))),
+        ("wq", _sds((H, nH * hd))),
+        ("wk", _sds((H, KVH * hd))),
+        ("wv", _sds((H, KVH * hd))),
+        ("wo", _sds((nH * hd, H))),
+    ]
+    mlp_w = [
+        ("ln2", _sds((H,))),
+        ("w_gate", _sds((H, F))),
+        ("w_up", _sds((H, F))),
+        ("w_down", _sds((F, H))),
+    ]
+
+    return {
+        "embed_prefill": (
+            model.embed_prefill,
+            [("tokens", _sds((1, P), jnp.int32)), ("table", _sds((V, H)))],
+        ),
+        "embed_decode": (
+            model.embed_decode,
+            [("tokens", _sds((1, 1), jnp.int32)), ("table", _sds((V, H)))],
+        ),
+        "layer_prefill": (model.layer_prefill, [xp] + attn_w + mlp_w),
+        "layer_decode": (
+            model.layer_decode,
+            [x1, kc, vc, pos] + attn_w + mlp_w,
+        ),
+        "mha_decode": (model.mha_decode, [x1, kc, vc, pos] + attn_w),
+        "mlp_decode": (model.mlp_decode, [x1] + mlp_w),
+        "lm_head": (
+            model.lm_head,
+            [x1, ("ln_f", _sds((H,))), ("w_out", _sds((H, V)))],
+        ),
+    }
+
+
+def export_weights(out_dir, seed=0):
+    """Write every weight tensor as raw LE f32 and return the inventory."""
+    weights = model.make_weights(seed)
+    wdir = os.path.join(out_dir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+    inventory = {}
+
+    def dump(name, arr):
+        arr = np.asarray(arr, dtype=np.float32)
+        path = os.path.join("weights", f"{name}.bin")
+        arr.tofile(os.path.join(out_dir, path))
+        inventory[name] = {"shape": list(arr.shape), "file": path}
+
+    dump("embed", weights["embed"])
+    dump("ln_f", weights["ln_f"])
+    dump("lm_head", weights["lm_head"])
+    for li in range(CFG.layers):
+        for wname, arr in zip(model.LAYER_WEIGHT_NAMES, weights[f"layer{li}"]):
+            dump(f"layer{li}.{wname}", arr)
+    return inventory
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    artifacts = {}
+    for name, (fn, params) in entry_specs().items():
+        lowered = jax.jit(fn).lower(*[sds for _, sds in params])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": fname,
+            "params": [
+                {
+                    "name": pname,
+                    "shape": list(sds.shape),
+                    "dtype": str(sds.dtype),
+                }
+                for pname, sds in params
+            ],
+        }
+        print(f"lowered {name:14s} -> {fname} ({len(text)} chars)")
+
+    inventory = export_weights(args.out_dir, args.seed)
+
+    manifest = {
+        "model": {
+            "name": "TinyLM",
+            "vocab": CFG.vocab,
+            "hidden": CFG.hidden,
+            "layers": CFG.layers,
+            "heads": CFG.heads,
+            "kv_heads": CFG.kv_heads,
+            "head_dim": CFG.head_dim,
+            "ffn": CFG.ffn,
+            "prefill_len": CFG.prefill_len,
+            "max_seq": CFG.max_seq,
+            "seed": args.seed,
+        },
+        "layer_weight_names": list(model.LAYER_WEIGHT_NAMES),
+        "attn_weight_names": list(model.ATTN_WEIGHT_NAMES),
+        "mlp_weight_names": list(model.MLP_WEIGHT_NAMES),
+        "artifacts": artifacts,
+        "tensors": inventory,
+    }
+    # Manifest is written last: it is the Makefile's build sentinel.
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(artifacts)} artifacts, "
+          f"{len(inventory)} tensors")
+
+
+if __name__ == "__main__":
+    main()

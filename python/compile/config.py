@@ -1,0 +1,41 @@
+"""TinyLM configuration — the small GQA transformer served end-to-end.
+
+The paper evaluates Llama2-13B / Qwen3-32B / Llama3.3-70B on physical Jetson
+boards; those shapes live in the Rust simulator (`model::spec`). This config
+defines the *real* model that flows through the PJRT request path: a
+synthetic-weight GQA decoder small enough to AOT-compile and serve on the CPU
+PJRT client while exercising every code path LIME needs (per-layer artifacts,
+MHA/MLP split blocks for fine-grained offload, explicit KV caches owned by the
+Rust coordinator).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TinyLMConfig:
+    vocab: int = 256
+    hidden: int = 128
+    layers: int = 8
+    heads: int = 8          # query heads
+    kv_heads: int = 2       # GQA: 4 query heads share one KV head
+    ffn: int = 384          # SwiGLU inner width
+    prefill_len: int = 16   # fixed-length prompt (paper follows EdgeShard's
+                            # fixed input/output paradigm)
+    max_seq: int = 128      # KV cache capacity (padded, mask-gated)
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    @property
+    def q_rep(self) -> int:
+        """Query heads per KV head (GQA replication factor)."""
+        assert self.heads % self.kv_heads == 0
+        return self.heads // self.kv_heads
+
+
+CFG = TinyLMConfig()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels + pure-jnp oracles (build-time only)."""
+
+from .attention import gqa_decode_attention  # noqa: F401
+from .ref import (  # noqa: F401
+    causal_prefill_attention_ref,
+    gqa_decode_attention_ref,
+)

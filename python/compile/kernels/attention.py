@@ -1,0 +1,140 @@
+"""L1 Pallas kernel: GQA decode attention (the serving hot-spot).
+
+LIME's per-token decode step reads the whole KV cache once per layer — the
+memory-bound hot-spot of edge serving. The paper's engine runs CUDA on Jetson
+GPUs (shared-memory staging, warp reductions); per DESIGN.md
+§Hardware-Adaptation we re-express the same insight for a TPU-style memory
+hierarchy instead of porting warp idioms:
+
+  * the grid iterates KV heads; each program owns one KV head's `q_rep`
+    query heads — an MXU-shaped `[q_rep, head_dim] x [head_dim, chunk]`
+    matmul per KV chunk;
+  * the KV sequence is streamed through VMEM in `CHUNK`-sized tiles
+    (BlockSpec stages the HBM→VMEM copy that the GPU code did with
+    threadblock shared-memory tiles);
+  * softmax is computed online (flash-attention style running max / sum) in
+    f32 accumulators so one pass over the cache suffices;
+  * inputs may be bf16; all accumulation is f32
+    (`preferred_element_type=float32` targets the MXU's f32 accumulate).
+
+Compiled with `interpret=True`: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO. The *structure* (tiling,
+accumulator layout, VMEM budget) is what carries to real TPUs; see
+EXPERIMENTS.md §Perf for the VMEM/MXU estimate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# KV-sequence tile staged into VMEM per loop iteration. With head_dim=16 and
+# f32, one (k, v) tile pair is 2 * CHUNK * 16 * 4 B = 4 KiB at CHUNK=32 —
+# deliberately small for TinyLM; for Llama-class head_dim=128 the same
+# structure at CHUNK=512 stages 512 KiB, well inside a 16 MiB VMEM budget
+# with double buffering.
+CHUNK = 32
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, max_seq):
+    """One grid step = one KV head.
+
+    Block shapes (leading 1 = the KV-head axis block):
+      q_ref: [1, q_rep, head_dim]    k_ref/v_ref: [1, max_seq, head_dim]
+      len_ref: [1, 1] int32          o_ref: [1, q_rep, head_dim]
+    """
+    q = q_ref[0].astype(jnp.float32)          # [q_rep, hd]
+    q_rep, head_dim = q.shape
+    length = len_ref[0, 0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(head_dim))
+
+    num_chunks = max_seq // CHUNK
+
+    def body(c, carry):
+        m_prev, l_prev, acc_prev = carry
+        start = c * CHUNK
+        k_chunk = k_ref[0, pl.dslice(start, CHUNK), :].astype(
+            jnp.float32
+        )                                      # [CHUNK, hd]
+        v_chunk = v_ref[0, pl.dslice(start, CHUNK), :].astype(
+            jnp.float32
+        )                                      # [CHUNK, hd]
+
+        # MXU-shaped scores for this tile: [q_rep, CHUNK].
+        s = (
+            jax.lax.dot_general(
+                q,
+                k_chunk,
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            * scale
+        )
+        # Mask slots at/after `length`. NB: use a large-negative rather than
+        # -inf so fully-masked tiles stay NaN-free in the online update.
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, CHUNK), 1)
+        s = jnp.where(pos < length, s, jnp.float32(-1e30))
+
+        # Online softmax update (flash-attention recurrence).
+        m_cur = jnp.max(s, axis=-1, keepdims=True)          # [q_rep, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                              # [q_rep, CHUNK]
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc_prev * alpha + jax.lax.dot_general(
+            p,
+            v_chunk,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((q_rep, 1), -1e30, dtype=jnp.float32)
+    l0 = jnp.zeros((q_rep, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((q_rep, head_dim), dtype=jnp.float32)
+    _, l_fin, acc_fin = jax.lax.fori_loop(0, num_chunks, body, (m0, l0, acc0))
+
+    o_ref[0] = acc_fin / l_fin
+
+
+def gqa_decode_attention(q, k_cache, v_cache, length):
+    """Pallas GQA decode attention; drop-in for `ref.gqa_decode_attention_ref`.
+
+    Args:
+      q:        [num_heads, head_dim]
+      k_cache:  [max_seq, kv_heads, head_dim]
+      v_cache:  [max_seq, kv_heads, head_dim]
+      length:   scalar int32 — valid cache length.
+
+    Returns:
+      [num_heads, head_dim] float32.
+    """
+    num_heads, head_dim = q.shape
+    max_seq, kv_heads, _ = k_cache.shape
+    q_rep = num_heads // kv_heads
+    assert max_seq % CHUNK == 0, f"max_seq {max_seq} must be a multiple of {CHUNK}"
+
+    # Group query heads by their KV head: head h -> kv head h // q_rep.
+    qg = q.reshape(kv_heads, q_rep, head_dim)
+    kg = jnp.swapaxes(k_cache, 0, 1)           # [kv_heads, max_seq, hd]
+    vg = jnp.swapaxes(v_cache, 0, 1)
+    len_arr = jnp.asarray(length, dtype=jnp.int32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, max_seq=max_seq),
+        grid=(kv_heads,),
+        in_specs=[
+            pl.BlockSpec((1, q_rep, head_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, max_seq, head_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, max_seq, head_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_rep, head_dim), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (kv_heads, q_rep, head_dim), jnp.float32
+        ),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(qg, kg, vg, len_arr)
+
+    return out.reshape(num_heads, head_dim)

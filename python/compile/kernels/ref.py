@@ -1,0 +1,70 @@
+"""Pure-jnp correctness oracle for the Pallas decode-attention kernel.
+
+This is the CORE correctness signal: `python/tests/test_kernel.py` sweeps
+shapes/dtypes (hypothesis) and asserts the Pallas kernel matches this oracle.
+No Pallas, no tricks — a direct transcription of masked GQA attention.
+"""
+
+import jax.numpy as jnp
+
+
+def gqa_decode_attention_ref(q, k_cache, v_cache, length):
+    """Masked grouped-query decode attention, reference implementation.
+
+    Args:
+      q:        [num_heads, head_dim] — query for the single decode token.
+      k_cache:  [max_seq, kv_heads, head_dim] — padded key cache.
+      v_cache:  [max_seq, kv_heads, head_dim] — padded value cache.
+      length:   scalar int — number of valid cache slots (mask the rest).
+
+    Returns:
+      [num_heads, head_dim] attention output, float32.
+    """
+    num_heads, head_dim = q.shape
+    max_seq, kv_heads, _ = k_cache.shape
+    q_rep = num_heads // kv_heads
+
+    qf = q.astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+
+    # [num_heads, max_seq]: score of every head against every cache slot.
+    # Head h attends to KV head h // q_rep.
+    kv_index = jnp.arange(num_heads) // q_rep
+    k_per_head = kf[:, kv_index, :]            # [max_seq, num_heads, head_dim]
+    scores = jnp.einsum("hd,shd->hs", qf, k_per_head) / jnp.sqrt(
+        jnp.float32(head_dim)
+    )
+
+    mask = jnp.arange(max_seq)[None, :] < length    # [1, max_seq]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+
+    v_per_head = vf[:, kv_index, :]            # [max_seq, num_heads, head_dim]
+    return jnp.einsum("hs,shd->hd", probs, v_per_head)
+
+
+def causal_prefill_attention_ref(q, k, v, q_rep):
+    """Causal GQA attention over a full prompt (prefill), reference.
+
+    Args:
+      q: [T, num_heads, head_dim]
+      k: [T, kv_heads, head_dim]
+      v: [T, kv_heads, head_dim]
+      q_rep: query heads per KV head.
+
+    Returns:
+      [T, num_heads, head_dim] float32.
+    """
+    t, num_heads, head_dim = q.shape
+    kv_index = jnp.arange(num_heads) // q_rep
+    kf = k.astype(jnp.float32)[:, kv_index, :]  # [T, num_heads, head_dim]
+    vf = v.astype(jnp.float32)[:, kv_index, :]
+    scores = jnp.einsum("qhd,khd->hqk", q.astype(jnp.float32), kf)
+    scores = scores / jnp.sqrt(jnp.float32(head_dim))
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(causal[None, :, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", probs, vf)

@@ -1,0 +1,262 @@
+"""L2: TinyLM — the JAX compute graph AOT-lowered for the Rust coordinator.
+
+Every entry point is a *pure function over explicit weight arguments*: the
+Rust side owns weight residency (resident in "GPU" memory vs offloaded to
+SSD) — that ownership is LIME's whole point — so weights arrive as PJRT
+parameters on every call rather than being baked into the executable.
+
+Entry points (each becomes one `artifacts/<name>.hlo.txt`):
+
+  embed_prefill  tokens[1,P]                          -> x[1,P,H]
+  embed_decode   tokens[1,1]                          -> x[1,1,H]
+  layer_prefill  x[1,P,H], w...                       -> y, k[1,P,KVH,hd], v
+  layer_decode   x[1,1,H], kc, vc, pos, w...          -> y, kc', vc'
+  mha_decode     x[1,1,H], kc, vc, pos, w_attn...     -> y, kc', vc'
+  mlp_decode     x[1,1,H], w_mlp...                   -> y
+  lm_head        x[1,1,H], ln_f, w_out               -> logits[1,V]
+
+`layer_decode == mlp_decode ∘ mha_decode` *exactly* — the fine-grained
+(block-offload) execution path must be bit-identical to the fused layer, and
+`python/tests/test_model.py` plus the Rust losslessness checker assert it.
+
+Decode attention runs through the L1 Pallas kernel
+(`kernels.gqa_decode_attention`); prefill attention is a one-shot jnp causal
+pass (it runs once per request and is not the hot-spot).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import CFG
+from .kernels import gqa_decode_attention
+
+# --------------------------------------------------------------------------
+# Primitives
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps=CFG.rms_eps):
+    """RMSNorm over the last axis."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def _rope_angles(positions, head_dim, theta=CFG.rope_theta):
+    """[T] positions -> (sin, cos) each [T, head_dim//2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, positions):
+    """Rotary position embedding. x: [T, heads, head_dim], positions: [T]."""
+    t, heads, head_dim = x.shape
+    sin, cos = _rope_angles(positions, head_dim)
+    sin = sin[:, None, :]  # [T, 1, half]
+    cos = cos[:, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: (silu(x @ w_gate) * (x @ w_up)) @ w_down."""
+    g = x @ w_gate
+    return (jax.nn.silu(g) * (x @ w_up)) @ w_down
+
+
+# --------------------------------------------------------------------------
+# Entry points
+# --------------------------------------------------------------------------
+
+
+def embed_prefill(tokens, table):
+    """tokens [1, P] int32 -> hidden states [1, P, H]."""
+    return (table[tokens],)
+
+
+def embed_decode(tokens, table):
+    """tokens [1, 1] int32 -> hidden states [1, 1, H]."""
+    return (table[tokens],)
+
+
+def mha_decode(x, k_cache, v_cache, pos, ln1, wq, wk, wv, wo):
+    """Attention block for one decode token (fine-grained offload unit).
+
+    Args:
+      x:        [1, 1, H] residual stream.
+      k_cache:  [1, S, KVH, hd] padded key cache (valid slots: [0, pos)).
+      v_cache:  [1, S, KVH, hd] padded value cache.
+      pos:      scalar int32 — this token's position (== valid cache length).
+      ln1, wq, wk, wv, wo: attention-block weights.
+
+    Returns:
+      (y [1,1,H], k_cache' with slot `pos` filled, v_cache' likewise).
+    """
+    cfg = CFG
+    h = rmsnorm(x, ln1)[0]                                   # [1, H]
+    q = (h @ wq).reshape(1, cfg.heads, cfg.head_dim)
+    k_new = (h @ wk).reshape(1, cfg.kv_heads, cfg.head_dim)
+    v_new = (h @ wv).reshape(1, cfg.kv_heads, cfg.head_dim)
+
+    positions = jnp.asarray(pos, jnp.int32).reshape(1)
+    q = apply_rope(q, positions)
+    k_new = apply_rope(k_new, positions)
+
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new[None, ...], (0, pos, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new[None, ...], (0, pos, 0, 0)
+    )
+
+    attn = gqa_decode_attention(q[0], k_cache[0], v_cache[0], pos + 1)
+    y = x + (attn.reshape(1, cfg.hidden) @ wo)[None, ...]
+    return y, k_cache, v_cache
+
+
+def mlp_decode(x, ln2, w_gate, w_up, w_down):
+    """MLP block for one decode token (fine-grained offload unit)."""
+    return (x + swiglu(rmsnorm(x, ln2), w_gate, w_up, w_down),)
+
+
+def layer_decode(
+    x, k_cache, v_cache, pos, ln1, wq, wk, wv, wo, ln2, w_gate, w_up, w_down
+):
+    """Full decoder layer for one decode token = mlp_decode ∘ mha_decode."""
+    y, k_cache, v_cache = mha_decode(x, k_cache, v_cache, pos, ln1, wq, wk, wv, wo)
+    (y,) = mlp_decode(y, ln2, w_gate, w_up, w_down)
+    return y, k_cache, v_cache
+
+
+def layer_prefill(
+    x, ln1, wq, wk, wv, wo, ln2, w_gate, w_up, w_down
+):
+    """Full decoder layer over the whole prompt (causal attention).
+
+    Args:
+      x: [1, P, H] hidden states.
+
+    Returns:
+      (y [1,P,H], k [1,P,KVH,hd], v [1,P,KVH,hd]) — the fresh KV entries; the
+      Rust side writes them into its padded caches at slots [0, P).
+    """
+    cfg = CFG
+    p = x.shape[1]
+    h = rmsnorm(x, ln1)[0]                                   # [P, H]
+    q = (h @ wq).reshape(p, cfg.heads, cfg.head_dim)
+    k = (h @ wk).reshape(p, cfg.kv_heads, cfg.head_dim)
+    v = (h @ wv).reshape(p, cfg.kv_heads, cfg.head_dim)
+
+    positions = jnp.arange(p, dtype=jnp.int32)
+    q = apply_rope(q, positions)
+    k = apply_rope(k, positions)
+
+    kv_index = jnp.arange(cfg.heads) // cfg.q_rep
+    kf = k[:, kv_index, :]                                   # [P, nH, hd]
+    vf = v[:, kv_index, :]
+    scores = jnp.einsum("qhd,khd->hqk", q, kf) / jnp.sqrt(
+        jnp.float32(cfg.head_dim)
+    )
+    causal = jnp.tril(jnp.ones((p, p), dtype=bool))
+    scores = jnp.where(causal[None, :, :], scores, -jnp.float32(1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("hqk,khd->qhd", probs, vf).reshape(p, cfg.hidden)
+
+    y = x + (attn @ wo)[None, ...]
+    (y,) = mlp_decode(y, ln2, w_gate, w_up, w_down)
+    return y, k[None, ...], v[None, ...]
+
+
+def lm_head(x, ln_f, w_out):
+    """Final norm + output projection: [1,1,H] -> logits [1, V]."""
+    h = rmsnorm(x, ln_f)[0]                                  # [1, H]
+    return (h @ w_out,)
+
+
+# --------------------------------------------------------------------------
+# Whole-model reference (tests + losslessness oracle; never lowered)
+# --------------------------------------------------------------------------
+
+
+def forward_greedy(weights, prompt, steps):
+    """Greedy generation with the un-split model; oracle for the Rust engine.
+
+    Args:
+      weights: dict from `make_weights`.
+      prompt:  [P] int32 token ids.
+      steps:   decode steps to run.
+
+    Returns:
+      list of generated token ids (greedy argmax), length `steps`.
+    """
+    cfg = CFG
+    p = prompt.shape[0]
+    x = embed_prefill(prompt[None, :], weights["embed"])[0]
+    k_caches, v_caches = [], []
+    for li in range(cfg.layers):
+        w = weights[f"layer{li}"]
+        x, k, v = layer_prefill(x, *w)
+        kc = jnp.zeros((1, cfg.max_seq, cfg.kv_heads, cfg.head_dim), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0))
+        k_caches.append(kc)
+        v_caches.append(vc)
+
+    (logits,) = lm_head(x[:, -1:, :], weights["ln_f"], weights["lm_head"])
+    out = []
+    tok = jnp.argmax(logits[0]).astype(jnp.int32)
+    for step in range(steps):
+        out.append(int(tok))
+        pos = p + step
+        x = embed_decode(tok.reshape(1, 1), weights["embed"])[0]
+        for li in range(cfg.layers):
+            w = weights[f"layer{li}"]
+            x, k_caches[li], v_caches[li] = layer_decode(
+                x, k_caches[li], v_caches[li], jnp.int32(pos), *w
+            )
+        (logits,) = lm_head(x, weights["ln_f"], weights["lm_head"])
+        tok = jnp.argmax(logits[0]).astype(jnp.int32)
+    return out
+
+
+def make_weights(seed=0):
+    """Seeded synthetic TinyLM weights (no HF access; see DESIGN.md)."""
+    cfg = CFG
+    key = jax.random.PRNGKey(seed)
+
+    def nxt():
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+
+    def init(shape, scale=0.05):
+        return (jax.random.normal(nxt(), shape, jnp.float32) * scale)
+
+    weights = {
+        "embed": init((cfg.vocab, cfg.hidden), 0.3),
+        "ln_f": jnp.ones((cfg.hidden,), jnp.float32),
+        "lm_head": init((cfg.hidden, cfg.vocab), 0.3),
+    }
+    for li in range(cfg.layers):
+        weights[f"layer{li}"] = (
+            jnp.ones((cfg.hidden,), jnp.float32),                 # ln1
+            init((cfg.hidden, cfg.heads * cfg.head_dim)),         # wq
+            init((cfg.hidden, cfg.kv_heads * cfg.head_dim)),      # wk
+            init((cfg.hidden, cfg.kv_heads * cfg.head_dim)),      # wv
+            init((cfg.heads * cfg.head_dim, cfg.hidden)),         # wo
+            jnp.ones((cfg.hidden,), jnp.float32),                 # ln2
+            init((cfg.hidden, cfg.ffn)),                          # w_gate
+            init((cfg.hidden, cfg.ffn)),                          # w_up
+            init((cfg.ffn, cfg.hidden)),                          # w_down
+        )
+    return weights
+
+
+LAYER_WEIGHT_NAMES = (
+    "ln1", "wq", "wk", "wv", "wo", "ln2", "w_gate", "w_up", "w_down"
+)
+ATTN_WEIGHT_NAMES = ("ln1", "wq", "wk", "wv", "wo")
+MLP_WEIGHT_NAMES = ("ln2", "w_gate", "w_up", "w_down")

@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas decode-attention kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/lengths; every case asserts allclose against
+`ref.gqa_decode_attention_ref`. This is the core numeric signal for the whole
+stack: the same kernel is baked into layer_decode/mha_decode HLO artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import CHUNK, gqa_decode_attention
+from compile.kernels.ref import (
+    causal_prefill_attention_ref,
+    gqa_decode_attention_ref,
+)
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(
+        dtype
+    )
+
+
+def run_case(num_heads, kv_heads, head_dim, max_seq, length, dtype, seed=0):
+    q = rand(seed, (num_heads, head_dim), dtype)
+    k = rand(seed + 1, (max_seq, kv_heads, head_dim), dtype)
+    v = rand(seed + 2, (max_seq, kv_heads, head_dim), dtype)
+    got = gqa_decode_attention(q, k, v, length)
+    want = gqa_decode_attention_ref(q, k, v, length)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------- fixed cases
+
+
+def test_tinylm_shape_full_cache():
+    run_case(8, 2, 16, 128, 128, jnp.float32)
+
+
+def test_tinylm_shape_single_token():
+    run_case(8, 2, 16, 128, 1, jnp.float32)
+
+
+def test_chunk_boundary_lengths():
+    for length in (CHUNK - 1, CHUNK, CHUNK + 1, 2 * CHUNK, 2 * CHUNK + 1):
+        run_case(8, 2, 16, 4 * CHUNK, length, jnp.float32, seed=length)
+
+
+def test_mha_no_gqa():
+    # kv_heads == num_heads degenerates to plain MHA.
+    run_case(4, 4, 16, CHUNK * 2, 37, jnp.float32)
+
+
+def test_single_kv_head_mqa():
+    # kv_heads == 1 degenerates to multi-query attention.
+    run_case(8, 1, 32, CHUNK * 2, 50, jnp.float32)
+
+
+def test_bf16_inputs():
+    run_case(8, 2, 16, 128, 77, jnp.bfloat16)
+
+
+def test_output_dtype_is_f32():
+    q = rand(0, (8, 16), jnp.bfloat16)
+    k = rand(1, (CHUNK, 2, 16), jnp.bfloat16)
+    v = rand(2, (CHUNK, 2, 16), jnp.bfloat16)
+    out = gqa_decode_attention(q, k, v, 5)
+    assert out.dtype == jnp.float32
+
+
+def test_masked_tail_is_ignored():
+    # Garbage beyond `length` must not leak into the output.
+    q = rand(0, (8, 16), jnp.float32)
+    k = rand(1, (128, 2, 16), jnp.float32)
+    v = rand(2, (128, 2, 16), jnp.float32)
+    length = 40
+    k_poison = k.at[length:].set(1e4)
+    v_poison = v.at[length:].set(-1e4)
+    a = gqa_decode_attention(q, k, v, length)
+    b = gqa_decode_attention(q, k_poison, v_poison, length)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_softmax_rows_attend_correct_kv_head():
+    # With v constant per KV head, output must equal that constant exactly
+    # (softmax rows sum to 1), revealing any head-grouping mixups.
+    num_heads, kv_heads, head_dim, max_seq = 8, 2, 16, 64
+    q = rand(0, (num_heads, head_dim), jnp.float32)
+    k = rand(1, (max_seq, kv_heads, head_dim), jnp.float32)
+    v = jnp.stack(
+        [jnp.full((max_seq, head_dim), float(i + 1)) for i in range(kv_heads)],
+        axis=1,
+    )
+    out = gqa_decode_attention(q, k, v, 30)
+    q_rep = num_heads // kv_heads
+    for h in range(num_heads):
+        expect = float(h // q_rep + 1)
+        np.testing.assert_allclose(out[h], expect, rtol=1e-5)
+
+
+# ------------------------------------------------------------ property sweep
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    kv_heads=st.sampled_from([1, 2, 4]),
+    q_rep=st.sampled_from([1, 2, 4]),
+    head_dim=st.sampled_from([8, 16, 32]),
+    chunks=st.integers(min_value=1, max_value=4),
+    length_frac=st.floats(min_value=0.01, max_value=1.0),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_property_matches_ref(
+    kv_heads, q_rep, head_dim, chunks, length_frac, dtype, seed
+):
+    max_seq = chunks * CHUNK
+    length = max(1, int(length_frac * max_seq))
+    run_case(kv_heads * q_rep, kv_heads, head_dim, max_seq, length, dtype, seed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_prefill_ref_is_causal(t, seed):
+    # The prefill oracle must not attend to the future: perturbing token j
+    # must not change outputs at positions < j.
+    q = rand(seed, (t, 4, 8), jnp.float32)
+    k = rand(seed + 1, (t, 2, 8), jnp.float32)
+    v = rand(seed + 2, (t, 2, 8), jnp.float32)
+    base = causal_prefill_attention_ref(q, k, v, 2)
+    if t < 2:
+        return
+    j = t - 1
+    k2 = k.at[j].set(k[j] + 3.0)
+    v2 = v.at[j].set(v[j] - 3.0)
+    pert = causal_prefill_attention_ref(q, k2, v2, 2)
+    np.testing.assert_allclose(base[:j], pert[:j], rtol=1e-6, atol=1e-6)
+
+
+def test_rejects_non_chunk_multiple():
+    q = rand(0, (4, 8), jnp.float32)
+    k = rand(1, (CHUNK + 1, 2, 8), jnp.float32)
+    v = rand(2, (CHUNK + 1, 2, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        gqa_decode_attention(q, k, v, 3)

@@ -1,0 +1,173 @@
+"""L2 correctness: TinyLM entry points — shapes, composition identities,
+determinism, and the block-split (fine-grained offload) equivalence that the
+Rust losslessness checker relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.config import CFG
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return model.make_weights(seed=0)
+
+
+def layer_w(weights, li=0):
+    return weights[f"layer{li}"]
+
+
+def fresh_caches():
+    kc = jnp.zeros((1, CFG.max_seq, CFG.kv_heads, CFG.head_dim), jnp.float32)
+    return kc, jnp.zeros_like(kc)
+
+
+# ------------------------------------------------------------------- shapes
+
+
+def test_embed_prefill_shape(weights):
+    toks = jnp.arange(CFG.prefill_len, dtype=jnp.int32)[None, :]
+    (x,) = model.embed_prefill(toks, weights["embed"])
+    assert x.shape == (1, CFG.prefill_len, CFG.hidden)
+
+
+def test_embed_decode_shape(weights):
+    (x,) = model.embed_decode(jnp.zeros((1, 1), jnp.int32), weights["embed"])
+    assert x.shape == (1, 1, CFG.hidden)
+
+
+def test_layer_prefill_shapes(weights):
+    x = jnp.ones((1, CFG.prefill_len, CFG.hidden), jnp.float32) * 0.1
+    y, k, v = model.layer_prefill(x, *layer_w(weights))
+    assert y.shape == x.shape
+    assert k.shape == (1, CFG.prefill_len, CFG.kv_heads, CFG.head_dim)
+    assert v.shape == k.shape
+
+
+def test_layer_decode_shapes(weights):
+    x = jnp.ones((1, 1, CFG.hidden), jnp.float32) * 0.1
+    kc, vc = fresh_caches()
+    y, kc2, vc2 = model.layer_decode(x, kc, vc, jnp.int32(0), *layer_w(weights))
+    assert y.shape == x.shape
+    assert kc2.shape == kc.shape and vc2.shape == vc.shape
+
+
+def test_lm_head_shape(weights):
+    x = jnp.ones((1, 1, CFG.hidden), jnp.float32)
+    (logits,) = model.lm_head(x, weights["ln_f"], weights["lm_head"])
+    assert logits.shape == (1, CFG.vocab)
+
+
+# ------------------------------------------------- composition identities
+
+
+def test_layer_decode_equals_mha_then_mlp(weights):
+    """Fine-grained offload path (MHA block + MLP block executed separately)
+    must be bit-identical to the fused layer artifact."""
+    w = layer_w(weights)
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, 1, CFG.hidden))
+    kc, vc = fresh_caches()
+    pos = jnp.int32(3)
+
+    y_full, kc_full, vc_full = model.layer_decode(x, kc, vc, pos, *w)
+    y_mha, kc_b, vc_b = model.mha_decode(x, kc, vc, pos, *w[:5])
+    (y_split,) = model.mlp_decode(y_mha, *w[5:])
+
+    np.testing.assert_array_equal(np.asarray(y_full), np.asarray(y_split))
+    np.testing.assert_array_equal(np.asarray(kc_full), np.asarray(kc_b))
+    np.testing.assert_array_equal(np.asarray(vc_full), np.asarray(vc_b))
+
+
+def test_decode_matches_prefill_position(weights):
+    """Token-by-token decode must reproduce the prefill computation: feeding
+    the same prompt through layer_prefill and through successive layer_decode
+    calls must yield the same final hidden state."""
+    w = layer_w(weights)
+    p = CFG.prefill_len
+    toks = (jnp.arange(p, dtype=jnp.int32) * 7) % CFG.vocab
+    (x,) = model.embed_prefill(toks[None, :], weights["embed"])
+    y_pref, k_pref, v_pref = model.layer_prefill(x, *w)
+
+    kc, vc = fresh_caches()
+    ys = []
+    for t in range(p):
+        (xt,) = model.embed_decode(toks[t].reshape(1, 1), weights["embed"])
+        yt, kc, vc = model.layer_decode(xt, kc, vc, jnp.int32(t), *w)
+        ys.append(yt[:, 0, :])
+    y_dec = jnp.stack(ys, axis=1)
+
+    np.testing.assert_allclose(
+        np.asarray(y_pref), np.asarray(y_dec), rtol=2e-4, atol=2e-4
+    )
+    # The caches the decode path built must match prefill's returned KV.
+    np.testing.assert_allclose(
+        np.asarray(kc[:, :p]), np.asarray(k_pref), rtol=2e-5, atol=2e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(vc[:, :p]), np.asarray(v_pref), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_cache_slots_beyond_pos_untouched(weights):
+    w = layer_w(weights)
+    x = jnp.ones((1, 1, CFG.hidden)) * 0.2
+    kc, vc = fresh_caches()
+    kc = kc.at[:, 10:].set(42.0)
+    _, kc2, _ = model.layer_decode(x, kc, vc, jnp.int32(4), *w)
+    np.testing.assert_array_equal(np.asarray(kc2[:, 10:]), 42.0)
+
+
+# ------------------------------------------------------------ whole model
+
+
+def test_forward_greedy_deterministic(weights):
+    prompt = (jnp.arange(CFG.prefill_len, dtype=jnp.int32) * 3) % CFG.vocab
+    a = model.forward_greedy(weights, prompt, 6)
+    b = model.forward_greedy(weights, prompt, 6)
+    assert a == b
+    assert len(a) == 6
+    assert all(0 <= t < CFG.vocab for t in a)
+
+
+def test_forward_greedy_prompt_sensitivity(weights):
+    p1 = (jnp.arange(CFG.prefill_len, dtype=jnp.int32) * 3) % CFG.vocab
+    p2 = (jnp.arange(CFG.prefill_len, dtype=jnp.int32) * 5 + 1) % CFG.vocab
+    assert model.forward_greedy(weights, p1, 6) != model.forward_greedy(
+        weights, p2, 6
+    )
+
+
+def test_weights_deterministic_by_seed():
+    w1 = model.make_weights(seed=0)
+    w2 = model.make_weights(seed=0)
+    w3 = model.make_weights(seed=1)
+    np.testing.assert_array_equal(np.asarray(w1["embed"]), np.asarray(w2["embed"]))
+    assert not np.array_equal(np.asarray(w1["embed"]), np.asarray(w3["embed"]))
+
+
+# ---------------------------------------------------------------- rmsnorm
+
+
+def test_rmsnorm_unit_scale():
+    x = jnp.ones((1, 4, 8)) * 3.0
+    y = model.rmsnorm(x, jnp.ones((8,)))
+    np.testing.assert_allclose(np.asarray(y), 1.0, rtol=1e-4)
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 4, 16))
+    y = model.apply_rope(x, jnp.arange(5, dtype=jnp.int32))
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_position_zero_identity():
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 16))
+    y = model.apply_rope(x, jnp.zeros((1,), jnp.int32))
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)

@@ -1,0 +1,28 @@
+//! Regenerates Fig. 2a (TP+offload vs PP+offload latency) and Fig. 2b
+//! (model-shard vs KV-cache offload load latency growth).
+
+use lime::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig02_motivation");
+
+    b.section("Fig. 2a: TP+offload vs PP+offload, 200 Mbps, sporadic");
+    let rows = lime::experiments::fig2a(24);
+    for (label, tp, pp) in &rows {
+        b.row(label, &format!("TP {tp:9.1} ms/tok | PP {pp:9.1} ms/tok | PP speedup {:.2}x", tp / pp));
+    }
+
+    b.section("Fig. 2b: per-step load latency, model-shard vs KV offload (AGX Orin 32)");
+    let rows = lime::experiments::fig2b(600);
+    for step in (0..rows.len()).step_by(50) {
+        let (s, model_ms, kv_ms) = rows[step];
+        b.row(
+            &format!("step {s:4}"),
+            &format!("model-shard {model_ms:7.2} ms | kv-offload {kv_ms:7.2} ms"),
+        );
+    }
+    b.time("fig2b_600_steps_sim", 1, 5, || {
+        let _ = lime::experiments::fig2b(600);
+    });
+    b.finish();
+}

@@ -1,0 +1,10 @@
+//! Regenerates Figs 3-4: traditional vs interleaved pipeline schedules
+//! under sporadic and bursty request patterns (Gantt traces + latency).
+
+use lime::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new("fig03_04_schedules");
+    lime::experiments::fig34_schedules(3);
+    b.finish();
+}

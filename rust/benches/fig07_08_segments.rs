@@ -1,0 +1,15 @@
+//! Regenerates Figs 7-8: the #Seg sweet spot — too many segments inflate
+//! T_comm, too few inflate memory pressure and uncovered loads.
+
+use lime::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new("fig07_08_segments");
+    let rows = lime::experiments::fig78_segments(24);
+    let best = rows
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .expect("no feasible segment counts");
+    b.row("optimal #Seg", &format!("{} ({:.1} ms/token)", best.0, best.1));
+    b.finish();
+}

@@ -1,0 +1,20 @@
+//! Regenerates Fig.14: the main comparison on environment e3 — all 7 methods
+//! x {100, 200} Mbps x {sporadic, bursty}, reported in ms/token.
+
+use lime::util::bench::Bench;
+use lime::util::stats::geomean;
+
+fn main() {
+    let b = Bench::new("fig14_e3_llama70b");
+    let cells = lime::experiments::main_comparison("e3", 48);
+    let sp = lime::experiments::speedups(&cells);
+    if !sp.is_empty() {
+        let g = geomean(&sp.iter().map(|(_, s)| *s).collect::<Vec<_>>());
+        b.section("LIME speedups over completing baselines");
+        for (label, s) in &sp {
+            b.row(label, &format!("{s:.2}x"));
+        }
+        b.row("geomean speedup", &format!("{g:.2}x"));
+    }
+    b.finish();
+}

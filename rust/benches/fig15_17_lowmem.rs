@@ -1,0 +1,21 @@
+//! Regenerates Figs 15-17: extremely-low-memory Settings 1-3 on
+//! Llama3.3-70B, with OOM/OOT classification (40 s/tok sporadic,
+//! 15 s/tok bursty).
+
+use lime::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new("fig15_17_lowmem");
+    for setting in 1..=3 {
+        let cells = lime::experiments::lowmem(setting, 32);
+        let lime_ok = cells
+            .iter()
+            .filter(|c| c.method == "LIME")
+            .all(|c| c.ms_per_token.is_some() && !c.is_oot());
+        b.row(
+            &format!("Setting {setting}: LIME completes all cells"),
+            if lime_ok { "yes" } else { "NO" },
+        );
+    }
+    b.finish();
+}

@@ -1,0 +1,28 @@
+//! Regenerates Fig. 18: inference under randomly varying bandwidth
+//! (50-250 Mbps walks), all methods, both patterns.
+
+use lime::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new("fig18_bandwidth");
+    let cells = lime::experiments::fig18(64);
+    // Report LIME's advantage under the storm.
+    for pattern in [lime::workload::Pattern::Sporadic, lime::workload::Pattern::Bursty] {
+        let lime_ms = cells
+            .iter()
+            .find(|c| c.method == "LIME" && c.pattern == pattern)
+            .and_then(|c| c.ms_per_token);
+        if let Some(lms) = lime_ms {
+            let best_other = cells
+                .iter()
+                .filter(|c| c.method != "LIME" && c.pattern == pattern)
+                .filter_map(|c| c.ms_per_token)
+                .fold(f64::INFINITY, f64::min);
+            b.row(
+                &format!("{pattern:?}: LIME vs best baseline"),
+                &format!("{lms:.1} vs {best_other:.1} ms/tok ({:.2}x)", best_other / lms),
+            );
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,52 @@
+//! Real-path (PJRT) hot-path bench: per-token decode latency of TinyLM
+//! under resident vs offloaded residency, plus artifact compile time.
+//! Requires `make artifacts`.
+
+use lime::runtime::Manifest;
+use lime::serve::{Engine, LayerResidency};
+use lime::util::bench::Bench;
+use lime::workload::synthetic_prompt;
+
+fn main() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("runtime_hotpath: artifacts missing, run `make artifacts` first");
+        return;
+    }
+    let mut b = Bench::new("runtime_hotpath");
+
+    b.time("manifest_load", 1, 10, || {
+        let _ = Manifest::load(&dir).unwrap();
+    });
+
+    let manifest = Manifest::load(&dir).unwrap();
+    let cfg = manifest.model.clone();
+    let mut engine = Engine::new(manifest).unwrap();
+    let prompt = synthetic_prompt(1, cfg.prefill_len, cfg.vocab);
+
+    b.time("generate_16tok_all_resident", 1, 5, || {
+        let _ = engine.generate(&prompt, 16).unwrap();
+    });
+
+    let mut plan = vec![LayerResidency::Resident; cfg.layers];
+    plan[2] = LayerResidency::FullOffload;
+    plan[3] = LayerResidency::MhaOffload;
+    engine.set_residency(&plan).unwrap();
+    b.time("generate_16tok_2layers_offloaded", 1, 5, || {
+        let _ = engine.generate(&prompt, 16).unwrap();
+    });
+
+    engine
+        .set_residency(&vec![LayerResidency::FullOffload; cfg.layers])
+        .unwrap();
+    b.time("generate_16tok_all_offloaded", 1, 3, || {
+        let _ = engine.generate(&prompt, 16).unwrap();
+    });
+
+    println!(
+        "  pjrt execute() calls so far: {} | ssd weight re-reads: {}",
+        engine.runtime.exec_calls(),
+        engine.weights.loads_from_disk()
+    );
+    b.finish();
+}

@@ -1,0 +1,56 @@
+//! L3 hot-path microbenchmarks: the offline scheduler (Alg. 1), the cost
+//! model, the online planner, and the DES executors. These are the knobs
+//! the §Perf pass tunes.
+
+use lime::cluster::Cluster;
+use lime::model::ModelSpec;
+use lime::net::BandwidthTrace;
+use lime::pipeline::{run_interleaved, ExecOptions};
+use lime::plan::{plan, PlanOptions};
+use lime::util::bench::Bench;
+use lime::util::bytes::mbps;
+
+fn main() {
+    let mut b = Bench::new("scheduler_perf");
+    let spec = ModelSpec::llama33_70b();
+    let cluster = Cluster::lowmem_setting1();
+    let opts = PlanOptions {
+        empirical_tokens: 256,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    };
+
+    b.time("offline_plan_80L_5dev (full #Seg sweep)", 2, 20, || {
+        let _ = plan(&spec, &cluster, &opts).unwrap();
+    });
+
+    let alloc = plan(&spec, &cluster, &opts).unwrap().allocation;
+    b.time("cost_model_t_total", 10, 1000, || {
+        let _ = lime::cost::t_total(&alloc, &cluster, 256, 1, mbps(200.0));
+    });
+
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    b.time("interleaved_sim_64tok_sporadic", 1, 10, || {
+        let _ = run_interleaved(&alloc, &cluster, &bw, 1, 64, &ExecOptions::default());
+    });
+    b.time("interleaved_sim_64tok_bursty5", 1, 10, || {
+        let _ = run_interleaved(&alloc, &cluster, &bw, 5, 64, &ExecOptions::default());
+    });
+
+    // DES engine raw throughput.
+    b.time("des_engine_1M_events", 1, 5, || {
+        let mut eng: lime::sim::Engine<u64> = lime::sim::Engine::new();
+        let mut world = 0u64;
+        for i in 0..1000 {
+            eng.schedule(i as f64, move |e, w: &mut u64| {
+                *w += 1;
+                for _ in 0..999 {
+                    e.schedule(0.5, |_, w2: &mut u64| *w2 += 1);
+                }
+            });
+        }
+        eng.run(&mut world);
+        assert_eq!(world, 1_000_000);
+    });
+    b.finish();
+}

@@ -1,0 +1,20 @@
+//! Regenerates Table V: the ablation study — LIME vs LIME-without-KV-
+//! transfer vs LIME-without-memory-aware-planner, sporadic and bursty.
+
+use lime::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new("tab05_ablation");
+    let rows = lime::experiments::tab5(3072);
+    if let Some((_, Some(ls), Some(lb))) = rows.last().cloned() {
+        for (name, s, bst) in &rows[..rows.len() - 1] {
+            if let (Some(s), Some(bst)) = (s, bst) {
+                b.row(
+                    &format!("{name} relative to LIME"),
+                    &format!("{:.2}x sporadic, {:.2}x bursty (paper: 0.86x/0.87x, 0.67x/0.69x)", ls / s, lb / bst),
+                );
+            }
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,297 @@
+//! Network-bandwidth-sensitive KV-cache transfer protocol (paper §IV-D,
+//! Alg. 2, Eq. 8, Fig. 10).
+//!
+//! Devices whose SSD loading cannot be hidden behind compute+communication
+//! (`load(L~_i) > T_i^idle`) ship part of their KV cache to a dedicated
+//! high-threshold peer `d_target`, freeing memory that *delays their next
+//! offload threshold* and keeping the pipeline's loading overlapped. The
+//! shipped volume follows Eq. 8:
+//!
+//! ```text
+//! mem(n_i^trans) = (load(L~_i) − T_i^idle) · bw_net   (clamped at ≥ 0)
+//! ```
+//!
+//! Bandwidth reactions are asymmetric (Alg. 2 lines 8–18):
+//! * **decrease** — recompute `n_trans` immediately (continuing to ship the
+//!   old volume would stall the pipeline);
+//! * **increase** — lazily skip unless the device is about to hit its next
+//!   threshold `TS_i^{j+1}` (line 15), avoiding churn;
+//! * changes smaller than the hysteresis threshold `n_ts` are ignored
+//!   (line 14).
+
+use crate::adapt::planner::OnlinePlanner;
+use crate::cluster::Cluster;
+use crate::cost;
+use crate::plan::allocation::Allocation;
+
+/// Per-device transfer state.
+#[derive(Debug, Clone)]
+pub struct TransferState {
+    /// Dedicated receiver of this device's KV cache (None = this device is
+    /// itself a `d_target` or never needs to ship).
+    pub target: Option<usize>,
+    /// Tokens of KV currently held by the peer on this device's behalf
+    /// (`n_i^trans`; negative on receivers).
+    pub n_trans: i64,
+    /// Desired steady-state shipment (recomputed on bandwidth changes).
+    pub desired: i64,
+}
+
+/// The protocol driver.
+#[derive(Debug, Clone)]
+pub struct KvTransferProtocol {
+    pub states: Vec<TransferState>,
+    /// Hysteresis threshold `n_ts` in tokens.
+    pub n_ts: i64,
+    last_bw: f64,
+    /// Tokens of safety margin before a threshold counts as "about to be
+    /// reached" for the lazy bandwidth-increase rule.
+    pub threshold_margin: usize,
+}
+
+impl KvTransferProtocol {
+    /// Pair every uncovered device with the highest-threshold peer and
+    /// compute initial `n_trans` via Eq. 8.
+    pub fn new(
+        alloc: &Allocation,
+        cluster: &Cluster,
+        planner: &OnlinePlanner,
+        ctx: usize,
+        micro: usize,
+        bw: f64,
+    ) -> Self {
+        let n = alloc.devices.len();
+        let mut states: Vec<TransferState> = (0..n)
+            .map(|_| TransferState {
+                target: None,
+                n_trans: 0,
+                desired: 0,
+            })
+            .collect();
+
+        let target = planner.highest_threshold_device();
+        for i in 0..n {
+            if i == target {
+                continue; // the target receives; it never ships its own
+            }
+            let desired = eq8_tokens(alloc, cluster, i, ctx, micro, bw);
+            if desired > 0 {
+                states[i].target = Some(target);
+                states[i].desired = desired;
+            }
+        }
+        KvTransferProtocol {
+            states,
+            n_ts: 8,
+            last_bw: bw,
+            threshold_margin: 16,
+        }
+    }
+
+    /// Alg. 2 lines 8–18: react to the bandwidth observed before an
+    /// auto-regressive step. Returns the devices whose desired shipment
+    /// changed.
+    pub fn on_bandwidth(
+        &mut self,
+        alloc: &Allocation,
+        cluster: &Cluster,
+        planner: &OnlinePlanner,
+        tokens: usize,
+        ctx: usize,
+        micro: usize,
+        bw_now: f64,
+    ) -> Vec<usize> {
+        let mut changed = Vec::new();
+        let decreased = bw_now < self.last_bw;
+        for i in 0..self.states.len() {
+            if self.states[i].target.is_none() {
+                continue;
+            }
+            let fresh = eq8_tokens(alloc, cluster, i, ctx, micro, bw_now);
+            let delta = (fresh - self.states[i].desired).abs();
+            if delta < self.n_ts {
+                continue; // line 14: ignore minor fluctuations
+            }
+            if !decreased {
+                // Bandwidth increased: only act if the next threshold is
+                // imminent (line 15), otherwise skip entirely (line 16).
+                let ts_next = planner.next_threshold(i);
+                let imminent = ts_next != usize::MAX
+                    && tokens + self.states[i].n_trans.unsigned_abs() as usize
+                        + self.threshold_margin
+                        >= ts_next;
+                if !imminent {
+                    continue;
+                }
+            }
+            self.states[i].desired = fresh;
+            changed.push(i);
+        }
+        self.last_bw = bw_now;
+        changed
+    }
+
+    /// Tokens to ship from device `i` this step (pacing toward `desired`),
+    /// given it currently holds `held_tokens` of KV.
+    pub fn ship_now(&mut self, i: usize, held_tokens: usize, per_step_cap: usize) -> usize {
+        let st = &mut self.states[i];
+        if st.target.is_none() {
+            return 0;
+        }
+        let gap = st.desired - st.n_trans;
+        if gap <= 0 {
+            return 0;
+        }
+        let ship = (gap as usize).min(per_step_cap).min(held_tokens);
+        st.n_trans += ship as i64;
+        if let Some(t) = st.target {
+            // `t` is guaranteed not to be a shipper itself.
+            debug_assert!(self.states[t].target.is_none());
+        }
+        ship
+    }
+
+    /// Record the receiving side (negative `n_trans`).
+    pub fn record_receipt(&mut self, target: usize, tokens: usize) {
+        self.states[target].n_trans -= tokens as i64;
+    }
+
+    /// Net shipped tokens for device `i` (feeds `cost::mem_demand` and the
+    /// planner's `kv_transferred`).
+    pub fn n_trans(&self, i: usize) -> i64 {
+        self.states[i].n_trans
+    }
+}
+
+/// Eq. 8: KV tokens whose transfer hides the uncovered load of device `i`.
+pub fn eq8_tokens(
+    alloc: &Allocation,
+    cluster: &Cluster,
+    i: usize,
+    ctx: usize,
+    micro: usize,
+    bw: f64,
+) -> i64 {
+    let spec = &alloc.spec;
+    let load = cost::load_time(spec, &cluster.devices[i], &alloc.devices[i]);
+    let idle = cost::t_idle(alloc, cluster, i, ctx, micro, bw);
+    let uncovered = (load - idle).max(0.0);
+    let bytes = uncovered * bw;
+    let kv_tok = spec.kv_bytes_per_token_layer() * alloc.devices[i].total_layers as u64;
+    if kv_tok == 0 {
+        return 0;
+    }
+    (bytes / kv_tok as f64) as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+    use crate::plan::{plan, PlanOptions};
+    use crate::util::bytes::mbps;
+
+    fn setup(bw_mbps: f64) -> (Allocation, Cluster, OnlinePlanner, KvTransferProtocol) {
+        let spec = ModelSpec::llama33_70b();
+        let cluster = Cluster::lowmem_setting2();
+        let opts = PlanOptions {
+            empirical_tokens: 256,
+            micro_batch: 1,
+            bandwidth: mbps(bw_mbps),
+        };
+        let alloc = plan(&spec, &cluster, &opts).unwrap().allocation;
+        let planner = OnlinePlanner::new(&alloc, &cluster, 1);
+        let proto = KvTransferProtocol::new(&alloc, &cluster, &planner, 256, 1, mbps(bw_mbps));
+        (alloc, cluster, planner, proto)
+    }
+
+    #[test]
+    fn target_is_not_a_shipper() {
+        let (_, _, planner, proto) = setup(200.0);
+        let target = planner.highest_threshold_device();
+        assert!(proto.states[target].target.is_none());
+        for (i, st) in proto.states.iter().enumerate() {
+            if let Some(t) = st.target {
+                assert_eq!(t, target);
+                assert_ne!(i, t);
+            }
+        }
+    }
+
+    #[test]
+    fn eq8_zero_when_load_covered() {
+        let spec = ModelSpec::tiny_lm();
+        let cluster = Cluster::env_e2();
+        let opts = PlanOptions::default();
+        let alloc = plan(&spec, &cluster, &opts).unwrap().allocation;
+        for i in 0..cluster.len() {
+            assert_eq!(eq8_tokens(&alloc, &cluster, i, 64, 1, mbps(200.0)), 0);
+        }
+    }
+
+    #[test]
+    fn ship_now_paces_toward_desired() {
+        let (_, _, _, mut proto) = setup(200.0);
+        let shipper = (0..proto.states.len()).find(|&i| proto.states[i].desired > 0);
+        let Some(i) = shipper else {
+            return; // plan fully covered: nothing to test
+        };
+        let desired = proto.states[i].desired;
+        let mut total = 0usize;
+        for _ in 0..1000 {
+            let s = proto.ship_now(i, usize::MAX, 4);
+            if s == 0 {
+                break;
+            }
+            assert!(s <= 4);
+            total += s;
+        }
+        assert_eq!(total as i64, desired);
+        assert_eq!(proto.n_trans(i), desired);
+    }
+
+    #[test]
+    fn receipt_goes_negative() {
+        let (_, _, _, mut proto) = setup(200.0);
+        proto.record_receipt(0, 10);
+        assert_eq!(proto.n_trans(0), -10);
+    }
+
+    #[test]
+    fn bandwidth_decrease_reacts_immediately() {
+        let (alloc, cluster, planner, mut proto) = setup(200.0);
+        let shipper = (0..proto.states.len()).find(|&i| proto.states[i].desired > 0);
+        let Some(i) = shipper else { return };
+        let before = proto.states[i].desired;
+        let changed =
+            proto.on_bandwidth(&alloc, &cluster, &planner, 10, 256, 1, mbps(50.0));
+        // A 4x bandwidth drop shrinks Eq. 8's shippable volume; if the delta
+        // clears hysteresis the shipper must be updated.
+        let after = proto.states[i].desired;
+        if (after - before).abs() >= proto.n_ts {
+            assert!(changed.contains(&i));
+        }
+        assert!(after <= before);
+    }
+
+    #[test]
+    fn bandwidth_increase_is_lazy_far_from_threshold() {
+        let (alloc, cluster, planner, mut proto) = setup(100.0);
+        let shipper = (0..proto.states.len()).find(|&i| proto.states[i].desired > 0);
+        let Some(i) = shipper else { return };
+        let before = proto.states[i].desired;
+        // Token 0, thresholds far away -> increase must be skipped.
+        let changed =
+            proto.on_bandwidth(&alloc, &cluster, &planner, 0, 256, 1, mbps(250.0));
+        assert!(!changed.contains(&i));
+        assert_eq!(proto.states[i].desired, before);
+    }
+
+    #[test]
+    fn hysteresis_suppresses_small_changes() {
+        let (alloc, cluster, planner, mut proto) = setup(200.0);
+        let changed =
+            proto.on_bandwidth(&alloc, &cluster, &planner, 10, 256, 1, mbps(199.5));
+        assert!(changed.is_empty(), "0.25% wiggle must not trigger updates");
+    }
+}

@@ -1,0 +1,9 @@
+//! Online memory adaptation strategy (paper §IV-D): the memory-aware
+//! planner (Eqs. 5–7) and the bandwidth-sensitive KV-cache transfer
+//! protocol (Alg. 2, Eq. 8).
+
+pub mod kvtransfer;
+pub mod planner;
+
+pub use kvtransfer::{eq8_tokens, KvTransferProtocol, TransferState};
+pub use planner::{DeviceMemState, OffloadPlan, OnlinePlanner};

@@ -1,0 +1,370 @@
+//! Online memory-aware planner (paper §IV-D, Eqs. 5–7, Fig. 9).
+//!
+//! As the KV cache grows past per-device thresholds `TS_i^j`, the planner
+//! triggers block-granular offload plans `(α, β)` — α MHA blocks and β MLP
+//! blocks evicted from residency — chosen to *minimize the extra bytes
+//! streamed per step* (Eq. 6) subject to freeing enough memory for the KV
+//! cache to keep growing (Eq. 7). Because the same plan applies to every
+//! segment of the interleaved pipeline, the freed memory is
+//! `(α·p_A + β·p_M)·l_size·(#Seg−1)/#Seg` (one segment's slot stays mapped)
+//! and the extra loading cost is overlapped across segments — "only a
+//! single additional loading overhead".
+//!
+//! The planner is a pure state machine: both the discrete-event simulator
+//! and the real PJRT serving engine drive it with
+//! [`OnlinePlanner::on_token`].
+
+use crate::cluster::Cluster;
+use crate::cost;
+use crate::model::ModelSpec;
+use crate::plan::allocation::Allocation;
+
+/// One triggered offload plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OffloadPlan {
+    /// Generated-token count at which this plan fired (`TS_i^j`).
+    pub at_tokens: usize,
+    /// MHA blocks to stream from SSD (beyond the offline allocation).
+    pub alpha: usize,
+    /// MLP blocks to stream from SSD (beyond the offline allocation).
+    pub beta: usize,
+}
+
+impl OffloadPlan {
+    /// Extra bytes streamed per token pass under this plan (Eq. 6 value).
+    pub fn extra_load_bytes(&self, spec: &ModelSpec) -> u64 {
+        self.alpha as u64 * spec.mha_bytes() + self.beta as u64 * spec.mlp_bytes()
+    }
+}
+
+/// Per-device planner state.
+#[derive(Debug, Clone)]
+pub struct DeviceMemState {
+    /// Free bytes right after offline allocation (before any KV).
+    pub slack_bytes: u64,
+    /// KV bytes appended per generated token on this device.
+    pub kv_per_token: u64,
+    /// MHA blocks still resident and evictable.
+    pub alpha_avail: usize,
+    /// MLP blocks still resident and evictable.
+    pub beta_avail: usize,
+    /// Current cumulative plan (α, β) in force.
+    pub current: OffloadPlan,
+    /// Next trigger threshold `TS_i^{j+1}` in generated tokens
+    /// (`usize::MAX` once nothing more can be freed).
+    pub next_threshold: usize,
+    /// All plans fired so far (for reporting / tests).
+    pub history: Vec<OffloadPlan>,
+}
+
+/// Online planner over all devices of one allocation.
+#[derive(Debug, Clone)]
+pub struct OnlinePlanner {
+    spec: ModelSpec,
+    seg: usize,
+    pub states: Vec<DeviceMemState>,
+}
+
+impl OnlinePlanner {
+    /// Build from the offline allocation at token 0. `micro` scales the KV
+    /// growth rate (bursty pattern appends `micro` tokens per step).
+    pub fn new(alloc: &Allocation, cluster: &Cluster, micro: usize) -> Self {
+        let spec = alloc.spec.clone();
+        let seg = alloc.seg.max(2); // plan granularity even for seg=1 plans
+        let states = (0..alloc.devices.len())
+            .map(|i| {
+                let a = &alloc.devices[i];
+                let used = cost::mem_demand(alloc, i, 0, 0);
+                let slack = cluster.devices[i].usable_mem().saturating_sub(used);
+                let kv_per_token = spec.kv_bytes_per_token_layer()
+                    * a.total_layers as u64
+                    * micro as u64;
+                // Evictable blocks: fully-resident layers expose both
+                // blocks; split layers expose their pinned block.
+                let alpha_avail = a.non_offloaded_layers() + a.mlp_offload;
+                let beta_avail = a.non_offloaded_layers() + a.mha_offload;
+                let mut st = DeviceMemState {
+                    slack_bytes: slack,
+                    kv_per_token,
+                    alpha_avail,
+                    beta_avail,
+                    current: OffloadPlan {
+                        at_tokens: 0,
+                        alpha: 0,
+                        beta: 0,
+                    },
+                    next_threshold: 0,
+                    history: Vec::new(),
+                };
+                st.next_threshold = first_threshold(&st);
+                st
+            })
+            .collect();
+        OnlinePlanner { spec, seg, states }
+    }
+
+    pub fn seg(&self) -> usize {
+        self.seg
+    }
+
+    /// Advance device `i` to `tokens` generated tokens with
+    /// `kv_transferred` KV tokens shipped to a peer (negative = received).
+    /// Returns the new plan if a threshold fired.
+    pub fn on_token(
+        &mut self,
+        i: usize,
+        tokens: usize,
+        kv_transferred: i64,
+    ) -> Option<OffloadPlan> {
+        let spec = self.spec.clone();
+        let seg = self.seg;
+        let st = &mut self.states[i];
+        let effective = effective_tokens(tokens, kv_transferred);
+        if effective < st.next_threshold {
+            return None;
+        }
+        // Eq. 7 deficit at the trigger point, projected over a lookahead
+        // horizon so plans don't fire every token.
+        let lookahead = (effective / 4).clamp(32, 256);
+        let need = st.kv_per_token * (effective + lookahead) as u64;
+        let have = st.slack_bytes;
+        let deficit = need.saturating_sub(have);
+        let plan = choose_plan(&spec, seg, st, effective, deficit)?;
+        // Apply: blocks move from resident to streamed.
+        let da = plan.alpha as i64 - st.current.alpha as i64;
+        let db = plan.beta as i64 - st.current.beta as i64;
+        st.alpha_avail = (st.alpha_avail as i64 - da).max(0) as usize;
+        st.beta_avail = (st.beta_avail as i64 - db).max(0) as usize;
+        st.current = plan;
+        st.history.push(plan);
+        st.next_threshold = next_threshold(&spec, seg, st);
+        Some(plan)
+    }
+
+    /// Current extra streamed bytes per pass for device `i`.
+    pub fn extra_load_bytes(&self, i: usize) -> u64 {
+        self.states[i].current.extra_load_bytes(&self.spec)
+    }
+
+    /// `TS_i^{j+1}` — used by the KV-transfer protocol's bandwidth-increase
+    /// rule (Alg. 2 line 15).
+    pub fn next_threshold(&self, i: usize) -> usize {
+        self.states[i].next_threshold
+    }
+
+    /// Device with the largest next threshold — the preferred `d_target`.
+    pub fn highest_threshold_device(&self) -> usize {
+        (0..self.states.len())
+            .max_by_key(|&i| self.states[i].next_threshold)
+            .unwrap()
+    }
+}
+
+fn effective_tokens(tokens: usize, kv_transferred: i64) -> usize {
+    (tokens as i64 - kv_transferred).max(0) as usize
+}
+
+/// `TS_i^1` (Eq. 5): slack divided by per-token KV growth.
+fn first_threshold(st: &DeviceMemState) -> usize {
+    if st.kv_per_token == 0 {
+        return usize::MAX;
+    }
+    (st.slack_bytes / st.kv_per_token) as usize
+}
+
+/// Freed bytes of a cumulative plan (Eq. 7 right-hand side).
+fn freed_bytes(spec: &ModelSpec, seg: usize, plan: &OffloadPlan) -> u64 {
+    let raw = plan.extra_load_bytes(spec);
+    raw * (seg as u64 - 1) / seg as u64
+}
+
+/// Eq. 6: minimal-extra-load cumulative plan covering `deficit` bytes.
+fn choose_plan(
+    spec: &ModelSpec,
+    seg: usize,
+    st: &DeviceMemState,
+    at_tokens: usize,
+    deficit: u64,
+) -> Option<OffloadPlan> {
+    let max_alpha = st.current.alpha + st.alpha_avail;
+    let max_beta = st.current.beta + st.beta_avail;
+    let mut best: Option<OffloadPlan> = None;
+    for alpha in 0..=max_alpha {
+        for beta in 0..=max_beta {
+            let cand = OffloadPlan {
+                at_tokens,
+                alpha,
+                beta,
+            };
+            if freed_bytes(spec, seg, &cand) < deficit {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some(b) => cand.extra_load_bytes(spec) < b.extra_load_bytes(spec),
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+    }
+    // Plans never shrink below what is already in force.
+    best.filter(|p| p.alpha >= st.current.alpha || p.beta >= st.current.beta)
+}
+
+/// `TS_i^{j+1}` after a plan: when KV growth eats slack + freed bytes.
+fn next_threshold(spec: &ModelSpec, seg: usize, st: &DeviceMemState) -> usize {
+    if st.kv_per_token == 0 {
+        return usize::MAX;
+    }
+    let capacity = st.slack_bytes + freed_bytes(spec, seg, &st.current);
+    let t = (capacity / st.kv_per_token) as usize;
+    if st.alpha_avail == 0 && st.beta_avail == 0 {
+        // Nothing more to free: after `t` the device is hard-saturated and
+        // only KV transfer can help.
+        return usize::MAX.min(t.max(st.current.at_tokens + 1));
+    }
+    t.max(st.current.at_tokens + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::allocation::DeviceAssignment;
+    use crate::plan::{plan, PlanOptions};
+    use crate::util::bytes::mbps;
+
+    fn lowmem_setup() -> (Allocation, Cluster) {
+        let spec = ModelSpec::llama33_70b();
+        let cluster = Cluster::lowmem_setting1();
+        let opts = PlanOptions {
+            empirical_tokens: 256,
+            micro_batch: 1,
+            bandwidth: mbps(200.0),
+        };
+        (plan(&spec, &cluster, &opts).unwrap().allocation, cluster)
+    }
+
+    #[test]
+    fn thresholds_positive_and_finite_under_pressure() {
+        let (alloc, cluster) = lowmem_setup();
+        let planner = OnlinePlanner::new(&alloc, &cluster, 1);
+        for (i, st) in planner.states.iter().enumerate() {
+            assert!(st.kv_per_token > 0, "device {i} has layers, so KV grows");
+            assert!(st.next_threshold > 0);
+        }
+    }
+
+    #[test]
+    fn plan_fires_when_threshold_crossed() {
+        let (alloc, cluster) = lowmem_setup();
+        let mut planner = OnlinePlanner::new(&alloc, &cluster, 1);
+        let i = (0..planner.states.len())
+            .filter(|&i| planner.states[i].next_threshold < usize::MAX)
+            .min_by_key(|&i| planner.states[i].next_threshold)
+            .unwrap();
+        let ts1 = planner.states[i].next_threshold;
+        assert!(planner.on_token(i, ts1.saturating_sub(1), 0).is_none());
+        let fired = planner.on_token(i, ts1 + 1, 0);
+        if let Some(p) = fired {
+            assert!(p.alpha + p.beta > 0);
+            assert!(planner.extra_load_bytes(i) > 0);
+            assert!(planner.next_threshold(i) > ts1);
+        }
+    }
+
+    #[test]
+    fn eq6_prefers_smaller_block_for_small_deficit() {
+        let spec = ModelSpec::llama33_70b(); // MHA block < MLP block
+        let st = DeviceMemState {
+            slack_bytes: 0,
+            kv_per_token: 1,
+            alpha_avail: 4,
+            beta_avail: 4,
+            current: OffloadPlan {
+                at_tokens: 0,
+                alpha: 0,
+                beta: 0,
+            },
+            next_threshold: 0,
+            history: vec![],
+        };
+        // Deficit smaller than a freed MHA block -> plan = 1 MHA, 0 MLP.
+        let deficit = spec.mha_bytes() / 4;
+        let plan = choose_plan(&spec, 2, &st, 10, deficit).unwrap();
+        assert_eq!((plan.alpha, plan.beta), (1, 0));
+    }
+
+    #[test]
+    fn eq6_uses_mlp_when_deficit_bigger() {
+        let spec = ModelSpec::llama33_70b();
+        let st = DeviceMemState {
+            slack_bytes: 0,
+            kv_per_token: 1,
+            alpha_avail: 4,
+            beta_avail: 4,
+            current: OffloadPlan {
+                at_tokens: 0,
+                alpha: 0,
+                beta: 0,
+            },
+            next_threshold: 0,
+            history: vec![],
+        };
+        // Deficit bigger than freed(MHA) but under freed(MLP): swap to MLP
+        // (Fig. 9's TS^2 step) rather than stacking two plans.
+        let deficit = spec.mha_bytes(); // freed(mha)=mha/2 at seg=2 < deficit
+        let plan = choose_plan(&spec, 2, &st, 10, deficit).unwrap();
+        assert!(plan.extra_load_bytes(&spec) >= deficit * 2 - 1);
+        assert!(
+            plan.extra_load_bytes(&spec) <= spec.mlp_bytes(),
+            "should pick one MLP block (or cheaper), got {plan:?}"
+        );
+    }
+
+    #[test]
+    fn kv_transfer_delays_threshold() {
+        let (alloc, cluster) = lowmem_setup();
+        let mut planner = OnlinePlanner::new(&alloc, &cluster, 1);
+        let i = (0..planner.states.len())
+            .filter(|&i| planner.states[i].next_threshold < usize::MAX)
+            .min_by_key(|&i| planner.states[i].next_threshold)
+            .unwrap();
+        let ts1 = planner.states[i].next_threshold;
+        // Having shipped `ts1` tokens of KV away, the same token count does
+        // not trigger.
+        assert!(planner.on_token(i, ts1 + 1, ts1 as i64).is_none());
+    }
+
+    #[test]
+    fn exhausted_device_reports_saturation() {
+        let spec = ModelSpec::llama2_13b();
+        let alloc = Allocation::new(
+            spec.clone(),
+            2,
+            vec![DeviceAssignment {
+                total_layers: 40,
+                full_offload: 40,
+                mha_offload: 0,
+                mlp_offload: 0,
+            }],
+        );
+        let cluster = Cluster::new(vec![crate::cluster::DeviceSpec::xavier_nx_16()]);
+        let planner = OnlinePlanner::new(&alloc, &cluster, 1);
+        // All layers already streamed: nothing evictable.
+        assert_eq!(planner.states[0].alpha_avail, 0);
+        assert_eq!(planner.states[0].beta_avail, 0);
+    }
+
+    #[test]
+    fn micro_batch_accelerates_thresholds() {
+        let (alloc, cluster) = lowmem_setup();
+        let p1 = OnlinePlanner::new(&alloc, &cluster, 1);
+        let p4 = OnlinePlanner::new(&alloc, &cluster, 4);
+        for i in 0..p1.states.len() {
+            if p1.states[i].next_threshold < usize::MAX {
+                assert!(p4.states[i].next_threshold <= p1.states[i].next_threshold);
+            }
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Config-file cluster definitions: describe a deployment in TOML
+//! (`configs/*.toml`) instead of code — the launcher path a downstream
+//! user actually touches.
+//!
+//! ```toml
+//! name = "my-edge-rack"
+//! model = "llama3.3-70b"
+//! bandwidth_mbps = 200.0
+//!
+//! [[device]]
+//! kind = "agx-orin-64"
+//!
+//! [[device]]
+//! kind = "xavier-nx-16"
+//! mem_gb = 8            # optional cap (lowmem experiments)
+//! ssd_read_gbps = 1.0   # optional overrides
+//! ```
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cluster::{Cluster, DeviceSpec};
+use crate::model::ModelSpec;
+use crate::util::bytes::{gib, mbps};
+use crate::util::toml::Document;
+
+/// A full deployment description parsed from TOML.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    pub name: String,
+    pub model: ModelSpec,
+    pub cluster: Cluster,
+    /// Planner/simulator bandwidth, bytes/s.
+    pub bandwidth: f64,
+}
+
+impl Deployment {
+    pub fn parse(src: &str) -> Result<Deployment> {
+        let doc = Document::parse(src).map_err(|e| anyhow!("{e}"))?;
+        let name = doc
+            .get("", "name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("unnamed")
+            .to_string();
+        let model_name = doc
+            .get("", "model")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("config missing top-level `model = \"...\"`"))?;
+        let model = ModelSpec::by_name(model_name)
+            .ok_or_else(|| anyhow!("unknown model preset '{model_name}'"))?;
+        let bandwidth = mbps(
+            doc.get("", "bandwidth_mbps")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(200.0),
+        );
+
+        let entries = doc
+            .table_arrays
+            .get("device")
+            .ok_or_else(|| anyhow!("config needs at least one [[device]]"))?;
+        let mut devices = Vec::new();
+        for (i, t) in entries.iter().enumerate() {
+            let kind = t
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("device #{i} missing `kind`"))?;
+            let mut dev = DeviceSpec::by_name(kind)
+                .ok_or_else(|| anyhow!("device #{i}: unknown kind '{kind}'"))?;
+            if let Some(mem_gb) = t.get("mem_gb").and_then(|v| v.as_f64()) {
+                if mem_gb <= 0.0 {
+                    return Err(anyhow!("device #{i}: mem_gb must be positive"));
+                }
+                dev = dev.with_mem_limit(gib(mem_gb));
+            }
+            if let Some(r) = t.get("ssd_read_gbps").and_then(|v| v.as_f64()) {
+                dev.ssd_read_bps = r * 1e9;
+            }
+            if let Some(w) = t.get("ssd_write_gbps").and_then(|v| v.as_f64()) {
+                dev.ssd_write_bps = w * 1e9;
+            }
+            devices.push(dev);
+        }
+        Ok(Deployment {
+            name,
+            model,
+            cluster: Cluster::new(devices),
+            bandwidth,
+        })
+    }
+
+    pub fn load(path: &str) -> Result<Deployment> {
+        let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::parse(&src).with_context(|| format!("parsing {path}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+name = "e3-like"
+model = "llama3.3-70b"
+bandwidth_mbps = 100.0
+
+[[device]]
+kind = "agx-orin-64"
+
+[[device]]
+kind = "agx-orin-64"
+
+[[device]]
+kind = "agx-orin-32"
+mem_gb = 24
+
+[[device]]
+kind = "xavier-nx-16"
+ssd_read_gbps = 0.9
+"#;
+
+    #[test]
+    fn parses_full_deployment() {
+        let d = Deployment::parse(SAMPLE).unwrap();
+        assert_eq!(d.name, "e3-like");
+        assert_eq!(d.model.layers, 80);
+        assert_eq!(d.cluster.len(), 4);
+        assert_eq!(d.cluster.devices[2].mem_bytes, gib(24.0));
+        assert!((d.cluster.devices[3].ssd_read_bps - 0.9e9).abs() < 1.0);
+        assert!((d.bandwidth - mbps(100.0)).abs() < 1.0);
+    }
+
+    #[test]
+    fn rejects_unknown_model() {
+        let src = SAMPLE.replace("llama3.3-70b", "gpt-5");
+        assert!(Deployment::parse(&src).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_devices() {
+        assert!(Deployment::parse("model = \"tiny\"\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_mem() {
+        let src = format!("{SAMPLE}\n[[device]]\nkind = \"xavier-nx-16\"\nmem_gb = -1\n");
+        assert!(Deployment::parse(&src).is_err());
+    }
+
+    #[test]
+    fn config_feeds_the_planner() {
+        let d = Deployment::parse(SAMPLE).unwrap();
+        let opts = crate::plan::PlanOptions {
+            empirical_tokens: 128,
+            micro_batch: 1,
+            bandwidth: d.bandwidth,
+        };
+        let report = crate::plan::plan(&d.model, &d.cluster, &opts).unwrap();
+        assert!(report.allocation.covers_model());
+    }
+}

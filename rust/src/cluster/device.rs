@@ -1,0 +1,154 @@
+//! Edge-device descriptions (paper Tab. II) and the rates the simulator and
+//! cost model consume.
+//!
+//! Compute rates are *effective* decode throughput, calibrated from the
+//! boards' relative AI performance (Tab. II: 21 / 200 / 275 TOPS) with a
+//! memory-bound derating: autoregressive decode is dominated by weight
+//! streaming, so effective FLOP/s is far below peak TOPS. Absolute scale only
+//! multiplies every latency; *ratios* between devices (what the allocation
+//! algorithms act on) follow Tab. II.
+
+use crate::util::bytes::{gib, GIB};
+
+/// One edge device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// GPU-visible memory capacity in bytes (`Mem_i`).
+    pub mem_bytes: u64,
+    /// Effective compute rate in FLOP/s for decode-shaped matmuls.
+    pub flops: f64,
+    /// Unified-memory bandwidth, bytes/s. Autoregressive decode streams
+    /// every resident weight byte once per token, so this — not TOPS —
+    /// bounds decode latency (roofline in `cost::comp_time`).
+    pub mem_bw: f64,
+    /// SSD sequential read bandwidth, bytes/s (model-shard loads).
+    pub ssd_read_bps: f64,
+    /// SSD write bandwidth, bytes/s (KV-cache offload writes; slower and
+    /// jittery on Jetson-class NVMe — drives Fig. 2b).
+    pub ssd_write_bps: f64,
+}
+
+impl DeviceSpec {
+    /// Jetson Xavier NX 16 GB: 21 TOPS, 20 W, LPDDR4x ~59.7 GB/s.
+    pub fn xavier_nx_16() -> Self {
+        DeviceSpec {
+            name: "XavierNX-16G".into(),
+            mem_bytes: gib(16.0),
+            flops: 0.9e12,
+            mem_bw: 48e9, // ~80% of the 59.7 GB/s spec is realizable
+            ssd_read_bps: 1.2e9,
+            ssd_write_bps: 0.35e9,
+        }
+    }
+
+    /// Jetson AGX Orin 32 GB: 200 TOPS, 50 W, LPDDR5 ~204.8 GB/s.
+    pub fn agx_orin_32() -> Self {
+        DeviceSpec {
+            name: "AGXOrin-32G".into(),
+            mem_bytes: gib(32.0),
+            flops: 6.5e12,
+            mem_bw: 160e9,
+            ssd_read_bps: 2.2e9,
+            ssd_write_bps: 0.7e9,
+        }
+    }
+
+    /// Jetson AGX Orin 64 GB: 275 TOPS, 60 W, LPDDR5 ~204.8 GB/s.
+    pub fn agx_orin_64() -> Self {
+        DeviceSpec {
+            name: "AGXOrin-64G".into(),
+            mem_bytes: gib(64.0),
+            flops: 8.5e12,
+            mem_bw: 170e9,
+            ssd_read_bps: 2.5e9,
+            ssd_write_bps: 0.8e9,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "xavier-nx-16" | "xaviernx-16g" | "nx16" => Some(Self::xavier_nx_16()),
+            "agx-orin-32" | "agxorin-32g" | "orin32" => Some(Self::agx_orin_32()),
+            "agx-orin-64" | "agxorin-64g" | "orin64" => Some(Self::agx_orin_64()),
+            _ => None,
+        }
+    }
+
+    /// Restrict usable memory (Figs 15–17: half an NX, Orin32 − 8 GB).
+    pub fn with_mem_limit(mut self, mem_bytes: u64) -> Self {
+        assert!(mem_bytes > 0);
+        self.name = format!(
+            "{}@{:.0}G",
+            self.name,
+            mem_bytes as f64 / GIB as f64
+        );
+        self.mem_bytes = mem_bytes;
+        self
+    }
+
+    /// Memory reserved for runtime/framework overhead before layers and KV
+    /// cache are placed. Jetson memory is *unified*: the OS, CUDA context,
+    /// activations and allocator fragmentation all bite from the same pool,
+    /// so the reserve is substantial (~18%, floor 1.2 GiB).
+    pub fn usable_mem(&self) -> u64 {
+        let reserve = (self.mem_bytes as f64 * 0.18) as u64;
+        self.mem_bytes
+            .saturating_sub(reserve.max((1.2 * GIB as f64) as u64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_table_ii_memory() {
+        assert_eq!(DeviceSpec::xavier_nx_16().mem_bytes, gib(16.0));
+        assert_eq!(DeviceSpec::agx_orin_32().mem_bytes, gib(32.0));
+        assert_eq!(DeviceSpec::agx_orin_64().mem_bytes, gib(64.0));
+    }
+
+    #[test]
+    fn compute_ordering_follows_tops() {
+        let nx = DeviceSpec::xavier_nx_16();
+        let o32 = DeviceSpec::agx_orin_32();
+        let o64 = DeviceSpec::agx_orin_64();
+        assert!(nx.flops < o32.flops && o32.flops < o64.flops);
+        // Tab. II ratio Orin64:NX = 275:21 ≈ 13; our effective ratio is
+        // compressed by the memory-bound derating but stays > 5x.
+        assert!(o64.flops / nx.flops > 5.0);
+    }
+
+    #[test]
+    fn writes_slower_than_reads() {
+        for d in [
+            DeviceSpec::xavier_nx_16(),
+            DeviceSpec::agx_orin_32(),
+            DeviceSpec::agx_orin_64(),
+        ] {
+            assert!(d.ssd_write_bps < d.ssd_read_bps);
+        }
+    }
+
+    #[test]
+    fn mem_limit_restricts() {
+        let d = DeviceSpec::xavier_nx_16().with_mem_limit(gib(8.0));
+        assert_eq!(d.mem_bytes, gib(8.0));
+        assert!(d.name.contains("8G"));
+    }
+
+    #[test]
+    fn usable_mem_below_capacity() {
+        let d = DeviceSpec::agx_orin_64();
+        assert!(d.usable_mem() < d.mem_bytes);
+        assert!(d.usable_mem() > d.mem_bytes / 2);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(DeviceSpec::by_name("nx16").is_some());
+        assert!(DeviceSpec::by_name("agx-orin-64").is_some());
+        assert!(DeviceSpec::by_name("h100").is_none());
+    }
+}

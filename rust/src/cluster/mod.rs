@@ -1,0 +1,139 @@
+//! Cluster = heterogeneous device set + shared network, with the experiment
+//! environments from paper Tab. IV and §V-C Settings 1–3 as constructors.
+
+pub mod config;
+pub mod device;
+
+pub use config::Deployment;
+pub use device::DeviceSpec;
+
+use crate::util::bytes::gib;
+
+/// A set of edge devices cooperating over one shared network.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub devices: Vec<DeviceSpec>,
+}
+
+impl Cluster {
+    pub fn new(devices: Vec<DeviceSpec>) -> Self {
+        assert!(!devices.is_empty(), "cluster needs at least one device");
+        Cluster { devices }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Total usable memory across devices.
+    pub fn total_usable_mem(&self) -> u64 {
+        self.devices.iter().map(|d| d.usable_mem()).sum()
+    }
+
+    // ------------------------- paper environments (Tab. IV) -------------
+
+    /// E1: 1x Xavier NX 16 GB + 1x AGX Orin 32 GB (Llama2-13B).
+    pub fn env_e1() -> Self {
+        Cluster::new(vec![
+            DeviceSpec::agx_orin_32(),
+            DeviceSpec::xavier_nx_16(),
+        ])
+    }
+
+    /// E2: NX16 + Orin32 + Orin64 (Qwen3-32B).
+    pub fn env_e2() -> Self {
+        Cluster::new(vec![
+            DeviceSpec::agx_orin_64(),
+            DeviceSpec::agx_orin_32(),
+            DeviceSpec::xavier_nx_16(),
+        ])
+    }
+
+    /// E3: NX16 + Orin32 + 2x Orin64 (Llama3.3-70B).
+    pub fn env_e3() -> Self {
+        Cluster::new(vec![
+            DeviceSpec::agx_orin_64(),
+            DeviceSpec::agx_orin_64(),
+            DeviceSpec::agx_orin_32(),
+            DeviceSpec::xavier_nx_16(),
+        ])
+    }
+
+    // ----------------- extremely-low-memory settings (§V-C) -------------
+
+    /// Setting 1: Orin64 + 2x Orin32 + 2x NX16.
+    pub fn lowmem_setting1() -> Self {
+        Cluster::new(vec![
+            DeviceSpec::agx_orin_64(),
+            DeviceSpec::agx_orin_32(),
+            DeviceSpec::agx_orin_32(),
+            DeviceSpec::xavier_nx_16(),
+            DeviceSpec::xavier_nx_16(),
+        ])
+    }
+
+    /// Setting 2: Setting 1 with one NX16 limited to half its memory.
+    pub fn lowmem_setting2() -> Self {
+        Cluster::new(vec![
+            DeviceSpec::agx_orin_64(),
+            DeviceSpec::agx_orin_32(),
+            DeviceSpec::agx_orin_32(),
+            DeviceSpec::xavier_nx_16(),
+            DeviceSpec::xavier_nx_16().with_mem_limit(gib(8.0)),
+        ])
+    }
+
+    /// Setting 3: Setting 2 with 8 GB made unavailable on one Orin32.
+    pub fn lowmem_setting3() -> Self {
+        Cluster::new(vec![
+            DeviceSpec::agx_orin_64(),
+            DeviceSpec::agx_orin_32(),
+            DeviceSpec::agx_orin_32().with_mem_limit(gib(24.0)),
+            DeviceSpec::xavier_nx_16(),
+            DeviceSpec::xavier_nx_16().with_mem_limit(gib(8.0)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_sizes_match_table_iv() {
+        assert_eq!(Cluster::env_e1().len(), 2);
+        assert_eq!(Cluster::env_e2().len(), 3);
+        assert_eq!(Cluster::env_e3().len(), 4);
+    }
+
+    #[test]
+    fn lowmem_settings_shrink_monotonically() {
+        let m1 = Cluster::lowmem_setting1().total_usable_mem();
+        let m2 = Cluster::lowmem_setting2().total_usable_mem();
+        let m3 = Cluster::lowmem_setting3().total_usable_mem();
+        assert!(m1 > m2 && m2 > m3);
+    }
+
+    #[test]
+    fn e3_fits_llama70b_marginally() {
+        // Tab. IV pairs E3 (64+64+32+16 = 176 GB raw) with the ~140 GiB
+        // Llama3.3-70B: feasible only with most memory spent on weights —
+        // exactly the regime LIME targets.
+        use crate::model::ModelSpec;
+        let c = Cluster::env_e3();
+        let spec = ModelSpec::llama33_70b();
+        assert!(c.total_usable_mem() > spec.total_bytes());
+        let slack = c.total_usable_mem() - spec.total_bytes();
+        assert!((slack as f64) < 0.35 * c.total_usable_mem() as f64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_cluster_panics() {
+        Cluster::new(vec![]);
+    }
+}

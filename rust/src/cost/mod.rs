@@ -1,0 +1,366 @@
+//! Offload-oriented cost model for the interleaved pipeline (paper §IV-B,
+//! Eq. 1) plus memory feasibility (the Eq. 1 constraint set).
+//!
+//! For one auto-regressive step of one micro-batch:
+//!
+//! ```text
+//! T_total = T_comp + T_comm + T_uncover
+//! T_comp    = Σ_i comp(L_i)
+//! T_comm    = #Seg · |D| · h_size / bw_net
+//! T_uncover = max_i max( load(L~_i) − T_i^idle , 0 )
+//! T_i^idle  = comp(L_i − L~_i) + Σ_{i'≠i} comp(L_i') + |D| · h_size / bw_net   (Eq. 2)
+//! ```
+//!
+//! `comp` converts layer FLOPs to seconds through the device's effective
+//! rate; `load` converts the bytes of offloaded parameters (full layers, or
+//! the MHA/MLP *fraction* of split layers — the fine-grained granularity of
+//! §IV-C) through the device's SSD read bandwidth.
+
+use crate::cluster::{Cluster, DeviceSpec};
+use crate::model::ModelSpec;
+use crate::plan::allocation::{Allocation, DeviceAssignment};
+
+/// Decomposed per-token latency prediction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostBreakdown {
+    pub t_comp: f64,
+    pub t_comm: f64,
+    pub t_uncover: f64,
+}
+
+impl CostBreakdown {
+    pub fn total(&self) -> f64 {
+        self.t_comp + self.t_comm + self.t_uncover
+    }
+}
+
+/// Why an allocation cannot run.
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+pub enum MemError {
+    #[error("device {device} over capacity: need {need} bytes, usable {usable}")]
+    OverCapacity {
+        device: usize,
+        need: u64,
+        usable: u64,
+    },
+}
+
+/// Seconds for device `dev` to compute `layers` decoder layers for one
+/// decode step with `ctx` cached tokens and micro-batch `micro`.
+///
+/// Roofline: decode streams every weight byte once per step regardless of
+/// batch (so micro-batching amortizes the memory-bound term for free), while
+/// FLOPs scale linearly with `micro`. `t = max(flops/peak, bytes/mem_bw)`.
+pub fn comp_time(
+    spec: &ModelSpec,
+    dev: &DeviceSpec,
+    layers: usize,
+    ctx: usize,
+    micro: usize,
+) -> f64 {
+    if layers == 0 {
+        return 0.0;
+    }
+    let flops = spec.layer_decode_flops(ctx) * layers as f64 * micro as f64;
+    let weight_bytes = spec.layer_bytes() as f64 * layers as f64;
+    let kv_bytes =
+        (spec.kv_bytes_per_token_layer() * ctx as u64 * layers as u64 * micro as u64) as f64;
+    let t_flops = flops / dev.flops;
+    let t_mem = (weight_bytes + kv_bytes) / dev.mem_bw;
+    t_flops.max(t_mem)
+}
+
+/// Seconds for `dev` to load `assignment`'s offloaded bytes from SSD
+/// (one full pass over all segments: every offloaded unit exactly once).
+pub fn load_time(spec: &ModelSpec, dev: &DeviceSpec, a: &DeviceAssignment) -> f64 {
+    let bytes = a.load_bytes(spec);
+    if bytes == 0 {
+        return 0.0;
+    }
+    bytes as f64 / dev.ssd_read_bps
+}
+
+/// `T_comm` for one token pass: every segment hop crosses one link.
+pub fn t_comm(seg: usize, num_devices: usize, spec: &ModelSpec, micro: usize, bw: f64) -> f64 {
+    let h = spec.h_size(micro);
+    seg as f64 * num_devices as f64 * crate::net::link_transfer_secs(h, bw)
+}
+
+/// `T_i^idle` (Eq. 2): time on device `i` that loading can hide behind.
+pub fn t_idle(
+    alloc: &Allocation,
+    cluster: &Cluster,
+    i: usize,
+    ctx: usize,
+    micro: usize,
+    bw: f64,
+) -> f64 {
+    let spec = &alloc.spec;
+    let a = &alloc.devices[i];
+    let own = comp_time(
+        spec,
+        &cluster.devices[i],
+        a.non_offloaded_layers(),
+        ctx,
+        micro,
+    );
+    let others: f64 = alloc
+        .devices
+        .iter()
+        .enumerate()
+        .filter(|(j, _)| *j != i)
+        .map(|(j, aj)| comp_time(spec, &cluster.devices[j], aj.total_layers, ctx, micro))
+        .sum();
+    let comm = cluster.devices.len() as f64
+        * crate::net::link_transfer_secs(spec.h_size(micro), bw);
+    own + others + comm
+}
+
+/// Full Eq. 1 evaluation.
+pub fn t_total(
+    alloc: &Allocation,
+    cluster: &Cluster,
+    ctx: usize,
+    micro: usize,
+    bw: f64,
+) -> CostBreakdown {
+    let spec = &alloc.spec;
+    let t_comp: f64 = alloc
+        .devices
+        .iter()
+        .enumerate()
+        .map(|(i, a)| comp_time(spec, &cluster.devices[i], a.total_layers, ctx, micro))
+        .sum();
+    let comm = t_comm(alloc.seg, cluster.len(), spec, micro, bw);
+    let t_uncover = alloc
+        .devices
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            let load = load_time(spec, &cluster.devices[i], a);
+            (load - t_idle(alloc, cluster, i, ctx, micro, bw)).max(0.0)
+        })
+        .fold(0.0, f64::max);
+    CostBreakdown {
+        t_comp,
+        t_comm: comm,
+        t_uncover,
+    }
+}
+
+/// Memory demand of device `i` under `alloc` after `n_tokens` of KV have
+/// accumulated (Eq. 1 constraint, with `n_i^trans` KV tokens shipped away).
+pub fn mem_demand(
+    alloc: &Allocation,
+    i: usize,
+    n_tokens: usize,
+    kv_transferred: i64,
+) -> u64 {
+    let spec = &alloc.spec;
+    let a = &alloc.devices[i];
+    let weights = a.resident_bytes(spec, alloc.seg);
+    // Embedding table on the first device, LM head on the last.
+    let embed = if i == 0 || i + 1 == alloc.devices.len() {
+        spec.embed_bytes() / 2
+    } else {
+        0
+    };
+    let kv_tokens = (n_tokens as i64 - kv_transferred).max(0) as u64;
+    let kv = kv_tokens
+        * spec.kv_bytes_per_token_layer()
+        * a.total_layers as u64;
+    weights + embed + kv
+}
+
+/// KV tokens device `i` can hold beyond its resident weights; negative
+/// means even the weights + embedding don't fit.
+pub fn kv_capacity_tokens(alloc: &Allocation, cluster: &Cluster, i: usize) -> i64 {
+    let spec = &alloc.spec;
+    let a = &alloc.devices[i];
+    let fixed = mem_demand(alloc, i, 0, 0);
+    let per_tok = (spec.kv_bytes_per_token_layer() * a.total_layers.max(1) as u64).max(1);
+    let usable = cluster.devices[i].usable_mem();
+    (usable as i64 - fixed as i64) / per_tok as i64
+}
+
+/// Tokens of KV that overflow device `i`'s memory when it holds
+/// `tokens_held` KV tokens (net of transfers). Zero when everything fits.
+pub fn overflow_tokens(
+    alloc: &Allocation,
+    cluster: &Cluster,
+    i: usize,
+    tokens_held: usize,
+    kv_transferred: i64,
+) -> usize {
+    let usable = cluster.devices[i].usable_mem();
+    let need = mem_demand(alloc, i, tokens_held, kv_transferred);
+    if need <= usable {
+        return 0;
+    }
+    let spec = &alloc.spec;
+    let per_tok = (spec.kv_bytes_per_token_layer() * alloc.devices[i].total_layers.max(1) as u64)
+        .max(1);
+    ((need - usable).div_ceil(per_tok)) as usize
+}
+
+/// Check the Eq. 1 memory constraint for every device at `n_tokens`.
+pub fn feasible(alloc: &Allocation, cluster: &Cluster, n_tokens: usize) -> Result<(), MemError> {
+    for i in 0..alloc.devices.len() {
+        let need = mem_demand(alloc, i, n_tokens, 0);
+        let usable = cluster.devices[i].usable_mem();
+        if need > usable {
+            return Err(MemError::OverCapacity {
+                device: i,
+                need,
+                usable,
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::allocation::Allocation;
+
+    fn toy() -> (ModelSpec, Cluster) {
+        (ModelSpec::llama2_13b(), Cluster::env_e1())
+    }
+
+    fn alloc_with(
+        spec: &ModelSpec,
+        counts: &[(usize, usize)], // (total, full_offload)
+        seg: usize,
+    ) -> Allocation {
+        let mut devices = Vec::new();
+        for &(total, off) in counts {
+            devices.push(DeviceAssignment {
+                total_layers: total,
+                full_offload: off,
+                mha_offload: 0,
+                mlp_offload: 0,
+            });
+        }
+        Allocation::new(spec.clone(), seg, devices)
+    }
+
+    #[test]
+    fn comp_time_scales_with_layers_and_device() {
+        let (spec, cluster) = toy();
+        let fast = comp_time(&spec, &cluster.devices[0], 10, 512, 1);
+        let slow = comp_time(&spec, &cluster.devices[1], 10, 512, 1);
+        assert!(slow > fast, "NX must be slower than Orin");
+        let twenty = comp_time(&spec, &cluster.devices[0], 20, 512, 1);
+        assert!((twenty / fast - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn load_time_zero_without_offload() {
+        let (spec, cluster) = toy();
+        let a = DeviceAssignment {
+            total_layers: 10,
+            full_offload: 0,
+            mha_offload: 0,
+            mlp_offload: 0,
+        };
+        assert_eq!(load_time(&spec, &cluster.devices[0], &a), 0.0);
+    }
+
+    #[test]
+    fn fine_grained_load_cheaper_than_full() {
+        let (spec, cluster) = toy();
+        let full = DeviceAssignment {
+            total_layers: 10,
+            full_offload: 2,
+            mha_offload: 0,
+            mlp_offload: 0,
+        };
+        let split = DeviceAssignment {
+            total_layers: 10,
+            full_offload: 1,
+            mha_offload: 1, // MLP pinned -> only the MHA block is loaded
+            mlp_offload: 0,
+        };
+        assert!(
+            load_time(&spec, &cluster.devices[0], &split)
+                < load_time(&spec, &cluster.devices[0], &full)
+        );
+    }
+
+    #[test]
+    fn t_comm_scales_with_segments_and_inverse_bw() {
+        let (spec, _) = toy();
+        let a = t_comm(2, 2, &spec, 1, crate::util::bytes::mbps(200.0));
+        let b = t_comm(4, 2, &spec, 1, crate::util::bytes::mbps(200.0));
+        let c = t_comm(2, 2, &spec, 1, crate::util::bytes::mbps(100.0));
+        assert!((b / a - 2.0).abs() < 1e-9);
+        assert!(c > a);
+    }
+
+    #[test]
+    fn uncover_zero_when_idle_dominates() {
+        let (spec, mut cluster) = toy();
+        // 1 offloaded layer on device 0 with a fast SSD: the system's
+        // compute time fully hides the 1-layer load.
+        cluster.devices[0].ssd_read_bps = 20e9;
+        let alloc = alloc_with(&spec, &[(20, 1), (20, 0)], 2);
+        let cb = t_total(&alloc, &cluster, 1024, 1, crate::util::bytes::mbps(200.0));
+        assert_eq!(cb.t_uncover, 0.0);
+        assert!(cb.t_comp > 0.0 && cb.t_comm > 0.0);
+    }
+
+    #[test]
+    fn uncover_positive_when_load_dominates() {
+        let (spec, cluster) = toy();
+        // Offload nearly everything on the slow-SSD device, tiny compute.
+        let alloc = alloc_with(&spec, &[(2, 0), (38, 36)], 2);
+        let cb = t_total(&alloc, &cluster, 16, 1, crate::util::bytes::mbps(200.0));
+        assert!(cb.t_uncover > 0.0);
+    }
+
+    #[test]
+    fn feasibility_detects_oom() {
+        let (spec, cluster) = toy();
+        // 40 fp16 llama-13b layers on a 16 GB NX alone: layer ~0.6 GiB =>
+        // 40 resident layers ~ 25 GiB >> 16 GiB usable.
+        let alloc = alloc_with(&spec, &[(2, 0), (38, 0)], 2);
+        assert!(feasible(&alloc, &cluster, 0).is_err());
+        // With most layers offloaded it fits again.
+        let alloc2 = alloc_with(&spec, &[(20, 8), (20, 14)], 4);
+        assert!(feasible(&alloc2, &cluster, 0).is_ok());
+    }
+
+    #[test]
+    fn kv_growth_eventually_breaks_feasibility() {
+        let (spec, cluster) = toy();
+        let alloc = alloc_with(&spec, &[(20, 8), (20, 14)], 4);
+        assert!(feasible(&alloc, &cluster, 0).is_ok());
+        let mut n = 1usize;
+        while feasible(&alloc, &cluster, n).is_ok() {
+            n *= 2;
+            assert!(n < 1 << 30, "kv growth never broke feasibility");
+        }
+    }
+
+    #[test]
+    fn kv_transfer_relieves_memory() {
+        let (spec, _) = toy();
+        let alloc = alloc_with(&spec, &[(20, 8), (20, 14)], 4);
+        let with = mem_demand(&alloc, 0, 1000, 400);
+        let without = mem_demand(&alloc, 0, 1000, 0);
+        assert!(with < without);
+        // Negative transfer = receiving KV from peers -> more demand.
+        let recv = mem_demand(&alloc, 0, 1000, -400);
+        assert!(recv > without);
+    }
+
+    #[test]
+    fn micro_batch_amortizes_compute() {
+        let (spec, cluster) = toy();
+        let one = comp_time(&spec, &cluster.devices[0], 10, 128, 1);
+        let four = comp_time(&spec, &cluster.devices[0], 10, 128, 4);
+        assert!(four > one, "more tokens cost more in total");
+        assert!(four < 4.0 * one, "but sublinearly (weight reuse)");
+    }
+}

@@ -1,0 +1,459 @@
+//! Experiment harness: one runner per paper figure/table (see DESIGN.md §3
+//! for the index). Each runner returns structured rows *and* prints the
+//! same series the paper reports, so the bench targets and the `lime
+//! experiments` subcommand share one implementation.
+
+use crate::baselines::{all, by_name, Method};
+use crate::cluster::{Cluster, DeviceSpec};
+use crate::model::ModelSpec;
+use crate::net::BandwidthTrace;
+use crate::pipeline::{run_interleaved, run_traditional, ExecOptions, TradOptions};
+use crate::plan::{plan, plan_with_seg, PlanOptions};
+use crate::sim::SsdModel;
+use crate::util::bytes::mbps;
+use crate::workload::Pattern;
+
+/// A single (method × bandwidth × pattern) measurement.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub method: &'static str,
+    pub bandwidth_mbps: f64,
+    pub pattern: Pattern,
+    /// `None` = OOM. OOT is judged against `Pattern::oot_limit_ms`.
+    pub ms_per_token: Option<f64>,
+}
+
+impl Cell {
+    pub fn is_oot(&self) -> bool {
+        matches!(self.ms_per_token, Some(ms) if ms > self.pattern.oot_limit_ms())
+    }
+
+    pub fn render(&self) -> String {
+        match self.ms_per_token {
+            None => "OOM".into(),
+            Some(ms) if ms > self.pattern.oot_limit_ms() => "OOT".into(),
+            Some(ms) => format!("{ms:9.1}"),
+        }
+    }
+}
+
+fn grid(
+    spec: &ModelSpec,
+    cluster: &Cluster,
+    methods: &[Box<dyn Method>],
+    bandwidths: &[f64],
+    tokens: usize,
+) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for method in methods {
+        for &bw in bandwidths {
+            for pattern in [Pattern::Sporadic, Pattern::Bursty] {
+                let trace = BandwidthTrace::fixed_mbps(bw);
+                let out = method.run(spec, cluster, &trace, pattern, tokens);
+                cells.push(Cell {
+                    method: method.name(),
+                    bandwidth_mbps: bw,
+                    pattern,
+                    ms_per_token: out.ms_per_token(),
+                });
+            }
+        }
+    }
+    cells
+}
+
+fn print_grid(title: &str, cells: &[Cell], bandwidths: &[f64]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:32} {:>12} {:>12} {:>12} {:>12}",
+        "method (ms/token)", "spor@100", "burst@100", "spor@200", "burst@200"
+    );
+    let mut methods: Vec<&str> = Vec::new();
+    for c in cells {
+        if !methods.contains(&c.method) {
+            methods.push(c.method);
+        }
+    }
+    for m in methods {
+        let cell = |bw: f64, p: Pattern| {
+            cells
+                .iter()
+                .find(|c| c.method == m && c.bandwidth_mbps == bw && c.pattern == p)
+                .map(|c| c.render())
+                .unwrap_or_else(|| "-".into())
+        };
+        println!(
+            "{:32} {:>12} {:>12} {:>12} {:>12}",
+            m,
+            cell(bandwidths[0], Pattern::Sporadic),
+            cell(bandwidths[0], Pattern::Bursty),
+            cell(bandwidths[1], Pattern::Sporadic),
+            cell(bandwidths[1], Pattern::Bursty)
+        );
+    }
+}
+
+/// LIME's speedup over every other method that completed, per column.
+pub fn speedups(cells: &[Cell]) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for &bw in &[100.0, 200.0] {
+        for pattern in [Pattern::Sporadic, Pattern::Bursty] {
+            let lime = cells.iter().find(|c| {
+                c.method == "LIME" && c.bandwidth_mbps == bw && c.pattern == pattern
+            });
+            let Some(Cell {
+                ms_per_token: Some(lime_ms),
+                ..
+            }) = lime
+            else {
+                continue;
+            };
+            for c in cells.iter().filter(|c| {
+                c.method != "LIME" && c.bandwidth_mbps == bw && c.pattern == pattern
+            }) {
+                if let Some(ms) = c.ms_per_token {
+                    out.push((
+                        format!("{} @{}Mbps {:?}", c.method, bw, pattern),
+                        ms / lime_ms,
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ----------------------------------------------------------- Fig. 2a / 2b
+
+/// Fig. 2a: TP+offloading vs PP+offloading at 200 Mbps on two settings.
+pub fn fig2a(tokens: usize) -> Vec<(String, f64, f64)> {
+    // Two device settings per model, in the paper's "devices accommodate
+    // the model, offloading covers the margin" regime.
+    let cases = [
+        ("Llama3.3-70B / setting A", ModelSpec::llama33_70b(), Cluster::env_e3()),
+        ("Llama3.3-70B / setting B", ModelSpec::llama33_70b(), Cluster::lowmem_setting1()),
+        ("Qwen3-32B / setting A", ModelSpec::qwen3_32b(), Cluster::env_e2()),
+        ("Qwen3-32B / setting B", ModelSpec::qwen3_32b(), Cluster::env_e3()),
+    ];
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let tp = by_name("tpi-llm-offload").unwrap();
+    let pp = by_name("pp-offload").unwrap();
+    println!("\n== Fig. 2a: TP+offload vs PP+offload (200 Mbps, sporadic) ==");
+    let mut rows = Vec::new();
+    for (label, spec, cluster) in cases {
+        let tp_ms = tp
+            .run(&spec, &cluster, &bw, Pattern::Sporadic, tokens)
+            .ms_per_token()
+            .unwrap_or(f64::INFINITY);
+        let pp_ms = pp
+            .run(&spec, &cluster, &bw, Pattern::Sporadic, tokens)
+            .ms_per_token()
+            .unwrap_or(f64::INFINITY);
+        println!(
+            "  {label:28} TP+off {tp_ms:9.1} ms/tok   PP+off {pp_ms:9.1} ms/tok   PP speedup {:.2}x",
+            tp_ms / pp_ms
+        );
+        rows.push((label.to_string(), tp_ms, pp_ms));
+    }
+    rows
+}
+
+/// Fig. 2b: per-step extra load latency — offloading one MHA block vs
+/// offloading the (growing) KV cache, on an AGX Orin 32 GB.
+pub fn fig2b(steps: usize) -> Vec<(usize, f64, f64)> {
+    let spec = ModelSpec::llama2_13b();
+    let dev = DeviceSpec::agx_orin_32();
+    let mut ssd_model = SsdModel::new(dev.ssd_read_bps, dev.ssd_write_bps, 2);
+    let mut ssd_kv = SsdModel::new(dev.ssd_read_bps, dev.ssd_write_bps, 3);
+    let mha = spec.mha_bytes();
+    // Fig. 2b grows the KV until it reaches the MHA block's footprint.
+    let kv_per_tok = spec.kv_bytes_per_token_layer() * spec.layers as u64;
+    let mut rows = Vec::new();
+    let mut t_model = 0.0f64;
+    let mut t_kv = 0.0f64;
+    for step in 0..steps {
+        // Model-shard path: one stable read of the MHA block.
+        let iv = ssd_model.read(t_model, mha);
+        let model_ms = iv.duration() * 1e3;
+        t_model = iv.end;
+        // KV path: write the delta, read back the working set (capped at
+        // the MHA footprint, per the figure's setup).
+        let kv_bytes = (kv_per_tok * (step as u64 + 1)).min(mha);
+        let w = ssd_kv.write(t_kv, kv_per_tok);
+        let r = ssd_kv.read(w.end, kv_bytes);
+        let kv_ms = (r.end - w.start) * 1e3;
+        t_kv = r.end;
+        rows.push((step, model_ms, kv_ms));
+    }
+    let crossover = rows.iter().find(|(_, m, k)| k > m).map(|(s, _, _)| *s);
+    println!(
+        "\n== Fig. 2b: per-step load latency, model-shard vs KV offload ==\n  model-shard is flat (~{:.1} ms); KV starts cheaper and crosses over at step {:?}",
+        rows.first().map(|r| r.1).unwrap_or(0.0),
+        crossover
+    );
+    rows
+}
+
+// ------------------------------------------------------- Figs 3/4 and 7/8
+
+/// Figs 3–4: schedule traces, traditional vs interleaved, both patterns.
+pub fn fig34_schedules(tokens: usize) -> (String, String, String, String) {
+    let spec = ModelSpec::llama33_70b();
+    let cluster = Cluster::lowmem_setting1();
+    let popts = PlanOptions {
+        empirical_tokens: 128,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    };
+    let alloc = plan(&spec, &cluster, &popts).unwrap().allocation;
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let d = cluster.len();
+
+    let trad_s = run_traditional(&alloc, &cluster, &bw, 1, tokens, &TradOptions::default());
+    let lime_s = run_interleaved(&alloc, &cluster, &bw, 1, tokens, &ExecOptions::default());
+    let trad_b = run_traditional(&alloc, &cluster, &bw, d, tokens, &TradOptions::default());
+    let lime_b = run_interleaved(&alloc, &cluster, &bw, d, tokens, &ExecOptions::default());
+
+    println!("\n== Fig. 3a: traditional pipeline + offloading (sporadic) ==");
+    let a = trad_s.trace.render(d, 100);
+    println!("{a}");
+    println!("== Fig. 3b: interleaved pipeline (sporadic) ==");
+    let b = lime_s.trace.render(d, 100);
+    println!("{b}");
+    println!("== Fig. 4a: traditional pipeline + offloading (bursty) ==");
+    let c = trad_b.trace.render(d, 100);
+    println!("{c}");
+    println!("== Fig. 4b: interleaved pipeline (bursty) ==");
+    let e = lime_b.trace.render(d, 100);
+    println!("{e}");
+    println!(
+        "sporadic: traditional {:.1} ms/tok vs interleaved {:.1} ms/tok\nbursty:   traditional {:.1} ms/tok vs interleaved {:.1} ms/tok",
+        trad_s.ms_per_token(),
+        lime_s.ms_per_token(),
+        trad_b.ms_per_token(),
+        lime_b.ms_per_token()
+    );
+    (a, b, c, e)
+}
+
+/// Figs 7–8: latency vs segment count (too many segments hurt via T_comm,
+/// too few via memory/extra offload).
+pub fn fig78_segments(tokens: usize) -> Vec<(usize, f64)> {
+    let spec = ModelSpec::llama33_70b();
+    let cluster = Cluster::lowmem_setting1();
+    let popts = PlanOptions {
+        empirical_tokens: 128,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    };
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let mut rows = Vec::new();
+    println!("\n== Figs 7-8: interleaved latency vs #Seg ==");
+    for seg in 2..=10 {
+        if let Ok(alloc) = plan_with_seg(&spec, &cluster, seg, &popts) {
+            let r = run_interleaved(&alloc, &cluster, &bw, 1, tokens, &ExecOptions::default());
+            println!("  #Seg={seg:2}  {:9.1} ms/token", r.ms_per_token());
+            rows.push((seg, r.ms_per_token()));
+        }
+    }
+    rows
+}
+
+// ------------------------------------------------- main comparison (12-14)
+
+/// Figs 12/13/14: all methods × {100,200} Mbps × {sporadic,bursty}.
+pub fn main_comparison(env: &str, tokens: usize) -> Vec<Cell> {
+    let (spec, cluster, fig) = match env {
+        "e1" => (ModelSpec::llama2_13b(), Cluster::env_e1(), "Fig. 12 (E1, Llama2-13B)"),
+        "e2" => (ModelSpec::qwen3_32b(), Cluster::env_e2(), "Fig. 13 (E2, Qwen3-32B)"),
+        "e3" => (ModelSpec::llama33_70b(), Cluster::env_e3(), "Fig. 14 (E3, Llama3.3-70B)"),
+        _ => panic!("unknown env {env}"),
+    };
+    let bandwidths = [100.0, 200.0];
+    let cells = grid(&spec, &cluster, &all(), &bandwidths, tokens);
+    print_grid(fig, &cells, &bandwidths);
+    cells
+}
+
+// -------------------------------------------------- low-memory (Figs 15-17)
+
+/// Figs 15–17: extremely-low-memory settings on Llama3.3-70B.
+pub fn lowmem(setting: usize, tokens: usize) -> Vec<Cell> {
+    let spec = ModelSpec::llama33_70b();
+    let (cluster, fig) = match setting {
+        1 => (Cluster::lowmem_setting1(), "Fig. 15 (Setting 1)"),
+        2 => (Cluster::lowmem_setting2(), "Fig. 16 (Setting 2)"),
+        3 => (Cluster::lowmem_setting3(), "Fig. 17 (Setting 3)"),
+        _ => panic!("setting must be 1..=3"),
+    };
+    let bandwidths = [100.0, 200.0];
+    let cells = grid(&spec, &cluster, &all(), &bandwidths, tokens);
+    print_grid(fig, &cells, &bandwidths);
+    cells
+}
+
+// ---------------------------------------------------------- Fig. 18 / Tab V
+
+/// Fig. 18: varying bandwidth (random 50–250 Mbps walks).
+pub fn fig18(tokens: usize) -> Vec<Cell> {
+    let spec = ModelSpec::qwen3_32b();
+    let cluster = Cluster::env_e2();
+    let trace = BandwidthTrace::random_walk_mbps(0x18, 50.0, 250.0, 5, 40, tokens.max(64));
+    let mut cells = Vec::new();
+    println!("\n== Fig. 18: varying bandwidth (50-250 Mbps random walk), Qwen3-32B ==");
+    for method in all() {
+        for pattern in [Pattern::Sporadic, Pattern::Bursty] {
+            let out = method.run(&spec, &cluster, &trace, pattern, tokens);
+            let cell = Cell {
+                method: method.name(),
+                bandwidth_mbps: -1.0,
+                pattern,
+                ms_per_token: out.ms_per_token(),
+            };
+            println!(
+                "  {:32} {:?}: {}",
+                method.name(),
+                pattern,
+                cell.render()
+            );
+            cells.push(cell);
+        }
+    }
+    cells
+}
+
+/// Table V: ablation study on the low-memory Llama3.3-70B deployment.
+///
+/// The adaptation machinery only matters once the KV cache outgrows the
+/// offline plan's empirical-n reserve, so the sporadic run uses the full
+/// `tokens` horizon and the bursty run `tokens/2` (its KV grows |D|x
+/// faster) — long enough for thresholds to fire.
+pub fn tab5(tokens: usize) -> Vec<(String, Option<f64>, Option<f64>)> {
+    let spec = ModelSpec::llama33_70b();
+    let cluster = Cluster::lowmem_setting1();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let variants = ["lime-no-kv-transfer", "lime-no-planner", "lime"];
+    println!("\n== Table V: ablation (Llama3.3-70B, low-memory) ==");
+    println!("{:36} {:>14} {:>14}", "method", "sporadic", "bursty");
+    let mut rows = Vec::new();
+    for key in variants {
+        let m = by_name(key).unwrap();
+        let spor = m
+            .run(&spec, &cluster, &bw, Pattern::Sporadic, tokens)
+            .ms_per_token();
+        let burst = m
+            .run(&spec, &cluster, &bw, Pattern::Bursty, tokens / 2)
+            .ms_per_token();
+        println!(
+            "{:36} {:>11.1} ms {:>11.1} ms",
+            m.name(),
+            spor.unwrap_or(f64::NAN),
+            burst.unwrap_or(f64::NAN)
+        );
+        rows.push((m.name().to_string(), spor, burst));
+    }
+    if let (Some((_, Some(ls), Some(lb))), true) = (rows.last().cloned(), rows.len() == 3) {
+        for (name, s, b) in &rows[..2] {
+            if let (Some(s), Some(b)) = (s, b) {
+                println!("  speedup of LIME over '{name}': {:.2}x sporadic, {:.2}x bursty", s / ls, b / lb);
+            }
+        }
+    }
+    rows
+}
+
+/// Dispatch used by `lime experiments --id <id>`.
+pub fn run_by_id(id: &str, tokens: usize) {
+    match id {
+        "fig2a" => {
+            fig2a(tokens);
+        }
+        "fig2b" => {
+            fig2b(tokens.max(256));
+        }
+        "fig3" | "fig4" | "fig34" => {
+            fig34_schedules(tokens.min(4));
+        }
+        "fig7" | "fig8" | "fig78" => {
+            fig78_segments(tokens);
+        }
+        "fig12" => {
+            main_comparison("e1", tokens);
+        }
+        "fig13" => {
+            main_comparison("e2", tokens);
+        }
+        "fig14" => {
+            main_comparison("e3", tokens);
+        }
+        "lowmem" | "fig15" | "fig16" | "fig17" => {
+            for s in 1..=3 {
+                lowmem(s, tokens);
+            }
+        }
+        "fig18" => {
+            fig18(tokens);
+        }
+        "tab5" => {
+            tab5(tokens);
+        }
+        other => {
+            eprintln!("unknown experiment id '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2a_pp_beats_tp() {
+        // Fig. 2a headline: PP+offload 1.2x-1.6x faster than TP+offload.
+        for (_, tp, pp) in fig2a(6) {
+            assert!(pp < tp, "PP {pp:.1} should beat TP {tp:.1}");
+        }
+    }
+
+    #[test]
+    fn fig2b_kv_starts_cheap_then_crosses() {
+        let rows = fig2b(400);
+        // Early: KV offload cheaper than a full MHA-block read.
+        assert!(rows[0].2 < rows[0].1);
+        // Late: KV offload more expensive (crossover happened).
+        let last = rows.last().unwrap();
+        assert!(last.2 > last.1);
+    }
+
+    #[test]
+    fn tab5_ordering_matches_paper() {
+        let rows = tab5(160);
+        let lime_s = rows[2].1.unwrap();
+        let no_kv_s = rows[0].1.unwrap();
+        let no_plan_s = rows[1].1.unwrap();
+        // Paper: full LIME fastest; no-planner worst (0.67x), no-KV in
+        // between (0.86x).
+        assert!(lime_s <= no_kv_s * 1.02, "LIME {lime_s:.1} vs no-kv {no_kv_s:.1}");
+        assert!(lime_s <= no_plan_s * 1.02, "LIME {lime_s:.1} vs no-planner {no_plan_s:.1}");
+    }
+
+    #[test]
+    fn lowmem3_marks_oom_for_rigid_methods() {
+        let cells = lowmem(3, 6);
+        let oom = |name: &str| {
+            cells
+                .iter()
+                .filter(|c| c.method == name)
+                .all(|c| c.ms_per_token.is_none())
+        };
+        assert!(oom("Galaxy"));
+        assert!(oom("EdgeShard"));
+        assert!(oom("Pipeline parallelism"));
+        // LIME always completes.
+        assert!(cells
+            .iter()
+            .filter(|c| c.method == "LIME")
+            .all(|c| c.ms_per_token.is_some()));
+    }
+}

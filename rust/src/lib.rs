@@ -1,0 +1,41 @@
+//! # LIME — Accelerating Collaborative Lossless LLM Inference on
+//! # Memory-Constrained Edge Devices
+//!
+//! A full-system reproduction of the LIME paper (Sun et al., CS.DC 2025) as
+//! a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: interleaved
+//!   pipeline with model offloading ([`pipeline`]), the offload-oriented
+//!   cost model ([`cost`]), the fine-grained offline allocation scheduler
+//!   ([`plan`]), the online memory adaptation strategy ([`adapt`]), six
+//!   baselines ([`baselines`]), a heterogeneous-edge discrete-event
+//!   simulator ([`sim`], [`cluster`], [`net`]), and a real serving engine
+//!   over PJRT ([`runtime`], [`serve`]).
+//! * **Layer 2** — `python/compile/model.py`: the TinyLM JAX graph, lowered
+//!   once to HLO text (`make artifacts`).
+//! * **Layer 1** — `python/compile/kernels/attention.py`: the Pallas GQA
+//!   decode-attention kernel baked into the layer artifacts.
+//!
+//! Python never runs on the request path: the Rust binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API and owns every byte of
+//! weight and KV-cache residency — which is precisely the resource LIME
+//! schedules.
+//!
+//! See DESIGN.md for the system inventory and the experiment index mapping
+//! every paper figure/table to a bench target.
+
+pub mod adapt;
+pub mod baselines;
+pub mod cluster;
+pub mod cost;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod pipeline;
+pub mod plan;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,201 @@
+//! `lime` CLI — plan allocations, run simulated experiments, and serve the
+//! real TinyLM through PJRT.
+//!
+//! Subcommands:
+//!   plan       run the offline scheduler for a model/cluster and print it
+//!   simulate   simulate LIME (or a baseline) and report ms/token
+//!   serve      end-to-end TinyLM serving through the PJRT runtime
+//!   experiments run a named paper experiment (fig12/fig13/.../tab5)
+
+use lime::util::cli::Cli;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{}", usage());
+        std::process::exit(2);
+    }
+    let sub = argv.remove(0);
+    match sub.as_str() {
+        "plan" => cmd_plan(&argv),
+        "simulate" => cmd_simulate(&argv),
+        "serve" => cmd_serve(&argv),
+        "experiments" => cmd_experiments(&argv),
+        "--help" | "-h" | "help" => println!("{}", usage()),
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{}", usage());
+            std::process::exit(2);
+        }
+    }
+}
+
+fn usage() -> String {
+    "lime — collaborative lossless LLM inference on memory-constrained edge devices\n\
+     \n\
+     Usage: lime <subcommand> [options]\n\
+     \n\
+     Subcommands:\n\
+       plan         offline allocation for a model on a cluster\n\
+       simulate     simulated inference latency (LIME or a baseline)\n\
+       serve        real TinyLM serving via the PJRT runtime\n\
+       experiments  regenerate a paper figure/table (fig2a fig2b fig12 fig13\n\
+                    fig14 lowmem fig18 tab5)\n\
+     \n\
+     Run `lime <subcommand> --help` for options."
+        .to_string()
+}
+
+fn cmd_plan(argv: &[String]) {
+    let cli = Cli::new("lime plan", "offline allocation scheduler (Alg. 1)")
+        .opt("model", "llama3.3-70b", "model preset (llama2-13b|qwen3-32b|llama3.3-70b|tiny)")
+        .opt("env", "e3", "cluster preset (e1|e2|e3|lowmem1|lowmem2|lowmem3)")
+        .opt("config", "", "TOML deployment file (overrides --model/--env)")
+        .opt("bandwidth-mbps", "200", "network bandwidth in Mbps")
+        .opt("micro-batch", "1", "micro-batch size (1=sporadic, |D|=bursty)")
+        .opt("tokens", "512", "empirical output length n");
+    let args = parse(&cli, argv);
+    let (spec, cluster, bw_cfg) = resolve_deployment(&args);
+    let opts = lime::plan::PlanOptions {
+        empirical_tokens: args.get_usize("tokens"),
+        micro_batch: args.get_usize("micro-batch"),
+        bandwidth: bw_cfg
+            .unwrap_or_else(|| lime::util::bytes::mbps(args.get_f64("bandwidth-mbps"))),
+    };
+    match lime::plan::plan(&spec, &cluster, &opts) {
+        Ok(report) => {
+            print!("{}", report.allocation.describe());
+            println!(
+                "predicted per-token: comp {:.1} ms, comm {:.1} ms, uncovered load {:.1} ms, total {:.1} ms",
+                report.cost.t_comp * 1e3,
+                report.cost.t_comm * 1e3,
+                report.cost.t_uncover * 1e3,
+                report.cost.total() * 1e3
+            );
+        }
+        Err(e) => {
+            eprintln!("planning failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_simulate(argv: &[String]) {
+    let cli = Cli::new("lime simulate", "simulated collaborative inference")
+        .opt("model", "llama3.3-70b", "model preset")
+        .opt("env", "e3", "cluster preset")
+        .opt("config", "", "TOML deployment file (overrides --model/--env)")
+        .opt("method", "lime", "lime|pp|pp-offload|edgeshard|galaxy|tpi-llm|tpi-llm-offload")
+        .opt("bandwidth-mbps", "200", "network bandwidth in Mbps")
+        .opt("pattern", "sporadic", "request pattern: sporadic|bursty")
+        .opt("tokens", "256", "tokens to generate")
+        .flag("trace", "print the pipeline Gantt chart");
+    let args = parse(&cli, argv);
+    let (spec, cluster, bw_cfg) = resolve_deployment(&args);
+    let bw = lime::net::BandwidthTrace::Fixed(
+        bw_cfg.unwrap_or_else(|| lime::util::bytes::mbps(args.get_f64("bandwidth-mbps"))),
+    );
+    let pattern = match args.get("pattern") {
+        "bursty" => lime::workload::Pattern::Bursty,
+        _ => lime::workload::Pattern::Sporadic,
+    };
+    let method = lime::baselines::by_name(args.get("method")).unwrap_or_else(|| {
+        eprintln!("unknown method {}", args.get("method"));
+        std::process::exit(2);
+    });
+    let outcome = method.run(&spec, &cluster, &bw, pattern, args.get_usize("tokens"));
+    match outcome {
+        lime::baselines::Outcome::Ok(res) => {
+            println!(
+                "{} {} on {}: {:.1} ms/token ({} tokens, pattern {:?})",
+                method.name(),
+                spec.name,
+                args.get("env"),
+                res.ms_per_token(),
+                res.tokens,
+                pattern
+            );
+            if args.get_flag("trace") {
+                println!("{}", res.trace.render(cluster.len(), 110));
+            }
+        }
+        lime::baselines::Outcome::Oom(msg) => println!("{}: OOM ({msg})", method.name()),
+    }
+}
+
+fn cmd_serve(argv: &[String]) {
+    let cli = Cli::new("lime serve", "real TinyLM serving through PJRT")
+        .opt("artifacts", "artifacts", "artifact directory from `make artifacts`")
+        .opt("requests", "8", "number of requests")
+        .opt("steps", "32", "decode steps per request")
+        .opt("pattern", "sporadic", "sporadic|bursty")
+        .opt("devices", "4", "simulated device count")
+        .flag("verify", "check losslessness vs monolithic execution");
+    let args = parse(&cli, argv);
+    if let Err(e) = lime::serve::run_server_demo(
+        args.get("artifacts"),
+        args.get_usize("requests"),
+        args.get_usize("steps"),
+        args.get("pattern") == "bursty",
+        args.get_usize("devices"),
+        args.get_flag("verify"),
+    ) {
+        eprintln!("serve failed: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_experiments(argv: &[String]) {
+    let cli = Cli::new("lime experiments", "regenerate a paper figure/table")
+        .opt("id", "fig14", "fig2a|fig2b|fig7|fig12|fig13|fig14|lowmem|fig18|tab5")
+        .opt("tokens", "128", "tokens per run");
+    let args = parse(&cli, argv);
+    lime::experiments::run_by_id(args.get("id"), args.get_usize("tokens"));
+}
+
+fn parse(cli: &Cli, argv: &[String]) -> lime::util::cli::Args {
+    match cli.parse_from(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Resolve (model, cluster, config-bandwidth) from --config or presets.
+fn resolve_deployment(
+    args: &lime::util::cli::Args,
+) -> (lime::model::ModelSpec, lime::cluster::Cluster, Option<f64>) {
+    let cfg_path = args.get("config");
+    if !cfg_path.is_empty() {
+        match lime::cluster::Deployment::load(cfg_path) {
+            Ok(d) => return (d.model, d.cluster, Some(d.bandwidth)),
+            Err(e) => {
+                eprintln!("failed to load config {cfg_path}: {e:#}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let (spec, cluster) = presets(args.get("model"), args.get("env"));
+    (spec, cluster, None)
+}
+
+fn presets(model: &str, env: &str) -> (lime::model::ModelSpec, lime::cluster::Cluster) {
+    let spec = lime::model::ModelSpec::by_name(model).unwrap_or_else(|| {
+        eprintln!("unknown model preset '{model}'");
+        std::process::exit(2);
+    });
+    let cluster = match env {
+        "e1" => lime::cluster::Cluster::env_e1(),
+        "e2" => lime::cluster::Cluster::env_e2(),
+        "e3" => lime::cluster::Cluster::env_e3(),
+        "lowmem1" => lime::cluster::Cluster::lowmem_setting1(),
+        "lowmem2" => lime::cluster::Cluster::lowmem_setting2(),
+        "lowmem3" => lime::cluster::Cluster::lowmem_setting3(),
+        other => {
+            eprintln!("unknown env preset '{other}'");
+            std::process::exit(2);
+        }
+    };
+    (spec, cluster)
+}

@@ -1,0 +1,6 @@
+//! Metrics: latency recorders and throughput counters for the serving
+//! engine and experiment harness.
+
+pub mod recorder;
+
+pub use recorder::{LatencyRecorder, Counters};

@@ -1,0 +1,107 @@
+//! Latency/throughput recording for the real serving path.
+
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+/// Records per-token latencies and derives serving metrics.
+#[derive(Debug, Default)]
+pub struct LatencyRecorder {
+    samples: Vec<f64>,
+    started: Option<Instant>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark the start of a timed region.
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    /// Record the elapsed time since `start` as one sample (seconds).
+    pub fn lap(&mut self) -> f64 {
+        let t = self
+            .started
+            .expect("lap() without start()")
+            .elapsed()
+            .as_secs_f64();
+        self.samples.push(t);
+        self.started = Some(Instant::now());
+        t
+    }
+
+    /// Record an externally-measured sample.
+    pub fn record(&mut self, secs: f64) {
+        self.samples.push(secs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn summary(&self) -> Summary {
+        summarize(&self.samples)
+    }
+
+    /// Tokens per second over all recorded samples.
+    pub fn throughput(&self) -> f64 {
+        let total: f64 = self.samples.iter().sum();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.samples.len() as f64 / total
+        }
+    }
+}
+
+/// Simple named counters.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub requests: u64,
+    pub tokens_generated: u64,
+    pub prefills: u64,
+    pub layer_loads: u64,
+    pub kv_transfers: u64,
+    pub online_plans: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_summarize() {
+        let mut r = LatencyRecorder::new();
+        r.record(0.1);
+        r.record(0.2);
+        r.record(0.3);
+        let s = r.summary();
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 0.2).abs() < 1e-12);
+        assert!((r.throughput() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lap_measures_time() {
+        let mut r = LatencyRecorder::new();
+        r.start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let t = r.lap();
+        assert!(t >= 0.004, "lap {t}");
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn empty_throughput_zero() {
+        let r = LatencyRecorder::new();
+        assert_eq!(r.throughput(), 0.0);
+        assert!(r.is_empty());
+    }
+}

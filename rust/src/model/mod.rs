@@ -1,0 +1,5 @@
+//! Model shape descriptions and derived cost quantities.
+
+pub mod spec;
+
+pub use spec::ModelSpec;

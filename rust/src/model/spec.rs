@@ -1,0 +1,256 @@
+//! Model shape descriptions (paper Tab. III) and the derived byte/FLOP
+//! quantities the cost model consumes: per-layer memory `l_size`, activation
+//! size `h_size`, MHA/MLP memory proportions `p_A`/`p_M`, KV-cache bytes per
+//! token, and decode FLOPs per token per layer.
+
+/// Architectural description of a decoder-only LLM.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Number of decoder layers (`|L|` in the paper).
+    pub layers: usize,
+    pub hidden: usize,
+    /// Query attention heads.
+    pub heads: usize,
+    /// KV heads (GQA); == heads for classic MHA.
+    pub kv_heads: usize,
+    /// SwiGLU / MLP inner width.
+    pub ffn: usize,
+    pub vocab: usize,
+    /// Bytes per weight element (2 = fp16/bf16 deployment, 4 = f32).
+    pub dtype_bytes: u64,
+}
+
+impl ModelSpec {
+    /// Llama2-13B-Instruct (Tab. III row 1): 40 layers, hidden 5120,
+    /// 40 heads, 40 KV heads (MHA), ffn 13824.
+    pub fn llama2_13b() -> Self {
+        ModelSpec {
+            name: "Llama2-13B-Instruct".into(),
+            layers: 40,
+            hidden: 5120,
+            heads: 40,
+            kv_heads: 40,
+            ffn: 13824,
+            vocab: 32000,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Qwen3-32B (Tab. III row 2): 64 layers, hidden 5120, 64 heads,
+    /// 8 KV heads, ffn 25600.
+    pub fn qwen3_32b() -> Self {
+        ModelSpec {
+            name: "Qwen3-32B".into(),
+            layers: 64,
+            hidden: 5120,
+            heads: 64,
+            kv_heads: 8,
+            ffn: 25600,
+            vocab: 151936,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Llama3.3-70B-Instruct (Tab. III row 3): 80 layers, hidden 8192,
+    /// 64 heads, 8 KV heads, ffn 28672.
+    pub fn llama33_70b() -> Self {
+        ModelSpec {
+            name: "Llama3.3-70B-Instruct".into(),
+            layers: 80,
+            hidden: 8192,
+            heads: 64,
+            kv_heads: 8,
+            ffn: 28672,
+            vocab: 128256,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// TinyLM — the synthetic-weight model actually served through PJRT
+    /// (python/compile/config.py must stay in sync).
+    pub fn tiny_lm() -> Self {
+        ModelSpec {
+            name: "TinyLM".into(),
+            layers: 8,
+            hidden: 128,
+            heads: 8,
+            kv_heads: 2,
+            ffn: 384,
+            vocab: 256,
+            dtype_bytes: 4,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "llama2-13b" | "llama2-13b-instruct" => Some(Self::llama2_13b()),
+            "qwen3-32b" => Some(Self::qwen3_32b()),
+            "llama3.3-70b" | "llama3.3-70b-instruct" | "llama33-70b" => {
+                Some(Self::llama33_70b())
+            }
+            "tiny" | "tinylm" => Some(Self::tiny_lm()),
+            _ => None,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    // ------------------------------------------------------------ memory
+
+    /// MHA block parameter bytes: Wq + Wo (hidden x hidden each) and
+    /// Wk + Wv (hidden x kv_heads*head_dim each), plus the attn RMSNorm.
+    pub fn mha_bytes(&self) -> u64 {
+        let h = self.hidden as u64;
+        let kv = (self.kv_heads * self.head_dim()) as u64;
+        (h * h + h * h + 2 * h * kv + h) * self.dtype_bytes
+    }
+
+    /// MLP block parameter bytes: gate + up + down projections plus norm.
+    pub fn mlp_bytes(&self) -> u64 {
+        let h = self.hidden as u64;
+        let f = self.ffn as u64;
+        (3 * h * f + h) * self.dtype_bytes
+    }
+
+    /// `l_size`: memory footprint of one decoder layer.
+    pub fn layer_bytes(&self) -> u64 {
+        self.mha_bytes() + self.mlp_bytes()
+    }
+
+    /// `p_A`: fraction of a layer's memory held by the MHA block.
+    pub fn p_attn(&self) -> f64 {
+        self.mha_bytes() as f64 / self.layer_bytes() as f64
+    }
+
+    /// `p_M`: fraction of a layer's memory held by the MLP block.
+    pub fn p_mlp(&self) -> f64 {
+        self.mlp_bytes() as f64 / self.layer_bytes() as f64
+    }
+
+    /// `h_size`: bytes of one micro-batch's activation between stages
+    /// (batch 1, single token in decode).
+    pub fn h_size(&self, micro_batch: usize) -> u64 {
+        (micro_batch * self.hidden) as u64 * self.dtype_bytes
+    }
+
+    /// KV-cache bytes per token per layer (K and V for all KV heads).
+    pub fn kv_bytes_per_token_layer(&self) -> u64 {
+        2 * (self.kv_heads * self.head_dim()) as u64 * self.dtype_bytes
+    }
+
+    /// KV-cache bytes per token across `layer_count` resident layers.
+    pub fn kv_bytes_per_token(&self, layer_count: usize) -> u64 {
+        self.kv_bytes_per_token_layer() * layer_count as u64
+    }
+
+    /// Embedding + LM-head bytes (held by the first/last pipeline device).
+    pub fn embed_bytes(&self) -> u64 {
+        2 * (self.vocab * self.hidden) as u64 * self.dtype_bytes
+    }
+
+    /// Total parameter bytes of the decoder stack.
+    pub fn total_bytes(&self) -> u64 {
+        self.layer_bytes() * self.layers as u64 + self.embed_bytes()
+    }
+
+    // ----------------------------------------------------------- compute
+
+    /// Decode-step FLOPs for one token through one layer: 2 * params
+    /// (matmul dominated) + attention over `ctx` cached tokens.
+    pub fn layer_decode_flops(&self, ctx: usize) -> f64 {
+        let param_elems = (self.layer_bytes() / self.dtype_bytes) as f64;
+        let attn = 2.0 * 2.0 * (self.heads * self.head_dim() * ctx) as f64;
+        2.0 * param_elems + attn
+    }
+
+    /// Prefill FLOPs for a `prompt` of tokens through one layer.
+    pub fn layer_prefill_flops(&self, prompt: usize) -> f64 {
+        let param_elems = (self.layer_bytes() / self.dtype_bytes) as f64;
+        let attn = 2.0 * 2.0 * (self.heads * self.head_dim()) as f64
+            * (prompt * prompt) as f64
+            / 2.0;
+        2.0 * param_elems * prompt as f64 + attn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::GIB;
+
+    #[test]
+    fn presets_match_table_iii() {
+        let l13 = ModelSpec::llama2_13b();
+        assert_eq!((l13.layers, l13.hidden, l13.heads, l13.kv_heads), (40, 5120, 40, 40));
+        let q32 = ModelSpec::qwen3_32b();
+        assert_eq!((q32.layers, q32.hidden, q32.heads, q32.kv_heads), (64, 5120, 64, 8));
+        let l70 = ModelSpec::llama33_70b();
+        assert_eq!((l70.layers, l70.hidden, l70.heads, l70.kv_heads), (80, 8192, 64, 8));
+    }
+
+    #[test]
+    fn llama70b_roughly_140gb_fp16() {
+        // Paper §I: Llama3.3-70B needs >= 130 GB for inference.
+        let spec = ModelSpec::llama33_70b();
+        let gb = spec.total_bytes() as f64 / GIB as f64;
+        assert!((120.0..160.0).contains(&gb), "got {gb} GiB");
+    }
+
+    #[test]
+    fn proportions_sum_to_one() {
+        for spec in [
+            ModelSpec::llama2_13b(),
+            ModelSpec::qwen3_32b(),
+            ModelSpec::llama33_70b(),
+            ModelSpec::tiny_lm(),
+        ] {
+            assert!((spec.p_attn() + spec.p_mlp() - 1.0).abs() < 1e-12);
+            assert!(spec.p_attn() > 0.0 && spec.p_mlp() > 0.0);
+        }
+    }
+
+    #[test]
+    fn gqa_shrinks_kv_cache() {
+        let mha = ModelSpec::llama2_13b(); // 40 kv heads
+        let gqa = ModelSpec::qwen3_32b(); // 8 kv heads
+        assert!(
+            mha.kv_bytes_per_token_layer() > gqa.kv_bytes_per_token_layer()
+        );
+        // Qwen3-32B: 8 kv heads * 80 head_dim * 2 (K,V) * 2 bytes = 2560 B.
+        assert_eq!(gqa.kv_bytes_per_token_layer(), 2560);
+    }
+
+    #[test]
+    fn mlp_dominates_llama_layers() {
+        // For Llama-family shapes the MLP block is the bigger half —
+        // matters for the fine-grained offload ordering in Alg. 1.
+        let spec = ModelSpec::llama33_70b();
+        assert!(spec.p_mlp() > spec.p_attn());
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(ModelSpec::by_name("Qwen3-32B").is_some());
+        assert!(ModelSpec::by_name("tiny").is_some());
+        assert!(ModelSpec::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn tinylm_matches_python_config() {
+        let t = ModelSpec::tiny_lm();
+        assert_eq!(t.layers, 8);
+        assert_eq!(t.hidden, 128);
+        assert_eq!(t.kv_heads, 2);
+        assert_eq!(t.head_dim(), 16);
+    }
+
+    #[test]
+    fn flops_monotone_in_context() {
+        let spec = ModelSpec::llama33_70b();
+        assert!(spec.layer_decode_flops(2048) > spec.layer_decode_flops(1));
+        assert!(spec.layer_prefill_flops(256) > spec.layer_prefill_flops(16));
+    }
+}

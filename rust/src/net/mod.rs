@@ -1,0 +1,131 @@
+//! Network substrate: bandwidth traces (the stand-in for the paper's Linux
+//! `tc` shaping) and link transfer-time math.
+//!
+//! The paper's experiments use fixed 100/200 Mbps regimes plus a "varying"
+//! regime that re-draws a bandwidth uniformly in [50, 250] Mbps after a
+//! random number of generated tokens (§V-D). All three are expressible as a
+//! [`BandwidthTrace`].
+
+use crate::util::bytes::mbps;
+use crate::util::rng::Rng;
+
+/// Bandwidth over (token-)time. Queried by the simulator before every
+/// auto-regressive step — exactly where Alg. 2 monitors `bw_net`.
+#[derive(Debug, Clone)]
+pub enum BandwidthTrace {
+    /// Constant bandwidth (bytes/s).
+    Fixed(f64),
+    /// Piecewise-constant: (start_token, bytes/s) breakpoints, sorted.
+    Piecewise(Vec<(usize, f64)>),
+}
+
+impl BandwidthTrace {
+    /// Fixed bandwidth given in Mbps (paper's unit).
+    pub fn fixed_mbps(v: f64) -> Self {
+        BandwidthTrace::Fixed(mbps(v))
+    }
+
+    /// §V-D regime: re-draw uniformly in [lo, hi] Mbps after a random
+    /// token count in [min_run, max_run]; generated ahead for `horizon`
+    /// tokens so runs are reproducible by seed.
+    pub fn random_walk_mbps(
+        seed: u64,
+        lo: f64,
+        hi: f64,
+        min_run: usize,
+        max_run: usize,
+        horizon: usize,
+    ) -> Self {
+        assert!(lo > 0.0 && hi >= lo && min_run >= 1 && max_run >= min_run);
+        let mut rng = Rng::new(seed);
+        let mut pieces = Vec::new();
+        let mut tok = 0usize;
+        while tok < horizon {
+            pieces.push((tok, mbps(rng.range_f64(lo, hi))));
+            tok += rng.range(min_run, max_run + 1);
+        }
+        BandwidthTrace::Piecewise(pieces)
+    }
+
+    /// Bandwidth (bytes/s) in effect at generated-token index `token`.
+    pub fn at(&self, token: usize) -> f64 {
+        match self {
+            BandwidthTrace::Fixed(b) => *b,
+            BandwidthTrace::Piecewise(pieces) => {
+                let mut cur = pieces
+                    .first()
+                    .expect("piecewise trace must be non-empty")
+                    .1;
+                for &(start, b) in pieces {
+                    if start <= token {
+                        cur = b;
+                    } else {
+                        break;
+                    }
+                }
+                cur
+            }
+        }
+    }
+
+    /// Mean bandwidth over the first `horizon` tokens.
+    pub fn mean_over(&self, horizon: usize) -> f64 {
+        (0..horizon.max(1)).map(|t| self.at(t)).sum::<f64>() / horizon.max(1) as f64
+    }
+}
+
+/// Seconds to move `bytes` across a link at `bytes_per_sec`, including a
+/// fixed per-message latency floor (switch + stack traversal).
+pub fn link_transfer_secs(bytes: u64, bytes_per_sec: f64) -> f64 {
+    const PER_MESSAGE_LATENCY: f64 = 300e-6; // LAN RTT-ish floor
+    PER_MESSAGE_LATENCY + bytes as f64 / bytes_per_sec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_trace_constant() {
+        let t = BandwidthTrace::fixed_mbps(200.0);
+        assert_eq!(t.at(0), t.at(10_000));
+        assert!((t.at(0) - 25e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn piecewise_steps() {
+        let t = BandwidthTrace::Piecewise(vec![(0, 10.0), (5, 20.0), (9, 5.0)]);
+        assert_eq!(t.at(0), 10.0);
+        assert_eq!(t.at(4), 10.0);
+        assert_eq!(t.at(5), 20.0);
+        assert_eq!(t.at(8), 20.0);
+        assert_eq!(t.at(100), 5.0);
+    }
+
+    #[test]
+    fn random_walk_in_range_and_deterministic() {
+        let a = BandwidthTrace::random_walk_mbps(7, 50.0, 250.0, 3, 30, 500);
+        let b = BandwidthTrace::random_walk_mbps(7, 50.0, 250.0, 3, 30, 500);
+        for tok in 0..500 {
+            let bw = a.at(tok);
+            assert!((mbps(50.0)..=mbps(250.0)).contains(&bw));
+            assert_eq!(bw, b.at(tok));
+        }
+    }
+
+    #[test]
+    fn random_walk_actually_varies() {
+        let t = BandwidthTrace::random_walk_mbps(3, 50.0, 250.0, 3, 30, 500);
+        let first = t.at(0);
+        assert!((0..500).any(|tok| t.at(tok) != first));
+    }
+
+    #[test]
+    fn transfer_has_latency_floor() {
+        let t = link_transfer_secs(0, mbps(100.0));
+        assert!(t > 0.0 && t < 1e-3);
+        // 12.5 MB at 100 Mbps = 1 s.
+        let big = link_transfer_secs(12_500_000, mbps(100.0));
+        assert!((big - 1.0).abs() < 1e-2);
+    }
+}

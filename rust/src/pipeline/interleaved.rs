@@ -1,0 +1,484 @@
+//! The interleaved pipeline executor — LIME's §IV-A schedule, simulated.
+//!
+//! Every device hosts one stage of *every* segment; a micro-batch traverses
+//! `#Seg × |D|` stages per decode step. Offloaded layers stream from SSD
+//! with cross-segment overlap: the load for segment `s+1` starts the moment
+//! the slot frees (last micro-batch finishes segment `s` on that device) and
+//! only gates the *offloaded fraction* of stage `s+1`'s compute — the
+//! resident fraction, other devices' compute, and activation hops all run
+//! underneath it. That is exactly the overlap structure the Eq. 1 cost model
+//! scores, and `rust/tests/` cross-checks the two.
+//!
+//! The executor also drives the §IV-D machinery between steps: the online
+//! memory-aware planner (KV pressure → block-granular offload plans, with
+//! one-time reload charges when plans swap blocks, Fig. 9) and the
+//! bandwidth-sensitive KV transfer protocol (Alg. 2). Both can be disabled
+//! independently for the Table V ablations.
+
+use crate::adapt::{KvTransferProtocol, OffloadPlan, OnlinePlanner};
+use crate::cluster::Cluster;
+use crate::cost;
+use crate::model::ModelSpec;
+use crate::net::{link_transfer_secs, BandwidthTrace};
+use crate::pipeline::result::SimResult;
+use crate::plan::allocation::Allocation;
+use crate::sim::{Resource, SpanKind, SsdModel, Trace};
+
+/// Online-adaptation configuration (Table V ablation axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannerMode {
+    /// Full LIME: fine-grained (MHA/MLP block) online plans.
+    FineGrained,
+    /// Ablation "LIME without memory-aware planner": full-layer offloading
+    /// only (the paper's substitute strategy).
+    FullLayer,
+    /// No reaction to KV pressure at all (falls back to emergency KV-to-SSD
+    /// swapping when memory saturates).
+    Off,
+}
+
+/// Executor options.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecOptions {
+    pub planner: PlannerMode,
+    pub kv_transfer: bool,
+    /// Prompt length charged as a prefill pass before decoding.
+    pub prompt_tokens: usize,
+    /// RNG seed for the SSD write-jitter streams.
+    pub seed: u64,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            planner: PlannerMode::FineGrained,
+            kv_transfer: true,
+            prompt_tokens: 64,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Max KV tokens shipped per device per step (pacing, Alg. 2 line 2).
+const KV_SHIP_CAP: usize = 16;
+
+/// Simulate `tokens` decode steps of the interleaved pipeline.
+///
+/// `micro_batches` = 1 reproduces the sporadic pattern, `|D|` the bursty
+/// pattern (paper §V-A: micro-batch size 1, count = device count).
+pub fn run_interleaved(
+    alloc: &Allocation,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    micro_batches: usize,
+    tokens: usize,
+    opts: &ExecOptions,
+) -> SimResult {
+    let spec = alloc.spec.clone();
+    let d = cluster.len();
+    let seg = alloc.seg.max(1);
+    let micro = micro_batches.max(1);
+
+    let mut trace = Trace::new();
+    let mut gpus: Vec<Resource> = (0..d).map(|_| Resource::new()).collect();
+    let mut ssds: Vec<SsdModel> = (0..d)
+        .map(|i| {
+            SsdModel::new(
+                cluster.devices[i].ssd_read_bps,
+                cluster.devices[i].ssd_write_bps,
+                opts.seed ^ (i as u64) << 8,
+            )
+        })
+        .collect();
+    // The edge LAN is a shared medium: one exclusive link resource.
+    let mut net = Resource::new();
+
+    let mut planner = OnlinePlanner::new(alloc, cluster, micro);
+    let mut protocol = KvTransferProtocol::new(
+        alloc,
+        cluster,
+        &planner,
+        opts.prompt_tokens,
+        micro,
+        bw_trace.at(0),
+    );
+    // Track current working allocation (online plans mutate offload sets).
+    let mut live = alloc.clone();
+    let mut last_plan: Vec<OffloadPlan> = (0..d)
+        .map(|_| OffloadPlan {
+            at_tokens: 0,
+            alpha: 0,
+            beta: 0,
+        })
+        .collect();
+    // KV tokens physically held per device (per micro-batch context).
+    let mut kv_held: Vec<usize> = vec![opts.prompt_tokens; d];
+    let mut kv_shipped_total: u64 = 0;
+    let mut plans_fired = 0usize;
+    let mut emergency_steps = 0usize;
+    // One-time reload bytes queued for the next step's segment-0 load.
+    let mut pending_reload: Vec<u64> = vec![0; d];
+
+    // ---------------- prefill pass (charged, not measured) ----------------
+    let bw0 = bw_trace.at(0);
+    let mut t_prefill = 0.0f64;
+    for i in 0..d {
+        let a = &live.devices[i];
+        let flops = spec.layer_prefill_flops(opts.prompt_tokens)
+            * a.total_layers as f64
+            * micro as f64;
+        let comp = flops / cluster.devices[i].flops;
+        let load = cost::load_time(&spec, &cluster.devices[i], a);
+        t_prefill += comp.max(load);
+        t_prefill += link_transfer_secs(
+            spec.h_size(micro) * opts.prompt_tokens as u64,
+            bw0,
+        );
+    }
+    let decode_start = t_prefill;
+
+    // `slot_free[i]`: when device i's offload slot last freed (gates the
+    // next segment's SSD load).
+    let mut slot_free: Vec<f64> = vec![decode_start; d];
+    // Completion time of (micro m, previous stage) within the current step.
+    let mut step_times = Vec::with_capacity(tokens);
+    let mut t_prev_step_end = decode_start;
+
+    for step in 0..tokens {
+        let bw = bw_trace.at(step);
+        let ctx = opts.prompt_tokens + step;
+
+        // ---- Alg. 2 lines 8-9: monitor bandwidth, adapt transfers ----
+        if opts.kv_transfer {
+            protocol.on_bandwidth(&live, cluster, &planner, step, ctx, micro, bw);
+        }
+
+        let step_start = t_prev_step_end;
+        let mut micro_front: Vec<f64> = vec![step_start; micro];
+
+        for s in 0..seg {
+            for i in 0..d {
+                let a = &live.devices[i];
+                let layers_here = live.layers_in_segment(i, s);
+                if layers_here == 0 {
+                    continue;
+                }
+                let off_here = live.offloaded_in_segment(i, s);
+                let res_here = layers_here - off_here.min(layers_here);
+
+                // Per-segment streamed bytes: the device's per-pass load
+                // spread across segments, plus any one-time reload.
+                let mut seg_load_bytes = a.load_bytes(&spec) / seg as u64;
+                if s == 0 {
+                    seg_load_bytes += pending_reload[i];
+                    pending_reload[i] = 0;
+                }
+                // SSD load for this segment: starts when the slot freed.
+                let load_iv = if seg_load_bytes > 0 {
+                    let iv = ssds[i].read(slot_free[i], seg_load_bytes);
+                    trace.push(i, SpanKind::Load, format!("s{step}g{s}"), iv.start, iv.end);
+                    Some(iv)
+                } else {
+                    None
+                };
+
+                let mut last_micro_end = step_start;
+                for (m, front) in micro_front.iter_mut().enumerate() {
+                    // Activation hop onto device i (shared medium).
+                    let hop = net.acquire(*front, link_transfer_secs(spec.h_size(1), bw));
+                    trace.push(i, SpanKind::Comm, format!("m{m}"), hop.start, hop.end);
+                    let arrive = hop.end;
+
+                    // Resident fraction computes immediately.
+                    let comp_res = cost::comp_time(&spec, &cluster.devices[i], res_here, ctx, 1);
+                    let iv1 = gpus[i].acquire(arrive, comp_res);
+                    if comp_res > 0.0 {
+                        trace.push(i, SpanKind::Compute, format!("m{m}r"), iv1.start, iv1.end);
+                    }
+                    // Offloaded fraction gates on the load.
+                    let mut end = iv1.end;
+                    if off_here > 0 {
+                        let gate = load_iv.map(|iv| iv.end).unwrap_or(end);
+                        if gate > end {
+                            trace.push(i, SpanKind::Stall, format!("m{m}w"), end, gate);
+                        }
+                        let comp_off =
+                            cost::comp_time(&spec, &cluster.devices[i], off_here, ctx, 1);
+                        let iv2 = gpus[i].acquire(end.max(gate), comp_off);
+                        trace.push(i, SpanKind::Compute, format!("m{m}o"), iv2.start, iv2.end);
+                        end = iv2.end;
+                    }
+                    *front = end;
+                    last_micro_end = last_micro_end.max(end);
+                }
+                // Slot frees once the last micro-batch leaves this segment.
+                if off_here > 0 || seg_load_bytes > 0 {
+                    slot_free[i] = last_micro_end;
+                }
+            }
+        }
+
+        let mut step_end = micro_front.iter().cloned().fold(step_start, f64::max);
+
+        // ---- KV bookkeeping + online adaptation between steps ----
+        for i in 0..d {
+            kv_held[i] += micro;
+        }
+
+        // KV transfer protocol: ship paced chunks to d_target. Shipping
+        // costs link time, so it only pays when it delays an *imminent*
+        // offload threshold (Fig. 10's motivation) — gate on proximity.
+        if opts.kv_transfer {
+            for i in 0..d {
+                let ts_next = planner.next_threshold(i);
+                let imminent = ts_next != usize::MAX && ctx + 96 >= ts_next;
+                if !imminent {
+                    continue;
+                }
+                let target = protocol.states[i].target;
+                let ship = protocol.ship_now(i, kv_held[i], KV_SHIP_CAP);
+                if ship > 0 {
+                    let t = target.unwrap();
+                    let bytes = spec.kv_bytes_per_token_layer()
+                        * live.devices[i].total_layers as u64
+                        * ship as u64;
+                    let iv = net.acquire(step_end, link_transfer_secs(bytes, bw));
+                    trace.push(i, SpanKind::KvTransfer, format!("->d{t}"), iv.start, iv.end);
+                    // Asynchronous: does not extend the step unless the link
+                    // is still busy when the next step's first hop needs it
+                    // (the shared `net` Resource captures that naturally).
+                    kv_held[i] -= ship;
+                    kv_held[t] += ship;
+                    protocol.record_receipt(t, ship);
+                    kv_shipped_total += ship as u64;
+                }
+            }
+        }
+
+        // Memory-aware planner (Eqs. 5-7) or its ablation substitutes.
+        for i in 0..d {
+            let n_trans = if opts.kv_transfer { protocol.n_trans(i) } else { 0 };
+            match opts.planner {
+                PlannerMode::FineGrained => {
+                    if let Some(plan) = planner.on_token(i, ctx, n_trans) {
+                        plans_fired += 1;
+                        // Apply the plan to the live allocation.
+                        let prev = last_plan[i];
+                        let da = plan.alpha as i64 - prev.alpha as i64;
+                        let db = plan.beta as i64 - prev.beta as i64;
+                        apply_block_plan(&mut live, i, da, db);
+                        // Reload swapped-back blocks once (Fig. 9: the
+                        // previously evicted block returns to GPU).
+                        let reload = reload_bytes(&spec, da, db);
+                        pending_reload[i] += reload;
+                        last_plan[i] = plan;
+                    }
+                }
+                PlannerMode::FullLayer => {
+                    // Ablation: when memory saturates, offload a whole layer.
+                    if mem_saturated(&live, cluster, i, ctx * micro, n_trans)
+                        && live.devices[i].non_offloaded_layers() > 0
+                    {
+                        plans_fired += 1;
+                        live.devices[i].full_offload += 1;
+                    }
+                }
+                PlannerMode::Off => {}
+            }
+        }
+
+        // Emergency fallback: devices still saturated swap KV to SSD
+        // (write + read per step — the naive strategy of §III / Fig. 2b).
+        for i in 0..d {
+            let n_trans = if opts.kv_transfer { protocol.n_trans(i) } else { 0 };
+            let overflow =
+                cost::overflow_tokens(&live, cluster, i, ctx * micro, n_trans).min(kv_held[i]);
+            if overflow > 0 {
+                emergency_steps += 1;
+                let bytes = spec.kv_bytes_per_token_layer()
+                    * live.devices[i].total_layers as u64
+                    * overflow as u64;
+                let w = ssds[i].write(step_end, bytes);
+                trace.push(i, SpanKind::Store, "kv-spill", w.start, w.end);
+                let r = ssds[i].read(w.end, bytes);
+                trace.push(i, SpanKind::Load, "kv-fetch", r.start, r.end);
+                step_end = step_end.max(r.end);
+            }
+        }
+
+        step_times.push(step_end - step_start);
+        t_prev_step_end = step_end;
+    }
+
+    SimResult {
+        tokens,
+        micro_batches: micro,
+        total_time: t_prev_step_end - decode_start,
+        step_times,
+        trace,
+        kv_tokens_transferred: kv_shipped_total,
+        online_plans_fired: plans_fired,
+        emergency_steps,
+    }
+}
+
+/// Apply a (Δα, Δβ) block plan to device `i`'s live assignment.
+fn apply_block_plan(live: &mut Allocation, i: usize, da: i64, db: i64) {
+    let a = &mut live.devices[i];
+    // +Δα: evict MHA blocks of resident layers (layer becomes mha_offload).
+    // −Δα: reload (mha_offload layer becomes resident again). Same for β/MLP.
+    if da > 0 {
+        let take = (da as usize).min(a.non_offloaded_layers());
+        a.mha_offload += take;
+    } else if da < 0 {
+        let take = ((-da) as usize).min(a.mha_offload);
+        a.mha_offload -= take;
+    }
+    if db > 0 {
+        let take = (db as usize).min(a.non_offloaded_layers());
+        a.mlp_offload += take;
+    } else if db < 0 {
+        let take = ((-db) as usize).min(a.mlp_offload);
+        a.mlp_offload -= take;
+    }
+}
+
+/// Bytes to read back when a plan swap reloads previously evicted blocks.
+fn reload_bytes(spec: &ModelSpec, da: i64, db: i64) -> u64 {
+    let mut bytes = 0u64;
+    if da < 0 {
+        bytes += (-da) as u64 * spec.mha_bytes();
+    }
+    if db < 0 {
+        bytes += (-db) as u64 * spec.mlp_bytes();
+    }
+    bytes
+}
+
+/// Is device `i` out of memory at context `ctx` under the live allocation?
+fn mem_saturated(
+    live: &Allocation,
+    cluster: &Cluster,
+    i: usize,
+    ctx: usize,
+    n_trans: i64,
+) -> bool {
+    cost::mem_demand(live, i, ctx, n_trans) > cluster.devices[i].usable_mem()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{plan, PlanOptions};
+    use crate::util::bytes::mbps;
+
+    fn setup(env: &str) -> (Allocation, Cluster) {
+        let spec = ModelSpec::llama33_70b();
+        let cluster = match env {
+            "e3" => Cluster::env_e3(),
+            "low1" => Cluster::lowmem_setting1(),
+            "low3" => Cluster::lowmem_setting3(),
+            _ => unreachable!(),
+        };
+        let opts = PlanOptions {
+            empirical_tokens: 256,
+            micro_batch: 1,
+            bandwidth: mbps(200.0),
+        };
+        (plan(&spec, &cluster, &opts).unwrap().allocation, cluster)
+    }
+
+    #[test]
+    fn sporadic_run_produces_monotone_progress() {
+        let (alloc, cluster) = setup("e3");
+        let bw = BandwidthTrace::fixed_mbps(200.0);
+        let r = run_interleaved(&alloc, &cluster, &bw, 1, 16, &ExecOptions::default());
+        assert_eq!(r.tokens, 16);
+        assert_eq!(r.step_times.len(), 16);
+        assert!(r.total_time > 0.0);
+        assert!(r.step_times.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn bursty_improves_per_token_latency() {
+        let (alloc, cluster) = setup("e3");
+        let bw = BandwidthTrace::fixed_mbps(200.0);
+        let spor = run_interleaved(&alloc, &cluster, &bw, 1, 12, &ExecOptions::default());
+        let burst =
+            run_interleaved(&alloc, &cluster, &bw, cluster.len(), 12, &ExecOptions::default());
+        assert!(
+            burst.ms_per_token() < spor.ms_per_token(),
+            "bursty {:.1} !< sporadic {:.1}",
+            burst.ms_per_token(),
+            spor.ms_per_token()
+        );
+    }
+
+    #[test]
+    fn lower_bandwidth_is_slower() {
+        let (alloc, cluster) = setup("e3");
+        let hi = run_interleaved(
+            &alloc,
+            &cluster,
+            &BandwidthTrace::fixed_mbps(200.0),
+            1,
+            12,
+            &ExecOptions::default(),
+        );
+        let lo = run_interleaved(
+            &alloc,
+            &cluster,
+            &BandwidthTrace::fixed_mbps(100.0),
+            1,
+            12,
+            &ExecOptions::default(),
+        );
+        assert!(lo.ms_per_token() > hi.ms_per_token());
+    }
+
+    #[test]
+    fn offload_pressure_engages_loads() {
+        let (alloc, cluster) = setup("low3");
+        let bw = BandwidthTrace::fixed_mbps(200.0);
+        let r = run_interleaved(&alloc, &cluster, &bw, 1, 8, &ExecOptions::default());
+        let load_busy: f64 = (0..cluster.len())
+            .map(|i| r.trace.busy(i, SpanKind::Load))
+            .sum();
+        assert!(load_busy > 0.0, "low-memory setting must stream layers");
+    }
+
+    #[test]
+    fn planner_beats_full_layer_ablation_under_pressure() {
+        let (alloc, cluster) = setup("low1");
+        let bw = BandwidthTrace::fixed_mbps(200.0);
+        let long = 192; // enough steps for KV pressure to build
+        let fine = run_interleaved(&alloc, &cluster, &bw, 1, long, &ExecOptions::default());
+        let full = run_interleaved(
+            &alloc,
+            &cluster,
+            &bw,
+            1,
+            long,
+            &ExecOptions {
+                planner: PlannerMode::FullLayer,
+                ..ExecOptions::default()
+            },
+        );
+        assert!(
+            fine.ms_per_token() <= full.ms_per_token() * 1.02,
+            "fine-grained {:.1} should not lose to full-layer {:.1}",
+            fine.ms_per_token(),
+            full.ms_per_token()
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (alloc, cluster) = setup("low1");
+        let bw = BandwidthTrace::fixed_mbps(150.0);
+        let a = run_interleaved(&alloc, &cluster, &bw, 2, 24, &ExecOptions::default());
+        let b = run_interleaved(&alloc, &cluster, &bw, 2, 24, &ExecOptions::default());
+        assert_eq!(a.total_time, b.total_time);
+        assert_eq!(a.kv_tokens_transferred, b.kv_tokens_transferred);
+    }
+}

@@ -1,0 +1,13 @@
+//! Pipeline executors over the discrete-event substrate: LIME's interleaved
+//! schedule (§IV-A), the traditional PP(+offload) schedule (Figs 3a/4a),
+//! and the tensor-parallel family used by the TP baselines.
+
+pub mod interleaved;
+pub mod result;
+pub mod tensor;
+pub mod traditional;
+
+pub use interleaved::{run_interleaved, ExecOptions, PlannerMode};
+pub use result::SimResult;
+pub use tensor::{run_tensor_parallel, TpOptions};
+pub use traditional::{run_traditional, TradOptions};

@@ -1,0 +1,62 @@
+//! Simulation outcome shared by the LIME executor and all baselines.
+
+use crate::sim::Trace;
+
+/// Result of simulating a full generation run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Decode steps simulated.
+    pub tokens: usize,
+    /// Micro-batches in flight (1 sporadic, |D| bursty).
+    pub micro_batches: usize,
+    /// Wall-clock seconds from decode start to last token.
+    pub total_time: f64,
+    /// Per-step completion latency (seconds per decode step).
+    pub step_times: Vec<f64>,
+    /// Device/time activity for Gantt rendering + overlap accounting.
+    pub trace: Trace,
+    /// KV tokens shipped between devices by the transfer protocol.
+    pub kv_tokens_transferred: u64,
+    /// Online offload plans fired.
+    pub online_plans_fired: usize,
+    /// Steps that needed the emergency KV-to-SSD fallback.
+    pub emergency_steps: usize,
+}
+
+impl SimResult {
+    /// The paper's headline metric. For bursty runs the batch dimension
+    /// divides through: milliseconds per *generated token*.
+    pub fn ms_per_token(&self) -> f64 {
+        self.total_time * 1e3 / (self.tokens.max(1) * self.micro_batches.max(1)) as f64
+    }
+
+    /// Mean step latency in seconds.
+    pub fn mean_step(&self) -> f64 {
+        if self.step_times.is_empty() {
+            0.0
+        } else {
+            self.step_times.iter().sum::<f64>() / self.step_times.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ms_per_token_divides_batch() {
+        let r = SimResult {
+            tokens: 10,
+            micro_batches: 4,
+            total_time: 2.0,
+            step_times: vec![0.2; 10],
+            trace: Trace::new(),
+            kv_tokens_transferred: 0,
+            online_plans_fired: 0,
+            emergency_steps: 0,
+        };
+        assert!((r.ms_per_token() - 50.0).abs() < 1e-9);
+        assert!((r.mean_step() - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,291 @@
+//! Tensor-parallel executor family — the simulation substrate behind the
+//! Galaxy, TPI-LLM and TPI-LLM+offloading baselines.
+//!
+//! Every device holds a `1/|D|` shard of *every* layer and computes each
+//! layer cooperatively; each layer costs two collective synchronizations
+//! (attention output + MLP output, Megatron-style). On edge LANs the
+//! collectives dominate — the paper's §III motivation for preferring PP.
+//!
+//! Variants:
+//! * `seq_parallel` (Galaxy): overlapped sequence-parallel collectives —
+//!   a fraction of the communication hides behind compute.
+//! * `sliding_window` (TPI-LLM): shards stream from SSD through a sliding
+//!   window, so devices below shard size still run; loading serializes
+//!   with compute when the window stalls.
+
+use crate::cluster::Cluster;
+use crate::cost;
+use crate::model::ModelSpec;
+use crate::net::{link_transfer_secs, BandwidthTrace};
+use crate::pipeline::result::SimResult;
+use crate::sim::{Resource, SpanKind, SsdModel, Trace};
+
+/// Tensor-parallel baseline options.
+#[derive(Debug, Clone, Copy)]
+pub struct TpOptions {
+    pub prompt_tokens: usize,
+    pub seed: u64,
+    /// Galaxy-style sequence-parallel overlap factor: fraction of collective
+    /// time hidden behind compute (0 = none, Galaxy ≈ 0.3).
+    pub comm_overlap: f64,
+    /// TPI-LLM sliding-window weight streaming from SSD.
+    pub sliding_window: bool,
+    /// Extra window slack for "TPI-LLM + offloading" (larger window instead
+    /// of recomputation for KV overflow).
+    pub offload_kv: bool,
+    /// Per-collective software overhead (seconds): barrier + framework
+    /// costs of a TCP/gloo-style all-reduce on edge boards, paid once per
+    /// sync on top of wire time. Measured gloo all-reduces on LAN are
+    /// ms-scale even for tiny payloads.
+    pub sync_overhead: f64,
+}
+
+impl Default for TpOptions {
+    fn default() -> Self {
+        TpOptions {
+            prompt_tokens: 64,
+            seed: 0x7E4,
+            comm_overlap: 0.0,
+            sliding_window: false,
+            offload_kv: false,
+            sync_overhead: 1.5e-3,
+        }
+    }
+}
+
+/// Simulate `tokens` decode steps of tensor-parallel inference.
+pub fn run_tensor_parallel(
+    spec: &ModelSpec,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    micro_batches: usize,
+    tokens: usize,
+    opts: &TpOptions,
+) -> SimResult {
+    let d = cluster.len();
+    let micro = micro_batches.max(1);
+    let mut trace = Trace::new();
+    let mut ssds: Vec<SsdModel> = (0..d)
+        .map(|i| {
+            SsdModel::new(
+                cluster.devices[i].ssd_read_bps,
+                cluster.devices[i].ssd_write_bps,
+                opts.seed ^ (i as u64) << 8,
+            )
+        })
+        .collect();
+    let mut net = Resource::new();
+
+    // Per-device shard: Galaxy/TPI-LLM partition workload by device
+    // capability, so shard fractions follow usable memory (heterogeneous),
+    // not 1/d.
+    let total_usable: f64 = cluster.devices.iter().map(|x| x.usable_mem() as f64).sum();
+    let frac: Vec<f64> = (0..d)
+        .map(|i| cluster.devices[i].usable_mem() as f64 / total_usable)
+        .collect();
+
+    // Streaming need per pass (sliding window): shard bytes that exceed the
+    // window resident in memory.
+    let stream_bytes: Vec<u64> = (0..d)
+        .map(|i| {
+            if !opts.sliding_window {
+                return 0;
+            }
+            let total_shard = (spec.layer_bytes() as f64 * spec.layers as f64 * frac[i]) as u64
+                + (spec.embed_bytes() as f64 * frac[i]) as u64;
+            let window = cluster.devices[i].usable_mem() * 7 / 10;
+            total_shard.saturating_sub(window)
+        })
+        .collect();
+
+    // One all-reduce = 2(d−1) serialized rounds on the shared medium
+    // (reduce-scatter + all-gather), each moving the full activation
+    // payload across the switch and paying the per-message latency floor —
+    // this latency amplification is why TP hurts on edge LANs (§III).
+    let sync_rounds = 2 * (d.max(2) - 1);
+    let round_bytes = spec.h_size(micro);
+
+    let decode_start = 0.0;
+    let mut step_times = Vec::with_capacity(tokens);
+    let mut t_prev = decode_start;
+    let mut emergency_steps = 0usize;
+
+    for step in 0..tokens {
+        let bw = bw_trace.at(step);
+        let ctx = opts.prompt_tokens + step;
+        let step_start = t_prev;
+
+        // Compute: every device works on every layer's shard; the step is
+        // paced by the slowest device (synchronous TP).
+        let comp_slowest = (0..d)
+            .map(|i| {
+                let full = cost::comp_time(spec, &cluster.devices[i], spec.layers, ctx, micro);
+                full * frac[i]
+            })
+            .fold(0.0f64, f64::max);
+
+        // Collectives: 2 syncs per layer, each 2(d−1) serialized rounds on
+        // the wire plus a per-sync software overhead (barrier + framework).
+        let mut comm_total = 0.0;
+        for _ in 0..(2 * spec.layers * sync_rounds) {
+            let iv = net.acquire(step_start + comm_total, link_transfer_secs(round_bytes, bw));
+            comm_total = iv.end - step_start;
+        }
+        comm_total += 2.0 * spec.layers as f64 * opts.sync_overhead;
+        trace.push(0, SpanKind::Comm, format!("sync{step}"), step_start, step_start + comm_total);
+        let comm_visible = comm_total * (1.0 - opts.comm_overlap);
+
+        // Sliding-window streaming: overlaps with compute+comm, pays the
+        // uncovered remainder (slowest device).
+        let mut load_uncovered = 0.0f64;
+        for i in 0..d {
+            if stream_bytes[i] == 0 {
+                continue;
+            }
+            let iv = ssds[i].read(step_start, stream_bytes[i]);
+            trace.push(i, SpanKind::Load, format!("w{step}"), iv.start, iv.end);
+            let load = iv.end - step_start;
+            load_uncovered = load_uncovered.max((load - comp_slowest - comm_visible).max(0.0));
+        }
+
+        let mut step_end = step_start + comp_slowest + comm_visible + load_uncovered;
+        trace.push(
+            0,
+            SpanKind::Compute,
+            format!("tp{step}"),
+            step_start + comm_visible,
+            step_start + comm_visible + comp_slowest,
+        );
+
+        // KV overflow handling.
+        let kv_bytes_i = |i: usize| {
+            (spec.kv_bytes_per_token_layer() as f64 * frac[i]) as u64
+                * spec.layers as u64
+                * (ctx * micro) as u64
+                + (spec.layer_bytes() as f64 * spec.layers as f64 * frac[i]) as u64
+                    * u64::from(stream_bytes[i] == 0)
+        };
+        for i in 0..d {
+            let over_bytes = kv_bytes_i(i).saturating_sub(cluster.devices[i].usable_mem());
+            if over_bytes > 0 {
+                emergency_steps += 1;
+                let kv_tok = ((spec.kv_bytes_per_token_layer() as f64 * frac[i]) as u64
+                    * spec.layers as u64)
+                    .max(1);
+                let overflow = (over_bytes.div_ceil(kv_tok) as usize).min(ctx * micro);
+                if opts.offload_kv {
+                    // Larger sliding window: stream the overflow through SSD.
+                    let bytes = kv_tok * overflow as u64;
+                    let w = ssds[i].write(step_end, bytes);
+                    let r = ssds[i].read(w.end, bytes);
+                    trace.push(i, SpanKind::Store, "kv-window", w.start, w.end);
+                    step_end = step_end.max(r.end);
+                } else {
+                    // Recompute evicted KV (paper §V-A fallback).
+                    let flops =
+                        spec.layer_prefill_flops(overflow) * spec.layers as f64 * frac[i];
+                    step_end += flops / cluster.devices[i].flops;
+                }
+            }
+        }
+
+        step_times.push(step_end - step_start);
+        t_prev = step_end;
+    }
+
+    SimResult {
+        tokens,
+        micro_batches: micro,
+        total_time: t_prev - decode_start,
+        step_times,
+        trace,
+        kv_tokens_transferred: 0,
+        online_plans_fired: 0,
+        emergency_steps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tp_runs() {
+        let spec = ModelSpec::qwen3_32b();
+        let cluster = Cluster::env_e2();
+        let bw = BandwidthTrace::fixed_mbps(200.0);
+        let r = run_tensor_parallel(&spec, &cluster, &bw, 1, 8, &TpOptions::default());
+        assert_eq!(r.step_times.len(), 8);
+        assert!(r.ms_per_token() > 0.0);
+    }
+
+    #[test]
+    fn tp_suffers_at_low_bandwidth() {
+        let spec = ModelSpec::qwen3_32b();
+        let cluster = Cluster::env_e2();
+        let hi = run_tensor_parallel(
+            &spec,
+            &cluster,
+            &BandwidthTrace::fixed_mbps(200.0),
+            4,
+            8,
+            &TpOptions::default(),
+        );
+        let lo = run_tensor_parallel(
+            &spec,
+            &cluster,
+            &BandwidthTrace::fixed_mbps(100.0),
+            4,
+            8,
+            &TpOptions::default(),
+        );
+        // Per-layer collectives make TP markedly bandwidth-sensitive in the
+        // bursty pattern (bigger activation payloads).
+        assert!(
+            lo.ms_per_token() > 1.2 * hi.ms_per_token(),
+            "lo {:.1} vs hi {:.1}",
+            lo.ms_per_token(),
+            hi.ms_per_token()
+        );
+    }
+
+    #[test]
+    fn seq_parallel_overlap_helps() {
+        let spec = ModelSpec::qwen3_32b();
+        let cluster = Cluster::env_e2();
+        let bw = BandwidthTrace::fixed_mbps(100.0);
+        let plain = run_tensor_parallel(&spec, &cluster, &bw, 1, 8, &TpOptions::default());
+        let galaxy = run_tensor_parallel(
+            &spec,
+            &cluster,
+            &bw,
+            1,
+            8,
+            &TpOptions {
+                comm_overlap: 0.3,
+                ..TpOptions::default()
+            },
+        );
+        assert!(galaxy.ms_per_token() < plain.ms_per_token());
+    }
+
+    #[test]
+    fn sliding_window_pays_streaming() {
+        let spec = ModelSpec::llama33_70b();
+        let cluster = Cluster::lowmem_setting1();
+        let bw = BandwidthTrace::fixed_mbps(200.0);
+        let window = run_tensor_parallel(
+            &spec,
+            &cluster,
+            &bw,
+            1,
+            4,
+            &TpOptions {
+                sliding_window: true,
+                ..TpOptions::default()
+            },
+        );
+        let no_window = run_tensor_parallel(&spec, &cluster, &bw, 1, 4, &TpOptions::default());
+        assert!(window.ms_per_token() >= no_window.ms_per_token());
+    }
+}

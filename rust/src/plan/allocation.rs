@@ -1,0 +1,278 @@
+//! Allocation data model: which layers live on which device, which of them
+//! are offloaded (fully, or at MHA/MLP block granularity — §IV-C's
+//! fine-grained offloading), and how they spread across interleaved-pipeline
+//! segments.
+
+use crate::model::ModelSpec;
+
+/// Per-device slice of the allocation.
+///
+/// Layer counts decompose as
+/// `total = fully_resident + full_offload + mha_offload + mlp_offload`
+/// where `mha_offload` layers keep their MLP block pinned in GPU memory and
+/// stream only the MHA block from SSD (and vice versa for `mlp_offload`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeviceAssignment {
+    /// `|L_i|` — all layers this device computes.
+    pub total_layers: usize,
+    /// Layers whose full parameter set streams from SSD each pass.
+    pub full_offload: usize,
+    /// Layers streaming only the MHA block (MLP pinned resident).
+    pub mha_offload: usize,
+    /// Layers streaming only the MLP block (MHA pinned resident).
+    pub mlp_offload: usize,
+}
+
+impl DeviceAssignment {
+    pub fn resident(total_layers: usize) -> Self {
+        DeviceAssignment {
+            total_layers,
+            full_offload: 0,
+            mha_offload: 0,
+            mlp_offload: 0,
+        }
+    }
+
+    /// `|L~_i|` — layers touching SSD every pass (any granularity).
+    pub fn offloaded_count(&self) -> usize {
+        self.full_offload + self.mha_offload + self.mlp_offload
+    }
+
+    /// `|L_i − L~_i|` — layers that never touch SSD.
+    pub fn non_offloaded_layers(&self) -> usize {
+        self.total_layers - self.offloaded_count()
+    }
+
+    /// Bytes read from SSD per full token pass.
+    pub fn load_bytes(&self, spec: &ModelSpec) -> u64 {
+        self.full_offload as u64 * spec.layer_bytes()
+            + self.mha_offload as u64 * spec.mha_bytes()
+            + self.mlp_offload as u64 * spec.mlp_bytes()
+    }
+
+    /// Resident GPU bytes for parameters: fully-resident layers, pinned
+    /// blocks of split layers, plus the shared offload *slots* — one
+    /// segment's worth of streamed bytes stays mapped at a time (slots are
+    /// reused across segments; that sharing is the interleaved pipeline's
+    /// memory trick).
+    pub fn resident_bytes(&self, spec: &ModelSpec, seg: usize) -> u64 {
+        let seg = seg.max(1) as u64;
+        let fully = self.non_offloaded_layers() as u64 * spec.layer_bytes();
+        let pinned = self.mha_offload as u64 * spec.mlp_bytes()
+            + self.mlp_offload as u64 * spec.mha_bytes();
+        let slots = div_ceil_u64(self.full_offload as u64, seg) * spec.layer_bytes()
+            + div_ceil_u64(self.mha_offload as u64, seg) * spec.mha_bytes()
+            + div_ceil_u64(self.mlp_offload as u64, seg) * spec.mlp_bytes();
+        fully + pinned + slots
+    }
+
+    /// Internal consistency.
+    pub fn valid(&self) -> bool {
+        self.offloaded_count() <= self.total_layers
+    }
+}
+
+fn div_ceil_u64(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
+}
+
+/// A complete plan: the model, the segment count `#Seg`, and one
+/// [`DeviceAssignment`] per device in pipeline order. Layers are assigned
+/// contiguously in pipeline order (device 0 gets layers `0..n_0`, etc.).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub spec: ModelSpec,
+    /// `#Seg` — interleaved-pipeline segment count (1 = plain pipeline).
+    pub seg: usize,
+    pub devices: Vec<DeviceAssignment>,
+}
+
+impl Allocation {
+    pub fn new(spec: ModelSpec, seg: usize, devices: Vec<DeviceAssignment>) -> Self {
+        let a = Allocation { spec, seg, devices };
+        debug_assert!(a.devices.iter().all(|d| d.valid()));
+        a
+    }
+
+    /// Total layers covered by the plan.
+    pub fn layer_sum(&self) -> usize {
+        self.devices.iter().map(|d| d.total_layers).sum()
+    }
+
+    /// The contiguous global layer range `[start, end)` of device `i`.
+    pub fn layer_range(&self, i: usize) -> (usize, usize) {
+        let start: usize = self.devices[..i].iter().map(|d| d.total_layers).sum();
+        (start, start + self.devices[i].total_layers)
+    }
+
+    /// Does the plan cover every layer exactly once?
+    pub fn covers_model(&self) -> bool {
+        self.layer_sum() == self.spec.layers
+    }
+
+    /// Layers of device `i` active in segment `s` (even split, earlier
+    /// segments take the remainder).
+    pub fn layers_in_segment(&self, i: usize, s: usize) -> usize {
+        let total = self.devices[i].total_layers;
+        let base = total / self.seg;
+        let rem = total % self.seg;
+        base + usize::from(s < rem)
+    }
+
+    /// Offloaded-unit count of device `i` active in segment `s`.
+    pub fn offloaded_in_segment(&self, i: usize, s: usize) -> usize {
+        let total = self.devices[i].offloaded_count();
+        let base = total / self.seg;
+        let rem = total % self.seg;
+        base + usize::from(s < rem)
+    }
+
+    /// Human-readable summary.
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "{}: {} layers over {} devices, #Seg={}\n",
+            self.spec.name,
+            self.spec.layers,
+            self.devices.len(),
+            self.seg
+        );
+        for (i, d) in self.devices.iter().enumerate() {
+            let (lo, hi) = self.layer_range(i);
+            s.push_str(&format!(
+                "  dev{i}: layers [{lo},{hi}) total={} resident={} offload(full={}, mha={}, mlp={})\n",
+                d.total_layers,
+                d.non_offloaded_layers(),
+                d.full_offload,
+                d.mha_offload,
+                d.mlp_offload
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        ModelSpec::llama2_13b()
+    }
+
+    #[test]
+    fn counts_decompose() {
+        let a = DeviceAssignment {
+            total_layers: 10,
+            full_offload: 2,
+            mha_offload: 1,
+            mlp_offload: 1,
+        };
+        assert_eq!(a.offloaded_count(), 4);
+        assert_eq!(a.non_offloaded_layers(), 6);
+        assert!(a.valid());
+    }
+
+    #[test]
+    fn load_bytes_by_granularity() {
+        let s = spec();
+        let full = DeviceAssignment {
+            total_layers: 4,
+            full_offload: 1,
+            mha_offload: 0,
+            mlp_offload: 0,
+        };
+        let mha_only = DeviceAssignment {
+            total_layers: 4,
+            full_offload: 0,
+            mha_offload: 1,
+            mlp_offload: 0,
+        };
+        let mlp_only = DeviceAssignment {
+            total_layers: 4,
+            full_offload: 0,
+            mha_offload: 0,
+            mlp_offload: 1,
+        };
+        assert_eq!(full.load_bytes(&s), s.layer_bytes());
+        assert_eq!(mha_only.load_bytes(&s), s.mha_bytes());
+        assert_eq!(mlp_only.load_bytes(&s), s.mlp_bytes());
+        assert_eq!(
+            mha_only.load_bytes(&s) + mlp_only.load_bytes(&s),
+            full.load_bytes(&s)
+        );
+    }
+
+    #[test]
+    fn resident_bytes_fall_with_more_segments() {
+        let s = spec();
+        let a = DeviceAssignment {
+            total_layers: 12,
+            full_offload: 6,
+            mha_offload: 0,
+            mlp_offload: 0,
+        };
+        let seg2 = a.resident_bytes(&s, 2);
+        let seg6 = a.resident_bytes(&s, 6);
+        assert!(seg6 < seg2, "more segments share slots harder");
+    }
+
+    #[test]
+    fn pinned_blocks_count_as_resident() {
+        let s = spec();
+        let plain = DeviceAssignment {
+            total_layers: 12,
+            full_offload: 6,
+            mha_offload: 0,
+            mlp_offload: 0,
+        };
+        let split = DeviceAssignment {
+            total_layers: 12,
+            full_offload: 5,
+            mha_offload: 1, // MLP pinned
+            mlp_offload: 0,
+        };
+        assert!(split.resident_bytes(&s, 3) > plain.resident_bytes(&s, 3));
+        assert!(split.load_bytes(&s) < plain.load_bytes(&s));
+    }
+
+    #[test]
+    fn allocation_ranges_partition() {
+        let alloc = Allocation::new(
+            spec(),
+            2,
+            vec![
+                DeviceAssignment::resident(25),
+                DeviceAssignment::resident(15),
+            ],
+        );
+        assert!(alloc.covers_model());
+        assert_eq!(alloc.layer_range(0), (0, 25));
+        assert_eq!(alloc.layer_range(1), (25, 40));
+    }
+
+    #[test]
+    fn segment_split_even_with_remainder() {
+        let alloc = Allocation::new(
+            spec(),
+            3,
+            vec![DeviceAssignment::resident(40)],
+        );
+        let per: Vec<usize> = (0..3).map(|s| alloc.layers_in_segment(0, s)).collect();
+        assert_eq!(per.iter().sum::<usize>(), 40);
+        assert_eq!(per, vec![14, 13, 13]);
+    }
+
+    #[test]
+    fn describe_mentions_devices() {
+        let alloc = Allocation::new(
+            spec(),
+            2,
+            vec![
+                DeviceAssignment::resident(20),
+                DeviceAssignment::resident(20),
+            ],
+        );
+        let d = alloc.describe();
+        assert!(d.contains("dev0") && d.contains("dev1") && d.contains("#Seg=2"));
+    }
+}

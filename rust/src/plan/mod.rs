@@ -1,0 +1,8 @@
+//! Layer allocation: the allocation data model and the fine-grained offline
+//! scheduler (paper §IV-C, Alg. 1).
+
+pub mod allocation;
+pub mod offline;
+
+pub use allocation::{Allocation, DeviceAssignment};
+pub use offline::{plan, plan_with_seg, PlanError, PlanOptions, PlanReport};

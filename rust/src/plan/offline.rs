@@ -1,0 +1,623 @@
+//! Fine-grained offline allocation scheduler (paper §IV-C, Alg. 1).
+//!
+//! Pipeline of phases, re-run for every candidate segment count `#Seg`:
+//!
+//! 1. **Greedy fill** (Alg. 1 lines 27–30): every device takes as many
+//!    *resident* layers as its memory allows, after reserving room for the
+//!    embedding/LM-head shares, the empirical-`n` KV cache, and one shared
+//!    offload slot.
+//! 2. **DP over offloaded layers** (lines 1–11): the remaining layers
+//!    `L_left` must stream from SSD; `F_allo(l, i)` = minimum extra delay
+//!    after placing the first `l` of them on the first `i` devices, with
+//!    the clamped accumulation of lines 6–7 and predecessor table
+//!    `P_pre(l, i)` for backtracking.
+//! 3. **Fine-grained refinement** (lines 12–27): a max-heap over per-device
+//!    uncovered time; the bottleneck device pins the MHA or MLP block of
+//!    one offloaded layer into spare memory (halving-ish its load) until no
+//!    further improvement fits.
+//! 4. **Feasibility repair**: if the Eq. 1 memory constraint fails at the
+//!    empirical token count, one resident layer of the offending device is
+//!    pushed into the offload pool and the DP re-runs.
+//!
+//! The best `#Seg` is chosen by evaluating the full Eq. 1 cost
+//! ([`crate::cost::t_total`]) — lines 31–38.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::cluster::Cluster;
+use crate::cost;
+use crate::model::ModelSpec;
+use crate::plan::allocation::{Allocation, DeviceAssignment};
+
+/// Tuning inputs for planning (the paper's empirical constants).
+#[derive(Debug, Clone, Copy)]
+pub struct PlanOptions {
+    /// Empirical value of the total generated tokens `n` (§IV-C: fixed
+    /// constant; `n_i^trans` is taken as 0 during offline planning).
+    pub empirical_tokens: usize,
+    /// Micro-batch size (1 = sporadic; |D| = bursty).
+    pub micro_batch: usize,
+    /// Network bandwidth assumed by the planner, bytes/s.
+    pub bandwidth: f64,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions {
+            empirical_tokens: 512,
+            micro_batch: 1,
+            bandwidth: crate::util::bytes::mbps(200.0),
+        }
+    }
+}
+
+/// Planning failure.
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+pub enum PlanError {
+    #[error("cluster cannot host the model even with maximal offloading: {0}")]
+    OutOfMemory(String),
+}
+
+/// Outcome: the chosen allocation plus the per-#Seg cost curve
+/// (regenerates Figs 7–8).
+#[derive(Debug, Clone)]
+pub struct PlanReport {
+    pub allocation: Allocation,
+    pub cost: cost::CostBreakdown,
+    /// (seg, total cost) for every feasible candidate examined.
+    pub seg_curve: Vec<(usize, f64)>,
+}
+
+/// Run the full offline scheduler: try every `#Seg` in `2..=⌈|L|/|D|⌉`
+/// (plus the no-offload degenerate case) and keep the cheapest plan.
+pub fn plan(spec: &ModelSpec, cluster: &Cluster, opts: &PlanOptions) -> Result<PlanReport, PlanError> {
+    // Degenerate case first: everything fits resident -> plain pipeline.
+    if let Some(alloc) = try_all_resident(spec, cluster, opts) {
+        let cb = cost::t_total(&alloc, cluster, opts.empirical_tokens, opts.micro_batch, opts.bandwidth);
+        return Ok(PlanReport {
+            allocation: alloc,
+            cost: cb,
+            seg_curve: vec![(1, cb.total())],
+        });
+    }
+
+    let seg_max = spec.layers.div_ceil(cluster.len()).max(2);
+    let mut best: Option<(Allocation, cost::CostBreakdown)> = None;
+    let mut seg_curve = Vec::new();
+    for seg in 2..=seg_max {
+        match plan_with_seg(spec, cluster, seg, opts) {
+            Ok(alloc) => {
+                let cb = cost::t_total(&alloc, cluster, opts.empirical_tokens, opts.micro_batch, opts.bandwidth);
+                seg_curve.push((seg, cb.total()));
+                let better = match &best {
+                    None => true,
+                    Some((_, b)) => cb.total() < b.total(),
+                };
+                if better {
+                    best = Some((alloc, cb));
+                }
+            }
+            Err(_) => continue,
+        }
+    }
+    match best {
+        Some((allocation, cb)) => Ok(PlanReport {
+            allocation,
+            cost: cb,
+            seg_curve,
+        }),
+        None => Err(PlanError::OutOfMemory(format!(
+            "{} on {} devices: no feasible #Seg in 2..={}",
+            spec.name,
+            cluster.len(),
+            seg_max
+        ))),
+    }
+}
+
+/// Memory available to device `i` for decoder layers at planning time.
+fn layer_budget(spec: &ModelSpec, cluster: &Cluster, i: usize) -> u64 {
+    let embed = if i == 0 || i + 1 == cluster.len() {
+        spec.embed_bytes() / 2
+    } else {
+        0
+    };
+    cluster.devices[i].usable_mem().saturating_sub(embed)
+}
+
+/// Try the no-offload allocation: all layers resident, compute-balanced.
+fn try_all_resident(spec: &ModelSpec, cluster: &Cluster, opts: &PlanOptions) -> Option<Allocation> {
+    let kv_per_layer = opts.empirical_tokens as u64 * spec.kv_bytes_per_token_layer();
+    let per_layer = spec.layer_bytes() + kv_per_layer;
+    let caps: Vec<usize> = (0..cluster.len())
+        .map(|i| (layer_budget(spec, cluster, i) / per_layer) as usize)
+        .collect();
+    if caps.iter().sum::<usize>() < spec.layers {
+        return None;
+    }
+    // Balance by compute rate, clamped by capacity.
+    let total_flops: f64 = cluster.devices.iter().map(|d| d.flops).sum();
+    let mut counts: Vec<usize> = cluster
+        .devices
+        .iter()
+        .zip(&caps)
+        .map(|(d, &cap)| (((spec.layers as f64) * d.flops / total_flops).round() as usize).min(cap))
+        .collect();
+    // Repair rounding drift against capacities.
+    let mut assigned: usize = counts.iter().sum();
+    while assigned > spec.layers {
+        let i = (0..counts.len()).max_by_key(|&i| counts[i]).unwrap();
+        counts[i] -= 1;
+        assigned -= 1;
+    }
+    let mut guard = 0;
+    while assigned < spec.layers {
+        // Give to the fastest device with headroom.
+        let candidates: Vec<usize> = (0..counts.len()).filter(|&i| counts[i] < caps[i]).collect();
+        let &i = candidates
+            .iter()
+            .max_by(|&&a, &&b| cluster.devices[a].flops.partial_cmp(&cluster.devices[b].flops).unwrap())?;
+        counts[i] += 1;
+        assigned += 1;
+        guard += 1;
+        if guard > spec.layers * 2 {
+            return None;
+        }
+    }
+    let alloc = Allocation::new(
+        spec.clone(),
+        1,
+        counts.into_iter().map(DeviceAssignment::resident).collect(),
+    );
+    cost::feasible(&alloc, cluster, opts.empirical_tokens).ok()?;
+    Some(alloc)
+}
+
+/// Plan for a fixed `#Seg` (phases 1–4 above).
+pub fn plan_with_seg(
+    spec: &ModelSpec,
+    cluster: &Cluster,
+    seg: usize,
+    opts: &PlanOptions,
+) -> Result<Allocation, PlanError> {
+    assert!(seg >= 2);
+    let d = cluster.len();
+    let kv_per_layer = opts.empirical_tokens as u64 * spec.kv_bytes_per_token_layer();
+
+    // Phase 1: greedy resident fill with one offload slot reserved.
+    let mut resident: Vec<usize> = (0..d)
+        .map(|i| {
+            let budget = layer_budget(spec, cluster, i).saturating_sub(spec.layer_bytes()); // slot
+            (budget / (spec.layer_bytes() + kv_per_layer)) as usize
+        })
+        .collect();
+    let cap_total: usize = resident.iter().sum();
+    if cap_total > spec.layers {
+        // Offload is mandatory here (try_all_resident failed only because of
+        // the slot reserve) — trim the surplus from the slowest devices so
+        // the DP still has layers to place.
+        let mut surplus = cap_total - spec.layers.saturating_sub(d.min(spec.layers));
+        while surplus > 0 {
+            let i = (0..d)
+                .filter(|&i| resident[i] > 0)
+                .min_by(|&a, &b| {
+                    cluster.devices[a]
+                        .flops
+                        .partial_cmp(&cluster.devices[b].flops)
+                        .unwrap()
+                })
+                .unwrap();
+            let take = surplus.min(resident[i]);
+            resident[i] -= take;
+            surplus -= take;
+        }
+    }
+
+    // Per-device offload capacity: `k` offloaded layers need
+    // `ceil(k/#Seg)` shared slots resident, so k <= #Seg * floor(budget/l).
+    let slot_caps: Vec<usize> = (0..d)
+        .map(|i| {
+            let kv = kv_per_layer; // at least one layer's KV accompanies a slot
+            let budget = layer_budget(spec, cluster, i)
+                .saturating_sub(resident[i] as u64 * (spec.layer_bytes() + kv_per_layer));
+            let slots = (budget / (spec.layer_bytes() + kv)) as usize;
+            slots * seg
+        })
+        .collect();
+
+    // Phases 2-4 with feasibility-repair loop.
+    let mut guard = 0usize;
+    loop {
+        let left = spec.layers - resident.iter().sum::<usize>().min(spec.layers);
+        let Some(offload) = dp_assign_offload(spec, cluster, &resident, &slot_caps, left, seg, opts)
+        else {
+            return Err(PlanError::OutOfMemory(format!(
+                "{}: {left} layers cannot be placed within slot capacities {slot_caps:?}",
+                spec.name
+            )));
+        };
+        let mut alloc = build_allocation(spec, seg, &resident, &offload);
+        refine_fine_grained(&mut alloc, cluster, opts);
+
+        match cost::feasible(&alloc, cluster, opts.empirical_tokens) {
+            Ok(()) => return Ok(alloc),
+            Err(cost::MemError::OverCapacity { device, .. }) => {
+                if resident[device] == 0 {
+                    return Err(PlanError::OutOfMemory(format!(
+                        "device {device} cannot hold even one offload slot for {}",
+                        spec.name
+                    )));
+                }
+                resident[device] -= 1;
+            }
+        }
+        guard += 1;
+        if guard > spec.layers * d + 8 {
+            return Err(PlanError::OutOfMemory("repair loop did not converge".into()));
+        }
+    }
+}
+
+/// Phase 2 — the Alg. 1 DP. Returns offloaded-layer counts per device, or
+/// `None` when `left` layers cannot fit within the per-device slot caps.
+fn dp_assign_offload(
+    spec: &ModelSpec,
+    cluster: &Cluster,
+    resident: &[usize],
+    slot_caps: &[usize],
+    left: usize,
+    seg: usize,
+    opts: &PlanOptions,
+) -> Option<Vec<usize>> {
+    let d = cluster.len();
+    if left == 0 {
+        return Some(vec![0; d]);
+    }
+    // Idle time per device (Eq. 2) with greedy-fill residents as L_i.
+    let base = Allocation::new(
+        spec.clone(),
+        seg,
+        resident.iter().map(|&r| DeviceAssignment::resident(r)).collect(),
+    );
+    let idle: Vec<f64> = (0..d)
+        .map(|i| cost::t_idle(&base, cluster, i, opts.empirical_tokens, opts.micro_batch, opts.bandwidth))
+        .collect();
+    let load_one: Vec<f64> = (0..d)
+        .map(|i| spec.layer_bytes() as f64 / cluster.devices[i].ssd_read_bps)
+        .collect();
+
+    const INF: f64 = f64::INFINITY;
+    // f[l][i] over l in 0..=left, i in 0..d (device index, 0-based).
+    let mut f = vec![vec![INF; d]; left + 1];
+    let mut pre = vec![vec![0usize; d]; left + 1];
+    for l in 0..=left.min(slot_caps[0]) {
+        f[l][0] = (load_one[0] * l as f64 - idle[0]).max(0.0); // Eq. 3, clamped
+        pre[l][0] = l;
+    }
+    for i in 1..d {
+        for l in 0..=left {
+            for k in 0..=l.min(slot_caps[i]) {
+                let prev = f[l - k][i - 1];
+                if !prev.is_finite() {
+                    continue;
+                }
+                let t_cur = (prev + load_one[i] * k as f64 - idle[i]).max(0.0); // lines 6-7
+                if t_cur <= f[l][i] {
+                    f[l][i] = t_cur;
+                    pre[l][i] = k;
+                }
+            }
+        }
+    }
+    if !f[left][d - 1].is_finite() {
+        return None; // slot capacities cannot absorb `left` layers
+    }
+    // Backtrack (line 11).
+    let mut counts = vec![0usize; d];
+    let mut l = left;
+    for i in (0..d).rev() {
+        let k = pre[l][i];
+        counts[i] = k;
+        l -= k;
+    }
+    debug_assert_eq!(l, 0);
+    Some(counts)
+}
+
+fn build_allocation(
+    spec: &ModelSpec,
+    seg: usize,
+    resident: &[usize],
+    offload: &[usize],
+) -> Allocation {
+    let devices = resident
+        .iter()
+        .zip(offload)
+        .map(|(&r, &o)| DeviceAssignment {
+            total_layers: r + o,
+            full_offload: o,
+            mha_offload: 0,
+            mlp_offload: 0,
+        })
+        .collect();
+    Allocation::new(spec.clone(), seg, devices)
+}
+
+#[derive(PartialEq)]
+struct HeapEntry {
+    uncovered: f64,
+    device: usize,
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.uncovered
+            .partial_cmp(&other.uncovered)
+            .unwrap_or(Ordering::Equal)
+            .then(other.device.cmp(&self.device))
+    }
+}
+
+/// Phase 3 — Alg. 1 lines 12–27: bottleneck-first block pinning.
+fn refine_fine_grained(alloc: &mut Allocation, cluster: &Cluster, opts: &PlanOptions) {
+    let spec = alloc.spec.clone();
+    let uncovered = |alloc: &Allocation, i: usize| -> f64 {
+        let load = cost::load_time(&spec, &cluster.devices[i], &alloc.devices[i]);
+        let idle = cost::t_idle(alloc, cluster, i, opts.empirical_tokens, opts.micro_batch, opts.bandwidth);
+        (load - idle).max(0.0)
+    };
+    let free_mem = |alloc: &Allocation, i: usize| -> u64 {
+        cluster.devices[i]
+            .usable_mem()
+            .saturating_sub(cost::mem_demand(alloc, i, opts.empirical_tokens, 0))
+    };
+
+    let mut heap: BinaryHeap<HeapEntry> = (0..cluster.len())
+        .map(|i| HeapEntry {
+            uncovered: uncovered(alloc, i),
+            device: i,
+        })
+        .collect();
+
+    let mut steps = 0usize;
+    while let Some(top) = heap.pop() {
+        if top.uncovered <= 0.0 || steps > 4 * spec.layers {
+            break;
+        }
+        let i = top.device;
+        let free = free_mem(alloc, i);
+        let a = &mut alloc.devices[i];
+        // Prefer pinning the larger block (bigger load reduction); a full
+        // offloaded layer is needed to split.
+        let pinned = if a.full_offload >= 1 && free >= spec.mlp_bytes() {
+            a.full_offload -= 1;
+            a.mha_offload += 1; // MLP pinned, MHA still streamed
+            true
+        } else if a.full_offload >= 1 && free >= spec.mha_bytes() {
+            a.full_offload -= 1;
+            a.mlp_offload += 1; // MHA pinned, MLP still streamed
+            true
+        } else if a.mha_offload >= 1 && free >= spec.mha_bytes() {
+            a.mha_offload -= 1; // pin the remaining MHA too -> fully resident
+            true
+        } else if a.mlp_offload >= 1 && free >= spec.mlp_bytes() {
+            a.mlp_offload -= 1;
+            true
+        } else {
+            false
+        };
+        if !pinned {
+            // Alg. 1 line 24-25: bottleneck can't improve; optimum reached.
+            break;
+        }
+        steps += 1;
+        heap.push(HeapEntry {
+            uncovered: uncovered(alloc, i),
+            device: i,
+        });
+    }
+}
+
+/// Exhaustive reference for the Phase-2 objective (test oracle): minimum of
+/// the clamped accumulation over *all* ways to split `left` layers across
+/// devices. Exponential — only for tiny instances in tests.
+pub fn exhaustive_offload_reference(
+    spec: &ModelSpec,
+    cluster: &Cluster,
+    resident: &[usize],
+    left: usize,
+    seg: usize,
+    opts: &PlanOptions,
+) -> (f64, Vec<usize>) {
+    let d = cluster.len();
+    let base = Allocation::new(
+        spec.clone(),
+        seg,
+        resident.iter().map(|&r| DeviceAssignment::resident(r)).collect(),
+    );
+    let idle: Vec<f64> = (0..d)
+        .map(|i| cost::t_idle(&base, cluster, i, opts.empirical_tokens, opts.micro_batch, opts.bandwidth))
+        .collect();
+    let load_one: Vec<f64> = (0..d)
+        .map(|i| spec.layer_bytes() as f64 / cluster.devices[i].ssd_read_bps)
+        .collect();
+
+    let mut best = (f64::INFINITY, vec![0usize; d]);
+    let mut counts = vec![0usize; d];
+    fn rec(
+        i: usize,
+        remaining: usize,
+        counts: &mut Vec<usize>,
+        d: usize,
+        load_one: &[f64],
+        idle: &[f64],
+        best: &mut (f64, Vec<usize>),
+    ) {
+        if i == d {
+            if remaining != 0 {
+                return;
+            }
+            let mut acc = 0.0f64;
+            for j in 0..d {
+                acc = (acc + load_one[j] * counts[j] as f64 - idle[j]).max(0.0);
+            }
+            if acc < best.0 {
+                *best = (acc, counts.clone());
+            }
+            return;
+        }
+        for k in 0..=remaining {
+            counts[i] = k;
+            rec(i + 1, remaining - k, counts, d, load_one, idle, best);
+        }
+        counts[i] = 0;
+    }
+    rec(0, left, &mut counts, d, &load_one, &idle, &mut best);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::mbps;
+
+    fn opts() -> PlanOptions {
+        PlanOptions {
+            empirical_tokens: 512,
+            micro_batch: 1,
+            bandwidth: mbps(200.0),
+        }
+    }
+
+    #[test]
+    fn e1_llama13b_plans() {
+        let spec = ModelSpec::llama2_13b();
+        let cluster = Cluster::env_e1();
+        let report = plan(&spec, &cluster, &opts()).unwrap();
+        assert!(report.allocation.covers_model());
+        assert!(report.cost.total() > 0.0);
+    }
+
+    #[test]
+    fn e3_llama70b_fits_marginally() {
+        // Fig. 14 regime: in E3 the model *barely* fits (plain Pipeline is
+        // not marked OOM in the paper), so LIME may choose the degenerate
+        // all-resident plan.
+        let spec = ModelSpec::llama33_70b();
+        let cluster = Cluster::env_e3();
+        let report = plan(&spec, &cluster, &opts()).unwrap();
+        assert!(report.allocation.covers_model());
+        assert!(cost::feasible(&report.allocation, &cluster, 512).is_ok());
+    }
+
+    #[test]
+    fn lowmem_setting3_requires_offload() {
+        // Figs 15-17 regime: the reduced-memory settings cannot hold the
+        // model resident, so the offload machinery must engage.
+        let spec = ModelSpec::llama33_70b();
+        let cluster = Cluster::lowmem_setting3();
+        let report = plan(&spec, &cluster, &opts()).unwrap();
+        let alloc = &report.allocation;
+        assert!(alloc.covers_model());
+        let offloaded: usize = alloc.devices.iter().map(|d| d.offloaded_count()).sum();
+        assert!(offloaded > 0, "{}", alloc.describe());
+        assert!(alloc.seg >= 2);
+        assert!(cost::feasible(alloc, &cluster, 512).is_ok());
+    }
+
+    #[test]
+    fn small_model_on_big_cluster_needs_no_offload() {
+        let spec = ModelSpec::tiny_lm();
+        let cluster = Cluster::env_e2();
+        let report = plan(&spec, &cluster, &opts()).unwrap();
+        let offloaded: usize = report.allocation.devices.iter().map(|d| d.offloaded_count()).sum();
+        assert_eq!(offloaded, 0);
+        assert_eq!(report.allocation.seg, 1);
+    }
+
+    #[test]
+    fn infeasible_cluster_reports_oom() {
+        use crate::cluster::DeviceSpec;
+        use crate::util::bytes::gib;
+        let spec = ModelSpec::llama33_70b();
+        // Two 4 GB devices can't even hold slots + embed shares.
+        let cluster = Cluster::new(vec![
+            DeviceSpec::xavier_nx_16().with_mem_limit(gib(4.0)),
+            DeviceSpec::xavier_nx_16().with_mem_limit(gib(4.0)),
+        ]);
+        assert!(plan(&spec, &cluster, &opts()).is_err());
+    }
+
+    #[test]
+    fn dp_matches_exhaustive_reference() {
+        let spec = ModelSpec::llama2_13b();
+        let cluster = Cluster::env_e2();
+        let resident = vec![8, 6, 4];
+        let o = opts();
+        let caps = vec![usize::MAX; cluster.len()];
+        for left in [1usize, 3, 5, 7] {
+            let dp = dp_assign_offload(&spec, &cluster, &resident, &caps, left, 2, &o).unwrap();
+            let (ref_cost, _) = exhaustive_offload_reference(&spec, &cluster, &resident, left, 2, &o);
+            // Evaluate DP's assignment under the same objective.
+            let idle: Vec<f64> = {
+                let base = Allocation::new(
+                    spec.clone(),
+                    2,
+                    resident.iter().map(|&r| DeviceAssignment::resident(r)).collect(),
+                );
+                (0..cluster.len())
+                    .map(|i| cost::t_idle(&base, &cluster, i, o.empirical_tokens, o.micro_batch, o.bandwidth))
+                    .collect()
+            };
+            let mut acc = 0.0f64;
+            for j in 0..cluster.len() {
+                let load = spec.layer_bytes() as f64 / cluster.devices[j].ssd_read_bps * dp[j] as f64;
+                acc = (acc + load - idle[j]).max(0.0);
+            }
+            assert!(
+                acc <= ref_cost + 1e-9,
+                "left={left}: dp cost {acc} > exhaustive {ref_cost}"
+            );
+        }
+    }
+
+    #[test]
+    fn refinement_never_increases_load() {
+        let spec = ModelSpec::llama33_70b();
+        let cluster = Cluster::env_e3();
+        let o = opts();
+        let mut alloc = plan_with_seg(&spec, &cluster, 2, &o).unwrap();
+        let before: u64 = alloc.devices.iter().map(|d| d.load_bytes(&spec)).sum();
+        refine_fine_grained(&mut alloc, &cluster, &o);
+        let after: u64 = alloc.devices.iter().map(|d| d.load_bytes(&spec)).sum();
+        assert!(after <= before);
+    }
+
+    #[test]
+    fn seg_curve_has_interior_optimum_shape() {
+        // Figs 7-8: both too-few and too-many segments should not beat the
+        // chosen optimum.
+        let spec = ModelSpec::llama33_70b();
+        let cluster = Cluster::lowmem_setting1();
+        let report = plan(&spec, &cluster, &opts()).unwrap();
+        let best_cost = report.cost.total();
+        for &(s, c) in &report.seg_curve {
+            assert!(c + 1e-12 >= best_cost, "seg={s} cost {c} < best {best_cost}");
+        }
+    }
+
+    #[test]
+    fn plans_are_deterministic() {
+        let spec = ModelSpec::qwen3_32b();
+        let cluster = Cluster::env_e2();
+        let a = plan(&spec, &cluster, &opts()).unwrap();
+        let b = plan(&spec, &cluster, &opts()).unwrap();
+        assert_eq!(a.allocation, b.allocation);
+    }
+}

@@ -1,0 +1,288 @@
+//! `artifacts/manifest.json` loader — the contract between the Python AOT
+//! path and the Rust runtime: model shape, artifact parameter order, and
+//! the weight-tensor inventory.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model configuration (mirrors `python/compile/config.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub prefill_len: usize,
+    pub max_seq: usize,
+    pub seed: u64,
+}
+
+/// One parameter of an artifact, in PJRT parameter order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-lowered entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub params: Vec<ParamSpec>,
+}
+
+/// One exported weight tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub file: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        4 * self.elements() as u64 // f32 export
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelConfig,
+    pub layer_weight_names: Vec<String>,
+    pub attn_weight_names: Vec<String>,
+    pub mlp_weight_names: Vec<String>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub tensors: BTreeMap<String, TensorSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&src).context("parsing manifest.json")?;
+
+        let usize_field = |obj: &Json, key: &str| -> Result<usize> {
+            obj.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest model.{key} missing or not an integer"))
+        };
+        let m = root
+            .get("model")
+            .ok_or_else(|| anyhow!("manifest missing 'model'"))?;
+        let model = ModelConfig {
+            name: m
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("TinyLM")
+                .to_string(),
+            vocab: usize_field(m, "vocab")?,
+            hidden: usize_field(m, "hidden")?,
+            layers: usize_field(m, "layers")?,
+            heads: usize_field(m, "heads")?,
+            kv_heads: usize_field(m, "kv_heads")?,
+            head_dim: usize_field(m, "head_dim")?,
+            ffn: usize_field(m, "ffn")?,
+            prefill_len: usize_field(m, "prefill_len")?,
+            max_seq: usize_field(m, "max_seq")?,
+            seed: m.get("seed").and_then(Json::as_u64).unwrap_or(0),
+        };
+
+        let str_list = |key: &str| -> Result<Vec<String>> {
+            root.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|v| v.as_str().map(str::to_string))
+                        .collect()
+                })
+                .ok_or_else(|| anyhow!("manifest missing '{key}'"))
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?
+        {
+            let file = art
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                .to_string();
+            let mut params = Vec::new();
+            for p in art
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name} missing params"))?
+            {
+                params.push(ParamSpec {
+                    name: p
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("param missing name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default(),
+                    dtype: p
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .unwrap_or("float32")
+                        .to_string(),
+                });
+            }
+            artifacts.insert(name.clone(), ArtifactSpec { file, params });
+        }
+
+        let mut tensors = BTreeMap::new();
+        for (name, t) in root
+            .get("tensors")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'tensors'"))?
+        {
+            tensors.insert(
+                name.clone(),
+                TensorSpec {
+                    shape: t
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default(),
+                    file: t
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("tensor {name} missing file"))?
+                        .to_string(),
+                },
+            );
+        }
+
+        let manifest = Manifest {
+            dir,
+            model,
+            layer_weight_names: str_list("layer_weight_names")?,
+            attn_weight_names: str_list("attn_weight_names")?,
+            mlp_weight_names: str_list("mlp_weight_names")?,
+            artifacts,
+            tensors,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for required in [
+            "embed_prefill",
+            "embed_decode",
+            "layer_prefill",
+            "layer_decode",
+            "mha_decode",
+            "mlp_decode",
+            "lm_head",
+        ] {
+            if !self.artifacts.contains_key(required) {
+                return Err(anyhow!("manifest missing artifact '{required}'"));
+            }
+        }
+        for li in 0..self.model.layers {
+            for w in &self.layer_weight_names {
+                let key = format!("layer{li}.{w}");
+                if !self.tensors.contains_key(&key) {
+                    return Err(anyhow!("manifest missing tensor '{key}'"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let a = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        Ok(self.dir.join(&a.file))
+    }
+
+    /// Absolute path of a tensor blob.
+    pub fn tensor_path(&self, name: &str) -> Result<PathBuf> {
+        let t = self
+            .tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown tensor '{name}'"))?;
+        Ok(self.dir.join(&t.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_built_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert_eq!(m.model.layers, 8);
+        assert_eq!(m.model.hidden, 128);
+        assert_eq!(m.artifacts.len(), 7);
+        assert_eq!(m.layer_weight_names.len(), 9);
+        // Parameter order sanity for layer_decode.
+        let ld = &m.artifacts["layer_decode"];
+        assert_eq!(ld.params[0].name, "x");
+        assert_eq!(ld.params[3].name, "pos");
+        assert_eq!(ld.params[3].dtype, "int32");
+    }
+
+    #[test]
+    fn tensor_paths_exist() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        for name in ["embed", "ln_f", "layer0.wq", "layer7.w_down"] {
+            let p = m.tensor_path(name).unwrap();
+            assert!(p.exists(), "{p:?}");
+            let spec = &m.tensors[name];
+            assert_eq!(
+                std::fs::metadata(&p).unwrap().len(),
+                spec.bytes(),
+                "{name} blob size"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load("/nonexistent/artifacts").is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! The PJRT runtime: manifest loading, executable cache, and the
+//! residency-aware weight store. Python never runs here — artifacts are
+//! produced once by `make artifacts`.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod weights;
+
+pub use manifest::{Manifest, ModelConfig};
+pub use pjrt::{
+    argmax_logits, literal_from_f32, literal_from_f32_file, literal_from_i32,
+    literal_scalar_i32, PjrtRuntime,
+};
+pub use weights::{Residency, WeightStore};

@@ -1,0 +1,164 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile once on the CPU
+//! client, execute from the (Python-free) request path.
+//!
+//! The interchange format is HLO *text* — xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids. See `python/compile/aot.py` and DESIGN.md.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::manifest::Manifest;
+
+/// Compiled-executable cache over one PJRT client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    exec_calls: std::cell::Cell<u64>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and compile every artifact in the manifest.
+    pub fn load(manifest: &Manifest) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = BTreeMap::new();
+        for name in manifest.artifacts.keys() {
+            let path = manifest.artifact_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text for '{name}'"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling '{name}'"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(PjrtRuntime {
+            client,
+            executables,
+            exec_calls: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.executables.keys().map(String::as_str).collect()
+    }
+
+    /// Number of `execute` calls issued (hot-path accounting).
+    pub fn exec_calls(&self) -> u64 {
+        self.exec_calls.get()
+    }
+
+    /// Execute artifact `name` with parameters in manifest order. Returns
+    /// the flattened output tuple.
+    pub fn execute(&self, name: &str, params: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.execute_inner(name, params)
+    }
+
+    /// Zero-copy variant: parameters by reference (hot path — avoids the
+    /// deep `Literal` clones of cached weights; see EXPERIMENTS.md §Perf).
+    pub fn execute_ref(&self, name: &str, params: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.execute_inner(name, params)
+    }
+
+    fn execute_inner<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        name: &str,
+        params: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        self.exec_calls.set(self.exec_calls.get() + 1);
+        let result = exe
+            .execute::<L>(params)
+            .with_context(|| format!("executing '{name}'"))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Read a raw little-endian f32 blob into a Literal of the given shape.
+pub fn literal_from_f32_file(path: &std::path::Path, shape: &[usize]) -> Result<xla::Literal> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    let expect = 4 * shape.iter().product::<usize>();
+    if bytes.len() != expect {
+        return Err(anyhow!(
+            "{path:?}: expected {expect} bytes for shape {shape:?}, found {}",
+            bytes.len()
+        ));
+    }
+    let floats: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    literal_from_f32(&floats, shape)
+}
+
+/// Build a Literal from an f32 slice and shape.
+pub fn literal_from_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 Literal from a slice and shape.
+pub fn literal_from_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Scalar i32 Literal (e.g. the `pos` parameter).
+pub fn literal_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Argmax over a logits Literal of shape [1, vocab].
+pub fn argmax_logits(logits: &xla::Literal) -> Result<i32> {
+    let v: Vec<f32> = logits.to_vec()?;
+    let (mut best, mut best_val) = (0usize, f32::NEG_INFINITY);
+    for (i, &x) in v.iter().enumerate() {
+        if x > best_val {
+            best = i;
+            best_val = x;
+        }
+    }
+    Ok(best as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_literal_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = literal_from_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        let lit = literal_from_f32(&[0.1, 0.9, -3.0, 0.5], &[1, 4]).unwrap();
+        assert_eq!(argmax_logits(&lit).unwrap(), 1);
+    }
+
+    #[test]
+    fn blob_size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("lime_blob_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, [0u8; 12]).unwrap();
+        assert!(literal_from_f32_file(&p, &[4]).is_err()); // needs 16 bytes
+        assert!(literal_from_f32_file(&p, &[3]).is_ok());
+    }
+}

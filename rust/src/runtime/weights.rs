@@ -1,0 +1,246 @@
+//! Weight store with *real* offloading: the Rust coordinator owns weight
+//! residency. Resident tensors are cached as PJRT-ready Literals; offloaded
+//! tensors live only in their SSD blob and are re-read (real file I/O) every
+//! time the layer streams through — exactly the cost LIME schedules around.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::pjrt::literal_from_f32_file;
+
+/// Residency state of one weight tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    /// Pinned in memory (the simulated device's "GPU").
+    Resident,
+    /// On SSD only; every access re-reads the blob.
+    Offloaded,
+}
+
+/// Per-tensor entry.
+struct Entry {
+    residency: Residency,
+    cached: Option<xla::Literal>,
+}
+
+/// The store.
+pub struct WeightStore {
+    manifest: Manifest,
+    entries: BTreeMap<String, Entry>,
+    /// Count of SSD re-reads (offloaded accesses) — hot-path accounting.
+    loads_from_disk: std::cell::Cell<u64>,
+}
+
+impl WeightStore {
+    /// All tensors start Resident.
+    pub fn new(manifest: Manifest) -> Self {
+        let entries = manifest
+            .tensors
+            .keys()
+            .map(|name| {
+                (
+                    name.clone(),
+                    Entry {
+                        residency: Residency::Resident,
+                        cached: None,
+                    },
+                )
+            })
+            .collect();
+        WeightStore {
+            manifest,
+            entries,
+            loads_from_disk: std::cell::Cell::new(0),
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Change residency. Evicting drops the cached Literal (frees memory).
+    pub fn set_residency(&mut self, tensor: &str, residency: Residency) -> Result<()> {
+        let e = self
+            .entries
+            .get_mut(tensor)
+            .ok_or_else(|| anyhow!("unknown tensor '{tensor}'"))?;
+        e.residency = residency;
+        if residency == Residency::Offloaded {
+            e.cached = None;
+        }
+        Ok(())
+    }
+
+    pub fn residency(&self, tensor: &str) -> Option<Residency> {
+        self.entries.get(tensor).map(|e| e.residency)
+    }
+
+    /// Bytes currently pinned in memory.
+    pub fn resident_bytes(&self) -> u64 {
+        self.entries
+            .iter()
+            .filter(|(_, e)| e.cached.is_some())
+            .map(|(name, _)| self.manifest.tensors[name].bytes())
+            .sum()
+    }
+
+    pub fn loads_from_disk(&self) -> u64 {
+        self.loads_from_disk.get()
+    }
+
+    /// Warm the cache for a resident tensor (no-op for offloaded ones).
+    /// Pair with [`WeightStore::peek`] on the hot path to avoid clones.
+    pub fn ensure_cached(&mut self, tensor: &str) -> Result<()> {
+        let spec = self
+            .manifest
+            .tensors
+            .get(tensor)
+            .ok_or_else(|| anyhow!("unknown tensor '{tensor}'"))?
+            .clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let e = self.entries.get_mut(tensor).unwrap();
+        if e.residency == Residency::Resident && e.cached.is_none() {
+            e.cached = Some(literal_from_f32_file(&path, &spec.shape)?);
+        }
+        Ok(())
+    }
+
+    /// Borrow a cached resident tensor (None if offloaded / not warmed).
+    pub fn peek(&self, tensor: &str) -> Option<&xla::Literal> {
+        self.entries.get(tensor).and_then(|e| e.cached.as_ref())
+    }
+
+    /// Fetch a tensor as a Literal. Resident tensors are read once and
+    /// cached; offloaded tensors hit the SSD on every call.
+    pub fn get(&mut self, tensor: &str) -> Result<xla::Literal> {
+        let spec = self
+            .manifest
+            .tensors
+            .get(tensor)
+            .ok_or_else(|| anyhow!("unknown tensor '{tensor}'"))?
+            .clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let e = self.entries.get_mut(tensor).unwrap();
+        match e.residency {
+            Residency::Resident => {
+                if e.cached.is_none() {
+                    e.cached = Some(literal_from_f32_file(&path, &spec.shape)?);
+                }
+                // Literal implements (deep-copy) Clone; the perf pass keeps
+                // resident weights cached so the copy is memory-to-memory.
+                Ok(e.cached.as_ref().unwrap().clone())
+            }
+            Residency::Offloaded => {
+                self.loads_from_disk.set(self.loads_from_disk.get() + 1);
+                literal_from_f32_file(&path, &spec.shape)
+            }
+        }
+    }
+
+    /// Apply a layer-level residency plan: `full` streams both blocks,
+    /// `mha_only`/`mlp_only` stream one block and pin the other.
+    pub fn apply_layer_residency(
+        &mut self,
+        layer: usize,
+        mha_offloaded: bool,
+        mlp_offloaded: bool,
+    ) -> Result<()> {
+        let attn = self.manifest.attn_weight_names.clone();
+        let mlp = self.manifest.mlp_weight_names.clone();
+        for w in &attn {
+            self.set_residency(
+                &format!("layer{layer}.{w}"),
+                if mha_offloaded {
+                    Residency::Offloaded
+                } else {
+                    Residency::Resident
+                },
+            )?;
+        }
+        for w in &mlp {
+            self.set_residency(
+                &format!("layer{layer}.{w}"),
+                if mlp_offloaded {
+                    Residency::Offloaded
+                } else {
+                    Residency::Resident
+                },
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn store() -> Option<WeightStore> {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return None;
+        }
+        Some(WeightStore::new(Manifest::load(artifacts_dir()).unwrap()))
+    }
+
+    #[test]
+    fn resident_get_caches() {
+        let Some(mut s) = store() else { return };
+        assert_eq!(s.resident_bytes(), 0);
+        let a = s.get("layer0.wq").unwrap();
+        assert!(s.resident_bytes() > 0);
+        let b = s.get("layer0.wq").unwrap();
+        assert_eq!(a.to_vec::<f32>().unwrap(), b.to_vec::<f32>().unwrap());
+        assert_eq!(s.loads_from_disk(), 0);
+    }
+
+    #[test]
+    fn offloaded_get_rereads_disk() {
+        let Some(mut s) = store() else { return };
+        s.set_residency("layer0.wq", Residency::Offloaded).unwrap();
+        let _ = s.get("layer0.wq").unwrap();
+        let _ = s.get("layer0.wq").unwrap();
+        assert_eq!(s.loads_from_disk(), 2);
+        assert_eq!(s.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn eviction_frees_memory() {
+        let Some(mut s) = store() else { return };
+        let _ = s.get("layer1.w_up").unwrap();
+        let before = s.resident_bytes();
+        assert!(before > 0);
+        s.set_residency("layer1.w_up", Residency::Offloaded).unwrap();
+        assert_eq!(s.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn layer_residency_plan() {
+        let Some(mut s) = store() else { return };
+        s.apply_layer_residency(2, true, false).unwrap();
+        assert_eq!(
+            s.residency("layer2.wq"),
+            Some(Residency::Offloaded)
+        );
+        assert_eq!(
+            s.residency("layer2.w_gate"),
+            Some(Residency::Resident)
+        );
+    }
+
+    #[test]
+    fn values_match_blob_regardless_of_residency() {
+        let Some(mut s) = store() else { return };
+        let resident = s.get("layer3.wo").unwrap().to_vec::<f32>().unwrap();
+        s.set_residency("layer3.wo", Residency::Offloaded).unwrap();
+        let offloaded = s.get("layer3.wo").unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(resident, offloaded, "offload must be lossless");
+    }
+}

@@ -1,0 +1,109 @@
+//! Mapping the offline scheduler onto the *real* TinyLM deployment: a
+//! virtual edge cluster whose memory budgets force the same layer-residency
+//! decisions LIME makes on Jetson-scale hardware, translated into per-layer
+//! [`LayerResidency`] plans for the PJRT engine.
+
+use crate::cluster::{Cluster, DeviceSpec};
+use crate::model::ModelSpec;
+use crate::plan::allocation::Allocation;
+use crate::plan::{plan, PlanError, PlanOptions};
+use crate::serve::engine::LayerResidency;
+use crate::util::bytes::gib;
+
+/// A virtual cluster of `n` devices, each able to hold about
+/// `resident_layers` TinyLM layers beyond the runtime reserve — small
+/// enough that the scheduler must offload the remainder.
+pub fn virtual_cluster(n: usize, resident_layers: &[usize]) -> Cluster {
+    assert_eq!(n, resident_layers.len());
+    let spec = ModelSpec::tiny_lm();
+    let devices = resident_layers
+        .iter()
+        .enumerate()
+        .map(|(i, &k)| {
+            // usable_mem subtracts max(18%, 1.2 GiB); pick total memory so
+            // usable ≈ k layers + embed share + KV slack.
+            let embed = spec.embed_bytes() / 2; // this device's share
+            let slack = spec.layer_bytes() / 4; // KV room only
+            let usable = k as u64 * spec.layer_bytes() + embed + slack;
+            let mem = usable + gib(1.2).max((usable as f64 * 0.22) as u64);
+            DeviceSpec {
+                name: format!("virt{i}"),
+                mem_bytes: mem,
+                flops: 1e11,
+                mem_bw: 10e9,
+                ssd_read_bps: 0.5e9,
+                ssd_write_bps: 0.2e9,
+            }
+        })
+        .collect();
+    Cluster::new(devices)
+}
+
+/// Plan TinyLM over the virtual cluster.
+pub fn plan_tiny(cluster: &Cluster, tokens: usize) -> Result<Allocation, PlanError> {
+    let spec = ModelSpec::tiny_lm();
+    let opts = PlanOptions {
+        empirical_tokens: tokens,
+        micro_batch: 1,
+        bandwidth: crate::util::bytes::mbps(200.0),
+    };
+    plan(&spec, cluster, &opts).map(|r| r.allocation)
+}
+
+/// Translate an allocation into a per-layer residency plan. Within each
+/// device's contiguous range the offloaded layers are placed *last* (the
+/// deepest layers of the device's slice stream from SSD).
+pub fn residency_plan(alloc: &Allocation) -> Vec<LayerResidency> {
+    let mut out = Vec::with_capacity(alloc.spec.layers);
+    for a in &alloc.devices {
+        let resident = a.non_offloaded_layers();
+        for _ in 0..resident {
+            out.push(LayerResidency::Resident);
+        }
+        for _ in 0..a.mha_offload {
+            out.push(LayerResidency::MhaOffload);
+        }
+        for _ in 0..a.mlp_offload {
+            out.push(LayerResidency::MlpOffload);
+        }
+        for _ in 0..a.full_offload {
+            out.push(LayerResidency::FullOffload);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tight_cluster_forces_offload() {
+        let cluster = virtual_cluster(4, &[1, 1, 1, 1]);
+        let alloc = plan_tiny(&cluster, 64).unwrap();
+        assert!(alloc.covers_model());
+        let offloaded: usize = alloc.devices.iter().map(|d| d.offloaded_count()).sum();
+        assert!(offloaded > 0, "{}", alloc.describe());
+        let plan = residency_plan(&alloc);
+        assert_eq!(plan.len(), 8);
+        assert!(plan.iter().any(|r| *r != LayerResidency::Resident));
+    }
+
+    #[test]
+    fn roomy_cluster_stays_resident() {
+        let cluster = virtual_cluster(2, &[8, 8]);
+        let alloc = plan_tiny(&cluster, 64).unwrap();
+        let plan = residency_plan(&alloc);
+        assert!(plan.iter().all(|r| *r == LayerResidency::Resident));
+    }
+
+    #[test]
+    fn plan_length_always_matches_layers() {
+        for spec in [&[2usize, 2, 2, 2][..], &[1, 3][..], &[4, 2, 1][..]] {
+            let cluster = virtual_cluster(spec.len(), spec);
+            if let Ok(alloc) = plan_tiny(&cluster, 64) {
+                assert_eq!(residency_plan(&alloc).len(), 8);
+            }
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Threaded request server over the real PJRT engine.
+//!
+//! A producer thread emits requests on a channel (Poisson arrivals for the
+//! sporadic pattern, an instantaneous burst for the bursty pattern); the
+//! serving loop batches what is queued and drives the engine, recording
+//! prefill latency, per-token decode latency, and end-to-end throughput.
+//! (PJRT handles are not `Send`, so the engine itself stays on the serving
+//! thread — the paper's leader/worker split maps onto channels here.)
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::metrics::LatencyRecorder;
+use crate::serve::engine::{Engine, Generation};
+use crate::workload::requests::{Request, RequestGen};
+
+/// Serving statistics for one run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub tokens: usize,
+    /// Mean prefill latency (s).
+    pub prefill_mean: f64,
+    /// Per-token decode latency summary (s).
+    pub token_p50: f64,
+    pub token_p99: f64,
+    pub token_mean: f64,
+    /// End-to-end tokens/second over the busy time.
+    pub throughput: f64,
+    /// Generations, for losslessness checks.
+    pub generations: Vec<Generation>,
+}
+
+/// Drive `engine` over a request stream.
+pub fn serve(
+    engine: &mut Engine,
+    requests: Vec<Request>,
+    realtime_arrivals: bool,
+) -> Result<ServeReport> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let producer = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        for r in requests {
+            if realtime_arrivals {
+                let target = r.arrival;
+                let now = t0.elapsed().as_secs_f64();
+                if target > now {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(target - now));
+                }
+            }
+            if tx.send(r).is_err() {
+                return;
+            }
+        }
+    });
+
+    let mut prefills = LatencyRecorder::new();
+    let mut tokens = LatencyRecorder::new();
+    let mut generations = Vec::new();
+    let mut n_requests = 0usize;
+    let mut n_tokens = 0usize;
+    let busy_t0 = Instant::now();
+    let mut busy = 0.0f64;
+
+    while let Ok(req) = rx.recv() {
+        n_requests += 1;
+        let t_start = busy_t0.elapsed().as_secs_f64();
+
+        engine.reset();
+        let t0 = Instant::now();
+        let x_last = engine.prefill(&req.prompt)?;
+        prefills.record(t0.elapsed().as_secs_f64());
+
+        // Greedy decode with per-token timing.
+        let cfg = engine.model().clone();
+        let ln_f = engine.weights.get("ln_f")?;
+        let w_out = engine.weights.get("lm_head")?;
+        let mut logits = engine
+            .runtime
+            .execute("lm_head", &[x_last, ln_f, w_out])?
+            .remove(0);
+        let table = engine.weights.get("embed")?;
+        let mut out_tokens = Vec::with_capacity(req.steps);
+        let mut final_logits: Vec<f32> = logits.to_vec()?;
+        for step in 0..req.steps {
+            let t0 = Instant::now();
+            let tok = crate::runtime::argmax_logits(&logits)?;
+            out_tokens.push(tok);
+            let pos = cfg.prefill_len + step;
+            let ids = crate::runtime::literal_from_i32(&[tok], &[1, 1])?;
+            let x = engine
+                .runtime
+                .execute("embed_decode", &[ids, table.clone()])?
+                .remove(0);
+            let (_, l) = engine.decode_step(x, pos)?;
+            logits = l;
+            final_logits = logits.to_vec()?;
+            tokens.record(t0.elapsed().as_secs_f64());
+            n_tokens += 1;
+        }
+        generations.push(Generation {
+            tokens: out_tokens,
+            final_logits,
+        });
+        busy += busy_t0.elapsed().as_secs_f64() - t_start;
+    }
+    producer.join().ok();
+
+    let tsum = tokens.summary();
+    Ok(ServeReport {
+        requests: n_requests,
+        tokens: n_tokens,
+        prefill_mean: prefills.summary().mean,
+        token_p50: tsum.p50,
+        token_p99: tsum.p99,
+        token_mean: tsum.mean,
+        throughput: if busy > 0.0 { n_tokens as f64 / busy } else { 0.0 },
+        generations,
+    })
+}
+
+/// Build the request stream for a pattern.
+pub fn make_requests(
+    pattern_bursty: bool,
+    count: usize,
+    steps: usize,
+    prompt_len: usize,
+    vocab: usize,
+    seed: u64,
+) -> Vec<Request> {
+    let mut gen = RequestGen::new(seed, vocab, prompt_len, steps);
+    if pattern_bursty {
+        gen.bursty(count)
+    } else {
+        gen.sporadic(count, 4.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn serves_a_burst() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut engine = Engine::new(Manifest::load(artifacts_dir()).unwrap()).unwrap();
+        let cfg = engine.model().clone();
+        let reqs = make_requests(true, 3, 4, cfg.prefill_len, cfg.vocab, 9);
+        let report = serve(&mut engine, reqs, false).unwrap();
+        assert_eq!(report.requests, 3);
+        assert_eq!(report.tokens, 12);
+        assert!(report.throughput > 0.0);
+        assert!(report.token_mean > 0.0);
+        assert_eq!(report.generations.len(), 3);
+    }
+}

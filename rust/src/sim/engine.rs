@@ -1,0 +1,286 @@
+//! Discrete-event simulation engine.
+//!
+//! Two cooperating layers:
+//!
+//! * [`Engine`] — a classic event-calendar DES: schedule closures at future
+//!   times, run to quiescence. Used where *reactive* behaviour matters
+//!   (request arrival processes, bandwidth-change reactions).
+//! * [`Resource`] — exclusive FIFO server algebra: `acquire(at, dur)` returns
+//!   the granted interval and advances the server's ready time. Pipeline
+//!   executors are expressed as ready-time recurrences over Resources (one
+//!   per device GPU, SSD channel, and network link), which is both faster
+//!   than event-per-op simulation and exactly the max(...) structure of the
+//!   paper's cost model — so the simulator and Eq. 1 can be cross-checked.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Time in seconds.
+pub type Time = f64;
+
+type EventFn<W> = Box<dyn FnOnce(&mut Engine<W>, &mut W)>;
+
+struct Event<W> {
+    at: Time,
+    seq: u64,
+    run: EventFn<W>,
+}
+
+impl<W> PartialEq for Event<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<W> Eq for Event<W> {}
+impl<W> PartialOrd for Event<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<W> Ord for Event<W> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap by (time, seq): BinaryHeap is a max-heap, so reverse.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Event-calendar simulator over a world state `W`.
+pub struct Engine<W> {
+    now: Time,
+    seq: u64,
+    queue: BinaryHeap<Event<W>>,
+    executed: u64,
+}
+
+impl<W> Engine<W> {
+    pub fn new() -> Self {
+        Engine {
+            now: 0.0,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            executed: 0,
+        }
+    }
+
+    /// Current simulation time.
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Number of events executed so far.
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Schedule `f` to run `delay` seconds from now (FIFO among ties).
+    pub fn schedule(&mut self, delay: Time, f: impl FnOnce(&mut Engine<W>, &mut W) + 'static) {
+        assert!(delay >= 0.0, "cannot schedule into the past");
+        let at = self.now + delay;
+        self.seq += 1;
+        self.queue.push(Event {
+            at,
+            seq: self.seq,
+            run: Box::new(f),
+        });
+    }
+
+    /// Schedule at an absolute time (>= now).
+    pub fn schedule_at(&mut self, at: Time, f: impl FnOnce(&mut Engine<W>, &mut W) + 'static) {
+        assert!(at >= self.now, "cannot schedule into the past");
+        self.seq += 1;
+        self.queue.push(Event {
+            at,
+            seq: self.seq,
+            run: Box::new(f),
+        });
+    }
+
+    /// Run until the calendar is empty; returns final time.
+    pub fn run(&mut self, world: &mut W) -> Time {
+        while let Some(ev) = self.queue.pop() {
+            self.now = ev.at;
+            self.executed += 1;
+            (ev.run)(self, world);
+        }
+        self.now
+    }
+
+    /// Run until `deadline` (events after it stay queued).
+    pub fn run_until(&mut self, world: &mut W, deadline: Time) -> Time {
+        while let Some(ev) = self.queue.peek() {
+            if ev.at > deadline {
+                break;
+            }
+            let ev = self.queue.pop().unwrap();
+            self.now = ev.at;
+            self.executed += 1;
+            (ev.run)(self, world);
+        }
+        self.now = self.now.max(deadline.min(self.peek_time().unwrap_or(deadline)));
+        self.now
+    }
+
+    fn peek_time(&self) -> Option<Time> {
+        self.queue.peek().map(|e| e.at)
+    }
+}
+
+impl<W> Default for Engine<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A granted busy interval on a resource.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Interval {
+    pub start: Time,
+    pub end: Time,
+}
+
+impl Interval {
+    pub fn duration(&self) -> Time {
+        self.end - self.start
+    }
+}
+
+/// Exclusive FIFO server: one op at a time, requests queue in arrival order.
+#[derive(Debug, Clone)]
+pub struct Resource {
+    ready: Time,
+    busy: Time,
+    ops: u64,
+}
+
+impl Resource {
+    pub fn new() -> Self {
+        Resource {
+            ready: 0.0,
+            busy: 0.0,
+            ops: 0,
+        }
+    }
+
+    /// Request `dur` seconds of service, arriving at time `at`.
+    pub fn acquire(&mut self, at: Time, dur: Time) -> Interval {
+        assert!(dur >= 0.0);
+        let start = at.max(self.ready);
+        let end = start + dur;
+        self.ready = end;
+        self.busy += dur;
+        self.ops += 1;
+        Interval { start, end }
+    }
+
+    /// Earliest time a new request could start service.
+    pub fn ready_at(&self) -> Time {
+        self.ready
+    }
+
+    /// Total busy seconds granted.
+    pub fn busy_time(&self) -> Time {
+        self.busy
+    }
+
+    /// Utilization over a horizon.
+    pub fn utilization(&self, horizon: Time) -> f64 {
+        if horizon <= 0.0 {
+            0.0
+        } else {
+            (self.busy / horizon).min(1.0)
+        }
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+}
+
+impl Default for Resource {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_run_in_time_order() {
+        let mut eng: Engine<Vec<u32>> = Engine::new();
+        let mut world = Vec::new();
+        eng.schedule(3.0, |_, w: &mut Vec<u32>| w.push(3));
+        eng.schedule(1.0, |_, w| w.push(1));
+        eng.schedule(2.0, |_, w| w.push(2));
+        let end = eng.run(&mut world);
+        assert_eq!(world, vec![1, 2, 3]);
+        assert_eq!(end, 3.0);
+    }
+
+    #[test]
+    fn ties_run_fifo() {
+        let mut eng: Engine<Vec<u32>> = Engine::new();
+        let mut world = Vec::new();
+        for i in 0..10 {
+            eng.schedule(1.0, move |_, w: &mut Vec<u32>| w.push(i));
+        }
+        eng.run(&mut world);
+        assert_eq!(world, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        let mut eng: Engine<Vec<f64>> = Engine::new();
+        let mut world = Vec::new();
+        eng.schedule(1.0, |e, _w: &mut Vec<f64>| {
+            e.schedule(2.0, |e2, w2: &mut Vec<f64>| w2.push(e2.now()));
+        });
+        eng.run(&mut world);
+        assert_eq!(world, vec![3.0]);
+    }
+
+    #[test]
+    fn run_until_stops() {
+        let mut eng: Engine<Vec<u32>> = Engine::new();
+        let mut world = Vec::new();
+        eng.schedule(1.0, |_, w: &mut Vec<u32>| w.push(1));
+        eng.schedule(5.0, |_, w| w.push(5));
+        eng.run_until(&mut world, 2.0);
+        assert_eq!(world, vec![1]);
+        eng.run(&mut world);
+        assert_eq!(world, vec![1, 5]);
+    }
+
+    #[test]
+    fn resource_serializes() {
+        let mut r = Resource::new();
+        let a = r.acquire(0.0, 2.0);
+        let b = r.acquire(1.0, 3.0); // arrives while busy -> queues
+        let c = r.acquire(10.0, 1.0); // arrives idle -> starts immediately
+        assert_eq!((a.start, a.end), (0.0, 2.0));
+        assert_eq!((b.start, b.end), (2.0, 5.0));
+        assert_eq!((c.start, c.end), (10.0, 11.0));
+        assert_eq!(r.busy_time(), 6.0);
+        assert_eq!(r.ops(), 3);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let mut r = Resource::new();
+        r.acquire(0.0, 5.0);
+        assert!((r.utilization(10.0) - 0.5).abs() < 1e-12);
+        assert_eq!(r.utilization(0.0), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_delay_panics() {
+        let mut eng: Engine<()> = Engine::new();
+        eng.schedule(-1.0, |_, _| {});
+    }
+}

@@ -1,0 +1,10 @@
+//! Discrete-event simulation substrate: engine, SSD channel model, and
+//! execution timeline traces.
+
+pub mod engine;
+pub mod ssd;
+pub mod trace;
+
+pub use engine::{Engine, Interval, Resource, Time};
+pub use ssd::SsdModel;
+pub use trace::{Span, SpanKind, Trace};

@@ -1,0 +1,164 @@
+//! SSD offload-channel model (motivates Fig. 2b).
+//!
+//! Jetson-class NVMe exhibits stable sequential reads but slower and
+//! *jittery* writes (SLC-cache exhaustion, FTL garbage collection). The
+//! paper's Fig. 2b observation — model-shard offload (pure reads of a fixed
+//! size) eventually beats KV-cache offload (growing, mixed read+write) —
+//! falls out of exactly these two asymmetries.
+
+use crate::sim::engine::{Interval, Resource, Time};
+use crate::util::rng::Rng;
+
+/// A device's SSD channel: one queue shared by reads and writes.
+#[derive(Debug, Clone)]
+pub struct SsdModel {
+    read_bps: f64,
+    write_bps: f64,
+    channel: Resource,
+    rng: Rng,
+    /// Fixed per-op submission/completion overhead.
+    op_latency: Time,
+    /// Probability a write hits an FTL stall.
+    write_stall_p: f64,
+    /// Multiplier applied to a stalled write.
+    write_stall_factor: f64,
+}
+
+impl SsdModel {
+    pub fn new(read_bps: f64, write_bps: f64, seed: u64) -> Self {
+        assert!(read_bps > 0.0 && write_bps > 0.0);
+        SsdModel {
+            read_bps,
+            write_bps,
+            channel: Resource::new(),
+            rng: Rng::new(seed),
+            op_latency: 80e-6,
+            write_stall_p: 0.04,
+            write_stall_factor: 6.0,
+        }
+    }
+
+    /// Pure service time of a read (no queueing).
+    pub fn read_service(&self, bytes: u64) -> Time {
+        self.op_latency + bytes as f64 / self.read_bps
+    }
+
+    /// Expected (jitter-free) service time of a write.
+    pub fn write_service_nominal(&self, bytes: u64) -> Time {
+        self.op_latency + bytes as f64 / self.write_bps
+    }
+
+    /// Enqueue a read arriving at `at`; returns the granted interval.
+    /// Reads are deterministic — model shards live at fixed SSD offsets
+    /// (paper §III: "model slices are fixed in SSD ... more stable").
+    pub fn read(&mut self, at: Time, bytes: u64) -> Interval {
+        let dur = self.read_service(bytes);
+        self.channel.acquire(at, dur)
+    }
+
+    /// Enqueue a write arriving at `at`. Writes carry multiplicative jitter
+    /// plus occasional long stalls (paper §III: "high-overhead write
+    /// operations", "more unstable write latency").
+    pub fn write(&mut self, at: Time, bytes: u64) -> Interval {
+        let mut dur = self.write_service_nominal(bytes);
+        // Log-normal-ish multiplicative jitter, mean ~1.15.
+        let jitter = (0.3 * self.rng.normal()).exp();
+        dur *= jitter.clamp(0.5, 4.0);
+        if self.rng.chance(self.write_stall_p) {
+            dur *= self.write_stall_factor;
+        }
+        self.channel.acquire(at, dur)
+    }
+
+    /// Earliest time a new op could start.
+    pub fn ready_at(&self) -> Time {
+        self.channel.ready_at()
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.channel.ops()
+    }
+
+    pub fn busy_time(&self) -> Time {
+        self.channel.busy_time()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MIB;
+
+    fn ssd() -> SsdModel {
+        SsdModel::new(2e9, 0.5e9, 42)
+    }
+
+    #[test]
+    fn read_time_scales_with_bytes() {
+        let s = ssd();
+        let small = s.read_service(10 * MIB);
+        let big = s.read_service(100 * MIB);
+        assert!(big > 9.0 * small && big < 11.0 * small);
+    }
+
+    #[test]
+    fn reads_are_deterministic() {
+        let mut a = ssd();
+        let mut b = ssd();
+        for i in 0..50 {
+            let t = i as f64;
+            assert_eq!(a.read(t, 64 * MIB), b.read(t, 64 * MIB));
+        }
+    }
+
+    #[test]
+    fn writes_jitter_but_reads_do_not() {
+        let mut s = ssd();
+        let reads: Vec<f64> = (0..20)
+            .map(|i| s.read(1000.0 + i as f64 * 100.0, 32 * MIB).duration())
+            .collect();
+        assert!(reads.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-12));
+
+        let writes: Vec<f64> = (0..20)
+            .map(|i| s.write(10_000.0 + i as f64 * 100.0, 32 * MIB).duration())
+            .collect();
+        assert!(writes.windows(2).any(|w| (w[0] - w[1]).abs() > 1e-9));
+    }
+
+    #[test]
+    fn writes_slower_on_average_than_reads() {
+        let mut s = ssd();
+        let n = 200;
+        let read_mean: f64 = (0..n)
+            .map(|i| s.read(1e6 + i as f64, 32 * MIB).duration())
+            .sum::<f64>()
+            / n as f64;
+        let write_mean: f64 = (0..n)
+            .map(|i| s.write(2e6 + i as f64 * 10.0, 32 * MIB).duration())
+            .sum::<f64>()
+            / n as f64;
+        assert!(write_mean > 2.0 * read_mean);
+    }
+
+    #[test]
+    fn channel_queues_mixed_ops() {
+        let mut s = ssd();
+        let r1 = s.read(0.0, 100 * MIB);
+        let w1 = s.write(0.0, 10 * MIB);
+        assert!(w1.start >= r1.end, "write must queue behind read");
+    }
+
+    #[test]
+    fn stalls_occur_at_expected_rate() {
+        let mut s = ssd();
+        let nominal = s.write_service_nominal(8 * MIB);
+        let n = 2000;
+        let stalled = (0..n)
+            .filter(|i| {
+                s.write(1e9 + *i as f64 * 1e3, 8 * MIB).duration() > 3.0 * nominal
+            })
+            .count();
+        let rate = stalled as f64 / n as f64;
+        assert!((0.01..0.10).contains(&rate), "stall rate {rate}");
+    }
+}

@@ -1,0 +1,188 @@
+//! Execution timeline traces (Gantt charts) — the data behind the paper's
+//! schedule figures (Figs 3, 4, 6, 7, 8). Executors emit [`Span`]s; the
+//! renderer prints an ASCII Gantt per device.
+
+use crate::sim::engine::Time;
+
+/// What a device lane was doing during a span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Forward computation of (micro-batch, layer range).
+    Compute,
+    /// Loading offloaded weights from SSD.
+    Load,
+    /// Writing to SSD (KV offload or first-time layer eviction).
+    Store,
+    /// Activation send/receive on the network.
+    Comm,
+    /// KV-cache transfer to/from a peer (Alg. 2).
+    KvTransfer,
+    /// Blocked waiting (uncovered load / missing input).
+    Stall,
+}
+
+impl SpanKind {
+    pub fn glyph(self) -> char {
+        match self {
+            SpanKind::Compute => '#',
+            SpanKind::Load => 'L',
+            SpanKind::Store => 'S',
+            SpanKind::Comm => '~',
+            SpanKind::KvTransfer => 'K',
+            SpanKind::Stall => '.',
+        }
+    }
+}
+
+/// One busy interval on one device lane.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub device: usize,
+    pub kind: SpanKind,
+    pub label: String,
+    pub start: Time,
+    pub end: Time,
+}
+
+/// Collector for executor timelines.
+#[derive(Debug, Default, Clone)]
+pub struct Trace {
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace { spans: Vec::new() }
+    }
+
+    pub fn push(&mut self, device: usize, kind: SpanKind, label: impl Into<String>, start: Time, end: Time) {
+        debug_assert!(end >= start, "span ends before it starts");
+        self.spans.push(Span {
+            device,
+            kind,
+            label: label.into(),
+            start,
+            end,
+        });
+    }
+
+    pub fn end_time(&self) -> Time {
+        self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
+    }
+
+    /// Total busy time of `device` in spans of `kind`.
+    pub fn busy(&self, device: usize, kind: SpanKind) -> Time {
+        self.spans
+            .iter()
+            .filter(|s| s.device == device && s.kind == kind)
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Loading time on `device` NOT overlapped by its own compute — the
+    /// empirical counterpart of the cost model's `T_uncover` term.
+    pub fn uncovered_load(&self, device: usize) -> Time {
+        let loads: Vec<(Time, Time)> = self
+            .spans
+            .iter()
+            .filter(|s| s.device == device && s.kind == SpanKind::Load)
+            .map(|s| (s.start, s.end))
+            .collect();
+        let computes: Vec<(Time, Time)> = self
+            .spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::Compute)
+            .map(|s| (s.start, s.end))
+            .collect();
+        let mut uncovered = 0.0;
+        for (ls, le) in loads {
+            // Subtract the portion of [ls, le] covered by any compute span
+            // anywhere in the pipeline (loads overlap with *system* work).
+            let mut covered = 0.0;
+            for &(cs, ce) in &computes {
+                let lo = ls.max(cs);
+                let hi = le.min(ce);
+                if hi > lo {
+                    covered += hi - lo;
+                }
+            }
+            uncovered += ((le - ls) - covered).max(0.0);
+        }
+        uncovered
+    }
+
+    /// Render an ASCII Gantt chart with `width` columns.
+    pub fn render(&self, devices: usize, width: usize) -> String {
+        let horizon = self.end_time().max(1e-9);
+        let scale = width as f64 / horizon;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "timeline 0 .. {:.1} ms  ('#' compute, 'L' load, 'S' store, '~' comm, 'K' kv-transfer)\n",
+            horizon * 1e3
+        ));
+        for dev in 0..devices {
+            let mut lane = vec![' '; width];
+            for s in self.spans.iter().filter(|s| s.device == dev) {
+                let a = ((s.start * scale) as usize).min(width - 1);
+                let b = ((s.end * scale).ceil() as usize).clamp(a + 1, width);
+                for c in lane.iter_mut().take(b).skip(a) {
+                    // Compute wins visual conflicts; stalls lose.
+                    let g = s.kind.glyph();
+                    if *c == ' ' || *c == '.' || g == '#' {
+                        *c = g;
+                    }
+                }
+            }
+            out.push_str(&format!("dev{dev} |{}|\n", lane.iter().collect::<String>()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_sums_by_kind() {
+        let mut t = Trace::new();
+        t.push(0, SpanKind::Compute, "a", 0.0, 1.0);
+        t.push(0, SpanKind::Compute, "b", 2.0, 3.0);
+        t.push(0, SpanKind::Load, "l", 1.0, 2.0);
+        t.push(1, SpanKind::Compute, "c", 0.0, 5.0);
+        assert_eq!(t.busy(0, SpanKind::Compute), 2.0);
+        assert_eq!(t.busy(0, SpanKind::Load), 1.0);
+        assert_eq!(t.busy(1, SpanKind::Compute), 5.0);
+        assert_eq!(t.end_time(), 5.0);
+    }
+
+    #[test]
+    fn uncovered_load_subtracts_any_compute() {
+        let mut t = Trace::new();
+        // Load on dev0 from 0..4; dev1 computes 1..2 and dev0 computes 3..4.
+        t.push(0, SpanKind::Load, "l", 0.0, 4.0);
+        t.push(1, SpanKind::Compute, "c1", 1.0, 2.0);
+        t.push(0, SpanKind::Compute, "c0", 3.0, 4.0);
+        assert!((t.uncovered_load(0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fully_covered_load_is_zero() {
+        let mut t = Trace::new();
+        t.push(0, SpanKind::Load, "l", 1.0, 2.0);
+        t.push(1, SpanKind::Compute, "c", 0.0, 3.0);
+        assert_eq!(t.uncovered_load(0), 0.0);
+    }
+
+    #[test]
+    fn render_shows_lanes() {
+        let mut t = Trace::new();
+        t.push(0, SpanKind::Compute, "a", 0.0, 0.5);
+        t.push(1, SpanKind::Load, "l", 0.5, 1.0);
+        let s = t.render(2, 40);
+        assert!(s.contains("dev0"));
+        assert!(s.contains("dev1"));
+        assert!(s.contains('#'));
+        assert!(s.contains('L'));
+    }
+}

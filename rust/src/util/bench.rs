@@ -1,0 +1,123 @@
+//! Bench harness substrate (`criterion` is unavailable offline).
+//!
+//! Benches are `harness = false` binaries: they build a [`Bench`], register
+//! timed closures and *table rows* (the paper-figure regenerators print the
+//! same rows/series the paper reports), and call [`Bench::finish`].
+
+use std::time::Instant;
+
+use super::stats::{summarize, Summary};
+
+/// A registered measurement.
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+}
+
+/// Collector for one bench binary.
+pub struct Bench {
+    title: String,
+    measurements: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Self {
+        println!("\n=== bench: {title} ===");
+        Bench {
+            title: title.to_string(),
+            measurements: Vec::new(),
+        }
+    }
+
+    /// Time `f` for `iters` iterations after `warmup` warmup runs; returns
+    /// per-iteration seconds and records the summary.
+    pub fn time(&mut self, name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Summary {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = summarize(&samples);
+        println!(
+            "  {name:40} mean {:>12}  p50 {:>12}  p99 {:>12}  (n={})",
+            fmt_secs(s.mean),
+            fmt_secs(s.p50),
+            fmt_secs(s.p99),
+            s.n
+        );
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            summary: s.clone(),
+        });
+        s
+    }
+
+    /// Print a labelled table section (paper figure/table rows).
+    pub fn section(&self, heading: &str) {
+        println!("\n-- {heading} --");
+    }
+
+    /// Print one result row.
+    pub fn row(&self, label: &str, value: &str) {
+        println!("  {label:58} {value}");
+    }
+
+    pub fn finish(self) {
+        println!("=== bench {} done ({} timed measurements) ===", self.title, self.measurements.len());
+    }
+}
+
+/// Human-format a duration in seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Human-format milliseconds-per-token with OOM/OOT handling.
+pub fn fmt_ms_tok(v: Option<f64>, oot_limit_ms: f64) -> String {
+    match v {
+        None => "OOM".to_string(),
+        Some(ms) if ms > oot_limit_ms => format!("OOT (>{oot_limit_ms:.0} ms/tok)"),
+        Some(ms) => format!("{ms:9.1} ms/tok"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert_eq!(fmt_secs(0.0025), "2.500 ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.500 us");
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn fmt_ms_tok_states() {
+        assert_eq!(fmt_ms_tok(None, 100.0), "OOM");
+        assert!(fmt_ms_tok(Some(150.0), 100.0).starts_with("OOT"));
+        assert!(fmt_ms_tok(Some(50.0), 100.0).contains("50.0"));
+    }
+
+    #[test]
+    fn time_records() {
+        let mut b = Bench::new("self-test");
+        let s = b.time("noop", 1, 5, || {});
+        assert_eq!(s.n, 5);
+        assert_eq!(b.measurements.len(), 1);
+        b.finish();
+    }
+}

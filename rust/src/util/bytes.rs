@@ -1,0 +1,72 @@
+//! Byte-size arithmetic and formatting helpers used throughout the cost
+//! model (everything memory-related is `u64` bytes; bandwidths are
+//! `f64` bytes/second).
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+
+/// Megabits/s -> bytes/s (network bandwidths in the paper are Mbps).
+pub fn mbps(v: f64) -> f64 {
+    v * 1e6 / 8.0
+}
+
+/// Gibibytes -> bytes.
+pub fn gib(v: f64) -> u64 {
+    (v * GIB as f64) as u64
+}
+
+/// Mebibytes -> bytes.
+pub fn mib(v: f64) -> u64 {
+    (v * MIB as f64) as u64
+}
+
+/// Bytes / (bytes/s) -> seconds; panics on non-positive bandwidth.
+pub fn transfer_secs(bytes: u64, bytes_per_sec: f64) -> f64 {
+    assert!(bytes_per_sec > 0.0, "bandwidth must be positive");
+    bytes as f64 / bytes_per_sec
+}
+
+/// Human-format a byte count.
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= GIB {
+        format!("{:.2} GiB", b as f64 / GIB as f64)
+    } else if b >= MIB {
+        format!("{:.2} MiB", b as f64 / MIB as f64)
+    } else if b >= KIB {
+        format!("{:.2} KiB", b as f64 / KIB as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mbps_conversion() {
+        // 200 Mbps = 25 MB/s.
+        assert!((mbps(200.0) - 25e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn transfer_time() {
+        // 25 MB over 25 MB/s = 1s.
+        assert!((transfer_secs(25_000_000, mbps(200.0)) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2 * KIB), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * MIB), "3.00 MiB");
+        assert_eq!(fmt_bytes(64 * GIB), "64.00 GiB");
+    }
+
+    #[test]
+    fn gib_mib() {
+        assert_eq!(gib(1.0), GIB);
+        assert_eq!(mib(1.5), MIB + MIB / 2);
+    }
+}

@@ -1,0 +1,246 @@
+//! Tiny CLI argument parser substrate (`clap` is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Each binary declares its options up front so `--help` is generated.
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative CLI parser.
+#[derive(Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+        }
+    }
+
+    /// Declare a `--key <value>` option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required `--key <value>` option (no default).
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--flag`.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let default = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{left:28} {}{default}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse a raw argv slice (without the program name).
+    pub fn parse_from(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+            if o.is_flag {
+                args.flags.insert(o.name.clone(), false);
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    args.flags.insert(name, true);
+                } else {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{name} needs a value"))?
+                            .clone(),
+                    };
+                    args.values.insert(name, val);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        for o in &self.opts {
+            if !o.is_flag && !args.values.contains_key(&o.name) {
+                return Err(format!("missing required option --{}\n\n{}", o.name, self.usage()));
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()`; prints usage and exits on error/--help.
+    pub fn parse(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&argv) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a number"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was not declared"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("steps", "10", "steps")
+            .opt("model", "tiny", "model name")
+            .flag("verbose", "chatty")
+            .req("out", "output path")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, String> {
+        cli().parse_from(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["--out", "x.json"]).unwrap();
+        assert_eq!(a.get_usize("steps"), 10);
+        assert_eq!(a.get("model"), "tiny");
+        assert!(!a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn explicit_values() {
+        let a = parse(&["--steps", "32", "--out=o", "--verbose", "pos1"]).unwrap();
+        assert_eq!(a.get_usize("steps"), 32);
+        assert_eq!(a.get("out"), "o");
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(parse(&[]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_fails() {
+        assert!(parse(&["--out", "x", "--nope", "1"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_fails() {
+        assert!(parse(&["--out", "x", "--verbose=1"]).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = parse(&["--help"]).unwrap_err();
+        assert!(err.contains("--steps"));
+        assert!(err.contains("output path"));
+    }
+}

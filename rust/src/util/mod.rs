@@ -1,0 +1,15 @@
+//! Offline-built substrates: RNG, stats, JSON, TOML-subset config, CLI,
+//! property testing, bench harness, and byte/bandwidth helpers.
+//!
+//! The crate registry is unavailable in this environment, so the usual
+//! ecosystem crates (`rand`, `serde`, `clap`, `criterion`, `proptest`) are
+//! replaced by these small, fully-tested implementations. See DESIGN.md.
+
+pub mod bench;
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod toml;

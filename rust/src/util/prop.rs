@@ -1,0 +1,305 @@
+//! Mini property-based testing substrate (`proptest` is unavailable offline).
+//!
+//! A property runs many times against values drawn from a [`Gen`]; on
+//! failure the framework greedily shrinks the failing case (halving
+//! integers, shortening vectors) and reports the minimal counterexample
+//! together with the reproducing seed.
+
+use super::rng::Rng;
+
+/// A generator of values of type `T` plus a shrinker.
+pub struct Gen<T> {
+    gen: Box<dyn Fn(&mut Rng) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        gen: impl Fn(&mut Rng) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Gen {
+            gen: Box::new(gen),
+            shrink: Box::new(shrink),
+        }
+    }
+
+    /// Generator with no shrinking.
+    pub fn plain(gen: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Gen::new(gen, |_| Vec::new())
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.gen)(rng)
+    }
+
+    pub fn shrinks(&self, v: &T) -> Vec<T> {
+        (self.shrink)(v)
+    }
+
+    /// Map the generated value (loses shrinking of the mapped domain).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::plain(move |rng| f((self.gen)(rng)))
+    }
+}
+
+/// usize in [lo, hi], shrinking toward lo.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(lo <= hi);
+    Gen::new(
+        move |rng| rng.range(lo, hi + 1),
+        move |&v| {
+            let mut out = Vec::new();
+            if v > lo {
+                out.push(lo);
+                out.push(lo + (v - lo) / 2);
+                out.push(v - 1);
+            }
+            out.dedup();
+            out
+        },
+    )
+}
+
+/// f64 in [lo, hi), shrinking toward lo.
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(
+        move |rng| rng.range_f64(lo, hi),
+        move |&v| {
+            if v > lo + 1e-9 {
+                vec![lo, lo + (v - lo) / 2.0]
+            } else {
+                Vec::new()
+            }
+        },
+    )
+}
+
+/// Vec of `inner` with length in [min_len, max_len]; shrinks by dropping
+/// elements and shrinking individual elements.
+pub fn vec_of<T: Clone + 'static>(
+    inner: Gen<T>,
+    min_len: usize,
+    max_len: usize,
+) -> Gen<Vec<T>> {
+    assert!(min_len <= max_len);
+    let inner = std::rc::Rc::new(inner);
+    let g = inner.clone();
+    Gen::new(
+        move |rng| {
+            let len = rng.range(min_len, max_len + 1);
+            (0..len).map(|_| g.sample(rng)).collect()
+        },
+        move |v: &Vec<T>| {
+            let mut out = Vec::new();
+            if v.len() > min_len {
+                // Drop one element at a few positions.
+                for i in [0, v.len() / 2, v.len() - 1] {
+                    let mut shorter = v.clone();
+                    shorter.remove(i.min(shorter.len() - 1));
+                    out.push(shorter);
+                }
+            }
+            // Shrink each element individually (first few positions).
+            for i in 0..v.len().min(4) {
+                for cand in inner.shrinks(&v[i]) {
+                    let mut copy = v.clone();
+                    copy[i] = cand;
+                    out.push(copy);
+                }
+            }
+            out
+        },
+    )
+}
+
+/// Pair generator.
+pub fn pair<A: Clone + 'static, B: Clone + 'static>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+    let a = std::rc::Rc::new(a);
+    let b = std::rc::Rc::new(b);
+    let (ga, gb) = (a.clone(), b.clone());
+    Gen::new(
+        move |rng| (ga.sample(rng), gb.sample(rng)),
+        move |(x, y)| {
+            let mut out: Vec<(A, B)> = Vec::new();
+            for xs in a.shrinks(x) {
+                out.push((xs, y.clone()));
+            }
+            for ys in b.shrinks(y) {
+                out.push((x.clone(), ys));
+            }
+            out
+        },
+    )
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Pass { cases: usize },
+    Fail { minimal: T, seed: u64, message: String },
+}
+
+/// Configuration for [`check`].
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 100,
+            seed: 0x11E5_11E5,
+            max_shrink_steps: 500,
+        }
+    }
+}
+
+/// Run `prop` against `cases` samples; shrink on failure.
+/// `prop` returns Ok(()) or Err(description).
+pub fn check<T: Clone + std::fmt::Debug + 'static>(
+    cfg: &Config,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> PropResult<T> {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let value = gen.sample(&mut rng);
+        if let Err(first_msg) = prop(&value) {
+            // Greedy shrink.
+            let mut best = value;
+            let mut best_msg = first_msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in gen.shrinks(&best) {
+                    steps += 1;
+                    if let Err(msg) = prop(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            let _ = case;
+            return PropResult::Fail {
+                minimal: best,
+                seed: cfg.seed,
+                message: best_msg,
+            };
+        }
+    }
+    PropResult::Pass { cases: cfg.cases }
+}
+
+/// Assert helper: panics with the minimal counterexample on failure.
+pub fn assert_prop<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let cfg = Config::default();
+    match check(&cfg, gen, prop) {
+        PropResult::Pass { .. } => {}
+        PropResult::Fail {
+            minimal,
+            seed,
+            message,
+        } => panic!(
+            "property '{name}' failed (seed {seed}):\n  minimal counterexample: {minimal:?}\n  {message}"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let gen = usize_in(0, 100);
+        match check(&Config::default(), &gen, |&x| {
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        }) {
+            PropResult::Pass { cases } => assert_eq!(cases, 100),
+            PropResult::Fail { .. } => panic!("should pass"),
+        }
+    }
+
+    #[test]
+    fn shrinks_to_minimal_int() {
+        let gen = usize_in(0, 1000);
+        match check(&Config::default(), &gen, |&x| {
+            if x < 37 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 37"))
+            }
+        }) {
+            PropResult::Fail { minimal, .. } => assert_eq!(minimal, 37),
+            PropResult::Pass { .. } => panic!("should fail"),
+        }
+    }
+
+    #[test]
+    fn shrinks_vec_length() {
+        let gen = vec_of(usize_in(0, 9), 0, 50);
+        match check(&Config::default(), &gen, |v: &Vec<usize>| {
+            if v.len() < 3 {
+                Ok(())
+            } else {
+                Err("too long".into())
+            }
+        }) {
+            PropResult::Fail { minimal, .. } => assert_eq!(minimal.len(), 3),
+            PropResult::Pass { .. } => panic!("should fail"),
+        }
+    }
+
+    #[test]
+    fn pair_shrinks_both_sides() {
+        let gen = pair(usize_in(0, 100), usize_in(0, 100));
+        match check(&Config::default(), &gen, |&(a, b)| {
+            if a + b < 20 {
+                Ok(())
+            } else {
+                Err("sum too big".into())
+            }
+        }) {
+            PropResult::Fail { minimal: (a, b), .. } => {
+                assert_eq!(a + b, 20, "minimal should sit on the boundary");
+            }
+            PropResult::Pass { .. } => panic!("should fail"),
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = Config {
+            cases: 50,
+            seed: 99,
+            max_shrink_steps: 100,
+        };
+        let gen = usize_in(0, 10_000);
+        let run = || match check(&cfg, &gen, |&x| {
+            if x % 97 != 13 {
+                Ok(())
+            } else {
+                Err("hit".into())
+            }
+        }) {
+            PropResult::Fail { minimal, .. } => Some(minimal),
+            PropResult::Pass { .. } => None,
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,321 @@
+//! TOML-subset config parser substrate (the `toml` crate is unavailable
+//! offline). Supports what LIME config files need: `[section]` and
+//! `[[array-of-tables]]` headers, `key = value` with strings, integers,
+//! floats, booleans, and homogeneous inline arrays, plus `#` comments.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_i64().and_then(|n| u64::try_from(n).ok())
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(n) => Some(*n as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A `[section]` (or one element of a `[[section]]` list): flat key/value map.
+pub type Table = BTreeMap<String, Value>;
+
+/// Parsed document: top-level keys live in `root`; `[s]` in `tables`;
+/// `[[s]]` in `table_arrays`.
+#[derive(Debug, Default, Clone)]
+pub struct Document {
+    pub root: Table,
+    pub tables: BTreeMap<String, Table>,
+    pub table_arrays: BTreeMap<String, Vec<Table>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+enum Section {
+    Root,
+    Table(String),
+    ArrayElem(String),
+}
+
+impl Document {
+    pub fn parse(src: &str) -> Result<Document, TomlError> {
+        let mut doc = Document::default();
+        let mut section = Section::Root;
+
+        for (idx, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            let lineno = idx + 1;
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                let name = name.trim().to_string();
+                doc.table_arrays.entry(name.clone()).or_default().push(Table::new());
+                section = Section::ArrayElem(name);
+            } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim().to_string();
+                doc.tables.entry(name.clone()).or_default();
+                section = Section::Table(name);
+            } else if let Some(eq) = find_eq(line) {
+                let key = line[..eq].trim().to_string();
+                if key.is_empty() {
+                    return Err(TomlError { line: lineno, msg: "empty key".into() });
+                }
+                let value = parse_value(line[eq + 1..].trim(), lineno)?;
+                let table = match &section {
+                    Section::Root => &mut doc.root,
+                    Section::Table(name) => doc.tables.get_mut(name).unwrap(),
+                    Section::ArrayElem(name) => {
+                        doc.table_arrays.get_mut(name).unwrap().last_mut().unwrap()
+                    }
+                };
+                table.insert(key, value);
+            } else {
+                return Err(TomlError {
+                    line: lineno,
+                    msg: format!("cannot parse line: {line:?}"),
+                });
+            }
+        }
+        Ok(doc)
+    }
+
+    /// `doc.get("section", "key")`; section "" means root.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        if section.is_empty() {
+            self.root.get(key)
+        } else {
+            self.tables.get(section)?.get(key)
+        }
+    }
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Find the key/value `=`, respecting string literals.
+fn find_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, TomlError> {
+    let err = |msg: String| TomlError { line, msg };
+    if s.is_empty() {
+        return Err(err("empty value".into()));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        return Ok(Value::Str(unescape(inner)));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array".into()))?
+            .trim();
+        let mut items = Vec::new();
+        if !inner.is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim(), line)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(n) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(n));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(format!("cannot parse value: {s:?}")))
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Split a flat array body on commas outside string literals.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# cluster config
+name = "e3"
+seed = 42
+bandwidth_mbps = 200.0   # shaped like tc
+
+[model]
+preset = "llama3.3-70b"
+layers = 80
+
+[[device]]
+kind = "agx-orin-64"
+mem_gb = 64
+
+[[device]]
+kind = "xavier-nx-16"
+mem_gb = 16
+disabled = false
+tags = ["edge", "slow"]
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("e3"));
+        assert_eq!(doc.get("", "seed").unwrap().as_i64(), Some(42));
+        assert_eq!(doc.get("", "bandwidth_mbps").unwrap().as_f64(), Some(200.0));
+        assert_eq!(doc.get("model", "layers").unwrap().as_i64(), Some(80));
+        let devices = &doc.table_arrays["device"];
+        assert_eq!(devices.len(), 2);
+        assert_eq!(devices[1]["mem_gb"].as_i64(), Some(16));
+        assert_eq!(devices[1]["disabled"].as_bool(), Some(false));
+        let tags = devices[1]["tags"].as_arr().unwrap();
+        assert_eq!(tags[0].as_str(), Some("edge"));
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let doc = Document::parse("s = \"a # not comment\" # real\n").unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str(), Some("a # not comment"));
+    }
+
+    #[test]
+    fn int_float_distinction() {
+        let doc = Document::parse("a = 3\nb = 3.5\nc = 1_000\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_i64(), Some(3));
+        assert_eq!(doc.get("", "a").unwrap().as_f64(), Some(3.0));
+        assert_eq!(doc.get("", "b").unwrap().as_f64(), Some(3.5));
+        assert_eq!(doc.get("", "b").unwrap().as_i64(), None);
+        assert_eq!(doc.get("", "c").unwrap().as_i64(), Some(1000));
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = Document::parse("a = []\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn escaped_string() {
+        let doc = Document::parse(r#"s = "line\nnext""#).unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str(), Some("line\nnext"));
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = Document::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn negative_numbers() {
+        let doc = Document::parse("a = -5\nb = -0.25\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_i64(), Some(-5));
+        assert_eq!(doc.get("", "b").unwrap().as_f64(), Some(-0.25));
+        assert_eq!(doc.get("", "a").unwrap().as_u64(), None);
+    }
+}

@@ -1,0 +1,71 @@
+//! Workloads: the paper's two request patterns (§V-A) plus arrival-process
+//! and synthetic-corpus generators for the real serving path.
+
+pub mod requests;
+
+pub use requests::{poisson_arrivals, RequestGen};
+
+use crate::cluster::Cluster;
+use crate::util::rng::Rng;
+
+/// The paper's two edge request patterns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    /// Individual requests arrive occasionally as single inputs
+    /// (micro-batch size 1, one micro-batch in flight).
+    Sporadic,
+    /// Multiple inference requests submitted simultaneously
+    /// (micro-batch size 1, |D| micro-batches in flight).
+    Bursty,
+}
+
+impl Pattern {
+    /// Micro-batches in flight for this pattern on `cluster`.
+    pub fn micro_batches(&self, cluster: &Cluster) -> usize {
+        match self {
+            Pattern::Sporadic => 1,
+            Pattern::Bursty => cluster.len(),
+        }
+    }
+
+    /// OOT (out-of-time) classification threshold, ms/token (§V-C).
+    pub fn oot_limit_ms(&self) -> f64 {
+        match self {
+            Pattern::Sporadic => 40_000.0,
+            Pattern::Bursty => 15_000.0,
+        }
+    }
+}
+
+/// A synthetic token prompt (no HF tokenizer offline — see DESIGN.md).
+pub fn synthetic_prompt(seed: u64, len: usize, vocab: usize) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.below(vocab as u64) as i32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_micro_batches() {
+        let c = Cluster::env_e3();
+        assert_eq!(Pattern::Sporadic.micro_batches(&c), 1);
+        assert_eq!(Pattern::Bursty.micro_batches(&c), 4);
+    }
+
+    #[test]
+    fn oot_limits_match_paper() {
+        assert_eq!(Pattern::Sporadic.oot_limit_ms(), 40_000.0);
+        assert_eq!(Pattern::Bursty.oot_limit_ms(), 15_000.0);
+    }
+
+    #[test]
+    fn synthetic_prompt_in_vocab() {
+        let p = synthetic_prompt(1, 64, 256);
+        assert_eq!(p.len(), 64);
+        assert!(p.iter().all(|&t| (0..256).contains(&t)));
+        assert_eq!(p, synthetic_prompt(1, 64, 256));
+        assert_ne!(p, synthetic_prompt(2, 64, 256));
+    }
+}

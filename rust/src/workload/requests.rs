@@ -1,0 +1,107 @@
+//! Request arrival generators for the serving engine.
+
+use crate::util::rng::Rng;
+
+/// One inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time in seconds from workload start.
+    pub arrival: f64,
+    /// Prompt token ids.
+    pub prompt: Vec<i32>,
+    /// Decode steps requested.
+    pub steps: usize,
+}
+
+/// Poisson arrival times with rate `lambda` (req/s) for `count` requests.
+pub fn poisson_arrivals(seed: u64, lambda: f64, count: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..count)
+        .map(|_| {
+            t += rng.exponential(lambda);
+            t
+        })
+        .collect()
+}
+
+/// Deterministic request stream generator.
+#[derive(Debug)]
+pub struct RequestGen {
+    rng: Rng,
+    next_id: u64,
+    vocab: usize,
+    prompt_len: usize,
+    steps: usize,
+}
+
+impl RequestGen {
+    pub fn new(seed: u64, vocab: usize, prompt_len: usize, steps: usize) -> Self {
+        RequestGen {
+            rng: Rng::new(seed),
+            next_id: 0,
+            vocab,
+            prompt_len,
+            steps,
+        }
+    }
+
+    /// Sporadic stream: `count` requests with Poisson arrivals.
+    pub fn sporadic(&mut self, count: usize, lambda: f64) -> Vec<Request> {
+        let arrivals = poisson_arrivals(self.rng.next_u64(), lambda, count);
+        arrivals.into_iter().map(|a| self.make(a)).collect()
+    }
+
+    /// Bursty stream: `count` requests all arriving at t=0.
+    pub fn bursty(&mut self, count: usize) -> Vec<Request> {
+        (0..count).map(|_| self.make(0.0)).collect()
+    }
+
+    fn make(&mut self, arrival: f64) -> Request {
+        let id = self.next_id;
+        self.next_id += 1;
+        let prompt = (0..self.prompt_len)
+            .map(|_| self.rng.below(self.vocab as u64) as i32)
+            .collect();
+        Request {
+            id,
+            arrival,
+            prompt,
+            steps: self.steps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_increasing() {
+        let a = poisson_arrivals(3, 2.0, 100);
+        assert!(a.windows(2).all(|w| w[1] > w[0]));
+        // Mean inter-arrival ~ 1/lambda.
+        let mean = a.last().unwrap() / 100.0;
+        assert!((mean - 0.5).abs() < 0.15, "mean gap {mean}");
+    }
+
+    #[test]
+    fn bursty_all_at_zero() {
+        let mut g = RequestGen::new(1, 256, 16, 8);
+        let reqs = g.bursty(4);
+        assert_eq!(reqs.len(), 4);
+        assert!(reqs.iter().all(|r| r.arrival == 0.0));
+        // Ids unique, prompts differ.
+        assert_ne!(reqs[0].prompt, reqs[1].prompt);
+        assert_ne!(reqs[0].id, reqs[1].id);
+    }
+
+    #[test]
+    fn sporadic_spaced_out() {
+        let mut g = RequestGen::new(2, 256, 16, 8);
+        let reqs = g.sporadic(5, 0.5);
+        assert!(reqs.windows(2).all(|w| w[1].arrival > w[0].arrival));
+        assert!(reqs.iter().all(|r| r.prompt.len() == 16 && r.steps == 8));
+    }
+}

@@ -1,0 +1,306 @@
+//! Cross-module integration tests: scheduler ↔ cost model ↔ simulator ↔
+//! adaptation, plus property tests on scheduler invariants via the
+//! in-repo `util::prop` framework.
+
+use lime::baselines::{by_name, Outcome};
+use lime::cluster::{Cluster, DeviceSpec};
+use lime::cost;
+use lime::model::ModelSpec;
+use lime::net::BandwidthTrace;
+use lime::pipeline::{run_interleaved, ExecOptions};
+use lime::plan::{plan, PlanOptions};
+use lime::sim::SpanKind;
+use lime::util::bytes::{gib, mbps};
+use lime::util::prop::{assert_prop, pair, usize_in, vec_of, Gen};
+use lime::workload::Pattern;
+
+fn opts() -> PlanOptions {
+    PlanOptions {
+        empirical_tokens: 128,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    }
+}
+
+// ------------------------------------------------------------ end-to-end
+
+#[test]
+fn cost_model_predicts_simulator_within_2x() {
+    // Eq. 1 and the DES implement the same overlap structure: per-token
+    // predictions must agree to within a small factor (the DES adds
+    // queueing and online effects the closed form ignores).
+    for cluster in [Cluster::env_e3(), Cluster::lowmem_setting1()] {
+        let spec = ModelSpec::llama33_70b();
+        let report = plan(&spec, &cluster, &opts()).unwrap();
+        let predicted = report.cost.total();
+        let bw = BandwidthTrace::fixed_mbps(200.0);
+        let sim = run_interleaved(
+            &report.allocation,
+            &cluster,
+            &bw,
+            1,
+            24,
+            &ExecOptions::default(),
+        );
+        let measured = sim.mean_step();
+        let ratio = measured / predicted;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "prediction {predicted:.3}s vs simulation {measured:.3}s (ratio {ratio:.2})"
+        );
+    }
+}
+
+#[test]
+fn uncovered_load_in_trace_matches_cost_model_direction() {
+    // Where Eq. 1 says loads are fully covered, the trace must show little
+    // uncovered load time; where it predicts uncovered time, the trace
+    // must show it.
+    let spec = ModelSpec::llama33_70b();
+    let cluster = Cluster::lowmem_setting2();
+    let report = plan(&spec, &cluster, &opts()).unwrap();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let sim = run_interleaved(&report.allocation, &cluster, &bw, 1, 12, &ExecOptions::default());
+    let uncovered_trace: f64 = (0..cluster.len())
+        .map(|i| sim.trace.uncovered_load(i))
+        .fold(0.0, f64::max);
+    if report.cost.t_uncover > 0.1 {
+        assert!(
+            uncovered_trace > 0.0,
+            "cost model predicts {:.2}s uncovered but trace shows none",
+            report.cost.t_uncover
+        );
+    }
+}
+
+#[test]
+fn all_methods_complete_or_oom_cleanly_everywhere() {
+    // Failure-injection sweep: no method may panic on any (env, model,
+    // pattern, bandwidth) combination — they either run or report OOM.
+    let combos: Vec<(ModelSpec, Cluster)> = vec![
+        (ModelSpec::llama2_13b(), Cluster::env_e1()),
+        (ModelSpec::qwen3_32b(), Cluster::env_e2()),
+        (ModelSpec::llama33_70b(), Cluster::lowmem_setting3()),
+    ];
+    for (spec, cluster) in &combos {
+        for key in [
+            "lime",
+            "pp",
+            "pp-offload",
+            "edgeshard",
+            "galaxy",
+            "tpi-llm",
+            "tpi-llm-offload",
+        ] {
+            let m = by_name(key).unwrap();
+            for pattern in [Pattern::Sporadic, Pattern::Bursty] {
+                for bw in [50.0, 250.0] {
+                    let trace = BandwidthTrace::fixed_mbps(bw);
+                    match m.run(spec, cluster, &trace, pattern, 6) {
+                        Outcome::Ok(r) => {
+                            assert!(r.ms_per_token().is_finite());
+                            assert!(r.ms_per_token() > 0.0);
+                        }
+                        Outcome::Oom(msg) => assert!(!msg.is_empty()),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lime_never_ooms_when_aggregate_memory_suffices() {
+    // LIME's promise: as long as slots + embed fit, it serves the model.
+    let spec = ModelSpec::llama33_70b();
+    for cluster in [
+        Cluster::env_e3(),
+        Cluster::lowmem_setting1(),
+        Cluster::lowmem_setting2(),
+        Cluster::lowmem_setting3(),
+    ] {
+        let m = by_name("lime").unwrap();
+        let trace = BandwidthTrace::fixed_mbps(100.0);
+        let out = m.run(&spec, &cluster, &trace, Pattern::Sporadic, 6);
+        assert!(out.ms_per_token().is_some(), "LIME OOMed on a feasible cluster");
+    }
+}
+
+#[test]
+fn online_adaptation_engages_on_long_runs() {
+    let spec = ModelSpec::llama33_70b();
+    let cluster = Cluster::lowmem_setting1();
+    let report = plan(&spec, &cluster, &opts()).unwrap();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    // 5 micro-batches x 1200 steps: KV far outgrows the 128-token reserve.
+    let sim = run_interleaved(&report.allocation, &cluster, &bw, 5, 1200, &ExecOptions::default());
+    assert!(
+        sim.online_plans_fired > 0 || sim.kv_tokens_transferred > 0,
+        "no adaptation fired: plans={} transfers={}",
+        sim.online_plans_fired,
+        sim.kv_tokens_transferred
+    );
+}
+
+#[test]
+fn trace_spans_are_well_formed() {
+    let spec = ModelSpec::llama33_70b();
+    let cluster = Cluster::lowmem_setting2();
+    let report = plan(&spec, &cluster, &opts()).unwrap();
+    let bw = BandwidthTrace::fixed_mbps(150.0);
+    let sim = run_interleaved(&report.allocation, &cluster, &bw, 2, 8, &ExecOptions::default());
+    for s in &sim.trace.spans {
+        assert!(s.end >= s.start, "span {s:?} ends before start");
+        assert!(s.device < cluster.len());
+    }
+    // Compute must appear on every device that owns layers.
+    for i in 0..cluster.len() {
+        if report.allocation.devices[i].total_layers > 0 {
+            assert!(sim.trace.busy(i, SpanKind::Compute) > 0.0, "device {i} never computed");
+        }
+    }
+}
+
+// --------------------------------------------------------- property tests
+
+#[test]
+fn prop_plans_cover_model_and_fit_memory() {
+    // Random heterogeneous clusters: whenever the scheduler returns a plan
+    // it covers every layer exactly once and satisfies Eq. 1's memory
+    // constraint at the empirical token count.
+    let dev_gen: Gen<usize> = usize_in(0, 2); // index into device presets
+    let cluster_gen = vec_of(dev_gen, 2, 5);
+    let gen = pair(cluster_gen, usize_in(0, 2));
+    assert_prop("plan covers model & fits", &gen, |(devs, model_idx)| {
+        let devices: Vec<DeviceSpec> = devs
+            .iter()
+            .map(|&k| match k {
+                0 => DeviceSpec::xavier_nx_16(),
+                1 => DeviceSpec::agx_orin_32(),
+                _ => DeviceSpec::agx_orin_64(),
+            })
+            .collect();
+        let cluster = Cluster::new(devices);
+        let spec = match model_idx {
+            0 => ModelSpec::llama2_13b(),
+            1 => ModelSpec::qwen3_32b(),
+            _ => ModelSpec::llama33_70b(),
+        };
+        match plan(&spec, &cluster, &opts()) {
+            Err(_) => Ok(()), // OOM is a legal outcome
+            Ok(report) => {
+                if !report.allocation.covers_model() {
+                    return Err(format!(
+                        "layers {} != {}",
+                        report.allocation.layer_sum(),
+                        spec.layers
+                    ));
+                }
+                cost::feasible(&report.allocation, &cluster, 128)
+                    .map_err(|e| format!("infeasible plan: {e}"))
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_memory_limits_monotone_homogeneous() {
+    // On a *homogeneous* cluster, shrinking one device's memory never
+    // improves the planned cost (no compute-rebalancing upside exists —
+    // only more offloading). NB: heterogeneous clusters genuinely violate
+    // this (shrinking a slow device shifts layers to faster ones).
+    let gen = pair(usize_in(2, 30), usize_in(0, 2));
+    assert_prop("mem shrink never helps", &gen, |&(mem_gb, which)| {
+        let spec = ModelSpec::qwen3_32b();
+        let full = Cluster::new(vec![
+            lime::cluster::DeviceSpec::agx_orin_32(),
+            lime::cluster::DeviceSpec::agx_orin_32(),
+            lime::cluster::DeviceSpec::agx_orin_32(),
+        ]);
+        let mut shrunk = full.clone();
+        let idx = which.min(shrunk.len() - 1);
+        shrunk.devices[idx] = shrunk.devices[idx].clone().with_mem_limit(gib(mem_gb as f64));
+        let o = opts();
+        match (plan(&spec, &full, &o), plan(&spec, &shrunk, &o)) {
+            (Ok(a), Ok(b)) => {
+                if b.cost.total() + 1e-9 >= a.cost.total() {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "shrunk cluster cheaper: {:.3} < {:.3}",
+                        b.cost.total(),
+                        a.cost.total()
+                    ))
+                }
+            }
+            (Ok(_), Err(_)) => Ok(()), // shrinking to OOM is legal
+            (Err(_), _) => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn prop_bandwidth_monotone_for_lime() {
+    // More bandwidth never makes LIME slower (same plan, same seed).
+    let gen = usize_in(50, 250);
+    assert_prop("bandwidth monotone", &gen, |&lo_mbps| {
+        let spec = ModelSpec::llama33_70b();
+        let cluster = Cluster::lowmem_setting1();
+        let report = plan(&spec, &cluster, &opts()).unwrap();
+        let lo = run_interleaved(
+            &report.allocation,
+            &cluster,
+            &BandwidthTrace::fixed_mbps(lo_mbps as f64),
+            1,
+            6,
+            &ExecOptions::default(),
+        );
+        let hi = run_interleaved(
+            &report.allocation,
+            &cluster,
+            &BandwidthTrace::fixed_mbps(lo_mbps as f64 + 100.0),
+            1,
+            6,
+            &ExecOptions::default(),
+        );
+        if hi.ms_per_token() <= lo.ms_per_token() * 1.001 {
+            Ok(())
+        } else {
+            Err(format!(
+                "bw {} -> {:.1} ms but bw {} -> {:.1} ms",
+                lo_mbps,
+                lo.ms_per_token(),
+                lo_mbps + 100,
+                hi.ms_per_token()
+            ))
+        }
+    });
+}
+
+#[test]
+fn prop_segment_counts_within_bounds() {
+    // Eq. 1 constraint: 2 <= #Seg <= ceil(|L|/|D|) whenever offload engaged.
+    let gen = usize_in(0, 2);
+    assert_prop("seg bounds", &gen, |&setting| {
+        let spec = ModelSpec::llama33_70b();
+        let cluster = match setting {
+            0 => Cluster::lowmem_setting1(),
+            1 => Cluster::lowmem_setting2(),
+            _ => Cluster::lowmem_setting3(),
+        };
+        let Ok(report) = plan(&spec, &cluster, &opts()) else {
+            return Ok(());
+        };
+        let alloc = &report.allocation;
+        let offloaded: usize = alloc.devices.iter().map(|d| d.offloaded_count()).sum();
+        if offloaded == 0 {
+            return Ok(()); // degenerate plain pipeline is fine
+        }
+        let max = spec.layers.div_ceil(cluster.len()).max(2);
+        if (2..=max).contains(&alloc.seg) {
+            Ok(())
+        } else {
+            Err(format!("seg {} outside 2..={max}", alloc.seg))
+        }
+    });
+}

@@ -1,0 +1,180 @@
+//! Reproduction-shape tests: the qualitative claims of every paper
+//! figure/table, asserted end-to-end through the experiment harness.
+//! Absolute ms/token are testbed-specific; these tests pin down *who wins,
+//! by roughly what factor, and where the failure modes (OOM/OOT) land*.
+
+use lime::experiments;
+use lime::workload::Pattern;
+
+#[test]
+fn fig2a_shape_pp_beats_tp_with_offloading() {
+    // §III / Fig. 2a: PP+offload beats TP+offload at 200 Mbps on every
+    // tested (model, setting) pair — the paper reports 1.2x-1.6x.
+    for (label, tp, pp) in experiments::fig2a(12) {
+        assert!(pp < tp, "{label}: PP {pp:.1} !< TP {tp:.1}");
+    }
+}
+
+#[test]
+fn fig2b_shape_kv_offload_crosses_model_shard() {
+    // §III / Fig. 2b: KV offload starts cheaper per step, but growing,
+    // jittery writes push it above the stable model-shard read.
+    let rows = experiments::fig2b(500);
+    assert!(rows[0].2 < rows[0].1, "KV should start cheaper");
+    let tail = &rows[rows.len() - 50..];
+    let tail_kv: f64 = tail.iter().map(|r| r.2).sum::<f64>() / 50.0;
+    let tail_model: f64 = tail.iter().map(|r| r.1).sum::<f64>() / 50.0;
+    assert!(
+        tail_kv > tail_model,
+        "late KV ({tail_kv:.2} ms) should exceed model-shard ({tail_model:.2} ms)"
+    );
+}
+
+#[test]
+fn fig34_shape_interleaved_hides_loads() {
+    let (trad_s, lime_s, _trad_b, _lime_b) = experiments::fig34_schedules(2);
+    // The traditional schedule must show stalls; both must show loads.
+    assert!(trad_s.contains('L'), "traditional trace shows no loads");
+    assert!(lime_s.contains('L'), "interleaved trace shows no loads");
+}
+
+#[test]
+fn fig78_shape_extreme_segment_counts_lose() {
+    // Figs 7-8: the best #Seg is interior-or-boundary, and the worst
+    // candidate is measurably worse than the best.
+    let rows = experiments::fig78_segments(12);
+    assert!(rows.len() >= 3, "need several feasible segment counts");
+    let best = rows.iter().map(|r| r.1).fold(f64::INFINITY, f64::min);
+    let worst = rows.iter().map(|r| r.1).fold(0.0, f64::max);
+    assert!(
+        worst > best * 1.02,
+        "segment count made no difference: best {best:.1}, worst {worst:.1}"
+    );
+}
+
+#[test]
+fn fig14_shape_lime_wins_e3() {
+    // Fig. 14: on E3/Llama3.3-70B LIME has the lowest latency among
+    // completing methods in every (bandwidth, pattern) column.
+    let cells = experiments::main_comparison("e3", 24);
+    for &bw in &[100.0, 200.0] {
+        for pattern in [Pattern::Sporadic, Pattern::Bursty] {
+            let lime = cells
+                .iter()
+                .find(|c| c.method == "LIME" && c.bandwidth_mbps == bw && c.pattern == pattern)
+                .and_then(|c| c.ms_per_token)
+                .expect("LIME must complete E3");
+            for c in cells
+                .iter()
+                .filter(|c| c.method != "LIME" && c.bandwidth_mbps == bw && c.pattern == pattern)
+            {
+                if let Some(ms) = c.ms_per_token {
+                    assert!(
+                        lime <= ms * 1.001,
+                        "{} @{bw} {:?}: LIME {lime:.1} !<= {ms:.1}",
+                        c.method,
+                        pattern
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fig12_shape_lime_wins_e1() {
+    let cells = experiments::main_comparison("e1", 24);
+    for pattern in [Pattern::Sporadic, Pattern::Bursty] {
+        let lime = cells
+            .iter()
+            .find(|c| c.method == "LIME" && c.bandwidth_mbps == 200.0 && c.pattern == pattern)
+            .and_then(|c| c.ms_per_token)
+            .expect("LIME must complete E1");
+        for c in cells
+            .iter()
+            .filter(|c| c.method != "LIME" && c.bandwidth_mbps == 200.0 && c.pattern == pattern)
+        {
+            if let Some(ms) = c.ms_per_token {
+                assert!(lime <= ms * 1.001, "{}: {lime:.1} !<= {ms:.1}", c.method);
+            }
+        }
+    }
+}
+
+#[test]
+fn fig15_17_shape_failure_modes() {
+    // Figs 15-17: rigid methods OOM in every low-memory setting; LIME
+    // completes everywhere, and TP-with-offload degrades hard relative to
+    // LIME under sporadic requests (the paper's OOT mechanism).
+    for setting in 1..=3 {
+        let cells = experiments::lowmem(setting, 12);
+        for rigid in ["Galaxy", "EdgeShard", "Pipeline parallelism"] {
+            assert!(
+                cells
+                    .iter()
+                    .filter(|c| c.method == rigid)
+                    .all(|c| c.ms_per_token.is_none()),
+                "setting {setting}: {rigid} should OOM"
+            );
+        }
+        let lime_spor = cells
+            .iter()
+            .find(|c| {
+                c.method == "LIME" && c.pattern == Pattern::Sporadic && c.bandwidth_mbps == 200.0
+            })
+            .and_then(|c| c.ms_per_token)
+            .expect("LIME completes");
+        let tpi_spor = cells
+            .iter()
+            .find(|c| {
+                c.method == "TPI-LLM + offloading"
+                    && c.pattern == Pattern::Sporadic
+                    && c.bandwidth_mbps == 200.0
+            })
+            .and_then(|c| c.ms_per_token)
+            .expect("TPI-LLM+offload completes");
+        assert!(
+            tpi_spor > 2.0 * lime_spor,
+            "setting {setting}: TPI-LLM {tpi_spor:.0} should degrade >=2x vs LIME {lime_spor:.0}"
+        );
+    }
+}
+
+#[test]
+fn fig18_shape_lime_fastest_under_varying_bandwidth() {
+    let cells = experiments::fig18(48);
+    for pattern in [Pattern::Sporadic, Pattern::Bursty] {
+        let lime = cells
+            .iter()
+            .find(|c| c.method == "LIME" && c.pattern == pattern)
+            .and_then(|c| c.ms_per_token)
+            .expect("LIME completes fig18");
+        for c in cells.iter().filter(|c| c.method != "LIME" && c.pattern == pattern) {
+            if let Some(ms) = c.ms_per_token {
+                assert!(
+                    lime <= ms * 1.001,
+                    "{} {:?}: LIME {lime:.1} !<= {ms:.1}",
+                    c.method,
+                    pattern
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tab5_shape_component_ordering() {
+    // Table V: removing the planner hurts more than removing KV transfer;
+    // full LIME is fastest (paper: 0.67x/0.69x vs 0.86x/0.87x).
+    let rows = experiments::tab5(2048);
+    let (no_kv_s, _no_kv_b) = (rows[0].1.unwrap(), rows[0].2.unwrap());
+    let (no_pl_s, _no_pl_b) = (rows[1].1.unwrap(), rows[1].2.unwrap());
+    let (lime_s, lime_b) = (rows[2].1.unwrap(), rows[2].2.unwrap());
+    assert!(lime_s <= no_kv_s * 1.005, "LIME {lime_s:.1} vs no-KV {no_kv_s:.1}");
+    assert!(lime_s <= no_pl_s * 1.005, "LIME {lime_s:.1} vs no-planner {no_pl_s:.1}");
+    assert!(
+        no_pl_s >= no_kv_s,
+        "planner ablation ({no_pl_s:.1}) should hurt at least as much as KV ablation ({no_kv_s:.1})"
+    );
+    assert!(lime_b > 0.0);
+}
