@@ -1,12 +1,23 @@
 //! L3 hot-path microbenchmarks: the offline scheduler (Alg. 1), the cost
 //! model, the online planner, and the DES executors. These are the knobs
 //! the §Perf pass tunes.
+//!
+//! The canonical `interleaved_sim_*` measurements run with
+//! `TraceMode::Off` — the configuration the experiment grids use — and the
+//! `_fulltrace` variants quantify what span materialization costs on top.
+//! `offline_plan_80L_5dev` runs with the default worker-thread fan-out;
+//! `offline_plan_80L_5dev_1thread` is the sequential reference.
+//!
+//! `Bench::finish` writes `BENCH_scheduler_perf.json` and prints speedups
+//! against the previous run's file: run once on the baseline commit, once
+//! after a change, and commit both (see README.md §Benchmarks).
 
 use lime::cluster::Cluster;
 use lime::model::ModelSpec;
 use lime::net::BandwidthTrace;
 use lime::pipeline::{run_interleaved, ExecOptions};
-use lime::plan::{plan, PlanOptions};
+use lime::plan::{plan, plan_with_threads, PlanOptions};
+use lime::sim::TraceMode;
 use lime::util::bench::Bench;
 use lime::util::bytes::mbps;
 
@@ -23,6 +34,9 @@ fn main() {
     b.time("offline_plan_80L_5dev (full #Seg sweep)", 2, 20, || {
         let _ = plan(&spec, &cluster, &opts).unwrap();
     });
+    b.time("offline_plan_80L_5dev_1thread", 2, 20, || {
+        let _ = plan_with_threads(&spec, &cluster, &opts, 1).unwrap();
+    });
 
     let alloc = plan(&spec, &cluster, &opts).unwrap().allocation;
     b.time("cost_model_t_total", 10, 1000, || {
@@ -30,11 +44,33 @@ fn main() {
     });
 
     let bw = BandwidthTrace::fixed_mbps(200.0);
+    let off = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let full = ExecOptions::default();
     b.time("interleaved_sim_64tok_sporadic", 1, 10, || {
-        let _ = run_interleaved(&alloc, &cluster, &bw, 1, 64, &ExecOptions::default());
+        let _ = run_interleaved(&alloc, &cluster, &bw, 1, 64, &off);
     });
     b.time("interleaved_sim_64tok_bursty5", 1, 10, || {
-        let _ = run_interleaved(&alloc, &cluster, &bw, 5, 64, &ExecOptions::default());
+        let _ = run_interleaved(&alloc, &cluster, &bw, 5, 64, &off);
+    });
+    b.time("interleaved_sim_64tok_sporadic_fulltrace", 1, 10, || {
+        let _ = run_interleaved(&alloc, &cluster, &bw, 1, 64, &full);
+    });
+    b.time("interleaved_sim_64tok_bursty5_fulltrace", 1, 10, || {
+        let _ = run_interleaved(&alloc, &cluster, &bw, 5, 64, &full);
+    });
+
+    // Trace query path: uncovered_load is a sort/sweep over the span lanes.
+    let traced = run_interleaved(&alloc, &cluster, &bw, 5, 64, &full);
+    b.row(
+        "spans materialized (bursty5, 64 tok, Full)",
+        &format!("{}", traced.trace.span_count()),
+    );
+    b.time("trace_uncovered_load_all_devices", 2, 50, || {
+        let acc: f64 = traced.trace.uncovered_loads().iter().sum();
+        std::hint::black_box(acc);
     });
 
     // DES engine raw throughput.

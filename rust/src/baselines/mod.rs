@@ -23,6 +23,7 @@ use crate::pipeline::{
 };
 use crate::plan::allocation::{Allocation, DeviceAssignment};
 use crate::plan::{plan, PlanOptions};
+use crate::sim::TraceMode;
 use crate::workload::Pattern;
 
 /// Result of running a method: latency or an out-of-memory failure.
@@ -42,9 +43,25 @@ impl Outcome {
     }
 }
 
-/// A comparison method.
-pub trait Method {
+/// A comparison method. `Sync` so the experiment harness can fan a method
+/// set out across scoped threads.
+pub trait Method: Sync {
     fn name(&self) -> &'static str;
+
+    /// Run with an explicit [`TraceMode`]. Experiment grids pass
+    /// `TraceMode::Off` (they only read `SimResult` numbers); the CLI's
+    /// `--trace` path and tests use `Full`.
+    fn run_mode(
+        &self,
+        spec: &ModelSpec,
+        cluster: &Cluster,
+        bw: &BandwidthTrace,
+        pattern: Pattern,
+        tokens: usize,
+        trace: TraceMode,
+    ) -> Outcome;
+
+    /// Full-trace convenience wrapper (historic behavior).
     fn run(
         &self,
         spec: &ModelSpec,
@@ -52,7 +69,9 @@ pub trait Method {
         bw: &BandwidthTrace,
         pattern: Pattern,
         tokens: usize,
-    ) -> Outcome;
+    ) -> Outcome {
+        self.run_mode(spec, cluster, bw, pattern, tokens, TraceMode::Full)
+    }
 }
 
 /// All methods in the paper's comparison order.
@@ -129,13 +148,14 @@ impl Method for Lime {
         }
     }
 
-    fn run(
+    fn run_mode(
         &self,
         spec: &ModelSpec,
         cluster: &Cluster,
         bw: &BandwidthTrace,
         pattern: Pattern,
         tokens: usize,
+        trace: TraceMode,
     ) -> Outcome {
         let popts = plan_opts(bw, pattern, cluster, tokens);
         let report = match plan(spec, cluster, &popts) {
@@ -145,6 +165,7 @@ impl Method for Lime {
         let exec = ExecOptions {
             planner: self.planner,
             kv_transfer: self.kv_transfer,
+            trace_mode: trace,
             ..ExecOptions::default()
         };
         Outcome::Ok(run_interleaved(
@@ -218,13 +239,14 @@ impl Method for PipelineParallelism {
         "Pipeline parallelism"
     }
 
-    fn run(
+    fn run_mode(
         &self,
         spec: &ModelSpec,
         cluster: &Cluster,
         bw: &BandwidthTrace,
         pattern: Pattern,
         tokens: usize,
+        trace: TraceMode,
     ) -> Outcome {
         let Some(alloc) = memory_proportional_alloc(spec, cluster, false) else {
             return Outcome::Oom("model slices exceed device memory".into());
@@ -237,7 +259,10 @@ impl Method for PipelineParallelism {
             bw,
             pattern.micro_batches(cluster),
             tokens,
-            &TradOptions::default(),
+            &TradOptions {
+                trace_mode: trace,
+                ..TradOptions::default()
+            },
         ))
     }
 }
@@ -251,13 +276,14 @@ impl Method for PipelineOffload {
         "Pipeline + offloading"
     }
 
-    fn run(
+    fn run_mode(
         &self,
         spec: &ModelSpec,
         cluster: &Cluster,
         bw: &BandwidthTrace,
         pattern: Pattern,
         tokens: usize,
+        trace: TraceMode,
     ) -> Outcome {
         let Some(alloc) = memory_proportional_alloc(spec, cluster, true) else {
             return Outcome::Oom("unreachable: offload always fits".into());
@@ -270,6 +296,7 @@ impl Method for PipelineOffload {
             tokens,
             &TradOptions {
                 recompute_fallback: false, // offload variant spills KV
+                trace_mode: trace,
                 ..TradOptions::default()
             },
         ))
@@ -286,13 +313,14 @@ impl Method for EdgeShardMethod {
         "EdgeShard"
     }
 
-    fn run(
+    fn run_mode(
         &self,
         spec: &ModelSpec,
         cluster: &Cluster,
         bw: &BandwidthTrace,
         pattern: Pattern,
         tokens: usize,
+        trace: TraceMode,
     ) -> Outcome {
         let micro = pattern.micro_batches(cluster);
         match edgeshard::partition(spec, cluster, bw.mean_over(tokens.max(1)), tokens.max(128), micro) {
@@ -302,7 +330,10 @@ impl Method for EdgeShardMethod {
                 bw,
                 micro,
                 tokens,
-                &TradOptions::default(),
+                &TradOptions {
+                    trace_mode: trace,
+                    ..TradOptions::default()
+                },
             )),
             None => Outcome::Oom("no memory-feasible partition".into()),
         }
@@ -327,13 +358,14 @@ impl Method for Galaxy {
         "Galaxy"
     }
 
-    fn run(
+    fn run_mode(
         &self,
         spec: &ModelSpec,
         cluster: &Cluster,
         bw: &BandwidthTrace,
         pattern: Pattern,
         tokens: usize,
+        trace: TraceMode,
     ) -> Outcome {
         let micro = pattern.micro_batches(cluster);
         if !tp_shard_fits(spec, cluster, tokens.min(64), micro) {
@@ -347,6 +379,7 @@ impl Method for Galaxy {
             tokens,
             &TpOptions {
                 comm_overlap: 0.3,
+                trace_mode: trace,
                 ..TpOptions::default()
             },
         ))
@@ -361,13 +394,14 @@ impl Method for TpiLlm {
         "TPI-LLM"
     }
 
-    fn run(
+    fn run_mode(
         &self,
         spec: &ModelSpec,
         cluster: &Cluster,
         bw: &BandwidthTrace,
         pattern: Pattern,
         tokens: usize,
+        trace: TraceMode,
     ) -> Outcome {
         Outcome::Ok(run_tensor_parallel(
             spec,
@@ -377,6 +411,7 @@ impl Method for TpiLlm {
             tokens,
             &TpOptions {
                 sliding_window: true,
+                trace_mode: trace,
                 ..TpOptions::default()
             },
         ))
@@ -391,13 +426,14 @@ impl Method for TpiLlmOffload {
         "TPI-LLM + offloading"
     }
 
-    fn run(
+    fn run_mode(
         &self,
         spec: &ModelSpec,
         cluster: &Cluster,
         bw: &BandwidthTrace,
         pattern: Pattern,
         tokens: usize,
+        trace: TraceMode,
     ) -> Outcome {
         Outcome::Ok(run_tensor_parallel(
             spec,
@@ -408,6 +444,7 @@ impl Method for TpiLlmOffload {
             &TpOptions {
                 sliding_window: true,
                 offload_kv: true,
+                trace_mode: trace,
                 ..TpOptions::default()
             },
         ))

@@ -1,7 +1,10 @@
-//! Experiment harness: one runner per paper figure/table (see DESIGN.md §3
+//! Experiment harness: one runner per paper figure/table (see README.md
 //! for the index). Each runner returns structured rows *and* prints the
 //! same series the paper reports, so the bench targets and the `lime
-//! experiments` subcommand share one implementation.
+//! experiments` subcommand share one implementation. Grids evaluate their
+//! independent cells on scoped worker threads with `TraceMode::Off`
+//! (results written by index — printed tables are order-identical to the
+//! old sequential loops).
 
 use crate::baselines::{all, by_name, Method};
 use crate::cluster::{Cluster, DeviceSpec};
@@ -9,8 +12,9 @@ use crate::model::ModelSpec;
 use crate::net::BandwidthTrace;
 use crate::pipeline::{run_interleaved, run_traditional, ExecOptions, TradOptions};
 use crate::plan::{plan, plan_with_seg, PlanOptions};
-use crate::sim::SsdModel;
+use crate::sim::{SsdModel, TraceMode};
 use crate::util::bytes::mbps;
+use crate::util::threads::{default_threads, par_map_indexed};
 use crate::workload::Pattern;
 
 /// A single (method × bandwidth × pattern) measurement.
@@ -37,6 +41,12 @@ impl Cell {
     }
 }
 
+/// Evaluate the (method × bandwidth × pattern) grid. Cells are independent
+/// simulations, so they fan out across scoped worker threads; results are
+/// written by index, so the returned order (and therefore every printed
+/// table) is identical to the old sequential triple loop. Cells run with
+/// `TraceMode::Off` — the grid only reads `SimResult` numbers, and skipping
+/// span materialization is a large part of sweep throughput.
 fn grid(
     spec: &ModelSpec,
     cluster: &Cluster,
@@ -44,22 +54,24 @@ fn grid(
     bandwidths: &[f64],
     tokens: usize,
 ) -> Vec<Cell> {
-    let mut cells = Vec::new();
-    for method in methods {
+    let mut jobs: Vec<(usize, f64, Pattern)> = Vec::new();
+    for mi in 0..methods.len() {
         for &bw in bandwidths {
             for pattern in [Pattern::Sporadic, Pattern::Bursty] {
-                let trace = BandwidthTrace::fixed_mbps(bw);
-                let out = method.run(spec, cluster, &trace, pattern, tokens);
-                cells.push(Cell {
-                    method: method.name(),
-                    bandwidth_mbps: bw,
-                    pattern,
-                    ms_per_token: out.ms_per_token(),
-                });
+                jobs.push((mi, bw, pattern));
             }
         }
     }
-    cells
+    par_map_indexed(default_threads(), &jobs, |&(mi, bw, pattern)| {
+        let trace = BandwidthTrace::fixed_mbps(bw);
+        let out = methods[mi].run_mode(spec, cluster, &trace, pattern, tokens, TraceMode::Off);
+        Cell {
+            method: methods[mi].name(),
+            bandwidth_mbps: bw,
+            pattern,
+            ms_per_token: out.ms_per_token(),
+        }
+    })
 }
 
 fn print_grid(title: &str, cells: &[Cell], bandwidths: &[f64]) {
@@ -139,21 +151,26 @@ pub fn fig2a(tokens: usize) -> Vec<(String, f64, f64)> {
     let tp = by_name("tpi-llm-offload").unwrap();
     let pp = by_name("pp-offload").unwrap();
     println!("\n== Fig. 2a: TP+offload vs PP+offload (200 Mbps, sporadic) ==");
-    let mut rows = Vec::new();
-    for (label, spec, cluster) in cases {
-        let tp_ms = tp
-            .run(&spec, &cluster, &bw, Pattern::Sporadic, tokens)
-            .ms_per_token()
-            .unwrap_or(f64::INFINITY);
-        let pp_ms = pp
-            .run(&spec, &cluster, &bw, Pattern::Sporadic, tokens)
-            .ms_per_token()
-            .unwrap_or(f64::INFINITY);
+    let rows: Vec<(String, f64, f64)> = par_map_indexed(
+        default_threads(),
+        &cases,
+        |(label, spec, cluster)| {
+            let tp_ms = tp
+                .run_mode(spec, cluster, &bw, Pattern::Sporadic, tokens, TraceMode::Off)
+                .ms_per_token()
+                .unwrap_or(f64::INFINITY);
+            let pp_ms = pp
+                .run_mode(spec, cluster, &bw, Pattern::Sporadic, tokens, TraceMode::Off)
+                .ms_per_token()
+                .unwrap_or(f64::INFINITY);
+            (label.to_string(), tp_ms, pp_ms)
+        },
+    );
+    for (label, tp_ms, pp_ms) in &rows {
         println!(
             "  {label:28} TP+off {tp_ms:9.1} ms/tok   PP+off {pp_ms:9.1} ms/tok   PP speedup {:.2}x",
             tp_ms / pp_ms
         );
-        rows.push((label.to_string(), tp_ms, pp_ms));
     }
     rows
 }
@@ -247,14 +264,21 @@ pub fn fig78_segments(tokens: usize) -> Vec<(usize, f64)> {
         bandwidth: mbps(200.0),
     };
     let bw = BandwidthTrace::fixed_mbps(200.0);
-    let mut rows = Vec::new();
     println!("\n== Figs 7-8: interleaved latency vs #Seg ==");
-    for seg in 2..=10 {
-        if let Ok(alloc) = plan_with_seg(&spec, &cluster, seg, &popts) {
-            let r = run_interleaved(&alloc, &cluster, &bw, 1, tokens, &ExecOptions::default());
-            println!("  #Seg={seg:2}  {:9.1} ms/token", r.ms_per_token());
-            rows.push((seg, r.ms_per_token()));
-        }
+    let segs: Vec<usize> = (2..=10).collect();
+    let exec = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let evaluated = par_map_indexed(default_threads(), &segs, |&seg| {
+        plan_with_seg(&spec, &cluster, seg, &popts).ok().map(|alloc| {
+            let r = run_interleaved(&alloc, &cluster, &bw, 1, tokens, &exec);
+            (seg, r.ms_per_token())
+        })
+    });
+    let rows: Vec<(usize, f64)> = evaluated.into_iter().flatten().collect();
+    for &(seg, ms) in &rows {
+        println!("  #Seg={seg:2}  {ms:9.1} ms/token");
     }
     rows
 }
@@ -299,25 +323,25 @@ pub fn fig18(tokens: usize) -> Vec<Cell> {
     let spec = ModelSpec::qwen3_32b();
     let cluster = Cluster::env_e2();
     let trace = BandwidthTrace::random_walk_mbps(0x18, 50.0, 250.0, 5, 40, tokens.max(64));
-    let mut cells = Vec::new();
     println!("\n== Fig. 18: varying bandwidth (50-250 Mbps random walk), Qwen3-32B ==");
-    for method in all() {
+    let methods = all();
+    let mut jobs: Vec<(usize, Pattern)> = Vec::new();
+    for mi in 0..methods.len() {
         for pattern in [Pattern::Sporadic, Pattern::Bursty] {
-            let out = method.run(&spec, &cluster, &trace, pattern, tokens);
-            let cell = Cell {
-                method: method.name(),
-                bandwidth_mbps: -1.0,
-                pattern,
-                ms_per_token: out.ms_per_token(),
-            };
-            println!(
-                "  {:32} {:?}: {}",
-                method.name(),
-                pattern,
-                cell.render()
-            );
-            cells.push(cell);
+            jobs.push((mi, pattern));
         }
+    }
+    let cells = par_map_indexed(default_threads(), &jobs, |&(mi, pattern)| {
+        let out = methods[mi].run_mode(&spec, &cluster, &trace, pattern, tokens, TraceMode::Off);
+        Cell {
+            method: methods[mi].name(),
+            bandwidth_mbps: -1.0,
+            pattern,
+            ms_per_token: out.ms_per_token(),
+        }
+    });
+    for cell in &cells {
+        println!("  {:32} {:?}: {}", cell.method, cell.pattern, cell.render());
     }
     cells
 }
@@ -335,22 +359,24 @@ pub fn tab5(tokens: usize) -> Vec<(String, Option<f64>, Option<f64>)> {
     let variants = ["lime-no-kv-transfer", "lime-no-planner", "lime"];
     println!("\n== Table V: ablation (Llama3.3-70B, low-memory) ==");
     println!("{:36} {:>14} {:>14}", "method", "sporadic", "bursty");
-    let mut rows = Vec::new();
-    for key in variants {
-        let m = by_name(key).unwrap();
-        let spor = m
-            .run(&spec, &cluster, &bw, Pattern::Sporadic, tokens)
-            .ms_per_token();
-        let burst = m
-            .run(&spec, &cluster, &bw, Pattern::Bursty, tokens / 2)
-            .ms_per_token();
+    let rows: Vec<(String, Option<f64>, Option<f64>)> =
+        par_map_indexed(default_threads(), &variants, |key| {
+            let m = by_name(key).unwrap();
+            let spor = m
+                .run_mode(&spec, &cluster, &bw, Pattern::Sporadic, tokens, TraceMode::Off)
+                .ms_per_token();
+            let burst = m
+                .run_mode(&spec, &cluster, &bw, Pattern::Bursty, tokens / 2, TraceMode::Off)
+                .ms_per_token();
+            (m.name().to_string(), spor, burst)
+        });
+    for (name, spor, burst) in &rows {
         println!(
             "{:36} {:>11.1} ms {:>11.1} ms",
-            m.name(),
+            name,
             spor.unwrap_or(f64::NAN),
             burst.unwrap_or(f64::NAN)
         );
-        rows.push((m.name().to_string(), spor, burst));
     }
     if let (Some((_, Some(ls), Some(lb))), true) = (rows.last().cloned(), rows.len() == 3) {
         for (name, s, b) in &rows[..2] {

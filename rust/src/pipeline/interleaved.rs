@@ -22,7 +22,7 @@ use crate::model::ModelSpec;
 use crate::net::{link_transfer_secs, BandwidthTrace};
 use crate::pipeline::result::SimResult;
 use crate::plan::allocation::Allocation;
-use crate::sim::{Resource, SpanKind, SsdModel, Trace};
+use crate::sim::{Label, MicroPhase, Resource, SpanKind, SsdModel, Trace, TraceMode};
 
 /// Online-adaptation configuration (Table V ablation axes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -46,6 +46,10 @@ pub struct ExecOptions {
     pub prompt_tokens: usize,
     /// RNG seed for the SSD write-jitter streams.
     pub seed: u64,
+    /// Span recording detail. `Full` (the default) is needed for Gantt
+    /// rendering and `Trace::uncovered_load`; experiment sweeps run `Off`.
+    /// The mode never changes any `SimResult` timing field.
+    pub trace_mode: TraceMode,
 }
 
 impl Default for ExecOptions {
@@ -55,6 +59,7 @@ impl Default for ExecOptions {
             kv_transfer: true,
             prompt_tokens: 64,
             seed: 0xC0FFEE,
+            trace_mode: TraceMode::Full,
         }
     }
 }
@@ -79,7 +84,7 @@ pub fn run_interleaved(
     let seg = alloc.seg.max(1);
     let micro = micro_batches.max(1);
 
-    let mut trace = Trace::new();
+    let mut trace = Trace::with_mode(opts.trace_mode);
     let mut gpus: Vec<Resource> = (0..d).map(|_| Resource::new()).collect();
     let mut ssds: Vec<SsdModel> = (0..d)
         .map(|i| {
@@ -143,6 +148,8 @@ pub fn run_interleaved(
     // Completion time of (micro m, previous stage) within the current step.
     let mut step_times = Vec::with_capacity(tokens);
     let mut t_prev_step_end = decode_start;
+    // Reused across steps — the decode loop allocates nothing per span.
+    let mut micro_front: Vec<f64> = vec![0.0; micro];
 
     for step in 0..tokens {
         let bw = bw_trace.at(step);
@@ -154,7 +161,7 @@ pub fn run_interleaved(
         }
 
         let step_start = t_prev_step_end;
-        let mut micro_front: Vec<f64> = vec![step_start; micro];
+        micro_front.fill(step_start);
 
         for s in 0..seg {
             for i in 0..d {
@@ -176,7 +183,13 @@ pub fn run_interleaved(
                 // SSD load for this segment: starts when the slot freed.
                 let load_iv = if seg_load_bytes > 0 {
                     let iv = ssds[i].read(slot_free[i], seg_load_bytes);
-                    trace.push(i, SpanKind::Load, format!("s{step}g{s}"), iv.start, iv.end);
+                    trace.push(
+                        i,
+                        SpanKind::Load,
+                        Label::SegLoad { step: step as u32, seg: s as u32 },
+                        iv.start,
+                        iv.end,
+                    );
                     Some(iv)
                 } else {
                     None
@@ -186,26 +199,39 @@ pub fn run_interleaved(
                 for (m, front) in micro_front.iter_mut().enumerate() {
                     // Activation hop onto device i (shared medium).
                     let hop = net.acquire(*front, link_transfer_secs(spec.h_size(1), bw));
-                    trace.push(i, SpanKind::Comm, format!("m{m}"), hop.start, hop.end);
+                    let label = |phase| Label::Micro { m: m as u32, phase };
+                    trace.push(i, SpanKind::Comm, label(MicroPhase::Hop), hop.start, hop.end);
                     let arrive = hop.end;
 
                     // Resident fraction computes immediately.
                     let comp_res = cost::comp_time(&spec, &cluster.devices[i], res_here, ctx, 1);
                     let iv1 = gpus[i].acquire(arrive, comp_res);
                     if comp_res > 0.0 {
-                        trace.push(i, SpanKind::Compute, format!("m{m}r"), iv1.start, iv1.end);
+                        trace.push(
+                            i,
+                            SpanKind::Compute,
+                            label(MicroPhase::Resident),
+                            iv1.start,
+                            iv1.end,
+                        );
                     }
                     // Offloaded fraction gates on the load.
                     let mut end = iv1.end;
                     if off_here > 0 {
                         let gate = load_iv.map(|iv| iv.end).unwrap_or(end);
                         if gate > end {
-                            trace.push(i, SpanKind::Stall, format!("m{m}w"), end, gate);
+                            trace.push(i, SpanKind::Stall, label(MicroPhase::Wait), end, gate);
                         }
                         let comp_off =
                             cost::comp_time(&spec, &cluster.devices[i], off_here, ctx, 1);
                         let iv2 = gpus[i].acquire(end.max(gate), comp_off);
-                        trace.push(i, SpanKind::Compute, format!("m{m}o"), iv2.start, iv2.end);
+                        trace.push(
+                            i,
+                            SpanKind::Compute,
+                            label(MicroPhase::Offloaded),
+                            iv2.start,
+                            iv2.end,
+                        );
                         end = iv2.end;
                     }
                     *front = end;
@@ -243,7 +269,13 @@ pub fn run_interleaved(
                         * live.devices[i].total_layers as u64
                         * ship as u64;
                     let iv = net.acquire(step_end, link_transfer_secs(bytes, bw));
-                    trace.push(i, SpanKind::KvTransfer, format!("->d{t}"), iv.start, iv.end);
+                    trace.push(
+                        i,
+                        SpanKind::KvTransfer,
+                        Label::KvTo { device: t as u32 },
+                        iv.start,
+                        iv.end,
+                    );
                     // Asynchronous: does not extend the step unless the link
                     // is still busy when the next step's first hop needs it
                     // (the shared `net` Resource captures that naturally).
@@ -289,12 +321,15 @@ pub fn run_interleaved(
 
         // Emergency fallback: devices still saturated swap KV to SSD
         // (write + read per step — the naive strategy of §III / Fig. 2b).
+        // A step counts as an emergency step at most once, however many
+        // devices overflow within it.
+        let mut emergency_this_step = false;
         for i in 0..d {
             let n_trans = if opts.kv_transfer { protocol.n_trans(i) } else { 0 };
             let overflow =
                 cost::overflow_tokens(&live, cluster, i, ctx * micro, n_trans).min(kv_held[i]);
             if overflow > 0 {
-                emergency_steps += 1;
+                emergency_this_step = true;
                 let bytes = spec.kv_bytes_per_token_layer()
                     * live.devices[i].total_layers as u64
                     * overflow as u64;
@@ -304,6 +339,9 @@ pub fn run_interleaved(
                 trace.push(i, SpanKind::Load, "kv-fetch", r.start, r.end);
                 step_end = step_end.max(r.end);
             }
+        }
+        if emergency_this_step {
+            emergency_steps += 1;
         }
 
         step_times.push(step_end - step_start);
@@ -470,6 +508,57 @@ mod tests {
             fine.ms_per_token(),
             full.ms_per_token()
         );
+    }
+
+    #[test]
+    fn emergency_steps_count_each_step_at_most_once() {
+        // With adaptation disabled, KV pressure eventually saturates several
+        // devices in the same step; the counter must still be per-step.
+        let (alloc, cluster) = setup("low3");
+        let bw = BandwidthTrace::fixed_mbps(100.0);
+        let tokens = 256;
+        let r = run_interleaved(
+            &alloc,
+            &cluster,
+            &bw,
+            cluster.len(),
+            tokens,
+            &ExecOptions {
+                planner: PlannerMode::Off,
+                kv_transfer: false,
+                ..ExecOptions::default()
+            },
+        );
+        assert!(
+            r.emergency_steps <= tokens,
+            "emergency_steps {} exceeds the {} simulated steps",
+            r.emergency_steps,
+            tokens
+        );
+    }
+
+    #[test]
+    fn trace_off_matches_full_timing() {
+        let (alloc, cluster) = setup("low1");
+        let bw = BandwidthTrace::fixed_mbps(150.0);
+        let full = run_interleaved(&alloc, &cluster, &bw, 2, 24, &ExecOptions::default());
+        let off = run_interleaved(
+            &alloc,
+            &cluster,
+            &bw,
+            2,
+            24,
+            &ExecOptions {
+                trace_mode: crate::sim::TraceMode::Off,
+                ..ExecOptions::default()
+            },
+        );
+        assert_eq!(full.total_time, off.total_time);
+        assert_eq!(full.step_times, off.step_times);
+        assert_eq!(full.kv_tokens_transferred, off.kv_tokens_transferred);
+        assert_eq!(full.emergency_steps, off.emergency_steps);
+        assert!(full.trace.span_count() > 0);
+        assert_eq!(off.trace.span_count(), 0);
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::cost;
 use crate::model::ModelSpec;
 use crate::net::{link_transfer_secs, BandwidthTrace};
 use crate::pipeline::result::SimResult;
-use crate::sim::{Resource, SpanKind, SsdModel, Trace};
+use crate::sim::{Label, Resource, SpanKind, SsdModel, Trace, TraceMode};
 
 /// Tensor-parallel baseline options.
 #[derive(Debug, Clone, Copy)]
@@ -38,6 +38,8 @@ pub struct TpOptions {
     /// sync on top of wire time. Measured gloo all-reduces on LAN are
     /// ms-scale even for tiny payloads.
     pub sync_overhead: f64,
+    /// Span recording detail (never affects `SimResult` timing fields).
+    pub trace_mode: TraceMode,
 }
 
 impl Default for TpOptions {
@@ -49,6 +51,7 @@ impl Default for TpOptions {
             sliding_window: false,
             offload_kv: false,
             sync_overhead: 1.5e-3,
+            trace_mode: TraceMode::Full,
         }
     }
 }
@@ -64,7 +67,7 @@ pub fn run_tensor_parallel(
 ) -> SimResult {
     let d = cluster.len();
     let micro = micro_batches.max(1);
-    let mut trace = Trace::new();
+    let mut trace = Trace::with_mode(opts.trace_mode);
     let mut ssds: Vec<SsdModel> = (0..d)
         .map(|i| {
             SsdModel::new(
@@ -132,7 +135,13 @@ pub fn run_tensor_parallel(
             comm_total = iv.end - step_start;
         }
         comm_total += 2.0 * spec.layers as f64 * opts.sync_overhead;
-        trace.push(0, SpanKind::Comm, format!("sync{step}"), step_start, step_start + comm_total);
+        trace.push(
+            0,
+            SpanKind::Comm,
+            Label::Step { tag: "sync", step: step as u32 },
+            step_start,
+            step_start + comm_total,
+        );
         let comm_visible = comm_total * (1.0 - opts.comm_overlap);
 
         // Sliding-window streaming: overlaps with compute+comm, pays the
@@ -143,7 +152,13 @@ pub fn run_tensor_parallel(
                 continue;
             }
             let iv = ssds[i].read(step_start, stream_bytes[i]);
-            trace.push(i, SpanKind::Load, format!("w{step}"), iv.start, iv.end);
+            trace.push(
+                i,
+                SpanKind::Load,
+                Label::Step { tag: "w", step: step as u32 },
+                iv.start,
+                iv.end,
+            );
             let load = iv.end - step_start;
             load_uncovered = load_uncovered.max((load - comp_slowest - comm_visible).max(0.0));
         }
@@ -152,7 +167,7 @@ pub fn run_tensor_parallel(
         trace.push(
             0,
             SpanKind::Compute,
-            format!("tp{step}"),
+            Label::Step { tag: "tp", step: step as u32 },
             step_start + comm_visible,
             step_start + comm_visible + comp_slowest,
         );
@@ -165,10 +180,12 @@ pub fn run_tensor_parallel(
                 + (spec.layer_bytes() as f64 * spec.layers as f64 * frac[i]) as u64
                     * u64::from(stream_bytes[i] == 0)
         };
+        // As in the pipeline executors, one step counts at most once.
+        let mut emergency_this_step = false;
         for i in 0..d {
             let over_bytes = kv_bytes_i(i).saturating_sub(cluster.devices[i].usable_mem());
             if over_bytes > 0 {
-                emergency_steps += 1;
+                emergency_this_step = true;
                 let kv_tok = ((spec.kv_bytes_per_token_layer() as f64 * frac[i]) as u64
                     * spec.layers as u64)
                     .max(1);
@@ -187,6 +204,9 @@ pub fn run_tensor_parallel(
                     step_end += flops / cluster.devices[i].flops;
                 }
             }
+        }
+        if emergency_this_step {
+            emergency_steps += 1;
         }
 
         step_times.push(step_end - step_start);

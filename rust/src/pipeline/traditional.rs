@@ -19,7 +19,7 @@ use crate::cost;
 use crate::net::{link_transfer_secs, BandwidthTrace};
 use crate::pipeline::result::SimResult;
 use crate::plan::allocation::Allocation;
-use crate::sim::{Resource, SpanKind, SsdModel, Trace};
+use crate::sim::{Label, MicroPhase, Resource, SpanKind, SsdModel, Trace, TraceMode};
 
 /// Options for the traditional executor.
 #[derive(Debug, Clone, Copy)]
@@ -30,6 +30,8 @@ pub struct TradOptions {
     /// *recompute* evicted KV instead (paper §V-A). `true` enables that
     /// recompute fallback; `false` spills KV to SSD.
     pub recompute_fallback: bool,
+    /// Span recording detail (never affects `SimResult` timing fields).
+    pub trace_mode: TraceMode,
 }
 
 impl Default for TradOptions {
@@ -38,6 +40,7 @@ impl Default for TradOptions {
             prompt_tokens: 64,
             seed: 0xBA5E,
             recompute_fallback: true,
+            trace_mode: TraceMode::Full,
         }
     }
 }
@@ -56,7 +59,7 @@ pub fn run_traditional(
     let d = cluster.len();
     let micro = micro_batches.max(1);
 
-    let mut trace = Trace::new();
+    let mut trace = Trace::with_mode(opts.trace_mode);
     let mut gpus: Vec<Resource> = (0..d).map(|_| Resource::new()).collect();
     let mut ssds: Vec<SsdModel> = (0..d)
         .map(|i| {
@@ -86,12 +89,14 @@ pub fn run_traditional(
     let mut emergency_steps = 0usize;
     let mut step_times = Vec::with_capacity(tokens);
     let mut t_prev = decode_start;
+    // Reused across steps — no per-step allocation in the decode loop.
+    let mut fronts = vec![0.0f64; micro];
 
     for step in 0..tokens {
         let bw = bw_trace.at(step);
         let ctx = opts.prompt_tokens + step;
         let step_start = t_prev;
-        let mut fronts = vec![step_start; micro];
+        fronts.fill(step_start);
 
         for i in 0..d {
             let a = &alloc.devices[i];
@@ -99,15 +104,22 @@ pub fn run_traditional(
             let off = a.offloaded_count();
 
             for (m, front) in fronts.iter_mut().enumerate() {
+                let label = |phase| Label::Micro { m: m as u32, phase };
                 let hop = net.acquire(*front, link_transfer_secs(spec.h_size(1), bw));
-                trace.push(i, SpanKind::Comm, format!("m{m}"), hop.start, hop.end);
+                trace.push(i, SpanKind::Comm, label(MicroPhase::Hop), hop.start, hop.end);
                 let mut cursor = hop.end;
 
                 // Resident layers compute first.
                 let comp_res = cost::comp_time(&spec, &cluster.devices[i], res, ctx, 1);
                 let iv = gpus[i].acquire(cursor, comp_res);
                 if comp_res > 0.0 {
-                    trace.push(i, SpanKind::Compute, format!("m{m}r"), iv.start, iv.end);
+                    trace.push(
+                        i,
+                        SpanKind::Compute,
+                        label(MicroPhase::Resident),
+                        iv.start,
+                        iv.end,
+                    );
                 }
                 cursor = iv.end;
 
@@ -117,13 +129,19 @@ pub fn run_traditional(
                 if off > 0 {
                     let bytes = a.load_bytes(&spec);
                     let load = ssds[i].read(cursor, bytes);
-                    trace.push(i, SpanKind::Load, format!("m{m}"), load.start, load.end);
+                    trace.push(i, SpanKind::Load, label(MicroPhase::Load), load.start, load.end);
                     if load.end > cursor {
-                        trace.push(i, SpanKind::Stall, format!("m{m}w"), cursor, load.end);
+                        trace.push(i, SpanKind::Stall, label(MicroPhase::Wait), cursor, load.end);
                     }
                     let comp_off = cost::comp_time(&spec, &cluster.devices[i], off, ctx, 1);
                     let iv2 = gpus[i].acquire(load.end, comp_off);
-                    trace.push(i, SpanKind::Compute, format!("m{m}o"), iv2.start, iv2.end);
+                    trace.push(
+                        i,
+                        SpanKind::Compute,
+                        label(MicroPhase::Offloaded),
+                        iv2.start,
+                        iv2.end,
+                    );
                     cursor = iv2.end;
                 }
                 *front = cursor;
@@ -132,14 +150,16 @@ pub fn run_traditional(
 
         let mut step_end = fronts.iter().cloned().fold(step_start, f64::max);
 
-        // KV growth + saturation fallback.
+        // KV growth + saturation fallback. As in the interleaved executor,
+        // a step counts as an emergency step at most once.
+        let mut emergency_this_step = false;
         for i in 0..d {
             kv_held[i] += micro;
             // Overflow grows with context: each step the evicted window is
             // whatever no longer fits (baselines have no adaptation).
             let overflow = cost::overflow_tokens(alloc, cluster, i, ctx * micro, 0).min(ctx * micro);
             if overflow > 0 {
-                emergency_steps += 1;
+                emergency_this_step = true;
                 if opts.recompute_fallback {
                     // Recompute evicted KV: an extra prefill-shaped pass
                     // over the overflow window (paper §V-A baseline note).
@@ -160,6 +180,9 @@ pub fn run_traditional(
                     step_end = step_end.max(r.end);
                 }
             }
+        }
+        if emergency_this_step {
+            emergency_steps += 1;
         }
 
         step_times.push(step_end - step_start);

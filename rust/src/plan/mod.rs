@@ -5,4 +5,4 @@ pub mod allocation;
 pub mod offline;
 
 pub use allocation::{Allocation, DeviceAssignment};
-pub use offline::{plan, plan_with_seg, PlanError, PlanOptions, PlanReport};
+pub use offline::{plan, plan_with_seg, plan_with_threads, PlanError, PlanOptions, PlanReport};

@@ -71,7 +71,24 @@ pub struct PlanReport {
 
 /// Run the full offline scheduler: try every `#Seg` in `2..=⌈|L|/|D|⌉`
 /// (plus the no-offload degenerate case) and keep the cheapest plan.
+///
+/// The `#Seg` candidates are independent, so they are evaluated on
+/// `util::threads::default_threads()` scoped worker threads; results are
+/// written by index and reduced in ascending-`seg` order, so the chosen
+/// allocation and the `seg_curve` are identical to the sequential sweep.
 pub fn plan(spec: &ModelSpec, cluster: &Cluster, opts: &PlanOptions) -> Result<PlanReport, PlanError> {
+    plan_with_threads(spec, cluster, opts, crate::util::threads::default_threads())
+}
+
+/// [`plan`] with an explicit worker-thread count (1 = sequential). The
+/// result does not depend on `threads` — asserted by the property tests in
+/// `rust/tests/trace_modes.rs`.
+pub fn plan_with_threads(
+    spec: &ModelSpec,
+    cluster: &Cluster,
+    opts: &PlanOptions,
+    threads: usize,
+) -> Result<PlanReport, PlanError> {
     // Degenerate case first: everything fits resident -> plain pipeline.
     if let Some(alloc) = try_all_resident(spec, cluster, opts) {
         let cb = cost::t_total(&alloc, cluster, opts.empirical_tokens, opts.micro_batch, opts.bandwidth);
@@ -83,22 +100,35 @@ pub fn plan(spec: &ModelSpec, cluster: &Cluster, opts: &PlanOptions) -> Result<P
     }
 
     let seg_max = spec.layers.div_ceil(cluster.len()).max(2);
+    let segs: Vec<usize> = (2..=seg_max).collect();
+    let evaluated = crate::util::threads::par_map_indexed(threads, &segs, |&seg| {
+        plan_with_seg(spec, cluster, seg, opts).ok().map(|alloc| {
+            let cb = cost::t_total(
+                &alloc,
+                cluster,
+                opts.empirical_tokens,
+                opts.micro_batch,
+                opts.bandwidth,
+            );
+            (alloc, cb)
+        })
+    });
+
+    // Sequential reduction in candidate order: ties resolve exactly as the
+    // old single-threaded loop did (first strictly-cheaper candidate wins).
     let mut best: Option<(Allocation, cost::CostBreakdown)> = None;
     let mut seg_curve = Vec::new();
-    for seg in 2..=seg_max {
-        match plan_with_seg(spec, cluster, seg, opts) {
-            Ok(alloc) => {
-                let cb = cost::t_total(&alloc, cluster, opts.empirical_tokens, opts.micro_batch, opts.bandwidth);
-                seg_curve.push((seg, cb.total()));
-                let better = match &best {
-                    None => true,
-                    Some((_, b)) => cb.total() < b.total(),
-                };
-                if better {
-                    best = Some((alloc, cb));
-                }
-            }
-            Err(_) => continue,
+    for (&seg, evaluated) in segs.iter().zip(evaluated) {
+        let Some((alloc, cb)) = evaluated else {
+            continue;
+        };
+        seg_curve.push((seg, cb.total()));
+        let better = match &best {
+            None => true,
+            Some((_, b)) => cb.total() < b.total(),
+        };
+        if better {
+            best = Some((alloc, cb));
         }
     }
     match best {
@@ -619,5 +649,19 @@ mod tests {
         let a = plan(&spec, &cluster, &opts()).unwrap();
         let b = plan(&spec, &cluster, &opts()).unwrap();
         assert_eq!(a.allocation, b.allocation);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_the_plan() {
+        let spec = ModelSpec::llama33_70b();
+        let cluster = Cluster::lowmem_setting1();
+        let o = opts();
+        let seq = plan_with_threads(&spec, &cluster, &o, 1).unwrap();
+        for threads in [2, 4, 8] {
+            let par = plan_with_threads(&spec, &cluster, &o, threads).unwrap();
+            assert_eq!(seq.allocation, par.allocation, "threads={threads}");
+            assert_eq!(seq.seg_curve, par.seg_curve, "threads={threads}");
+            assert_eq!(seq.cost, par.cost, "threads={threads}");
+        }
     }
 }

@@ -7,7 +7,7 @@ use crate::cluster::{Cluster, DeviceSpec};
 use crate::model::ModelSpec;
 use crate::plan::allocation::Allocation;
 use crate::plan::{plan, PlanError, PlanOptions};
-use crate::serve::engine::LayerResidency;
+use crate::serve::LayerResidency;
 use crate::util::bytes::gib;
 
 /// A virtual cluster of `n` devices, each able to hold about

@@ -17,19 +17,7 @@ use crate::runtime::{
     argmax_logits, literal_from_f32, literal_from_i32, literal_scalar_i32, Manifest, PjrtRuntime,
     WeightStore,
 };
-
-/// Residency plan for one layer on the real path.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum LayerResidency {
-    /// Both blocks pinned; executes the fused `layer_decode` artifact.
-    Resident,
-    /// Both blocks streamed from SSD; fused artifact, weights re-read.
-    FullOffload,
-    /// MHA streamed / MLP pinned; executes `mha_decode` + `mlp_decode`.
-    MhaOffload,
-    /// MLP streamed / MHA pinned; executes `mha_decode` + `mlp_decode`.
-    MlpOffload,
-}
+pub use crate::serve::LayerResidency;
 
 /// The engine.
 pub struct Engine {

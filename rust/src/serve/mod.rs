@@ -1,21 +1,44 @@
 //! Real serving over PJRT: generation engine, virtual-cluster deployment,
 //! and the threaded request server (the end-to-end driver behind
 //! `examples/serve_cluster.rs`).
+//!
+//! The engine and server execute real HLO through the `xla` PJRT bindings
+//! and are gated behind the off-by-default `pjrt` cargo feature; the
+//! deployment planning helpers (and [`LayerResidency`], the contract
+//! between the scheduler and the engine) are plain Rust and always build.
 
 pub mod deployment;
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod server;
 
 pub use deployment::{plan_tiny, residency_plan, virtual_cluster};
-pub use engine::{Engine, Generation, LayerResidency};
+#[cfg(feature = "pjrt")]
+pub use engine::{Engine, Generation};
+#[cfg(feature = "pjrt")]
 pub use server::{make_requests, serve, ServeReport};
 
 use anyhow::Result;
+
+/// Residency plan for one layer on the real path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerResidency {
+    /// Both blocks pinned; executes the fused `layer_decode` artifact.
+    Resident,
+    /// Both blocks streamed from SSD; fused artifact, weights re-read.
+    FullOffload,
+    /// MHA streamed / MLP pinned; executes `mha_decode` + `mlp_decode`.
+    MhaOffload,
+    /// MLP streamed / MHA pinned; executes `mha_decode` + `mlp_decode`.
+    MlpOffload,
+}
 
 /// The `lime serve` subcommand / quick demo: plan TinyLM over a virtual
 /// memory-constrained cluster, serve a request stream, report latency and
 /// throughput, and optionally verify losslessness against the fully
 /// resident engine.
+#[cfg(feature = "pjrt")]
 pub fn run_server_demo(
     artifacts_dir: &str,
     requests: usize,
@@ -77,4 +100,21 @@ pub fn run_server_demo(
         }
     }
     Ok(())
+}
+
+/// Stub when the `pjrt` feature is disabled: the simulator stack has no
+/// PJRT client, so real serving is unavailable.
+#[cfg(not(feature = "pjrt"))]
+pub fn run_server_demo(
+    _artifacts_dir: &str,
+    _requests: usize,
+    _steps: usize,
+    _bursty: bool,
+    _devices: usize,
+    _verify: bool,
+) -> Result<()> {
+    anyhow::bail!(
+        "this binary was built without the `pjrt` feature; rebuild with \
+         `--features pjrt` (requires the xla/xla_extension dependency — see Cargo.toml)"
+    )
 }

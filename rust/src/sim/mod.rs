@@ -7,4 +7,4 @@ pub mod trace;
 
 pub use engine::{Engine, Interval, Resource, Time};
 pub use ssd::SsdModel;
-pub use trace::{Span, SpanKind, Trace};
+pub use trace::{Label, MicroPhase, Span, SpanKind, Trace, TraceMode};

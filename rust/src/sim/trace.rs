@@ -1,6 +1,26 @@
 //! Execution timeline traces (Gantt charts) — the data behind the paper's
 //! schedule figures (Figs 3, 4, 6, 7, 8). Executors emit [`Span`]s; the
 //! renderer prints an ASCII Gantt per device.
+//!
+//! The trace is on the simulator's innermost loop (`tokens × #Seg × |D| ×
+//! micro` pushes per run), so it is built for zero-allocation recording:
+//!
+//! * [`Label`] is a small `Copy` enum instead of a heap `String` — the
+//!   executors construct labels from indices without ever calling
+//!   `format!` on the hot path; rendering formats lazily via `Display`.
+//! * [`TraceMode`] lets experiment sweeps drop span materialization
+//!   entirely (`Off`), or keep only the incrementally-maintained per-device
+//!   busy accumulators (`Aggregate`) that back O(1) [`Trace::busy`].
+//! * Spans are stored in per-device lanes, so rendering and per-device
+//!   queries never scan other devices' spans, and
+//!   [`Trace::uncovered_load`] runs as a sort + sweep-line interval
+//!   subtraction instead of the old O(loads × computes) double loop.
+//!
+//! Recording never influences simulated timing: a run produces bit-identical
+//! `SimResult` timing fields under every mode (tested in
+//! `rust/tests/trace_modes.rs`).
+
+use std::fmt;
 
 use crate::sim::engine::Time;
 
@@ -22,6 +42,14 @@ pub enum SpanKind {
 }
 
 impl SpanKind {
+    /// Number of kinds — sizes the per-lane busy accumulators.
+    pub const COUNT: usize = 6;
+
+    /// Dense index for accumulator arrays.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
     pub fn glyph(self) -> char {
         match self {
             SpanKind::Compute => '#',
@@ -34,84 +62,284 @@ impl SpanKind {
     }
 }
 
-/// One busy interval on one device lane.
-#[derive(Debug, Clone)]
+/// Pipeline phase of a micro-batch span (see [`Label::Micro`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MicroPhase {
+    /// Activation hop onto the device.
+    Hop,
+    /// Compute over the resident layer fraction.
+    Resident,
+    /// Compute over the offloaded layer fraction.
+    Offloaded,
+    /// Stalled waiting for an SSD load.
+    Wait,
+    /// Per-micro-batch SSD load (traditional schedule).
+    Load,
+}
+
+/// Zero-allocation span annotation. `Copy`, built from indices on the hot
+/// path; formatted only when a trace is actually rendered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Label {
+    /// No annotation.
+    None,
+    /// Fixed descriptive label (e.g. "kv-spill").
+    Static(&'static str),
+    /// Segment-granular SSD load: decode step + segment index.
+    SegLoad { step: u32, seg: u32 },
+    /// Micro-batch activity: micro index + phase.
+    Micro { m: u32, phase: MicroPhase },
+    /// Step-indexed activity with a short tag (e.g. "sync", "tp", "w").
+    Step { tag: &'static str, step: u32 },
+    /// KV tokens shipped to a peer device.
+    KvTo { device: u32 },
+}
+
+impl From<&'static str> for Label {
+    fn from(s: &'static str) -> Self {
+        Label::Static(s)
+    }
+}
+
+impl fmt::Display for Label {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Label::None => Ok(()),
+            Label::Static(s) => f.write_str(s),
+            Label::SegLoad { step, seg } => write!(f, "s{step}g{seg}"),
+            Label::Micro { m, phase } => match phase {
+                MicroPhase::Hop => write!(f, "m{m}"),
+                MicroPhase::Resident => write!(f, "m{m}r"),
+                MicroPhase::Offloaded => write!(f, "m{m}o"),
+                MicroPhase::Wait => write!(f, "m{m}w"),
+                MicroPhase::Load => write!(f, "m{m}l"),
+            },
+            Label::Step { tag, step } => write!(f, "{tag}{step}"),
+            Label::KvTo { device } => write!(f, "->d{device}"),
+        }
+    }
+}
+
+/// How much timeline detail an executor records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceMode {
+    /// Record nothing beyond the trace horizon. The cheapest mode —
+    /// experiment grids use it, since they only read `SimResult` numbers.
+    Off,
+    /// Maintain per-device busy-time accumulators (O(1) [`Trace::busy`])
+    /// without materializing spans.
+    Aggregate,
+    /// Record every span: required for [`Trace::render`] and
+    /// [`Trace::uncovered_load`]. The default, matching historic behavior.
+    #[default]
+    Full,
+}
+
+/// One busy interval on one device lane. The device index is implied by
+/// the lane the span is stored under (see [`Trace::device_spans`] /
+/// [`Trace::spans`]) rather than duplicated per span.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Span {
-    pub device: usize,
     pub kind: SpanKind,
-    pub label: String,
+    pub label: Label,
     pub start: Time,
     pub end: Time,
 }
 
+/// One device's recorded activity.
+#[derive(Debug, Clone, Default)]
+struct Lane {
+    spans: Vec<Span>,
+    busy: [Time; SpanKind::COUNT],
+}
+
 /// Collector for executor timelines.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Clone)]
 pub struct Trace {
-    pub spans: Vec<Span>,
+    mode: TraceMode,
+    lanes: Vec<Lane>,
+    end: Time,
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Trace::new()
+    }
 }
 
 impl Trace {
+    /// A full-detail trace (historic default).
     pub fn new() -> Self {
-        Trace { spans: Vec::new() }
+        Trace::with_mode(TraceMode::Full)
     }
 
-    pub fn push(&mut self, device: usize, kind: SpanKind, label: impl Into<String>, start: Time, end: Time) {
+    pub fn with_mode(mode: TraceMode) -> Self {
+        Trace {
+            mode,
+            lanes: Vec::new(),
+            end: 0.0,
+        }
+    }
+
+    pub fn mode(&self) -> TraceMode {
+        self.mode
+    }
+
+    /// Record one busy interval. In `Off` mode this only advances the trace
+    /// horizon; in `Aggregate` it updates the busy accumulators; in `Full`
+    /// it also materializes the span. Never allocates for the label.
+    pub fn push(
+        &mut self,
+        device: usize,
+        kind: SpanKind,
+        label: impl Into<Label>,
+        start: Time,
+        end: Time,
+    ) {
         debug_assert!(end >= start, "span ends before it starts");
-        self.spans.push(Span {
-            device,
-            kind,
-            label: label.into(),
-            start,
-            end,
-        });
+        if end > self.end {
+            self.end = end;
+        }
+        if self.mode == TraceMode::Off {
+            return;
+        }
+        if device >= self.lanes.len() {
+            self.lanes.resize_with(device + 1, Lane::default);
+        }
+        let lane = &mut self.lanes[device];
+        lane.busy[kind.index()] += end - start;
+        if self.mode == TraceMode::Full {
+            lane.spans.push(Span {
+                kind,
+                label: label.into(),
+                start,
+                end,
+            });
+        }
     }
 
+    /// Latest span end observed (all modes).
     pub fn end_time(&self) -> Time {
-        self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
+        self.end
     }
 
-    /// Total busy time of `device` in spans of `kind`.
+    /// Total busy time of `device` in spans of `kind`. O(1) — reads the
+    /// incrementally-maintained accumulator. Zero in `Off` mode.
     pub fn busy(&self, device: usize, kind: SpanKind) -> Time {
-        self.spans
-            .iter()
-            .filter(|s| s.device == device && s.kind == kind)
-            .map(|s| s.end - s.start)
-            .sum()
+        self.lanes
+            .get(device)
+            .map_or(0.0, |l| l.busy[kind.index()])
     }
 
-    /// Loading time on `device` NOT overlapped by its own compute — the
-    /// empirical counterpart of the cost model's `T_uncover` term.
+    /// All recorded spans as `(device, span)`, in per-device lanes (device
+    /// order, then push order within a device). Empty unless the mode is
+    /// `Full`.
+    pub fn spans(&self) -> impl Iterator<Item = (usize, &Span)> + '_ {
+        self.lanes
+            .iter()
+            .enumerate()
+            .flat_map(|(device, l)| l.spans.iter().map(move |s| (device, s)))
+    }
+
+    /// Spans of one device lane (empty unless the mode is `Full`).
+    pub fn device_spans(&self, device: usize) -> &[Span] {
+        match self.lanes.get(device) {
+            Some(lane) => lane.spans.as_slice(),
+            None => &[],
+        }
+    }
+
+    /// Number of materialized spans.
+    pub fn span_count(&self) -> usize {
+        self.lanes.iter().map(|l| l.spans.len()).sum()
+    }
+
+    /// Loading time on `device` NOT overlapped by compute — the empirical
+    /// counterpart of the cost model's `T_uncover` term. Loads overlap with
+    /// *system* work, so compute anywhere in the pipeline covers them.
+    ///
+    /// Sort/sweep-line implementation: the compute spans of all lanes are
+    /// merged into a disjoint interval union once, then each load subtracts
+    /// its covered portion with a monotone cursor — O((L + C) log C) versus
+    /// the old O(L × C) double loop (which also double-counted overlapping
+    /// compute spans from different devices). Querying every device? Use
+    /// [`Trace::uncovered_loads`], which builds the union once.
+    ///
+    /// Requires `TraceMode::Full`; returns 0.0 otherwise.
     pub fn uncovered_load(&self, device: usize) -> Time {
-        let loads: Vec<(Time, Time)> = self
+        self.uncovered_load_against(device, &self.compute_union())
+    }
+
+    /// [`Trace::uncovered_load`] for every device lane, sharing one
+    /// compute-union construction across the queries.
+    pub fn uncovered_loads(&self) -> Vec<Time> {
+        let union = self.compute_union();
+        (0..self.lanes.len())
+            .map(|device| self.uncovered_load_against(device, &union))
+            .collect()
+    }
+
+    /// Disjoint, sorted union of all compute intervals across every lane.
+    fn compute_union(&self) -> Vec<(Time, Time)> {
+        let mut computes: Vec<(Time, Time)> = self
+            .spans()
+            .filter(|(_, s)| s.kind == SpanKind::Compute)
+            .map(|(_, s)| (s.start, s.end))
+            .collect();
+        computes.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut union: Vec<(Time, Time)> = Vec::with_capacity(computes.len());
+        for (s, e) in computes {
+            match union.last_mut() {
+                Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                _ => union.push((s, e)),
+            }
+        }
+        union
+    }
+
+    fn uncovered_load_against(&self, device: usize, union: &[(Time, Time)]) -> Time {
+        let Some(lane) = self.lanes.get(device) else {
+            return 0.0;
+        };
+        let mut loads: Vec<(Time, Time)> = lane
             .spans
             .iter()
-            .filter(|s| s.device == device && s.kind == SpanKind::Load)
+            .filter(|s| s.kind == SpanKind::Load)
             .map(|s| (s.start, s.end))
             .collect();
-        let computes: Vec<(Time, Time)> = self
-            .spans
-            .iter()
-            .filter(|s| s.kind == SpanKind::Compute)
-            .map(|s| (s.start, s.end))
-            .collect();
+        if loads.is_empty() {
+            return 0.0;
+        }
+        loads.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        // Sweep: loads and the union are both sorted, so the cursor into
+        // the union only moves forward across loads.
         let mut uncovered = 0.0;
+        let mut ci = 0usize;
         for (ls, le) in loads {
-            // Subtract the portion of [ls, le] covered by any compute span
-            // anywhere in the pipeline (loads overlap with *system* work).
             let mut covered = 0.0;
-            for &(cs, ce) in &computes {
-                let lo = ls.max(cs);
-                let hi = le.min(ce);
+            // Skip covered intervals that end before this load starts.
+            while ci < union.len() && union[ci].1 <= ls {
+                ci += 1;
+            }
+            let mut j = ci;
+            while j < union.len() && union[j].0 < le {
+                let lo = ls.max(union[j].0);
+                let hi = le.min(union[j].1);
                 if hi > lo {
                     covered += hi - lo;
                 }
+                if union[j].1 >= le {
+                    break;
+                }
+                j += 1;
             }
             uncovered += ((le - ls) - covered).max(0.0);
         }
         uncovered
     }
 
-    /// Render an ASCII Gantt chart with `width` columns.
+    /// Render an ASCII Gantt chart with `width` columns (needs `Full`).
     pub fn render(&self, devices: usize, width: usize) -> String {
         let horizon = self.end_time().max(1e-9);
         let scale = width as f64 / horizon;
@@ -122,7 +350,7 @@ impl Trace {
         ));
         for dev in 0..devices {
             let mut lane = vec![' '; width];
-            for s in self.spans.iter().filter(|s| s.device == dev) {
+            for s in self.device_spans(dev) {
                 let a = ((s.start * scale) as usize).min(width - 1);
                 let b = ((s.end * scale).ceil() as usize).clamp(a + 1, width);
                 for c in lane.iter_mut().take(b).skip(a) {
@@ -154,6 +382,7 @@ mod tests {
         assert_eq!(t.busy(0, SpanKind::Load), 1.0);
         assert_eq!(t.busy(1, SpanKind::Compute), 5.0);
         assert_eq!(t.end_time(), 5.0);
+        assert_eq!(t.span_count(), 4);
     }
 
     #[test]
@@ -175,6 +404,42 @@ mod tests {
     }
 
     #[test]
+    fn overlapping_computes_do_not_double_cover() {
+        let mut t = Trace::new();
+        // Two overlapping computes cover [0, 3]; the load is 0..4, so one
+        // second must remain uncovered (the old quadratic implementation
+        // would have counted 5s of cover and clamped to zero).
+        t.push(0, SpanKind::Load, "l", 0.0, 4.0);
+        t.push(1, SpanKind::Compute, "a", 0.0, 3.0);
+        t.push(2, SpanKind::Compute, "b", 1.0, 3.0);
+        assert!((t.uncovered_load(0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multiple_loads_sweep_correctly() {
+        let mut t = Trace::new();
+        t.push(0, SpanKind::Load, "l1", 0.0, 2.0);
+        t.push(0, SpanKind::Load, "l2", 5.0, 8.0);
+        t.push(1, SpanKind::Compute, "c1", 1.0, 6.0);
+        // l1 covered for 1s (1..2), l2 covered for 1s (5..6).
+        assert!((t.uncovered_load(0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uncovered_loads_matches_per_device_queries() {
+        let mut t = Trace::new();
+        t.push(0, SpanKind::Load, "l", 0.0, 4.0);
+        t.push(1, SpanKind::Load, "l", 2.0, 6.0);
+        t.push(2, SpanKind::Compute, "c", 1.0, 3.0);
+        let all = t.uncovered_loads();
+        assert_eq!(all.len(), 3);
+        for (dev, &v) in all.iter().enumerate() {
+            assert!((v - t.uncovered_load(dev)).abs() < 1e-12, "device {dev}");
+        }
+        assert_eq!(all[2], 0.0, "compute-only lane has no loads");
+    }
+
+    #[test]
     fn render_shows_lanes() {
         let mut t = Trace::new();
         t.push(0, SpanKind::Compute, "a", 0.0, 0.5);
@@ -184,5 +449,70 @@ mod tests {
         assert!(s.contains("dev1"));
         assert!(s.contains('#'));
         assert!(s.contains('L'));
+    }
+
+    #[test]
+    fn aggregate_mode_accumulates_without_spans() {
+        let mut t = Trace::with_mode(TraceMode::Aggregate);
+        t.push(0, SpanKind::Compute, Label::None, 0.0, 1.5);
+        t.push(0, SpanKind::Compute, Label::None, 2.0, 3.0);
+        assert_eq!(t.span_count(), 0);
+        assert!((t.busy(0, SpanKind::Compute) - 2.5).abs() < 1e-12);
+        assert_eq!(t.end_time(), 3.0);
+    }
+
+    #[test]
+    fn off_mode_records_only_horizon() {
+        let mut t = Trace::with_mode(TraceMode::Off);
+        t.push(3, SpanKind::Load, Label::None, 0.0, 2.0);
+        assert_eq!(t.span_count(), 0);
+        assert_eq!(t.busy(3, SpanKind::Load), 0.0);
+        assert_eq!(t.uncovered_load(3), 0.0);
+        assert_eq!(t.end_time(), 2.0);
+    }
+
+    #[test]
+    fn labels_format_like_the_old_strings() {
+        assert_eq!(Label::SegLoad { step: 3, seg: 1 }.to_string(), "s3g1");
+        assert_eq!(
+            Label::Micro { m: 2, phase: MicroPhase::Hop }.to_string(),
+            "m2"
+        );
+        assert_eq!(
+            Label::Micro { m: 2, phase: MicroPhase::Resident }.to_string(),
+            "m2r"
+        );
+        assert_eq!(
+            Label::Micro { m: 0, phase: MicroPhase::Offloaded }.to_string(),
+            "m0o"
+        );
+        assert_eq!(Label::KvTo { device: 4 }.to_string(), "->d4");
+        assert_eq!(Label::Step { tag: "sync", step: 7 }.to_string(), "sync7");
+        assert_eq!(Label::Static("kv-spill").to_string(), "kv-spill");
+        assert_eq!(Label::from("x"), Label::Static("x"));
+    }
+
+    #[test]
+    fn labels_are_small_and_copy() {
+        // The whole point: a span must stay cheap enough to emit millions
+        // of times without heap traffic (and carries no redundant device
+        // index — the lane implies it).
+        assert!(std::mem::size_of::<Label>() <= 24);
+        assert!(std::mem::size_of::<Span>() <= 48);
+        let l = Label::SegLoad { step: 1, seg: 2 };
+        let l2 = l; // Copy
+        assert_eq!(l, l2);
+    }
+
+    #[test]
+    fn device_spans_are_per_lane() {
+        let mut t = Trace::new();
+        t.push(1, SpanKind::Compute, "a", 0.0, 1.0);
+        t.push(0, SpanKind::Load, "b", 0.0, 1.0);
+        t.push(1, SpanKind::Comm, "c", 1.0, 2.0);
+        assert_eq!(t.device_spans(0).len(), 1);
+        assert_eq!(t.device_spans(1).len(), 2);
+        assert_eq!(t.device_spans(9).len(), 0);
+        assert_eq!(t.spans().count(), 3);
     }
 }

@@ -3,9 +3,17 @@
 //! Benches are `harness = false` binaries: they build a [`Bench`], register
 //! timed closures and *table rows* (the paper-figure regenerators print the
 //! same rows/series the paper reports), and call [`Bench::finish`].
+//!
+//! `finish` also emits a machine-readable `BENCH_<title>.json` next to the
+//! process working directory (override the directory with the
+//! `LIME_BENCH_DIR` env var), and — when a previous JSON exists — prints the
+//! per-measurement speedup against it before overwriting. That file is the
+//! perf trajectory record: commit the before/after pair whenever a PR
+//! touches a hot path. See README.md §Benchmarks for the schema.
 
 use std::time::Instant;
 
+use super::json::{obj, Json};
 use super::stats::{summarize, Summary};
 
 /// A registered measurement.
@@ -66,8 +74,111 @@ impl Bench {
         println!("  {label:58} {value}");
     }
 
+    /// Machine-readable snapshot of every timed measurement
+    /// (schema `lime-bench-v1`).
+    pub fn json(&self) -> Json {
+        let measurements: Vec<Json> = self
+            .measurements
+            .iter()
+            .map(|m| {
+                obj(&[
+                    ("name", m.name.as_str().into()),
+                    ("n", m.summary.n.into()),
+                    ("mean_s", m.summary.mean.into()),
+                    ("std_dev_s", m.summary.std_dev.into()),
+                    ("min_s", m.summary.min.into()),
+                    ("max_s", m.summary.max.into()),
+                    ("p50_s", m.summary.p50.into()),
+                    ("p90_s", m.summary.p90.into()),
+                    ("p99_s", m.summary.p99.into()),
+                ])
+            })
+            .collect();
+        obj(&[
+            ("schema", "lime-bench-v1".into()),
+            ("bench", self.title.as_str().into()),
+            ("measurements", Json::Arr(measurements)),
+        ])
+    }
+
+    /// `BENCH_<title>.json`, with the title sanitized to `[A-Za-z0-9_]`.
+    pub fn json_file_name(&self) -> String {
+        let sanitized: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        format!("BENCH_{sanitized}.json")
+    }
+
+    /// Output path: `LIME_BENCH_DIR` (default ".") + [`Bench::json_file_name`].
+    pub fn json_path(&self) -> std::path::PathBuf {
+        let dir = std::env::var("LIME_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        std::path::Path::new(&dir).join(self.json_file_name())
+    }
+
+    /// Print per-measurement speedups of `self` against a previously
+    /// written `lime-bench-v1` JSON (matched by measurement name).
+    fn print_deltas(&self, prev: &Json) {
+        let Some(prev_measurements) = prev.get("measurements").and_then(Json::as_arr) else {
+            return;
+        };
+        let mut prev_means = std::collections::BTreeMap::new();
+        for m in prev_measurements {
+            if let (Some(name), Some(mean)) = (
+                m.get("name").and_then(Json::as_str),
+                m.get("mean_s").and_then(Json::as_f64),
+            ) {
+                prev_means.insert(name.to_string(), mean);
+            }
+        }
+        let mut printed_header = false;
+        for m in &self.measurements {
+            let Some(&prev_mean) = prev_means.get(&m.name) else {
+                continue;
+            };
+            if prev_mean <= 0.0 || m.summary.mean <= 0.0 {
+                continue;
+            }
+            if !printed_header {
+                println!("\n-- vs previous run --");
+                printed_header = true;
+            }
+            let speedup = prev_mean / m.summary.mean;
+            println!(
+                "  {:40} {:>12} -> {:>12}  ({speedup:.2}x {})",
+                m.name,
+                fmt_secs(prev_mean),
+                fmt_secs(m.summary.mean),
+                if speedup >= 1.0 { "faster" } else { "slower" }
+            );
+        }
+    }
+
     pub fn finish(self) {
-        println!("=== bench {} done ({} timed measurements) ===", self.title, self.measurements.len());
+        let path = self.json_path();
+        self.finish_at(&path);
+    }
+
+    /// [`Bench::finish`] with an explicit output path (tests route output
+    /// to a temp dir this way without touching process-global env).
+    pub fn finish_at(self, path: &std::path::Path) {
+        if !self.measurements.is_empty() {
+            if let Ok(src) = std::fs::read_to_string(path) {
+                if let Ok(prev) = Json::parse(&src) {
+                    self.print_deltas(&prev);
+                }
+            }
+            match std::fs::write(path, format!("{}\n", self.json())) {
+                Ok(()) => println!("  wrote {}", path.display()),
+                Err(e) => eprintln!("  could not write {}: {e}", path.display()),
+            }
+        }
+        println!(
+            "=== bench {} done ({} timed measurements) ===",
+            self.title,
+            self.measurements.len()
+        );
     }
 }
 
@@ -114,10 +225,69 @@ mod tests {
 
     #[test]
     fn time_records() {
+        // No finish(): unit tests must not write BENCH_*.json into the repo.
         let mut b = Bench::new("self-test");
         let s = b.time("noop", 1, 5, || {});
         assert_eq!(s.n, 5);
         assert_eq!(b.measurements.len(), 1);
-        b.finish();
+    }
+
+    #[test]
+    fn json_schema_round_trips() {
+        let mut b = Bench::new("json-self-test");
+        b.time("work", 0, 3, || {
+            std::hint::black_box(1 + 1);
+        });
+        let j = b.json();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("lime-bench-v1"));
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("json-self-test"));
+        let ms = j.get("measurements").unwrap().as_arr().unwrap();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].get("name").unwrap().as_str(), Some("work"));
+        assert_eq!(ms[0].get("n").unwrap().as_usize(), Some(3));
+        assert!(ms[0].get("mean_s").unwrap().as_f64().unwrap() >= 0.0);
+        // The writer's output must parse back identically.
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(reparsed, j);
+    }
+
+    #[test]
+    fn json_path_is_sanitized() {
+        let b = Bench::new("weird title/with:stuff");
+        let p = b.json_path();
+        let name = p.file_name().unwrap().to_str().unwrap();
+        assert_eq!(name, "BENCH_weird_title_with_stuff.json");
+    }
+
+    #[test]
+    fn finish_writes_json_and_overwrites_on_rerun() {
+        // Route output into a temp dir via finish_at — never through
+        // process-global env, which other test threads read concurrently.
+        let dir = std::env::temp_dir().join(format!("lime_bench_finish_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let mut b = Bench::new("finish-self-test");
+        b.time("work", 0, 2, || {});
+        let path = dir.join(b.json_file_name());
+        b.finish_at(&path);
+        let first = std::fs::read_to_string(&path).expect("finish wrote the JSON");
+        let parsed = Json::parse(first.trim()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("finish-self-test"));
+        assert_eq!(
+            parsed.get("measurements").unwrap().as_arr().unwrap().len(),
+            1
+        );
+
+        // Second run: exercises the previous-file parse + delta path, then
+        // overwrites with the fresh snapshot.
+        let mut b2 = Bench::new("finish-self-test");
+        b2.time("work", 0, 3, || {});
+        b2.finish_at(&path);
+        let second = std::fs::read_to_string(&path).unwrap();
+        let reparsed = Json::parse(second.trim()).unwrap();
+        let ms = reparsed.get("measurements").unwrap().as_arr().unwrap();
+        assert_eq!(ms[0].get("n").unwrap().as_usize(), Some(3), "overwritten");
+
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

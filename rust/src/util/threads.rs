@@ -1,0 +1,148 @@
+//! Scoped-thread fan-out for embarrassingly parallel sweeps (the offline
+//! scheduler's `#Seg` candidates, the experiment harness's cell grids).
+//!
+//! No thread pool or external crates: `std::thread::scope` workers write
+//! results *by index* into disjoint chunks of the output, so the caller
+//! observes exactly the sequential order — parallelism never changes which
+//! plan wins a tie or how a grid is printed.
+
+thread_local! {
+    /// Set for the lifetime of a [`par_map_indexed`] worker thread, so
+    /// nested sweeps (a grid cell calling `plan()`, which fans out again)
+    /// fall back to sequential instead of multiplying OS threads.
+    static IN_PARALLEL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Worker-thread count: 1 inside a [`par_map_indexed`] worker (nested
+/// fan-out would oversubscribe), else the `LIME_THREADS` env override, else
+/// the machine's available parallelism.
+pub fn default_threads() -> usize {
+    if IN_PARALLEL_WORKER.with(|flag| flag.get()) {
+        return 1;
+    }
+    if let Ok(v) = std::env::var("LIME_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every job and return results in job order.
+///
+/// Workers claim jobs dynamically from a shared atomic cursor (cheap jobs
+/// don't strand a worker while another serializes all the expensive ones —
+/// experiment grids mix both by orders of magnitude) and send `(index,
+/// result)` back; results are placed by index, so the output is
+/// bit-identical to the sequential `jobs.iter().map(f)` loop regardless of
+/// `threads` or scheduling (tested against thread counts 1, 2 and 8).
+pub fn par_map_indexed<J, T>(
+    threads: usize,
+    jobs: &[J],
+    f: impl Fn(&J) -> T + Sync,
+) -> Vec<T>
+where
+    J: Sync,
+    T: Send,
+{
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, jobs.len());
+    let mut out: Vec<Option<T>> = Vec::with_capacity(jobs.len());
+    out.resize_with(jobs.len(), || None);
+    if threads <= 1 {
+        for (slot, job) in out.iter_mut().zip(jobs) {
+            *slot = Some(f(job));
+        }
+    } else {
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, T)>();
+        let f = &f;
+        let next = &next;
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let tx = tx.clone();
+                scope.spawn(move || {
+                    IN_PARALLEL_WORKER.with(|flag| flag.set(true));
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        if tx.send((i, f(&jobs[i]))).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(tx); // workers hold the remaining senders
+        });
+        // The scope joined every worker, so the channel is closed and this
+        // drains without blocking.
+        for (i, result) in rx {
+            out[i] = Some(result);
+        }
+    }
+    out.into_iter()
+        .map(|slot| slot.expect("every job index was claimed exactly once"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_job_order() {
+        let jobs: Vec<usize> = (0..100).collect();
+        let seq = par_map_indexed(1, &jobs, |&x| x * x);
+        let par = par_map_indexed(4, &jobs, |&x| x * x);
+        assert_eq!(seq, par);
+        assert_eq!(seq[7], 49);
+    }
+
+    #[test]
+    fn more_threads_than_jobs_is_fine() {
+        let jobs = vec![1, 2, 3];
+        assert_eq!(par_map_indexed(64, &jobs, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_jobs_yield_empty() {
+        let jobs: Vec<u32> = Vec::new();
+        assert!(par_map_indexed(8, &jobs, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let jobs = vec![5];
+        assert_eq!(par_map_indexed(0, &jobs, |&x| x * 2), vec![10]);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn nested_fanout_is_capped_to_sequential() {
+        // Inside a worker, default_threads() must report 1 so nested
+        // sweeps (grid cell -> plan()) don't multiply OS threads.
+        let jobs = vec![(); 4];
+        let seen = par_map_indexed(4, &jobs, |_| default_threads());
+        assert!(seen.iter().all(|&n| n == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn results_actually_come_from_workers() {
+        // Heavier fan-out: every index mapped exactly once.
+        let jobs: Vec<usize> = (0..1000).collect();
+        let got = par_map_indexed(8, &jobs, |&x| x);
+        assert_eq!(got, jobs);
+    }
+}

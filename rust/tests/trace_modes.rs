@@ -1,0 +1,243 @@
+//! Trace-mode and parallelism invariants (property tests over the in-repo
+//! `util::prop` framework):
+//!
+//! * `TraceMode` is observational only — `Off`, `Aggregate` and `Full` runs
+//!   of the same simulation produce bit-identical `SimResult` timing
+//!   fields across seeds, clusters, patterns and executors.
+//! * The offline scheduler's `#Seg` sweep is deterministic under
+//!   parallelism — `plan()` returns the same allocation and cost curve for
+//!   every worker-thread count.
+
+use lime::cluster::Cluster;
+use lime::model::ModelSpec;
+use lime::net::BandwidthTrace;
+use lime::pipeline::{run_interleaved, run_traditional, ExecOptions, SimResult, TradOptions};
+use lime::plan::{plan_with_threads, PlanOptions};
+use lime::sim::TraceMode;
+use lime::util::bytes::mbps;
+use lime::util::prop::{check, pair, usize_in, Config, PropResult};
+
+fn popts() -> PlanOptions {
+    PlanOptions {
+        empirical_tokens: 128,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    }
+}
+
+fn cluster_by_index(idx: usize) -> Cluster {
+    match idx {
+        0 => Cluster::env_e3(),
+        1 => Cluster::lowmem_setting1(),
+        _ => Cluster::lowmem_setting3(),
+    }
+}
+
+/// The timing-relevant fields of a `SimResult` (everything except the
+/// trace, which is exactly what the modes are allowed to change).
+fn timing_fields(r: &SimResult) -> (f64, &[f64], u64, usize, usize) {
+    (
+        r.total_time,
+        r.step_times.as_slice(),
+        r.kv_tokens_transferred,
+        r.online_plans_fired,
+        r.emergency_steps,
+    )
+}
+
+#[test]
+fn prop_trace_mode_never_changes_interleaved_timing() {
+    // Pre-plan each cluster once; the property then sweeps (cluster, seed,
+    // micro, tokens) and compares Off/Aggregate/Full runs bitwise.
+    let spec = ModelSpec::llama33_70b();
+    let setups: Vec<(lime::plan::allocation::Allocation, Cluster)> = (0..3)
+        .map(|idx| {
+            let cluster = cluster_by_index(idx);
+            let alloc = lime::plan::plan(&spec, &cluster, &popts())
+                .expect("planning the test cluster")
+                .allocation;
+            (alloc, cluster)
+        })
+        .collect();
+
+    let gen = pair(
+        pair(usize_in(0, 2), usize_in(0, 1000)),
+        pair(usize_in(1, 5), usize_in(4, 24)),
+    );
+    let cfg = Config {
+        cases: 16,
+        seed: 0x7_ACE,
+        max_shrink_steps: 64,
+    };
+    let result = check(&cfg, &gen, |&((cluster_idx, seed), (micro, tokens))| {
+        let (alloc, cluster) = &setups[cluster_idx];
+        let bw = BandwidthTrace::fixed_mbps(100.0 + (seed % 150) as f64);
+        let run = |mode: TraceMode| {
+            run_interleaved(
+                alloc,
+                cluster,
+                &bw,
+                micro,
+                tokens,
+                &ExecOptions {
+                    seed: seed as u64,
+                    trace_mode: mode,
+                    ..ExecOptions::default()
+                },
+            )
+        };
+        let full = run(TraceMode::Full);
+        let agg = run(TraceMode::Aggregate);
+        let off = run(TraceMode::Off);
+        if timing_fields(&full) != timing_fields(&off) {
+            return Err(format!(
+                "Off differs from Full: {:?} vs {:?}",
+                timing_fields(&off),
+                timing_fields(&full)
+            ));
+        }
+        if timing_fields(&full) != timing_fields(&agg) {
+            return Err("Aggregate differs from Full".to_string());
+        }
+        // Mode contracts: Full materializes spans, the others do not; the
+        // busy accumulators agree between Aggregate and Full.
+        if full.trace.span_count() == 0 {
+            return Err("Full trace recorded no spans".into());
+        }
+        if off.trace.span_count() != 0 || agg.trace.span_count() != 0 {
+            return Err("non-Full trace materialized spans".into());
+        }
+        for dev in 0..cluster.len() {
+            for kind in [
+                lime::sim::SpanKind::Compute,
+                lime::sim::SpanKind::Load,
+                lime::sim::SpanKind::Comm,
+            ] {
+                let a = full.trace.busy(dev, kind);
+                let b = agg.trace.busy(dev, kind);
+                if (a - b).abs() > 1e-9 * a.abs().max(1.0) {
+                    return Err(format!("busy({dev}, {kind:?}) {a} != {b}"));
+                }
+            }
+        }
+        Ok(())
+    });
+    match result {
+        PropResult::Pass { .. } => {}
+        PropResult::Fail {
+            minimal,
+            seed,
+            message,
+        } => panic!("trace-mode property failed (seed {seed}): {minimal:?}\n{message}"),
+    }
+}
+
+#[test]
+fn prop_trace_mode_never_changes_traditional_timing() {
+    let spec = ModelSpec::llama33_70b();
+    let cluster = Cluster::lowmem_setting1();
+    let alloc = lime::plan::plan(&spec, &cluster, &popts())
+        .expect("planning")
+        .allocation;
+
+    let gen = pair(usize_in(0, 1000), pair(usize_in(1, 4), usize_in(4, 16)));
+    let cfg = Config {
+        cases: 12,
+        seed: 0x7_AD,
+        max_shrink_steps: 64,
+    };
+    let result = check(&cfg, &gen, |&(seed, (micro, tokens))| {
+        let bw = BandwidthTrace::fixed_mbps(200.0);
+        let run = |mode: TraceMode| {
+            run_traditional(
+                &alloc,
+                &cluster,
+                &bw,
+                micro,
+                tokens,
+                &TradOptions {
+                    seed: seed as u64,
+                    trace_mode: mode,
+                    ..TradOptions::default()
+                },
+            )
+        };
+        let full = run(TraceMode::Full);
+        let off = run(TraceMode::Off);
+        if timing_fields(&full) != timing_fields(&off) {
+            return Err("traditional executor timing depends on TraceMode".into());
+        }
+        Ok(())
+    });
+    assert!(matches!(result, PropResult::Pass { .. }), "{result:?}");
+}
+
+#[test]
+fn prop_plan_is_thread_count_invariant() {
+    // Random (cluster, model, thread-count) draws: the parallel #Seg sweep
+    // must return exactly the sequential scheduler's output.
+    let gen = pair(pair(usize_in(0, 2), usize_in(0, 2)), usize_in(1, 9));
+    let cfg = Config {
+        cases: 10,
+        seed: 0x5E65,
+        max_shrink_steps: 32,
+    };
+    let result = check(&cfg, &gen, |&((cluster_idx, model_idx), threads)| {
+        let cluster = cluster_by_index(cluster_idx);
+        let spec = match model_idx {
+            0 => ModelSpec::llama2_13b(),
+            1 => ModelSpec::qwen3_32b(),
+            _ => ModelSpec::llama33_70b(),
+        };
+        let o = popts();
+        let seq = plan_with_threads(&spec, &cluster, &o, 1);
+        let par = plan_with_threads(&spec, &cluster, &o, threads);
+        match (seq, par) {
+            (Err(a), Err(b)) => {
+                if a == b {
+                    Ok(())
+                } else {
+                    Err(format!("errors differ: {a:?} vs {b:?}"))
+                }
+            }
+            (Ok(a), Ok(b)) => {
+                if a.allocation != b.allocation {
+                    return Err(format!(
+                        "allocation differs at {threads} threads:\n{}\nvs\n{}",
+                        a.allocation.describe(),
+                        b.allocation.describe()
+                    ));
+                }
+                if a.seg_curve != b.seg_curve {
+                    return Err("seg_curve differs".into());
+                }
+                Ok(())
+            }
+            _ => Err("feasibility differs between thread counts".into()),
+        }
+    });
+    assert!(matches!(result, PropResult::Pass { .. }), "{result:?}");
+}
+
+#[test]
+fn full_trace_runs_are_deterministic() {
+    // The acceptance determinism check: two identical Full-trace runs agree
+    // bitwise on every timing field (and on the trace itself).
+    let spec = ModelSpec::llama33_70b();
+    let cluster = Cluster::lowmem_setting2();
+    let alloc = lime::plan::plan(&spec, &cluster, &popts())
+        .expect("planning")
+        .allocation;
+    let bw = BandwidthTrace::fixed_mbps(150.0);
+    let a = run_interleaved(&alloc, &cluster, &bw, 3, 48, &ExecOptions::default());
+    let b = run_interleaved(&alloc, &cluster, &bw, 3, 48, &ExecOptions::default());
+    assert_eq!(a.total_time, b.total_time);
+    assert_eq!(a.step_times, b.step_times);
+    assert_eq!(a.kv_tokens_transferred, b.kv_tokens_transferred);
+    assert_eq!(a.online_plans_fired, b.online_plans_fired);
+    assert_eq!(a.emergency_steps, b.emergency_steps);
+    assert_eq!(a.trace.span_count(), b.trace.span_count());
+    for (sa, sb) in a.trace.spans().zip(b.trace.spans()) {
+        assert_eq!(sa, sb);
+    }
+}
