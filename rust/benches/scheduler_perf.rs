@@ -4,15 +4,26 @@
 //!
 //! The canonical `interleaved_sim_*` measurements run with
 //! `TraceMode::Off` — the configuration the experiment grids use — and the
-//! `_fulltrace` variants quantify what span materialization costs on top.
-//! `offline_plan_80L_5dev` runs with the default worker-thread fan-out;
-//! `offline_plan_80L_5dev_1thread` is the sequential reference.
+//! `_fulltrace`/`_aggtrace` variants quantify what span materialization /
+//! online uncovered-load accounting cost on top.
+//! `offline_plan_80L_5dev` runs the `#Seg` sweep on the persistent
+//! work-stealing pool (`util::pool`); `offline_plan_80L_5dev_1thread` is
+//! the sequential reference. The `experiments_grid_e1_2bw*` pair measures
+//! full-grid sweep throughput — grid cells fan out on the pool and LIME
+//! cells nest their `plan()` candidates back into it — against the same
+//! grid evaluated sequentially.
 //!
-//! `Bench::finish` writes `BENCH_scheduler_perf.json` and prints speedups
-//! against the previous run's file: run once on the baseline commit, once
-//! after a change, and commit both (see README.md §Benchmarks).
+//! Pin the worker count with `LIME_THREADS=<n>` for stable timings (CI
+//! does). `Bench::finish` writes `BENCH_scheduler_perf.json` and prints
+//! speedups against the previous run's file: run once on the baseline
+//! commit, once after a change, and commit both (see README.md
+//! §Benchmarks). CI additionally diffs the fresh JSON against the
+//! committed `ci/BENCH_scheduler_perf.baseline.json` via `lime
+//! bench-check`, failing loudly outside the tolerance band.
 
+use lime::baselines::all;
 use lime::cluster::Cluster;
+use lime::experiments::{grid_cells, grid_cells_sequential};
 use lime::model::ModelSpec;
 use lime::net::BandwidthTrace;
 use lime::pipeline::{run_interleaved, ExecOptions};
@@ -23,6 +34,10 @@ use lime::util::bytes::mbps;
 
 fn main() {
     let mut b = Bench::new("scheduler_perf");
+    b.row(
+        "pool workers (LIME_THREADS to pin)",
+        &format!("{}", lime::util::pool::configured_workers()),
+    );
     let spec = ModelSpec::llama33_70b();
     let cluster = Cluster::lowmem_setting1();
     let opts = PlanOptions {
@@ -48,6 +63,10 @@ fn main() {
         trace_mode: TraceMode::Off,
         ..ExecOptions::default()
     };
+    let agg = ExecOptions {
+        trace_mode: TraceMode::Aggregate,
+        ..ExecOptions::default()
+    };
     let full = ExecOptions::default();
     b.time("interleaved_sim_64tok_sporadic", 1, 10, || {
         let _ = run_interleaved(&alloc, &cluster, &bw, 1, 64, &off);
@@ -61,6 +80,13 @@ fn main() {
     b.time("interleaved_sim_64tok_bursty5_fulltrace", 1, 10, || {
         let _ = run_interleaved(&alloc, &cluster, &bw, 5, 64, &full);
     });
+    // Aggregate mode now maintains the uncovered-load structures online —
+    // T_uncover cross-checks at near-Off cost, no spans materialized.
+    b.time("interleaved_sim_64tok_bursty5_aggtrace", 1, 10, || {
+        let r = run_interleaved(&alloc, &cluster, &bw, 5, 64, &agg);
+        let acc: f64 = r.trace.uncovered_loads().iter().sum();
+        std::hint::black_box(acc);
+    });
 
     // Trace query path: uncovered_load is a sort/sweep over the span lanes.
     let traced = run_interleaved(&alloc, &cluster, &bw, 5, 64, &full);
@@ -72,6 +98,34 @@ fn main() {
         let acc: f64 = traced.trace.uncovered_loads().iter().sum();
         std::hint::black_box(acc);
     });
+
+    // Full-grid sweep throughput: 7 methods × 2 bandwidths × 2 patterns on
+    // E1. Pool cells nest LIME's #Seg candidates back into the same pool;
+    // the sequential variant is the single-thread reference the speedup is
+    // measured against.
+    let grid_spec = ModelSpec::llama2_13b();
+    let grid_cluster = Cluster::env_e1();
+    let methods = all();
+    let bandwidths = [100.0, 200.0];
+    let pool_s = b
+        .time("experiments_grid_e1_2bw (pool, nested plan)", 1, 5, || {
+            let cells = grid_cells(&grid_spec, &grid_cluster, &methods, &bandwidths, 4);
+            std::hint::black_box(cells.len());
+        })
+        .mean;
+    let seq_s = b
+        .time("experiments_grid_e1_2bw_sequential", 1, 5, || {
+            let cells =
+                grid_cells_sequential(&grid_spec, &grid_cluster, &methods, &bandwidths, 4);
+            std::hint::black_box(cells.len());
+        })
+        .mean;
+    if pool_s > 0.0 {
+        b.row(
+            "grid sweep speedup (sequential / pool)",
+            &format!("{:.2}x", seq_s / pool_s),
+        );
+    }
 
     // DES engine raw throughput.
     b.time("des_engine_1M_events", 1, 5, || {

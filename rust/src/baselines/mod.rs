@@ -44,9 +44,13 @@ impl Outcome {
 }
 
 /// A comparison method. `Sync` so the experiment harness can fan a method
-/// set out across scoped threads.
+/// set out across the work-stealing pool's workers.
 pub trait Method: Sync {
     fn name(&self) -> &'static str;
+
+    /// Stable machine-readable identifier (the `by_name` key) — used by
+    /// sweep JSON artifacts so notebooks never parse display names.
+    fn key(&self) -> &'static str;
 
     /// Run with an explicit [`TraceMode`]. Experiment grids pass
     /// `TraceMode::Off` (they only read `SimResult` numbers); the CLI's
@@ -99,6 +103,18 @@ pub fn by_name(name: &str) -> Option<Box<dyn Method>> {
             kv_transfer: true,
             planner: PlannerMode::FullLayer,
         })),
+        "lime-no-planner-no-kv-transfer" => Some(Box::new(Lime {
+            kv_transfer: false,
+            planner: PlannerMode::FullLayer,
+        })),
+        "lime-planner-off" => Some(Box::new(Lime {
+            kv_transfer: true,
+            planner: PlannerMode::Off,
+        })),
+        "lime-planner-off-no-kv-transfer" => Some(Box::new(Lime {
+            kv_transfer: false,
+            planner: PlannerMode::Off,
+        })),
         "pp" | "pipeline" => Some(Box::new(PipelineParallelism)),
         "pp-offload" | "pipeline-offload" => Some(Box::new(PipelineOffload)),
         "edgeshard" => Some(Box::new(EdgeShardMethod)),
@@ -143,8 +159,23 @@ impl Method for Lime {
         match (self.kv_transfer, self.planner) {
             (true, PlannerMode::FineGrained) => "LIME",
             (false, PlannerMode::FineGrained) => "LIME w/o KV transfer",
-            (_, PlannerMode::FullLayer) => "LIME w/o memory-aware planner",
-            _ => "LIME (custom)",
+            (true, PlannerMode::FullLayer) => "LIME w/o memory-aware planner",
+            (false, PlannerMode::FullLayer) => "LIME w/o planner or KV transfer",
+            (true, PlannerMode::Off) => "LIME w/o online planning",
+            (false, PlannerMode::Off) => "LIME w/o online planning or KV transfer",
+        }
+    }
+
+    // Exhaustive over both ablation axes so every configuration gets a
+    // distinct, by_name-round-trippable key (sweep JSON relies on this).
+    fn key(&self) -> &'static str {
+        match (self.kv_transfer, self.planner) {
+            (true, PlannerMode::FineGrained) => "lime",
+            (false, PlannerMode::FineGrained) => "lime-no-kv-transfer",
+            (true, PlannerMode::FullLayer) => "lime-no-planner",
+            (false, PlannerMode::FullLayer) => "lime-no-planner-no-kv-transfer",
+            (true, PlannerMode::Off) => "lime-planner-off",
+            (false, PlannerMode::Off) => "lime-planner-off-no-kv-transfer",
         }
     }
 
@@ -239,6 +270,10 @@ impl Method for PipelineParallelism {
         "Pipeline parallelism"
     }
 
+    fn key(&self) -> &'static str {
+        "pp"
+    }
+
     fn run_mode(
         &self,
         spec: &ModelSpec,
@@ -276,6 +311,10 @@ impl Method for PipelineOffload {
         "Pipeline + offloading"
     }
 
+    fn key(&self) -> &'static str {
+        "pp-offload"
+    }
+
     fn run_mode(
         &self,
         spec: &ModelSpec,
@@ -311,6 +350,10 @@ pub struct EdgeShardMethod;
 impl Method for EdgeShardMethod {
     fn name(&self) -> &'static str {
         "EdgeShard"
+    }
+
+    fn key(&self) -> &'static str {
+        "edgeshard"
     }
 
     fn run_mode(
@@ -358,6 +401,10 @@ impl Method for Galaxy {
         "Galaxy"
     }
 
+    fn key(&self) -> &'static str {
+        "galaxy"
+    }
+
     fn run_mode(
         &self,
         spec: &ModelSpec,
@@ -394,6 +441,10 @@ impl Method for TpiLlm {
         "TPI-LLM"
     }
 
+    fn key(&self) -> &'static str {
+        "tpi-llm"
+    }
+
     fn run_mode(
         &self,
         spec: &ModelSpec,
@@ -424,6 +475,10 @@ pub struct TpiLlmOffload;
 impl Method for TpiLlmOffload {
     fn name(&self) -> &'static str {
         "TPI-LLM + offloading"
+    }
+
+    fn key(&self) -> &'static str {
+        "tpi-llm-offload"
     }
 
     fn run_mode(
@@ -482,9 +537,33 @@ mod tests {
             "lime-no-kv-transfer",
             "lime-no-planner",
         ] {
-            assert!(by_name(key).is_some(), "{key}");
+            let m = by_name(key).expect(key);
+            // Method::key is the by_name key — the sweep-JSON contract.
+            assert_eq!(m.key(), key, "key() must round-trip through by_name");
+            assert!(by_name(m.key()).is_some());
         }
         assert!(by_name("vllm").is_none());
+    }
+
+    #[test]
+    fn every_lime_configuration_has_a_distinct_roundtrip_key() {
+        let mut seen = std::collections::BTreeSet::new();
+        for kv_transfer in [true, false] {
+            for planner in [
+                PlannerMode::FineGrained,
+                PlannerMode::FullLayer,
+                PlannerMode::Off,
+            ] {
+                let lime = Lime {
+                    kv_transfer,
+                    planner,
+                };
+                let key = lime.key();
+                assert!(seen.insert(key), "duplicate key {key}");
+                let back = by_name(key).expect(key);
+                assert_eq!(back.key(), key, "by_name({key}) must reconstruct it");
+            }
+        }
     }
 
     #[test]

@@ -148,6 +148,101 @@ pub fn t_total(
     }
 }
 
+/// Memoized [`comp_time`] over every `(device, layer-count)` pair.
+///
+/// The offline scheduler's `#Seg` sweep evaluates `t_idle`/`t_total` for
+/// dozens of candidate × repair-loop states, and none of the per-layer
+/// compute terms depend on `seg` — so `plan()` builds this table once and
+/// every candidate shares it. Entries are produced by calling
+/// [`comp_time`] itself (memoization, not algebraic re-derivation), so a
+/// lookup is **bit-identical** to the direct call — pinned by the property
+/// test `prop_comp_table_matches_comp_time_bitwise`.
+#[derive(Debug, Clone)]
+pub struct CompTimeTable {
+    /// `per_device[i][l]` = `comp_time(spec, device i, l, ctx, micro)`.
+    per_device: Vec<Vec<f64>>,
+}
+
+impl CompTimeTable {
+    /// Tabulate `comp_time` for layer counts `0..=spec.layers` on every
+    /// device, at the planner's `(ctx, micro)` operating point.
+    pub fn build(spec: &ModelSpec, cluster: &Cluster, ctx: usize, micro: usize) -> Self {
+        CompTimeTable {
+            per_device: cluster
+                .devices
+                .iter()
+                .map(|dev| {
+                    (0..=spec.layers)
+                        .map(|l| comp_time(spec, dev, l, ctx, micro))
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    /// `comp_time(spec, device, layers, ctx, micro)` — O(1) lookup.
+    pub fn get(&self, device: usize, layers: usize) -> f64 {
+        self.per_device[device][layers]
+    }
+}
+
+/// The network term of Eq. 2 — `|D| · h_size / bw` — shared by every
+/// device and every `#Seg` candidate. Precompute once per sweep and pass
+/// to the `*_cached` evaluators.
+pub fn idle_comm_term(spec: &ModelSpec, cluster: &Cluster, micro: usize, bw: f64) -> f64 {
+    cluster.devices.len() as f64 * crate::net::link_transfer_secs(spec.h_size(micro), bw)
+}
+
+/// [`t_idle`] evaluated through a [`CompTimeTable`] (plus the precomputed
+/// [`idle_comm_term`]). Bit-identical to the direct call — same terms in
+/// the same order, each fetched from the memo table.
+pub fn t_idle_cached(table: &CompTimeTable, alloc: &Allocation, i: usize, comm: f64) -> f64 {
+    let a = &alloc.devices[i];
+    let own = table.get(i, a.non_offloaded_layers());
+    let others: f64 = alloc
+        .devices
+        .iter()
+        .enumerate()
+        .filter(|(j, _)| *j != i)
+        .map(|(j, aj)| table.get(j, aj.total_layers))
+        .sum();
+    own + others + comm
+}
+
+/// [`t_total`] evaluated through a [`CompTimeTable`]. Bit-identical to the
+/// direct call for any allocation whose layer counts fit the table.
+pub fn t_total_cached(
+    table: &CompTimeTable,
+    alloc: &Allocation,
+    cluster: &Cluster,
+    micro: usize,
+    bw: f64,
+    comm: f64,
+) -> CostBreakdown {
+    let spec = &alloc.spec;
+    let t_comp: f64 = alloc
+        .devices
+        .iter()
+        .enumerate()
+        .map(|(i, a)| table.get(i, a.total_layers))
+        .sum();
+    let t_comm_v = t_comm(alloc.seg, cluster.len(), spec, micro, bw);
+    let t_uncover = alloc
+        .devices
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            let load = load_time(spec, &cluster.devices[i], a);
+            (load - t_idle_cached(table, alloc, i, comm)).max(0.0)
+        })
+        .fold(0.0, f64::max);
+    CostBreakdown {
+        t_comp,
+        t_comm: t_comm_v,
+        t_uncover,
+    }
+}
+
 /// Memory demand of device `i` under `alloc` after `n_tokens` of KV have
 /// accumulated (Eq. 1 constraint, with `n_i^trans` KV tokens shipped away).
 pub fn mem_demand(
@@ -362,5 +457,82 @@ mod tests {
         let four = comp_time(&spec, &cluster.devices[0], 10, 128, 4);
         assert!(four > one, "more tokens cost more in total");
         assert!(four < 4.0 * one, "but sublinearly (weight reuse)");
+    }
+
+    // ----- incremental-planning memoization: bitwise-equality pins -----
+    //
+    // The #Seg sweep substitutes CompTimeTable lookups (and the hoisted
+    // idle_comm_term) for direct cost calls; these properties pin that the
+    // substitution is *exact*, so the incremental planner provably equals
+    // the term-by-term evaluation it replaced.
+
+    use crate::util::prop::{check, pair, usize_in, Config, PropResult};
+
+    #[test]
+    fn prop_comp_table_matches_comp_time_bitwise() {
+        let (spec, cluster) = toy();
+        let gen = pair(
+            pair(usize_in(0, 1), usize_in(0, 40)),
+            pair(usize_in(1, 2048), usize_in(1, 8)),
+        );
+        let cfg = Config {
+            cases: 40,
+            seed: 0xC057,
+            max_shrink_steps: 64,
+        };
+        let result = check(&cfg, &gen, |&((dev, layers), (ctx, micro))| {
+            let table = CompTimeTable::build(&spec, &cluster, ctx, micro);
+            let direct = comp_time(&spec, &cluster.devices[dev], layers, ctx, micro);
+            let cached = table.get(dev, layers);
+            if direct.to_bits() != cached.to_bits() {
+                return Err(format!("table {cached} != direct {direct}"));
+            }
+            Ok(())
+        });
+        assert!(matches!(result, PropResult::Pass { .. }), "{result:?}");
+    }
+
+    #[test]
+    fn prop_cached_idle_and_total_match_direct_bitwise() {
+        let (spec, cluster) = toy();
+        // Random allocations: per-device totals plus offload splits.
+        let gen = pair(
+            pair(usize_in(0, 20), usize_in(0, 20)),
+            pair(pair(usize_in(0, 6), usize_in(0, 6)), usize_in(1, 6)),
+        );
+        let cfg = Config {
+            cases: 40,
+            seed: 0x1D1E,
+            max_shrink_steps: 64,
+        };
+        let result = check(&cfg, &gen, |&((t0, t1), ((off0, off1), seg))| {
+            let alloc = alloc_with(
+                &spec,
+                &[(t0 + off0, off0), (t1 + off1, off1)],
+                seg,
+            );
+            let ctx = 256;
+            let micro = 2;
+            let bw = crate::util::bytes::mbps(180.0);
+            let table = CompTimeTable::build(&spec, &cluster, ctx, micro);
+            let comm = idle_comm_term(&spec, &cluster, micro, bw);
+            for i in 0..cluster.len() {
+                let direct = t_idle(&alloc, &cluster, i, ctx, micro, bw);
+                let cached = t_idle_cached(&table, &alloc, i, comm);
+                if direct.to_bits() != cached.to_bits() {
+                    return Err(format!("t_idle dev{i}: {cached} != {direct}"));
+                }
+            }
+            let direct = t_total(&alloc, &cluster, ctx, micro, bw);
+            let cached = t_total_cached(&table, &alloc, &cluster, micro, bw, comm);
+            if direct.t_comp.to_bits() != cached.t_comp.to_bits()
+                || direct.t_comm.to_bits() != cached.t_comm.to_bits()
+                || direct.t_uncover.to_bits() != cached.t_uncover.to_bits()
+            {
+                return Err(format!("t_total: {cached:?} != {direct:?}"));
+            }
+            Ok(())
+        });
+        assert!(matches!(result, PropResult::Pass { .. }), "{result:?}");
     }
 }

@@ -2,25 +2,31 @@
 //! for the index). Each runner returns structured rows *and* prints the
 //! same series the paper reports, so the bench targets and the `lime
 //! experiments` subcommand share one implementation. Grids evaluate their
-//! independent cells on scoped worker threads with `TraceMode::Off`
-//! (results written by index — printed tables are order-identical to the
-//! old sequential loops).
+//! independent cells on the persistent work-stealing pool
+//! (`util::pool`) with `TraceMode::Off`; a cell's own fan-out (LIME's
+//! `plan()` sweeping its `#Seg` candidates) nests onto the same pool.
+//! Results are written by index — printed tables and returned rows are
+//! bit-identical to the sequential loops
+//! ([`grid_cells_sequential`] is the tested reference).
 
 use crate::baselines::{all, by_name, Method};
 use crate::cluster::{Cluster, DeviceSpec};
 use crate::model::ModelSpec;
 use crate::net::BandwidthTrace;
 use crate::pipeline::{run_interleaved, run_traditional, ExecOptions, TradOptions};
-use crate::plan::{plan, plan_with_seg, PlanOptions};
+use crate::plan::{plan, plan_with_segs, PlanOptions};
 use crate::sim::{SsdModel, TraceMode};
 use crate::util::bytes::mbps;
-use crate::util::threads::{default_threads, par_map_indexed};
+use crate::util::json::{obj, Json};
+use crate::util::pool;
 use crate::workload::Pattern;
 
 /// A single (method × bandwidth × pattern) measurement.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Cell {
     pub method: &'static str,
+    /// Stable machine key ([`Method::key`]) for JSON artifacts.
+    pub method_key: &'static str,
     pub bandwidth_mbps: f64,
     pub pattern: Pattern,
     /// `None` = OOM. OOT is judged against `Pattern::oot_limit_ms`.
@@ -41,18 +47,44 @@ impl Cell {
     }
 }
 
-/// Evaluate the (method × bandwidth × pattern) grid. Cells are independent
-/// simulations, so they fan out across scoped worker threads; results are
-/// written by index, so the returned order (and therefore every printed
-/// table) is identical to the old sequential triple loop. Cells run with
-/// `TraceMode::Off` — the grid only reads `SimResult` numbers, and skipping
-/// span materialization is a large part of sweep throughput.
-fn grid(
+/// Evaluate the (method × bandwidth × pattern) grid on the work-stealing
+/// pool. Cells are independent simulations; results are written by index,
+/// so the returned order (and therefore every printed table) is identical
+/// to the sequential triple loop. Cells run with `TraceMode::Off` — the
+/// grid only reads `SimResult` numbers, and skipping span materialization
+/// is a large part of sweep throughput. A cell whose method plans offline
+/// (LIME and its ablations) fans its `#Seg` candidates out as *nested*
+/// jobs on the same pool.
+pub fn grid_cells(
     spec: &ModelSpec,
     cluster: &Cluster,
     methods: &[Box<dyn Method>],
     bandwidths: &[f64],
     tokens: usize,
+) -> Vec<Cell> {
+    grid_impl(spec, cluster, methods, bandwidths, tokens, true)
+}
+
+/// [`grid_cells`] evaluated with a plain sequential loop — the
+/// bit-determinism reference (the pool-vs-sequential equivalence test in
+/// `rust/tests/pool.rs` compares the two cell-for-cell).
+pub fn grid_cells_sequential(
+    spec: &ModelSpec,
+    cluster: &Cluster,
+    methods: &[Box<dyn Method>],
+    bandwidths: &[f64],
+    tokens: usize,
+) -> Vec<Cell> {
+    grid_impl(spec, cluster, methods, bandwidths, tokens, false)
+}
+
+fn grid_impl(
+    spec: &ModelSpec,
+    cluster: &Cluster,
+    methods: &[Box<dyn Method>],
+    bandwidths: &[f64],
+    tokens: usize,
+    parallel: bool,
 ) -> Vec<Cell> {
     let mut jobs: Vec<(usize, f64, Pattern)> = Vec::new();
     for mi in 0..methods.len() {
@@ -62,16 +94,22 @@ fn grid(
             }
         }
     }
-    par_map_indexed(default_threads(), &jobs, |&(mi, bw, pattern)| {
+    let eval = |&(mi, bw, pattern): &(usize, f64, Pattern)| {
         let trace = BandwidthTrace::fixed_mbps(bw);
         let out = methods[mi].run_mode(spec, cluster, &trace, pattern, tokens, TraceMode::Off);
         Cell {
             method: methods[mi].name(),
+            method_key: methods[mi].key(),
             bandwidth_mbps: bw,
             pattern,
             ms_per_token: out.ms_per_token(),
         }
-    })
+    };
+    if parallel {
+        pool::map_indexed(&jobs, eval)
+    } else {
+        jobs.iter().map(eval).collect()
+    }
 }
 
 fn print_grid(title: &str, cells: &[Cell], bandwidths: &[f64]) {
@@ -151,8 +189,7 @@ pub fn fig2a(tokens: usize) -> Vec<(String, f64, f64)> {
     let tp = by_name("tpi-llm-offload").unwrap();
     let pp = by_name("pp-offload").unwrap();
     println!("\n== Fig. 2a: TP+offload vs PP+offload (200 Mbps, sporadic) ==");
-    let rows: Vec<(String, f64, f64)> = par_map_indexed(
-        default_threads(),
+    let rows: Vec<(String, f64, f64)> = pool::map_indexed(
         &cases,
         |(label, spec, cluster)| {
             let tp_ms = tp
@@ -270,13 +307,17 @@ pub fn fig78_segments(tokens: usize) -> Vec<(usize, f64)> {
         trace_mode: TraceMode::Off,
         ..ExecOptions::default()
     };
-    let evaluated = par_map_indexed(default_threads(), &segs, |&seg| {
-        plan_with_seg(&spec, &cluster, seg, &popts).ok().map(|alloc| {
-            let r = run_interleaved(&alloc, &cluster, &bw, 1, tokens, &exec);
-            (seg, r.ms_per_token())
-        })
+    // One shared planning context across all candidates (plan_with_segs),
+    // then the simulations fan out as pool jobs.
+    let planned: Vec<(usize, crate::plan::Allocation)> = segs
+        .iter()
+        .zip(plan_with_segs(&spec, &cluster, &segs, &popts))
+        .filter_map(|(&seg, alloc)| alloc.map(|a| (seg, a)))
+        .collect();
+    let rows: Vec<(usize, f64)> = pool::map_indexed(&planned, |(seg, alloc)| {
+        let r = run_interleaved(alloc, &cluster, &bw, 1, tokens, &exec);
+        (*seg, r.ms_per_token())
     });
-    let rows: Vec<(usize, f64)> = evaluated.into_iter().flatten().collect();
     for &(seg, ms) in &rows {
         println!("  #Seg={seg:2}  {ms:9.1} ms/token");
     }
@@ -294,7 +335,7 @@ pub fn main_comparison(env: &str, tokens: usize) -> Vec<Cell> {
         _ => panic!("unknown env {env}"),
     };
     let bandwidths = [100.0, 200.0];
-    let cells = grid(&spec, &cluster, &all(), &bandwidths, tokens);
+    let cells = grid_cells(&spec, &cluster, &all(), &bandwidths, tokens);
     print_grid(fig, &cells, &bandwidths);
     cells
 }
@@ -311,7 +352,7 @@ pub fn lowmem(setting: usize, tokens: usize) -> Vec<Cell> {
         _ => panic!("setting must be 1..=3"),
     };
     let bandwidths = [100.0, 200.0];
-    let cells = grid(&spec, &cluster, &all(), &bandwidths, tokens);
+    let cells = grid_cells(&spec, &cluster, &all(), &bandwidths, tokens);
     print_grid(fig, &cells, &bandwidths);
     cells
 }
@@ -331,10 +372,11 @@ pub fn fig18(tokens: usize) -> Vec<Cell> {
             jobs.push((mi, pattern));
         }
     }
-    let cells = par_map_indexed(default_threads(), &jobs, |&(mi, pattern)| {
+    let cells = pool::map_indexed(&jobs, |&(mi, pattern)| {
         let out = methods[mi].run_mode(&spec, &cluster, &trace, pattern, tokens, TraceMode::Off);
         Cell {
             method: methods[mi].name(),
+            method_key: methods[mi].key(),
             bandwidth_mbps: -1.0,
             pattern,
             ms_per_token: out.ms_per_token(),
@@ -360,7 +402,7 @@ pub fn tab5(tokens: usize) -> Vec<(String, Option<f64>, Option<f64>)> {
     println!("\n== Table V: ablation (Llama3.3-70B, low-memory) ==");
     println!("{:36} {:>14} {:>14}", "method", "sporadic", "bursty");
     let rows: Vec<(String, Option<f64>, Option<f64>)> =
-        par_map_indexed(default_threads(), &variants, |key| {
+        pool::map_indexed(&variants, |key| {
             let m = by_name(key).unwrap();
             let spor = m
                 .run_mode(&spec, &cluster, &bw, Pattern::Sporadic, tokens, TraceMode::Off)
@@ -388,8 +430,96 @@ pub fn tab5(tokens: usize) -> Vec<(String, Option<f64>, Option<f64>)> {
     rows
 }
 
-/// Dispatch used by `lime experiments --id <id>`.
-pub fn run_by_id(id: &str, tokens: usize) {
+// ------------------------------------------------------- full-grid sweep
+
+/// The `--id sweep` experiment: cross the extremely-low-memory settings
+/// (Figs 15–17) with a bandwidth walk, evaluating every method × pattern
+/// cell on the work-stealing pool, and emit **one machine-readable JSON
+/// per grid** (schema `lime-sweep-v1`) into `out_dir` for notebook
+/// consumption. Returns the paths written; any I/O failure is an error
+/// (the CLI exits non-zero), never a silently missing artifact.
+pub fn sweep(tokens: usize, out_dir: &str) -> anyhow::Result<Vec<std::path::PathBuf>> {
+    use anyhow::Context;
+    let spec = ModelSpec::llama33_70b();
+    let bandwidths = [50.0, 100.0, 150.0, 200.0, 250.0];
+    let settings: [(&str, Cluster); 3] = [
+        ("lowmem1", Cluster::lowmem_setting1()),
+        ("lowmem2", Cluster::lowmem_setting2()),
+        ("lowmem3", Cluster::lowmem_setting3()),
+    ];
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("sweep: cannot create output directory {out_dir}"))?;
+    let methods = all();
+    let mut written = Vec::new();
+    println!(
+        "\n== sweep: {} × {{{}}} Mbps × {{sporadic,bursty}} × {} methods ==",
+        spec.name,
+        bandwidths.map(|b| format!("{b:.0}")).join(","),
+        methods.len()
+    );
+    for (label, cluster) in &settings {
+        let cells = grid_cells(&spec, cluster, &methods, &bandwidths, tokens);
+        let completed = cells.iter().filter(|c| c.ms_per_token.is_some()).count();
+        println!(
+            "  grid {label}: {} cells ({completed} completed, {} OOM)",
+            cells.len(),
+            cells.len() - completed
+        );
+        let json = sweep_grid_json(label, &spec, &bandwidths, tokens, &cells);
+        let path = std::path::Path::new(out_dir).join(format!("SWEEP_{label}.json"));
+        std::fs::write(&path, format!("{json}\n"))
+            .with_context(|| format!("sweep: could not write {}", path.display()))?;
+        println!("  wrote {}", path.display());
+        written.push(path);
+    }
+    Ok(written)
+}
+
+/// One grid as `lime-sweep-v1` JSON.
+fn sweep_grid_json(
+    grid: &str,
+    spec: &ModelSpec,
+    bandwidths: &[f64],
+    tokens: usize,
+    cells: &[Cell],
+) -> Json {
+    let cell_rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            let pattern = match c.pattern {
+                Pattern::Sporadic => "sporadic",
+                Pattern::Bursty => "bursty",
+            };
+            obj(&[
+                ("method", c.method_key.into()),
+                ("method_name", c.method.into()),
+                ("bandwidth_mbps", c.bandwidth_mbps.into()),
+                ("pattern", pattern.into()),
+                (
+                    "ms_per_token",
+                    c.ms_per_token.map_or(Json::Null, Json::Num),
+                ),
+                ("oom", c.ms_per_token.is_none().into()),
+                ("oot", c.is_oot().into()),
+            ])
+        })
+        .collect();
+    obj(&[
+        ("schema", "lime-sweep-v1".into()),
+        ("grid", grid.into()),
+        ("model", spec.name.as_str().into()),
+        ("tokens", tokens.into()),
+        (
+            "bandwidths_mbps",
+            Json::Arr(bandwidths.iter().map(|&b| b.into()).collect()),
+        ),
+        ("cells", Json::Arr(cell_rows)),
+    ])
+}
+
+/// Dispatch used by `lime experiments --id <id>`. `sweep_out` is the
+/// output directory for the `sweep` experiment's JSON artifacts.
+pub fn run_by_id(id: &str, tokens: usize, sweep_out: &str) {
     match id {
         "fig2a" => {
             fig2a(tokens);
@@ -422,6 +552,12 @@ pub fn run_by_id(id: &str, tokens: usize) {
         }
         "tab5" => {
             tab5(tokens);
+        }
+        "sweep" => {
+            if let Err(e) = sweep(tokens, sweep_out) {
+                eprintln!("{e:#}");
+                std::process::exit(1);
+            }
         }
         other => {
             eprintln!("unknown experiment id '{other}'");
@@ -462,6 +598,33 @@ mod tests {
         // between (0.86x).
         assert!(lime_s <= no_kv_s * 1.02, "LIME {lime_s:.1} vs no-kv {no_kv_s:.1}");
         assert!(lime_s <= no_plan_s * 1.02, "LIME {lime_s:.1} vs no-planner {no_plan_s:.1}");
+    }
+
+    #[test]
+    fn sweep_emits_one_json_per_grid() {
+        let dir = std::env::temp_dir().join(format!("lime_sweep_{}", std::process::id()));
+        let out = dir.to_str().unwrap().to_string();
+        let written = sweep(3, &out).expect("sweep writes its grids");
+        assert_eq!(written.len(), 3, "one JSON per lowmem grid");
+        for path in &written {
+            let src = std::fs::read_to_string(path).unwrap();
+            let json = Json::parse(src.trim()).unwrap();
+            assert_eq!(json.get("schema").unwrap().as_str(), Some("lime-sweep-v1"));
+            let cells = json.get("cells").unwrap().as_arr().unwrap();
+            // 7 methods × 5 bandwidths × 2 patterns.
+            assert_eq!(cells.len(), 70);
+            for cell in cells {
+                let key = cell.get("method").unwrap().as_str().unwrap();
+                assert!(crate::baselines::by_name(key).is_some(), "{key}");
+                let oom = cell.get("oom").unwrap().as_bool().unwrap();
+                assert_eq!(cell.get("ms_per_token").unwrap() == &Json::Null, oom);
+                // LIME always completes in the lowmem settings.
+                if key == "lime" {
+                    assert!(!oom, "{}", path.display());
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

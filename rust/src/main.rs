@@ -21,6 +21,7 @@ fn main() {
         "simulate" => cmd_simulate(&argv),
         "serve" => cmd_serve(&argv),
         "experiments" => cmd_experiments(&argv),
+        "bench-check" => cmd_bench_check(&argv),
         "--help" | "-h" | "help" => println!("{}", usage()),
         other => {
             eprintln!("unknown subcommand '{other}'\n{}", usage());
@@ -39,7 +40,10 @@ fn usage() -> String {
        simulate     simulated inference latency (LIME or a baseline)\n\
        serve        real TinyLM serving via the PJRT runtime\n\
        experiments  regenerate a paper figure/table (fig2a fig2b fig12 fig13\n\
-                    fig14 lowmem fig18 tab5)\n\
+                    fig14 lowmem fig18 tab5), or `sweep` for the full\n\
+                    lowmem × bandwidth grid with one JSON per grid\n\
+       bench-check  diff a fresh BENCH_*.json against a committed baseline\n\
+                    with a tolerance band (non-zero exit on regression)\n\
      \n\
      Run `lime <subcommand> --help` for options."
         .to_string()
@@ -146,10 +150,63 @@ fn cmd_serve(argv: &[String]) {
 
 fn cmd_experiments(argv: &[String]) {
     let cli = Cli::new("lime experiments", "regenerate a paper figure/table")
-        .opt("id", "fig14", "fig2a|fig2b|fig7|fig12|fig13|fig14|lowmem|fig18|tab5")
-        .opt("tokens", "128", "tokens per run");
+        .opt("id", "fig14", "fig2a|fig2b|fig7|fig12|fig13|fig14|lowmem|fig18|tab5|sweep")
+        .opt("tokens", "128", "tokens per run")
+        .opt("out", "sweeps", "output directory for `--id sweep` JSON grids");
     let args = parse(&cli, argv);
-    lime::experiments::run_by_id(args.get("id"), args.get_usize("tokens"));
+    lime::experiments::run_by_id(args.get("id"), args.get_usize("tokens"), args.get("out"));
+}
+
+fn cmd_bench_check(argv: &[String]) {
+    let cli = Cli::new(
+        "lime bench-check",
+        "fail when a bench run regresses past the committed baseline",
+    )
+    .opt("current", "BENCH_scheduler_perf.json", "fresh bench snapshot")
+    .opt(
+        "baseline",
+        "ci/BENCH_scheduler_perf.baseline.json",
+        "committed lime-bench-v1 baseline",
+    )
+    .opt("tolerance", "2.0", "fail when current mean > tolerance x baseline mean");
+    let args = parse(&cli, argv);
+    let load = |path: &str| -> lime::util::json::Json {
+        let src = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("bench-check: cannot read {path}: {e}");
+            std::process::exit(2);
+        });
+        lime::util::json::Json::parse(src.trim()).unwrap_or_else(|e| {
+            eprintln!("bench-check: {path} is not valid JSON: {e}");
+            std::process::exit(2);
+        })
+    };
+    let current = load(args.get("current"));
+    let baseline = load(args.get("baseline"));
+    let tolerance = args.get_f64("tolerance");
+    match lime::util::bench::check_regression(&current, &baseline, tolerance) {
+        Ok(report) => {
+            println!(
+                "bench-check: {} vs {} (tolerance {tolerance:.2}x)",
+                args.get("current"),
+                args.get("baseline")
+            );
+            for line in &report.lines {
+                println!("{line}");
+            }
+            if report.failures.is_empty() {
+                println!("bench-check: OK");
+            } else {
+                for failure in &report.failures {
+                    eprintln!("bench-check: {failure}");
+                }
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("bench-check: {e}");
+            std::process::exit(2);
+        }
+    }
 }
 
 fn parse(cli: &Cli, argv: &[String]) -> lime::util::cli::Args {

@@ -67,6 +67,24 @@ impl Default for ExecOptions {
 /// Max KV tokens shipped per device per step (pacing, Alg. 2 line 2).
 const KV_SHIP_CAP: usize = 16;
 
+/// Sweep entry point: run every `(micro_batches, tokens)` scenario of the
+/// interleaved executor on the persistent work-stealing pool, results in
+/// scenario order (bit-identical to the sequential loop at any worker
+/// count; nested-submission safe, so harness grids may call this from
+/// inside a pool job). Sweeps usually pass `TraceMode::Off` (or
+/// `Aggregate` when they need `uncovered_load`) in `opts`.
+pub fn sweep_interleaved(
+    alloc: &Allocation,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    scenarios: &[(usize, usize)],
+    opts: &ExecOptions,
+) -> Vec<SimResult> {
+    crate::util::pool::map_indexed(scenarios, |&(micro_batches, tokens)| {
+        run_interleaved(alloc, cluster, bw_trace, micro_batches, tokens, opts)
+    })
+}
+
 /// Simulate `tokens` decode steps of the interleaved pipeline.
 ///
 /// `micro_batches` = 1 reproduces the sporadic pattern, `|D|` the bursty

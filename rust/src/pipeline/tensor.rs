@@ -56,6 +56,21 @@ impl Default for TpOptions {
     }
 }
 
+/// Sweep entry point: every `(micro_batches, tokens)` scenario of the
+/// tensor-parallel executor on the work-stealing pool, results in scenario
+/// order (bit-identical to the sequential loop; nested-submission safe).
+pub fn sweep_tensor_parallel(
+    spec: &ModelSpec,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    scenarios: &[(usize, usize)],
+    opts: &TpOptions,
+) -> Vec<SimResult> {
+    crate::util::pool::map_indexed(scenarios, |&(micro_batches, tokens)| {
+        run_tensor_parallel(spec, cluster, bw_trace, micro_batches, tokens, opts)
+    })
+}
+
 /// Simulate `tokens` decode steps of tensor-parallel inference.
 pub fn run_tensor_parallel(
     spec: &ModelSpec,

@@ -45,6 +45,21 @@ impl Default for TradOptions {
     }
 }
 
+/// Sweep entry point: every `(micro_batches, tokens)` scenario of the
+/// traditional executor on the work-stealing pool, results in scenario
+/// order (bit-identical to the sequential loop; nested-submission safe).
+pub fn sweep_traditional(
+    alloc: &Allocation,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    scenarios: &[(usize, usize)],
+    opts: &TradOptions,
+) -> Vec<SimResult> {
+    crate::util::pool::map_indexed(scenarios, |&(micro_batches, tokens)| {
+        run_traditional(alloc, cluster, bw_trace, micro_batches, tokens, opts)
+    })
+}
+
 /// Simulate `tokens` decode steps of a traditional (single-stage-per-device)
 /// pipeline under `alloc` (whose `seg` is ignored: one stage per device).
 pub fn run_traditional(

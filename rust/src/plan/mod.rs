@@ -5,4 +5,7 @@ pub mod allocation;
 pub mod offline;
 
 pub use allocation::{Allocation, DeviceAssignment};
-pub use offline::{plan, plan_with_seg, plan_with_threads, PlanError, PlanOptions, PlanReport};
+pub use offline::{
+    plan, plan_on_pool, plan_with_seg, plan_with_segs, plan_with_threads, PlanError,
+    PlanOptions, PlanReport,
+};

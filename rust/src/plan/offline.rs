@@ -21,6 +21,24 @@
 //!
 //! The best `#Seg` is chosen by evaluating the full Eq. 1 cost
 //! ([`crate::cost::t_total`]) — lines 31–38.
+//!
+//! **Incremental sweep.** None of the per-layer `comp_time`/`load_time`
+//! terms depend on `seg`, and neither does the phase-1 greedy fill — so the
+//! sweep hoists them into one shared [`SegSweepCtx`] (a memoized
+//! [`cost::CompTimeTable`], the Eq. 2 comm term, per-device one-layer SSD
+//! load times, the greedy resident fill, and the per-slot offload units).
+//! Each candidate then runs phases 2–4 against O(1) lookups instead of
+//! re-deriving identical costs. Every substituted term is **bit-identical**
+//! to the direct evaluation it replaced (pinned by property tests in
+//! `cost::tests` and below), so the chosen plan is exactly the one the
+//! non-incremental scheduler produced.
+//!
+//! Candidates are independent and evaluate on the persistent work-stealing
+//! pool ([`crate::util::pool`]); results are written by index and reduced
+//! in ascending-`seg` order, so the outcome is bit-identical to the
+//! sequential sweep at any worker count — including when `plan()` itself
+//! runs inside a pool job (experiment grid cells), where the candidates
+//! are submitted as nested jobs on the same pool.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -29,6 +47,7 @@ use crate::cluster::Cluster;
 use crate::cost;
 use crate::model::ModelSpec;
 use crate::plan::allocation::{Allocation, DeviceAssignment};
+use crate::util::pool::Pool;
 
 /// Tuning inputs for planning (the paper's empirical constants).
 #[derive(Debug, Clone, Copy)]
@@ -69,25 +88,131 @@ pub struct PlanReport {
     pub seg_curve: Vec<(usize, f64)>,
 }
 
+/// Everything the `#Seg` candidates share — computed once per sweep.
+struct SegSweepCtx {
+    /// Memoized `comp_time` per (device, layer-count).
+    comp: cost::CompTimeTable,
+    /// Eq. 2 network term `|D| · h_size / bw`.
+    comm: f64,
+    /// Seconds for device `i` to stream one full layer from SSD.
+    load_one: Vec<f64>,
+    /// Phase-1 greedy resident fill (seg-independent).
+    resident0: Vec<usize>,
+    /// Offload slots device `i` can host; candidate capacity = `units × seg`.
+    slot_units: Vec<usize>,
+}
+
+impl SegSweepCtx {
+    fn new(spec: &ModelSpec, cluster: &Cluster, opts: &PlanOptions) -> Self {
+        let d = cluster.len();
+        let kv_per_layer = opts.empirical_tokens as u64 * spec.kv_bytes_per_token_layer();
+
+        // Phase 1: greedy resident fill with one offload slot reserved.
+        let mut resident0: Vec<usize> = (0..d)
+            .map(|i| {
+                let budget = layer_budget(spec, cluster, i).saturating_sub(spec.layer_bytes()); // slot
+                (budget / (spec.layer_bytes() + kv_per_layer)) as usize
+            })
+            .collect();
+        let cap_total: usize = resident0.iter().sum();
+        if cap_total > spec.layers {
+            // Offload is mandatory here (try_all_resident failed only because
+            // of the slot reserve) — trim the surplus from the slowest devices
+            // so the DP still has layers to place.
+            let mut surplus = cap_total - spec.layers.saturating_sub(d.min(spec.layers));
+            while surplus > 0 {
+                let i = (0..d)
+                    .filter(|&i| resident0[i] > 0)
+                    .min_by(|&a, &b| {
+                        cluster.devices[a]
+                            .flops
+                            .partial_cmp(&cluster.devices[b].flops)
+                            .unwrap()
+                    })
+                    .unwrap();
+                let take = surplus.min(resident0[i]);
+                resident0[i] -= take;
+                surplus -= take;
+            }
+        }
+
+        // Per-device offload slots: `k` offloaded layers need `ceil(k/#Seg)`
+        // shared slots resident, so k <= #Seg * floor(budget/l). The slot
+        // count is seg-independent; candidates multiply by their `seg`.
+        let slot_units: Vec<usize> = (0..d)
+            .map(|i| {
+                let kv = kv_per_layer; // at least one layer's KV accompanies a slot
+                let budget = layer_budget(spec, cluster, i)
+                    .saturating_sub(resident0[i] as u64 * (spec.layer_bytes() + kv_per_layer));
+                (budget / (spec.layer_bytes() + kv)) as usize
+            })
+            .collect();
+
+        SegSweepCtx {
+            comp: cost::CompTimeTable::build(spec, cluster, opts.empirical_tokens, opts.micro_batch),
+            comm: cost::idle_comm_term(spec, cluster, opts.micro_batch, opts.bandwidth),
+            load_one: (0..d)
+                .map(|i| spec.layer_bytes() as f64 / cluster.devices[i].ssd_read_bps)
+                .collect(),
+            resident0,
+            slot_units,
+        }
+    }
+
+    /// `T_i^idle` (Eq. 2) for the all-resident base allocation implied by
+    /// `resident` — bit-identical to `cost::t_idle` on that base (the memo
+    /// table reproduces each `comp_time` term; same summation order).
+    fn idle_from_resident(&self, resident: &[usize]) -> Vec<f64> {
+        let d = resident.len();
+        (0..d)
+            .map(|i| {
+                let own = self.comp.get(i, resident[i]);
+                let others: f64 = resident
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, _)| *j != i)
+                    .map(|(j, &r)| self.comp.get(j, r))
+                    .sum();
+                own + others + self.comm
+            })
+            .collect()
+    }
+}
+
 /// Run the full offline scheduler: try every `#Seg` in `2..=⌈|L|/|D|⌉`
 /// (plus the no-offload degenerate case) and keep the cheapest plan.
 ///
-/// The `#Seg` candidates are independent, so they are evaluated on
-/// `util::threads::default_threads()` scoped worker threads; results are
-/// written by index and reduced in ascending-`seg` order, so the chosen
-/// allocation and the `seg_curve` are identical to the sequential sweep.
+/// Candidates evaluate on the global work-stealing pool (nested-submission
+/// safe); the chosen allocation and `seg_curve` are identical to the
+/// sequential sweep.
 pub fn plan(spec: &ModelSpec, cluster: &Cluster, opts: &PlanOptions) -> Result<PlanReport, PlanError> {
-    plan_with_threads(spec, cluster, opts, crate::util::threads::default_threads())
+    plan_on_pool(spec, cluster, opts, Some(crate::util::pool::global()))
 }
 
-/// [`plan`] with an explicit worker-thread count (1 = sequential). The
-/// result does not depend on `threads` — asserted by the property tests in
-/// `rust/tests/trace_modes.rs`.
+/// [`plan`] with an explicit worker count: `threads <= 1` is the exact
+/// sequential reference; larger counts run on a dedicated pool of that
+/// size. The result does not depend on `threads` — asserted by the
+/// property tests in `rust/tests/trace_modes.rs` and `rust/tests/pool.rs`.
 pub fn plan_with_threads(
     spec: &ModelSpec,
     cluster: &Cluster,
     opts: &PlanOptions,
     threads: usize,
+) -> Result<PlanReport, PlanError> {
+    if threads <= 1 {
+        plan_on_pool(spec, cluster, opts, None)
+    } else {
+        let pool = Pool::new(threads);
+        plan_on_pool(spec, cluster, opts, Some(&pool))
+    }
+}
+
+/// [`plan`] on an explicit pool (`None` = sequential reference path).
+pub fn plan_on_pool(
+    spec: &ModelSpec,
+    cluster: &Cluster,
+    opts: &PlanOptions,
+    pool: Option<&Pool>,
 ) -> Result<PlanReport, PlanError> {
     // Degenerate case first: everything fits resident -> plain pipeline.
     if let Some(alloc) = try_all_resident(spec, cluster, opts) {
@@ -99,20 +224,26 @@ pub fn plan_with_threads(
         });
     }
 
+    let ctx = SegSweepCtx::new(spec, cluster, opts);
     let seg_max = spec.layers.div_ceil(cluster.len()).max(2);
     let segs: Vec<usize> = (2..=seg_max).collect();
-    let evaluated = crate::util::threads::par_map_indexed(threads, &segs, |&seg| {
-        plan_with_seg(spec, cluster, seg, opts).ok().map(|alloc| {
-            let cb = cost::t_total(
+    let eval = |&seg: &usize| {
+        plan_with_seg_ctx(spec, cluster, seg, opts, &ctx).ok().map(|alloc| {
+            let cb = cost::t_total_cached(
+                &ctx.comp,
                 &alloc,
                 cluster,
-                opts.empirical_tokens,
                 opts.micro_batch,
                 opts.bandwidth,
+                ctx.comm,
             );
             (alloc, cb)
         })
-    });
+    };
+    let evaluated = match pool {
+        Some(p) => p.map_indexed(&segs, eval),
+        None => segs.iter().map(eval).collect(),
+    };
 
     // Sequential reduction in candidate order: ties resolve exactly as the
     // old single-threaded loop did (first strictly-cheaper candidate wins).
@@ -204,71 +335,64 @@ fn try_all_resident(spec: &ModelSpec, cluster: &Cluster, opts: &PlanOptions) -> 
     Some(alloc)
 }
 
-/// Plan for a fixed `#Seg` (phases 1–4 above).
+/// Plan for a fixed `#Seg` (phases 1–4 above). Standalone entry point —
+/// builds the shared sweep context for just this candidate; sweeping
+/// several candidates? Use [`plan_with_segs`] (or `plan()`), which
+/// amortizes one context across all of them.
 pub fn plan_with_seg(
     spec: &ModelSpec,
     cluster: &Cluster,
     seg: usize,
     opts: &PlanOptions,
 ) -> Result<Allocation, PlanError> {
+    let ctx = SegSweepCtx::new(spec, cluster, opts);
+    plan_with_seg_ctx(spec, cluster, seg, opts, &ctx)
+}
+
+/// Plan every candidate in `segs` against one shared [`SegSweepCtx`] on
+/// the global pool (nested-submission safe). Entry `k` is `None` when
+/// `segs[k]` is infeasible; each `Some` is exactly
+/// `plan_with_seg(spec, cluster, segs[k], opts).ok()` — the context is
+/// deterministic, so sharing it changes nothing but the cost of
+/// rebuilding it per candidate.
+pub fn plan_with_segs(
+    spec: &ModelSpec,
+    cluster: &Cluster,
+    segs: &[usize],
+    opts: &PlanOptions,
+) -> Vec<Option<Allocation>> {
+    let ctx = SegSweepCtx::new(spec, cluster, opts);
+    crate::util::pool::global().map_indexed(segs, |&seg| {
+        plan_with_seg_ctx(spec, cluster, seg, opts, &ctx).ok()
+    })
+}
+
+/// Phases 2–4 for one `#Seg` candidate against the shared context.
+fn plan_with_seg_ctx(
+    spec: &ModelSpec,
+    cluster: &Cluster,
+    seg: usize,
+    opts: &PlanOptions,
+    ctx: &SegSweepCtx,
+) -> Result<Allocation, PlanError> {
     assert!(seg >= 2);
     let d = cluster.len();
-    let kv_per_layer = opts.empirical_tokens as u64 * spec.kv_bytes_per_token_layer();
-
-    // Phase 1: greedy resident fill with one offload slot reserved.
-    let mut resident: Vec<usize> = (0..d)
-        .map(|i| {
-            let budget = layer_budget(spec, cluster, i).saturating_sub(spec.layer_bytes()); // slot
-            (budget / (spec.layer_bytes() + kv_per_layer)) as usize
-        })
-        .collect();
-    let cap_total: usize = resident.iter().sum();
-    if cap_total > spec.layers {
-        // Offload is mandatory here (try_all_resident failed only because of
-        // the slot reserve) — trim the surplus from the slowest devices so
-        // the DP still has layers to place.
-        let mut surplus = cap_total - spec.layers.saturating_sub(d.min(spec.layers));
-        while surplus > 0 {
-            let i = (0..d)
-                .filter(|&i| resident[i] > 0)
-                .min_by(|&a, &b| {
-                    cluster.devices[a]
-                        .flops
-                        .partial_cmp(&cluster.devices[b].flops)
-                        .unwrap()
-                })
-                .unwrap();
-            let take = surplus.min(resident[i]);
-            resident[i] -= take;
-            surplus -= take;
-        }
-    }
-
-    // Per-device offload capacity: `k` offloaded layers need
-    // `ceil(k/#Seg)` shared slots resident, so k <= #Seg * floor(budget/l).
-    let slot_caps: Vec<usize> = (0..d)
-        .map(|i| {
-            let kv = kv_per_layer; // at least one layer's KV accompanies a slot
-            let budget = layer_budget(spec, cluster, i)
-                .saturating_sub(resident[i] as u64 * (spec.layer_bytes() + kv_per_layer));
-            let slots = (budget / (spec.layer_bytes() + kv)) as usize;
-            slots * seg
-        })
-        .collect();
+    let mut resident = ctx.resident0.clone();
+    let slot_caps: Vec<usize> = ctx.slot_units.iter().map(|&units| units * seg).collect();
 
     // Phases 2-4 with feasibility-repair loop.
     let mut guard = 0usize;
     loop {
         let left = spec.layers - resident.iter().sum::<usize>().min(spec.layers);
-        let Some(offload) = dp_assign_offload(spec, cluster, &resident, &slot_caps, left, seg, opts)
-        else {
+        let idle = ctx.idle_from_resident(&resident);
+        let Some(offload) = dp_assign_offload(&idle, &ctx.load_one, &slot_caps, left) else {
             return Err(PlanError::OutOfMemory(format!(
                 "{}: {left} layers cannot be placed within slot capacities {slot_caps:?}",
                 spec.name
             )));
         };
         let mut alloc = build_allocation(spec, seg, &resident, &offload);
-        refine_fine_grained(&mut alloc, cluster, opts);
+        refine_fine_grained(&mut alloc, cluster, opts, ctx);
 
         match cost::feasible(&alloc, cluster, opts.empirical_tokens) {
             Ok(()) => return Ok(alloc),
@@ -289,33 +413,19 @@ pub fn plan_with_seg(
     }
 }
 
-/// Phase 2 — the Alg. 1 DP. Returns offloaded-layer counts per device, or
+/// Phase 2 — the Alg. 1 DP over precomputed per-device idle times and
+/// one-layer load times. Returns offloaded-layer counts per device, or
 /// `None` when `left` layers cannot fit within the per-device slot caps.
 fn dp_assign_offload(
-    spec: &ModelSpec,
-    cluster: &Cluster,
-    resident: &[usize],
+    idle: &[f64],
+    load_one: &[f64],
     slot_caps: &[usize],
     left: usize,
-    seg: usize,
-    opts: &PlanOptions,
 ) -> Option<Vec<usize>> {
-    let d = cluster.len();
+    let d = idle.len();
     if left == 0 {
         return Some(vec![0; d]);
     }
-    // Idle time per device (Eq. 2) with greedy-fill residents as L_i.
-    let base = Allocation::new(
-        spec.clone(),
-        seg,
-        resident.iter().map(|&r| DeviceAssignment::resident(r)).collect(),
-    );
-    let idle: Vec<f64> = (0..d)
-        .map(|i| cost::t_idle(&base, cluster, i, opts.empirical_tokens, opts.micro_batch, opts.bandwidth))
-        .collect();
-    let load_one: Vec<f64> = (0..d)
-        .map(|i| spec.layer_bytes() as f64 / cluster.devices[i].ssd_read_bps)
-        .collect();
 
     const INF: f64 = f64::INFINITY;
     // f[l][i] over l in 0..=left, i in 0..d (device index, 0-based).
@@ -394,12 +504,19 @@ impl Ord for HeapEntry {
     }
 }
 
-/// Phase 3 — Alg. 1 lines 12–27: bottleneck-first block pinning.
-fn refine_fine_grained(alloc: &mut Allocation, cluster: &Cluster, opts: &PlanOptions) {
+/// Phase 3 — Alg. 1 lines 12–27: bottleneck-first block pinning. Uncovered
+/// times read the shared memo table (`cost::t_idle_cached` is bit-identical
+/// to `cost::t_idle`).
+fn refine_fine_grained(
+    alloc: &mut Allocation,
+    cluster: &Cluster,
+    opts: &PlanOptions,
+    ctx: &SegSweepCtx,
+) {
     let spec = alloc.spec.clone();
     let uncovered = |alloc: &Allocation, i: usize| -> f64 {
         let load = cost::load_time(&spec, &cluster.devices[i], &alloc.devices[i]);
-        let idle = cost::t_idle(alloc, cluster, i, opts.empirical_tokens, opts.micro_batch, opts.bandwidth);
+        let idle = cost::t_idle_cached(&ctx.comp, alloc, i, ctx.comm);
         (load - idle).max(0.0)
     };
     let free_mem = |alloc: &Allocation, i: usize| -> u64 {
@@ -456,7 +573,9 @@ fn refine_fine_grained(alloc: &mut Allocation, cluster: &Cluster, opts: &PlanOpt
 
 /// Exhaustive reference for the Phase-2 objective (test oracle): minimum of
 /// the clamped accumulation over *all* ways to split `left` layers across
-/// devices. Exponential — only for tiny instances in tests.
+/// devices. Exponential — only for tiny instances in tests. Deliberately
+/// evaluates `cost::t_idle` directly (not the memo table) so it also pins
+/// the incremental DP inputs against the term-by-term originals.
 pub fn exhaustive_offload_reference(
     spec: &ModelSpec,
     cluster: &Cluster,
@@ -591,24 +710,26 @@ mod tests {
         let resident = vec![8, 6, 4];
         let o = opts();
         let caps = vec![usize::MAX; cluster.len()];
+        // DP inputs exactly as plan_with_seg_ctx derives them.
+        let idle: Vec<f64> = {
+            let base = Allocation::new(
+                spec.clone(),
+                2,
+                resident.iter().map(|&r| DeviceAssignment::resident(r)).collect(),
+            );
+            (0..cluster.len())
+                .map(|i| cost::t_idle(&base, &cluster, i, o.empirical_tokens, o.micro_batch, o.bandwidth))
+                .collect()
+        };
+        let load_one: Vec<f64> = (0..cluster.len())
+            .map(|i| spec.layer_bytes() as f64 / cluster.devices[i].ssd_read_bps)
+            .collect();
         for left in [1usize, 3, 5, 7] {
-            let dp = dp_assign_offload(&spec, &cluster, &resident, &caps, left, 2, &o).unwrap();
+            let dp = dp_assign_offload(&idle, &load_one, &caps, left).unwrap();
             let (ref_cost, _) = exhaustive_offload_reference(&spec, &cluster, &resident, left, 2, &o);
-            // Evaluate DP's assignment under the same objective.
-            let idle: Vec<f64> = {
-                let base = Allocation::new(
-                    spec.clone(),
-                    2,
-                    resident.iter().map(|&r| DeviceAssignment::resident(r)).collect(),
-                );
-                (0..cluster.len())
-                    .map(|i| cost::t_idle(&base, &cluster, i, o.empirical_tokens, o.micro_batch, o.bandwidth))
-                    .collect()
-            };
             let mut acc = 0.0f64;
             for j in 0..cluster.len() {
-                let load = spec.layer_bytes() as f64 / cluster.devices[j].ssd_read_bps * dp[j] as f64;
-                acc = (acc + load - idle[j]).max(0.0);
+                acc = (acc + load_one[j] * dp[j] as f64 - idle[j]).max(0.0);
             }
             assert!(
                 acc <= ref_cost + 1e-9,
@@ -618,13 +739,81 @@ mod tests {
     }
 
     #[test]
+    fn ctx_idle_matches_direct_t_idle_bitwise() {
+        // The planner-equality pin: the hoisted idle table feeding the DP
+        // must reproduce cost::t_idle on the all-resident base exactly, for
+        // every repair-loop resident vector the sweep can visit.
+        let spec = ModelSpec::llama33_70b();
+        let cluster = Cluster::lowmem_setting1();
+        let o = opts();
+        let ctx = SegSweepCtx::new(&spec, &cluster, &o);
+        let mut resident = ctx.resident0.clone();
+        for _round in 0..4 {
+            let fast = ctx.idle_from_resident(&resident);
+            let base = Allocation::new(
+                spec.clone(),
+                2,
+                resident.iter().map(|&r| DeviceAssignment::resident(r)).collect(),
+            );
+            for i in 0..cluster.len() {
+                let direct =
+                    cost::t_idle(&base, &cluster, i, o.empirical_tokens, o.micro_batch, o.bandwidth);
+                assert_eq!(
+                    fast[i].to_bits(),
+                    direct.to_bits(),
+                    "dev{i} resident={resident:?}: {} != {}",
+                    fast[i],
+                    direct
+                );
+            }
+            // Mimic the repair loop: shed a layer from the fullest device.
+            if let Some(i) = (0..resident.len()).max_by_key(|&i| resident[i]) {
+                if resident[i] > 0 {
+                    resident[i] -= 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_with_segs_matches_per_candidate_plan_with_seg() {
+        let spec = ModelSpec::llama33_70b();
+        let cluster = Cluster::lowmem_setting1();
+        let o = opts();
+        let segs: Vec<usize> = (2..=8).collect();
+        let shared = plan_with_segs(&spec, &cluster, &segs, &o);
+        assert_eq!(shared.len(), segs.len());
+        for (&seg, got) in segs.iter().zip(&shared) {
+            let standalone = plan_with_seg(&spec, &cluster, seg, &o).ok();
+            assert_eq!(got, &standalone, "seg={seg}");
+        }
+    }
+
+    #[test]
+    fn standalone_plan_with_seg_matches_sweep_candidate() {
+        // plan_with_seg (fresh ctx) and the sweep (shared ctx) must agree:
+        // the context is deterministic, so a candidate planned either way
+        // is the same allocation.
+        let spec = ModelSpec::llama33_70b();
+        let cluster = Cluster::lowmem_setting1();
+        let o = opts();
+        let ctx = SegSweepCtx::new(&spec, &cluster, &o);
+        for seg in 2..=6 {
+            let standalone = plan_with_seg(&spec, &cluster, seg, &o);
+            let shared = plan_with_seg_ctx(&spec, &cluster, seg, &o, &ctx);
+            assert_eq!(standalone, shared, "seg={seg}");
+        }
+    }
+
+    #[test]
     fn refinement_never_increases_load() {
         let spec = ModelSpec::llama33_70b();
         let cluster = Cluster::env_e3();
         let o = opts();
+        let ctx = SegSweepCtx::new(&spec, &cluster, &o);
         let mut alloc = plan_with_seg(&spec, &cluster, 2, &o).unwrap();
         let before: u64 = alloc.devices.iter().map(|d| d.load_bytes(&spec)).sum();
-        refine_fine_grained(&mut alloc, &cluster, &o);
+        refine_fine_grained(&mut alloc, &cluster, &o, &ctx);
         let after: u64 = alloc.devices.iter().map(|d| d.load_bytes(&spec)).sum();
         assert!(after <= before);
     }

@@ -127,10 +127,13 @@ pub enum TraceMode {
     /// experiment grids use it, since they only read `SimResult` numbers.
     Off,
     /// Maintain per-device busy-time accumulators (O(1) [`Trace::busy`])
-    /// without materializing spans.
+    /// plus an incrementally merged compute-union and per-device
+    /// uncovered-load pieces — so [`Trace::uncovered_load`] answers without
+    /// materializing spans. Cross-checked against the `Full` sweep-line in
+    /// tests.
     Aggregate,
-    /// Record every span: required for [`Trace::render`] and
-    /// [`Trace::uncovered_load`]. The default, matching historic behavior.
+    /// Record every span: required for [`Trace::render`]. The default,
+    /// matching historic behavior.
     #[default]
     Full,
 }
@@ -151,6 +154,18 @@ pub struct Span {
 struct Lane {
     spans: Vec<Span>,
     busy: [Time; SpanKind::COUNT],
+    /// Aggregate mode only: load-interval pieces not (yet) covered by any
+    /// compute span, sorted by start. A later compute span can still shrink
+    /// these — pushes are not globally time-ordered — so pieces stay live
+    /// until queried. Pieces from different loads are NOT merged: the
+    /// Full-mode sweep sums uncovered time per load span, so overlapping
+    /// loads each count.
+    pending_uncovered: Vec<(Time, Time)>,
+    /// Longest piece ever inserted into `pending_uncovered` (never shrunk
+    /// on splits — a conservative bound). Lets [`pieces_subtract`] binary-
+    /// search a window instead of scanning every stale piece: any piece
+    /// overlapping `[s, e)` has `start > s - max_len` and `start < e`.
+    pending_max_len: Time,
 }
 
 /// Collector for executor timelines.
@@ -159,6 +174,10 @@ pub struct Trace {
     mode: TraceMode,
     lanes: Vec<Lane>,
     end: Time,
+    /// Aggregate mode only: the merged (sorted, disjoint) union of every
+    /// compute interval pushed so far — maintained incrementally so
+    /// `uncovered_load` needs no span storage.
+    agg_compute_union: Vec<(Time, Time)>,
 }
 
 impl Default for Trace {
@@ -178,6 +197,7 @@ impl Trace {
             mode,
             lanes: Vec::new(),
             end: 0.0,
+            agg_compute_union: Vec::new(),
         }
     }
 
@@ -186,8 +206,9 @@ impl Trace {
     }
 
     /// Record one busy interval. In `Off` mode this only advances the trace
-    /// horizon; in `Aggregate` it updates the busy accumulators; in `Full`
-    /// it also materializes the span. Never allocates for the label.
+    /// horizon; in `Aggregate` it updates the busy accumulators and the
+    /// online compute-union/uncovered-load structures; in `Full` it
+    /// materializes the span. Never allocates for the label.
     pub fn push(
         &mut self,
         device: usize,
@@ -205,6 +226,38 @@ impl Trace {
         }
         if device >= self.lanes.len() {
             self.lanes.resize_with(device + 1, Lane::default);
+        }
+        if self.mode == TraceMode::Aggregate {
+            match kind {
+                SpanKind::Compute => {
+                    // Grow the union, then retroactively cover any pending
+                    // uncovered-load pieces (loads overlap with *system*
+                    // compute, so every lane's pending set shrinks).
+                    interval_insert(&mut self.agg_compute_union, start, end);
+                    for lane in &mut self.lanes {
+                        let max_len = lane.pending_max_len;
+                        pieces_subtract(&mut lane.pending_uncovered, max_len, start, end);
+                    }
+                }
+                SpanKind::Load => {
+                    // Only the portion not already covered by the compute
+                    // union recorded so far stays pending.
+                    let union = &self.agg_compute_union;
+                    let lane = &mut self.lanes[device];
+                    interval_minus_set(start, end, union, |s, e| {
+                        // Keep the lane sorted by start (loads arrive in
+                        // roughly increasing time, so this is append-cheap).
+                        let at = lane
+                            .pending_uncovered
+                            .partition_point(|&(ps, _)| ps <= s);
+                        lane.pending_uncovered.insert(at, (s, e));
+                        if e - s > lane.pending_max_len {
+                            lane.pending_max_len = e - s;
+                        }
+                    });
+                }
+                _ => {}
+            }
         }
         let lane = &mut self.lanes[device];
         lane.busy[kind.index()] += end - start;
@@ -258,25 +311,46 @@ impl Trace {
     /// counterpart of the cost model's `T_uncover` term. Loads overlap with
     /// *system* work, so compute anywhere in the pipeline covers them.
     ///
-    /// Sort/sweep-line implementation: the compute spans of all lanes are
-    /// merged into a disjoint interval union once, then each load subtracts
-    /// its covered portion with a monotone cursor — O((L + C) log C) versus
-    /// the old O(L × C) double loop (which also double-counted overlapping
-    /// compute spans from different devices). Querying every device? Use
+    /// In `Full` mode this is a sort/sweep-line over the materialized
+    /// spans: the compute spans of all lanes are merged into a disjoint
+    /// interval union once, then each load subtracts its covered portion
+    /// with a monotone cursor — O((L + C) log C) versus the old O(L × C)
+    /// double loop (which also double-counted overlapping compute spans
+    /// from different devices). Querying every device? Use
     /// [`Trace::uncovered_loads`], which builds the union once.
     ///
-    /// Requires `TraceMode::Full`; returns 0.0 otherwise.
+    /// In `Aggregate` mode the same quantity is maintained *online*: each
+    /// `push` merges computes into a running union and keeps only the
+    /// still-uncovered load pieces per lane, so the answer needs no span
+    /// storage (cross-checked against the `Full` sweep in tests). `Off`
+    /// mode returns 0.0.
     pub fn uncovered_load(&self, device: usize) -> Time {
-        self.uncovered_load_against(device, &self.compute_union())
+        match self.mode {
+            TraceMode::Off => 0.0,
+            TraceMode::Aggregate => self
+                .lanes
+                .get(device)
+                .map_or(0.0, |l| l.pending_uncovered.iter().map(|&(s, e)| e - s).sum()),
+            TraceMode::Full => self.uncovered_load_against(device, &self.compute_union()),
+        }
     }
 
-    /// [`Trace::uncovered_load`] for every device lane, sharing one
-    /// compute-union construction across the queries.
+    /// [`Trace::uncovered_load`] for every device lane. In `Full` mode one
+    /// compute-union construction is shared across the queries; in
+    /// `Aggregate` mode each lane's answer is already materialized.
     pub fn uncovered_loads(&self) -> Vec<Time> {
-        let union = self.compute_union();
-        (0..self.lanes.len())
-            .map(|device| self.uncovered_load_against(device, &union))
-            .collect()
+        match self.mode {
+            TraceMode::Off => vec![0.0; self.lanes.len()],
+            TraceMode::Aggregate => (0..self.lanes.len())
+                .map(|device| self.uncovered_load(device))
+                .collect(),
+            TraceMode::Full => {
+                let union = self.compute_union();
+                (0..self.lanes.len())
+                    .map(|device| self.uncovered_load_against(device, &union))
+                    .collect()
+            }
+        }
     }
 
     /// Disjoint, sorted union of all compute intervals across every lane.
@@ -364,6 +438,98 @@ impl Trace {
             out.push_str(&format!("dev{dev} |{}|\n", lane.iter().collect::<String>()));
         }
         out
+    }
+}
+
+// ------------------------------------------------------- interval algebra
+//
+// The Aggregate-mode online structures are sorted, disjoint interval lists
+// over `Time`. Touching intervals merge (same convention as the Full-mode
+// sweep's compute union), which never changes total measure.
+
+/// Insert `[s, e)` into a sorted disjoint list, merging overlaps/touches.
+fn interval_insert(ivs: &mut Vec<(Time, Time)>, s: Time, e: Time) {
+    if e <= s {
+        return;
+    }
+    // First interval that could merge with [s, e) (its end reaches s)...
+    let lo = ivs.partition_point(|&(_, ie)| ie < s);
+    // ...and one past the last (its start is still <= e).
+    let hi = ivs.partition_point(|&(is, _)| is <= e);
+    if lo == hi {
+        ivs.insert(lo, (s, e));
+    } else {
+        let merged = (ivs[lo].0.min(s), ivs[hi - 1].1.max(e));
+        ivs[lo] = merged;
+        ivs.drain(lo + 1..hi);
+    }
+}
+
+/// Remove `[s, e)` from a start-sorted (possibly overlapping) piece list.
+/// Unlike a merged union, pieces that came from different load spans are
+/// kept separate so overlapping loads each retain their own measure.
+///
+/// `max_len` is an upper bound on every piece's length: a piece
+/// overlapping `[s, e)` must start after `s - max_len` and before `e`, so
+/// only that binary-searched window is touched — stale fully-uncovered
+/// pieces from earlier in the timeline cost nothing per compute push.
+fn pieces_subtract(pieces: &mut Vec<(Time, Time)>, max_len: Time, s: Time, e: Time) {
+    if e <= s || pieces.is_empty() {
+        return;
+    }
+    let lo = pieces.partition_point(|&(ps, _)| ps <= s - max_len);
+    let hi = pieces.partition_point(|&(ps, _)| ps < e);
+    if lo >= hi {
+        return;
+    }
+    // Rebuild the window: survivors and left remainders keep their order
+    // (starts unchanged); right remainders all start at `e`, which is ≥
+    // every window start and ≤ every post-window start, so appending them
+    // keeps the list sorted.
+    let mut keep: Vec<(Time, Time)> = Vec::new();
+    let mut rights: Vec<(Time, Time)> = Vec::new();
+    for &(ps, pe) in &pieces[lo..hi] {
+        if pe <= s {
+            keep.push((ps, pe)); // entirely before the cut: untouched
+            continue;
+        }
+        if ps < s {
+            keep.push((ps, s)); // left remainder
+        }
+        if pe > e {
+            rights.push((e, pe)); // right remainder
+        }
+    }
+    keep.append(&mut rights);
+    pieces.splice(lo..hi, keep);
+}
+
+/// Emit the pieces of `[s, e)` not covered by the sorted disjoint `cover`.
+fn interval_minus_set(
+    s: Time,
+    e: Time,
+    cover: &[(Time, Time)],
+    mut emit: impl FnMut(Time, Time),
+) {
+    if e <= s {
+        return;
+    }
+    let mut cur = s;
+    let start = cover.partition_point(|&(_, ce)| ce <= s);
+    for &(cs, ce) in &cover[start..] {
+        if cs >= e {
+            break;
+        }
+        if cs > cur {
+            emit(cur, cs);
+        }
+        cur = cur.max(ce);
+        if cur >= e {
+            break;
+        }
+    }
+    if cur < e {
+        emit(cur, e);
     }
 }
 
@@ -459,6 +625,131 @@ mod tests {
         assert_eq!(t.span_count(), 0);
         assert!((t.busy(0, SpanKind::Compute) - 2.5).abs() < 1e-12);
         assert_eq!(t.end_time(), 3.0);
+    }
+
+    // ----------------- Aggregate-mode online uncovered_load -----------------
+
+    #[test]
+    fn interval_insert_merges_and_sorts() {
+        let mut ivs: Vec<(Time, Time)> = Vec::new();
+        interval_insert(&mut ivs, 5.0, 6.0);
+        interval_insert(&mut ivs, 1.0, 2.0);
+        interval_insert(&mut ivs, 3.0, 4.0);
+        assert_eq!(ivs, vec![(1.0, 2.0), (3.0, 4.0), (5.0, 6.0)]);
+        // Bridge the middle two (touching endpoints merge).
+        interval_insert(&mut ivs, 2.0, 3.0);
+        assert_eq!(ivs, vec![(1.0, 4.0), (5.0, 6.0)]);
+        // Swallow everything.
+        interval_insert(&mut ivs, 0.0, 10.0);
+        assert_eq!(ivs, vec![(0.0, 10.0)]);
+        // Zero-length inserts are no-ops.
+        interval_insert(&mut ivs, 20.0, 20.0);
+        assert_eq!(ivs.len(), 1);
+    }
+
+    #[test]
+    fn pieces_subtract_splits_and_trims() {
+        let ml = 10.0; // conservative max piece length for these fixtures
+        let mut ivs = vec![(0.0, 10.0)];
+        pieces_subtract(&mut ivs, ml, 3.0, 4.0);
+        assert_eq!(ivs, vec![(0.0, 3.0), (4.0, 10.0)]);
+        pieces_subtract(&mut ivs, ml, 2.0, 5.0);
+        assert_eq!(ivs, vec![(0.0, 2.0), (5.0, 10.0)]);
+        pieces_subtract(&mut ivs, ml, 5.0, 10.0);
+        assert_eq!(ivs, vec![(0.0, 2.0)]);
+        pieces_subtract(&mut ivs, ml, 7.0, 9.0); // disjoint: no-op
+        assert_eq!(ivs, vec![(0.0, 2.0)]);
+        pieces_subtract(&mut ivs, ml, 0.0, 2.0);
+        assert!(ivs.is_empty());
+        // Overlapping pieces (two loads sharing time) are trimmed
+        // independently — both keep their uncovered remainders — and the
+        // result stays start-sorted without any re-sort.
+        let mut overlapping = vec![(0.0, 4.0), (1.0, 5.0)];
+        pieces_subtract(&mut overlapping, 4.0, 2.0, 3.0);
+        assert_eq!(
+            overlapping,
+            vec![(0.0, 2.0), (1.0, 2.0), (3.0, 4.0), (3.0, 5.0)]
+        );
+    }
+
+    #[test]
+    fn pieces_subtract_window_skips_stale_pieces() {
+        // Pieces whose start is at or before `s - max_len` cannot overlap
+        // [s, e) and must survive untouched (the windowing invariant).
+        let mut ivs = vec![(0.0, 1.0), (2.0, 3.0), (10.0, 11.0), (12.0, 13.0)];
+        pieces_subtract(&mut ivs, 1.0, 10.5, 12.5);
+        assert_eq!(
+            ivs,
+            vec![(0.0, 1.0), (2.0, 3.0), (10.0, 10.5), (12.5, 13.0)]
+        );
+    }
+
+    #[test]
+    fn interval_minus_set_emits_gaps() {
+        let cover = vec![(1.0, 2.0), (3.0, 4.0)];
+        let mut got = Vec::new();
+        interval_minus_set(0.0, 5.0, &cover, |s, e| got.push((s, e)));
+        assert_eq!(got, vec![(0.0, 1.0), (2.0, 3.0), (4.0, 5.0)]);
+        got.clear();
+        interval_minus_set(1.2, 1.8, &cover, |s, e| got.push((s, e)));
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn aggregate_uncovered_matches_full_with_retroactive_compute() {
+        // The tricky case for the online structure: a compute span pushed
+        // AFTER the load it covers must retroactively shrink the pending
+        // pieces.
+        let mut full = Trace::with_mode(TraceMode::Full);
+        let mut agg = Trace::with_mode(TraceMode::Aggregate);
+        for t in [&mut full, &mut agg] {
+            t.push(0, SpanKind::Load, Label::None, 0.0, 4.0);
+            t.push(1, SpanKind::Compute, Label::None, 1.0, 2.0); // after the load
+            t.push(0, SpanKind::Compute, Label::None, 3.0, 4.0);
+            t.push(1, SpanKind::Load, Label::None, 2.0, 6.0);
+            t.push(2, SpanKind::Compute, Label::None, 5.0, 5.5);
+        }
+        assert_eq!(agg.span_count(), 0, "Aggregate must not materialize spans");
+        let f = full.uncovered_loads();
+        let a = agg.uncovered_loads();
+        assert_eq!(f.len(), a.len());
+        for (dev, (fv, av)) in f.iter().zip(&a).enumerate() {
+            assert!((fv - av).abs() < 1e-12, "dev{dev}: full {fv} vs agg {av}");
+        }
+        assert!((a[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregate_uncovered_matches_full_randomized() {
+        // Fuzz the online maintenance against the Full sweep-line oracle
+        // over random interleavings of loads and computes on 3 lanes.
+        let mut rng = crate::util::rng::Rng::new(0xA66);
+        for _case in 0..50 {
+            let mut full = Trace::with_mode(TraceMode::Full);
+            let mut agg = Trace::with_mode(TraceMode::Aggregate);
+            let events = rng.range(1, 40);
+            for _ in 0..events {
+                let dev = rng.range(0, 3);
+                let s = rng.range_f64(0.0, 20.0);
+                let e = s + rng.range_f64(0.0, 5.0);
+                let kind = if rng.chance(0.5) {
+                    SpanKind::Compute
+                } else {
+                    SpanKind::Load
+                };
+                full.push(dev, kind, Label::None, s, e);
+                agg.push(dev, kind, Label::None, s, e);
+            }
+            let f = full.uncovered_loads();
+            let a = agg.uncovered_loads();
+            assert_eq!(f.len(), a.len());
+            for (dev, (fv, av)) in f.iter().zip(&a).enumerate() {
+                assert!(
+                    (fv - av).abs() < 1e-9 * fv.abs().max(1.0),
+                    "dev{dev}: full {fv} vs aggregate {av}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -182,6 +182,106 @@ impl Bench {
     }
 }
 
+/// Outcome of diffing a fresh bench JSON against a committed baseline.
+#[derive(Debug)]
+pub struct RegressionReport {
+    /// Human-readable per-measurement lines (always printed).
+    pub lines: Vec<String>,
+    /// Measurements slower than `tolerance ×` their baseline — CI fails
+    /// loudly when this is non-empty.
+    pub failures: Vec<String>,
+}
+
+/// Diff a fresh `lime-bench-v1` snapshot against a committed baseline with
+/// a tolerance band: a measurement **fails** when
+/// `current_mean > tolerance × baseline_mean`, or when a baselined
+/// measurement disappeared from the current run (silent coverage loss).
+///
+/// Baseline entries with `mean_s <= 0` are *unpinned placeholders* — the
+/// bootstrap baseline ships with zeros until a reference machine records
+/// real numbers (see README §Benchmarks) — reported, never failed.
+pub fn check_regression(
+    current: &Json,
+    baseline: &Json,
+    tolerance: f64,
+) -> Result<RegressionReport, String> {
+    if tolerance < 1.0 {
+        return Err(format!("tolerance must be >= 1.0, got {tolerance}"));
+    }
+    for (label, json) in [("current", current), ("baseline", baseline)] {
+        match json.get("schema").and_then(Json::as_str) {
+            Some("lime-bench-v1") => {}
+            other => return Err(format!("{label}: expected schema lime-bench-v1, got {other:?}")),
+        }
+    }
+    let means = |json: &Json| -> Result<std::collections::BTreeMap<String, f64>, String> {
+        let arr = json
+            .get("measurements")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "missing 'measurements' array".to_string())?;
+        let mut out = std::collections::BTreeMap::new();
+        for m in arr {
+            let name = m
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| "measurement without 'name'".to_string())?;
+            let mean = m
+                .get("mean_s")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("measurement '{name}' without numeric 'mean_s'"))?;
+            out.insert(name.to_string(), mean);
+        }
+        Ok(out)
+    };
+    let cur = means(current)?;
+    let base = means(baseline)?;
+
+    let mut report = RegressionReport {
+        lines: Vec::new(),
+        failures: Vec::new(),
+    };
+    for (name, &cur_mean) in &cur {
+        match base.get(name) {
+            None => report
+                .lines
+                .push(format!("  {name:48} {:>12}  (new, no baseline)", fmt_secs(cur_mean))),
+            Some(&b) if b <= 0.0 => report.lines.push(format!(
+                "  {name:48} {:>12}  (baseline unpinned — record one, see README)",
+                fmt_secs(cur_mean)
+            )),
+            Some(&b) => {
+                let ratio = cur_mean / b;
+                let line = format!(
+                    "  {name:48} {:>12} vs baseline {:>12}  ({ratio:.2}x, tolerance {tolerance:.2}x)",
+                    fmt_secs(cur_mean),
+                    fmt_secs(b)
+                );
+                if ratio > tolerance {
+                    report.failures.push(format!("REGRESSION {}", line.trim_start()));
+                } else {
+                    report.lines.push(line);
+                }
+            }
+        }
+    }
+    for (name, &b) in &base {
+        if !cur.contains_key(name) {
+            if b <= 0.0 {
+                // Unpinned placeholders carry no perf signal; losing one is
+                // renaming noise, not silent coverage loss.
+                report.lines.push(format!(
+                    "  {name:48} (unpinned baseline entry absent from the current run)"
+                ));
+            } else {
+                report.failures.push(format!(
+                    "MISSING    {name}: baselined measurement absent from the current run"
+                ));
+            }
+        }
+    }
+    Ok(report)
+}
+
 /// Human-format a duration in seconds.
 pub fn fmt_secs(s: f64) -> String {
     if s >= 1.0 {
@@ -249,6 +349,68 @@ mod tests {
         // The writer's output must parse back identically.
         let reparsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(reparsed, j);
+    }
+
+    fn bench_json(measurements: &[(&str, f64)]) -> Json {
+        let rows: Vec<Json> = measurements
+            .iter()
+            .map(|&(name, mean)| obj(&[("name", name.into()), ("mean_s", mean.into())]))
+            .collect();
+        obj(&[
+            ("schema", "lime-bench-v1".into()),
+            ("bench", "t".into()),
+            ("measurements", Json::Arr(rows)),
+        ])
+    }
+
+    #[test]
+    fn regression_gate_passes_within_tolerance() {
+        let base = bench_json(&[("a", 1.0), ("b", 0.5)]);
+        let cur = bench_json(&[("a", 1.4), ("b", 0.4)]);
+        let r = check_regression(&cur, &base, 1.5).unwrap();
+        assert!(r.failures.is_empty(), "{:?}", r.failures);
+        assert_eq!(r.lines.len(), 2);
+    }
+
+    #[test]
+    fn regression_gate_fails_loudly_beyond_tolerance() {
+        let base = bench_json(&[("a", 1.0)]);
+        let cur = bench_json(&[("a", 2.0)]);
+        let r = check_regression(&cur, &base, 1.5).unwrap();
+        assert_eq!(r.failures.len(), 1);
+        assert!(r.failures[0].contains("REGRESSION"), "{}", r.failures[0]);
+        assert!(r.failures[0].contains('a'));
+    }
+
+    #[test]
+    fn regression_gate_skips_unpinned_and_new_entries() {
+        // mean_s == 0 marks the committed bootstrap baseline as unpinned —
+        // neither a slow current value nor the entry disappearing fails.
+        let base = bench_json(&[("a", 0.0), ("gone-unpinned", 0.0)]);
+        let cur = bench_json(&[("a", 99.0), ("brand-new", 1.0)]);
+        let r = check_regression(&cur, &base, 1.5).unwrap();
+        assert!(r.failures.is_empty(), "{:?}", r.failures);
+        assert!(r.lines.iter().any(|l| l.contains("unpinned")));
+        assert!(r.lines.iter().any(|l| l.contains("no baseline")));
+        assert!(r.lines.iter().any(|l| l.contains("gone-unpinned")));
+    }
+
+    #[test]
+    fn regression_gate_flags_disappeared_measurements() {
+        let base = bench_json(&[("a", 1.0), ("gone", 1.0)]);
+        let cur = bench_json(&[("a", 1.0)]);
+        let r = check_regression(&cur, &base, 2.0).unwrap();
+        assert_eq!(r.failures.len(), 1);
+        assert!(r.failures[0].contains("MISSING"));
+    }
+
+    #[test]
+    fn regression_gate_rejects_bad_inputs() {
+        let good = bench_json(&[("a", 1.0)]);
+        let bad = obj(&[("schema", "other".into())]);
+        assert!(check_regression(&good, &bad, 1.5).is_err());
+        assert!(check_regression(&bad, &good, 1.5).is_err());
+        assert!(check_regression(&good, &good, 0.5).is_err(), "tolerance < 1");
     }
 
     #[test]

@@ -9,8 +9,8 @@ pub mod bench;
 pub mod bytes;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
-pub mod threads;
 pub mod toml;

@@ -1,0 +1,521 @@
+//! Persistent work-stealing executor for the sweep fan-outs (the offline
+//! scheduler's `#Seg` candidates, the experiment harness's grid cells, the
+//! executors' scenario sweeps).
+//!
+//! PR 1's `util::threads::par_map_indexed` (now retired) spawned fresh
+//! scoped threads on every call and forced nested fan-out (grid cell →
+//! `plan()` candidates) to degrade to sequential so OS threads would not
+//! multiply. This module replaces that substrate with a persistent pool,
+//! std-only like everything else in the crate:
+//!
+//! * **One lazily-initialized global worker set** ([`global`]), sized by
+//!   the `LIME_THREADS` env override (CI pins it for stable timings) or the
+//!   machine's `available_parallelism`. Workers are spawned once and reused
+//!   across every sweep in the process.
+//! * **Per-worker LIFO deques with steal-half.** A worker pops its own
+//!   deque from the back (newest first — nested jobs run with hot caches),
+//!   and an idle worker steals the oldest *half* of a sibling's deque in
+//!   one lock acquisition, so a burst of jobs spreads in O(log n) steals.
+//! * **Nested job submission.** [`Pool::map_indexed`] called from inside a
+//!   pool job pushes the sub-jobs onto the calling worker's own deque and
+//!   the worker *helps* (executes pool jobs) while it waits for its
+//!   sub-results — a grid cell running on a worker fans its `#Seg`
+//!   candidates back into the same pool instead of running them
+//!   sequentially. External callers help through the shared injector
+//!   queue, whose batches are pushed to the *front* so a helping thread's
+//!   nested fan-out likewise runs its own sub-jobs before older unrelated
+//!   jobs (depth-first, bounded helper stack).
+//!
+//! **Determinism contract:** `map_indexed` places results by job index and
+//! callers reduce in submission order, so the output is bit-identical to
+//! the sequential `jobs.iter().map(f)` loop at any worker count, under any
+//! steal interleaving, and under nested submission (property-tested in
+//! `rust/tests/pool.rs` at 1, 2 and 8 workers).
+//!
+//! **Panic containment:** a panicking job never kills a pool worker. The
+//! panic payload is carried back to the `map_indexed` call that submitted
+//! the job and re-raised there (lowest job index wins when several jobs
+//! panic) — after every sibling job of the call has finished, so borrows
+//! stay sound. The pool itself stays healthy and later calls proceed.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::TryRecvError;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// A lifetime-erased unit of work. Every task created by `map_indexed`
+/// catches its own panics, so running one never unwinds into the worker.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// How long a worker (or a helping caller) sleeps when no task and no
+/// result is available. A wakeup is normally delivered through the condvar
+/// (or the result channel) — the timeout only bounds the cost of a missed
+/// wakeup.
+const IDLE_WAIT: Duration = Duration::from_millis(10);
+const HELP_WAIT: Duration = Duration::from_micros(200);
+
+thread_local! {
+    /// `(pool id, worker index)` when the current thread is a pool worker.
+    static WORKER: std::cell::Cell<Option<(usize, usize)>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// Globally unique pool ids so a worker of one pool is treated as an
+/// external caller by every other pool.
+static NEXT_POOL_ID: AtomicUsize = AtomicUsize::new(0);
+
+struct Shared {
+    pool_id: usize,
+    /// FIFO queue for jobs submitted from threads outside this pool.
+    injector: Mutex<VecDeque<Task>>,
+    /// Per-worker deques: owner pops the back (LIFO), thieves drain the
+    /// oldest half from the front.
+    deques: Vec<Mutex<VecDeque<Task>>>,
+    /// Sleep coordination: submissions bump `epoch` and notify; a worker
+    /// re-checks `epoch` under the lock before sleeping, so a submission
+    /// between its (lock-free) scan and its wait cannot be lost.
+    idle_lock: Mutex<()>,
+    idle_cv: Condvar,
+    epoch: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    /// Pull one runnable task: own deque (LIFO), then the injector, then
+    /// steal-half from a sibling. `me` is the calling worker's index in
+    /// *this* pool, or `None` for an external helper.
+    fn find_task(&self, me: Option<usize>) -> Option<Task> {
+        if let Some(i) = me {
+            if let Some(t) = self.deques[i].lock().unwrap().pop_back() {
+                return Some(t);
+            }
+        }
+        if let Some(t) = self.injector.lock().unwrap().pop_front() {
+            return Some(t);
+        }
+        let n = self.deques.len();
+        let start = me.map_or(0, |i| i + 1);
+        for off in 0..n {
+            let v = (start + off) % n;
+            if Some(v) == me {
+                continue;
+            }
+            let mut stolen: VecDeque<Task> = {
+                let mut victim = self.deques[v].lock().unwrap();
+                let take = victim.len().div_ceil(2);
+                if take == 0 {
+                    continue;
+                }
+                victim.drain(..take).collect()
+            };
+            let first = stolen.pop_front();
+            if !stolen.is_empty() {
+                // Re-home the surplus where the caller can pop it (or where
+                // other idle workers will find it) and wake a sleeper.
+                match me {
+                    Some(i) => {
+                        let mut own = self.deques[i].lock().unwrap();
+                        for t in stolen {
+                            own.push_back(t);
+                        }
+                    }
+                    None => {
+                        let mut inj = self.injector.lock().unwrap();
+                        for t in stolen {
+                            inj.push_back(t);
+                        }
+                    }
+                }
+                self.notify();
+            }
+            return first;
+        }
+        None
+    }
+
+    fn notify(&self) {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        let _guard = self.idle_lock.lock().unwrap();
+        self.idle_cv.notify_all();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, index: usize) {
+    WORKER.with(|w| w.set(Some((shared.pool_id, index))));
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        // Sample the epoch BEFORE scanning: a submission that lands after
+        // the (empty) scan bumps the epoch, so the re-check under the lock
+        // below catches it and the worker rescans instead of sleeping.
+        let seen = shared.epoch.load(Ordering::SeqCst);
+        if let Some(task) = shared.find_task(Some(index)) {
+            task();
+            continue;
+        }
+        let guard = shared.idle_lock.lock().unwrap();
+        if shared.epoch.load(Ordering::SeqCst) != seen
+            || shared.shutdown.load(Ordering::SeqCst)
+        {
+            continue; // something arrived between the scan and the lock
+        }
+        let _ = shared.idle_cv.wait_timeout(guard, IDLE_WAIT).unwrap();
+    }
+}
+
+/// A persistent worker set. Most code uses the process-wide [`global`]
+/// pool; tests and the sequential-reference paths build dedicated pools
+/// with explicit worker counts.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: usize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Pool {
+    /// Spawn a pool with `workers` threads (clamped to at least 1).
+    pub fn new(workers: usize) -> Pool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            pool_id: NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed),
+            injector: Mutex::new(VecDeque::new()),
+            deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            idle_lock: Mutex::new(()),
+            idle_cv: Condvar::new(),
+            epoch: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("lime-pool-{i}"))
+                    .spawn(move || worker_loop(shared, i))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Pool {
+            shared,
+            workers,
+            handles: Mutex::new(handles),
+        }
+    }
+
+    /// Worker-thread count (excludes helping callers).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The calling thread's worker index in this pool, or `None` when the
+    /// caller is external (including workers of *other* pools).
+    fn me(&self) -> Option<usize> {
+        WORKER.with(|w| match w.get() {
+            Some((pool, idx)) if pool == self.shared.pool_id => Some(idx),
+            _ => None,
+        })
+    }
+
+    /// Enqueue a whole call's jobs under ONE lock acquisition and wake the
+    /// workers once — n separate submits would broadcast n times and take
+    /// 2n mutex acquisitions before the first result is drained.
+    ///
+    /// Worker callers push onto their own deque (popped LIFO). External
+    /// callers push onto the injector's FRONT, keeping in-batch order:
+    /// newest batch first makes a *nested* external call (a helping thread
+    /// executing a job inline that fans out again) find its own sub-jobs
+    /// before older unrelated jobs — without this, the helper would
+    /// recursively execute every pending top-level job while waiting
+    /// (stack depth growing with the grid size) instead of descending into
+    /// its own fan-out. Relative order between separate calls carries no
+    /// meaning: each call's results are placed by its own job indices.
+    fn submit_batch(&self, tasks: Vec<Task>) {
+        match self.me() {
+            Some(i) => self.shared.deques[i].lock().unwrap().extend(tasks),
+            None => {
+                let mut inj = self.shared.injector.lock().unwrap();
+                for t in tasks.into_iter().rev() {
+                    inj.push_front(t);
+                }
+            }
+        }
+        self.shared.notify();
+    }
+
+    /// Apply `f` to every job and return results in job order.
+    ///
+    /// Bit-identical to `jobs.iter().map(f).collect()` regardless of the
+    /// worker count or steal schedule: workers claim jobs in any order but
+    /// results are placed by index. Callable from anywhere — including from
+    /// inside a pool job, in which case the sub-jobs go onto the calling
+    /// worker's own deque and the worker executes pool work while waiting
+    /// (nested submission never degrades to sequential and never
+    /// deadlocks). If a job panics, the panic resurfaces here after every
+    /// job of this call has finished.
+    pub fn map_indexed<J, T>(&self, jobs: &[J], f: impl Fn(&J) -> T + Sync) -> Vec<T>
+    where
+        J: Sync,
+        T: Send,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if n == 1 {
+            return vec![f(&jobs[0])];
+        }
+
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, std::thread::Result<T>)>();
+        let tasks: Vec<Task> = (0..n)
+            .map(|i| {
+                let tx = tx.clone();
+                let f = &f;
+                let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let result = catch_unwind(AssertUnwindSafe(|| f(&jobs[i])));
+                    let _ = tx.send((i, result));
+                });
+                // SAFETY: the task borrows `jobs`, `f` and `tx`, which live
+                // on this call's stack. The drain loop below does not return
+                // (and cannot unwind: helping runs only self-catching tasks)
+                // until all `n` results have been received, and a task's
+                // final action is the send — so every borrow is dead before
+                // this frame ends.
+                unsafe { erase_task_lifetime(task) }
+            })
+            .collect();
+        self.submit_batch(tasks);
+        drop(tx);
+
+        let me = self.me();
+        let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let mut first_panic: Option<(usize, Box<dyn std::any::Any + Send>)> = None;
+        let mut received = 0usize;
+        while received < n {
+            let msg = match rx.try_recv() {
+                Ok(m) => Some(m),
+                Err(TryRecvError::Empty) => {
+                    if let Some(task) = self.shared.find_task(me) {
+                        task(); // help: run pool work while waiting
+                        None
+                    } else {
+                        // Our remaining jobs are mid-flight on other
+                        // threads; block briefly on the result channel.
+                        rx.recv_timeout(HELP_WAIT).ok()
+                    }
+                }
+                Err(TryRecvError::Disconnected) => {
+                    panic!("pool result channel closed with jobs outstanding")
+                }
+            };
+            if let Some((i, res)) = msg {
+                received += 1;
+                match res {
+                    Ok(v) => out[i] = Some(v),
+                    Err(p) => match &first_panic {
+                        Some((pi, _)) if *pi < i => {}
+                        _ => first_panic = Some((i, p)),
+                    },
+                }
+            }
+        }
+        if let Some((_, payload)) = first_panic {
+            resume_unwind(payload);
+        }
+        out.into_iter()
+            .map(|slot| slot.expect("every job index reported exactly once"))
+            .collect()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.notify();
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Worker count the global pool is built with: the `LIME_THREADS` env
+/// override (≥ 1; CI pins this so bench timings are stable) or the
+/// machine's available parallelism.
+pub fn configured_workers() -> usize {
+    if let Ok(v) = std::env::var("LIME_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// The process-wide pool, spawned on first use and reused by every sweep.
+pub fn global() -> &'static Pool {
+    static GLOBAL: OnceLock<Pool> = OnceLock::new();
+    GLOBAL.get_or_init(|| Pool::new(configured_workers()))
+}
+
+/// [`Pool::map_indexed`] on the [`global`] pool.
+pub fn map_indexed<J, T>(jobs: &[J], f: impl Fn(&J) -> T + Sync) -> Vec<T>
+where
+    J: Sync,
+    T: Send,
+{
+    global().map_indexed(jobs, f)
+}
+
+/// SAFETY: caller must guarantee the erased borrows outlive every use of
+/// the task (see the invariant documented at the call site).
+unsafe fn erase_task_lifetime<'a>(task: Box<dyn FnOnce() + Send + 'a>) -> Task {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Box<dyn FnOnce() + Send + 'static>>(
+        task,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = Pool::new(4);
+        let jobs: Vec<usize> = (0..200).collect();
+        let got = pool.map_indexed(&jobs, |&x| x * x);
+        let want: Vec<usize> = jobs.iter().map(|&x| x * x).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let pool = Pool::new(2);
+        let none: Vec<u32> = Vec::new();
+        assert!(pool.map_indexed(&none, |&x| x).is_empty());
+        assert_eq!(pool.map_indexed(&[7], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        let pool = Pool::new(0);
+        assert_eq!(pool.workers(), 1);
+        assert_eq!(pool.map_indexed(&[1, 2, 3], |&x| x * 2), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn nested_submission_runs_on_the_same_pool() {
+        let pool = Pool::new(3);
+        let outer: Vec<usize> = (0..8).collect();
+        let got = pool.map_indexed(&outer, |&o| {
+            let inner: Vec<usize> = (0..6).collect();
+            pool.map_indexed(&inner, |&i| o * 10 + i).iter().sum::<usize>()
+        });
+        let want: Vec<usize> = outer
+            .iter()
+            .map(|&o| (0..6).map(|i| o * 10 + i).sum::<usize>())
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn deep_nesting_terminates() {
+        let pool = Pool::new(2);
+        fn depth_sum(pool: &Pool, depth: usize) -> usize {
+            if depth == 0 {
+                return 1;
+            }
+            let jobs = [0usize, 1];
+            pool.map_indexed(&jobs, |_| depth_sum(pool, depth - 1))
+                .iter()
+                .sum()
+        }
+        assert_eq!(depth_sum(&pool, 5), 32);
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = Pool::new(2);
+        let jobs: Vec<usize> = (0..16).collect();
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.map_indexed(&jobs, |&x| {
+                if x == 5 {
+                    panic!("job five exploded");
+                }
+                x
+            })
+        }));
+        let payload = outcome.expect_err("panic must propagate to the caller");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .unwrap_or("<non-str payload>");
+        assert!(msg.contains("exploded"), "{msg}");
+        // The pool is not poisoned: workers survived and later calls work.
+        assert_eq!(pool.map_indexed(&jobs, |&x| x + 1)[15], 16);
+    }
+
+    #[test]
+    fn lowest_index_panic_wins() {
+        let pool = Pool::new(4);
+        let jobs: Vec<usize> = (0..32).collect();
+        for _ in 0..4 {
+            let payload = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                pool.map_indexed(&jobs, |&x| {
+                    if x % 7 == 3 {
+                        panic!("boom at {x}");
+                    }
+                    x
+                })
+            }))
+            .expect_err("must panic");
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default();
+            assert_eq!(msg, "boom at 3", "deterministic panic selection");
+        }
+    }
+
+    #[test]
+    fn external_callers_share_one_global_pool() {
+        let a = global() as *const Pool;
+        let b = global() as *const Pool;
+        assert_eq!(a, b);
+        assert!(global().workers() >= 1);
+        let jobs = vec![1u64, 2, 3, 4];
+        assert_eq!(map_indexed(&jobs, |&x| x * x), vec![1, 4, 9, 16]);
+    }
+
+    #[test]
+    fn side_effects_happen_exactly_once_per_job() {
+        let pool = Pool::new(8);
+        let counter = AtomicU64::new(0);
+        let jobs: Vec<usize> = (0..500).collect();
+        let got = pool.map_indexed(&jobs, |&x| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(got, jobs);
+        assert_eq!(counter.load(Ordering::Relaxed), 500);
+    }
+
+    #[test]
+    fn configured_workers_positive() {
+        assert!(configured_workers() >= 1);
+    }
+
+    #[test]
+    fn dropping_a_pool_joins_workers() {
+        let pool = Pool::new(3);
+        let jobs: Vec<usize> = (0..50).collect();
+        let _ = pool.map_indexed(&jobs, |&x| x + 1);
+        drop(pool); // must not hang or leak panicking threads
+    }
+}

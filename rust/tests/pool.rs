@@ -1,0 +1,179 @@
+//! Work-stealing pool invariants (the tentpole determinism contract):
+//!
+//! * `Pool::map_indexed` is bit-identical to the sequential loop at any
+//!   worker count — including under *nested* submission (a job fanning out
+//!   again on the same pool), the shape a grid cell calling `plan()` takes.
+//! * A panicking job propagates to its submitting call and poisons nothing:
+//!   the pool's workers survive and later sweeps run normally.
+//! * A real `experiments` grid evaluated on the pool equals the sequential
+//!   reference cell-for-cell, and the executors' sweep entry points equal
+//!   their sequential loops.
+
+use lime::baselines::all;
+use lime::cluster::Cluster;
+use lime::experiments::{grid_cells, grid_cells_sequential};
+use lime::model::ModelSpec;
+use lime::net::BandwidthTrace;
+use lime::pipeline::{
+    run_interleaved, run_tensor_parallel, run_traditional, sweep_interleaved,
+    sweep_tensor_parallel, sweep_traditional, ExecOptions, TpOptions, TradOptions,
+};
+use lime::plan::{plan_on_pool, PlanOptions};
+use lime::sim::TraceMode;
+use lime::util::bytes::mbps;
+use lime::util::pool::Pool;
+use lime::util::prop::{check, pair, usize_in, Config, PropResult};
+
+#[test]
+fn prop_nested_submission_is_deterministic_at_1_2_8_workers() {
+    // Random (outer width, inner width, payload) shapes; every worker
+    // count must reproduce the plain nested-loop result exactly.
+    let pools = [Pool::new(1), Pool::new(2), Pool::new(8)];
+    let gen = pair(pair(usize_in(1, 12), usize_in(1, 10)), usize_in(0, 1000));
+    let cfg = Config {
+        cases: 24,
+        seed: 0x900_1,
+        max_shrink_steps: 32,
+    };
+    let result = check(&cfg, &gen, |&((outer_n, inner_n), salt)| {
+        let outer: Vec<usize> = (0..outer_n).collect();
+        let want: Vec<u64> = outer
+            .iter()
+            .map(|&o| {
+                (0..inner_n)
+                    .map(|i| (o as u64 + 1) * (i as u64 + salt as u64))
+                    .sum()
+            })
+            .collect();
+        for pool in &pools {
+            let got = pool.map_indexed(&outer, |&o| {
+                let inner: Vec<usize> = (0..inner_n).collect();
+                pool.map_indexed(&inner, |&i| (o as u64 + 1) * (i as u64 + salt as u64))
+                    .into_iter()
+                    .sum::<u64>()
+            });
+            if got != want {
+                return Err(format!(
+                    "{} workers: {got:?} != {want:?}",
+                    pool.workers()
+                ));
+            }
+        }
+        Ok(())
+    });
+    assert!(matches!(result, PropResult::Pass { .. }), "{result:?}");
+}
+
+#[test]
+fn prop_plan_on_pool_matches_sequential_at_1_2_8_workers() {
+    // The planner's #Seg candidates as nested pool jobs: the chosen
+    // allocation, cost and curve must equal the sequential reference.
+    let spec = ModelSpec::llama33_70b();
+    let opts = PlanOptions {
+        empirical_tokens: 128,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    };
+    for cluster in [Cluster::lowmem_setting1(), Cluster::lowmem_setting3()] {
+        let seq = plan_on_pool(&spec, &cluster, &opts, None).expect("sequential plan");
+        for workers in [1usize, 2, 8] {
+            let pool = Pool::new(workers);
+            let par = plan_on_pool(&spec, &cluster, &opts, Some(&pool)).expect("pooled plan");
+            assert_eq!(seq.allocation, par.allocation, "workers={workers}");
+            assert_eq!(seq.seg_curve, par.seg_curve, "workers={workers}");
+            assert_eq!(seq.cost, par.cost, "workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn panic_in_job_propagates_but_does_not_poison_the_pool() {
+    let pool = Pool::new(4);
+    let jobs: Vec<usize> = (0..64).collect();
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.map_indexed(&jobs, |&x| {
+            if x == 9 {
+                panic!("injected failure in job {x}");
+            }
+            x * 2
+        })
+    }));
+    assert!(outcome.is_err(), "the job panic must reach the caller");
+    // Poisoning check: the same pool still completes real planning work.
+    let spec = ModelSpec::llama33_70b();
+    let cluster = Cluster::lowmem_setting1();
+    let opts = PlanOptions {
+        empirical_tokens: 128,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    };
+    let after = plan_on_pool(&spec, &cluster, &opts, Some(&pool)).expect("pool survived");
+    let reference = plan_on_pool(&spec, &cluster, &opts, None).unwrap();
+    assert_eq!(after.allocation, reference.allocation);
+}
+
+#[test]
+fn pool_grid_equals_sequential_grid_over_real_experiments() {
+    // The acceptance check: a real (method × bandwidth × pattern) grid —
+    // LIME cells nest plan() onto the pool — must be bit-identical to the
+    // sequential triple loop, cell for cell.
+    let spec = ModelSpec::llama2_13b();
+    let cluster = Cluster::env_e1();
+    let methods = all();
+    let bandwidths = [100.0, 200.0];
+    let pooled = grid_cells(&spec, &cluster, &methods, &bandwidths, 4);
+    let sequential = grid_cells_sequential(&spec, &cluster, &methods, &bandwidths, 4);
+    assert_eq!(pooled.len(), sequential.len());
+    assert_eq!(pooled.len(), methods.len() * bandwidths.len() * 2);
+    for (p, s) in pooled.iter().zip(&sequential) {
+        assert_eq!(p, s, "grid cell diverged between pool and sequential");
+    }
+}
+
+#[test]
+fn executor_sweep_entry_point_matches_sequential_runs() {
+    let spec = ModelSpec::llama33_70b();
+    let cluster = Cluster::lowmem_setting1();
+    let opts = PlanOptions {
+        empirical_tokens: 128,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    };
+    let alloc = lime::plan::plan(&spec, &cluster, &opts).unwrap().allocation;
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let exec = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let scenarios: Vec<(usize, usize)> = vec![(1, 6), (2, 5), (5, 4), (1, 8)];
+    let swept = sweep_interleaved(&alloc, &cluster, &bw, &scenarios, &exec);
+    assert_eq!(swept.len(), scenarios.len());
+    for (r, &(micro, tokens)) in swept.iter().zip(&scenarios) {
+        let direct = run_interleaved(&alloc, &cluster, &bw, micro, tokens, &exec);
+        assert_eq!(r.total_time, direct.total_time, "({micro},{tokens})");
+        assert_eq!(r.step_times, direct.step_times, "({micro},{tokens})");
+        assert_eq!(r.emergency_steps, direct.emergency_steps);
+    }
+
+    // Same bit-identity contract for the other two executors' entry points.
+    let trad = TradOptions {
+        trace_mode: TraceMode::Off,
+        ..TradOptions::default()
+    };
+    let trad_swept = sweep_traditional(&alloc, &cluster, &bw, &scenarios, &trad);
+    for (r, &(micro, tokens)) in trad_swept.iter().zip(&scenarios) {
+        let direct = run_traditional(&alloc, &cluster, &bw, micro, tokens, &trad);
+        assert_eq!(r.total_time, direct.total_time, "trad ({micro},{tokens})");
+        assert_eq!(r.step_times, direct.step_times, "trad ({micro},{tokens})");
+    }
+    let tp = TpOptions {
+        trace_mode: TraceMode::Off,
+        ..TpOptions::default()
+    };
+    let tp_swept = sweep_tensor_parallel(&spec, &cluster, &bw, &scenarios, &tp);
+    for (r, &(micro, tokens)) in tp_swept.iter().zip(&scenarios) {
+        let direct = run_tensor_parallel(&spec, &cluster, &bw, micro, tokens, &tp);
+        assert_eq!(r.total_time, direct.total_time, "tp ({micro},{tokens})");
+        assert_eq!(r.step_times, direct.step_times, "tp ({micro},{tokens})");
+    }
+}

@@ -120,6 +120,24 @@ fn prop_trace_mode_never_changes_interleaved_timing() {
                 }
             }
         }
+        // Aggregate's online uncovered-load must match Full's sweep-line
+        // (the T_uncover cross-check at near-Off cost), span-free.
+        let full_uncovered = full.trace.uncovered_loads();
+        let agg_uncovered = agg.trace.uncovered_loads();
+        if full_uncovered.len() != agg_uncovered.len() {
+            return Err(format!(
+                "uncovered lanes: Full {} vs Aggregate {}",
+                full_uncovered.len(),
+                agg_uncovered.len()
+            ));
+        }
+        for (dev, (f, a)) in full_uncovered.iter().zip(&agg_uncovered).enumerate() {
+            if (f - a).abs() > 1e-9 * f.abs().max(1.0) {
+                return Err(format!(
+                    "uncovered_load({dev}): Full {f} vs Aggregate {a}"
+                ));
+            }
+        }
         Ok(())
     });
     match result {
