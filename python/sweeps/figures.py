@@ -1,0 +1,328 @@
+"""Consumer for the Rust sweep artifacts (schema ``lime-sweep-v2``).
+
+``lime experiments --id sweep`` writes one ``SWEEP_<grid>.json`` per
+scenario matrix (lowmem settings + cluster-size subsets). This module
+renders those artifacts into the paper's figure layouts:
+
+* :func:`fig_latency_vs_bandwidth` — methods × bandwidth per pattern
+  (Figs 12–17 layout), from the baseline axis point;
+* :func:`fig_seg_curve` — LIME latency vs ``#Seg`` (Figs 7–8 layout),
+  from the ``#Seg``-override axis;
+* :func:`fig_memory_fluctuation` — LIME latency + §IV-D adaptation
+  counters per memory-pressure scenario (the Table-V-flavoured view of
+  the online planner / KV transfer machinery);
+* :func:`speedup_summary` — LIME's speedup over the best completing
+  baseline per column (the paper's headline numbers).
+
+Everything is stdlib-only and renders Markdown tables; ``--plot`` adds
+PNGs when matplotlib is importable (it is optional on purpose — CI and
+edge boxes don't have it).
+
+Usage::
+
+    python -m sweeps.figures path/to/sweeps [--out figs] [--plot]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from dataclasses import dataclass
+from typing import Any
+
+SCHEMA = "lime-sweep-v2"
+
+
+@dataclass
+class Grid:
+    """One parsed sweep artifact."""
+
+    grid: str
+    model: str
+    tokens: int
+    axes: dict[str, Any]
+    cells: list[dict[str, Any]]
+    path: str = ""
+
+    @property
+    def baseline_mem(self) -> str:
+        return self.axes["mem_scenarios"][0]["label"]
+
+    def baseline_cells(self) -> list[dict[str, Any]]:
+        """Cells at the baseline axis point (auto seg, no pressure)."""
+        return [
+            c
+            for c in self.cells
+            if c["seg"] == "auto" and c["mem"] == self.baseline_mem
+        ]
+
+    def lime_cells(self) -> list[dict[str, Any]]:
+        return [c for c in self.cells if c["method"] == "lime"]
+
+
+def load_grid(path: str) -> Grid:
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"{path}: expected schema {SCHEMA}, got {doc.get('schema')!r}")
+    for key in ("grid", "model", "tokens", "axes", "cells"):
+        if key not in doc:
+            raise ValueError(f"{path}: missing '{key}'")
+    return Grid(
+        grid=doc["grid"],
+        model=doc["model"],
+        tokens=doc["tokens"],
+        axes=doc["axes"],
+        cells=doc["cells"],
+        path=path,
+    )
+
+
+def load_sweeps(directory: str) -> list[Grid]:
+    """Load every ``SWEEP_*.json`` artifact in ``directory``, sorted by
+    name (other JSON files — bench output, candidate baselines — are
+    ignored, matching ``lime sweep-check``)."""
+    names = sorted(
+        n
+        for n in os.listdir(directory)
+        if n.startswith("SWEEP_") and n.endswith(".json")
+    )
+    if not names:
+        raise FileNotFoundError(f"no SWEEP_*.json artifacts in {directory}")
+    return [load_grid(os.path.join(directory, n)) for n in names]
+
+
+def _fmt_cell(cell: dict[str, Any]) -> str:
+    if cell.get("oom"):
+        return "OOM"
+    if cell.get("oot"):
+        return "OOT"
+    return f"{cell['ms_per_token']:.1f}"
+
+
+def _md_table(header: list[str], rows: list[list[str]]) -> str:
+    lines = [
+        "| " + " | ".join(header) + " |",
+        "|" + "|".join("---" for _ in header) + "|",
+    ]
+    lines += ["| " + " | ".join(row) + " |" for row in rows]
+    return "\n".join(lines)
+
+
+# --------------------------------------------------------------- figures
+
+
+def fig_latency_vs_bandwidth(grid: Grid) -> str:
+    """Figs 12–17 layout: ms/token per method across the bandwidth axis,
+    one table per request pattern, from the baseline axis point."""
+    out = [f"## {grid.grid} — latency vs bandwidth ({grid.model}, {grid.tokens} tok)"]
+    base = grid.baseline_cells()
+    bandwidths = grid.axes["bandwidths_mbps"]
+    for pattern in grid.axes["patterns"]:
+        rows = []
+        for method in grid.axes["methods"]:
+            cells = {
+                c["bandwidth_mbps"]: c
+                for c in base
+                if c["method"] == method and c["pattern"] == pattern
+            }
+            name = next(
+                (c["method_name"] for c in cells.values()), method
+            )
+            rows.append(
+                [name]
+                + [
+                    _fmt_cell(cells[bw]) if bw in cells else "-"
+                    for bw in bandwidths
+                ]
+            )
+        header = ["method (ms/token)"] + [f"{bw:g} Mbps" for bw in bandwidths]
+        out.append(f"### pattern: {pattern}")
+        out.append(_md_table(header, rows))
+    return "\n\n".join(out)
+
+
+def fig_seg_curve(grid: Grid) -> str:
+    """Figs 7–8 layout: LIME ms/token against the ``#Seg``-override axis,
+    one row per (bandwidth, pattern) column. The ``auto`` column reports
+    the scheduler's own pick as ``ms (seg=k)``."""
+    out = [f"## {grid.grid} — LIME latency vs #Seg override"]
+    segs = grid.axes["segs"]
+    rows = []
+    for c_bw in grid.axes["bandwidths_mbps"]:
+        for pattern in grid.axes["patterns"]:
+            cells = {
+                c["seg"]: c
+                for c in grid.lime_cells()
+                if c["bandwidth_mbps"] == c_bw
+                and c["pattern"] == pattern
+                and c["mem"] == grid.baseline_mem
+            }
+            row = [f"{c_bw:g} Mbps / {pattern}"]
+            for seg in segs:
+                if seg not in cells:
+                    row.append("-")
+                elif seg == "auto" and cells[seg].get("planned_seg") is not None:
+                    row.append(
+                        f"{_fmt_cell(cells[seg])} (seg={cells[seg]['planned_seg']})"
+                    )
+                else:
+                    row.append(_fmt_cell(cells[seg]))
+            rows.append(row)
+    header = ["column"] + [f"#Seg={s}" if s != "auto" else "auto" for s in segs]
+    out.append(_md_table(header, rows))
+    return "\n\n".join(out)
+
+
+def fig_memory_fluctuation(grid: Grid) -> str:
+    """§IV-D view: LIME under each memory-pressure scenario — latency plus
+    the online-adaptation counters that the scenario axis exists to
+    surface (plans fired, KV tokens shipped, emergency spill steps)."""
+    out = [f"## {grid.grid} — LIME under memory fluctuation"]
+    rows = []
+    for scenario in grid.axes["mem_scenarios"]:
+        label = scenario["label"]
+        for c in grid.lime_cells():
+            if c["mem"] != label or c["seg"] != "auto":
+                continue
+            rows.append(
+                [
+                    label,
+                    f"{c['bandwidth_mbps']:g} Mbps / {c['pattern']}",
+                    _fmt_cell(c),
+                    str(c.get("online_plans_fired", "-")),
+                    str(c.get("kv_tokens_transferred", "-")),
+                    str(c.get("emergency_steps", "-")),
+                ]
+            )
+    header = [
+        "scenario",
+        "column",
+        "ms/token",
+        "plans fired",
+        "KV tokens shipped",
+        "emergency steps",
+    ]
+    out.append(_md_table(header, rows))
+    return "\n\n".join(out)
+
+
+def speedup_summary(grid: Grid) -> str:
+    """LIME's speedup over the best completing baseline per column — the
+    shape of the paper's 1.7x/3.7x headline claims."""
+    out = [f"## {grid.grid} — LIME speedup over best completing baseline"]
+    rows = []
+    base = grid.baseline_cells()
+    for bw in grid.axes["bandwidths_mbps"]:
+        for pattern in grid.axes["patterns"]:
+            col = [
+                c
+                for c in base
+                if c["bandwidth_mbps"] == bw and c["pattern"] == pattern
+            ]
+            lime = next((c for c in col if c["method"] == "lime"), None)
+            rivals = [
+                c
+                for c in col
+                if c["method"] != "lime" and not c.get("oom") and not c.get("oot")
+            ]
+            # OOM/OOT LIME cells are failures on the Rust side — exclude
+            # them exactly as OOM/OOT rivals are excluded above.
+            if not lime or lime.get("oom") or lime.get("oot") or not rivals:
+                continue
+            best = min(rivals, key=lambda c: c["ms_per_token"])
+            rows.append(
+                [
+                    f"{bw:g} Mbps / {pattern}",
+                    best["method_name"],
+                    f"{best['ms_per_token'] / lime['ms_per_token']:.2f}x",
+                ]
+            )
+    out.append(_md_table(["column", "best baseline", "LIME speedup"], rows))
+    return "\n\n".join(out)
+
+
+def render_grid(grid: Grid) -> str:
+    return "\n\n".join(
+        [
+            fig_latency_vs_bandwidth(grid),
+            fig_seg_curve(grid),
+            fig_memory_fluctuation(grid),
+            speedup_summary(grid),
+        ]
+    )
+
+
+# ------------------------------------------------------------ optional PNG
+
+
+def plot_grid(grid: Grid, out_dir: str) -> list[str]:
+    """Write PNG panels with matplotlib; a no-op (with a warning) when
+    matplotlib is unavailable. Returns the paths written."""
+    try:
+        import matplotlib
+
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        print("matplotlib not available; skipping PNG output", file=sys.stderr)
+        return []
+    written = []
+    base = grid.baseline_cells()
+    for pattern in grid.axes["patterns"]:
+        fig, ax = plt.subplots(figsize=(6, 4))
+        for method in grid.axes["methods"]:
+            pts = sorted(
+                (c["bandwidth_mbps"], c["ms_per_token"])
+                for c in base
+                if c["method"] == method
+                and c["pattern"] == pattern
+                and not c.get("oom")
+            )
+            if pts:
+                ax.plot(*zip(*pts), marker="o", label=method)
+        ax.set_xlabel("bandwidth (Mbps)")
+        ax.set_ylabel("ms / token")
+        ax.set_yscale("log")
+        ax.set_title(f"{grid.grid} / {pattern} ({grid.model})")
+        ax.legend(fontsize=7)
+        path = os.path.join(out_dir, f"{grid.grid}_{pattern}.png")
+        fig.savefig(path, dpi=150, bbox_inches="tight")
+        plt.close(fig)
+        written.append(path)
+    return written
+
+
+# ------------------------------------------------------------------- CLI
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("sweep_dir", help="directory of SWEEP_*.json artifacts")
+    ap.add_argument("--out", default="", help="write per-grid .md (and PNGs) here")
+    ap.add_argument("--plot", action="store_true", help="also emit PNGs (needs matplotlib)")
+    args = ap.parse_args(argv)
+
+    grids = load_sweeps(args.sweep_dir)
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+    for grid in grids:
+        text = render_grid(grid)
+        if args.out:
+            path = os.path.join(args.out, f"{grid.grid}.md")
+            with open(path, "w", encoding="utf-8") as f:
+                f.write(text + "\n")
+            print(f"wrote {path}")
+            if args.plot:
+                for png in plot_grid(grid, args.out):
+                    print(f"wrote {png}")
+        else:
+            print(text)
+            print()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

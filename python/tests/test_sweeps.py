@@ -1,0 +1,131 @@
+"""Consumer-side tests for the ``lime-sweep-v2`` artifacts: loading,
+figure-layout rendering, and the speedup summary — against a small
+hand-built grid mirroring what ``lime experiments --id sweep`` emits."""
+
+import json
+
+import pytest
+
+from sweeps import figures
+
+
+def _cell(method, name, bw, pattern, seg, mem, ms, **extra):
+    cell = {
+        "method": method,
+        "method_name": name,
+        "bandwidth_mbps": bw,
+        "pattern": pattern,
+        "seg": seg,
+        "mem": mem,
+        "planned_seg": extra.get("planned_seg"),
+        "ms_per_token": ms,
+        "oom": ms is None,
+        "oot": extra.get("oot", False),
+        "online_plans_fired": None if ms is None else extra.get("plans", 0),
+        "kv_tokens_transferred": None if ms is None else extra.get("kv", 0),
+        "emergency_steps": None if ms is None else extra.get("emergency", 0),
+    }
+    return cell
+
+
+@pytest.fixture
+def sweep_dir(tmp_path):
+    cells = []
+    for pattern in ("sporadic", "bursty"):
+        # LIME: full seg × mem cross at one bandwidth.
+        for seg, planned in (("auto", 6), (4, 4)):
+            for mem, plans in (("none", 0), ("squeeze-d0", 3)):
+                cells.append(
+                    _cell(
+                        "lime", "LIME", 200.0, pattern, seg, mem,
+                        100.0 + plans * 10.0,
+                        planned_seg=planned, plans=plans, kv=plans * 8,
+                    )
+                )
+        # Baselines: baseline point only.
+        cells.append(_cell("pp", "Pipeline parallelism", 200.0, pattern, "auto", "none", 250.0))
+        cells.append(_cell("galaxy", "Galaxy", 200.0, pattern, "auto", "none", None))
+    doc = {
+        "schema": "lime-sweep-v2",
+        "grid": "testgrid",
+        "model": "Llama3.3-70B-Instruct",
+        "tokens": 16,
+        "bandwidths_mbps": [200.0],
+        "axes": {
+            "cluster": {"label": "testgrid", "devices": ["AGXOrin-64G", "XavierNX-16G"]},
+            "bandwidths_mbps": [200.0],
+            "patterns": ["sporadic", "bursty"],
+            "methods": ["lime", "pp", "galaxy"],
+            "segs": ["auto", 4],
+            "mem_scenarios": [
+                {"label": "none", "events": []},
+                {
+                    "label": "squeeze-d0",
+                    "events": [{"at_step": 4, "device": 0, "delta_bytes": -4e9}],
+                },
+            ],
+        },
+        "cells": cells,
+    }
+    path = tmp_path / "SWEEP_testgrid.json"
+    path.write_text(json.dumps(doc))
+    return tmp_path
+
+
+def test_load_sweeps_parses_grid(sweep_dir):
+    grids = figures.load_sweeps(str(sweep_dir))
+    assert len(grids) == 1
+    g = grids[0]
+    assert g.grid == "testgrid"
+    assert g.tokens == 16
+    # Baseline point: 3 methods × 2 patterns at (auto, none).
+    assert len(g.baseline_cells()) == 6
+    assert len(g.lime_cells()) == 8
+
+
+def test_load_rejects_wrong_schema(tmp_path):
+    bad = tmp_path / "SWEEP_bad.json"
+    bad.write_text(json.dumps({"schema": "lime-sweep-v1", "cells": []}))
+    with pytest.raises(ValueError, match="lime-sweep-v2"):
+        figures.load_grid(str(bad))
+
+
+def test_latency_table_marks_oom(sweep_dir):
+    g = figures.load_sweeps(str(sweep_dir))[0]
+    text = figures.fig_latency_vs_bandwidth(g)
+    assert "LIME" in text and "100.0" in text
+    assert "OOM" in text, "Galaxy's OOM must render"
+    assert "200 Mbps" in text
+
+
+def test_seg_curve_reports_auto_pick(sweep_dir):
+    g = figures.load_sweeps(str(sweep_dir))[0]
+    text = figures.fig_seg_curve(g)
+    assert "(seg=6)" in text, "auto column must report the scheduler's pick"
+    assert "#Seg=4" in text
+
+
+def test_memory_fluctuation_surfaces_adaptation(sweep_dir):
+    g = figures.load_sweeps(str(sweep_dir))[0]
+    text = figures.fig_memory_fluctuation(g)
+    assert "squeeze-d0" in text
+    # The squeezed cells fired 3 plans and shipped 24 KV tokens.
+    assert "| 3 |" in text and "| 24 |" in text
+
+
+def test_speedup_summary_uses_best_completing_baseline(sweep_dir):
+    g = figures.load_sweeps(str(sweep_dir))[0]
+    text = figures.speedup_summary(g)
+    # pp at 250 ms vs LIME at 100 ms -> 2.50x; Galaxy (OOM) excluded.
+    assert "2.50x" in text
+    assert "Galaxy" not in text
+
+
+def test_render_grid_and_cli(sweep_dir, tmp_path, capsys):
+    g = figures.load_sweeps(str(sweep_dir))[0]
+    assert figures.render_grid(g).count("##") >= 4
+    out = tmp_path / "figs"
+    rc = figures.main([str(sweep_dir), "--out", str(out)])
+    assert rc == 0
+    assert (out / "testgrid.md").exists()
+    assert "wrote" in capsys.readouterr().out

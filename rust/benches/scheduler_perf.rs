@@ -127,6 +127,33 @@ fn main() {
         );
     }
 
+    // Scenario-matrix throughput: the same E1 point with every new axis
+    // active — #Seg overrides sharing one SegSweepCtx per planning point,
+    // and a scripted memory dip driving the online planner mid-run.
+    let matrix = lime::experiments::ScenarioMatrix::new(
+        "bench",
+        grid_spec.clone(),
+        grid_cluster.clone(),
+        &methods,
+        vec![100.0, 200.0],
+        vec![
+            lime::workload::Pattern::Sporadic,
+            lime::workload::Pattern::Bursty,
+        ],
+        4,
+    )
+    .with_segs(vec![
+        lime::experiments::SegChoice::Auto,
+        lime::experiments::SegChoice::Fixed(4),
+    ])
+    .with_mem_scenarios(vec![
+        lime::adapt::MemScenario::none(),
+        lime::adapt::MemScenario::dip("dip-d0", 0, lime::util::bytes::gib(4.0), 1, 3),
+    ]);
+    b.time("scenario_matrix_e1_allaxes (pool)", 1, 5, || {
+        std::hint::black_box(matrix.eval().len());
+    });
+
     // DES engine raw throughput.
     b.time("des_engine_1M_events", 1, 5, || {
         let mut eng: lime::sim::Engine<u64> = lime::sim::Engine::new();

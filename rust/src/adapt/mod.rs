@@ -1,9 +1,12 @@
 //! Online memory adaptation strategy (paper §IV-D): the memory-aware
-//! planner (Eqs. 5–7) and the bandwidth-sensitive KV-cache transfer
-//! protocol (Alg. 2, Eq. 8).
+//! planner (Eqs. 5–7), the bandwidth-sensitive KV-cache transfer
+//! protocol (Alg. 2, Eq. 8), and scripted memory-fluctuation scenarios
+//! that drive both from the scenario-matrix sweeps.
 
 pub mod kvtransfer;
 pub mod planner;
+pub mod pressure;
 
 pub use kvtransfer::{eq8_tokens, KvTransferProtocol, TransferState};
 pub use planner::{DeviceMemState, OffloadPlan, OnlinePlanner};
+pub use pressure::{MemEvent, MemScenario};

@@ -40,8 +40,16 @@ impl OffloadPlan {
 /// Per-device planner state.
 #[derive(Debug, Clone)]
 pub struct DeviceMemState {
-    /// Free bytes right after offline allocation (before any KV).
+    /// Free bytes right after offline allocation (before any KV),
+    /// net of scripted pressure (`slack_base` shifted by `pressure_bytes`,
+    /// clamped at zero).
     pub slack_bytes: u64,
+    /// Unpressured slack at planner construction.
+    pub slack_base: u64,
+    /// Cumulative scripted pressure (negative = memory taken away).
+    /// Tracked separately so a dip (−X then +X) restores `slack_bytes`
+    /// exactly even when the squeeze saturated it at zero.
+    pub pressure_bytes: i64,
     /// KV bytes appended per generated token on this device.
     pub kv_per_token: u64,
     /// MHA blocks still resident and evictable.
@@ -85,6 +93,8 @@ impl OnlinePlanner {
                 let beta_avail = a.non_offloaded_layers() + a.mha_offload;
                 let mut st = DeviceMemState {
                     slack_bytes: slack,
+                    slack_base: slack,
+                    pressure_bytes: 0,
                     kv_per_token,
                     alpha_avail,
                     beta_avail,
@@ -141,6 +151,25 @@ impl OnlinePlanner {
         Some(plan)
     }
 
+    /// Apply a scripted memory-fluctuation event to device `i`: shift its
+    /// post-allocation slack by `delta_bytes` (negative = external
+    /// pressure) and re-derive the next trigger threshold from the plan
+    /// currently in force. Shrinking slack pulls `TS_i^{j+1}` forward —
+    /// possibly below the current token count, in which case the very
+    /// next [`OnlinePlanner::on_token`] fires a plan; restoring slack
+    /// pushes it back out. Pressure accumulates against the unpressured
+    /// base and only the *effective* slack clamps at zero, so a dip
+    /// (−X then +X) is exactly a no-op even when the squeeze exceeded the
+    /// available slack.
+    pub fn apply_pressure(&mut self, i: usize, delta_bytes: i64) {
+        let spec = self.spec.clone();
+        let seg = self.seg;
+        let st = &mut self.states[i];
+        st.pressure_bytes = st.pressure_bytes.saturating_add(delta_bytes);
+        st.slack_bytes = shifted(st.slack_base, st.pressure_bytes);
+        st.next_threshold = next_threshold(&spec, seg, st);
+    }
+
     /// Current extra streamed bytes per pass for device `i`.
     pub fn extra_load_bytes(&self, i: usize) -> u64 {
         self.states[i].current.extra_load_bytes(&self.spec)
@@ -162,6 +191,15 @@ impl OnlinePlanner {
 
 fn effective_tokens(tokens: usize, kv_transferred: i64) -> usize {
     (tokens as i64 - kv_transferred).max(0) as usize
+}
+
+/// `base` shifted by a signed cumulative `pressure`, clamped at zero.
+pub(crate) fn shifted(base: u64, pressure: i64) -> u64 {
+    if pressure >= 0 {
+        base.saturating_add(pressure as u64)
+    } else {
+        base.saturating_sub(pressure.unsigned_abs())
+    }
 }
 
 /// `TS_i^1` (Eq. 5): slack divided by per-token KV growth.
@@ -278,6 +316,8 @@ mod tests {
         let spec = ModelSpec::llama33_70b(); // MHA block < MLP block
         let st = DeviceMemState {
             slack_bytes: 0,
+            slack_base: 0,
+            pressure_bytes: 0,
             kv_per_token: 1,
             alpha_avail: 4,
             beta_avail: 4,
@@ -300,6 +340,8 @@ mod tests {
         let spec = ModelSpec::llama33_70b();
         let st = DeviceMemState {
             slack_bytes: 0,
+            slack_base: 0,
+            pressure_bytes: 0,
             kv_per_token: 1,
             alpha_avail: 4,
             beta_avail: 4,

@@ -1,0 +1,116 @@
+//! Scripted memory-fluctuation events — the stand-in for real-world
+//! memory pressure on shared edge devices (a camera pipeline waking up, a
+//! containerized co-tenant ballooning, thermal throttling of the unified
+//! pool). The scenario-matrix sweep drives these through the interleaved
+//! executor: each event shrinks (or restores) one device's usable memory
+//! *mid-simulation*, which lowers the online planner's offload thresholds
+//! (Eqs. 5–7) and pulls the KV-transfer protocol's imminence window
+//! forward — the paper's §IV-D machinery finally shows up in sweep
+//! outputs instead of only firing when the KV cache alone outgrows slack.
+//!
+//! Scripts are plain data: deterministic given the event list, replayable
+//! at any worker count, and serialized verbatim into the `lime-sweep-v2`
+//! axis metadata so artifacts are self-describing.
+
+/// One scripted change to a device's usable memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemEvent {
+    /// Decode step (0-based) *before* which the event applies.
+    pub at_step: usize,
+    /// Device index in the cluster.
+    pub device: usize,
+    /// Signed change in usable bytes (negative = pressure, positive =
+    /// restoration). Applied saturating at zero.
+    pub delta_bytes: i64,
+}
+
+/// A named memory-fluctuation scenario: a label (stable across sweep
+/// artifacts) plus its event script. An empty script is the "none"
+/// baseline every non-adaptive method is measured at.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemScenario {
+    pub label: String,
+    pub events: Vec<MemEvent>,
+}
+
+impl MemScenario {
+    /// The no-pressure baseline scenario.
+    pub fn none() -> Self {
+        MemScenario {
+            label: "none".into(),
+            events: Vec::new(),
+        }
+    }
+
+    /// A dip: `device` loses `bytes` before `down_step`, regains them
+    /// before `up_step` — the transient-co-tenant shape.
+    pub fn dip(label: &str, device: usize, bytes: u64, down_step: usize, up_step: usize) -> Self {
+        assert!(down_step < up_step, "dip must release after it squeezes");
+        MemScenario {
+            label: label.into(),
+            events: vec![
+                MemEvent {
+                    at_step: down_step,
+                    device,
+                    delta_bytes: -(bytes as i64),
+                },
+                MemEvent {
+                    at_step: up_step,
+                    device,
+                    delta_bytes: bytes as i64,
+                },
+            ],
+        }
+    }
+
+    /// A squeeze: `device` loses `bytes` before `at_step` and never gets
+    /// them back — the persistent-co-tenant shape.
+    pub fn squeeze(label: &str, device: usize, bytes: u64, at_step: usize) -> Self {
+        MemScenario {
+            label: label.into(),
+            events: vec![MemEvent {
+                at_step,
+                device,
+                delta_bytes: -(bytes as i64),
+            }],
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_has_no_events() {
+        assert!(MemScenario::none().is_none());
+        assert_eq!(MemScenario::none().label, "none");
+    }
+
+    #[test]
+    fn dip_squeezes_then_releases() {
+        let s = MemScenario::dip("d", 1, 100, 3, 7);
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(s.events[0].delta_bytes, -100);
+        assert_eq!(s.events[1].delta_bytes, 100);
+        assert!(s.events[0].at_step < s.events[1].at_step);
+        assert!(!s.is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn dip_rejects_inverted_steps() {
+        MemScenario::dip("bad", 0, 1, 5, 5);
+    }
+
+    #[test]
+    fn squeeze_never_releases() {
+        let s = MemScenario::squeeze("s", 0, 64, 2);
+        assert_eq!(s.events.len(), 1);
+        assert!(s.events[0].delta_bytes < 0);
+    }
+}

@@ -43,6 +43,16 @@ impl Outcome {
     }
 }
 
+/// The interleaved-executor configuration of a method that runs LIME's
+/// online-adaptation machinery. The scenario matrix uses this to drive the
+/// `#Seg`-override and memory-fluctuation axes, which only make sense for
+/// methods that plan offline and adapt online.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdaptiveExec {
+    pub kv_transfer: bool,
+    pub planner: PlannerMode,
+}
+
 /// A comparison method. `Sync` so the experiment harness can fan a method
 /// set out across the work-stealing pool's workers.
 pub trait Method: Sync {
@@ -51,6 +61,15 @@ pub trait Method: Sync {
     /// Stable machine-readable identifier (the `by_name` key) — used by
     /// sweep JSON artifacts so notebooks never parse display names.
     fn key(&self) -> &'static str;
+
+    /// `Some` when this method runs the interleaved executor with LIME's
+    /// offline planner + online adaptation — the methods the scenario
+    /// matrix expands along its `#Seg`-override and memory-fluctuation
+    /// axes. Baselines return `None` and are measured only at the matrix's
+    /// baseline (auto-seg, no-pressure) point.
+    fn adaptive_exec(&self) -> Option<AdaptiveExec> {
+        None
+    }
 
     /// Run with an explicit [`TraceMode`]. Experiment grids pass
     /// `TraceMode::Off` (they only read `SimResult` numbers); the CLI's
@@ -125,12 +144,19 @@ pub fn by_name(name: &str) -> Option<Box<dyn Method>> {
     }
 }
 
-fn plan_opts(bw: &BandwidthTrace, pattern: Pattern, cluster: &Cluster, tokens: usize) -> PlanOptions {
+/// The planning operating point every LIME-family run uses (§IV-C: the
+/// actual sequence length is unknown at planning time, so LIME plans for a
+/// fixed empirical n; runs longer than this rely on the online memory
+/// adaptation — which is exactly what Table V ablates). Public so the
+/// scenario matrix pre-plans with bit-identical options to
+/// [`Lime::run_mode`].
+pub fn plan_opts(
+    bw: &BandwidthTrace,
+    pattern: Pattern,
+    cluster: &Cluster,
+    tokens: usize,
+) -> PlanOptions {
     PlanOptions {
-        // §IV-C: the actual sequence length is unknown at planning time, so
-        // LIME plans for a fixed empirical n. Runs longer than this rely on
-        // the online memory adaptation — which is exactly what Table V
-        // ablates.
         empirical_tokens: 128,
         micro_batch: pattern.micro_batches(cluster),
         bandwidth: bw.mean_over(tokens.max(1)),
@@ -164,6 +190,13 @@ impl Method for Lime {
             (true, PlannerMode::Off) => "LIME w/o online planning",
             (false, PlannerMode::Off) => "LIME w/o online planning or KV transfer",
         }
+    }
+
+    fn adaptive_exec(&self) -> Option<AdaptiveExec> {
+        Some(AdaptiveExec {
+            kv_transfer: self.kv_transfer,
+            planner: self.planner,
+        })
     }
 
     // Exhaustive over both ablation axes so every configuration gets a

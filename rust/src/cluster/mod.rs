@@ -34,6 +34,30 @@ impl Cluster {
         self.devices.iter().map(|d| d.usable_mem()).sum()
     }
 
+    /// A sub-cluster keeping `indices` (in the given order) — the
+    /// cluster-size sweep axis carves 2/3/4-device subsets of the
+    /// heterogeneous environments with this.
+    ///
+    /// Panics on an empty or out-of-range selection (axis definitions are
+    /// static data; a bad index is a bug, not an input error).
+    pub fn subset(&self, indices: &[usize]) -> Cluster {
+        assert!(!indices.is_empty(), "subset needs at least one device");
+        Cluster::new(
+            indices
+                .iter()
+                .map(|&i| {
+                    assert!(i < self.devices.len(), "device index {i} out of range");
+                    self.devices[i].clone()
+                })
+                .collect(),
+        )
+    }
+
+    /// Device names, for artifact metadata.
+    pub fn device_names(&self) -> Vec<String> {
+        self.devices.iter().map(|d| d.name.clone()).collect()
+    }
+
     // ------------------------- paper environments (Tab. IV) -------------
 
     /// E1: 1x Xavier NX 16 GB + 1x AGX Orin 32 GB (Llama2-13B).
@@ -135,5 +159,24 @@ mod tests {
     #[should_panic]
     fn empty_cluster_panics() {
         Cluster::new(vec![]);
+    }
+
+    #[test]
+    fn subset_keeps_selected_devices_in_order() {
+        let e3 = Cluster::env_e3();
+        let sub = e3.subset(&[0, 2]);
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.devices[0].name, e3.devices[0].name);
+        assert_eq!(sub.devices[1].name, e3.devices[2].name);
+        assert_eq!(
+            e3.subset(&[0, 1, 2, 3]).device_names(),
+            e3.device_names()
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn subset_rejects_out_of_range() {
+        Cluster::env_e1().subset(&[0, 5]);
     }
 }

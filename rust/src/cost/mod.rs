@@ -287,7 +287,25 @@ pub fn overflow_tokens(
     tokens_held: usize,
     kv_transferred: i64,
 ) -> usize {
-    let usable = cluster.devices[i].usable_mem();
+    overflow_tokens_with_cap(
+        alloc,
+        i,
+        tokens_held,
+        kv_transferred,
+        cluster.devices[i].usable_mem(),
+    )
+}
+
+/// [`overflow_tokens`] against an explicit usable-memory cap — the
+/// scripted memory-fluctuation path, where a device's effective capacity
+/// diverges from its `DeviceSpec` mid-simulation.
+pub fn overflow_tokens_with_cap(
+    alloc: &Allocation,
+    i: usize,
+    tokens_held: usize,
+    kv_transferred: i64,
+    usable: u64,
+) -> usize {
     let need = mem_demand(alloc, i, tokens_held, kv_transferred);
     if need <= usable {
         return 0;
@@ -436,6 +454,25 @@ mod tests {
             n *= 2;
             assert!(n < 1 << 30, "kv growth never broke feasibility");
         }
+    }
+
+    #[test]
+    fn overflow_with_cap_matches_cluster_path_and_tracks_pressure() {
+        let (spec, cluster) = toy();
+        let alloc = alloc_with(&spec, &[(20, 8), (20, 14)], 4);
+        let usable = cluster.devices[0].usable_mem();
+        // Same cap -> same answer as the cluster-based entry point.
+        for held in [0usize, 500, 5000, 50_000] {
+            assert_eq!(
+                overflow_tokens(&alloc, &cluster, 0, held, 0),
+                overflow_tokens_with_cap(&alloc, 0, held, 0, usable)
+            );
+        }
+        // A squeezed cap overflows at a token count the full cap absorbs.
+        let held = 100usize;
+        assert_eq!(overflow_tokens(&alloc, &cluster, 0, held, 0), 0);
+        let squeezed = mem_demand(&alloc, 0, held, 0).saturating_sub(1);
+        assert!(overflow_tokens_with_cap(&alloc, 0, held, 0, squeezed) > 0);
     }
 
     #[test]

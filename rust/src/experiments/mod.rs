@@ -8,7 +8,20 @@
 //! Results are written by index — printed tables and returned rows are
 //! bit-identical to the sequential loops
 //! ([`grid_cells_sequential`] is the tested reference).
+//!
+//! The legacy (method × bandwidth × pattern) grid is the baseline slice of
+//! the composable [`scenario::ScenarioMatrix`], which adds cluster-size,
+//! `#Seg`-override and memory-fluctuation axes; the `--id sweep`
+//! experiment evaluates one matrix per cluster point and writes one
+//! `lime-sweep-v2` JSON each.
 
+pub mod scenario;
+
+pub use scenario::{
+    validate_sweep_v2, ScenarioCell, ScenarioMatrix, SegChoice, SweepSummary,
+};
+
+use crate::adapt::MemScenario;
 use crate::baselines::{all, by_name, Method};
 use crate::cluster::{Cluster, DeviceSpec};
 use crate::model::ModelSpec;
@@ -16,8 +29,7 @@ use crate::net::BandwidthTrace;
 use crate::pipeline::{run_interleaved, run_traditional, ExecOptions, TradOptions};
 use crate::plan::{plan, plan_with_segs, PlanOptions};
 use crate::sim::{SsdModel, TraceMode};
-use crate::util::bytes::mbps;
-use crate::util::json::{obj, Json};
+use crate::util::bytes::{gib, mbps};
 use crate::util::pool;
 use crate::workload::Pattern;
 
@@ -86,30 +98,33 @@ fn grid_impl(
     tokens: usize,
     parallel: bool,
 ) -> Vec<Cell> {
-    let mut jobs: Vec<(usize, f64, Pattern)> = Vec::new();
-    for mi in 0..methods.len() {
-        for &bw in bandwidths {
-            for pattern in [Pattern::Sporadic, Pattern::Bursty] {
-                jobs.push((mi, bw, pattern));
-            }
-        }
-    }
-    let eval = |&(mi, bw, pattern): &(usize, f64, Pattern)| {
-        let trace = BandwidthTrace::fixed_mbps(bw);
-        let out = methods[mi].run_mode(spec, cluster, &trace, pattern, tokens, TraceMode::Off);
-        Cell {
-            method: methods[mi].name(),
-            method_key: methods[mi].key(),
-            bandwidth_mbps: bw,
-            pattern,
-            ms_per_token: out.ms_per_token(),
-        }
-    };
-    if parallel {
-        pool::map_indexed(&jobs, eval)
+    // The legacy grid is the scenario matrix at its baseline point
+    // (auto #Seg, no memory pressure); the cell order — methods outermost,
+    // then bandwidths, then patterns — is the matrix's point order.
+    let matrix = ScenarioMatrix::new(
+        "grid",
+        spec.clone(),
+        cluster.clone(),
+        methods,
+        bandwidths.to_vec(),
+        vec![Pattern::Sporadic, Pattern::Bursty],
+        tokens,
+    );
+    let cells = if parallel {
+        matrix.eval()
     } else {
-        jobs.iter().map(eval).collect()
-    }
+        matrix.eval_sequential()
+    };
+    cells
+        .into_iter()
+        .map(|c| Cell {
+            method: c.method,
+            method_key: c.method_key,
+            bandwidth_mbps: c.bandwidth_mbps,
+            pattern: c.pattern,
+            ms_per_token: c.ms_per_token,
+        })
+        .collect()
 }
 
 fn print_grid(title: &str, cells: &[Cell], bandwidths: &[f64]) {
@@ -432,89 +447,125 @@ pub fn tab5(tokens: usize) -> Vec<(String, Option<f64>, Option<f64>)> {
 
 // ------------------------------------------------------- full-grid sweep
 
-/// The `--id sweep` experiment: cross the extremely-low-memory settings
-/// (Figs 15–17) with a bandwidth walk, evaluating every method × pattern
-/// cell on the work-stealing pool, and emit **one machine-readable JSON
-/// per grid** (schema `lime-sweep-v1`) into `out_dir` for notebook
-/// consumption. Returns the paths written; any I/O failure is an error
-/// (the CLI exits non-zero), never a silently missing artifact.
-pub fn sweep(tokens: usize, out_dir: &str) -> anyhow::Result<Vec<std::path::PathBuf>> {
-    use anyhow::Context;
-    let spec = ModelSpec::llama33_70b();
-    let bandwidths = [50.0, 100.0, 150.0, 200.0, 250.0];
-    let settings: [(&str, Cluster); 3] = [
+/// The memory-fluctuation axis the lowmem sweep grids run: a transient
+/// dip and a persistent squeeze on device 0 (the Orin-64 — the planner's
+/// usual `d_target`, so pressure there forces real re-planning). Event
+/// steps scale with the simulated horizon; events past the horizon simply
+/// never fire (tiny CI runs stay valid).
+fn lowmem_mem_axis(tokens: usize) -> Vec<MemScenario> {
+    let down = tokens / 3;
+    vec![
+        MemScenario::none(),
+        MemScenario::dip("dip-d0", 0, gib(4.0), down, (2 * tokens / 3).max(down + 1)),
+        MemScenario::squeeze("squeeze-d0", 0, gib(6.0), tokens / 4),
+    ]
+}
+
+/// The scenario matrices behind `--id sweep`: the three extremely-low-
+/// memory settings (Figs 15–17, Llama3.3-70B) across the full bandwidth
+/// axis, plus cluster-size points — 2/3/4-device subsets of the
+/// heterogeneous E3 Jetson cluster (Qwen3-32B, the E2-scale model) — all
+/// with `#Seg`-override and memory-fluctuation axes on the LIME family.
+fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMatrix<'_>> {
+    let mut out = Vec::new();
+    let spec70 = ModelSpec::llama33_70b();
+    let lowmem: [(&str, Cluster); 3] = [
         ("lowmem1", Cluster::lowmem_setting1()),
         ("lowmem2", Cluster::lowmem_setting2()),
         ("lowmem3", Cluster::lowmem_setting3()),
     ];
+    for (label, cluster) in lowmem {
+        out.push(
+            ScenarioMatrix::new(
+                label,
+                spec70.clone(),
+                cluster,
+                methods,
+                vec![50.0, 100.0, 150.0, 200.0, 250.0],
+                vec![Pattern::Sporadic, Pattern::Bursty],
+                tokens,
+            )
+            .with_segs(vec![SegChoice::Auto, SegChoice::Fixed(4), SegChoice::Fixed(8)])
+            .with_mem_scenarios(lowmem_mem_axis(tokens)),
+        );
+    }
+
+    let e3 = Cluster::env_e3();
+    let spec32 = ModelSpec::qwen3_32b();
+    let edges: [(&str, Vec<usize>); 3] = [
+        ("edge2", vec![0, 2]),       // Orin64 + Orin32
+        ("edge3", vec![0, 2, 3]),    // + XavierNX16
+        ("edge4", vec![0, 1, 2, 3]), // the full E3 cluster
+    ];
+    for (label, idxs) in edges {
+        let cluster = e3.subset(&idxs);
+        let dip = MemScenario::dip(
+            "dip-d0",
+            0,
+            gib(4.0),
+            tokens / 3,
+            (2 * tokens / 3).max(tokens / 3 + 1),
+        );
+        out.push(
+            ScenarioMatrix::new(
+                label,
+                spec32.clone(),
+                cluster,
+                methods,
+                vec![100.0, 200.0],
+                vec![Pattern::Sporadic, Pattern::Bursty],
+                tokens,
+            )
+            .with_segs(vec![SegChoice::Auto, SegChoice::Fixed(3), SegChoice::Fixed(6)])
+            .with_mem_scenarios(vec![MemScenario::none(), dip]),
+        );
+    }
+    out
+}
+
+/// The `--id sweep` experiment: evaluate every scenario matrix —
+/// extremely-low-memory settings plus cluster-size points, each crossing
+/// bandwidth × pattern × method with `#Seg`-override and
+/// memory-fluctuation axes on the LIME family — on the work-stealing
+/// pool, and emit **one machine-readable JSON per grid** (schema
+/// `lime-sweep-v2`, validated by `lime sweep-check`) into `out_dir`.
+/// Returns the paths written; any I/O failure is an error (the CLI exits
+/// non-zero), never a silently missing artifact.
+pub fn sweep(tokens: usize, out_dir: &str) -> anyhow::Result<Vec<std::path::PathBuf>> {
+    use anyhow::Context;
     std::fs::create_dir_all(out_dir)
         .with_context(|| format!("sweep: cannot create output directory {out_dir}"))?;
     let methods = all();
+    let matrices = sweep_matrices(&methods, tokens);
     let mut written = Vec::new();
     println!(
-        "\n== sweep: {} × {{{}}} Mbps × {{sporadic,bursty}} × {} methods ==",
-        spec.name,
-        bandwidths.map(|b| format!("{b:.0}")).join(","),
+        "\n== sweep: {} grids × (bandwidth × pattern × {} methods, + #Seg/memory axes on LIME) ==",
+        matrices.len(),
         methods.len()
     );
-    for (label, cluster) in &settings {
-        let cells = grid_cells(&spec, cluster, &methods, &bandwidths, tokens);
+    for matrix in &matrices {
+        let cells = matrix.eval();
         let completed = cells.iter().filter(|c| c.ms_per_token.is_some()).count();
+        let adapted: usize = cells
+            .iter()
+            .filter_map(|c| c.online_plans_fired)
+            .sum();
         println!(
-            "  grid {label}: {} cells ({completed} completed, {} OOM)",
+            "  grid {} ({}, {} devices): {} cells ({completed} completed, {} OOM, {adapted} online plans fired)",
+            matrix.grid,
+            matrix.spec.name,
+            matrix.cluster.len(),
             cells.len(),
             cells.len() - completed
         );
-        let json = sweep_grid_json(label, &spec, &bandwidths, tokens, &cells);
-        let path = std::path::Path::new(out_dir).join(format!("SWEEP_{label}.json"));
+        let json = matrix.to_json(&cells);
+        let path = std::path::Path::new(out_dir).join(format!("SWEEP_{}.json", matrix.grid));
         std::fs::write(&path, format!("{json}\n"))
             .with_context(|| format!("sweep: could not write {}", path.display()))?;
         println!("  wrote {}", path.display());
         written.push(path);
     }
     Ok(written)
-}
-
-/// One grid as `lime-sweep-v1` JSON.
-fn sweep_grid_json(
-    grid: &str,
-    spec: &ModelSpec,
-    bandwidths: &[f64],
-    tokens: usize,
-    cells: &[Cell],
-) -> Json {
-    let cell_rows: Vec<Json> = cells
-        .iter()
-        .map(|c| {
-            let pattern = match c.pattern {
-                Pattern::Sporadic => "sporadic",
-                Pattern::Bursty => "bursty",
-            };
-            obj(&[
-                ("method", c.method_key.into()),
-                ("method_name", c.method.into()),
-                ("bandwidth_mbps", c.bandwidth_mbps.into()),
-                ("pattern", pattern.into()),
-                (
-                    "ms_per_token",
-                    c.ms_per_token.map_or(Json::Null, Json::Num),
-                ),
-                ("oom", c.ms_per_token.is_none().into()),
-                ("oot", c.is_oot().into()),
-            ])
-        })
-        .collect();
-    obj(&[
-        ("schema", "lime-sweep-v1".into()),
-        ("grid", grid.into()),
-        ("model", spec.name.as_str().into()),
-        ("tokens", tokens.into()),
-        (
-            "bandwidths_mbps",
-            Json::Arr(bandwidths.iter().map(|&b| b.into()).collect()),
-        ),
-        ("cells", Json::Arr(cell_rows)),
-    ])
 }
 
 /// Dispatch used by `lime experiments --id <id>`. `sweep_out` is the
@@ -601,30 +652,53 @@ mod tests {
     }
 
     #[test]
-    fn sweep_emits_one_json_per_grid() {
+    fn sweep_emits_one_valid_v2_json_per_grid() {
+        use crate::util::json::Json;
         let dir = std::env::temp_dir().join(format!("lime_sweep_{}", std::process::id()));
         let out = dir.to_str().unwrap().to_string();
         let written = sweep(3, &out).expect("sweep writes its grids");
-        assert_eq!(written.len(), 3, "one JSON per lowmem grid");
+        assert_eq!(written.len(), 6, "three lowmem grids + three cluster-size grids");
         for path in &written {
             let src = std::fs::read_to_string(path).unwrap();
             let json = Json::parse(src.trim()).unwrap();
-            assert_eq!(json.get("schema").unwrap().as_str(), Some("lime-sweep-v1"));
-            let cells = json.get("cells").unwrap().as_arr().unwrap();
-            // 7 methods × 5 bandwidths × 2 patterns.
-            assert_eq!(cells.len(), 70);
-            for cell in cells {
+            let summary = validate_sweep_v2(&json)
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            let lowmem = summary.grid.starts_with("lowmem");
+            // lowmem: 1 LIME × 5bw × 2pat × 3seg × 3mem + 6 baselines × 10.
+            // edge:   1 LIME × 2bw × 2pat × 3seg × 2mem + 6 baselines × 4.
+            assert_eq!(summary.cells, if lowmem { 150 } else { 48 }, "{}", summary.grid);
+            assert_eq!(summary.completed + summary.oom, summary.cells);
+            for cell in json.get("cells").unwrap().as_arr().unwrap() {
                 let key = cell.get("method").unwrap().as_str().unwrap();
-                assert!(crate::baselines::by_name(key).is_some(), "{key}");
                 let oom = cell.get("oom").unwrap().as_bool().unwrap();
-                assert_eq!(cell.get("ms_per_token").unwrap() == &Json::Null, oom);
-                // LIME always completes in the lowmem settings.
-                if key == "lime" {
-                    assert!(!oom, "{}", path.display());
+                let auto_seg = cell.get("seg").unwrap().as_str() == Some("auto");
+                // LIME with its own scheduler always completes — in the
+                // lowmem settings *and* on every cluster-size subset, under
+                // every memory scenario. (A *forced* #Seg may be
+                // legitimately infeasible: slot capacity scales with seg.)
+                if key == "lime" && auto_seg {
+                    assert!(!oom, "{}: {cell}", path.display());
                 }
             }
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_covers_the_new_axes() {
+        // The acceptance shape: cluster-size points at 2/3/4 devices, and
+        // #Seg-override / memory-fluctuation coordinates present in the
+        // evaluated cells.
+        let methods = all();
+        let matrices = sweep_matrices(&methods, 3);
+        let sizes: std::collections::BTreeSet<usize> =
+            matrices.iter().map(|m| m.cluster.len()).collect();
+        assert!(sizes.contains(&2) && sizes.contains(&3) && sizes.contains(&4));
+        let lowmem1 = &matrices[0];
+        assert!(lowmem1.segs.len() == 3 && lowmem1.mem_scenarios.len() == 3);
+        let cells = lowmem1.eval();
+        assert!(cells.iter().any(|c| matches!(c.seg, SegChoice::Fixed(_))));
+        assert!(cells.iter().any(|c| c.mem == "squeeze-d0"));
     }
 
     #[test]

@@ -1,0 +1,840 @@
+//! Scenario-matrix sweeps: the composable generalization of the fixed
+//! (method × bandwidth × pattern) experiment grid.
+//!
+//! A [`ScenarioMatrix`] crosses the classic axes with three new ones:
+//!
+//! * **cluster-size** — one matrix per [`Cluster`] point (2/3/4-device
+//!   subsets of the heterogeneous environments, carved with
+//!   [`Cluster::subset`]); the sweep emits one JSON per matrix.
+//! * **`#Seg`-override** — [`SegChoice::Fixed`] candidates planned through
+//!   [`plan_with_segs`], which shares one `SegSweepCtx` across every
+//!   explicit candidate of a planning point; [`SegChoice::Auto`] is the
+//!   scheduler's own Alg. 1 pick.
+//! * **memory-fluctuation** — scripted [`MemScenario`] pressure events
+//!   driven through `adapt::OnlinePlanner::apply_pressure` and the KV
+//!   transfer protocol mid-simulation
+//!   ([`crate::pipeline::run_interleaved_scripted`]), so the §IV-D online
+//!   adaptation machinery shows up in sweep outputs.
+//!
+//! The override axes only have meaning for methods that plan offline and
+//! adapt online (the LIME family — [`Method::adaptive_exec`] returns
+//! `Some`); baseline methods are measured once per (bandwidth, pattern) at
+//! the matrix's baseline point (auto seg, no pressure), which every matrix
+//! is required to contain.
+//!
+//! Cells are independent simulations and evaluate on the persistent
+//! work-stealing pool with results written by index —
+//! [`ScenarioMatrix::eval`] is bit-identical to
+//! [`ScenarioMatrix::eval_sequential`] at any worker count (pinned in
+//! `rust/tests/pool.rs`). Artifacts serialize as
+//! schema `lime-sweep-v2`, a superset of `lime-sweep-v1` (every v1 key is
+//! still present with the same meaning) plus axis metadata and per-cell
+//! adaptation counters; [`validate_sweep_v2`] is the machine check behind
+//! `lime sweep-check` and the CI artifact gate.
+
+use crate::adapt::MemScenario;
+use crate::baselines::{by_name, plan_opts, Method};
+use crate::cluster::Cluster;
+use crate::model::ModelSpec;
+use crate::net::BandwidthTrace;
+use crate::pipeline::{run_interleaved_scripted, ExecOptions};
+use crate::plan::{plan, plan_with_segs, Allocation};
+use crate::sim::TraceMode;
+use crate::util::json::{obj, Json};
+use crate::util::pool;
+use crate::workload::Pattern;
+
+/// One value of the `#Seg`-override axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegChoice {
+    /// Let the offline scheduler pick `#Seg` (Alg. 1 lines 31–38).
+    Auto,
+    /// Force this segment count (≥ 2), planned via [`plan_with_segs`].
+    Fixed(usize),
+}
+
+impl SegChoice {
+    fn json(&self) -> Json {
+        match self {
+            SegChoice::Auto => "auto".into(),
+            SegChoice::Fixed(k) => (*k).into(),
+        }
+    }
+}
+
+/// One evaluated matrix cell. Superset of the legacy grid
+/// [`crate::experiments::Cell`]: the axis coordinates plus the §IV-D
+/// adaptation counters that make online behaviour visible in artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioCell {
+    pub method: &'static str,
+    /// Stable machine key ([`Method::key`]).
+    pub method_key: &'static str,
+    pub bandwidth_mbps: f64,
+    pub pattern: Pattern,
+    pub seg: SegChoice,
+    /// Label of the [`MemScenario`] this cell ran under.
+    pub mem: String,
+    /// `#Seg` of the allocation actually executed (None for baseline
+    /// methods and OOM cells).
+    pub planned_seg: Option<usize>,
+    /// `None` = OOM (planning or placement failed).
+    pub ms_per_token: Option<f64>,
+    pub online_plans_fired: Option<usize>,
+    pub kv_tokens_transferred: Option<u64>,
+    pub emergency_steps: Option<usize>,
+}
+
+impl ScenarioCell {
+    pub fn is_oot(&self) -> bool {
+        matches!(self.ms_per_token, Some(ms) if ms > self.pattern.oot_limit_ms())
+    }
+}
+
+pub(crate) fn pattern_str(p: Pattern) -> &'static str {
+    match p {
+        Pattern::Sporadic => "sporadic",
+        Pattern::Bursty => "bursty",
+    }
+}
+
+/// The composable scenario matrix. Axis invariants (checked on every
+/// evaluation/serialization):
+///
+/// * every axis is non-empty;
+/// * `segs[0] == SegChoice::Auto` and `mem_scenarios[0]` has no events —
+///   the baseline point non-adaptive methods are measured at;
+/// * fixed seg values are ≥ 2 and unique; scenario labels are unique;
+/// * pressure events address devices inside the cluster.
+pub struct ScenarioMatrix<'a> {
+    /// Grid label — names the JSON artifact (`SWEEP_<grid>.json`).
+    pub grid: String,
+    pub spec: ModelSpec,
+    pub cluster: Cluster,
+    pub methods: &'a [Box<dyn Method>],
+    pub bandwidths_mbps: Vec<f64>,
+    pub patterns: Vec<Pattern>,
+    pub segs: Vec<SegChoice>,
+    pub mem_scenarios: Vec<MemScenario>,
+    pub tokens: usize,
+}
+
+/// Pre-planned allocations of one (bandwidth, pattern) planning point.
+struct PlannedPoint {
+    auto: Option<Allocation>,
+    /// One entry per `SegChoice::Fixed` in axis order.
+    fixed: Vec<Option<Allocation>>,
+}
+
+/// Axis coordinates of one cell (indices into the matrix axes).
+#[derive(Debug, Clone, Copy)]
+struct PointRef {
+    mi: usize,
+    bi: usize,
+    pi: usize,
+    si: usize,
+    mj: usize,
+}
+
+impl<'a> ScenarioMatrix<'a> {
+    /// A matrix at the baseline point of the new axes — exactly the legacy
+    /// (method × bandwidth × pattern) grid.
+    pub fn new(
+        grid: &str,
+        spec: ModelSpec,
+        cluster: Cluster,
+        methods: &'a [Box<dyn Method>],
+        bandwidths_mbps: Vec<f64>,
+        patterns: Vec<Pattern>,
+        tokens: usize,
+    ) -> Self {
+        ScenarioMatrix {
+            grid: grid.to_string(),
+            spec,
+            cluster,
+            methods,
+            bandwidths_mbps,
+            patterns,
+            segs: vec![SegChoice::Auto],
+            mem_scenarios: vec![MemScenario::none()],
+            tokens,
+        }
+    }
+
+    /// Replace the `#Seg`-override axis (must start with `Auto`).
+    pub fn with_segs(mut self, segs: Vec<SegChoice>) -> Self {
+        self.segs = segs;
+        self.assert_valid();
+        self
+    }
+
+    /// Replace the memory-fluctuation axis (must start with a no-event
+    /// scenario).
+    pub fn with_mem_scenarios(mut self, mems: Vec<MemScenario>) -> Self {
+        self.mem_scenarios = mems;
+        self.assert_valid();
+        self
+    }
+
+    fn assert_valid(&self) {
+        assert!(!self.bandwidths_mbps.is_empty(), "matrix needs bandwidths");
+        assert!(!self.patterns.is_empty(), "matrix needs patterns");
+        assert!(!self.methods.is_empty(), "matrix needs methods");
+        assert!(
+            matches!(self.segs.first(), Some(SegChoice::Auto)),
+            "segs[0] must be SegChoice::Auto (the baseline point)"
+        );
+        let mut seen = std::collections::BTreeSet::new();
+        for s in &self.segs {
+            if let SegChoice::Fixed(k) = s {
+                assert!(*k >= 2, "fixed #Seg must be >= 2, got {k}");
+                assert!(seen.insert(*k), "duplicate fixed #Seg {k}");
+            }
+        }
+        assert!(
+            self.mem_scenarios.first().is_some_and(MemScenario::is_none),
+            "mem_scenarios[0] must have no events (the baseline point)"
+        );
+        let mut labels = std::collections::BTreeSet::new();
+        for m in &self.mem_scenarios {
+            assert!(labels.insert(m.label.as_str()), "duplicate scenario '{}'", m.label);
+            for ev in &m.events {
+                assert!(
+                    ev.device < self.cluster.len(),
+                    "scenario '{}' addresses device {} of a {}-device cluster",
+                    m.label,
+                    ev.device,
+                    self.cluster.len()
+                );
+            }
+        }
+    }
+
+    /// Cell coordinates in deterministic (index) order: methods outermost,
+    /// then bandwidths, patterns, and — for adaptive methods only — the
+    /// seg and memory axes. With singleton override axes this is exactly
+    /// the legacy grid's job order.
+    fn points(&self) -> Vec<PointRef> {
+        let mut pts = Vec::new();
+        for mi in 0..self.methods.len() {
+            let adaptive = self.methods[mi].adaptive_exec().is_some();
+            for bi in 0..self.bandwidths_mbps.len() {
+                for pi in 0..self.patterns.len() {
+                    if adaptive {
+                        for si in 0..self.segs.len() {
+                            for mj in 0..self.mem_scenarios.len() {
+                                pts.push(PointRef { mi, bi, pi, si, mj });
+                            }
+                        }
+                    } else {
+                        pts.push(PointRef { mi, bi, pi, si: 0, mj: 0 });
+                    }
+                }
+            }
+        }
+        pts
+    }
+
+    /// Total cells this matrix evaluates.
+    pub fn cell_count(&self) -> usize {
+        let adaptive = self
+            .methods
+            .iter()
+            .filter(|m| m.adaptive_exec().is_some())
+            .count();
+        let base = self.bandwidths_mbps.len() * self.patterns.len();
+        adaptive * base * self.segs.len() * self.mem_scenarios.len()
+            + (self.methods.len() - adaptive) * base
+    }
+
+    /// Evaluate every cell on the work-stealing pool. Results are written
+    /// by index, so the returned order — and every byte of the JSON built
+    /// from it — is identical to [`ScenarioMatrix::eval_sequential`] at
+    /// any worker count.
+    pub fn eval(&self) -> Vec<ScenarioCell> {
+        self.eval_impl(true)
+    }
+
+    /// The sequential bit-determinism reference for [`ScenarioMatrix::eval`].
+    pub fn eval_sequential(&self) -> Vec<ScenarioCell> {
+        self.eval_impl(false)
+    }
+
+    fn eval_impl(&self, parallel: bool) -> Vec<ScenarioCell> {
+        self.assert_valid();
+        // Positions of the Fixed entries within the seg axis, so cells can
+        // index the pre-planned candidate list.
+        let mut fixed_segs: Vec<usize> = Vec::new();
+        let fixed_pos: Vec<Option<usize>> = self
+            .segs
+            .iter()
+            .map(|s| match s {
+                SegChoice::Auto => None,
+                SegChoice::Fixed(k) => {
+                    fixed_segs.push(*k);
+                    Some(fixed_segs.len() - 1)
+                }
+            })
+            .collect();
+
+        // Pre-plan each (bandwidth, pattern) point once for the adaptive
+        // methods: the auto plan plus every fixed candidate against one
+        // shared SegSweepCtx (plan_with_segs). Cells then only simulate.
+        let needs_plans = self.methods.iter().any(|m| m.adaptive_exec().is_some());
+        let plan_points: Vec<(usize, usize)> = if needs_plans {
+            let mut v = Vec::new();
+            for bi in 0..self.bandwidths_mbps.len() {
+                for pi in 0..self.patterns.len() {
+                    v.push((bi, pi));
+                }
+            }
+            v
+        } else {
+            Vec::new()
+        };
+        let plan_one = |&(bi, pi): &(usize, usize)| -> PlannedPoint {
+            let trace = BandwidthTrace::fixed_mbps(self.bandwidths_mbps[bi]);
+            let popts = plan_opts(&trace, self.patterns[pi], &self.cluster, self.tokens);
+            let auto = plan(&self.spec, &self.cluster, &popts)
+                .ok()
+                .map(|r| r.allocation);
+            let fixed = if fixed_segs.is_empty() {
+                Vec::new()
+            } else {
+                plan_with_segs(&self.spec, &self.cluster, &fixed_segs, &popts)
+            };
+            PlannedPoint { auto, fixed }
+        };
+        let planned: Vec<PlannedPoint> = if parallel {
+            pool::map_indexed(&plan_points, plan_one)
+        } else {
+            plan_points.iter().map(plan_one).collect()
+        };
+
+        let pts = self.points();
+        let eval_cell = |p: &PointRef| -> ScenarioCell {
+            let method = &self.methods[p.mi];
+            let bw = self.bandwidths_mbps[p.bi];
+            let pattern = self.patterns[p.pi];
+            let trace = BandwidthTrace::fixed_mbps(bw);
+            let mut cell = ScenarioCell {
+                method: method.name(),
+                method_key: method.key(),
+                bandwidth_mbps: bw,
+                pattern,
+                seg: self.segs[p.si],
+                mem: self.mem_scenarios[p.mj].label.clone(),
+                planned_seg: None,
+                ms_per_token: None,
+                online_plans_fired: None,
+                kv_tokens_transferred: None,
+                emergency_steps: None,
+            };
+            match method.adaptive_exec() {
+                None => {
+                    // Baseline method at the matrix's baseline point.
+                    if let crate::baselines::Outcome::Ok(r) = method.run_mode(
+                        &self.spec,
+                        &self.cluster,
+                        &trace,
+                        pattern,
+                        self.tokens,
+                        TraceMode::Off,
+                    ) {
+                        cell.ms_per_token = Some(r.ms_per_token());
+                        cell.online_plans_fired = Some(r.online_plans_fired);
+                        cell.kv_tokens_transferred = Some(r.kv_tokens_transferred);
+                        cell.emergency_steps = Some(r.emergency_steps);
+                    }
+                }
+                Some(cfg) => {
+                    let point = &planned[p.bi * self.patterns.len() + p.pi];
+                    let alloc = match fixed_pos[p.si] {
+                        None => point.auto.as_ref(),
+                        Some(fi) => point.fixed[fi].as_ref(),
+                    };
+                    if let Some(alloc) = alloc {
+                        let exec = ExecOptions {
+                            planner: cfg.planner,
+                            kv_transfer: cfg.kv_transfer,
+                            trace_mode: TraceMode::Off,
+                            ..ExecOptions::default()
+                        };
+                        let r = run_interleaved_scripted(
+                            alloc,
+                            &self.cluster,
+                            &trace,
+                            pattern.micro_batches(&self.cluster),
+                            self.tokens,
+                            &exec,
+                            &self.mem_scenarios[p.mj].events,
+                        );
+                        cell.planned_seg = Some(alloc.seg);
+                        cell.ms_per_token = Some(r.ms_per_token());
+                        cell.online_plans_fired = Some(r.online_plans_fired);
+                        cell.kv_tokens_transferred = Some(r.kv_tokens_transferred);
+                        cell.emergency_steps = Some(r.emergency_steps);
+                    }
+                }
+            }
+            cell
+        };
+        if parallel {
+            pool::map_indexed(&pts, eval_cell)
+        } else {
+            pts.iter().map(eval_cell).collect()
+        }
+    }
+
+    /// Serialize evaluated cells as a `lime-sweep-v2` artifact (superset
+    /// of `lime-sweep-v1`: every v1 key is present with its v1 meaning).
+    pub fn to_json(&self, cells: &[ScenarioCell]) -> Json {
+        self.assert_valid();
+        let cell_rows: Vec<Json> = cells
+            .iter()
+            .map(|c| {
+                obj(&[
+                    ("method", c.method_key.into()),
+                    ("method_name", c.method.into()),
+                    ("bandwidth_mbps", c.bandwidth_mbps.into()),
+                    ("pattern", pattern_str(c.pattern).into()),
+                    ("seg", c.seg.json()),
+                    ("mem", c.mem.as_str().into()),
+                    (
+                        "planned_seg",
+                        c.planned_seg.map_or(Json::Null, Into::into),
+                    ),
+                    (
+                        "ms_per_token",
+                        c.ms_per_token.map_or(Json::Null, Json::Num),
+                    ),
+                    ("oom", c.ms_per_token.is_none().into()),
+                    ("oot", c.is_oot().into()),
+                    (
+                        "online_plans_fired",
+                        c.online_plans_fired.map_or(Json::Null, Into::into),
+                    ),
+                    (
+                        "kv_tokens_transferred",
+                        c.kv_tokens_transferred.map_or(Json::Null, Into::into),
+                    ),
+                    (
+                        "emergency_steps",
+                        c.emergency_steps.map_or(Json::Null, Into::into),
+                    ),
+                ])
+            })
+            .collect();
+        let mem_rows: Vec<Json> = self
+            .mem_scenarios
+            .iter()
+            .map(|m| {
+                let events: Vec<Json> = m
+                    .events
+                    .iter()
+                    .map(|ev| {
+                        obj(&[
+                            ("at_step", ev.at_step.into()),
+                            ("device", ev.device.into()),
+                            ("delta_bytes", Json::Num(ev.delta_bytes as f64)),
+                        ])
+                    })
+                    .collect();
+                obj(&[
+                    ("label", m.label.as_str().into()),
+                    ("events", Json::Arr(events)),
+                ])
+            })
+            .collect();
+        let axes = obj(&[
+            (
+                "cluster",
+                obj(&[
+                    ("label", self.grid.as_str().into()),
+                    (
+                        "devices",
+                        Json::Arr(
+                            self.cluster
+                                .device_names()
+                                .into_iter()
+                                .map(Into::into)
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
+                "bandwidths_mbps",
+                Json::Arr(self.bandwidths_mbps.iter().map(|&b| b.into()).collect()),
+            ),
+            (
+                "patterns",
+                Json::Arr(
+                    self.patterns
+                        .iter()
+                        .map(|&p| pattern_str(p).into())
+                        .collect(),
+                ),
+            ),
+            (
+                "methods",
+                Json::Arr(self.methods.iter().map(|m| m.key().into()).collect()),
+            ),
+            (
+                "segs",
+                Json::Arr(self.segs.iter().map(SegChoice::json).collect()),
+            ),
+            ("mem_scenarios", Json::Arr(mem_rows)),
+        ]);
+        obj(&[
+            ("schema", "lime-sweep-v2".into()),
+            ("grid", self.grid.as_str().into()),
+            ("model", self.spec.name.as_str().into()),
+            ("tokens", self.tokens.into()),
+            (
+                "bandwidths_mbps",
+                Json::Arr(self.bandwidths_mbps.iter().map(|&b| b.into()).collect()),
+            ),
+            ("axes", axes),
+            ("cells", Json::Arr(cell_rows)),
+        ])
+    }
+}
+
+/// Summary returned by a successful [`validate_sweep_v2`] pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSummary {
+    pub grid: String,
+    pub model: String,
+    pub cells: usize,
+    pub completed: usize,
+    pub oom: usize,
+    pub oot: usize,
+}
+
+fn field<'j>(json: &'j Json, key: &str, ctx: &str) -> Result<&'j Json, String> {
+    json.get(key)
+        .ok_or_else(|| format!("{ctx}: missing '{key}'"))
+}
+
+/// Validate one artifact against the `lime-sweep-v2` schema: structural
+/// keys, axis metadata, per-cell coordinate membership, `Method::key`
+/// round-trips, OOM/metric consistency, cell uniqueness, and the exact
+/// per-method cell counts the matrix cross implies. This is the check
+/// behind `lime sweep-check` and the CI artifact gate.
+pub fn validate_sweep_v2(json: &Json) -> Result<SweepSummary, String> {
+    match json.get("schema").and_then(Json::as_str) {
+        Some("lime-sweep-v2") => {}
+        other => return Err(format!("expected schema lime-sweep-v2, got {other:?}")),
+    }
+    let grid = field(json, "grid", "artifact")?
+        .as_str()
+        .ok_or("'grid' must be a string")?
+        .to_string();
+    let model = field(json, "model", "artifact")?
+        .as_str()
+        .ok_or("'model' must be a string")?
+        .to_string();
+    field(json, "tokens", "artifact")?
+        .as_usize()
+        .ok_or("'tokens' must be a non-negative integer")?;
+
+    let axes = field(json, "axes", "artifact")?;
+    let axis_strs = |key: &str| -> Result<Vec<String>, String> {
+        let arr = field(axes, key, "axes")?
+            .as_arr()
+            .ok_or_else(|| format!("axes.{key} must be an array"))?;
+        arr.iter()
+            .map(|v| {
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("axes.{key} entries must be strings"))
+            })
+            .collect()
+    };
+    let bandwidths: Vec<f64> = field(axes, "bandwidths_mbps", "axes")?
+        .as_arr()
+        .ok_or("axes.bandwidths_mbps must be an array")?
+        .iter()
+        .map(|v| v.as_f64().ok_or("axes.bandwidths_mbps entries must be numbers"))
+        .collect::<Result<_, _>>()?;
+    let patterns = axis_strs("patterns")?;
+    for p in &patterns {
+        if p != "sporadic" && p != "bursty" {
+            return Err(format!("axes.patterns: unknown pattern '{p}'"));
+        }
+    }
+    let methods = axis_strs("methods")?;
+    let mut adaptive = std::collections::BTreeMap::new();
+    for key in &methods {
+        let m = by_name(key).ok_or_else(|| format!("axes.methods: unknown method '{key}'"))?;
+        adaptive.insert(key.clone(), m.adaptive_exec().is_some());
+    }
+    let segs = field(axes, "segs", "axes")?
+        .as_arr()
+        .ok_or("axes.segs must be an array")?;
+    let mut seg_labels = Vec::new();
+    for (i, s) in segs.iter().enumerate() {
+        match (s.as_str(), s.as_usize()) {
+            (Some("auto"), _) => seg_labels.push("auto".to_string()),
+            (None, Some(k)) if k >= 2 => seg_labels.push(k.to_string()),
+            _ => return Err(format!("axes.segs[{i}] must be \"auto\" or an integer >= 2")),
+        }
+    }
+    if seg_labels.first().map(String::as_str) != Some("auto") {
+        return Err("axes.segs[0] must be \"auto\" (the baseline point)".into());
+    }
+    let mem_axis = field(axes, "mem_scenarios", "axes")?
+        .as_arr()
+        .ok_or("axes.mem_scenarios must be an array")?;
+    let mut mem_labels = Vec::new();
+    for (i, m) in mem_axis.iter().enumerate() {
+        let label = field(m, "label", "mem_scenario")?
+            .as_str()
+            .ok_or_else(|| format!("axes.mem_scenarios[{i}].label must be a string"))?;
+        let events = field(m, "events", "mem_scenario")?
+            .as_arr()
+            .ok_or_else(|| format!("axes.mem_scenarios[{i}].events must be an array"))?;
+        for (j, ev) in events.iter().enumerate() {
+            for k in ["at_step", "device", "delta_bytes"] {
+                if ev.get(k).and_then(Json::as_f64).is_none() {
+                    return Err(format!(
+                        "axes.mem_scenarios[{i}].events[{j}].{k} must be a number"
+                    ));
+                }
+            }
+        }
+        if i == 0 && !events.is_empty() {
+            return Err("axes.mem_scenarios[0] must have no events (the baseline point)".into());
+        }
+        mem_labels.push(label.to_string());
+    }
+
+    let cells = field(json, "cells", "artifact")?
+        .as_arr()
+        .ok_or("'cells' must be an array")?;
+    let mut seen = std::collections::BTreeSet::new();
+    let mut per_method: std::collections::BTreeMap<String, usize> =
+        std::collections::BTreeMap::new();
+    let mut completed = 0usize;
+    let mut oom = 0usize;
+    let mut oot = 0usize;
+    for (i, cell) in cells.iter().enumerate() {
+        let ctx = format!("cells[{i}]");
+        let key = field(cell, "method", &ctx)?
+            .as_str()
+            .ok_or_else(|| format!("{ctx}.method must be a string"))?;
+        if !adaptive.contains_key(key) {
+            return Err(format!("{ctx}: method '{key}' not in axes.methods"));
+        }
+        field(cell, "method_name", &ctx)?
+            .as_str()
+            .ok_or_else(|| format!("{ctx}.method_name must be a string"))?;
+        let bw = field(cell, "bandwidth_mbps", &ctx)?
+            .as_f64()
+            .ok_or_else(|| format!("{ctx}.bandwidth_mbps must be a number"))?;
+        if !bandwidths.contains(&bw) {
+            return Err(format!("{ctx}: bandwidth {bw} not on the axis"));
+        }
+        let pattern = field(cell, "pattern", &ctx)?
+            .as_str()
+            .ok_or_else(|| format!("{ctx}.pattern must be a string"))?;
+        if !patterns.iter().any(|p| p == pattern) {
+            return Err(format!("{ctx}: pattern '{pattern}' not on the axis"));
+        }
+        let seg = field(cell, "seg", &ctx)?;
+        let seg_label = match (seg.as_str(), seg.as_usize()) {
+            (Some("auto"), _) => "auto".to_string(),
+            (None, Some(k)) => k.to_string(),
+            _ => return Err(format!("{ctx}.seg must be \"auto\" or an integer")),
+        };
+        if !seg_labels.contains(&seg_label) {
+            return Err(format!("{ctx}: seg '{seg_label}' not on the axis"));
+        }
+        let mem = field(cell, "mem", &ctx)?
+            .as_str()
+            .ok_or_else(|| format!("{ctx}.mem must be a string"))?;
+        if !mem_labels.iter().any(|m| m == mem) {
+            return Err(format!("{ctx}: mem scenario '{mem}' not on the axis"));
+        }
+        if !adaptive[key] && (seg_label != "auto" || mem != mem_labels[0]) {
+            return Err(format!(
+                "{ctx}: non-adaptive method '{key}' off the baseline point"
+            ));
+        }
+        let is_oom = field(cell, "oom", &ctx)?
+            .as_bool()
+            .ok_or_else(|| format!("{ctx}.oom must be a bool"))?;
+        let ms = field(cell, "ms_per_token", &ctx)?;
+        if is_oom != (ms == &Json::Null) {
+            return Err(format!("{ctx}: oom flag inconsistent with ms_per_token"));
+        }
+        if !is_oom && ms.as_f64().is_none() {
+            return Err(format!("{ctx}.ms_per_token must be a number or null"));
+        }
+        let is_oot = field(cell, "oot", &ctx)?
+            .as_bool()
+            .ok_or_else(|| format!("{ctx}.oot must be a bool"))?;
+        if is_oom && is_oot {
+            return Err(format!("{ctx}: a cell cannot be both OOM and OOT"));
+        }
+        for counter in ["online_plans_fired", "kv_tokens_transferred", "emergency_steps"] {
+            let v = field(cell, counter, &ctx)?;
+            match (is_oom, v.as_u64()) {
+                (true, _) if v == &Json::Null => {}
+                (false, Some(_)) => {}
+                _ => {
+                    return Err(format!(
+                        "{ctx}.{counter} must be a non-negative integer (null iff oom)"
+                    ))
+                }
+            }
+        }
+        if !seen.insert(format!("{key}|{bw}|{pattern}|{seg_label}|{mem}")) {
+            return Err(format!("{ctx}: duplicate cell coordinates"));
+        }
+        *per_method.entry(key.to_string()).or_default() += 1;
+        if is_oom {
+            oom += 1;
+        } else {
+            completed += 1;
+        }
+        if is_oot {
+            oot += 1;
+        }
+    }
+    let base = bandwidths.len() * patterns.len();
+    for key in &methods {
+        let expect = if adaptive[key] {
+            base * seg_labels.len() * mem_labels.len()
+        } else {
+            base
+        };
+        let got = per_method.get(key).copied().unwrap_or(0);
+        if got != expect {
+            return Err(format!(
+                "method '{key}': expected {expect} cells from the axis cross, found {got}"
+            ));
+        }
+    }
+    Ok(SweepSummary {
+        grid,
+        model,
+        cells: cells.len(),
+        completed,
+        oom,
+        oot,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::all;
+
+    fn tiny_matrix(methods: &[Box<dyn Method>]) -> ScenarioMatrix<'_> {
+        ScenarioMatrix::new(
+            "e1-test",
+            ModelSpec::llama2_13b(),
+            Cluster::env_e1(),
+            methods,
+            vec![100.0, 200.0],
+            vec![Pattern::Sporadic, Pattern::Bursty],
+            3,
+        )
+        .with_segs(vec![SegChoice::Auto, SegChoice::Fixed(4)])
+        .with_mem_scenarios(vec![
+            MemScenario::none(),
+            MemScenario::squeeze("squeeze-d0", 0, crate::util::bytes::gib(2.0), 1),
+        ])
+    }
+
+    #[test]
+    fn cell_count_expands_only_adaptive_methods() {
+        let methods = all();
+        let m = tiny_matrix(&methods);
+        // 1 adaptive (LIME) × 2bw × 2pat × 2seg × 2mem + 6 baselines × 2bw × 2pat.
+        assert_eq!(m.cell_count(), 16 + 24);
+        assert_eq!(m.points().len(), m.cell_count());
+    }
+
+    #[test]
+    fn baseline_methods_stay_on_baseline_point() {
+        let methods = all();
+        let m = tiny_matrix(&methods);
+        for p in m.points() {
+            if m.methods[p.mi].adaptive_exec().is_none() {
+                assert_eq!((p.si, p.mj), (0, 0));
+            }
+        }
+    }
+
+    #[test]
+    fn eval_emits_valid_v2_artifact() {
+        let methods = all();
+        let m = tiny_matrix(&methods);
+        let cells = m.eval();
+        assert_eq!(cells.len(), m.cell_count());
+        let json = m.to_json(&cells);
+        // Round-trip through the writer/parser, then validate.
+        let parsed = Json::parse(&json.to_string()).unwrap();
+        let summary = validate_sweep_v2(&parsed).expect("artifact validates");
+        assert_eq!(summary.grid, "e1-test");
+        assert_eq!(summary.cells, m.cell_count());
+        assert_eq!(summary.completed + summary.oom, summary.cells);
+        // LIME completes on E1 at every override point.
+        for c in cells.iter().filter(|c| c.method_key == "lime") {
+            assert!(c.ms_per_token.is_some(), "{c:?}");
+            assert!(c.planned_seg.is_some());
+            if let SegChoice::Fixed(k) = c.seg {
+                assert_eq!(c.planned_seg, Some(k), "fixed seg must be honored");
+            }
+        }
+    }
+
+    #[test]
+    fn validator_rejects_corruptions() {
+        let methods = all();
+        let m = tiny_matrix(&methods);
+        let cells = m.eval();
+        let good = m.to_json(&cells).to_string();
+        assert!(validate_sweep_v2(&Json::parse(&good).unwrap()).is_ok());
+        for (needle, replacement, why) in [
+            ("lime-sweep-v2", "lime-sweep-v1", "wrong schema"),
+            ("\"sporadic\"", "\"sporadıc\"", "unknown pattern"),
+            ("\"oom\":false", "\"oom\":true", "oom/ms inconsistency"),
+        ] {
+            let bad = good.replacen(needle, replacement, 1);
+            assert_ne!(bad, good, "{why}: replacement must apply");
+            let parsed = Json::parse(&bad).unwrap();
+            assert!(validate_sweep_v2(&parsed).is_err(), "{why} must be rejected");
+        }
+        // Dropping one cell breaks the per-method count check.
+        let parsed = Json::parse(&good).unwrap();
+        if let Json::Obj(mut map) = parsed {
+            if let Some(Json::Arr(cells)) = map.get_mut("cells") {
+                cells.pop();
+            }
+            assert!(validate_sweep_v2(&Json::Obj(map)).is_err());
+        } else {
+            panic!("artifact must be an object");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn segs_must_start_with_auto() {
+        let methods = all();
+        let _ = tiny_matrix(&methods).with_segs(vec![SegChoice::Fixed(4)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn scenarios_must_stay_inside_cluster() {
+        let methods = all();
+        let _ = tiny_matrix(&methods).with_mem_scenarios(vec![
+            MemScenario::none(),
+            MemScenario::squeeze("oob", 9, 1, 0),
+        ]);
+    }
+}

@@ -22,6 +22,7 @@ fn main() {
         "serve" => cmd_serve(&argv),
         "experiments" => cmd_experiments(&argv),
         "bench-check" => cmd_bench_check(&argv),
+        "sweep-check" => cmd_sweep_check(&argv),
         "--help" | "-h" | "help" => println!("{}", usage()),
         other => {
             eprintln!("unknown subcommand '{other}'\n{}", usage());
@@ -40,8 +41,12 @@ fn usage() -> String {
        simulate     simulated inference latency (LIME or a baseline)\n\
        serve        real TinyLM serving via the PJRT runtime\n\
        experiments  regenerate a paper figure/table (fig2a fig2b fig12 fig13\n\
-                    fig14 lowmem fig18 tab5), or `sweep` for the full\n\
-                    lowmem × bandwidth grid with one JSON per grid\n\
+                    fig14 lowmem fig18 tab5), or `sweep` for the scenario\n\
+                    matrix (lowmem + cluster-size grids × bandwidth ×\n\
+                    pattern, #Seg-override and memory-fluctuation axes on\n\
+                    LIME) with one lime-sweep-v2 JSON per grid\n\
+       sweep-check  validate sweep JSON artifacts against the\n\
+                    lime-sweep-v2 schema (non-zero exit on violation)\n\
        bench-check  diff a fresh BENCH_*.json against a committed baseline\n\
                     with a tolerance band (non-zero exit on regression)\n\
      \n\
@@ -157,6 +162,74 @@ fn cmd_experiments(argv: &[String]) {
     lime::experiments::run_by_id(args.get("id"), args.get_usize("tokens"), args.get("out"));
 }
 
+fn cmd_sweep_check(argv: &[String]) {
+    let cli = Cli::new(
+        "lime sweep-check",
+        "validate sweep artifacts against the lime-sweep-v2 schema",
+    )
+    .opt("dir", "sweeps", "directory holding SWEEP_*.json artifacts")
+    .opt("file", "", "validate a single artifact instead of a directory");
+    let args = parse(&cli, argv);
+    let files: Vec<std::path::PathBuf> = if !args.get("file").is_empty() {
+        vec![std::path::PathBuf::from(args.get("file"))]
+    } else {
+        let dir = args.get("dir");
+        let mut v: Vec<std::path::PathBuf> = match std::fs::read_dir(dir) {
+            Ok(entries) => entries
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                // Only the artifacts sweep() writes — a directory may also
+                // hold bench JSONs or other tooling output.
+                .filter(|p| {
+                    p.extension().is_some_and(|ext| ext == "json")
+                        && p.file_name().is_some_and(|n| {
+                            n.to_string_lossy().starts_with("SWEEP_")
+                        })
+                })
+                .collect(),
+            Err(e) => {
+                eprintln!("sweep-check: cannot read directory {dir}: {e}");
+                std::process::exit(2);
+            }
+        };
+        v.sort();
+        v
+    };
+    if files.is_empty() {
+        eprintln!("sweep-check: no SWEEP_*.json artifacts found");
+        std::process::exit(2);
+    }
+    let mut failures = 0usize;
+    for path in &files {
+        let verdict = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read: {e}"))
+            .and_then(|src| {
+                lime::util::json::Json::parse(src.trim()).map_err(|e| format!("invalid JSON: {e}"))
+            })
+            .and_then(|json| lime::experiments::validate_sweep_v2(&json));
+        match verdict {
+            Ok(s) => println!(
+                "sweep-check: OK {} — grid {} ({}), {} cells: {} completed, {} OOM, {} OOT",
+                path.display(),
+                s.grid,
+                s.model,
+                s.cells,
+                s.completed,
+                s.oom,
+                s.oot
+            ),
+            Err(e) => {
+                eprintln!("sweep-check: FAIL {}: {e}", path.display());
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        eprintln!("sweep-check: {failures}/{} artifacts failed validation", files.len());
+        std::process::exit(1);
+    }
+    println!("sweep-check: all {} artifacts valid", files.len());
+}
+
 fn cmd_bench_check(argv: &[String]) {
     let cli = Cli::new(
         "lime bench-check",
@@ -168,7 +241,12 @@ fn cmd_bench_check(argv: &[String]) {
         "ci/BENCH_scheduler_perf.baseline.json",
         "committed lime-bench-v1 baseline",
     )
-    .opt("tolerance", "2.0", "fail when current mean > tolerance x baseline mean");
+    .opt("tolerance", "2.0", "fail when current mean > tolerance x baseline mean")
+    .opt(
+        "emit-candidate",
+        "",
+        "also write the current snapshot as a ready-to-commit candidate baseline",
+    );
     let args = parse(&cli, argv);
     let load = |path: &str| -> lime::util::json::Json {
         let src = std::fs::read_to_string(path).unwrap_or_else(|e| {
@@ -183,6 +261,31 @@ fn cmd_bench_check(argv: &[String]) {
     let current = load(args.get("current"));
     let baseline = load(args.get("baseline"));
     let tolerance = args.get_f64("tolerance");
+    // Candidate-baseline flow: CI emits this artifact on every main-branch
+    // run, so pinning the committed baseline is "download artifact, commit
+    // it" instead of requiring a local reference machine. Written before
+    // the gate below — the run a regression rejects is exactly the run a
+    // maintainer may want to promote after investigating.
+    let candidate_path = args.get("emit-candidate");
+    if !candidate_path.is_empty() {
+        let mut candidate = current.clone();
+        if let lime::util::json::Json::Obj(map) = &mut candidate {
+            map.insert(
+                "note".to_string(),
+                lime::util::json::Json::Str(
+                    "Candidate baseline generated by `lime bench-check --emit-candidate` \
+                     from a CI bench run. To pin: review the means, copy this file to \
+                     rust/ci/BENCH_scheduler_perf.baseline.json, and commit."
+                        .to_string(),
+                ),
+            );
+        }
+        if let Err(e) = std::fs::write(candidate_path, format!("{candidate}\n")) {
+            eprintln!("bench-check: cannot write candidate baseline {candidate_path}: {e}");
+            std::process::exit(2);
+        }
+        println!("bench-check: wrote candidate baseline {candidate_path}");
+    }
     match lime::util::bench::check_regression(&current, &baseline, tolerance) {
         Ok(report) => {
             println!(

@@ -15,7 +15,7 @@
 //! bandwidth-sensitive KV transfer protocol (Alg. 2). Both can be disabled
 //! independently for the Table V ablations.
 
-use crate::adapt::{KvTransferProtocol, OffloadPlan, OnlinePlanner};
+use crate::adapt::{KvTransferProtocol, MemEvent, OffloadPlan, OnlinePlanner};
 use crate::cluster::Cluster;
 use crate::cost;
 use crate::model::ModelSpec;
@@ -97,6 +97,26 @@ pub fn run_interleaved(
     tokens: usize,
     opts: &ExecOptions,
 ) -> SimResult {
+    run_interleaved_scripted(alloc, cluster, bw_trace, micro_batches, tokens, opts, &[])
+}
+
+/// [`run_interleaved`] under a scripted memory-fluctuation scenario: each
+/// [`MemEvent`] shifts one device's *effective* usable memory before the
+/// event's decode step, and simultaneously shifts the online planner's
+/// slack (`OnlinePlanner::apply_pressure`) so offload thresholds move with
+/// the pressure. The emergency KV-spill fallback and the `FullLayer`
+/// ablation judge saturation against the same shifted caps. An empty
+/// script is bit-identical to [`run_interleaved`] (property-tested in
+/// `rust/tests/adapt_online.rs`).
+pub fn run_interleaved_scripted(
+    alloc: &Allocation,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    micro_batches: usize,
+    tokens: usize,
+    opts: &ExecOptions,
+    pressure: &[MemEvent],
+) -> SimResult {
     let spec = alloc.spec.clone();
     let d = cluster.len();
     let seg = alloc.seg.max(1);
@@ -141,6 +161,14 @@ pub fn run_interleaved(
     let mut emergency_steps = 0usize;
     // One-time reload bytes queued for the next step's segment-0 load.
     let mut pending_reload: Vec<u64> = vec![0; d];
+    // Effective usable memory per device; scripted pressure events shift
+    // these away from the `DeviceSpec` capacities mid-run. Cumulative
+    // signed pressure is tracked against the unpressured base (mirroring
+    // `OnlinePlanner::apply_pressure`) so a dip that bottoms a device out
+    // restores exactly.
+    let mem_base: Vec<u64> = (0..d).map(|i| cluster.devices[i].usable_mem()).collect();
+    let mut mem_pressure: Vec<i64> = vec![0; d];
+    let mut mem_caps: Vec<u64> = mem_base.clone();
 
     // ---------------- prefill pass (charged, not measured) ----------------
     let bw0 = bw_trace.at(0);
@@ -172,6 +200,16 @@ pub fn run_interleaved(
     for step in 0..tokens {
         let bw = bw_trace.at(step);
         let ctx = opts.prompt_tokens + step;
+
+        // ---- scripted memory fluctuation (scenario-matrix axis) ----
+        // Applied before the bandwidth monitor so a lowered threshold
+        // already counts as "imminent" for this step's Alg. 2 decisions.
+        for ev in pressure.iter().filter(|ev| ev.at_step == step) {
+            mem_pressure[ev.device] = mem_pressure[ev.device].saturating_add(ev.delta_bytes);
+            mem_caps[ev.device] =
+                crate::adapt::planner::shifted(mem_base[ev.device], mem_pressure[ev.device]);
+            planner.apply_pressure(ev.device, ev.delta_bytes);
+        }
 
         // ---- Alg. 2 lines 8-9: monitor bandwidth, adapt transfers ----
         if opts.kv_transfer {
@@ -326,7 +364,7 @@ pub fn run_interleaved(
                 }
                 PlannerMode::FullLayer => {
                     // Ablation: when memory saturates, offload a whole layer.
-                    if mem_saturated(&live, cluster, i, ctx * micro, n_trans)
+                    if mem_saturated(&live, i, ctx * micro, n_trans, mem_caps[i])
                         && live.devices[i].non_offloaded_layers() > 0
                     {
                         plans_fired += 1;
@@ -345,7 +383,8 @@ pub fn run_interleaved(
         for i in 0..d {
             let n_trans = if opts.kv_transfer { protocol.n_trans(i) } else { 0 };
             let overflow =
-                cost::overflow_tokens(&live, cluster, i, ctx * micro, n_trans).min(kv_held[i]);
+                cost::overflow_tokens_with_cap(&live, i, ctx * micro, n_trans, mem_caps[i])
+                    .min(kv_held[i]);
             if overflow > 0 {
                 emergency_this_step = true;
                 let bytes = spec.kv_bytes_per_token_layer()
@@ -411,15 +450,10 @@ fn reload_bytes(spec: &ModelSpec, da: i64, db: i64) -> u64 {
     bytes
 }
 
-/// Is device `i` out of memory at context `ctx` under the live allocation?
-fn mem_saturated(
-    live: &Allocation,
-    cluster: &Cluster,
-    i: usize,
-    ctx: usize,
-    n_trans: i64,
-) -> bool {
-    cost::mem_demand(live, i, ctx, n_trans) > cluster.devices[i].usable_mem()
+/// Is device `i` out of memory at context `ctx` under the live allocation
+/// and its (possibly pressure-shifted) effective capacity?
+fn mem_saturated(live: &Allocation, i: usize, ctx: usize, n_trans: i64, cap: u64) -> bool {
+    cost::mem_demand(live, i, ctx, n_trans) > cap
 }
 
 #[cfg(test)]

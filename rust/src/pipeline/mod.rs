@@ -7,7 +7,9 @@ pub mod result;
 pub mod tensor;
 pub mod traditional;
 
-pub use interleaved::{run_interleaved, sweep_interleaved, ExecOptions, PlannerMode};
+pub use interleaved::{
+    run_interleaved, run_interleaved_scripted, sweep_interleaved, ExecOptions, PlannerMode,
+};
 pub use result::SimResult;
 pub use tensor::{run_tensor_parallel, sweep_tensor_parallel, TpOptions};
 pub use traditional::{run_traditional, sweep_traditional, TradOptions};

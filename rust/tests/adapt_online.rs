@@ -1,0 +1,326 @@
+//! Dedicated online-adaptation tests (paper §IV-D): `OnlinePlanner`
+//! threshold crossings, scripted memory-pressure events through
+//! `apply_pressure`, the KV-transfer protocol's reaction to
+//! pressure-shifted thresholds, and the executor-level invariants of
+//! `run_interleaved_scripted` (an empty script is bit-identical to the
+//! unscripted executor; a given script is deterministic).
+
+use lime::adapt::{eq8_tokens, KvTransferProtocol, MemEvent, OnlinePlanner};
+use lime::cluster::Cluster;
+use lime::model::ModelSpec;
+use lime::net::BandwidthTrace;
+use lime::pipeline::{run_interleaved, run_interleaved_scripted, ExecOptions, SimResult};
+use lime::plan::{plan, Allocation, PlanOptions};
+use lime::sim::TraceMode;
+use lime::util::bytes::{gib, mbps};
+use lime::util::prop::{check, pair, usize_in, Config, PropResult};
+
+fn popts() -> PlanOptions {
+    PlanOptions {
+        empirical_tokens: 128,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    }
+}
+
+fn lowmem_setup(idx: usize) -> (Allocation, Cluster) {
+    let spec = ModelSpec::llama33_70b();
+    let cluster = match idx {
+        1 => Cluster::lowmem_setting1(),
+        2 => Cluster::lowmem_setting2(),
+        _ => Cluster::lowmem_setting3(),
+    };
+    let alloc = plan(&spec, &cluster, &popts()).expect("planning").allocation;
+    (alloc, cluster)
+}
+
+fn timing_fields(r: &SimResult) -> (f64, &[f64], u64, usize, usize) {
+    (
+        r.total_time,
+        r.step_times.as_slice(),
+        r.kv_tokens_transferred,
+        r.online_plans_fired,
+        r.emergency_steps,
+    )
+}
+
+/// A device with a finite, positive next threshold (KV pressure bites).
+fn pressured_device(planner: &OnlinePlanner) -> usize {
+    (0..planner.states.len())
+        .filter(|&i| planner.states[i].next_threshold < usize::MAX)
+        .min_by_key(|&i| planner.states[i].next_threshold)
+        .expect("a lowmem setting must pressure some device")
+}
+
+// ------------------------------------------------ threshold crossings
+
+#[test]
+fn on_token_boundary_is_exact() {
+    // `TS_i^j` is inclusive: one token below never fires, the threshold
+    // itself is when the planner reacts (Eq. 5).
+    let (alloc, cluster) = lowmem_setup(1);
+    let mut planner = OnlinePlanner::new(&alloc, &cluster, 1);
+    let i = pressured_device(&planner);
+    let ts = planner.states[i].next_threshold;
+    assert!(planner.on_token(i, ts.saturating_sub(1), 0).is_none());
+    if let Some(fired) = planner.on_token(i, ts, 0) {
+        assert_eq!(fired.at_tokens, ts, "plan records its trigger point");
+        assert!(fired.alpha + fired.beta > 0);
+    }
+}
+
+#[test]
+fn crossing_the_first_threshold_fires_a_plan() {
+    // Every device that is both pressured (finite TS) and has evictable
+    // blocks must fire a plan when its threshold is crossed — the deficit
+    // at TS^1 is a lookahead's worth of KV, far below one freed block.
+    let (alloc, cluster) = lowmem_setup(1);
+    let mut planner = OnlinePlanner::new(&alloc, &cluster, 1);
+    let candidates: Vec<usize> = (0..planner.states.len())
+        .filter(|&i| {
+            planner.states[i].next_threshold < usize::MAX
+                && planner.states[i].alpha_avail + planner.states[i].beta_avail > 0
+        })
+        .collect();
+    assert!(
+        !candidates.is_empty(),
+        "lowmem1 must leave some device pressured with evictable blocks"
+    );
+    for i in candidates {
+        let ts = planner.states[i].next_threshold;
+        let before = planner.states[i].history.len();
+        for tokens in ts..ts + 4 {
+            planner.on_token(i, tokens, 0);
+        }
+        assert!(
+            planner.states[i].history.len() > before,
+            "device {i}: crossing TS={ts} fired nothing"
+        );
+        let last = *planner.states[i].history.last().unwrap();
+        assert!(last.alpha + last.beta > 0);
+        assert!(last.at_tokens >= ts);
+        assert!(
+            planner.next_threshold(i) > ts || planner.next_threshold(i) == usize::MAX,
+            "a fired plan must push the next threshold out"
+        );
+    }
+}
+
+// ------------------------------------------- scripted pressure events
+
+#[test]
+fn apply_pressure_moves_thresholds_both_ways() {
+    let (alloc, cluster) = lowmem_setup(1);
+    let mut planner = OnlinePlanner::new(&alloc, &cluster, 1);
+    let i = pressured_device(&planner);
+    let t0 = planner.states[i].next_threshold;
+    assert!(t0 > 0);
+
+    // Crushing pressure: slack saturates at zero, the threshold collapses
+    // to (at most) just past the current plan's trigger point.
+    planner.apply_pressure(i, -(gib(128.0) as i64));
+    let t1 = planner.states[i].next_threshold;
+    assert!(t1 <= t0);
+    assert!(t1 <= 1, "zero slack leaves only the +1 clamp, got {t1}");
+
+    // Restoring more than was taken pushes the threshold past its start.
+    planner.apply_pressure(i, gib(256.0) as i64);
+    let t2 = planner.states[i].next_threshold;
+    assert!(t2 >= t0, "restored slack must re-raise the threshold: {t2} < {t0}");
+}
+
+#[test]
+fn dip_restores_slack_exactly_even_after_saturation() {
+    // A dip whose squeeze exceeds the available slack must still be a
+    // no-op once released: pressure accumulates against the unpressured
+    // base, only effective slack clamps at zero.
+    let (alloc, cluster) = lowmem_setup(1);
+    let mut planner = OnlinePlanner::new(&alloc, &cluster, 1);
+    let i = pressured_device(&planner);
+    let slack0 = planner.states[i].slack_bytes;
+    let ts0 = planner.states[i].next_threshold;
+    let squeeze = gib(64.0) as i64; // far beyond any lowmem device's slack
+    planner.apply_pressure(i, -squeeze);
+    assert_eq!(planner.states[i].slack_bytes, 0, "squeeze must saturate");
+    planner.apply_pressure(i, squeeze);
+    assert_eq!(
+        planner.states[i].slack_bytes, slack0,
+        "down+up of equal magnitude must restore slack exactly"
+    );
+    assert_eq!(planner.states[i].next_threshold, ts0);
+}
+
+#[test]
+fn pressure_triggers_adaptation_the_unpressured_run_never_needed() {
+    // An 8 GiB squeeze on device 0 (under lowmem planning, slack is far
+    // smaller than that) must engage §IV-D machinery: online plans, or —
+    // once nothing more can be freed — the emergency KV spill.
+    let (alloc, cluster) = lowmem_setup(1);
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let opts = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let script = [MemEvent {
+        at_step: 4,
+        device: 0,
+        delta_bytes: -(gib(8.0) as i64),
+    }];
+    let squeezed = run_interleaved_scripted(&alloc, &cluster, &bw, 1, 48, &opts, &script);
+    assert!(
+        squeezed.online_plans_fired > 0 || squeezed.emergency_steps > 0,
+        "8 GiB of pressure engaged nothing: {squeezed:?}"
+    );
+    // And the pressure must actually cost something relative to baseline.
+    let baseline = run_interleaved(&alloc, &cluster, &bw, 1, 48, &opts);
+    assert!(
+        squeezed.total_time >= baseline.total_time,
+        "pressure cannot make the run faster: {} < {}",
+        squeezed.total_time,
+        baseline.total_time
+    );
+}
+
+#[test]
+fn prop_empty_script_is_bit_identical_to_unscripted() {
+    let setups: Vec<(Allocation, Cluster)> = (1..=3).map(lowmem_setup).collect();
+    let gen = pair(
+        pair(usize_in(0, 2), usize_in(0, 1000)),
+        pair(usize_in(1, 5), usize_in(4, 24)),
+    );
+    let cfg = Config {
+        cases: 12,
+        seed: 0xADA7,
+        max_shrink_steps: 64,
+    };
+    let result = check(&cfg, &gen, |&((ci, seed), (micro, tokens))| {
+        let (alloc, cluster) = &setups[ci];
+        let bw = BandwidthTrace::fixed_mbps(100.0 + (seed % 150) as f64);
+        let opts = ExecOptions {
+            seed: seed as u64,
+            trace_mode: TraceMode::Off,
+            ..ExecOptions::default()
+        };
+        let plain = run_interleaved(alloc, cluster, &bw, micro, tokens, &opts);
+        let scripted = run_interleaved_scripted(alloc, cluster, &bw, micro, tokens, &opts, &[]);
+        if timing_fields(&plain) != timing_fields(&scripted) {
+            return Err(format!(
+                "empty script diverged: {:?} vs {:?}",
+                timing_fields(&scripted),
+                timing_fields(&plain)
+            ));
+        }
+        Ok(())
+    });
+    assert!(matches!(result, PropResult::Pass { .. }), "{result:?}");
+}
+
+#[test]
+fn prop_scripted_runs_are_deterministic() {
+    let (alloc, cluster) = lowmem_setup(2);
+    let gen = pair(
+        pair(usize_in(0, 4), usize_in(1, 16)),
+        pair(usize_in(1, 12), usize_in(8, 24)),
+    );
+    let cfg = Config {
+        cases: 10,
+        seed: 0xDE7,
+        max_shrink_steps: 32,
+    };
+    let result = check(&cfg, &gen, |&((device, squeeze_gib), (at_step, tokens))| {
+        let bw = BandwidthTrace::fixed_mbps(150.0);
+        let opts = ExecOptions {
+            trace_mode: TraceMode::Off,
+            ..ExecOptions::default()
+        };
+        let script = [
+            MemEvent {
+                at_step,
+                device,
+                delta_bytes: -((gib(1.0) * squeeze_gib as u64) as i64),
+            },
+            MemEvent {
+                at_step: at_step + 4,
+                device,
+                delta_bytes: (gib(1.0) * squeeze_gib as u64) as i64,
+            },
+        ];
+        let a = run_interleaved_scripted(&alloc, &cluster, &bw, 2, tokens, &opts, &script);
+        let b = run_interleaved_scripted(&alloc, &cluster, &bw, 2, tokens, &opts, &script);
+        if timing_fields(&a) != timing_fields(&b) {
+            return Err("same script, different outcome".into());
+        }
+        Ok(())
+    });
+    assert!(matches!(result, PropResult::Pass { .. }), "{result:?}");
+}
+
+// ------------------------------------- KV transfer under pressure
+
+#[test]
+fn pressure_makes_lazy_bandwidth_increase_imminent() {
+    // Alg. 2 line 15: a bandwidth *increase* is normally skipped far from
+    // the next threshold. Scripted pressure collapses the threshold, which
+    // must flip the same increase to "imminent" and update the shipper.
+    let spec = ModelSpec::llama33_70b();
+    let cluster = Cluster::lowmem_setting2();
+    let opts = PlanOptions {
+        empirical_tokens: 256,
+        micro_batch: 1,
+        bandwidth: mbps(100.0),
+    };
+    let alloc = plan(&spec, &cluster, &opts).expect("planning").allocation;
+    let mut planner = OnlinePlanner::new(&alloc, &cluster, 1);
+    let mut proto = KvTransferProtocol::new(&alloc, &cluster, &planner, 256, 1, mbps(100.0));
+    let Some(i) = (0..proto.states.len()).find(|&i| proto.states[i].desired > 0) else {
+        return; // plan fully covered at this operating point: nothing to test
+    };
+    let before = proto.states[i].desired;
+    let fresh = eq8_tokens(&alloc, &cluster, i, 256, 1, mbps(250.0));
+    if (fresh - before).abs() < proto.n_ts {
+        return; // bandwidth delta inside hysteresis: nothing observable
+    }
+
+    // Far from the threshold the increase is skipped...
+    let changed = proto.on_bandwidth(&alloc, &cluster, &planner, 0, 256, 1, mbps(250.0));
+    assert!(!changed.contains(&i), "increase must be lazy far from TS");
+    assert_eq!(proto.states[i].desired, before);
+
+    // ...but after crushing pressure the next threshold is imminent, so
+    // the same increase is applied. (Drop back to 100 first so the retry
+    // is again an increase.)
+    proto.on_bandwidth(&alloc, &cluster, &planner, 0, 256, 1, mbps(100.0));
+    planner.apply_pressure(i, -(gib(128.0) as i64));
+    assert!(planner.next_threshold(i) <= 1);
+    let changed = proto.on_bandwidth(&alloc, &cluster, &planner, 0, 256, 1, mbps(250.0));
+    assert!(
+        changed.contains(&i),
+        "pressure-collapsed threshold must make the increase imminent"
+    );
+}
+
+#[test]
+fn executor_ships_kv_under_imminent_pressure() {
+    // End to end: with transfer enabled, a squeezed run must not ship
+    // *less* KV than the unsqueezed run — lowered thresholds only widen
+    // the imminence window that gates shipping.
+    let (alloc, cluster) = lowmem_setup(2);
+    let bw = BandwidthTrace::fixed_mbps(100.0);
+    let opts = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let script = [MemEvent {
+        at_step: 2,
+        device: 1,
+        delta_bytes: -(gib(8.0) as i64),
+    }];
+    let base = run_interleaved(&alloc, &cluster, &bw, 1, 64, &opts);
+    let squeezed = run_interleaved_scripted(&alloc, &cluster, &bw, 1, 64, &opts, &script);
+    assert!(
+        squeezed.kv_tokens_transferred >= base.kv_tokens_transferred,
+        "squeeze narrowed shipping: {} < {}",
+        squeezed.kv_tokens_transferred,
+        base.kv_tokens_transferred
+    );
+}

@@ -131,6 +131,41 @@ fn pool_grid_equals_sequential_grid_over_real_experiments() {
 }
 
 #[test]
+fn scenario_matrix_pool_equals_sequential() {
+    // The scenario-matrix acceptance check: a matrix exercising ALL new
+    // axes — #Seg overrides (nested plan_with_segs on the pool), scripted
+    // memory pressure, both patterns — must be bit-identical between the
+    // pooled evaluation and the sequential reference, cell for cell.
+    use lime::adapt::MemScenario;
+    use lime::experiments::{ScenarioMatrix, SegChoice};
+    use lime::util::bytes::gib;
+    use lime::workload::Pattern;
+
+    let methods = all();
+    let matrix = ScenarioMatrix::new(
+        "pool-vs-seq",
+        ModelSpec::llama2_13b(),
+        Cluster::env_e1(),
+        &methods,
+        vec![100.0, 200.0],
+        vec![Pattern::Sporadic, Pattern::Bursty],
+        4,
+    )
+    .with_segs(vec![SegChoice::Auto, SegChoice::Fixed(4)])
+    .with_mem_scenarios(vec![
+        MemScenario::none(),
+        MemScenario::dip("dip-d0", 0, gib(4.0), 1, 3),
+    ]);
+    let pooled = matrix.eval();
+    let sequential = matrix.eval_sequential();
+    assert_eq!(pooled.len(), matrix.cell_count());
+    assert_eq!(pooled.len(), sequential.len());
+    for (p, s) in pooled.iter().zip(&sequential) {
+        assert_eq!(p, s, "scenario cell diverged between pool and sequential");
+    }
+}
+
+#[test]
 fn executor_sweep_entry_point_matches_sequential_runs() {
     let spec = ModelSpec::llama33_70b();
     let cluster = Cluster::lowmem_setting1();

@@ -151,6 +151,116 @@ fn prop_trace_mode_never_changes_interleaved_timing() {
 }
 
 #[test]
+fn prop_trace_modes_agree_under_scripted_pressure() {
+    // Satellite of the scenario-matrix work: when scripted memory
+    // fluctuation fires mid-run offload plans (one-time reload loads,
+    // growing per-segment loads, emergency kv-spill/kv-fetch SSD traffic),
+    // `TraceMode::Aggregate`'s online `uncovered_load` must still match
+    // `Full`'s sweep-line, and every timing field must stay bit-identical
+    // across Off/Aggregate/Full.
+    use lime::adapt::MemEvent;
+    use lime::pipeline::run_interleaved_scripted;
+    use lime::util::bytes::gib;
+
+    let spec = ModelSpec::llama33_70b();
+    let setups: Vec<(lime::plan::allocation::Allocation, Cluster)> = (0..3)
+        .map(|idx| {
+            let cluster = cluster_by_index(idx);
+            let alloc = lime::plan::plan(&spec, &cluster, &popts())
+                .expect("planning the test cluster")
+                .allocation;
+            (alloc, cluster)
+        })
+        .collect();
+
+    let gen = pair(
+        pair(usize_in(0, 2), usize_in(0, 1000)),
+        pair(pair(usize_in(1, 3), usize_in(8, 32)), pair(usize_in(1, 12), usize_in(0, 7))),
+    );
+    let cfg = Config {
+        cases: 12,
+        seed: 0xA66,
+        max_shrink_steps: 64,
+    };
+    let result = check(
+        &cfg,
+        &gen,
+        |&((cluster_idx, seed), ((micro, tokens), (squeeze_gib, at_step)))| {
+            let (alloc, cluster) = &setups[cluster_idx];
+            let device = seed % cluster.len();
+            let script = [
+                MemEvent {
+                    at_step,
+                    device,
+                    delta_bytes: -((gib(1.0) * squeeze_gib as u64) as i64),
+                },
+                MemEvent {
+                    at_step: at_step + 3,
+                    device,
+                    delta_bytes: (gib(1.0) * (squeeze_gib / 2) as u64) as i64,
+                },
+            ];
+            let bw = BandwidthTrace::fixed_mbps(100.0 + (seed % 150) as f64);
+            let run = |mode: TraceMode| {
+                run_interleaved_scripted(
+                    alloc,
+                    cluster,
+                    &bw,
+                    micro,
+                    tokens,
+                    &ExecOptions {
+                        seed: seed as u64,
+                        trace_mode: mode,
+                        ..ExecOptions::default()
+                    },
+                    &script,
+                )
+            };
+            let full = run(TraceMode::Full);
+            let agg = run(TraceMode::Aggregate);
+            let off = run(TraceMode::Off);
+            if timing_fields(&full) != timing_fields(&off)
+                || timing_fields(&full) != timing_fields(&agg)
+            {
+                return Err("TraceMode changed scripted-run timing".to_string());
+            }
+            // The interesting case: pressure injected extra SSD loads.
+            for dev in 0..cluster.len() {
+                for kind in [
+                    lime::sim::SpanKind::Load,
+                    lime::sim::SpanKind::Store,
+                    lime::sim::SpanKind::Compute,
+                ] {
+                    let a = full.trace.busy(dev, kind);
+                    let b = agg.trace.busy(dev, kind);
+                    if (a - b).abs() > 1e-9 * a.abs().max(1.0) {
+                        return Err(format!("busy({dev}, {kind:?}) {a} != {b}"));
+                    }
+                }
+            }
+            let full_uncovered = full.trace.uncovered_loads();
+            let agg_uncovered = agg.trace.uncovered_loads();
+            for (dev, (f, a)) in full_uncovered.iter().zip(&agg_uncovered).enumerate() {
+                if (f - a).abs() > 1e-9 * f.abs().max(1.0) {
+                    return Err(format!(
+                        "uncovered_load({dev}) under pressure: Full {f} vs Aggregate {a}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+    match result {
+        PropResult::Pass { .. } => {}
+        PropResult::Fail {
+            minimal,
+            seed,
+            message,
+        } => panic!("pressure trace property failed (seed {seed}): {minimal:?}\n{message}"),
+    }
+}
+
+#[test]
 fn prop_trace_mode_never_changes_traditional_timing() {
     let spec = ModelSpec::llama33_70b();
     let cluster = Cluster::lowmem_setting1();
