@@ -1,4 +1,5 @@
-"""Consumer for the Rust sweep artifacts (schema ``lime-sweep-v2``).
+"""Consumer for the Rust sweep artifacts (schemas ``lime-sweep-v2`` and
+``lime-sweep-v3``; see ``docs/SWEEPS.md`` for the schema reference).
 
 ``lime experiments --id sweep`` writes one ``SWEEP_<grid>.json`` per
 scenario matrix (lowmem settings + cluster-size subsets). This module
@@ -9,8 +10,9 @@ renders those artifacts into the paper's figure layouts:
 * :func:`fig_seg_curve` — LIME latency vs ``#Seg`` (Figs 7–8 layout),
   from the ``#Seg``-override axis;
 * :func:`fig_memory_fluctuation` — LIME latency + §IV-D adaptation
-  counters per memory-pressure scenario (the Table-V-flavoured view of
-  the online planner / KV transfer machinery);
+  counters per pressure scenario (the Table-V-flavoured view of the
+  online planner / KV transfer machinery); v3 artifacts add the per-cell
+  bandwidth-stall counter inflated by joint bandwidth+memory scripts;
 * :func:`speedup_summary` — LIME's speedup over the best completing
   baseline per column (the paper's headline numbers).
 
@@ -32,7 +34,7 @@ import sys
 from dataclasses import dataclass
 from typing import Any
 
-SCHEMA = "lime-sweep-v2"
+SCHEMAS = ("lime-sweep-v2", "lime-sweep-v3")
 
 
 @dataclass
@@ -65,8 +67,10 @@ class Grid:
 def load_grid(path: str) -> Grid:
     with open(path, encoding="utf-8") as f:
         doc = json.load(f)
-    if doc.get("schema") != SCHEMA:
-        raise ValueError(f"{path}: expected schema {SCHEMA}, got {doc.get('schema')!r}")
+    if doc.get("schema") not in SCHEMAS:
+        raise ValueError(
+            f"{path}: expected schema in {SCHEMAS}, got {doc.get('schema')!r}"
+        )
     for key in ("grid", "model", "tokens", "axes", "cells"):
         if key not in doc:
             raise ValueError(f"{path}: missing '{key}'")
@@ -100,6 +104,13 @@ def _fmt_cell(cell: dict[str, Any]) -> str:
     if cell.get("oot"):
         return "OOT"
     return f"{cell['ms_per_token']:.1f}"
+
+
+def _fmt_counter(cell: dict[str, Any], key: str) -> str:
+    """An adaptation counter as table text: ``-`` when the key is absent
+    (v2 artifacts without ``bw_stalls``) or null (OOM cells)."""
+    value = cell.get(key)
+    return "-" if value is None else str(value)
 
 
 def _md_table(header: list[str], rows: list[list[str]]) -> str:
@@ -177,26 +188,30 @@ def fig_seg_curve(grid: Grid) -> str:
 
 
 def fig_memory_fluctuation(grid: Grid) -> str:
-    """§IV-D view: LIME under each memory-pressure scenario — latency plus
-    the online-adaptation counters that the scenario axis exists to
-    surface (plans fired, KV tokens shipped, emergency spill steps)."""
-    out = [f"## {grid.grid} — LIME under memory fluctuation"]
+    """§IV-D view: LIME under each pressure scenario — latency plus the
+    online-adaptation counters that the scenario axis exists to surface
+    (plans fired, KV tokens shipped, emergency spill steps, and — on
+    ``lime-sweep-v3`` artifacts — link stalls inflated by scripted
+    bandwidth sags)."""
+    out = [f"## {grid.grid} — LIME under memory/bandwidth fluctuation"]
+    has_stalls = any("bw_stalls" in c for c in grid.cells)
     rows = []
     for scenario in grid.axes["mem_scenarios"]:
         label = scenario["label"]
         for c in grid.lime_cells():
             if c["mem"] != label or c["seg"] != "auto":
                 continue
-            rows.append(
-                [
-                    label,
-                    f"{c['bandwidth_mbps']:g} Mbps / {c['pattern']}",
-                    _fmt_cell(c),
-                    str(c.get("online_plans_fired", "-")),
-                    str(c.get("kv_tokens_transferred", "-")),
-                    str(c.get("emergency_steps", "-")),
-                ]
-            )
+            row = [
+                label,
+                f"{c['bandwidth_mbps']:g} Mbps / {c['pattern']}",
+                _fmt_cell(c),
+                _fmt_counter(c, "online_plans_fired"),
+                _fmt_counter(c, "kv_tokens_transferred"),
+                _fmt_counter(c, "emergency_steps"),
+            ]
+            if has_stalls:
+                row.append(_fmt_counter(c, "bw_stalls"))
+            rows.append(row)
     header = [
         "scenario",
         "column",
@@ -205,6 +220,8 @@ def fig_memory_fluctuation(grid: Grid) -> str:
         "KV tokens shipped",
         "emergency steps",
     ]
+    if has_stalls:
+        header.append("link stalls")
     out.append(_md_table(header, rows))
     return "\n\n".join(out)
 

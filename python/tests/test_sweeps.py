@@ -1,6 +1,7 @@
-"""Consumer-side tests for the ``lime-sweep-v2`` artifacts: loading,
-figure-layout rendering, and the speedup summary — against a small
-hand-built grid mirroring what ``lime experiments --id sweep`` emits."""
+"""Consumer-side tests for the ``lime-sweep-v2``/``lime-sweep-v3``
+artifacts: loading, figure-layout rendering, and the speedup summary —
+against small hand-built grids mirroring what ``lime experiments --id
+sweep`` emits (v3) and what older checkouts emitted (v2)."""
 
 import json
 
@@ -88,6 +89,85 @@ def test_load_rejects_wrong_schema(tmp_path):
     bad.write_text(json.dumps({"schema": "lime-sweep-v1", "cells": []}))
     with pytest.raises(ValueError, match="lime-sweep-v2"):
         figures.load_grid(str(bad))
+
+
+@pytest.fixture
+def sweep_dir_v3(tmp_path):
+    """A minimal lime-sweep-v3 artifact: joint pressure scripts with full
+    metadata and the per-cell bandwidth-stall counter."""
+    def v3_cell(method, name, mem, ms, stalls, plans=0):
+        cell = _cell(method, name, 200.0, "sporadic", "auto", mem, ms, plans=plans)
+        cell["bw_stalls"] = None if ms is None else stalls
+        return cell
+
+    cells = [
+        v3_cell("lime", "LIME", "none", 100.0, 2),
+        v3_cell("lime", "LIME", "joint-sag-squeeze", 140.0, 17, plans=3),
+        v3_cell("pp", "Pipeline parallelism", "none", 250.0, 1),
+    ]
+    # An OOM LIME cell: its null counters must render as "-", not "None".
+    # (The consumer does not enforce coordinate uniqueness, so reusing the
+    # scenario at another bandwidth-free coordinate is fine here.)
+    oom = v3_cell("lime", "LIME", "joint-sag-squeeze", None, 0)
+    oom["pattern"] = "bursty"
+    cells.append(oom)
+    doc = {
+        "schema": "lime-sweep-v3",
+        "grid": "v3grid",
+        "model": "Qwen3-32B",
+        "tokens": 8,
+        "bandwidths_mbps": [200.0],
+        "axes": {
+            "cluster": {"label": "v3grid", "devices": ["AGXOrin-64G", "AGXOrin-32G"]},
+            "bandwidths_mbps": [200.0],
+            "patterns": ["sporadic"],
+            "methods": ["lime", "pp"],
+            "segs": ["auto"],
+            "mem_scenarios": [
+                {"label": "none", "events": []},
+                {
+                    "label": "joint-sag-squeeze",
+                    "events": [{"at_step": 2, "device": 0, "delta_bytes": -4e9}],
+                },
+            ],
+            "pressure_scripts": [
+                {"label": "none", "mem_events": [], "bw_events": []},
+                {
+                    "label": "joint-sag-squeeze",
+                    "mem_events": [
+                        {"at_step": 2, "device": 0, "delta_bytes": -4e9}
+                    ],
+                    "bw_events": [
+                        {"at_step": 2, "scale": 0.5},
+                        {"at_step": 6, "scale": 1.0},
+                    ],
+                },
+            ],
+        },
+        "cells": cells,
+    }
+    path = tmp_path / "SWEEP_v3grid.json"
+    path.write_text(json.dumps(doc))
+    return tmp_path
+
+
+def test_v3_artifact_loads_and_renders_link_stalls(sweep_dir_v3):
+    g = figures.load_sweeps(str(sweep_dir_v3))[0]
+    assert g.grid == "v3grid"
+    text = figures.fig_memory_fluctuation(g)
+    assert "link stalls" in text, "v3 artifacts must render the stall column"
+    assert "joint-sag-squeeze" in text
+    assert "| 17 |" in text, "the joint cell's stall count must render"
+    # OOM cells render "-" for their null counters, never "None".
+    assert "OOM" in text
+    assert "None" not in text
+    # The full render still works end to end on a v3 artifact.
+    assert figures.render_grid(g).count("##") >= 4
+
+
+def test_v2_artifact_renders_without_stall_column(sweep_dir):
+    g = figures.load_sweeps(str(sweep_dir))[0]
+    assert "link stalls" not in figures.fig_memory_fluctuation(g)
 
 
 def test_latency_table_marks_oom(sweep_dir):

@@ -154,6 +154,48 @@ fn main() {
         std::hint::black_box(matrix.eval().len());
     });
 
+    // Joint-pressure throughput: the same point with the full pressure
+    // axis — a correlated multi-device dip and a joint bandwidth-sag +
+    // squeeze script, the lime-sweep-v3 default shapes.
+    let joint_matrix = lime::experiments::ScenarioMatrix::new(
+        "bench-joint",
+        grid_spec.clone(),
+        grid_cluster.clone(),
+        &methods,
+        vec![100.0, 200.0],
+        vec![
+            lime::workload::Pattern::Sporadic,
+            lime::workload::Pattern::Bursty,
+        ],
+        4,
+    )
+    .with_segs(vec![
+        lime::experiments::SegChoice::Auto,
+        lime::experiments::SegChoice::Fixed(4),
+    ])
+    .with_pressure(vec![
+        lime::adapt::Script::none(),
+        lime::adapt::Script::from_mem(lime::adapt::MemScenario::correlated_dip(
+            "corr-dip",
+            &[0, 1],
+            1,
+            lime::util::bytes::gib(4.0),
+            1,
+            3,
+        )),
+        lime::adapt::Script::from_mem(lime::adapt::MemScenario::squeeze(
+            "sq",
+            0,
+            lime::util::bytes::gib(4.0),
+            1,
+        ))
+        .with_bandwidth_sag(0.5, 1, 3)
+        .with_label("joint"),
+    ]);
+    b.time("scenario_matrix_e1_joint_pressure (pool)", 1, 5, || {
+        std::hint::black_box(joint_matrix.eval().len());
+    });
+
     // DES engine raw throughput.
     b.time("des_engine_1M_events", 1, 5, || {
         let mut eng: lime::sim::Engine<u64> = lime::sim::Engine::new();

@@ -1,12 +1,30 @@
-//! Online memory adaptation strategy (paper §IV-D): the memory-aware
-//! planner (Eqs. 5–7), the bandwidth-sensitive KV-cache transfer
-//! protocol (Alg. 2, Eq. 8), and scripted memory-fluctuation scenarios
-//! that drive both from the scenario-matrix sweeps.
+//! Online memory adaptation (paper §IV-D) and the fluctuation scripts
+//! that stress it.
+//!
+//! Three cooperating pieces:
+//!
+//! * [`planner`] — the memory-aware online planner (Eqs. 5–7, Fig. 9):
+//!   per-device thresholds `TS_i^j` over KV growth, block-granular
+//!   `(α, β)` offload plans chosen to minimize extra streamed bytes, and
+//!   [`OnlinePlanner::apply_pressure`] for scripted slack shifts;
+//! * [`kvtransfer`] — the bandwidth-sensitive KV-cache transfer protocol
+//!   (Alg. 2, Eq. 8, Fig. 10): pacing KV to a high-threshold `d_target`,
+//!   reacting asymmetrically to bandwidth decreases (immediate) vs
+//!   increases (lazy unless a threshold is imminent);
+//! * [`scripts`] — composable disturbance timelines ([`MemScenario`],
+//!   [`Script`]): single- and multi-device memory pressure (correlated
+//!   thermal dips with lag, staggered squeezes, recovery ramps) plus a
+//!   bandwidth event channel ([`BwEvent`]), consumed jointly by
+//!   `pipeline::run_interleaved_scripted` and swept by
+//!   `experiments::scenario::ScenarioMatrix`'s pressure axis.
+//!
+//! The planner and protocol are pure state machines: the discrete-event
+//! simulator and the real PJRT serving engine drive the same types.
 
 pub mod kvtransfer;
 pub mod planner;
-pub mod pressure;
+pub mod scripts;
 
 pub use kvtransfer::{eq8_tokens, KvTransferProtocol, TransferState};
 pub use planner::{DeviceMemState, OffloadPlan, OnlinePlanner};
-pub use pressure::{MemEvent, MemScenario};
+pub use scripts::{BwEvent, MemEvent, MemScenario, Script, ScriptEvent};

@@ -1,0 +1,591 @@
+//! Fluctuation scripts — scripted memory *and* bandwidth disturbance
+//! timelines for the §IV-D online-adaptation machinery.
+//!
+//! Real edge clusters are not disturbed one device at a time: a thermal
+//! event in a cabinet throttles co-located neighbours within seconds of
+//! each other, a co-tenant rollout squeezes devices in deployment order,
+//! and Wi-Fi/LAN contention sags the shared link *while* memory shrinks.
+//! This module scripts those shapes as plain data:
+//!
+//! * [`MemEvent`] / [`MemScenario`] — per-device usable-memory deltas,
+//!   with single-device ([`MemScenario::dip`], [`MemScenario::squeeze`])
+//!   and multi-device ([`MemScenario::correlated_dip`],
+//!   [`MemScenario::staggered_squeeze`], [`MemScenario::dip_with_ramp`])
+//!   constructors, composable via [`MemScenario::merged`];
+//! * [`BwEvent`] — a multiplicative link-capacity factor that takes
+//!   effect before a decode step (`scale < 1` is a sag, `1.0` restores),
+//!   applied on top of whatever base [`crate::net::BandwidthTrace`] the
+//!   run uses so scripts compose with the sweep's bandwidth axis;
+//! * [`Script`] — a labelled joint timeline of both event kinds
+//!   ([`ScriptEvent`]), consumed by
+//!   `pipeline::run_interleaved_scripted`: memory events shift effective
+//!   caps and the online planner's thresholds
+//!   (`OnlinePlanner::apply_pressure`), bandwidth events scale the link
+//!   capacity the Eq. 2 comm terms and Alg. 2's bandwidth monitor see —
+//!   in the same run.
+//!
+//! Scripts are deterministic given their event lists, replayable at any
+//! worker count, and serialized verbatim into the `lime-sweep-v3` axis
+//! metadata so artifacts are self-describing. An empty script is the
+//! baseline every non-adaptive method is measured at, and running one is
+//! bit-identical to the unscripted executor (property-tested in
+//! `rust/tests/adapt_online.rs`).
+
+/// One scripted change to a device's usable memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemEvent {
+    /// Decode step (0-based) *before* which the event applies.
+    pub at_step: usize,
+    /// Device index in the cluster.
+    pub device: usize,
+    /// Signed change in usable bytes (negative = pressure, positive =
+    /// restoration). Applied saturating at zero.
+    pub delta_bytes: i64,
+}
+
+/// One scripted change to the shared link's capacity: from `at_step`
+/// onward the effective bandwidth is `base × scale` (the latest event at
+/// or before a step wins; before any event the factor is 1.0).
+///
+/// Scales are *factors*, not absolute rates, so the same sag script
+/// composes with every point of a sweep's bandwidth axis.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BwEvent {
+    /// Decode step (0-based) *before* which the factor takes effect.
+    pub at_step: usize,
+    /// Link-capacity factor (must be finite and > 0; 1.0 restores).
+    pub scale: f64,
+}
+
+/// One entry of a joint fluctuation timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScriptEvent {
+    Mem(MemEvent),
+    Bw(BwEvent),
+}
+
+impl ScriptEvent {
+    /// The decode step this event applies before.
+    pub fn at_step(&self) -> usize {
+        match self {
+            ScriptEvent::Mem(e) => e.at_step,
+            ScriptEvent::Bw(e) => e.at_step,
+        }
+    }
+}
+
+/// A named memory-fluctuation scenario: a label (stable across sweep
+/// artifacts) plus its event script. An empty script is the "none"
+/// baseline every non-adaptive method is measured at.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemScenario {
+    pub label: String,
+    pub events: Vec<MemEvent>,
+}
+
+impl MemScenario {
+    /// The no-pressure baseline scenario.
+    pub fn none() -> Self {
+        MemScenario {
+            label: "none".into(),
+            events: Vec::new(),
+        }
+    }
+
+    /// A dip: `device` loses `bytes` before `down_step`, regains them
+    /// before `up_step` — the transient-co-tenant shape.
+    ///
+    /// ```
+    /// use lime::adapt::MemScenario;
+    /// let s = MemScenario::dip("dip-d1", 1, 1024, 3, 7);
+    /// assert_eq!(s.events.len(), 2);
+    /// assert_eq!(s.events[0].delta_bytes, -1024);
+    /// assert_eq!(s.events[1].delta_bytes, 1024);
+    /// ```
+    pub fn dip(label: &str, device: usize, bytes: u64, down_step: usize, up_step: usize) -> Self {
+        assert!(down_step < up_step, "dip must release after it squeezes");
+        MemScenario {
+            label: label.into(),
+            events: vec![
+                MemEvent {
+                    at_step: down_step,
+                    device,
+                    delta_bytes: -(bytes as i64),
+                },
+                MemEvent {
+                    at_step: up_step,
+                    device,
+                    delta_bytes: bytes as i64,
+                },
+            ],
+        }
+    }
+
+    /// A squeeze: `device` loses `bytes` before `at_step` and never gets
+    /// them back — the persistent-co-tenant shape.
+    pub fn squeeze(label: &str, device: usize, bytes: u64, at_step: usize) -> Self {
+        MemScenario {
+            label: label.into(),
+            events: vec![MemEvent {
+                at_step,
+                device,
+                delta_bytes: -(bytes as i64),
+            }],
+        }
+    }
+
+    /// Correlated thermal dip: every device of `devices` dips by `bytes`,
+    /// the k-th one `k × lag` steps after the first (thermal events reach
+    /// co-located neighbours with a propagation delay, not instantly).
+    /// Each device recovers at `up_step + k × lag`, preserving its dip
+    /// duration.
+    ///
+    /// ```
+    /// use lime::adapt::MemScenario;
+    /// let s = MemScenario::correlated_dip("thermal", &[0, 1], 2, 1024, 4, 10);
+    /// // Two devices × (down + up) events; device 1 lags device 0 by 2 steps.
+    /// assert_eq!(s.events.len(), 4);
+    /// assert_eq!(s.events[0].at_step, 4);
+    /// assert_eq!(s.events[1].at_step, 6);
+    /// ```
+    pub fn correlated_dip(
+        label: &str,
+        devices: &[usize],
+        lag: usize,
+        bytes: u64,
+        down_step: usize,
+        up_step: usize,
+    ) -> Self {
+        assert!(!devices.is_empty(), "correlated dip needs devices");
+        assert!(down_step < up_step, "dip must release after it squeezes");
+        let mut events = Vec::with_capacity(devices.len() * 2);
+        for (k, &device) in devices.iter().enumerate() {
+            events.push(MemEvent {
+                at_step: down_step + k * lag,
+                device,
+                delta_bytes: -(bytes as i64),
+            });
+        }
+        for (k, &device) in devices.iter().enumerate() {
+            events.push(MemEvent {
+                at_step: up_step + k * lag,
+                device,
+                delta_bytes: bytes as i64,
+            });
+        }
+        events.sort_by_key(|e| (e.at_step, e.device));
+        MemScenario {
+            label: label.into(),
+            events,
+        }
+    }
+
+    /// Staggered squeeze: the k-th device of `devices` loses `bytes`
+    /// before `at_step + k × stagger` and never recovers — the
+    /// rolling-deployment co-tenant shape.
+    ///
+    /// ```
+    /// use lime::adapt::MemScenario;
+    /// let s = MemScenario::staggered_squeeze("rollout", &[2, 0], 3, 512, 1);
+    /// assert_eq!(s.events.len(), 2);
+    /// assert_eq!((s.events[0].device, s.events[0].at_step), (2, 1));
+    /// assert_eq!((s.events[1].device, s.events[1].at_step), (0, 4));
+    /// ```
+    pub fn staggered_squeeze(
+        label: &str,
+        devices: &[usize],
+        stagger: usize,
+        bytes: u64,
+        at_step: usize,
+    ) -> Self {
+        assert!(!devices.is_empty(), "staggered squeeze needs devices");
+        let events = devices
+            .iter()
+            .enumerate()
+            .map(|(k, &device)| MemEvent {
+                at_step: at_step + k * stagger,
+                device,
+                delta_bytes: -(bytes as i64),
+            })
+            .collect();
+        MemScenario {
+            label: label.into(),
+            events,
+        }
+    }
+
+    /// A dip whose recovery is a ramp: `device` loses `bytes` before
+    /// `down_step`, then regains them in `ramp_steps` equal increments
+    /// starting at `ramp_start` (one per step). The increments sum to
+    /// exactly `bytes`, so the scenario is a no-op once the ramp finishes.
+    ///
+    /// ```
+    /// use lime::adapt::MemScenario;
+    /// let s = MemScenario::dip_with_ramp("recover", 0, 10, 2, 5, 3);
+    /// let restored: i64 = s.events[1..].iter().map(|e| e.delta_bytes).sum();
+    /// assert_eq!(s.events[0].delta_bytes, -10);
+    /// assert_eq!(restored, 10);
+    /// assert_eq!(s.events.len(), 1 + 3);
+    /// ```
+    pub fn dip_with_ramp(
+        label: &str,
+        device: usize,
+        bytes: u64,
+        down_step: usize,
+        ramp_start: usize,
+        ramp_steps: usize,
+    ) -> Self {
+        assert!(ramp_steps >= 1, "ramp needs at least one increment");
+        assert!(down_step < ramp_start, "ramp must start after the dip");
+        let mut events = vec![MemEvent {
+            at_step: down_step,
+            device,
+            delta_bytes: -(bytes as i64),
+        }];
+        let base = bytes / ramp_steps as u64;
+        let remainder = bytes - base * ramp_steps as u64;
+        for k in 0..ramp_steps {
+            let inc = base + if k + 1 == ramp_steps { remainder } else { 0 };
+            events.push(MemEvent {
+                at_step: ramp_start + k,
+                device,
+                delta_bytes: inc as i64,
+            });
+        }
+        MemScenario {
+            label: label.into(),
+            events,
+        }
+    }
+
+    /// Merge several scenarios into one (events re-sorted by step then
+    /// device; same-step deltas on one device sum, so order within a step
+    /// does not matter).
+    pub fn merged(label: &str, parts: &[MemScenario]) -> Self {
+        let mut events: Vec<MemEvent> = parts.iter().flat_map(|p| p.events.clone()).collect();
+        events.sort_by_key(|e| (e.at_step, e.device));
+        MemScenario {
+            label: label.into(),
+            events,
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// A labelled joint fluctuation script: memory pressure events and
+/// bandwidth capacity events on one timeline. The interleaved executor
+/// applies both channels before each decode step, so Alg. 2's bandwidth
+/// monitor and the online planner's thresholds react *together* — the
+/// paper's "memory shrinks while the link sags" edge regime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Script {
+    pub label: String,
+    /// Memory-pressure channel (kept sorted by constructor, but any order
+    /// is valid: same-step deltas commute).
+    pub mem: Vec<MemEvent>,
+    /// Bandwidth channel, sorted by `at_step`; the latest event at or
+    /// before a step wins.
+    pub bw: Vec<BwEvent>,
+}
+
+impl Script {
+    /// The no-fluctuation baseline script.
+    pub fn none() -> Self {
+        Script {
+            label: "none".into(),
+            mem: Vec::new(),
+            bw: Vec::new(),
+        }
+    }
+
+    /// Lift a pure memory scenario into a joint script (no bandwidth
+    /// events), keeping its label.
+    pub fn from_mem(scenario: MemScenario) -> Self {
+        Script {
+            label: scenario.label,
+            mem: scenario.events,
+            bw: Vec::new(),
+        }
+    }
+
+    /// A labelled memory-only script from raw events (test/harness
+    /// convenience; prefer the [`MemScenario`] constructors for shapes).
+    pub fn from_mem_events(label: &str, events: Vec<MemEvent>) -> Self {
+        Script {
+            label: label.into(),
+            mem: events,
+            bw: Vec::new(),
+        }
+    }
+
+    /// A bandwidth sag: the link runs at `scale × base` from `from_step`
+    /// until `to_step`, then restores. The restore is an absolute
+    /// `scale: 1.0` event — see [`Script::with_bandwidth_sag`] for the
+    /// replace (not compose) semantics of overlapping windows.
+    ///
+    /// ```
+    /// use lime::adapt::Script;
+    /// let s = Script::bandwidth_sag("sag-half", 0.5, 4, 12);
+    /// assert_eq!(s.bw.len(), 2);
+    /// assert_eq!(s.bw[0].scale, 0.5);
+    /// assert_eq!(s.bw[1].scale, 1.0);
+    /// assert!(s.mem.is_empty());
+    /// ```
+    pub fn bandwidth_sag(label: &str, scale: f64, from_step: usize, to_step: usize) -> Self {
+        assert!(scale.is_finite() && scale > 0.0, "sag scale must be finite and > 0");
+        assert!(from_step < to_step, "sag must restore after it starts");
+        Script {
+            label: label.into(),
+            mem: Vec::new(),
+            bw: vec![
+                BwEvent {
+                    at_step: from_step,
+                    scale,
+                },
+                BwEvent {
+                    at_step: to_step,
+                    scale: 1.0,
+                },
+            ],
+        }
+    }
+
+    /// Build from a joint `(MemEvent | BwEvent)` timeline (events split
+    /// per channel; bandwidth events re-sorted by step, stably, so the
+    /// later entry of a same-step pair still wins).
+    pub fn from_events(label: &str, events: Vec<ScriptEvent>) -> Self {
+        let mut mem = Vec::new();
+        let mut bw = Vec::new();
+        for ev in events {
+            match ev {
+                ScriptEvent::Mem(e) => mem.push(e),
+                ScriptEvent::Bw(e) => bw.push(e),
+            }
+        }
+        bw.sort_by_key(|e| e.at_step);
+        Script {
+            label: label.into(),
+            mem,
+            bw,
+        }
+    }
+
+    /// Add a bandwidth sag to this script (joint-scenario builder),
+    /// keeping the current label.
+    ///
+    /// Scales are **absolute factors, not multiplied together**: at any
+    /// step the latest event at or before it wins, so a sag's restore
+    /// event (`scale: 1.0`) also ends any earlier sag still in flight.
+    /// Keep sag windows disjoint when stacking several on one script —
+    /// overlapping windows replace each other, they do not compose.
+    ///
+    /// ```
+    /// use lime::adapt::{MemScenario, Script};
+    /// let joint = Script::from_mem(MemScenario::squeeze("sq", 0, 1024, 3))
+    ///     .with_bandwidth_sag(0.5, 3, 9)
+    ///     .with_label("joint-sag-squeeze");
+    /// assert_eq!(joint.label, "joint-sag-squeeze");
+    /// assert!(!joint.mem.is_empty() && !joint.bw.is_empty());
+    /// ```
+    pub fn with_bandwidth_sag(mut self, scale: f64, from_step: usize, to_step: usize) -> Self {
+        let sag = Script::bandwidth_sag("sag", scale, from_step, to_step);
+        self.bw.extend(sag.bw);
+        self.bw.sort_by_key(|e| e.at_step);
+        self
+    }
+
+    /// Rename the script (stable label used in sweep artifacts).
+    pub fn with_label(mut self, label: &str) -> Self {
+        self.label = label.into();
+        self
+    }
+
+    /// True when the script has no events on either channel.
+    pub fn is_none(&self) -> bool {
+        self.mem.is_empty() && self.bw.is_empty()
+    }
+
+    /// The joint timeline, sorted by step (memory before bandwidth within
+    /// a step) — the serialization/display order.
+    pub fn events(&self) -> Vec<ScriptEvent> {
+        let mut out: Vec<ScriptEvent> = self
+            .mem
+            .iter()
+            .map(|&e| ScriptEvent::Mem(e))
+            .chain(self.bw.iter().map(|&e| ScriptEvent::Bw(e)))
+            .collect();
+        out.sort_by_key(|e| (e.at_step(), matches!(e, ScriptEvent::Bw(_)) as u8));
+        out
+    }
+
+    /// `(at_step, scale)` points for
+    /// [`crate::net::BandwidthTrace::overlay_scales`].
+    pub fn bw_scale_points(&self) -> Vec<(usize, f64)> {
+        self.bw.iter().map(|e| (e.at_step, e.scale)).collect()
+    }
+
+    /// The memory channel as a [`MemScenario`] (label shared) — the shape
+    /// `lime-sweep-v3` serializes under the v2-compatible
+    /// `axes.mem_scenarios` key.
+    pub fn mem_scenario(&self) -> MemScenario {
+        MemScenario {
+            label: self.label.clone(),
+            events: self.mem.clone(),
+        }
+    }
+}
+
+impl From<MemScenario> for Script {
+    fn from(scenario: MemScenario) -> Self {
+        Script::from_mem(scenario)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_has_no_events() {
+        assert!(MemScenario::none().is_none());
+        assert_eq!(MemScenario::none().label, "none");
+        assert!(Script::none().is_none());
+        assert_eq!(Script::none().label, "none");
+    }
+
+    #[test]
+    fn dip_squeezes_then_releases() {
+        let s = MemScenario::dip("d", 1, 100, 3, 7);
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(s.events[0].delta_bytes, -100);
+        assert_eq!(s.events[1].delta_bytes, 100);
+        assert!(s.events[0].at_step < s.events[1].at_step);
+        assert!(!s.is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn dip_rejects_inverted_steps() {
+        MemScenario::dip("bad", 0, 1, 5, 5);
+    }
+
+    #[test]
+    fn squeeze_never_releases() {
+        let s = MemScenario::squeeze("s", 0, 64, 2);
+        assert_eq!(s.events.len(), 1);
+        assert!(s.events[0].delta_bytes < 0);
+    }
+
+    #[test]
+    fn correlated_dip_lags_neighbours_and_restores_everyone() {
+        let s = MemScenario::correlated_dip("c", &[0, 2, 3], 2, 100, 4, 10);
+        assert_eq!(s.events.len(), 6);
+        // Down events at 4/6/8, up events at 10/12/14, same device order.
+        let downs: Vec<(usize, usize)> = s
+            .events
+            .iter()
+            .filter(|e| e.delta_bytes < 0)
+            .map(|e| (e.device, e.at_step))
+            .collect();
+        assert_eq!(downs, vec![(0, 4), (2, 6), (3, 8)]);
+        // Net delta per device is zero.
+        for dev in [0, 2, 3] {
+            let net: i64 = s
+                .events
+                .iter()
+                .filter(|e| e.device == dev)
+                .map(|e| e.delta_bytes)
+                .sum();
+            assert_eq!(net, 0, "device {dev}");
+        }
+    }
+
+    #[test]
+    fn correlated_dip_with_zero_lag_is_simultaneous() {
+        let s = MemScenario::correlated_dip("c0", &[1, 3], 0, 50, 2, 5);
+        assert!(s.events.iter().filter(|e| e.delta_bytes < 0).all(|e| e.at_step == 2));
+        assert!(s.events.iter().filter(|e| e.delta_bytes > 0).all(|e| e.at_step == 5));
+    }
+
+    #[test]
+    fn staggered_squeeze_orders_by_position() {
+        let s = MemScenario::staggered_squeeze("r", &[5, 1, 2], 4, 64, 3);
+        let steps: Vec<usize> = s.events.iter().map(|e| e.at_step).collect();
+        assert_eq!(steps, vec![3, 7, 11]);
+        assert!(s.events.iter().all(|e| e.delta_bytes == -64));
+    }
+
+    #[test]
+    fn ramp_restores_exactly_including_remainder() {
+        let s = MemScenario::dip_with_ramp("r", 0, 100, 1, 4, 3);
+        // 100 / 3 = 33 + 33 + 34.
+        let incs: Vec<i64> = s.events[1..].iter().map(|e| e.delta_bytes).collect();
+        assert_eq!(incs, vec![33, 33, 34]);
+        assert_eq!(s.events.iter().map(|e| e.delta_bytes).sum::<i64>(), 0);
+        let steps: Vec<usize> = s.events[1..].iter().map(|e| e.at_step).collect();
+        assert_eq!(steps, vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn merged_sorts_and_keeps_all_events() {
+        let a = MemScenario::squeeze("a", 1, 10, 8);
+        let b = MemScenario::dip("b", 0, 5, 2, 6);
+        let m = MemScenario::merged("m", &[a, b]);
+        assert_eq!(m.events.len(), 3);
+        assert!(m.events.windows(2).all(|w| w[0].at_step <= w[1].at_step));
+    }
+
+    #[test]
+    fn bandwidth_sag_restores_scale() {
+        let s = Script::bandwidth_sag("sag", 0.25, 3, 9);
+        assert_eq!(s.bw_scale_points(), vec![(3, 0.25), (9, 1.0)]);
+        assert!(!s.is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn sag_rejects_nonpositive_scale() {
+        Script::bandwidth_sag("bad", 0.0, 1, 2);
+    }
+
+    #[test]
+    fn joint_timeline_interleaves_channels_in_step_order() {
+        let sq = Script::from_mem(MemScenario::squeeze("sq", 0, 10, 5));
+        let s = sq.with_bandwidth_sag(0.5, 3, 7);
+        let steps: Vec<usize> = s.events().iter().map(ScriptEvent::at_step).collect();
+        assert_eq!(steps, vec![3, 5, 7]);
+    }
+
+    #[test]
+    fn from_events_splits_channels() {
+        let restore = BwEvent { at_step: 6, scale: 1.0 };
+        let sag = BwEvent { at_step: 2, scale: 0.5 };
+        let squeeze = MemEvent {
+            at_step: 2,
+            device: 0,
+            delta_bytes: -8,
+        };
+        let s = Script::from_events(
+            "j",
+            vec![
+                ScriptEvent::Bw(restore),
+                ScriptEvent::Mem(squeeze),
+                ScriptEvent::Bw(sag),
+            ],
+        );
+        assert_eq!(s.mem.len(), 1);
+        assert_eq!(s.bw_scale_points(), vec![(2, 0.5), (6, 1.0)]);
+    }
+
+    #[test]
+    fn mem_scenario_projection_shares_label() {
+        let sq = Script::from_mem(MemScenario::squeeze("sq", 0, 10, 5));
+        let s = sq.with_bandwidth_sag(0.5, 1, 3);
+        let m = s.mem_scenario();
+        assert_eq!(m.label, "sq");
+        assert_eq!(m.events, s.mem);
+    }
+}

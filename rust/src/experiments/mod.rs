@@ -11,17 +11,20 @@
 //!
 //! The legacy (method × bandwidth × pattern) grid is the baseline slice of
 //! the composable [`scenario::ScenarioMatrix`], which adds cluster-size,
-//! `#Seg`-override and memory-fluctuation axes; the `--id sweep`
-//! experiment evaluates one matrix per cluster point and writes one
-//! `lime-sweep-v2` JSON each.
+//! `#Seg`-override and pressure (joint memory/bandwidth fluctuation
+//! script) axes; the `--id sweep` experiment evaluates one matrix per
+//! cluster point and writes one `lime-sweep-v3` JSON each. See
+//! `docs/ARCHITECTURE.md` for the module map and `docs/SWEEPS.md` for
+//! the artifact schemas.
 
 pub mod scenario;
 
 pub use scenario::{
-    validate_sweep_v2, ScenarioCell, ScenarioMatrix, SegChoice, SweepSummary,
+    validate_sweep, validate_sweep_v2, validate_sweep_v3, ScenarioCell, ScenarioMatrix,
+    SegChoice, SweepSummary,
 };
 
-use crate::adapt::MemScenario;
+use crate::adapt::{MemScenario, Script};
 use crate::baselines::{all, by_name, Method};
 use crate::cluster::{Cluster, DeviceSpec};
 use crate::model::ModelSpec;
@@ -447,17 +450,33 @@ pub fn tab5(tokens: usize) -> Vec<(String, Option<f64>, Option<f64>)> {
 
 // ------------------------------------------------------- full-grid sweep
 
-/// The memory-fluctuation axis the lowmem sweep grids run: a transient
-/// dip and a persistent squeeze on device 0 (the Orin-64 — the planner's
-/// usual `d_target`, so pressure there forces real re-planning). Event
-/// steps scale with the simulated horizon; events past the horizon simply
-/// never fire (tiny CI runs stay valid).
-fn lowmem_mem_axis(tokens: usize) -> Vec<MemScenario> {
+/// The pressure axis the lowmem sweep grids run. Single-device shapes
+/// target device 0 (the Orin-64 — the planner's usual `d_target`, so
+/// pressure there forces real re-planning); the multi-device shapes are
+/// the paper's edge regime: a correlated thermal dip hitting devices 0–1
+/// with a propagation lag, and a joint scenario where the link sags to
+/// half capacity *while* device 0 is squeezed. Event steps scale with the
+/// simulated horizon; events past the horizon simply never fire (tiny CI
+/// runs stay valid).
+fn lowmem_pressure_axis(tokens: usize) -> Vec<Script> {
     let down = tokens / 3;
+    let up = (2 * tokens / 3).max(down + 1);
+    let lag = (tokens / 6).max(1);
     vec![
-        MemScenario::none(),
-        MemScenario::dip("dip-d0", 0, gib(4.0), down, (2 * tokens / 3).max(down + 1)),
-        MemScenario::squeeze("squeeze-d0", 0, gib(6.0), tokens / 4),
+        Script::none(),
+        Script::from_mem(MemScenario::dip("dip-d0", 0, gib(4.0), down, up)),
+        Script::from_mem(MemScenario::squeeze("squeeze-d0", 0, gib(6.0), tokens / 4)),
+        Script::from_mem(MemScenario::correlated_dip(
+            "corr-dip-d01",
+            &[0, 1],
+            lag,
+            gib(4.0),
+            down,
+            up,
+        )),
+        Script::from_mem(MemScenario::squeeze("sq", 0, gib(6.0), tokens / 4))
+            .with_bandwidth_sag(0.5, tokens / 4, (3 * tokens / 4).max(tokens / 4 + 1))
+            .with_label("joint-sag-squeeze-d0"),
     ]
 }
 
@@ -465,7 +484,9 @@ fn lowmem_mem_axis(tokens: usize) -> Vec<MemScenario> {
 /// memory settings (Figs 15–17, Llama3.3-70B) across the full bandwidth
 /// axis, plus cluster-size points — 2/3/4-device subsets of the
 /// heterogeneous E3 Jetson cluster (Qwen3-32B, the E2-scale model) — all
-/// with `#Seg`-override and memory-fluctuation axes on the LIME family.
+/// with `#Seg`-override and pressure-script axes (correlated multi-device
+/// dips and joint bandwidth+memory scenarios included) on the LIME
+/// family.
 fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMatrix<'_>> {
     let mut out = Vec::new();
     let spec70 = ModelSpec::llama33_70b();
@@ -486,7 +507,7 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
                 tokens,
             )
             .with_segs(vec![SegChoice::Auto, SegChoice::Fixed(4), SegChoice::Fixed(8)])
-            .with_mem_scenarios(lowmem_mem_axis(tokens)),
+            .with_pressure(lowmem_pressure_axis(tokens)),
         );
     }
 
@@ -499,13 +520,15 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
     ];
     for (label, idxs) in edges {
         let cluster = e3.subset(&idxs);
-        let dip = MemScenario::dip(
-            "dip-d0",
-            0,
-            gib(4.0),
-            tokens / 3,
-            (2 * tokens / 3).max(tokens / 3 + 1),
-        );
+        let down = tokens / 3;
+        let up = (2 * tokens / 3).max(down + 1);
+        let dip = MemScenario::dip("dip-d0", 0, gib(4.0), down, up);
+        // A correlated thermal dip across *every* device of the subset —
+        // the EdgeShard-style co-located deployment where one cabinet
+        // event throttles all neighbours, each lagging the previous by a
+        // step.
+        let all_devices: Vec<usize> = (0..cluster.len()).collect();
+        let corr = MemScenario::correlated_dip("corr-dip-all", &all_devices, 1, gib(2.0), down, up);
         out.push(
             ScenarioMatrix::new(
                 label,
@@ -517,7 +540,11 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
                 tokens,
             )
             .with_segs(vec![SegChoice::Auto, SegChoice::Fixed(3), SegChoice::Fixed(6)])
-            .with_mem_scenarios(vec![MemScenario::none(), dip]),
+            .with_pressure(vec![
+                Script::none(),
+                Script::from_mem(dip),
+                Script::from_mem(corr),
+            ]),
         );
     }
     out
@@ -525,12 +552,13 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
 
 /// The `--id sweep` experiment: evaluate every scenario matrix —
 /// extremely-low-memory settings plus cluster-size points, each crossing
-/// bandwidth × pattern × method with `#Seg`-override and
-/// memory-fluctuation axes on the LIME family — on the work-stealing
-/// pool, and emit **one machine-readable JSON per grid** (schema
-/// `lime-sweep-v2`, validated by `lime sweep-check`) into `out_dir`.
-/// Returns the paths written; any I/O failure is an error (the CLI exits
-/// non-zero), never a silently missing artifact.
+/// bandwidth × pattern × method with `#Seg`-override and pressure-script
+/// axes (correlated multi-device dips, joint bandwidth+memory scenarios)
+/// on the LIME family — on the work-stealing pool, and emit **one
+/// machine-readable JSON per grid** (schema `lime-sweep-v3`, validated by
+/// `lime sweep-check`) into `out_dir`. Returns the paths written; any I/O
+/// failure is an error (the CLI exits non-zero), never a silently missing
+/// artifact.
 pub fn sweep(tokens: usize, out_dir: &str) -> anyhow::Result<Vec<std::path::PathBuf>> {
     use anyhow::Context;
     std::fs::create_dir_all(out_dir)
@@ -539,7 +567,7 @@ pub fn sweep(tokens: usize, out_dir: &str) -> anyhow::Result<Vec<std::path::Path
     let matrices = sweep_matrices(&methods, tokens);
     let mut written = Vec::new();
     println!(
-        "\n== sweep: {} grids × (bandwidth × pattern × {} methods, + #Seg/memory axes on LIME) ==",
+        "\n== sweep: {} grids × (bandwidth × pattern × {} methods, + #Seg/pressure axes on LIME) ==",
         matrices.len(),
         methods.len()
     );
@@ -652,7 +680,7 @@ mod tests {
     }
 
     #[test]
-    fn sweep_emits_one_valid_v2_json_per_grid() {
+    fn sweep_emits_one_valid_v3_json_per_grid() {
         use crate::util::json::Json;
         let dir = std::env::temp_dir().join(format!("lime_sweep_{}", std::process::id()));
         let out = dir.to_str().unwrap().to_string();
@@ -661,12 +689,13 @@ mod tests {
         for path in &written {
             let src = std::fs::read_to_string(path).unwrap();
             let json = Json::parse(src.trim()).unwrap();
-            let summary = validate_sweep_v2(&json)
+            let summary = validate_sweep(&json)
                 .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            assert_eq!(summary.schema, "lime-sweep-v3");
             let lowmem = summary.grid.starts_with("lowmem");
-            // lowmem: 1 LIME × 5bw × 2pat × 3seg × 3mem + 6 baselines × 10.
-            // edge:   1 LIME × 2bw × 2pat × 3seg × 2mem + 6 baselines × 4.
-            assert_eq!(summary.cells, if lowmem { 150 } else { 48 }, "{}", summary.grid);
+            // lowmem: 1 LIME × 5bw × 2pat × 3seg × 5scripts + 6 baselines × 10.
+            // edge:   1 LIME × 2bw × 2pat × 3seg × 3scripts + 6 baselines × 4.
+            assert_eq!(summary.cells, if lowmem { 210 } else { 60 }, "{}", summary.grid);
             assert_eq!(summary.completed + summary.oom, summary.cells);
             for cell in json.get("cells").unwrap().as_arr().unwrap() {
                 let key = cell.get("method").unwrap().as_str().unwrap();
@@ -687,18 +716,38 @@ mod tests {
     #[test]
     fn sweep_covers_the_new_axes() {
         // The acceptance shape: cluster-size points at 2/3/4 devices, and
-        // #Seg-override / memory-fluctuation coordinates present in the
-        // evaluated cells.
+        // #Seg-override / correlated multi-device / joint bandwidth+memory
+        // coordinates present in the evaluated cells.
         let methods = all();
         let matrices = sweep_matrices(&methods, 3);
         let sizes: std::collections::BTreeSet<usize> =
             matrices.iter().map(|m| m.cluster.len()).collect();
         assert!(sizes.contains(&2) && sizes.contains(&3) && sizes.contains(&4));
         let lowmem1 = &matrices[0];
-        assert!(lowmem1.segs.len() == 3 && lowmem1.mem_scenarios.len() == 3);
+        assert!(lowmem1.segs.len() == 3 && lowmem1.pressure.len() == 5);
+        // The correlated script really hits more than one device; the
+        // joint script really carries both channels.
+        let corr = &lowmem1.pressure[3];
+        let devices: std::collections::BTreeSet<usize> =
+            corr.mem.iter().map(|e| e.device).collect();
+        assert!(devices.len() >= 2, "correlated dip must span devices");
+        let joint = &lowmem1.pressure[4];
+        assert!(!joint.mem.is_empty() && !joint.bw.is_empty());
         let cells = lowmem1.eval();
         assert!(cells.iter().any(|c| matches!(c.seg, SegChoice::Fixed(_))));
         assert!(cells.iter().any(|c| c.mem == "squeeze-d0"));
+        assert!(cells.iter().any(|c| c.mem == "corr-dip-d01"));
+        assert!(cells.iter().any(|c| c.mem == "joint-sag-squeeze-d0"));
+        // Every edge matrix carries its whole-subset correlated dip.
+        for m in &matrices[3..] {
+            let corr = &m.pressure[2];
+            assert_eq!(
+                corr.mem.iter().map(|e| e.device).collect::<std::collections::BTreeSet<_>>().len(),
+                m.cluster.len(),
+                "{}: correlated dip must span the whole subset",
+                m.grid
+            );
+        }
     }
 
     #[test]

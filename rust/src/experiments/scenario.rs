@@ -10,9 +10,11 @@
 //!   [`plan_with_segs`], which shares one `SegSweepCtx` across every
 //!   explicit candidate of a planning point; [`SegChoice::Auto`] is the
 //!   scheduler's own Alg. 1 pick.
-//! * **memory-fluctuation** — scripted [`MemScenario`] pressure events
-//!   driven through `adapt::OnlinePlanner::apply_pressure` and the KV
-//!   transfer protocol mid-simulation
+//! * **pressure** — scripted fluctuation [`Script`]s: single- and
+//!   multi-device memory events (correlated thermal dips with lag,
+//!   staggered squeezes, recovery ramps) *and* bandwidth capacity events,
+//!   driven jointly through `adapt::OnlinePlanner::apply_pressure`, the
+//!   KV-transfer protocol, and the link model mid-simulation
 //!   ([`crate::pipeline::run_interleaved_scripted`]), so the §IV-D online
 //!   adaptation machinery shows up in sweep outputs.
 //!
@@ -26,13 +28,16 @@
 //! work-stealing pool with results written by index —
 //! [`ScenarioMatrix::eval`] is bit-identical to
 //! [`ScenarioMatrix::eval_sequential`] at any worker count (pinned in
-//! `rust/tests/pool.rs`). Artifacts serialize as
-//! schema `lime-sweep-v2`, a superset of `lime-sweep-v1` (every v1 key is
-//! still present with the same meaning) plus axis metadata and per-cell
-//! adaptation counters; [`validate_sweep_v2`] is the machine check behind
-//! `lime sweep-check` and the CI artifact gate.
+//! `rust/tests/pool.rs`). Artifacts serialize as schema `lime-sweep-v3`,
+//! a strict superset of `lime-sweep-v2` (every v2 key is still present
+//! with the same meaning — pressure scripts project onto the v2
+//! `axes.mem_scenarios` shape) plus full script metadata
+//! (`axes.pressure_scripts`) and a per-cell bandwidth-stall counter
+//! (`bw_stalls`); [`validate_sweep`] accepts both versions and is the
+//! machine check behind `lime sweep-check` and the CI artifact gate. See
+//! `docs/SWEEPS.md` for the full schema reference.
 
-use crate::adapt::MemScenario;
+use crate::adapt::{MemScenario, Script};
 use crate::baselines::{by_name, plan_opts, Method};
 use crate::cluster::Cluster;
 use crate::model::ModelSpec;
@@ -73,7 +78,7 @@ pub struct ScenarioCell {
     pub bandwidth_mbps: f64,
     pub pattern: Pattern,
     pub seg: SegChoice,
-    /// Label of the [`MemScenario`] this cell ran under.
+    /// Label of the pressure [`Script`] this cell ran under.
     pub mem: String,
     /// `#Seg` of the allocation actually executed (None for baseline
     /// methods and OOM cells).
@@ -83,6 +88,9 @@ pub struct ScenarioCell {
     pub online_plans_fired: Option<usize>,
     pub kv_tokens_transferred: Option<u64>,
     pub emergency_steps: Option<usize>,
+    /// Link acquisitions that waited on the busy shared medium — inflated
+    /// by scripted bandwidth sags.
+    pub bw_stalls: Option<u64>,
 }
 
 impl ScenarioCell {
@@ -102,10 +110,12 @@ pub(crate) fn pattern_str(p: Pattern) -> &'static str {
 /// evaluation/serialization):
 ///
 /// * every axis is non-empty;
-/// * `segs[0] == SegChoice::Auto` and `mem_scenarios[0]` has no events —
-///   the baseline point non-adaptive methods are measured at;
-/// * fixed seg values are ≥ 2 and unique; scenario labels are unique;
-/// * pressure events address devices inside the cluster.
+/// * `segs[0] == SegChoice::Auto` and `pressure[0]` has no events on
+///   either channel — the baseline point non-adaptive methods are
+///   measured at;
+/// * fixed seg values are ≥ 2 and unique; script labels are unique;
+/// * memory events address devices inside the cluster; bandwidth scales
+///   are finite and positive.
 pub struct ScenarioMatrix<'a> {
     /// Grid label — names the JSON artifact (`SWEEP_<grid>.json`).
     pub grid: String,
@@ -115,7 +125,8 @@ pub struct ScenarioMatrix<'a> {
     pub bandwidths_mbps: Vec<f64>,
     pub patterns: Vec<Pattern>,
     pub segs: Vec<SegChoice>,
-    pub mem_scenarios: Vec<MemScenario>,
+    /// The pressure axis: joint memory/bandwidth fluctuation scripts.
+    pub pressure: Vec<Script>,
     pub tokens: usize,
 }
 
@@ -156,7 +167,7 @@ impl<'a> ScenarioMatrix<'a> {
             bandwidths_mbps,
             patterns,
             segs: vec![SegChoice::Auto],
-            mem_scenarios: vec![MemScenario::none()],
+            pressure: vec![Script::none()],
             tokens,
         }
     }
@@ -168,10 +179,18 @@ impl<'a> ScenarioMatrix<'a> {
         self
     }
 
-    /// Replace the memory-fluctuation axis (must start with a no-event
-    /// scenario).
-    pub fn with_mem_scenarios(mut self, mems: Vec<MemScenario>) -> Self {
-        self.mem_scenarios = mems;
+    /// Replace the pressure axis with memory-only scenarios (must start
+    /// with a no-event scenario). Convenience wrapper over
+    /// [`ScenarioMatrix::with_pressure`] for callers that never script
+    /// the bandwidth channel.
+    pub fn with_mem_scenarios(self, mems: Vec<MemScenario>) -> Self {
+        self.with_pressure(mems.into_iter().map(Script::from).collect())
+    }
+
+    /// Replace the pressure axis (must start with a script that has no
+    /// events on either channel).
+    pub fn with_pressure(mut self, scripts: Vec<Script>) -> Self {
+        self.pressure = scripts;
         self.assert_valid();
         self
     }
@@ -192,19 +211,31 @@ impl<'a> ScenarioMatrix<'a> {
             }
         }
         assert!(
-            self.mem_scenarios.first().is_some_and(MemScenario::is_none),
-            "mem_scenarios[0] must have no events (the baseline point)"
+            self.pressure.first().is_some_and(Script::is_none),
+            "pressure[0] must have no events (the baseline point)"
         );
         let mut labels = std::collections::BTreeSet::new();
-        for m in &self.mem_scenarios {
-            assert!(labels.insert(m.label.as_str()), "duplicate scenario '{}'", m.label);
-            for ev in &m.events {
+        for script in &self.pressure {
+            assert!(
+                labels.insert(script.label.as_str()),
+                "duplicate scenario '{}'",
+                script.label
+            );
+            for ev in &script.mem {
                 assert!(
                     ev.device < self.cluster.len(),
                     "scenario '{}' addresses device {} of a {}-device cluster",
-                    m.label,
+                    script.label,
                     ev.device,
                     self.cluster.len()
+                );
+            }
+            for ev in &script.bw {
+                assert!(
+                    ev.scale.is_finite() && ev.scale > 0.0,
+                    "scenario '{}' has non-positive bandwidth scale {}",
+                    script.label,
+                    ev.scale
                 );
             }
         }
@@ -212,7 +243,7 @@ impl<'a> ScenarioMatrix<'a> {
 
     /// Cell coordinates in deterministic (index) order: methods outermost,
     /// then bandwidths, patterns, and — for adaptive methods only — the
-    /// seg and memory axes. With singleton override axes this is exactly
+    /// seg and pressure axes. With singleton override axes this is exactly
     /// the legacy grid's job order.
     fn points(&self) -> Vec<PointRef> {
         let mut pts = Vec::new();
@@ -222,7 +253,7 @@ impl<'a> ScenarioMatrix<'a> {
                 for pi in 0..self.patterns.len() {
                     if adaptive {
                         for si in 0..self.segs.len() {
-                            for mj in 0..self.mem_scenarios.len() {
+                            for mj in 0..self.pressure.len() {
                                 pts.push(PointRef { mi, bi, pi, si, mj });
                             }
                         }
@@ -243,7 +274,7 @@ impl<'a> ScenarioMatrix<'a> {
             .filter(|m| m.adaptive_exec().is_some())
             .count();
         let base = self.bandwidths_mbps.len() * self.patterns.len();
-        adaptive * base * self.segs.len() * self.mem_scenarios.len()
+        adaptive * base * self.segs.len() * self.pressure.len()
             + (self.methods.len() - adaptive) * base
     }
 
@@ -323,12 +354,13 @@ impl<'a> ScenarioMatrix<'a> {
                 bandwidth_mbps: bw,
                 pattern,
                 seg: self.segs[p.si],
-                mem: self.mem_scenarios[p.mj].label.clone(),
+                mem: self.pressure[p.mj].label.clone(),
                 planned_seg: None,
                 ms_per_token: None,
                 online_plans_fired: None,
                 kv_tokens_transferred: None,
                 emergency_steps: None,
+                bw_stalls: None,
             };
             match method.adaptive_exec() {
                 None => {
@@ -345,6 +377,7 @@ impl<'a> ScenarioMatrix<'a> {
                         cell.online_plans_fired = Some(r.online_plans_fired);
                         cell.kv_tokens_transferred = Some(r.kv_tokens_transferred);
                         cell.emergency_steps = Some(r.emergency_steps);
+                        cell.bw_stalls = Some(r.bw_stalls);
                     }
                 }
                 Some(cfg) => {
@@ -367,13 +400,14 @@ impl<'a> ScenarioMatrix<'a> {
                             pattern.micro_batches(&self.cluster),
                             self.tokens,
                             &exec,
-                            &self.mem_scenarios[p.mj].events,
+                            &self.pressure[p.mj],
                         );
                         cell.planned_seg = Some(alloc.seg);
                         cell.ms_per_token = Some(r.ms_per_token());
                         cell.online_plans_fired = Some(r.online_plans_fired);
                         cell.kv_tokens_transferred = Some(r.kv_tokens_transferred);
                         cell.emergency_steps = Some(r.emergency_steps);
+                        cell.bw_stalls = Some(r.bw_stalls);
                     }
                 }
             }
@@ -386,8 +420,11 @@ impl<'a> ScenarioMatrix<'a> {
         }
     }
 
-    /// Serialize evaluated cells as a `lime-sweep-v2` artifact (superset
-    /// of `lime-sweep-v1`: every v1 key is present with its v1 meaning).
+    /// Serialize evaluated cells as a `lime-sweep-v3` artifact — a strict
+    /// superset of `lime-sweep-v2`: every v2 key is present with its v2
+    /// meaning (`axes.mem_scenarios` carries each script's memory
+    /// channel), plus `axes.pressure_scripts` (full joint-script
+    /// metadata) and the per-cell `bw_stalls` counter.
     pub fn to_json(&self, cells: &[ScenarioCell]) -> Json {
         self.assert_valid();
         let cell_rows: Vec<Json> = cells
@@ -422,27 +459,53 @@ impl<'a> ScenarioMatrix<'a> {
                         "emergency_steps",
                         c.emergency_steps.map_or(Json::Null, Into::into),
                     ),
+                    ("bw_stalls", c.bw_stalls.map_or(Json::Null, Into::into)),
                 ])
             })
             .collect();
+        let mem_events_json = |script: &Script| -> Vec<Json> {
+            script
+                .mem
+                .iter()
+                .map(|ev| {
+                    obj(&[
+                        ("at_step", ev.at_step.into()),
+                        ("device", ev.device.into()),
+                        ("delta_bytes", Json::Num(ev.delta_bytes as f64)),
+                    ])
+                })
+                .collect()
+        };
+        // The v2-compatible projection: label + memory channel only.
         let mem_rows: Vec<Json> = self
-            .mem_scenarios
+            .pressure
             .iter()
-            .map(|m| {
-                let events: Vec<Json> = m
-                    .events
+            .map(|script| {
+                obj(&[
+                    ("label", script.label.as_str().into()),
+                    ("events", Json::Arr(mem_events_json(script))),
+                ])
+            })
+            .collect();
+        // The full joint-script metadata (v3 addition).
+        let script_rows: Vec<Json> = self
+            .pressure
+            .iter()
+            .map(|script| {
+                let bw_events: Vec<Json> = script
+                    .bw
                     .iter()
                     .map(|ev| {
                         obj(&[
                             ("at_step", ev.at_step.into()),
-                            ("device", ev.device.into()),
-                            ("delta_bytes", Json::Num(ev.delta_bytes as f64)),
+                            ("scale", Json::Num(ev.scale)),
                         ])
                     })
                     .collect();
                 obj(&[
-                    ("label", m.label.as_str().into()),
-                    ("events", Json::Arr(events)),
+                    ("label", script.label.as_str().into()),
+                    ("mem_events", Json::Arr(mem_events_json(script))),
+                    ("bw_events", Json::Arr(bw_events)),
                 ])
             })
             .collect();
@@ -485,9 +548,10 @@ impl<'a> ScenarioMatrix<'a> {
                 Json::Arr(self.segs.iter().map(SegChoice::json).collect()),
             ),
             ("mem_scenarios", Json::Arr(mem_rows)),
+            ("pressure_scripts", Json::Arr(script_rows)),
         ]);
         obj(&[
-            ("schema", "lime-sweep-v2".into()),
+            ("schema", "lime-sweep-v3".into()),
             ("grid", self.grid.as_str().into()),
             ("model", self.spec.name.as_str().into()),
             ("tokens", self.tokens.into()),
@@ -501,11 +565,14 @@ impl<'a> ScenarioMatrix<'a> {
     }
 }
 
-/// Summary returned by a successful [`validate_sweep_v2`] pass.
+/// Summary returned by a successful [`validate_sweep`] pass.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepSummary {
     pub grid: String,
     pub model: String,
+    /// The schema version the artifact validated against ("lime-sweep-v2"
+    /// or "lime-sweep-v3").
+    pub schema: String,
     pub cells: usize,
     pub completed: usize,
     pub oom: usize,
@@ -517,16 +584,60 @@ fn field<'j>(json: &'j Json, key: &str, ctx: &str) -> Result<&'j Json, String> {
         .ok_or_else(|| format!("{ctx}: missing '{key}'"))
 }
 
-/// Validate one artifact against the `lime-sweep-v2` schema: structural
-/// keys, axis metadata, per-cell coordinate membership, `Method::key`
-/// round-trips, OOM/metric consistency, cell uniqueness, and the exact
-/// per-method cell counts the matrix cross implies. This is the check
-/// behind `lime sweep-check` and the CI artifact gate.
+/// Which sweep-artifact schema a validation pass enforces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SweepSchema {
+    V2,
+    V3,
+}
+
+impl SweepSchema {
+    fn name(self) -> &'static str {
+        match self {
+            SweepSchema::V2 => "lime-sweep-v2",
+            SweepSchema::V3 => "lime-sweep-v3",
+        }
+    }
+}
+
+/// Validate one artifact against whichever supported schema it declares
+/// (`lime-sweep-v2` or `lime-sweep-v3`) — the check behind
+/// `lime sweep-check` and the CI artifact gate.
+pub fn validate_sweep(json: &Json) -> Result<SweepSummary, String> {
+    match json.get("schema").and_then(Json::as_str) {
+        Some("lime-sweep-v2") => validate_sweep_impl(json, SweepSchema::V2),
+        Some("lime-sweep-v3") => validate_sweep_impl(json, SweepSchema::V3),
+        other => Err(format!(
+            "expected schema lime-sweep-v2 or lime-sweep-v3, got {other:?}"
+        )),
+    }
+}
+
+/// Validate one artifact strictly against the `lime-sweep-v2` schema
+/// (artifacts produced before the pressure axis existed).
 pub fn validate_sweep_v2(json: &Json) -> Result<SweepSummary, String> {
     match json.get("schema").and_then(Json::as_str) {
-        Some("lime-sweep-v2") => {}
-        other => return Err(format!("expected schema lime-sweep-v2, got {other:?}")),
+        Some("lime-sweep-v2") => validate_sweep_impl(json, SweepSchema::V2),
+        other => Err(format!("expected schema lime-sweep-v2, got {other:?}")),
     }
+}
+
+/// Validate one artifact strictly against the `lime-sweep-v3` schema.
+pub fn validate_sweep_v3(json: &Json) -> Result<SweepSummary, String> {
+    match json.get("schema").and_then(Json::as_str) {
+        Some("lime-sweep-v3") => validate_sweep_impl(json, SweepSchema::V3),
+        other => Err(format!("expected schema lime-sweep-v3, got {other:?}")),
+    }
+}
+
+/// The shared validation core: structural keys, axis metadata, per-cell
+/// coordinate membership, `Method::key` round-trips, OOM/metric
+/// consistency, cell uniqueness, and the exact per-method cell counts the
+/// matrix cross implies. V3 additionally requires `axes.pressure_scripts`
+/// (labels aligned with `axes.mem_scenarios`, baseline script empty on
+/// both channels, positive bandwidth scales) and the per-cell `bw_stalls`
+/// counter.
+fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary, String> {
     let grid = field(json, "grid", "artifact")?
         .as_str()
         .ok_or("'grid' must be a string")?
@@ -584,6 +695,16 @@ pub fn validate_sweep_v2(json: &Json) -> Result<SweepSummary, String> {
     if seg_labels.first().map(String::as_str) != Some("auto") {
         return Err("axes.segs[0] must be \"auto\" (the baseline point)".into());
     }
+    // Field-level check of one memory-event object, shared by the v2
+    // `mem_scenarios` axis and the v3 `pressure_scripts` metadata.
+    let check_mem_event = |ev: &Json, ctx: &str| -> Result<(), String> {
+        for k in ["at_step", "device", "delta_bytes"] {
+            if ev.get(k).and_then(Json::as_f64).is_none() {
+                return Err(format!("{ctx}.{k} must be a number"));
+            }
+        }
+        Ok(())
+    };
     let mem_axis = field(axes, "mem_scenarios", "axes")?
         .as_arr()
         .ok_or("axes.mem_scenarios must be an array")?;
@@ -596,18 +717,90 @@ pub fn validate_sweep_v2(json: &Json) -> Result<SweepSummary, String> {
             .as_arr()
             .ok_or_else(|| format!("axes.mem_scenarios[{i}].events must be an array"))?;
         for (j, ev) in events.iter().enumerate() {
-            for k in ["at_step", "device", "delta_bytes"] {
-                if ev.get(k).and_then(Json::as_f64).is_none() {
-                    return Err(format!(
-                        "axes.mem_scenarios[{i}].events[{j}].{k} must be a number"
-                    ));
-                }
-            }
+            check_mem_event(ev, &format!("axes.mem_scenarios[{i}].events[{j}]"))?;
         }
         if i == 0 && !events.is_empty() {
             return Err("axes.mem_scenarios[0] must have no events (the baseline point)".into());
         }
         mem_labels.push(label.to_string());
+    }
+
+    // V3: the full joint-script axis must exist and align with the v2
+    // projection label-for-label.
+    if schema == SweepSchema::V3 {
+        let scripts = field(axes, "pressure_scripts", "axes")?
+            .as_arr()
+            .ok_or("axes.pressure_scripts must be an array")?;
+        if scripts.len() != mem_labels.len() {
+            return Err(format!(
+                "axes.pressure_scripts has {} entries but axes.mem_scenarios has {}",
+                scripts.len(),
+                mem_labels.len()
+            ));
+        }
+        for (i, script) in scripts.iter().enumerate() {
+            let ctx = format!("axes.pressure_scripts[{i}]");
+            let label = field(script, "label", &ctx)?
+                .as_str()
+                .ok_or_else(|| format!("{ctx}.label must be a string"))?;
+            if label != mem_labels[i] {
+                return Err(format!(
+                    "{ctx}.label '{label}' does not match axes.mem_scenarios[{i}] '{}'",
+                    mem_labels[i]
+                ));
+            }
+            let mem_events = field(script, "mem_events", &ctx)?
+                .as_arr()
+                .ok_or_else(|| format!("{ctx}.mem_events must be an array"))?;
+            let bw_events = field(script, "bw_events", &ctx)?
+                .as_arr()
+                .ok_or_else(|| format!("{ctx}.bw_events must be an array"))?;
+            if i == 0 && (!mem_events.is_empty() || !bw_events.is_empty()) {
+                return Err(
+                    "axes.pressure_scripts[0] must have no events (the baseline point)".into(),
+                );
+            }
+            // The script's memory channel must BE the v2 projection: same
+            // events, field for field — otherwise a consumer reading the
+            // full metadata replays a script that never ran.
+            let projection = mem_axis[i]
+                .get("events")
+                .and_then(Json::as_arr)
+                .expect("checked above");
+            if mem_events.len() != projection.len() {
+                return Err(format!(
+                    "{ctx}.mem_events has {} entries but axes.mem_scenarios[{i}].events has {}",
+                    mem_events.len(),
+                    projection.len()
+                ));
+            }
+            for (j, (ev, proj)) in mem_events.iter().zip(projection).enumerate() {
+                check_mem_event(ev, &format!("{ctx}.mem_events[{j}]"))?;
+                for k in ["at_step", "device", "delta_bytes"] {
+                    if ev.get(k).and_then(Json::as_f64) != proj.get(k).and_then(Json::as_f64) {
+                        return Err(format!(
+                            "{ctx}.mem_events[{j}].{k} disagrees with the \
+                             axes.mem_scenarios[{i}] projection"
+                        ));
+                    }
+                }
+            }
+            for (j, ev) in bw_events.iter().enumerate() {
+                if ev.get("at_step").and_then(Json::as_usize).is_none() {
+                    return Err(format!(
+                        "{ctx}.bw_events[{j}].at_step must be a non-negative integer"
+                    ));
+                }
+                match ev.get("scale").and_then(Json::as_f64) {
+                    Some(s) if s.is_finite() && s > 0.0 => {}
+                    _ => {
+                        return Err(format!(
+                            "{ctx}.bw_events[{j}].scale must be a finite number > 0"
+                        ))
+                    }
+                }
+            }
+        }
     }
 
     let cells = field(json, "cells", "artifact")?
@@ -678,7 +871,16 @@ pub fn validate_sweep_v2(json: &Json) -> Result<SweepSummary, String> {
         if is_oom && is_oot {
             return Err(format!("{ctx}: a cell cannot be both OOM and OOT"));
         }
-        for counter in ["online_plans_fired", "kv_tokens_transferred", "emergency_steps"] {
+        let counters: &[&str] = match schema {
+            SweepSchema::V2 => &["online_plans_fired", "kv_tokens_transferred", "emergency_steps"],
+            SweepSchema::V3 => &[
+                "online_plans_fired",
+                "kv_tokens_transferred",
+                "emergency_steps",
+                "bw_stalls",
+            ],
+        };
+        for counter in counters {
             let v = field(cell, counter, &ctx)?;
             match (is_oom, v.as_u64()) {
                 (true, _) if v == &Json::Null => {}
@@ -720,6 +922,7 @@ pub fn validate_sweep_v2(json: &Json) -> Result<SweepSummary, String> {
     Ok(SweepSummary {
         grid,
         model,
+        schema: schema.name().to_string(),
         cells: cells.len(),
         completed,
         oom,
@@ -749,6 +952,37 @@ mod tests {
         ])
     }
 
+    fn joint_matrix(methods: &[Box<dyn Method>]) -> ScenarioMatrix<'_> {
+        ScenarioMatrix::new(
+            "e1-joint",
+            ModelSpec::llama2_13b(),
+            Cluster::env_e1(),
+            methods,
+            vec![100.0, 200.0],
+            vec![Pattern::Sporadic, Pattern::Bursty],
+            4,
+        )
+        .with_pressure(vec![
+            Script::none(),
+            Script::from_mem(MemScenario::correlated_dip(
+                "corr-dip",
+                &[0, 1],
+                1,
+                crate::util::bytes::gib(2.0),
+                1,
+                3,
+            )),
+            Script::from_mem(MemScenario::squeeze(
+                "sq",
+                0,
+                crate::util::bytes::gib(2.0),
+                1,
+            ))
+            .with_bandwidth_sag(0.5, 1, 3)
+            .with_label("joint-sag-squeeze"),
+        ])
+    }
+
     #[test]
     fn cell_count_expands_only_adaptive_methods() {
         let methods = all();
@@ -770,7 +1004,7 @@ mod tests {
     }
 
     #[test]
-    fn eval_emits_valid_v2_artifact() {
+    fn eval_emits_valid_v3_artifact() {
         let methods = all();
         let m = tiny_matrix(&methods);
         let cells = m.eval();
@@ -778,18 +1012,85 @@ mod tests {
         let json = m.to_json(&cells);
         // Round-trip through the writer/parser, then validate.
         let parsed = Json::parse(&json.to_string()).unwrap();
-        let summary = validate_sweep_v2(&parsed).expect("artifact validates");
+        let summary = validate_sweep(&parsed).expect("artifact validates");
         assert_eq!(summary.grid, "e1-test");
+        assert_eq!(summary.schema, "lime-sweep-v3");
         assert_eq!(summary.cells, m.cell_count());
         assert_eq!(summary.completed + summary.oom, summary.cells);
+        // The dispatcher and the strict v3 validator agree; the strict v2
+        // validator rejects a v3 artifact.
+        assert!(validate_sweep_v3(&parsed).is_ok());
+        assert!(validate_sweep_v2(&parsed).is_err());
         // LIME completes on E1 at every override point.
         for c in cells.iter().filter(|c| c.method_key == "lime") {
             assert!(c.ms_per_token.is_some(), "{c:?}");
             assert!(c.planned_seg.is_some());
+            assert!(c.bw_stalls.is_some());
             if let SegChoice::Fixed(k) = c.seg {
                 assert_eq!(c.planned_seg, Some(k), "fixed seg must be honored");
             }
         }
+    }
+
+    #[test]
+    fn joint_scripts_evaluate_and_serialize() {
+        let methods = all();
+        let m = joint_matrix(&methods);
+        let cells = m.eval();
+        assert_eq!(cells.len(), m.cell_count());
+        // Correlated and joint cells exist and completed for LIME.
+        for label in ["corr-dip", "joint-sag-squeeze"] {
+            let cell = cells
+                .iter()
+                .find(|c| c.method_key == "lime" && c.mem == label)
+                .unwrap_or_else(|| panic!("no lime cell for '{label}'"));
+            assert!(cell.ms_per_token.is_some(), "{label}: {cell:?}");
+            assert!(cell.bw_stalls.is_some());
+        }
+        let parsed = Json::parse(&m.to_json(&cells).to_string()).unwrap();
+        let summary = validate_sweep(&parsed).expect("joint artifact validates");
+        assert_eq!(summary.cells, m.cell_count());
+        // Full script metadata survives serialization.
+        let scripts = parsed
+            .path(&["axes", "pressure_scripts"])
+            .and_then(Json::as_arr)
+            .expect("pressure_scripts axis");
+        assert_eq!(scripts.len(), 3);
+        let joint = &scripts[2];
+        assert_eq!(
+            joint.get("label").and_then(Json::as_str),
+            Some("joint-sag-squeeze")
+        );
+        assert_eq!(
+            joint.get("bw_events").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(2)
+        );
+        assert_eq!(
+            joint.get("mem_events").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn validate_sweep_v2_still_accepts_v2_artifacts() {
+        // Build a v3 artifact, strip the v3 additions, relabel as v2 — the
+        // compatibility path `lime sweep-check` keeps for old artifacts.
+        let methods = all();
+        let m = tiny_matrix(&methods);
+        let cells = m.eval();
+        let parsed = Json::parse(&m.to_json(&cells).to_string()).unwrap();
+        let Json::Obj(mut map) = parsed else {
+            panic!("artifact must be an object")
+        };
+        map.insert("schema".into(), "lime-sweep-v2".into());
+        if let Some(Json::Obj(axes)) = map.get_mut("axes") {
+            axes.remove("pressure_scripts");
+        }
+        let v2 = Json::Obj(map);
+        let summary = validate_sweep(&v2).expect("downgraded artifact validates as v2");
+        assert_eq!(summary.schema, "lime-sweep-v2");
+        assert!(validate_sweep_v2(&v2).is_ok());
+        assert!(validate_sweep_v3(&v2).is_err());
     }
 
     #[test]
@@ -798,16 +1099,16 @@ mod tests {
         let m = tiny_matrix(&methods);
         let cells = m.eval();
         let good = m.to_json(&cells).to_string();
-        assert!(validate_sweep_v2(&Json::parse(&good).unwrap()).is_ok());
+        assert!(validate_sweep(&Json::parse(&good).unwrap()).is_ok());
         for (needle, replacement, why) in [
-            ("lime-sweep-v2", "lime-sweep-v1", "wrong schema"),
+            ("lime-sweep-v3", "lime-sweep-v1", "unknown schema"),
             ("\"sporadic\"", "\"sporadıc\"", "unknown pattern"),
             ("\"oom\":false", "\"oom\":true", "oom/ms inconsistency"),
         ] {
             let bad = good.replacen(needle, replacement, 1);
             assert_ne!(bad, good, "{why}: replacement must apply");
             let parsed = Json::parse(&bad).unwrap();
-            assert!(validate_sweep_v2(&parsed).is_err(), "{why} must be rejected");
+            assert!(validate_sweep(&parsed).is_err(), "{why} must be rejected");
         }
         // Dropping one cell breaks the per-method count check.
         let parsed = Json::parse(&good).unwrap();
@@ -815,7 +1116,42 @@ mod tests {
             if let Some(Json::Arr(cells)) = map.get_mut("cells") {
                 cells.pop();
             }
-            assert!(validate_sweep_v2(&Json::Obj(map)).is_err());
+            assert!(validate_sweep(&Json::Obj(map)).is_err());
+        } else {
+            panic!("artifact must be an object");
+        }
+        // Dropping the v3 script axis must fail a v3 artifact.
+        let parsed = Json::parse(&good).unwrap();
+        if let Json::Obj(mut map) = parsed {
+            if let Some(Json::Obj(axes)) = map.get_mut("axes") {
+                axes.remove("pressure_scripts");
+            }
+            assert!(validate_sweep(&Json::Obj(map)).is_err());
+        } else {
+            panic!("artifact must be an object");
+        }
+        // Corrupting a script's memory channel away from its v2 projection
+        // must fail: the metadata would describe a script that never ran.
+        let parsed = Json::parse(&good).unwrap();
+        if let Json::Obj(mut map) = parsed {
+            let Some(Json::Obj(axes)) = map.get_mut("axes") else {
+                panic!("axes must be an object")
+            };
+            let Some(Json::Arr(scripts)) = axes.get_mut("pressure_scripts") else {
+                panic!("pressure_scripts must be an array")
+            };
+            let Some(Json::Obj(script)) = scripts.get_mut(1) else {
+                panic!("script 1 must be an object")
+            };
+            let Some(Json::Arr(events)) = script.get_mut("mem_events") else {
+                panic!("mem_events must be an array")
+            };
+            let Some(Json::Obj(ev)) = events.get_mut(0) else {
+                panic!("event 0 must be an object")
+            };
+            ev.insert("delta_bytes".into(), Json::Num(12345.0));
+            let err = validate_sweep(&Json::Obj(map)).unwrap_err();
+            assert!(err.contains("disagrees"), "unexpected error: {err}");
         } else {
             panic!("artifact must be an object");
         }
@@ -836,5 +1172,13 @@ mod tests {
             MemScenario::none(),
             MemScenario::squeeze("oob", 9, 1, 0),
         ]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pressure_must_start_with_empty_script() {
+        let methods = all();
+        let _ = tiny_matrix(&methods)
+            .with_pressure(vec![Script::bandwidth_sag("sag-only", 0.5, 1, 2)]);
     }
 }

@@ -21,8 +21,10 @@
 //! weight and KV-cache residency — which is precisely the resource LIME
 //! schedules.
 //!
-//! See DESIGN.md for the system inventory and the experiment index mapping
-//! every paper figure/table to a bench target.
+//! See `docs/ARCHITECTURE.md` (repo root) for the module map, the
+//! executor inventory, and the paper↔code table mapping every equation,
+//! algorithm and figure to the functions and tests that realize them;
+//! `docs/SWEEPS.md` documents the sweep-artifact schemas.
 
 // The `pjrt` feature gates the real serving path, which needs the `xla`
 // PJRT bindings — not declarable offline. Fail early with an actionable

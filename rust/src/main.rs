@@ -43,10 +43,11 @@ fn usage() -> String {
        experiments  regenerate a paper figure/table (fig2a fig2b fig12 fig13\n\
                     fig14 lowmem fig18 tab5), or `sweep` for the scenario\n\
                     matrix (lowmem + cluster-size grids × bandwidth ×\n\
-                    pattern, #Seg-override and memory-fluctuation axes on\n\
-                    LIME) with one lime-sweep-v2 JSON per grid\n\
+                    pattern, #Seg-override and joint memory/bandwidth\n\
+                    pressure-script axes on LIME) with one lime-sweep-v3\n\
+                    JSON per grid\n\
        sweep-check  validate sweep JSON artifacts against the\n\
-                    lime-sweep-v2 schema (non-zero exit on violation)\n\
+                    lime-sweep-v2/v3 schemas (non-zero exit on violation)\n\
        bench-check  diff a fresh BENCH_*.json against a committed baseline\n\
                     with a tolerance band (non-zero exit on regression)\n\
      \n\
@@ -165,7 +166,7 @@ fn cmd_experiments(argv: &[String]) {
 fn cmd_sweep_check(argv: &[String]) {
     let cli = Cli::new(
         "lime sweep-check",
-        "validate sweep artifacts against the lime-sweep-v2 schema",
+        "validate sweep artifacts against the lime-sweep-v2/v3 schemas",
     )
     .opt("dir", "sweeps", "directory holding SWEEP_*.json artifacts")
     .opt("file", "", "validate a single artifact instead of a directory");
@@ -205,13 +206,14 @@ fn cmd_sweep_check(argv: &[String]) {
             .and_then(|src| {
                 lime::util::json::Json::parse(src.trim()).map_err(|e| format!("invalid JSON: {e}"))
             })
-            .and_then(|json| lime::experiments::validate_sweep_v2(&json));
+            .and_then(|json| lime::experiments::validate_sweep(&json));
         match verdict {
             Ok(s) => println!(
-                "sweep-check: OK {} — grid {} ({}), {} cells: {} completed, {} OOM, {} OOT",
+                "sweep-check: OK {} — grid {} ({}, {}), {} cells: {} completed, {} OOM, {} OOT",
                 path.display(),
                 s.grid,
                 s.model,
+                s.schema,
                 s.cells,
                 s.completed,
                 s.oom,

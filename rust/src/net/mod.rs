@@ -72,6 +72,56 @@ impl BandwidthTrace {
     pub fn mean_over(&self, horizon: usize) -> f64 {
         (0..horizon.max(1)).map(|t| self.at(t)).sum::<f64>() / horizon.max(1) as f64
     }
+
+    /// Overlay multiplicative capacity-scale events onto this trace: the
+    /// result's bandwidth at token `t` is exactly `self.at(t) × s(t)`,
+    /// where `s(t)` is the scale of the latest event with `at_step <= t`
+    /// (1.0 before any event). This is how scripted bandwidth
+    /// fluctuation ([`crate::adapt::BwEvent`]) composes with a sweep's
+    /// base bandwidth axis — a sag script scales *whatever* the base
+    /// trace provides, fixed or piecewise.
+    ///
+    /// With no events the trace is returned unchanged (clone), so an
+    /// empty script stays bit-identical to the unscripted run.
+    pub fn overlay_scales(&self, events: &[(usize, f64)]) -> BandwidthTrace {
+        if events.is_empty() {
+            return self.clone();
+        }
+        for &(_, scale) in events {
+            assert!(
+                scale.is_finite() && scale > 0.0,
+                "bandwidth scale must be finite and > 0, got {scale}"
+            );
+        }
+        let mut sorted: Vec<(usize, f64)> = events.to_vec();
+        // Stable sort: the later entry of a same-step pair wins below.
+        sorted.sort_by_key(|&(step, _)| step);
+        let scale_at = |t: usize| -> f64 {
+            let mut s = 1.0;
+            for &(step, scale) in &sorted {
+                if step <= t {
+                    s = scale;
+                } else {
+                    break;
+                }
+            }
+            s
+        };
+        // Breakpoints: token 0 plus every change point of either input.
+        let mut starts: Vec<usize> = vec![0];
+        if let BandwidthTrace::Piecewise(pieces) = self {
+            starts.extend(pieces.iter().map(|&(start, _)| start));
+        }
+        starts.extend(sorted.iter().map(|&(step, _)| step));
+        starts.sort_unstable();
+        starts.dedup();
+        BandwidthTrace::Piecewise(
+            starts
+                .into_iter()
+                .map(|start| (start, self.at(start) * scale_at(start)))
+                .collect(),
+        )
+    }
 }
 
 /// Seconds to move `bytes` across a link at `bytes_per_sec`, including a
@@ -118,6 +168,48 @@ mod tests {
         let t = BandwidthTrace::random_walk_mbps(3, 50.0, 250.0, 3, 30, 500);
         let first = t.at(0);
         assert!((0..500).any(|tok| t.at(tok) != first));
+    }
+
+    #[test]
+    fn overlay_on_fixed_is_exact() {
+        let base = BandwidthTrace::fixed_mbps(200.0);
+        let t = base.overlay_scales(&[(4, 0.5), (9, 1.0)]);
+        for tok in 0..16 {
+            let scale = if (4..9).contains(&tok) { 0.5 } else { 1.0 };
+            assert_eq!(t.at(tok), base.at(tok) * scale, "token {tok}");
+        }
+    }
+
+    #[test]
+    fn overlay_on_piecewise_unions_breakpoints() {
+        let base = BandwidthTrace::Piecewise(vec![(0, 10.0), (5, 20.0)]);
+        let t = base.overlay_scales(&[(3, 0.5), (7, 1.0)]);
+        assert_eq!(t.at(0), 10.0);
+        assert_eq!(t.at(3), 5.0); // sag on the first piece
+        assert_eq!(t.at(5), 10.0); // sag persists across the base breakpoint
+        assert_eq!(t.at(7), 20.0); // restored on the second piece
+    }
+
+    #[test]
+    fn overlay_with_no_events_is_identity() {
+        let base = BandwidthTrace::random_walk_mbps(5, 50.0, 250.0, 3, 30, 100);
+        let t = base.overlay_scales(&[]);
+        for tok in 0..100 {
+            assert_eq!(t.at(tok), base.at(tok));
+        }
+    }
+
+    #[test]
+    fn overlay_same_step_latest_event_wins() {
+        let base = BandwidthTrace::Fixed(100.0);
+        let t = base.overlay_scales(&[(2, 0.5), (2, 0.25)]);
+        assert_eq!(t.at(2), 25.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overlay_rejects_nonpositive_scale() {
+        BandwidthTrace::Fixed(1.0).overlay_scales(&[(0, -1.0)]);
     }
 
     #[test]

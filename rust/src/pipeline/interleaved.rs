@@ -13,9 +13,13 @@
 //! memory-aware planner (KV pressure → block-granular offload plans, with
 //! one-time reload charges when plans swap blocks, Fig. 9) and the
 //! bandwidth-sensitive KV transfer protocol (Alg. 2). Both can be disabled
-//! independently for the Table V ablations.
+//! independently for the Table V ablations. [`run_interleaved_scripted`]
+//! additionally consumes a joint fluctuation [`Script`]: scripted memory
+//! events shift effective per-device caps and the planner's thresholds
+//! mid-run, and scripted bandwidth events scale the link capacity every
+//! comm term (and Alg. 2's monitor) sees — both channels in one run.
 
-use crate::adapt::{KvTransferProtocol, MemEvent, OffloadPlan, OnlinePlanner};
+use crate::adapt::{KvTransferProtocol, OffloadPlan, OnlinePlanner, Script};
 use crate::cluster::Cluster;
 use crate::cost;
 use crate::model::ModelSpec;
@@ -97,17 +101,31 @@ pub fn run_interleaved(
     tokens: usize,
     opts: &ExecOptions,
 ) -> SimResult {
-    run_interleaved_scripted(alloc, cluster, bw_trace, micro_batches, tokens, opts, &[])
+    run_interleaved_scripted(
+        alloc,
+        cluster,
+        bw_trace,
+        micro_batches,
+        tokens,
+        opts,
+        &Script::none(),
+    )
 }
 
-/// [`run_interleaved`] under a scripted memory-fluctuation scenario: each
-/// [`MemEvent`] shifts one device's *effective* usable memory before the
-/// event's decode step, and simultaneously shifts the online planner's
-/// slack (`OnlinePlanner::apply_pressure`) so offload thresholds move with
-/// the pressure. The emergency KV-spill fallback and the `FullLayer`
-/// ablation judge saturation against the same shifted caps. An empty
-/// script is bit-identical to [`run_interleaved`] (property-tested in
-/// `rust/tests/adapt_online.rs`).
+/// [`run_interleaved`] under a scripted joint fluctuation [`Script`],
+/// both channels applied before each decode step:
+///
+/// * each memory event shifts one device's *effective* usable memory and
+///   simultaneously shifts the online planner's slack
+///   (`OnlinePlanner::apply_pressure`) so offload thresholds move with
+///   the pressure; the emergency KV-spill fallback and the `FullLayer`
+///   ablation judge saturation against the same shifted caps;
+/// * bandwidth events scale the link capacity the run sees (activation
+///   hops, KV shipments, Alg. 2's bandwidth monitor — the Eq. 2 comm
+///   terms all react) via [`BandwidthTrace::overlay_scales`].
+///
+/// An empty script is bit-identical to [`run_interleaved`]
+/// (property-tested in `rust/tests/adapt_online.rs`).
 pub fn run_interleaved_scripted(
     alloc: &Allocation,
     cluster: &Cluster,
@@ -115,8 +133,18 @@ pub fn run_interleaved_scripted(
     micro_batches: usize,
     tokens: usize,
     opts: &ExecOptions,
-    pressure: &[MemEvent],
+    script: &Script,
 ) -> SimResult {
+    // Scripted bandwidth events overlay the base trace up front — every
+    // consumer below (prefill, hops, KV shipping, the Alg. 2 monitor)
+    // then sees the scaled capacity through one unchanged query path.
+    let overlaid;
+    let bw_trace = if script.bw.is_empty() {
+        bw_trace
+    } else {
+        overlaid = bw_trace.overlay_scales(&script.bw_scale_points());
+        &overlaid
+    };
     let spec = alloc.spec.clone();
     let d = cluster.len();
     let seg = alloc.seg.max(1);
@@ -159,6 +187,10 @@ pub fn run_interleaved_scripted(
     let mut kv_shipped_total: u64 = 0;
     let mut plans_fired = 0usize;
     let mut emergency_steps = 0usize;
+    // Link acquisitions (activation hops, KV shipments) that had to wait
+    // on a busy shared medium — the per-cell bandwidth-stall counter the
+    // sweep artifacts carry. Purely observational: never feeds timing.
+    let mut bw_stalls: u64 = 0;
     // One-time reload bytes queued for the next step's segment-0 load.
     let mut pending_reload: Vec<u64> = vec![0; d];
     // Effective usable memory per device; scripted pressure events shift
@@ -204,7 +236,7 @@ pub fn run_interleaved_scripted(
         // ---- scripted memory fluctuation (scenario-matrix axis) ----
         // Applied before the bandwidth monitor so a lowered threshold
         // already counts as "imminent" for this step's Alg. 2 decisions.
-        for ev in pressure.iter().filter(|ev| ev.at_step == step) {
+        for ev in script.mem.iter().filter(|ev| ev.at_step == step) {
             mem_pressure[ev.device] = mem_pressure[ev.device].saturating_add(ev.delta_bytes);
             mem_caps[ev.device] =
                 crate::adapt::planner::shifted(mem_base[ev.device], mem_pressure[ev.device]);
@@ -255,6 +287,9 @@ pub fn run_interleaved_scripted(
                 for (m, front) in micro_front.iter_mut().enumerate() {
                     // Activation hop onto device i (shared medium).
                     let hop = net.acquire(*front, link_transfer_secs(spec.h_size(1), bw));
+                    if hop.start > *front {
+                        bw_stalls += 1;
+                    }
                     let label = |phase| Label::Micro { m: m as u32, phase };
                     trace.push(i, SpanKind::Comm, label(MicroPhase::Hop), hop.start, hop.end);
                     let arrive = hop.end;
@@ -325,6 +360,9 @@ pub fn run_interleaved_scripted(
                         * live.devices[i].total_layers as u64
                         * ship as u64;
                     let iv = net.acquire(step_end, link_transfer_secs(bytes, bw));
+                    if iv.start > step_end {
+                        bw_stalls += 1;
+                    }
                     trace.push(
                         i,
                         SpanKind::KvTransfer,
@@ -414,6 +452,7 @@ pub fn run_interleaved_scripted(
         kv_tokens_transferred: kv_shipped_total,
         online_plans_fired: plans_fired,
         emergency_steps,
+        bw_stalls,
     }
 }
 

@@ -21,6 +21,12 @@ pub struct SimResult {
     pub online_plans_fired: usize,
     /// Steps that needed the emergency KV-to-SSD fallback.
     pub emergency_steps: usize,
+    /// Link acquisitions (activation hops, KV shipments, collective
+    /// rounds) that had to wait on the busy shared medium. Observational:
+    /// the count never feeds back into timing, it surfaces link
+    /// contention — which scripted bandwidth sags inflate — in sweep
+    /// artifacts.
+    pub bw_stalls: u64,
 }
 
 impl SimResult {
@@ -55,6 +61,7 @@ mod tests {
             kv_tokens_transferred: 0,
             online_plans_fired: 0,
             emergency_steps: 0,
+            bw_stalls: 0,
         };
         assert!((r.ms_per_token() - 50.0).abs() < 1e-9);
         assert!((r.mean_step() - 0.2).abs() < 1e-12);

@@ -127,6 +127,7 @@ pub fn run_tensor_parallel(
     let mut step_times = Vec::with_capacity(tokens);
     let mut t_prev = decode_start;
     let mut emergency_steps = 0usize;
+    let mut bw_stalls: u64 = 0;
 
     for step in 0..tokens {
         let bw = bw_trace.at(step);
@@ -146,7 +147,11 @@ pub fn run_tensor_parallel(
         // the wire plus a per-sync software overhead (barrier + framework).
         let mut comm_total = 0.0;
         for _ in 0..(2 * spec.layers * sync_rounds) {
-            let iv = net.acquire(step_start + comm_total, link_transfer_secs(round_bytes, bw));
+            let at = step_start + comm_total;
+            let iv = net.acquire(at, link_transfer_secs(round_bytes, bw));
+            if iv.start > at {
+                bw_stalls += 1;
+            }
             comm_total = iv.end - step_start;
         }
         comm_total += 2.0 * spec.layers as f64 * opts.sync_overhead;
@@ -237,6 +242,7 @@ pub fn run_tensor_parallel(
         kv_tokens_transferred: 0,
         online_plans_fired: 0,
         emergency_steps,
+        bw_stalls,
     }
 }
 

@@ -102,6 +102,7 @@ pub fn run_traditional(
 
     let mut kv_held: Vec<usize> = vec![opts.prompt_tokens; d];
     let mut emergency_steps = 0usize;
+    let mut bw_stalls: u64 = 0;
     let mut step_times = Vec::with_capacity(tokens);
     let mut t_prev = decode_start;
     // Reused across steps — no per-step allocation in the decode loop.
@@ -121,6 +122,9 @@ pub fn run_traditional(
             for (m, front) in fronts.iter_mut().enumerate() {
                 let label = |phase| Label::Micro { m: m as u32, phase };
                 let hop = net.acquire(*front, link_transfer_secs(spec.h_size(1), bw));
+                if hop.start > *front {
+                    bw_stalls += 1;
+                }
                 trace.push(i, SpanKind::Comm, label(MicroPhase::Hop), hop.start, hop.end);
                 let mut cursor = hop.end;
 
@@ -213,6 +217,7 @@ pub fn run_traditional(
         kv_tokens_transferred: 0,
         online_plans_fired: 0,
         emergency_steps,
+        bw_stalls,
     }
 }
 

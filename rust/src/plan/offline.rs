@@ -24,7 +24,7 @@
 //!
 //! **Incremental sweep.** None of the per-layer `comp_time`/`load_time`
 //! terms depend on `seg`, and neither does the phase-1 greedy fill — so the
-//! sweep hoists them into one shared [`SegSweepCtx`] (a memoized
+//! sweep hoists them into one shared `SegSweepCtx` (a memoized
 //! [`cost::CompTimeTable`], the Eq. 2 comm term, per-device one-layer SSD
 //! load times, the greedy resident fill, and the per-slot offload units).
 //! Each candidate then runs phases 2–4 against O(1) lookups instead of
@@ -349,7 +349,7 @@ pub fn plan_with_seg(
     plan_with_seg_ctx(spec, cluster, seg, opts, &ctx)
 }
 
-/// Plan every candidate in `segs` against one shared [`SegSweepCtx`] on
+/// Plan every candidate in `segs` against one shared `SegSweepCtx` on
 /// the global pool (nested-submission safe). Entry `k` is `None` when
 /// `segs[k]` is infeasible; each `Some` is exactly
 /// `plan_with_seg(spec, cluster, segs[k], opts).ok()` — the context is

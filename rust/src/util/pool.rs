@@ -364,6 +364,11 @@ pub fn global() -> &'static Pool {
 }
 
 /// [`Pool::map_indexed`] on the [`global`] pool.
+///
+/// ```
+/// let squares = lime::util::pool::map_indexed(&[1u64, 2, 3, 4], |&x| x * x);
+/// assert_eq!(squares, vec![1, 4, 9, 16]); // always in job order
+/// ```
 pub fn map_indexed<J, T>(jobs: &[J], f: impl Fn(&J) -> T + Sync) -> Vec<T>
 where
     J: Sync,

@@ -2,10 +2,12 @@
 //! threshold crossings, scripted memory-pressure events through
 //! `apply_pressure`, the KV-transfer protocol's reaction to
 //! pressure-shifted thresholds, and the executor-level invariants of
-//! `run_interleaved_scripted` (an empty script is bit-identical to the
-//! unscripted executor; a given script is deterministic).
+//! `run_interleaved_scripted` (an empty joint script is bit-identical to
+//! the unscripted executor; a given script is deterministic; correlated
+//! multi-device dips fire plans on every affected device; bandwidth sags
+//! inflate the comm terms exactly as a pre-scaled trace would).
 
-use lime::adapt::{eq8_tokens, KvTransferProtocol, MemEvent, OnlinePlanner};
+use lime::adapt::{eq8_tokens, KvTransferProtocol, MemEvent, MemScenario, OnlinePlanner, Script};
 use lime::cluster::Cluster;
 use lime::model::ModelSpec;
 use lime::net::BandwidthTrace;
@@ -161,11 +163,14 @@ fn pressure_triggers_adaptation_the_unpressured_run_never_needed() {
         trace_mode: TraceMode::Off,
         ..ExecOptions::default()
     };
-    let script = [MemEvent {
-        at_step: 4,
-        device: 0,
-        delta_bytes: -(gib(8.0) as i64),
-    }];
+    let script = Script::from_mem_events(
+        "squeeze",
+        vec![MemEvent {
+            at_step: 4,
+            device: 0,
+            delta_bytes: -(gib(8.0) as i64),
+        }],
+    );
     let squeezed = run_interleaved_scripted(&alloc, &cluster, &bw, 1, 48, &opts, &script);
     assert!(
         squeezed.online_plans_fired > 0 || squeezed.emergency_steps > 0,
@@ -182,7 +187,7 @@ fn pressure_triggers_adaptation_the_unpressured_run_never_needed() {
 }
 
 #[test]
-fn prop_empty_script_is_bit_identical_to_unscripted() {
+fn prop_empty_joint_script_is_bit_identical_to_unscripted() {
     let setups: Vec<(Allocation, Cluster)> = (1..=3).map(lowmem_setup).collect();
     let gen = pair(
         pair(usize_in(0, 2), usize_in(0, 1000)),
@@ -202,10 +207,13 @@ fn prop_empty_script_is_bit_identical_to_unscripted() {
             ..ExecOptions::default()
         };
         let plain = run_interleaved(alloc, cluster, &bw, micro, tokens, &opts);
-        let scripted = run_interleaved_scripted(alloc, cluster, &bw, micro, tokens, &opts, &[]);
-        if timing_fields(&plain) != timing_fields(&scripted) {
+        let scripted =
+            run_interleaved_scripted(alloc, cluster, &bw, micro, tokens, &opts, &Script::none());
+        if timing_fields(&plain) != timing_fields(&scripted)
+            || plain.bw_stalls != scripted.bw_stalls
+        {
             return Err(format!(
-                "empty script diverged: {:?} vs {:?}",
+                "empty joint script diverged: {:?} vs {:?}",
                 timing_fields(&scripted),
                 timing_fields(&plain)
             ));
@@ -233,21 +241,25 @@ fn prop_scripted_runs_are_deterministic() {
             trace_mode: TraceMode::Off,
             ..ExecOptions::default()
         };
-        let script = [
-            MemEvent {
-                at_step,
-                device,
-                delta_bytes: -((gib(1.0) * squeeze_gib as u64) as i64),
-            },
-            MemEvent {
-                at_step: at_step + 4,
-                device,
-                delta_bytes: (gib(1.0) * squeeze_gib as u64) as i64,
-            },
-        ];
+        let script = Script::from_mem_events(
+            "det",
+            vec![
+                MemEvent {
+                    at_step,
+                    device,
+                    delta_bytes: -((gib(1.0) * squeeze_gib as u64) as i64),
+                },
+                MemEvent {
+                    at_step: at_step + 4,
+                    device,
+                    delta_bytes: (gib(1.0) * squeeze_gib as u64) as i64,
+                },
+            ],
+        )
+        .with_bandwidth_sag(0.5, at_step, at_step + 4);
         let a = run_interleaved_scripted(&alloc, &cluster, &bw, 2, tokens, &opts, &script);
         let b = run_interleaved_scripted(&alloc, &cluster, &bw, 2, tokens, &opts, &script);
-        if timing_fields(&a) != timing_fields(&b) {
+        if timing_fields(&a) != timing_fields(&b) || a.bw_stalls != b.bw_stalls {
             return Err("same script, different outcome".into());
         }
         Ok(())
@@ -310,11 +322,14 @@ fn executor_ships_kv_under_imminent_pressure() {
         trace_mode: TraceMode::Off,
         ..ExecOptions::default()
     };
-    let script = [MemEvent {
-        at_step: 2,
-        device: 1,
-        delta_bytes: -(gib(8.0) as i64),
-    }];
+    let script = Script::from_mem_events(
+        "squeeze",
+        vec![MemEvent {
+            at_step: 2,
+            device: 1,
+            delta_bytes: -(gib(8.0) as i64),
+        }],
+    );
     let base = run_interleaved(&alloc, &cluster, &bw, 1, 64, &opts);
     let squeezed = run_interleaved_scripted(&alloc, &cluster, &bw, 1, 64, &opts, &script);
     assert!(
@@ -322,5 +337,137 @@ fn executor_ships_kv_under_imminent_pressure() {
         "squeeze narrowed shipping: {} < {}",
         squeezed.kv_tokens_transferred,
         base.kv_tokens_transferred
+    );
+}
+
+// -------------------------- correlated multi-device pressure scripts
+
+#[test]
+fn correlated_dip_fires_plans_on_all_affected_devices() {
+    // A correlated crushing dip over several devices must collapse every
+    // affected device's threshold, and the very next on_token must fire a
+    // plan on each one that still has evictable blocks — neighbours react
+    // together, not just the first device hit.
+    let (alloc, cluster) = lowmem_setup(1);
+    let mut planner = OnlinePlanner::new(&alloc, &cluster, 1);
+    let devices: Vec<usize> = (0..cluster.len().min(3)).collect();
+    let script = MemScenario::correlated_dip("corr", &devices, 1, gib(64.0), 2, 40);
+    // Replay the down events exactly as the executor would.
+    for ev in script.events.iter().filter(|e| e.delta_bytes < 0) {
+        planner.apply_pressure(ev.device, ev.delta_bytes);
+    }
+    for &i in &devices {
+        assert!(
+            planner.next_threshold(i) <= 1,
+            "device {i}: crushing correlated dip must collapse the threshold, got {}",
+            planner.next_threshold(i)
+        );
+        let st = &planner.states[i];
+        let evictable = st.alpha_avail + st.beta_avail > 0;
+        let before = st.history.len();
+        planner.on_token(i, 2, 0);
+        if evictable {
+            assert!(
+                planner.states[i].history.len() > before,
+                "device {i}: collapsed threshold fired no plan"
+            );
+        }
+    }
+    // Executor-level: the same correlated dip engages adaptation.
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let opts = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let dip = MemScenario::correlated_dip("corr", &devices, 1, gib(8.0), 4, 40);
+    let corr = Script::from_mem(dip);
+    let run = run_interleaved_scripted(&alloc, &cluster, &bw, 1, 48, &opts, &corr);
+    assert!(
+        run.online_plans_fired > 0 || run.emergency_steps > 0,
+        "correlated pressure engaged nothing: {run:?}"
+    );
+}
+
+#[test]
+fn staggered_squeeze_lags_the_later_devices() {
+    // The planner of a later-staggered device must stay unpressured until
+    // its own event step: replaying the script prefix up to step k only
+    // collapses devices whose events have fired.
+    let (alloc, cluster) = lowmem_setup(1);
+    let devices = [0usize, 1];
+    let script = MemScenario::staggered_squeeze("stagger", &devices, 5, gib(64.0), 2);
+    let mut planner = OnlinePlanner::new(&alloc, &cluster, 1);
+    let t1_before = planner.next_threshold(1);
+    // Apply only the events at steps < 7 (device 0 fires at 2, device 1 at 7).
+    for ev in script.events.iter().filter(|e| e.at_step < 7) {
+        planner.apply_pressure(ev.device, ev.delta_bytes);
+    }
+    assert!(planner.next_threshold(0) <= 1, "device 0 squeezed");
+    assert_eq!(
+        planner.next_threshold(1),
+        t1_before,
+        "device 1 must be untouched before its stagger step"
+    );
+}
+
+// ----------------------------------- bandwidth channel (joint scripts)
+
+#[test]
+fn bandwidth_sag_matches_prescaled_trace_exactly() {
+    // Comm-term exactness: a scripted sag over a fixed base trace must be
+    // bit-identical to running the unscripted executor on the manually
+    // pre-scaled piecewise trace — the sag enters Eq. 2's comm terms (and
+    // Alg. 2's monitor) through the exact same numbers.
+    let (alloc, cluster) = lowmem_setup(1);
+    let base_mbps = 200.0;
+    let (from, to) = (4usize, 12usize);
+    let scale = 0.5;
+    let opts = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let base = BandwidthTrace::fixed_mbps(base_mbps);
+    let sag = Script::bandwidth_sag("sag", scale, from, to);
+    let scripted = run_interleaved_scripted(&alloc, &cluster, &base, 1, 24, &opts, &sag);
+    let manual_trace = BandwidthTrace::Piecewise(vec![
+        (0, mbps(base_mbps)),
+        (from, mbps(base_mbps) * scale),
+        (to, mbps(base_mbps)),
+    ]);
+    let manual = run_interleaved(&alloc, &cluster, &manual_trace, 1, 24, &opts);
+    assert_eq!(timing_fields(&scripted), timing_fields(&manual));
+    assert_eq!(scripted.bw_stalls, manual.bw_stalls);
+    // And the sag must cost something relative to the unsagged run.
+    let unsagged = run_interleaved(&alloc, &cluster, &base, 1, 24, &opts);
+    assert!(
+        scripted.total_time >= unsagged.total_time,
+        "halving the link cannot speed the run up: {} < {}",
+        scripted.total_time,
+        unsagged.total_time
+    );
+}
+
+#[test]
+fn joint_script_engages_both_channels_in_one_run() {
+    let (alloc, cluster) = lowmem_setup(1);
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let opts = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let joint = Script::from_mem(MemScenario::squeeze("sq", 0, gib(8.0), 4))
+        .with_bandwidth_sag(0.25, 4, 20)
+        .with_label("joint");
+    let baseline = run_interleaved(&alloc, &cluster, &bw, 1, 32, &opts);
+    let run = run_interleaved_scripted(&alloc, &cluster, &bw, 1, 32, &opts, &joint);
+    assert!(
+        run.online_plans_fired > 0 || run.emergency_steps > 0,
+        "memory channel engaged nothing: {run:?}"
+    );
+    assert!(
+        run.total_time >= baseline.total_time,
+        "joint pressure cannot make the run faster: {} < {}",
+        run.total_time,
+        baseline.total_time
     );
 }

@@ -133,10 +133,13 @@ fn pool_grid_equals_sequential_grid_over_real_experiments() {
 #[test]
 fn scenario_matrix_pool_equals_sequential() {
     // The scenario-matrix acceptance check: a matrix exercising ALL new
-    // axes — #Seg overrides (nested plan_with_segs on the pool), scripted
-    // memory pressure, both patterns — must be bit-identical between the
-    // pooled evaluation and the sequential reference, cell for cell.
-    use lime::adapt::MemScenario;
+    // axes — #Seg overrides (nested plan_with_segs on the pool), a
+    // correlated multi-device dip, and a joint bandwidth+memory script,
+    // both patterns — must be bit-identical between the pooled evaluation
+    // and the sequential reference, cell for cell, and the serialized
+    // lime-sweep-v3 artifact must be byte-identical (the in-process proxy
+    // for CI's LIME_THREADS={1,4} sweep-determinism gate).
+    use lime::adapt::{MemScenario, Script};
     use lime::experiments::{ScenarioMatrix, SegChoice};
     use lime::util::bytes::gib;
     use lime::workload::Pattern;
@@ -152,9 +155,19 @@ fn scenario_matrix_pool_equals_sequential() {
         4,
     )
     .with_segs(vec![SegChoice::Auto, SegChoice::Fixed(4)])
-    .with_mem_scenarios(vec![
-        MemScenario::none(),
-        MemScenario::dip("dip-d0", 0, gib(4.0), 1, 3),
+    .with_pressure(vec![
+        Script::none(),
+        Script::from_mem(MemScenario::correlated_dip(
+            "corr-dip",
+            &[0, 1],
+            1,
+            gib(4.0),
+            1,
+            3,
+        )),
+        Script::from_mem(MemScenario::squeeze("sq", 0, gib(4.0), 1))
+            .with_bandwidth_sag(0.5, 1, 3)
+            .with_label("joint"),
     ]);
     let pooled = matrix.eval();
     let sequential = matrix.eval_sequential();
@@ -163,6 +176,11 @@ fn scenario_matrix_pool_equals_sequential() {
     for (p, s) in pooled.iter().zip(&sequential) {
         assert_eq!(p, s, "scenario cell diverged between pool and sequential");
     }
+    assert_eq!(
+        matrix.to_json(&pooled).to_string(),
+        matrix.to_json(&sequential).to_string(),
+        "serialized artifact must be byte-identical"
+    );
 }
 
 #[test]

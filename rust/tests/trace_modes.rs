@@ -152,13 +152,13 @@ fn prop_trace_mode_never_changes_interleaved_timing() {
 
 #[test]
 fn prop_trace_modes_agree_under_scripted_pressure() {
-    // Satellite of the scenario-matrix work: when scripted memory
+    // Satellite of the scenario-matrix work: when a scripted joint
     // fluctuation fires mid-run offload plans (one-time reload loads,
-    // growing per-segment loads, emergency kv-spill/kv-fetch SSD traffic),
-    // `TraceMode::Aggregate`'s online `uncovered_load` must still match
-    // `Full`'s sweep-line, and every timing field must stay bit-identical
-    // across Off/Aggregate/Full.
-    use lime::adapt::MemEvent;
+    // growing per-segment loads, emergency kv-spill/kv-fetch SSD traffic)
+    // *and* sags the link, `TraceMode::Aggregate`'s online
+    // `uncovered_load` must still match `Full`'s sweep-line, and every
+    // timing field must stay bit-identical across Off/Aggregate/Full.
+    use lime::adapt::{MemEvent, Script};
     use lime::pipeline::run_interleaved_scripted;
     use lime::util::bytes::gib;
 
@@ -188,18 +188,24 @@ fn prop_trace_modes_agree_under_scripted_pressure() {
         |&((cluster_idx, seed), ((micro, tokens), (squeeze_gib, at_step)))| {
             let (alloc, cluster) = &setups[cluster_idx];
             let device = seed % cluster.len();
-            let script = [
-                MemEvent {
-                    at_step,
-                    device,
-                    delta_bytes: -((gib(1.0) * squeeze_gib as u64) as i64),
-                },
-                MemEvent {
-                    at_step: at_step + 3,
-                    device,
-                    delta_bytes: (gib(1.0) * (squeeze_gib / 2) as u64) as i64,
-                },
-            ];
+            let script = Script::from_mem_events(
+                "prop",
+                vec![
+                    MemEvent {
+                        at_step,
+                        device,
+                        delta_bytes: -((gib(1.0) * squeeze_gib as u64) as i64),
+                    },
+                    MemEvent {
+                        at_step: at_step + 3,
+                        device,
+                        delta_bytes: (gib(1.0) * (squeeze_gib / 2) as u64) as i64,
+                    },
+                ],
+            )
+            // Joint channel: sag the link to half capacity over the same
+            // window, so the property also covers bandwidth events.
+            .with_bandwidth_sag(0.5, at_step, at_step + 3);
             let bw = BandwidthTrace::fixed_mbps(100.0 + (seed % 150) as f64);
             let run = |mode: TraceMode| {
                 run_interleaved_scripted(
