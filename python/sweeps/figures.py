@@ -1,5 +1,6 @@
-"""Consumer for the Rust sweep artifacts (schemas ``lime-sweep-v2`` and
-``lime-sweep-v3``; see ``docs/SWEEPS.md`` for the schema reference).
+"""Consumer for the Rust sweep artifacts (schemas ``lime-sweep-v2``,
+``lime-sweep-v3`` and ``lime-sweep-v4``; see ``docs/SWEEPS.md`` for the
+schema reference).
 
 ``lime experiments --id sweep`` writes one ``SWEEP_<grid>.json`` per
 scenario matrix (lowmem settings + cluster-size subsets). This module
@@ -13,6 +14,9 @@ renders those artifacts into the paper's figure layouts:
   counters per pressure scenario (the Table-V-flavoured view of the
   online planner / KV transfer machinery); v3 artifacts add the per-cell
   bandwidth-stall counter inflated by joint bandwidth+memory scripts;
+* :func:`fig_queueing_delay` — request-level serving metrics from the
+  v4 arrival-process axis: per-stream-cell mean/max queueing delay,
+  TTFT, and time-between-tokens (the §V-A continuous-serving view);
 * :func:`speedup_summary` — LIME's speedup over the best completing
   baseline per column (the paper's headline numbers).
 
@@ -34,7 +38,7 @@ import sys
 from dataclasses import dataclass
 from typing import Any
 
-SCHEMAS = ("lime-sweep-v2", "lime-sweep-v3")
+SCHEMAS = ("lime-sweep-v2", "lime-sweep-v3", "lime-sweep-v4")
 
 
 @dataclass
@@ -53,15 +57,22 @@ class Grid:
         return self.axes["mem_scenarios"][0]["label"]
 
     def baseline_cells(self) -> list[dict[str, Any]]:
-        """Cells at the baseline axis point (auto seg, no pressure)."""
+        """Cells at the baseline axis point (auto seg, no pressure,
+        single-run arrival — pre-v4 artifacts carry no arrival key)."""
         return [
             c
             for c in self.cells
-            if c["seg"] == "auto" and c["mem"] == self.baseline_mem
+            if c["seg"] == "auto"
+            and c["mem"] == self.baseline_mem
+            and c.get("arrival", "single") == "single"
         ]
 
     def lime_cells(self) -> list[dict[str, Any]]:
         return [c for c in self.cells if c["method"] == "lime"]
+
+    def stream_cells(self) -> list[dict[str, Any]]:
+        """v4 continuous-serving cells (non-null ``requests`` arrays)."""
+        return [c for c in self.cells if c.get("requests")]
 
 
 def load_grid(path: str) -> Grid:
@@ -170,6 +181,7 @@ def fig_seg_curve(grid: Grid) -> str:
                 if c["bandwidth_mbps"] == c_bw
                 and c["pattern"] == pattern
                 and c["mem"] == grid.baseline_mem
+                and c.get("arrival", "single") == "single"
             }
             row = [f"{c_bw:g} Mbps / {pattern}"]
             for seg in segs:
@@ -199,7 +211,11 @@ def fig_memory_fluctuation(grid: Grid) -> str:
     for scenario in grid.axes["mem_scenarios"]:
         label = scenario["label"]
         for c in grid.lime_cells():
-            if c["mem"] != label or c["seg"] != "auto":
+            if (
+                c["mem"] != label
+                or c["seg"] != "auto"
+                or c.get("arrival", "single") != "single"
+            ):
                 continue
             row = [
                 label,
@@ -222,6 +238,47 @@ def fig_memory_fluctuation(grid: Grid) -> str:
     ]
     if has_stalls:
         header.append("link stalls")
+    out.append(_md_table(header, rows))
+    return "\n\n".join(out)
+
+
+def fig_queueing_delay(grid: Grid) -> str:
+    """The v4 continuous-serving view: per-request queueing delay, TTFT
+    and time-between-tokens summaries for every completed stream cell
+    (auto seg, baseline pressure), one row per (arrival, column). Bursty
+    streams should show the queueing the sporadic pattern avoids — the
+    serving-side shape of the paper's §V-A comparison."""
+    out = [f"## {grid.grid} — request-level serving metrics (stream cells)"]
+
+    def mean(vals: list[float]) -> float:
+        return sum(vals) / len(vals) if vals else 0.0
+
+    rows = []
+    for c in grid.stream_cells():
+        if c["method"] != "lime" or c["seg"] != "auto" or c["mem"] != grid.baseline_mem:
+            continue
+        req = c["requests"]
+        qd, ttft, tbt = req["queueing_delay_s"], req["ttft_s"], req["tbt_s"]
+        rows.append(
+            [
+                c.get("arrival", "?"),
+                f"{c['bandwidth_mbps']:g} Mbps / {c['pattern']}",
+                str(len(qd)),
+                f"{mean(qd):.3f}",
+                f"{max(qd):.3f}" if qd else "-",
+                f"{mean(ttft):.3f}",
+                f"{mean(tbt) * 1e3:.1f}",
+            ]
+        )
+    header = [
+        "arrival",
+        "column",
+        "requests",
+        "mean qd (s)",
+        "max qd (s)",
+        "mean TTFT (s)",
+        "mean TBT (ms)",
+    ]
     out.append(_md_table(header, rows))
     return "\n\n".join(out)
 
@@ -262,14 +319,15 @@ def speedup_summary(grid: Grid) -> str:
 
 
 def render_grid(grid: Grid) -> str:
-    return "\n\n".join(
-        [
-            fig_latency_vs_bandwidth(grid),
-            fig_seg_curve(grid),
-            fig_memory_fluctuation(grid),
-            speedup_summary(grid),
-        ]
-    )
+    parts = [
+        fig_latency_vs_bandwidth(grid),
+        fig_seg_curve(grid),
+        fig_memory_fluctuation(grid),
+    ]
+    if grid.stream_cells():
+        parts.append(fig_queueing_delay(grid))
+    parts.append(speedup_summary(grid))
+    return "\n\n".join(parts)
 
 
 # ------------------------------------------------------------ optional PNG

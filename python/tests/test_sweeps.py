@@ -1,7 +1,8 @@
-"""Consumer-side tests for the ``lime-sweep-v2``/``lime-sweep-v3``
-artifacts: loading, figure-layout rendering, and the speedup summary —
-against small hand-built grids mirroring what ``lime experiments --id
-sweep`` emits (v3) and what older checkouts emitted (v2)."""
+"""Consumer-side tests for the ``lime-sweep-v2``/``v3``/``v4``
+artifacts: loading, figure-layout rendering, the request-level serving
+table, and the speedup summary — against small hand-built grids
+mirroring what ``lime experiments --id sweep`` emits (v4) and what older
+checkouts emitted (v2/v3)."""
 
 import json
 
@@ -199,6 +200,99 @@ def test_speedup_summary_uses_best_completing_baseline(sweep_dir):
     # pp at 250 ms vs LIME at 100 ms -> 2.50x; Galaxy (OOM) excluded.
     assert "2.50x" in text
     assert "Galaxy" not in text
+
+
+@pytest.fixture
+def sweep_dir_v4(tmp_path):
+    """A minimal lime-sweep-v4 artifact: the arrival-process axis with a
+    3-request stream point carrying per-request metric arrays."""
+
+    def v4_cell(method, name, pattern, arrival, ms, requests=None):
+        cell = _cell(method, name, 200.0, pattern, "auto", "none", ms)
+        cell["bw_stalls"] = None if ms is None else 1
+        cell["arrival"] = arrival
+        cell["requests"] = requests
+        return cell
+
+    stream = {
+        "queueing_delay_s": [0.0, 2.5, 5.0],
+        "ttft_s": [1.0, 3.5, 6.0],
+        "tbt_s": [0.25, 0.25, 0.25],
+    }
+    spread = {
+        "queueing_delay_s": [0.0, 0.0, 0.5],
+        "ttft_s": [1.0, 1.1, 1.6],
+        "tbt_s": [0.25, 0.25, 0.25],
+    }
+    cells = [
+        v4_cell("lime", "LIME", "sporadic", "single", 100.0),
+        v4_cell("lime", "LIME", "bursty", "single", 90.0),
+        v4_cell("lime", "LIME", "sporadic", "stream3", 100.0, requests=spread),
+        v4_cell("lime", "LIME", "bursty", "stream3", 95.0, requests=stream),
+        v4_cell("pp", "Pipeline parallelism", "sporadic", "single", 250.0),
+        v4_cell("pp", "Pipeline parallelism", "bursty", "single", 240.0),
+    ]
+    doc = {
+        "schema": "lime-sweep-v4",
+        "grid": "v4grid",
+        "model": "Qwen3-32B",
+        "tokens": 8,
+        "bandwidths_mbps": [200.0],
+        "axes": {
+            "cluster": {"label": "v4grid", "devices": ["AGXOrin-64G", "AGXOrin-32G"]},
+            "bandwidths_mbps": [200.0],
+            "patterns": ["sporadic", "bursty"],
+            "methods": ["lime", "pp"],
+            "segs": ["auto"],
+            "mem_scenarios": [{"label": "none", "events": []}],
+            "pressure_scripts": [{"label": "none", "mem_events": [], "bw_events": []}],
+            "arrivals": [
+                {"label": "single", "kind": "single"},
+                {"label": "stream3", "kind": "stream", "count": 3, "lambda": 0.5},
+            ],
+        },
+        "cells": cells,
+    }
+    path = tmp_path / "SWEEP_v4grid.json"
+    path.write_text(json.dumps(doc))
+    return tmp_path
+
+
+def test_v4_artifact_loads_and_renders_queueing_table(sweep_dir_v4):
+    g = figures.load_sweeps(str(sweep_dir_v4))[0]
+    assert g.grid == "v4grid"
+    assert len(g.stream_cells()) == 2
+    text = figures.fig_queueing_delay(g)
+    assert "stream3" in text
+    # Bursty stream: mean qd (0+2.5+5)/3 = 2.5, max 5.0, mean TTFT 3.5,
+    # TBT 250 ms.
+    assert "| 2.500 |" in text
+    assert "| 5.000 |" in text
+    assert "| 3.500 |" in text
+    assert "| 250.0 |" in text
+    # Full render includes the serving section exactly once.
+    rendered = figures.render_grid(g)
+    assert rendered.count("request-level serving metrics") == 1
+
+
+def test_v4_stream_cells_do_not_pollute_single_run_figures(sweep_dir_v4):
+    g = figures.load_sweeps(str(sweep_dir_v4))[0]
+    # Baseline tables must use the single-run cells only: 2 methods × 2
+    # patterns at (auto, none, single).
+    assert len(g.baseline_cells()) == 4
+    text = figures.fig_latency_vs_bandwidth(g)
+    # The sporadic LIME column shows the single-run 100.0, and the bursty
+    # one the single-run 90.0 (not the stream 95.0).
+    assert "100.0" in text and "90.0" in text
+    assert "95.0" not in text
+    # Speedup summary compares single-run cells: 250/100 = 2.50x.
+    assert "2.50x" in figures.speedup_summary(g)
+
+
+def test_pre_v4_grids_render_without_serving_section(sweep_dir):
+    g = figures.load_sweeps(str(sweep_dir))[0]
+    assert g.stream_cells() == []
+    assert "request-level serving metrics" not in figures.render_grid(g)
 
 
 def test_render_grid_and_cli(sweep_dir, tmp_path, capsys):

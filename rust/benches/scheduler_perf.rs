@@ -196,6 +196,84 @@ fn main() {
         std::hint::black_box(joint_matrix.eval().len());
     });
 
+    // Continuous-serving path: a bursty 5-request stream served through
+    // serve::simqueue on the unified executor core (per-request queueing
+    // delay / TTFT / TBT metrics are the point of the path; the bench
+    // guards the shared-timeline step driver's throughput).
+    let serve_reqs = lime::workload::stream_requests(
+        lime::workload::Pattern::Bursty,
+        0xBE,
+        5,
+        0.5,
+        64,
+        32,
+    );
+    b.time("serving_stream_bursty5", 1, 10, || {
+        let sr = lime::serve::serve_interleaved(
+            &alloc,
+            &cluster,
+            &bw,
+            cluster.len(),
+            &off,
+            &lime::adapt::Script::none(),
+            &serve_reqs,
+        );
+        std::hint::black_box(sr.mean_queueing_delay());
+    });
+
+    // lime-sweep-v4 throughput: the joint-pressure matrix extended with a
+    // continuous-stream arrival point, pooled vs sequential — the
+    // pool-vs-sequential pair for the request-serving sweep.
+    let arrivals_matrix = lime::experiments::ScenarioMatrix::new(
+        "bench-arrivals",
+        grid_spec.clone(),
+        grid_cluster.clone(),
+        &methods,
+        vec![100.0, 200.0],
+        vec![
+            lime::workload::Pattern::Sporadic,
+            lime::workload::Pattern::Bursty,
+        ],
+        4,
+    )
+    .with_segs(vec![
+        lime::experiments::SegChoice::Auto,
+        lime::experiments::SegChoice::Fixed(4),
+    ])
+    .with_pressure(vec![
+        lime::adapt::Script::none(),
+        lime::adapt::Script::from_mem(lime::adapt::MemScenario::dip(
+            "dip-d0",
+            0,
+            lime::util::bytes::gib(4.0),
+            1,
+            3,
+        )),
+    ])
+    .with_arrivals(vec![
+        lime::experiments::ArrivalSpec::Single,
+        lime::experiments::ArrivalSpec::Stream {
+            count: 4,
+            lambda: 0.5,
+        },
+    ]);
+    let arrivals_pool_s = b
+        .time("scenario_matrix_e1_arrivals_v4 (pool)", 1, 5, || {
+            std::hint::black_box(arrivals_matrix.eval().len());
+        })
+        .mean;
+    let arrivals_seq_s = b
+        .time("scenario_matrix_e1_arrivals_v4_sequential", 1, 5, || {
+            std::hint::black_box(arrivals_matrix.eval_sequential().len());
+        })
+        .mean;
+    if arrivals_pool_s > 0.0 {
+        b.row(
+            "v4 arrivals sweep speedup (sequential / pool)",
+            &format!("{:.2}x", arrivals_seq_s / arrivals_pool_s),
+        );
+    }
+
     // DES engine raw throughput.
     b.time("des_engine_1M_events", 1, 5, || {
         let mut eng: lime::sim::Engine<u64> = lime::sim::Engine::new();

@@ -11,17 +11,19 @@
 //!
 //! The legacy (method × bandwidth × pattern) grid is the baseline slice of
 //! the composable [`scenario::ScenarioMatrix`], which adds cluster-size,
-//! `#Seg`-override and pressure (joint memory/bandwidth fluctuation
-//! script) axes; the `--id sweep` experiment evaluates one matrix per
-//! cluster point and writes one `lime-sweep-v3` JSON each. See
+//! `#Seg`-override, pressure (joint memory/bandwidth fluctuation script)
+//! and arrival-process (single run vs continuous queued stream, served
+//! through `serve::simqueue`) axes; the `--id sweep` experiment evaluates
+//! one matrix per cluster point and writes one `lime-sweep-v4` JSON each,
+//! with per-request queueing-delay/TTFT/TBT arrays on stream cells. See
 //! `docs/ARCHITECTURE.md` for the module map and `docs/SWEEPS.md` for
 //! the artifact schemas.
 
 pub mod scenario;
 
 pub use scenario::{
-    validate_sweep, validate_sweep_v2, validate_sweep_v3, ScenarioCell, ScenarioMatrix,
-    SegChoice, SweepSummary,
+    validate_sweep, validate_sweep_v2, validate_sweep_v3, validate_sweep_v4, ArrivalSpec,
+    RequestLevel, ScenarioCell, ScenarioMatrix, SegChoice, SweepSummary,
 };
 
 use crate::adapt::{MemScenario, Script};
@@ -480,12 +482,26 @@ fn lowmem_pressure_axis(tokens: usize) -> Vec<Script> {
     ]
 }
 
+/// The stream point of the arrival axis for a cluster: twice the device
+/// count of queued requests (so bursty admissions always need at least
+/// two batches), Poisson rate 0.5 req/s on sporadic cells.
+fn stream_arrivals(cluster: &Cluster) -> Vec<ArrivalSpec> {
+    vec![
+        ArrivalSpec::Single,
+        ArrivalSpec::Stream {
+            count: 2 * cluster.len(),
+            lambda: 0.5,
+        },
+    ]
+}
+
 /// The scenario matrices behind `--id sweep`: the three extremely-low-
 /// memory settings (Figs 15–17, Llama3.3-70B) across the full bandwidth
 /// axis, plus cluster-size points — 2/3/4-device subsets of the
 /// heterogeneous E3 Jetson cluster (Qwen3-32B, the E2-scale model) — all
-/// with `#Seg`-override and pressure-script axes (correlated multi-device
-/// dips and joint bandwidth+memory scenarios included) on the LIME
+/// with `#Seg`-override, pressure-script (correlated multi-device dips
+/// and joint bandwidth+memory scenarios included) and arrival-process
+/// (single run vs continuous 2·|D|-request stream) axes on the LIME
 /// family.
 fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMatrix<'_>> {
     let mut out = Vec::new();
@@ -496,6 +512,7 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
         ("lowmem3", Cluster::lowmem_setting3()),
     ];
     for (label, cluster) in lowmem {
+        let arrivals = stream_arrivals(&cluster);
         out.push(
             ScenarioMatrix::new(
                 label,
@@ -507,7 +524,8 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
                 tokens,
             )
             .with_segs(vec![SegChoice::Auto, SegChoice::Fixed(4), SegChoice::Fixed(8)])
-            .with_pressure(lowmem_pressure_axis(tokens)),
+            .with_pressure(lowmem_pressure_axis(tokens))
+            .with_arrivals(arrivals),
         );
     }
 
@@ -529,6 +547,7 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
         // step.
         let all_devices: Vec<usize> = (0..cluster.len()).collect();
         let corr = MemScenario::correlated_dip("corr-dip-all", &all_devices, 1, gib(2.0), down, up);
+        let arrivals = stream_arrivals(&cluster);
         out.push(
             ScenarioMatrix::new(
                 label,
@@ -544,7 +563,8 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
                 Script::none(),
                 Script::from_mem(dip),
                 Script::from_mem(corr),
-            ]),
+            ])
+            .with_arrivals(arrivals),
         );
     }
     out
@@ -552,10 +572,11 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
 
 /// The `--id sweep` experiment: evaluate every scenario matrix —
 /// extremely-low-memory settings plus cluster-size points, each crossing
-/// bandwidth × pattern × method with `#Seg`-override and pressure-script
-/// axes (correlated multi-device dips, joint bandwidth+memory scenarios)
-/// on the LIME family — on the work-stealing pool, and emit **one
-/// machine-readable JSON per grid** (schema `lime-sweep-v3`, validated by
+/// bandwidth × pattern × method with `#Seg`-override, pressure-script
+/// (correlated multi-device dips, joint bandwidth+memory scenarios) and
+/// arrival-process (single run vs continuous queued stream) axes on the
+/// LIME family — on the work-stealing pool, and emit **one
+/// machine-readable JSON per grid** (schema `lime-sweep-v4`, validated by
 /// `lime sweep-check`) into `out_dir`. Returns the paths written; any I/O
 /// failure is an error (the CLI exits non-zero), never a silently missing
 /// artifact.
@@ -567,7 +588,7 @@ pub fn sweep(tokens: usize, out_dir: &str) -> anyhow::Result<Vec<std::path::Path
     let matrices = sweep_matrices(&methods, tokens);
     let mut written = Vec::new();
     println!(
-        "\n== sweep: {} grids × (bandwidth × pattern × {} methods, + #Seg/pressure axes on LIME) ==",
+        "\n== sweep: {} grids × (bandwidth × pattern × {} methods, + #Seg/pressure/arrival axes on LIME) ==",
         matrices.len(),
         methods.len()
     );
@@ -680,7 +701,7 @@ mod tests {
     }
 
     #[test]
-    fn sweep_emits_one_valid_v3_json_per_grid() {
+    fn sweep_emits_one_valid_v4_json_per_grid() {
         use crate::util::json::Json;
         let dir = std::env::temp_dir().join(format!("lime_sweep_{}", std::process::id()));
         let out = dir.to_str().unwrap().to_string();
@@ -691,12 +712,15 @@ mod tests {
             let json = Json::parse(src.trim()).unwrap();
             let summary = validate_sweep(&json)
                 .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
-            assert_eq!(summary.schema, "lime-sweep-v3");
+            assert_eq!(summary.schema, "lime-sweep-v4");
             let lowmem = summary.grid.starts_with("lowmem");
-            // lowmem: 1 LIME × 5bw × 2pat × 3seg × 5scripts + 6 baselines × 10.
-            // edge:   1 LIME × 2bw × 2pat × 3seg × 3scripts + 6 baselines × 4.
-            assert_eq!(summary.cells, if lowmem { 210 } else { 60 }, "{}", summary.grid);
+            // lowmem: 1 LIME × 5bw × 2pat × 3seg × 5scripts × 2arrivals
+            //         + 6 baselines × 10.
+            // edge:   1 LIME × 2bw × 2pat × 3seg × 3scripts × 2arrivals
+            //         + 6 baselines × 4.
+            assert_eq!(summary.cells, if lowmem { 360 } else { 96 }, "{}", summary.grid);
             assert_eq!(summary.completed + summary.oom, summary.cells);
+            let mut stream_with_requests = 0usize;
             for cell in json.get("cells").unwrap().as_arr().unwrap() {
                 let key = cell.get("method").unwrap().as_str().unwrap();
                 let oom = cell.get("oom").unwrap().as_bool().unwrap();
@@ -708,7 +732,21 @@ mod tests {
                 if key == "lime" && auto_seg {
                     assert!(!oom, "{}: {cell}", path.display());
                 }
+                let arrival = cell.get("arrival").unwrap().as_str().unwrap();
+                if arrival != "single" && !oom {
+                    assert!(
+                        cell.get("requests").unwrap().get("ttft_s").is_some(),
+                        "{}: stream cell without request metrics: {cell}",
+                        path.display()
+                    );
+                    stream_with_requests += 1;
+                }
             }
+            assert!(
+                stream_with_requests > 0,
+                "{}: no completed stream cells",
+                path.display()
+            );
         }
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -717,7 +755,7 @@ mod tests {
     fn sweep_covers_the_new_axes() {
         // The acceptance shape: cluster-size points at 2/3/4 devices, and
         // #Seg-override / correlated multi-device / joint bandwidth+memory
-        // coordinates present in the evaluated cells.
+        // / stream-arrival coordinates present in the evaluated cells.
         let methods = all();
         let matrices = sweep_matrices(&methods, 3);
         let sizes: std::collections::BTreeSet<usize> =
@@ -725,6 +763,11 @@ mod tests {
         assert!(sizes.contains(&2) && sizes.contains(&3) && sizes.contains(&4));
         let lowmem1 = &matrices[0];
         assert!(lowmem1.segs.len() == 3 && lowmem1.pressure.len() == 5);
+        assert_eq!(lowmem1.arrivals.len(), 2);
+        assert!(matches!(
+            lowmem1.arrivals[1],
+            ArrivalSpec::Stream { count, .. } if count == 2 * lowmem1.cluster.len()
+        ));
         // The correlated script really hits more than one device; the
         // joint script really carries both channels.
         let corr = &lowmem1.pressure[3];
@@ -738,6 +781,17 @@ mod tests {
         assert!(cells.iter().any(|c| c.mem == "squeeze-d0"));
         assert!(cells.iter().any(|c| c.mem == "corr-dip-d01"));
         assert!(cells.iter().any(|c| c.mem == "joint-sag-squeeze-d0"));
+        // Stream cells exist under BOTH arrival patterns and carry
+        // per-request metrics (the continuous-serving acceptance shape).
+        for pattern in [Pattern::Sporadic, Pattern::Bursty] {
+            let stream = cells
+                .iter()
+                .find(|c| c.arrival != "single" && c.pattern == pattern && c.requests.is_some())
+                .unwrap_or_else(|| panic!("no completed {pattern:?} stream cell"));
+            let req = stream.requests.as_ref().unwrap();
+            assert_eq!(req.queueing_delay_s.len(), 2 * lowmem1.cluster.len());
+            assert!(req.ttft_s.iter().all(|&t| t > 0.0));
+        }
         // Every edge matrix carries its whole-subset correlated dip.
         for m in &matrices[3..] {
             let corr = &m.pressure[2];

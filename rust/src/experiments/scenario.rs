@@ -16,26 +16,36 @@
 //!   driven jointly through `adapt::OnlinePlanner::apply_pressure`, the
 //!   KV-transfer protocol, and the link model mid-simulation
 //!   ([`crate::pipeline::run_interleaved_scripted`]), so the §IV-D online
-//!   adaptation machinery shows up in sweep outputs.
+//!   adaptation machinery shows up in sweep outputs. On stream cells
+//!   (below) scripts fire on the *stream* step timeline, spanning
+//!   requests.
+//! * **arrival process** — [`ArrivalSpec`]: the legacy single batched run
+//!   ([`ArrivalSpec::Single`], the baseline point) vs a continuous stream
+//!   of `count` queued requests ([`ArrivalSpec::Stream`]) served FIFO
+//!   through `serve::simqueue` on one shared cluster timeline. Stream
+//!   arrivals follow the cell's *pattern* coordinate (§V-A: sporadic →
+//!   Poisson at `lambda` req/s, bursty → simultaneous submission) and
+//!   admission batches are capped at the pattern's micro-batch count.
+//!   Stream cells carry request-level metric arrays (queueing delay,
+//!   TTFT, time between tokens).
 //!
 //! The override axes only have meaning for methods that plan offline and
 //! adapt online (the LIME family — [`Method::adaptive_exec`] returns
 //! `Some`); baseline methods are measured once per (bandwidth, pattern) at
-//! the matrix's baseline point (auto seg, no pressure), which every matrix
-//! is required to contain.
+//! the matrix's baseline point (auto seg, no pressure, single run), which
+//! every matrix is required to contain.
 //!
 //! Cells are independent simulations and evaluate on the persistent
 //! work-stealing pool with results written by index —
 //! [`ScenarioMatrix::eval`] is bit-identical to
 //! [`ScenarioMatrix::eval_sequential`] at any worker count (pinned in
-//! `rust/tests/pool.rs`). Artifacts serialize as schema `lime-sweep-v3`,
-//! a strict superset of `lime-sweep-v2` (every v2 key is still present
-//! with the same meaning — pressure scripts project onto the v2
-//! `axes.mem_scenarios` shape) plus full script metadata
-//! (`axes.pressure_scripts`) and a per-cell bandwidth-stall counter
-//! (`bw_stalls`); [`validate_sweep`] accepts both versions and is the
-//! machine check behind `lime sweep-check` and the CI artifact gate. See
-//! `docs/SWEEPS.md` for the full schema reference.
+//! `rust/tests/pool.rs`). Artifacts serialize as schema `lime-sweep-v4`,
+//! a strict superset of `lime-sweep-v3` (which was a strict superset of
+//! v2): every v3 key keeps its meaning, plus the `axes.arrivals` metadata,
+//! a per-cell `arrival` coordinate, and per-cell `requests` metric arrays
+//! (null on single-run and OOM cells); [`validate_sweep`] accepts v2, v3
+//! and v4 and is the machine check behind `lime sweep-check` and the CI
+//! artifact gate. See `docs/SWEEPS.md` for the full schema reference.
 
 use crate::adapt::{MemScenario, Script};
 use crate::baselines::{by_name, plan_opts, Method};
@@ -44,10 +54,11 @@ use crate::model::ModelSpec;
 use crate::net::BandwidthTrace;
 use crate::pipeline::{run_interleaved_scripted, ExecOptions};
 use crate::plan::{plan, plan_with_segs, Allocation};
+use crate::serve::simqueue::serve_interleaved;
 use crate::sim::TraceMode;
 use crate::util::json::{obj, Json};
 use crate::util::pool;
-use crate::workload::Pattern;
+use crate::workload::{stream_requests, Pattern};
 
 /// One value of the `#Seg`-override axis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,6 +78,66 @@ impl SegChoice {
     }
 }
 
+/// Deterministic seed for the arrival-stream generator — fixed so every
+/// cell of a matrix (and every worker count) draws the same stream.
+const STREAM_SEED: u64 = 0x51DE_0A01;
+
+/// One value of the arrival-process axis.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalSpec {
+    /// The legacy single batched run (micro-batch count from the pattern)
+    /// — the baseline point every matrix starts with.
+    Single,
+    /// A continuous stream of `count` queued requests served FIFO through
+    /// `serve::simqueue`. Arrival times follow the cell's pattern
+    /// coordinate: sporadic → Poisson at `lambda` req/s, bursty → all at
+    /// t = 0 (`lambda` unused). Each request decodes the matrix's
+    /// `tokens`; admission batches are capped at the pattern's micro-batch
+    /// count.
+    Stream { count: usize, lambda: f64 },
+}
+
+impl ArrivalSpec {
+    /// Stable axis label used as the per-cell coordinate in artifacts.
+    ///
+    /// The label encodes the request count only, so an axis may not carry
+    /// two stream points with the same `count` and different rates —
+    /// `with_arrivals` rejects that as a duplicate label. A
+    /// rate-sensitivity axis should vary `count` alongside `lambda` (or
+    /// run one matrix per rate); keeping `lambda` out of the label keeps
+    /// cell coordinates comparable across artifacts.
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalSpec::Single => "single".into(),
+            ArrivalSpec::Stream { count, .. } => format!("stream{count}"),
+        }
+    }
+
+    fn json(&self) -> Json {
+        match self {
+            ArrivalSpec::Single => obj(&[
+                ("label", "single".into()),
+                ("kind", "single".into()),
+            ]),
+            ArrivalSpec::Stream { count, lambda } => obj(&[
+                ("label", self.label().into()),
+                ("kind", "stream".into()),
+                ("count", (*count).into()),
+                ("lambda", Json::Num(*lambda)),
+            ]),
+        }
+    }
+}
+
+/// Request-level metric arrays of one stream cell (one entry per request,
+/// in admission order; seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestLevel {
+    pub queueing_delay_s: Vec<f64>,
+    pub ttft_s: Vec<f64>,
+    pub tbt_s: Vec<f64>,
+}
+
 /// One evaluated matrix cell. Superset of the legacy grid
 /// [`crate::experiments::Cell`]: the axis coordinates plus the §IV-D
 /// adaptation counters that make online behaviour visible in artifacts.
@@ -80,10 +151,15 @@ pub struct ScenarioCell {
     pub seg: SegChoice,
     /// Label of the pressure [`Script`] this cell ran under.
     pub mem: String,
+    /// Label of the [`ArrivalSpec`] this cell ran under (`"single"` for
+    /// the legacy one-run point).
+    pub arrival: String,
     /// `#Seg` of the allocation actually executed (None for baseline
     /// methods and OOM cells).
     pub planned_seg: Option<usize>,
-    /// `None` = OOM (planning or placement failed).
+    /// `None` = OOM (planning or placement failed). On stream cells this
+    /// is the mean decode latency per generated token (queueing shows up
+    /// in `requests` instead).
     pub ms_per_token: Option<f64>,
     pub online_plans_fired: Option<usize>,
     pub kv_tokens_transferred: Option<u64>,
@@ -91,6 +167,8 @@ pub struct ScenarioCell {
     /// Link acquisitions that waited on the busy shared medium — inflated
     /// by scripted bandwidth sags.
     pub bw_stalls: Option<u64>,
+    /// Request-level metrics — `Some` exactly on completed stream cells.
+    pub requests: Option<RequestLevel>,
 }
 
 impl ScenarioCell {
@@ -110,10 +188,12 @@ pub(crate) fn pattern_str(p: Pattern) -> &'static str {
 /// evaluation/serialization):
 ///
 /// * every axis is non-empty;
-/// * `segs[0] == SegChoice::Auto` and `pressure[0]` has no events on
-///   either channel — the baseline point non-adaptive methods are
-///   measured at;
+/// * `segs[0] == SegChoice::Auto`, `pressure[0]` has no events on either
+///   channel, and `arrivals[0] == ArrivalSpec::Single` — the baseline
+///   point non-adaptive methods are measured at;
 /// * fixed seg values are ≥ 2 and unique; script labels are unique;
+///   arrival labels are unique, stream counts ≥ 1, lambdas finite and
+///   positive;
 /// * memory events address devices inside the cluster; bandwidth scales
 ///   are finite and positive.
 pub struct ScenarioMatrix<'a> {
@@ -127,6 +207,8 @@ pub struct ScenarioMatrix<'a> {
     pub segs: Vec<SegChoice>,
     /// The pressure axis: joint memory/bandwidth fluctuation scripts.
     pub pressure: Vec<Script>,
+    /// The arrival-process axis: single batched run vs queued streams.
+    pub arrivals: Vec<ArrivalSpec>,
     pub tokens: usize,
 }
 
@@ -145,6 +227,7 @@ struct PointRef {
     pi: usize,
     si: usize,
     mj: usize,
+    ai: usize,
 }
 
 impl<'a> ScenarioMatrix<'a> {
@@ -168,6 +251,7 @@ impl<'a> ScenarioMatrix<'a> {
             patterns,
             segs: vec![SegChoice::Auto],
             pressure: vec![Script::none()],
+            arrivals: vec![ArrivalSpec::Single],
             tokens,
         }
     }
@@ -195,6 +279,14 @@ impl<'a> ScenarioMatrix<'a> {
         self
     }
 
+    /// Replace the arrival-process axis (must start with
+    /// [`ArrivalSpec::Single`], the baseline point).
+    pub fn with_arrivals(mut self, arrivals: Vec<ArrivalSpec>) -> Self {
+        self.arrivals = arrivals;
+        self.assert_valid();
+        self
+    }
+
     fn assert_valid(&self) {
         assert!(!self.bandwidths_mbps.is_empty(), "matrix needs bandwidths");
         assert!(!self.patterns.is_empty(), "matrix needs patterns");
@@ -214,6 +306,25 @@ impl<'a> ScenarioMatrix<'a> {
             self.pressure.first().is_some_and(Script::is_none),
             "pressure[0] must have no events (the baseline point)"
         );
+        assert!(
+            matches!(self.arrivals.first(), Some(ArrivalSpec::Single)),
+            "arrivals[0] must be ArrivalSpec::Single (the baseline point)"
+        );
+        let mut arrival_labels = std::collections::BTreeSet::new();
+        for a in &self.arrivals {
+            assert!(
+                arrival_labels.insert(a.label()),
+                "duplicate arrival spec '{}'",
+                a.label()
+            );
+            if let ArrivalSpec::Stream { count, lambda } = a {
+                assert!(*count >= 1, "stream arrival needs at least one request");
+                assert!(
+                    lambda.is_finite() && *lambda > 0.0,
+                    "stream arrival rate must be finite and > 0, got {lambda}"
+                );
+            }
+        }
         let mut labels = std::collections::BTreeSet::new();
         for script in &self.pressure {
             assert!(
@@ -243,8 +354,8 @@ impl<'a> ScenarioMatrix<'a> {
 
     /// Cell coordinates in deterministic (index) order: methods outermost,
     /// then bandwidths, patterns, and — for adaptive methods only — the
-    /// seg and pressure axes. With singleton override axes this is exactly
-    /// the legacy grid's job order.
+    /// seg, pressure and arrival axes. With singleton override axes this
+    /// is exactly the legacy grid's job order.
     fn points(&self) -> Vec<PointRef> {
         let mut pts = Vec::new();
         for mi in 0..self.methods.len() {
@@ -254,11 +365,20 @@ impl<'a> ScenarioMatrix<'a> {
                     if adaptive {
                         for si in 0..self.segs.len() {
                             for mj in 0..self.pressure.len() {
-                                pts.push(PointRef { mi, bi, pi, si, mj });
+                                for ai in 0..self.arrivals.len() {
+                                    pts.push(PointRef { mi, bi, pi, si, mj, ai });
+                                }
                             }
                         }
                     } else {
-                        pts.push(PointRef { mi, bi, pi, si: 0, mj: 0 });
+                        pts.push(PointRef {
+                            mi,
+                            bi,
+                            pi,
+                            si: 0,
+                            mj: 0,
+                            ai: 0,
+                        });
                     }
                 }
             }
@@ -274,7 +394,7 @@ impl<'a> ScenarioMatrix<'a> {
             .filter(|m| m.adaptive_exec().is_some())
             .count();
         let base = self.bandwidths_mbps.len() * self.patterns.len();
-        adaptive * base * self.segs.len() * self.pressure.len()
+        adaptive * base * self.segs.len() * self.pressure.len() * self.arrivals.len()
             + (self.methods.len() - adaptive) * base
     }
 
@@ -355,12 +475,14 @@ impl<'a> ScenarioMatrix<'a> {
                 pattern,
                 seg: self.segs[p.si],
                 mem: self.pressure[p.mj].label.clone(),
+                arrival: self.arrivals[p.ai].label(),
                 planned_seg: None,
                 ms_per_token: None,
                 online_plans_fired: None,
                 kv_tokens_transferred: None,
                 emergency_steps: None,
                 bw_stalls: None,
+                requests: None,
             };
             match method.adaptive_exec() {
                 None => {
@@ -393,21 +515,59 @@ impl<'a> ScenarioMatrix<'a> {
                             trace_mode: TraceMode::Off,
                             ..ExecOptions::default()
                         };
-                        let r = run_interleaved_scripted(
-                            alloc,
-                            &self.cluster,
-                            &trace,
-                            pattern.micro_batches(&self.cluster),
-                            self.tokens,
-                            &exec,
-                            &self.pressure[p.mj],
-                        );
-                        cell.planned_seg = Some(alloc.seg);
-                        cell.ms_per_token = Some(r.ms_per_token());
-                        cell.online_plans_fired = Some(r.online_plans_fired);
-                        cell.kv_tokens_transferred = Some(r.kv_tokens_transferred);
-                        cell.emergency_steps = Some(r.emergency_steps);
-                        cell.bw_stalls = Some(r.bw_stalls);
+                        match self.arrivals[p.ai] {
+                            ArrivalSpec::Single => {
+                                let r = run_interleaved_scripted(
+                                    alloc,
+                                    &self.cluster,
+                                    &trace,
+                                    pattern.micro_batches(&self.cluster),
+                                    self.tokens,
+                                    &exec,
+                                    &self.pressure[p.mj],
+                                );
+                                cell.planned_seg = Some(alloc.seg);
+                                cell.ms_per_token = Some(r.ms_per_token());
+                                cell.online_plans_fired = Some(r.online_plans_fired);
+                                cell.kv_tokens_transferred = Some(r.kv_tokens_transferred);
+                                cell.emergency_steps = Some(r.emergency_steps);
+                                cell.bw_stalls = Some(r.bw_stalls);
+                            }
+                            ArrivalSpec::Stream { count, lambda } => {
+                                let reqs = stream_requests(
+                                    pattern,
+                                    STREAM_SEED,
+                                    count,
+                                    lambda,
+                                    exec.prompt_tokens,
+                                    self.tokens,
+                                );
+                                let sr = serve_interleaved(
+                                    alloc,
+                                    &self.cluster,
+                                    &trace,
+                                    pattern.micro_batches(&self.cluster),
+                                    &exec,
+                                    &self.pressure[p.mj],
+                                    &reqs,
+                                );
+                                cell.planned_seg = Some(alloc.seg);
+                                cell.ms_per_token = Some(sr.ms_per_token());
+                                cell.online_plans_fired = Some(sr.online_plans_fired);
+                                cell.kv_tokens_transferred = Some(sr.kv_tokens_transferred);
+                                cell.emergency_steps = Some(sr.emergency_steps);
+                                cell.bw_stalls = Some(sr.bw_stalls);
+                                cell.requests = Some(RequestLevel {
+                                    queueing_delay_s: sr
+                                        .requests
+                                        .iter()
+                                        .map(|r| r.queueing_delay)
+                                        .collect(),
+                                    ttft_s: sr.requests.iter().map(|r| r.ttft).collect(),
+                                    tbt_s: sr.requests.iter().map(|r| r.tbt).collect(),
+                                });
+                            }
+                        }
                     }
                 }
             }
@@ -420,16 +580,29 @@ impl<'a> ScenarioMatrix<'a> {
         }
     }
 
-    /// Serialize evaluated cells as a `lime-sweep-v3` artifact — a strict
-    /// superset of `lime-sweep-v2`: every v2 key is present with its v2
-    /// meaning (`axes.mem_scenarios` carries each script's memory
-    /// channel), plus `axes.pressure_scripts` (full joint-script
-    /// metadata) and the per-cell `bw_stalls` counter.
+    /// Serialize evaluated cells as a `lime-sweep-v4` artifact — a strict
+    /// superset of `lime-sweep-v3` (itself a strict superset of v2): every
+    /// v3 key is present with its meaning (`axes.mem_scenarios` carries
+    /// each script's memory channel, `axes.pressure_scripts` the full
+    /// joint-script metadata, `bw_stalls` the per-cell stall counter),
+    /// plus `axes.arrivals`, the per-cell `arrival` coordinate, and the
+    /// per-cell `requests` metric arrays (null on single-run/OOM cells).
     pub fn to_json(&self, cells: &[ScenarioCell]) -> Json {
         self.assert_valid();
         let cell_rows: Vec<Json> = cells
             .iter()
             .map(|c| {
+                let requests = match &c.requests {
+                    None => Json::Null,
+                    Some(r) => {
+                        let arr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+                        obj(&[
+                            ("queueing_delay_s", arr(&r.queueing_delay_s)),
+                            ("ttft_s", arr(&r.ttft_s)),
+                            ("tbt_s", arr(&r.tbt_s)),
+                        ])
+                    }
+                };
                 obj(&[
                     ("method", c.method_key.into()),
                     ("method_name", c.method.into()),
@@ -437,6 +610,7 @@ impl<'a> ScenarioMatrix<'a> {
                     ("pattern", pattern_str(c.pattern).into()),
                     ("seg", c.seg.json()),
                     ("mem", c.mem.as_str().into()),
+                    ("arrival", c.arrival.as_str().into()),
                     (
                         "planned_seg",
                         c.planned_seg.map_or(Json::Null, Into::into),
@@ -460,6 +634,7 @@ impl<'a> ScenarioMatrix<'a> {
                         c.emergency_steps.map_or(Json::Null, Into::into),
                     ),
                     ("bw_stalls", c.bw_stalls.map_or(Json::Null, Into::into)),
+                    ("requests", requests),
                 ])
             })
             .collect();
@@ -549,9 +724,13 @@ impl<'a> ScenarioMatrix<'a> {
             ),
             ("mem_scenarios", Json::Arr(mem_rows)),
             ("pressure_scripts", Json::Arr(script_rows)),
+            (
+                "arrivals",
+                Json::Arr(self.arrivals.iter().map(ArrivalSpec::json).collect()),
+            ),
         ]);
         obj(&[
-            ("schema", "lime-sweep-v3".into()),
+            ("schema", "lime-sweep-v4".into()),
             ("grid", self.grid.as_str().into()),
             ("model", self.spec.name.as_str().into()),
             ("tokens", self.tokens.into()),
@@ -584,11 +763,13 @@ fn field<'j>(json: &'j Json, key: &str, ctx: &str) -> Result<&'j Json, String> {
         .ok_or_else(|| format!("{ctx}: missing '{key}'"))
 }
 
-/// Which sweep-artifact schema a validation pass enforces.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Which sweep-artifact schema a validation pass enforces. Ordered:
+/// every version is a strict superset of the previous one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 enum SweepSchema {
     V2,
     V3,
+    V4,
 }
 
 impl SweepSchema {
@@ -596,19 +777,21 @@ impl SweepSchema {
         match self {
             SweepSchema::V2 => "lime-sweep-v2",
             SweepSchema::V3 => "lime-sweep-v3",
+            SweepSchema::V4 => "lime-sweep-v4",
         }
     }
 }
 
 /// Validate one artifact against whichever supported schema it declares
-/// (`lime-sweep-v2` or `lime-sweep-v3`) — the check behind
-/// `lime sweep-check` and the CI artifact gate.
+/// (`lime-sweep-v2`, `lime-sweep-v3` or `lime-sweep-v4`) — the check
+/// behind `lime sweep-check` and the CI artifact gate.
 pub fn validate_sweep(json: &Json) -> Result<SweepSummary, String> {
     match json.get("schema").and_then(Json::as_str) {
         Some("lime-sweep-v2") => validate_sweep_impl(json, SweepSchema::V2),
         Some("lime-sweep-v3") => validate_sweep_impl(json, SweepSchema::V3),
+        Some("lime-sweep-v4") => validate_sweep_impl(json, SweepSchema::V4),
         other => Err(format!(
-            "expected schema lime-sweep-v2 or lime-sweep-v3, got {other:?}"
+            "expected schema lime-sweep-v2, lime-sweep-v3 or lime-sweep-v4, got {other:?}"
         )),
     }
 }
@@ -630,13 +813,25 @@ pub fn validate_sweep_v3(json: &Json) -> Result<SweepSummary, String> {
     }
 }
 
+/// Validate one artifact strictly against the `lime-sweep-v4` schema.
+pub fn validate_sweep_v4(json: &Json) -> Result<SweepSummary, String> {
+    match json.get("schema").and_then(Json::as_str) {
+        Some("lime-sweep-v4") => validate_sweep_impl(json, SweepSchema::V4),
+        other => Err(format!("expected schema lime-sweep-v4, got {other:?}")),
+    }
+}
+
 /// The shared validation core: structural keys, axis metadata, per-cell
 /// coordinate membership, `Method::key` round-trips, OOM/metric
 /// consistency, cell uniqueness, and the exact per-method cell counts the
 /// matrix cross implies. V3 additionally requires `axes.pressure_scripts`
 /// (labels aligned with `axes.mem_scenarios`, baseline script empty on
 /// both channels, positive bandwidth scales) and the per-cell `bw_stalls`
-/// counter.
+/// counter. V4 additionally requires `axes.arrivals` (first entry
+/// `single`; stream entries with positive integer `count` and finite
+/// positive `lambda`), the per-cell `arrival` coordinate, and the
+/// per-cell `requests` arrays — present with `count` entries exactly on
+/// completed stream cells, null otherwise.
 fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary, String> {
     let grid = field(json, "grid", "artifact")?
         .as_str()
@@ -725,9 +920,9 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
         mem_labels.push(label.to_string());
     }
 
-    // V3: the full joint-script axis must exist and align with the v2
+    // V3+: the full joint-script axis must exist and align with the v2
     // projection label-for-label.
-    if schema == SweepSchema::V3 {
+    if schema >= SweepSchema::V3 {
         let scripts = field(axes, "pressure_scripts", "axes")?
             .as_arr()
             .ok_or("axes.pressure_scripts must be an array")?;
@@ -803,6 +998,55 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
         }
     }
 
+    // V4: the arrival-process axis — label-keyed entries, first one the
+    // single-run baseline, stream entries with positive count and rate.
+    // `arrival_counts` maps stream labels to their request counts so the
+    // per-cell `requests` arrays can be length-checked below.
+    let mut arrival_labels: Vec<String> = Vec::new();
+    let mut arrival_counts: std::collections::BTreeMap<String, usize> =
+        std::collections::BTreeMap::new();
+    if schema >= SweepSchema::V4 {
+        let arrivals = field(axes, "arrivals", "axes")?
+            .as_arr()
+            .ok_or("axes.arrivals must be an array")?;
+        if arrivals.is_empty() {
+            return Err("axes.arrivals must be non-empty".into());
+        }
+        for (i, a) in arrivals.iter().enumerate() {
+            let ctx = format!("axes.arrivals[{i}]");
+            let label = field(a, "label", &ctx)?
+                .as_str()
+                .ok_or_else(|| format!("{ctx}.label must be a string"))?;
+            let kind = field(a, "kind", &ctx)?
+                .as_str()
+                .ok_or_else(|| format!("{ctx}.kind must be a string"))?;
+            match kind {
+                "single" => {}
+                "stream" => {
+                    let count = match a.get("count").and_then(Json::as_usize) {
+                        Some(c) if c >= 1 => c,
+                        _ => return Err(format!("{ctx}.count must be an integer >= 1")),
+                    };
+                    match a.get("lambda").and_then(Json::as_f64) {
+                        Some(l) if l.is_finite() && l > 0.0 => {}
+                        _ => {
+                            return Err(format!("{ctx}.lambda must be a finite number > 0"));
+                        }
+                    }
+                    arrival_counts.insert(label.to_string(), count);
+                }
+                other => return Err(format!("{ctx}.kind must be single|stream, got '{other}'")),
+            }
+            if i == 0 && kind != "single" {
+                return Err("axes.arrivals[0] must be the single-run baseline".into());
+            }
+            if arrival_labels.iter().any(|l| l == label) {
+                return Err(format!("{ctx}: duplicate arrival label '{label}'"));
+            }
+            arrival_labels.push(label.to_string());
+        }
+    }
+
     let cells = field(json, "cells", "artifact")?
         .as_arr()
         .ok_or("'cells' must be an array")?;
@@ -855,6 +1099,25 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
                 "{ctx}: non-adaptive method '{key}' off the baseline point"
             ));
         }
+        // V4: the arrival coordinate, with non-adaptive methods pinned to
+        // the single-run baseline. Pre-v4 artifacts carry no arrival key;
+        // the uniqueness key below uses the baseline label for them.
+        let arrival = if schema >= SweepSchema::V4 {
+            let a = field(cell, "arrival", &ctx)?
+                .as_str()
+                .ok_or_else(|| format!("{ctx}.arrival must be a string"))?;
+            if !arrival_labels.iter().any(|l| l == a) {
+                return Err(format!("{ctx}: arrival '{a}' not on the axis"));
+            }
+            if !adaptive[key] && a != arrival_labels[0] {
+                return Err(format!(
+                    "{ctx}: non-adaptive method '{key}' off the single-run arrival point"
+                ));
+            }
+            a.to_string()
+        } else {
+            "single".to_string()
+        };
         let is_oom = field(cell, "oom", &ctx)?
             .as_bool()
             .ok_or_else(|| format!("{ctx}.oom must be a bool"))?;
@@ -873,7 +1136,7 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
         }
         let counters: &[&str] = match schema {
             SweepSchema::V2 => &["online_plans_fired", "kv_tokens_transferred", "emergency_steps"],
-            SweepSchema::V3 => &[
+            SweepSchema::V3 | SweepSchema::V4 => &[
                 "online_plans_fired",
                 "kv_tokens_transferred",
                 "emergency_steps",
@@ -892,7 +1155,42 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
                 }
             }
         }
-        if !seen.insert(format!("{key}|{bw}|{pattern}|{seg_label}|{mem}")) {
+        // V4: request-level metric arrays — an object with `count` equal-
+        // length number arrays exactly on completed stream cells, null
+        // everywhere else (single-run cells and OOM cells).
+        if schema >= SweepSchema::V4 {
+            let requests = field(cell, "requests", &ctx)?;
+            match arrival_counts.get(&arrival) {
+                Some(&count) if !is_oom => {
+                    for rk in ["queueing_delay_s", "ttft_s", "tbt_s"] {
+                        let arr = requests
+                            .get(rk)
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| format!("{ctx}.requests.{rk} must be an array"))?;
+                        if arr.len() != count {
+                            return Err(format!(
+                                "{ctx}.requests.{rk} has {} entries, expected {count} \
+                                 (the '{arrival}' stream size)",
+                                arr.len()
+                            ));
+                        }
+                        if arr.iter().any(|v| v.as_f64().is_none()) {
+                            return Err(format!(
+                                "{ctx}.requests.{rk} entries must be numbers"
+                            ));
+                        }
+                    }
+                }
+                _ => {
+                    if requests != &Json::Null {
+                        return Err(format!(
+                            "{ctx}.requests must be null on single-run and OOM cells"
+                        ));
+                    }
+                }
+            }
+        }
+        if !seen.insert(format!("{key}|{bw}|{pattern}|{seg_label}|{mem}|{arrival}")) {
             return Err(format!("{ctx}: duplicate cell coordinates"));
         }
         *per_method.entry(key.to_string()).or_default() += 1;
@@ -906,9 +1204,14 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
         }
     }
     let base = bandwidths.len() * patterns.len();
+    let arrival_axis_len = if schema >= SweepSchema::V4 {
+        arrival_labels.len()
+    } else {
+        1
+    };
     for key in &methods {
         let expect = if adaptive[key] {
-            base * seg_labels.len() * mem_labels.len()
+            base * seg_labels.len() * mem_labels.len() * arrival_axis_len
         } else {
             base
         };
@@ -950,6 +1253,13 @@ mod tests {
             MemScenario::none(),
             MemScenario::squeeze("squeeze-d0", 0, crate::util::bytes::gib(2.0), 1),
         ])
+        .with_arrivals(vec![
+            ArrivalSpec::Single,
+            ArrivalSpec::Stream {
+                count: 3,
+                lambda: 1.0,
+            },
+        ])
     }
 
     fn joint_matrix(methods: &[Box<dyn Method>]) -> ScenarioMatrix<'_> {
@@ -987,8 +1297,9 @@ mod tests {
     fn cell_count_expands_only_adaptive_methods() {
         let methods = all();
         let m = tiny_matrix(&methods);
-        // 1 adaptive (LIME) × 2bw × 2pat × 2seg × 2mem + 6 baselines × 2bw × 2pat.
-        assert_eq!(m.cell_count(), 16 + 24);
+        // 1 adaptive (LIME) × 2bw × 2pat × 2seg × 2mem × 2arrivals
+        // + 6 baselines × 2bw × 2pat.
+        assert_eq!(m.cell_count(), 32 + 24);
         assert_eq!(m.points().len(), m.cell_count());
     }
 
@@ -998,13 +1309,13 @@ mod tests {
         let m = tiny_matrix(&methods);
         for p in m.points() {
             if m.methods[p.mi].adaptive_exec().is_none() {
-                assert_eq!((p.si, p.mj), (0, 0));
+                assert_eq!((p.si, p.mj, p.ai), (0, 0, 0));
             }
         }
     }
 
     #[test]
-    fn eval_emits_valid_v3_artifact() {
+    fn eval_emits_valid_v4_artifact() {
         let methods = all();
         let m = tiny_matrix(&methods);
         let cells = m.eval();
@@ -1014,14 +1325,16 @@ mod tests {
         let parsed = Json::parse(&json.to_string()).unwrap();
         let summary = validate_sweep(&parsed).expect("artifact validates");
         assert_eq!(summary.grid, "e1-test");
-        assert_eq!(summary.schema, "lime-sweep-v3");
+        assert_eq!(summary.schema, "lime-sweep-v4");
         assert_eq!(summary.cells, m.cell_count());
         assert_eq!(summary.completed + summary.oom, summary.cells);
-        // The dispatcher and the strict v3 validator agree; the strict v2
-        // validator rejects a v3 artifact.
-        assert!(validate_sweep_v3(&parsed).is_ok());
+        // The dispatcher and the strict v4 validator agree; the strict
+        // v2/v3 validators reject a v4 artifact by its schema tag.
+        assert!(validate_sweep_v4(&parsed).is_ok());
+        assert!(validate_sweep_v3(&parsed).is_err());
         assert!(validate_sweep_v2(&parsed).is_err());
-        // LIME completes on E1 at every override point.
+        // LIME completes on E1 at every override point; stream cells carry
+        // per-request metric arrays of the stream size, single cells none.
         for c in cells.iter().filter(|c| c.method_key == "lime") {
             assert!(c.ms_per_token.is_some(), "{c:?}");
             assert!(c.planned_seg.is_some());
@@ -1029,7 +1342,59 @@ mod tests {
             if let SegChoice::Fixed(k) = c.seg {
                 assert_eq!(c.planned_seg, Some(k), "fixed seg must be honored");
             }
+            if c.arrival == "single" {
+                assert!(c.requests.is_none(), "{c:?}");
+            } else {
+                let r = c.requests.as_ref().expect("stream cell carries requests");
+                assert_eq!(r.queueing_delay_s.len(), 3);
+                assert_eq!(r.ttft_s.len(), 3);
+                assert_eq!(r.tbt_s.len(), 3);
+                assert!(r.ttft_s.iter().all(|&t| t > 0.0), "{c:?}");
+            }
         }
+        // Both arrival coordinates actually evaluated for LIME.
+        assert!(cells.iter().any(|c| c.method_key == "lime" && c.arrival == "single"));
+        assert!(cells.iter().any(|c| c.method_key == "lime" && c.arrival == "stream3"));
+    }
+
+    /// `tiny_matrix` without the stream arrival point — the shape whose
+    /// artifacts downgrade to v3/v2 by schema relabel (a stream axis adds
+    /// cells, which the older validators' exact-count checks reject).
+    fn tiny_matrix_single_arrival(methods: &[Box<dyn Method>]) -> ScenarioMatrix<'_> {
+        ScenarioMatrix::new(
+            "e1-test",
+            ModelSpec::llama2_13b(),
+            Cluster::env_e1(),
+            methods,
+            vec![100.0, 200.0],
+            vec![Pattern::Sporadic, Pattern::Bursty],
+            3,
+        )
+        .with_segs(vec![SegChoice::Auto, SegChoice::Fixed(4)])
+        .with_mem_scenarios(vec![
+            MemScenario::none(),
+            MemScenario::squeeze("squeeze-d0", 0, crate::util::bytes::gib(2.0), 1),
+        ])
+    }
+
+    #[test]
+    fn v4_artifact_downgrades_to_v3_by_relabel() {
+        // Strict-superset chain: with a singleton arrival axis, relabel a
+        // v4 artifact as v3 and it validates as v3 (the extra arrival
+        // keys are ignored).
+        let methods = all();
+        let m = tiny_matrix_single_arrival(&methods);
+        let cells = m.eval();
+        let parsed = Json::parse(&m.to_json(&cells).to_string()).unwrap();
+        let Json::Obj(mut map) = parsed else {
+            panic!("artifact must be an object")
+        };
+        map.insert("schema".into(), "lime-sweep-v3".into());
+        let v3 = Json::Obj(map);
+        let summary = validate_sweep(&v3).expect("relabelled artifact validates as v3");
+        assert_eq!(summary.schema, "lime-sweep-v3");
+        assert!(validate_sweep_v3(&v3).is_ok());
+        assert!(validate_sweep_v4(&v3).is_err());
     }
 
     #[test]
@@ -1073,10 +1438,11 @@ mod tests {
 
     #[test]
     fn validate_sweep_v2_still_accepts_v2_artifacts() {
-        // Build a v3 artifact, strip the v3 additions, relabel as v2 — the
-        // compatibility path `lime sweep-check` keeps for old artifacts.
+        // Build a (singleton-arrival) v4 artifact, strip the v3 additions,
+        // relabel as v2 — the compatibility path `lime sweep-check` keeps
+        // for old artifacts.
         let methods = all();
-        let m = tiny_matrix(&methods);
+        let m = tiny_matrix_single_arrival(&methods);
         let cells = m.eval();
         let parsed = Json::parse(&m.to_json(&cells).to_string()).unwrap();
         let Json::Obj(mut map) = parsed else {
@@ -1101,9 +1467,10 @@ mod tests {
         let good = m.to_json(&cells).to_string();
         assert!(validate_sweep(&Json::parse(&good).unwrap()).is_ok());
         for (needle, replacement, why) in [
-            ("lime-sweep-v3", "lime-sweep-v1", "unknown schema"),
+            ("lime-sweep-v4", "lime-sweep-v1", "unknown schema"),
             ("\"sporadic\"", "\"sporadıc\"", "unknown pattern"),
             ("\"oom\":false", "\"oom\":true", "oom/ms inconsistency"),
+            ("\"arrival\":\"stream3\"", "\"arrival\":\"stream9\"", "off-axis arrival"),
         ] {
             let bad = good.replacen(needle, replacement, 1);
             assert_ne!(bad, good, "{why}: replacement must apply");
@@ -1155,6 +1522,39 @@ mod tests {
         } else {
             panic!("artifact must be an object");
         }
+        // Dropping the v4 arrival axis must fail a v4 artifact.
+        let parsed = Json::parse(&good).unwrap();
+        if let Json::Obj(mut map) = parsed {
+            if let Some(Json::Obj(axes)) = map.get_mut("axes") {
+                axes.remove("arrivals");
+            }
+            assert!(validate_sweep(&Json::Obj(map)).is_err());
+        } else {
+            panic!("artifact must be an object");
+        }
+        // Nulling a completed stream cell's request arrays must fail: the
+        // per-request metrics are the point of the arrival axis.
+        let parsed = Json::parse(&good).unwrap();
+        if let Json::Obj(mut map) = parsed {
+            let Some(Json::Arr(cells)) = map.get_mut("cells") else {
+                panic!("cells must be an array")
+            };
+            let stream_cell = cells
+                .iter_mut()
+                .find(|c| {
+                    c.get("arrival").and_then(Json::as_str) == Some("stream3")
+                        && c.get("oom").and_then(Json::as_bool) == Some(false)
+                })
+                .expect("a completed stream cell exists");
+            let Json::Obj(cell) = stream_cell else {
+                panic!("cell must be an object")
+            };
+            cell.insert("requests".into(), Json::Null);
+            let err = validate_sweep(&Json::Obj(map)).unwrap_err();
+            assert!(err.contains("requests"), "unexpected error: {err}");
+        } else {
+            panic!("artifact must be an object");
+        }
     }
 
     #[test]
@@ -1180,5 +1580,46 @@ mod tests {
         let methods = all();
         let _ = tiny_matrix(&methods)
             .with_pressure(vec![Script::bandwidth_sag("sag-only", 0.5, 1, 2)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arrivals_must_start_with_single() {
+        let methods = all();
+        let _ = tiny_matrix(&methods).with_arrivals(vec![ArrivalSpec::Stream {
+            count: 4,
+            lambda: 1.0,
+        }]);
+    }
+
+    #[test]
+    fn stream_cells_reflect_the_arrival_pattern() {
+        // Bursty streams queue (every request after the first batch waits);
+        // sporadic streams spread arrivals. Request-level arrays surface
+        // exactly that.
+        let methods = all();
+        let m = tiny_matrix(&methods);
+        let cells = m.eval();
+        let stream = |pattern: Pattern| {
+            cells
+                .iter()
+                .find(|c| {
+                    c.method_key == "lime"
+                        && c.pattern == pattern
+                        && c.arrival == "stream3"
+                        && c.seg == SegChoice::Auto
+                        && c.mem == "none"
+                })
+                .and_then(|c| c.requests.as_ref())
+                .expect("completed stream cell")
+        };
+        let bursty = stream(Pattern::Bursty);
+        let sporadic = stream(Pattern::Sporadic);
+        // All bursty requests arrive at t=0; the first is admitted with no
+        // wait, so its delay is exactly zero.
+        assert_eq!(bursty.queueing_delay_s[0], 0.0);
+        assert!(bursty.queueing_delay_s.iter().all(|&q| q >= 0.0));
+        assert!(sporadic.queueing_delay_s.iter().all(|&q| q >= 0.0));
+        assert!(bursty.ttft_s.iter().zip(&bursty.queueing_delay_s).all(|(t, q)| t >= q));
     }
 }

@@ -43,11 +43,13 @@ fn usage() -> String {
        experiments  regenerate a paper figure/table (fig2a fig2b fig12 fig13\n\
                     fig14 lowmem fig18 tab5), or `sweep` for the scenario\n\
                     matrix (lowmem + cluster-size grids × bandwidth ×\n\
-                    pattern, #Seg-override and joint memory/bandwidth\n\
-                    pressure-script axes on LIME) with one lime-sweep-v3\n\
-                    JSON per grid\n\
+                    pattern, #Seg-override, joint memory/bandwidth\n\
+                    pressure-script and arrival-process axes on LIME —\n\
+                    continuous request streams with per-request TTFT/\n\
+                    queueing-delay metrics) with one lime-sweep-v4 JSON\n\
+                    per grid\n\
        sweep-check  validate sweep JSON artifacts against the\n\
-                    lime-sweep-v2/v3 schemas (non-zero exit on violation)\n\
+                    lime-sweep-v2/v3/v4 schemas (non-zero exit on violation)\n\
        bench-check  diff a fresh BENCH_*.json against a committed baseline\n\
                     with a tolerance band (non-zero exit on regression)\n\
      \n\
@@ -166,7 +168,7 @@ fn cmd_experiments(argv: &[String]) {
 fn cmd_sweep_check(argv: &[String]) {
     let cli = Cli::new(
         "lime sweep-check",
-        "validate sweep artifacts against the lime-sweep-v2/v3 schemas",
+        "validate sweep artifacts against the lime-sweep-v2/v3/v4 schemas",
     )
     .opt("dir", "sweeps", "directory holding SWEEP_*.json artifacts")
     .opt("file", "", "validate a single artifact instead of a directory");

@@ -1,0 +1,489 @@
+//! The unified executor core — one event-driven step driver shared by all
+//! three schedule policies (interleaved, traditional, tensor-parallel).
+//!
+//! Before this module existed, the three executors hand-rolled nearly
+//! identical step loops: each one built its own trace, GPU/SSD/link
+//! resources, counted `bw_stalls` and emergency steps, applied scripted
+//! fluctuation events, and assembled the final [`SimResult`]. The core
+//! now owns those shared mechanics; a [`SchedulePolicy`] owns only its
+//! schedule-specific decisions (micro-batch fronts and cross-segment
+//! offload overlap for the interleaved schedule, per-use loads for the
+//! traditional schedule, collective rounds for tensor parallelism).
+//!
+//! The split:
+//!
+//! * [`CoreState`] — trace lanes, per-device GPU [`Resource`]s and
+//!   [`SsdModel`]s, the shared LAN link with stall accounting
+//!   ([`CoreState::link_acquire`]), and the scripted effective-memory caps
+//!   ([`CoreState::mem_caps`]) every policy judges saturation against.
+//! * [`SchedulePolicy`] — `begin_request` (reset per-request state and
+//!   charge the prefill pass), `step` (one decode step), `on_mem_event`
+//!   (shift policy-internal thresholds when the core applies a scripted
+//!   memory event), and the §IV-D counters for result assembly.
+//! * [`ExecutorCore`] — the driver. It fires scripted [`MemEvent`]s /
+//!   `BwEvent`s on the **stream timeline** (global step counter), runs
+//!   policy steps, counts emergency steps (at most once per step), and
+//!   accumulates step latencies. [`ExecutorCore::run_request`] runs one
+//!   request *without resetting the timeline*, which is what lets
+//!   `serve::simqueue` simulate continuous request serving: back-to-back
+//!   requests share the same resources, SSD jitter streams, bandwidth
+//!   trace, and fluctuation script.
+//!
+//! The legacy single-request entry points (`run_interleaved`,
+//! `run_traditional`, `run_tensor_parallel`) are thin wrappers over
+//! [`run_single`] — a one-request stream starting at t = 0 — and are
+//! property-tested bit-identical to the pre-refactor executors
+//! (`rust/tests/serving_stream.rs`).
+
+use crate::adapt::{MemEvent, Script};
+use crate::cluster::Cluster;
+use crate::net::BandwidthTrace;
+use crate::pipeline::result::SimResult;
+use crate::sim::{Interval, Resource, SsdModel, Trace, TraceMode};
+
+/// The options every schedule policy shares, consumed by the core.
+/// `ExecOptions`/`TradOptions`/`TpOptions` each carry these three fields
+/// (with schedule-specific defaults) plus their policy-specific knobs, and
+/// convert via `From<&…Options>`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommonOptions {
+    /// Prompt length charged as a prefill pass before decoding.
+    pub prompt_tokens: usize,
+    /// RNG seed for the SSD write-jitter streams.
+    pub seed: u64,
+    /// Span recording detail (never affects `SimResult` timing fields).
+    pub trace_mode: TraceMode,
+}
+
+/// Per-step context handed to [`SchedulePolicy::step`].
+#[derive(Debug, Clone, Copy)]
+pub struct StepCtx {
+    /// Step index on the stream timeline — indexes the bandwidth trace and
+    /// the fluctuation script. Equals `local_step` for single-request runs.
+    pub global_step: usize,
+    /// Step index within the current request — the KV context grows with
+    /// this one.
+    pub local_step: usize,
+    /// Absolute time the step begins (= previous step's end).
+    pub step_start: f64,
+    /// Micro-batches in flight for the current request.
+    pub micro: usize,
+}
+
+/// Shared simulation state owned by the core: the mechanics that used to
+/// be copy-pasted across the three executors.
+pub struct CoreState {
+    /// Span lanes (Gantt rendering + overlap accounting).
+    pub trace: Trace,
+    /// One exclusive compute server per device.
+    pub gpus: Vec<Resource>,
+    /// One SSD channel per device (deterministic reads, jittery writes).
+    pub ssds: Vec<SsdModel>,
+    /// The edge LAN is a shared medium: one exclusive link resource.
+    net: Resource,
+    /// Link capacity over steps; scripted `BwEvent`s are overlaid up
+    /// front so every consumer sees the scaled capacity through one query.
+    bw: BandwidthTrace,
+    bw_stalls: u64,
+    emergency_this_step: bool,
+    /// Effective usable memory per device; scripted pressure events shift
+    /// these away from the `DeviceSpec` capacities mid-run. Cumulative
+    /// signed pressure is tracked against the unpressured base (mirroring
+    /// `OnlinePlanner::apply_pressure`) so a dip that bottoms a device out
+    /// restores exactly.
+    mem_base: Vec<u64>,
+    mem_pressure: Vec<i64>,
+    /// Current effective per-device caps every policy judges saturation
+    /// against (`== usable_mem()` while no script event has fired).
+    pub mem_caps: Vec<u64>,
+}
+
+impl CoreState {
+    fn new(cluster: &Cluster, bw: BandwidthTrace, common: &CommonOptions) -> Self {
+        let d = cluster.len();
+        let mem_base: Vec<u64> = (0..d).map(|i| cluster.devices[i].usable_mem()).collect();
+        CoreState {
+            trace: Trace::with_mode(common.trace_mode),
+            gpus: (0..d).map(|_| Resource::new()).collect(),
+            ssds: (0..d)
+                .map(|i| {
+                    SsdModel::new(
+                        cluster.devices[i].ssd_read_bps,
+                        cluster.devices[i].ssd_write_bps,
+                        common.seed ^ (i as u64) << 8,
+                    )
+                })
+                .collect(),
+            net: Resource::new(),
+            bw,
+            bw_stalls: 0,
+            emergency_this_step: false,
+            mem_pressure: vec![0; d],
+            mem_caps: mem_base.clone(),
+            mem_base,
+        }
+    }
+
+    /// Link capacity at a stream step (scripted scales already applied).
+    pub fn bw_at(&self, global_step: usize) -> f64 {
+        self.bw.at(global_step)
+    }
+
+    /// Acquire the shared link for `dur` seconds starting no earlier than
+    /// `at`, counting a bandwidth stall when the medium was busy. The
+    /// counter is purely observational — it never feeds back into timing.
+    pub fn link_acquire(&mut self, at: f64, dur: f64) -> Interval {
+        let iv = self.net.acquire(at, dur);
+        if iv.start > at {
+            self.bw_stalls += 1;
+        }
+        iv
+    }
+
+    /// Mark the current step as needing the emergency KV-spill fallback.
+    /// The core counts each step at most once, however many devices
+    /// overflow within it.
+    pub fn mark_emergency(&mut self) {
+        self.emergency_this_step = true;
+    }
+
+    /// Cumulative scripted pressure on device `i` (negative = memory taken
+    /// away). Policies that rebuild per-request state re-apply this to
+    /// their fresh planners so mid-stream resets keep the shifted slack.
+    pub fn mem_pressure(&self, i: usize) -> i64 {
+        self.mem_pressure[i]
+    }
+
+    /// Link acquisitions that had to wait on the busy shared medium.
+    pub fn bw_stalls(&self) -> u64 {
+        self.bw_stalls
+    }
+
+    fn apply_mem_event(&mut self, ev: &MemEvent) {
+        self.mem_pressure[ev.device] = self.mem_pressure[ev.device].saturating_add(ev.delta_bytes);
+        self.mem_caps[ev.device] =
+            crate::adapt::planner::shifted(self.mem_base[ev.device], self.mem_pressure[ev.device]);
+    }
+
+    fn take_emergency(&mut self) -> bool {
+        std::mem::replace(&mut self.emergency_this_step, false)
+    }
+}
+
+/// A pipeline schedule: the policy-specific half of an executor. The core
+/// drives implementations through `begin_request` → `step`*, firing
+/// `on_mem_event` whenever a scripted memory event lands on the stream
+/// timeline (the core has already shifted [`CoreState::mem_caps`]).
+pub trait SchedulePolicy {
+    /// Reset per-request state and charge the prefill pass for a request
+    /// with `micro` micro-batches whose service begins at absolute time
+    /// `at` (stream step `global_step`). Returns the decode-start time.
+    fn begin_request(
+        &mut self,
+        core: &mut CoreState,
+        at: f64,
+        micro: usize,
+        global_step: usize,
+    ) -> f64;
+
+    /// Simulate one decode step; returns the absolute step-end time.
+    fn step(&mut self, core: &mut CoreState, ctx: &StepCtx) -> f64;
+
+    /// A scripted memory event fired; shift any policy-internal thresholds
+    /// (the effective cap shift has already been applied by the core).
+    fn on_mem_event(&mut self, _ev: &MemEvent) {}
+
+    /// KV tokens shipped between devices so far (stream total).
+    fn kv_tokens_transferred(&self) -> u64 {
+        0
+    }
+
+    /// Online offload plans fired so far (stream total).
+    fn online_plans_fired(&self) -> usize {
+        0
+    }
+}
+
+/// Timing of one request run on the core's shared timeline.
+#[derive(Debug, Clone)]
+pub struct RequestRun {
+    /// When service (the prefill pass) began.
+    pub start: f64,
+    /// When decoding began (prefill charged between `start` and here).
+    pub decode_start: f64,
+    /// Absolute completion time of each decode step.
+    pub step_ends: Vec<f64>,
+    /// Micro-batches the request ran with (= admitted batch size).
+    pub micro: usize,
+}
+
+impl RequestRun {
+    /// When the run's last token completed (= `decode_start` for empty
+    /// runs).
+    pub fn finish(&self) -> f64 {
+        self.step_ends.last().copied().unwrap_or(self.decode_start)
+    }
+}
+
+/// Everything a finished core hands back: the trace plus the stream-level
+/// accumulators the per-policy counters join for result assembly.
+pub struct CoreTotals {
+    pub trace: Trace,
+    pub step_times: Vec<f64>,
+    pub emergency_steps: usize,
+    pub bw_stalls: u64,
+    pub kv_tokens_transferred: u64,
+    pub online_plans_fired: usize,
+}
+
+/// The unified step driver: owns the [`CoreState`] and the stream-global
+/// step counter, runs requests back-to-back on one shared timeline.
+pub struct ExecutorCore<'s, P: SchedulePolicy> {
+    pub policy: P,
+    pub state: CoreState,
+    script: &'s Script,
+    global_step: usize,
+    emergency_steps: usize,
+    step_times: Vec<f64>,
+}
+
+impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
+    /// Build a core over `cluster`. Scripted bandwidth events overlay the
+    /// base trace up front — every consumer (prefill, hops, KV shipping,
+    /// the Alg. 2 monitor) then sees the scaled capacity through one
+    /// unchanged query path.
+    pub fn new(
+        policy: P,
+        cluster: &Cluster,
+        bw_trace: &BandwidthTrace,
+        common: &CommonOptions,
+        script: &'s Script,
+    ) -> Self {
+        // Owning the trace (one clone per *run*, an f64 for the Fixed
+        // traces every sweep uses) keeps CoreState lifetime-free; the
+        // overlay path materializes a scaled copy exactly as before.
+        let bw = if script.bw.is_empty() {
+            bw_trace.clone()
+        } else {
+            bw_trace.overlay_scales(&script.bw_scale_points())
+        };
+        ExecutorCore {
+            policy,
+            state: CoreState::new(cluster, bw, common),
+            script,
+            global_step: 0,
+            emergency_steps: 0,
+            step_times: Vec::new(),
+        }
+    }
+
+    /// Next step index on the stream timeline.
+    pub fn global_step(&self) -> usize {
+        self.global_step
+    }
+
+    /// Run one request (prefill + `tokens` decode steps, `micro_batches`
+    /// micro-batches) starting no earlier than `at`, on the shared
+    /// timeline: resources, SSD jitter streams, the global step counter
+    /// and the fluctuation script all carry over from previous requests.
+    pub fn run_request(&mut self, at: f64, micro_batches: usize, tokens: usize) -> RequestRun {
+        let micro = micro_batches.max(1);
+        let decode_start = self
+            .policy
+            .begin_request(&mut self.state, at, micro, self.global_step);
+        let mut t_prev = decode_start;
+        let mut step_ends = Vec::with_capacity(tokens);
+        for local in 0..tokens {
+            let g = self.global_step;
+            // Scripted memory fluctuation, fired on the STREAM timeline —
+            // applied before the policy's step so a lowered threshold
+            // already counts as "imminent" for this step's Alg. 2
+            // decisions.
+            let script = self.script;
+            for ev in script.mem.iter().filter(|ev| ev.at_step == g) {
+                self.state.apply_mem_event(ev);
+                self.policy.on_mem_event(ev);
+            }
+            let step_start = t_prev;
+            let step_end = self.policy.step(
+                &mut self.state,
+                &StepCtx {
+                    global_step: g,
+                    local_step: local,
+                    step_start,
+                    micro,
+                },
+            );
+            if self.state.take_emergency() {
+                self.emergency_steps += 1;
+            }
+            self.step_times.push(step_end - step_start);
+            step_ends.push(step_end);
+            t_prev = step_end;
+            self.global_step += 1;
+        }
+        RequestRun {
+            start: at,
+            decode_start,
+            step_ends,
+            micro,
+        }
+    }
+
+    /// Tear down into the stream totals (trace, step latencies, counters).
+    pub fn into_totals(self) -> CoreTotals {
+        CoreTotals {
+            kv_tokens_transferred: self.policy.kv_tokens_transferred(),
+            online_plans_fired: self.policy.online_plans_fired(),
+            emergency_steps: self.emergency_steps,
+            bw_stalls: self.state.bw_stalls(),
+            trace: self.state.trace,
+            step_times: self.step_times,
+        }
+    }
+
+    /// Assemble the [`SimResult`] of a single-request run (the legacy
+    /// `run_*` contract: `total_time` measures decode only).
+    pub fn into_result(self, run: RequestRun) -> SimResult {
+        let total_time = run.finish() - run.decode_start;
+        let totals = self.into_totals();
+        SimResult {
+            tokens: run.step_ends.len(),
+            micro_batches: run.micro,
+            total_time,
+            step_times: totals.step_times,
+            trace: totals.trace,
+            kv_tokens_transferred: totals.kv_tokens_transferred,
+            online_plans_fired: totals.online_plans_fired,
+            emergency_steps: totals.emergency_steps,
+            bw_stalls: totals.bw_stalls,
+        }
+    }
+}
+
+/// Run `policy` as a one-request stream starting at t = 0 — the shape of
+/// the legacy `run_*` entry points, which are thin wrappers over this.
+pub fn run_single<P: SchedulePolicy>(
+    policy: P,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    micro_batches: usize,
+    tokens: usize,
+    common: &CommonOptions,
+    script: &Script,
+) -> SimResult {
+    let mut core = ExecutorCore::new(policy, cluster, bw_trace, common, script);
+    let run = core.run_request(0.0, micro_batches, tokens);
+    core.into_result(run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A degenerate policy: every step costs a fixed duration, device 0
+    /// saturates when its cap drops below a threshold.
+    struct FixedStep {
+        dur: f64,
+        saturate_below: u64,
+        prefill: f64,
+        events_seen: usize,
+    }
+
+    impl SchedulePolicy for FixedStep {
+        fn begin_request(
+            &mut self,
+            _core: &mut CoreState,
+            at: f64,
+            _micro: usize,
+            _global_step: usize,
+        ) -> f64 {
+            at + self.prefill
+        }
+
+        fn step(&mut self, core: &mut CoreState, ctx: &StepCtx) -> f64 {
+            if core.mem_caps[0] < self.saturate_below {
+                core.mark_emergency();
+            }
+            let _ = core.link_acquire(ctx.step_start, self.dur / 2.0);
+            ctx.step_start + self.dur
+        }
+
+        fn on_mem_event(&mut self, _ev: &MemEvent) {
+            self.events_seen += 1;
+        }
+    }
+
+    fn common() -> CommonOptions {
+        CommonOptions {
+            prompt_tokens: 4,
+            seed: 7,
+            trace_mode: TraceMode::Off,
+        }
+    }
+
+    #[test]
+    fn single_run_counts_steps_and_measures_decode_only() {
+        let cluster = Cluster::env_e1();
+        let bw = BandwidthTrace::fixed_mbps(100.0);
+        let policy = FixedStep {
+            dur: 0.5,
+            saturate_below: 0,
+            prefill: 2.0,
+            events_seen: 0,
+        };
+        let r = run_single(policy, &cluster, &bw, 1, 4, &common(), &Script::none());
+        assert_eq!(r.tokens, 4);
+        assert_eq!(r.step_times, vec![0.5; 4]);
+        assert!((r.total_time - 2.0).abs() < 1e-12);
+        assert_eq!(r.emergency_steps, 0);
+    }
+
+    #[test]
+    fn scripted_mem_events_fire_on_the_stream_timeline() {
+        use crate::adapt::MemScenario;
+        let cluster = Cluster::env_e1();
+        let bw = BandwidthTrace::fixed_mbps(100.0);
+        // The squeeze lands at stream step 5 — inside the SECOND request
+        // of a 2×4-step stream, so per-request step counters never see it.
+        let script =
+            Script::from_mem(MemScenario::squeeze("sq", 0, u64::MAX / 2, 5)).with_label("sq");
+        let policy = FixedStep {
+            dur: 0.25,
+            saturate_below: u64::MAX / 4,
+            prefill: 0.0,
+            events_seen: 0,
+        };
+        let mut core = ExecutorCore::new(policy, &cluster, &bw, &common(), &script);
+        let a = core.run_request(0.0, 1, 4);
+        let b = core.run_request(a.finish(), 1, 4);
+        assert_eq!(core.global_step(), 8);
+        assert_eq!(core.policy.events_seen, 1, "event fires exactly once");
+        assert!(b.finish() > a.finish());
+        let totals = core.into_totals();
+        // Steps 5..8 saturate: 3 emergency steps, none in request 1.
+        assert_eq!(totals.emergency_steps, 3);
+        assert_eq!(totals.step_times.len(), 8);
+    }
+
+    #[test]
+    fn back_to_back_requests_share_the_link_timeline() {
+        let cluster = Cluster::env_e1();
+        let bw = BandwidthTrace::fixed_mbps(100.0);
+        let policy = FixedStep {
+            dur: 1.0,
+            saturate_below: 0,
+            prefill: 0.0,
+            events_seen: 0,
+        };
+        let mut core = ExecutorCore::new(policy, &cluster, &bw, &common(), &Script::none());
+        let a = core.run_request(0.0, 1, 2);
+        // Admitted mid-flight of nothing: starts exactly at its arrival.
+        let b = core.run_request(a.finish(), 1, 2);
+        assert_eq!(b.start, a.finish());
+        assert_eq!(b.decode_start, b.start);
+        // The link was idle between requests — no stalls counted.
+        let totals = core.into_totals();
+        assert_eq!(totals.bw_stalls, 0);
+    }
+}

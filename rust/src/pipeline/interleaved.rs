@@ -6,27 +6,34 @@
 //! the slot frees (last micro-batch finishes segment `s` on that device) and
 //! only gates the *offloaded fraction* of stage `s+1`'s compute — the
 //! resident fraction, other devices' compute, and activation hops all run
-//! underneath it. That is exactly the overlap structure the Eq. 1 cost model
-//! scores, and `rust/tests/` cross-checks the two.
+//! underneath it. That is exactly the overlap structure the Eq. 1 cost
+//! model scores, and `rust/tests/` cross-checks the two.
 //!
-//! The executor also drives the §IV-D machinery between steps: the online
-//! memory-aware planner (KV pressure → block-granular offload plans, with
-//! one-time reload charges when plans swap blocks, Fig. 9) and the
-//! bandwidth-sensitive KV transfer protocol (Alg. 2). Both can be disabled
-//! independently for the Table V ablations. [`run_interleaved_scripted`]
-//! additionally consumes a joint fluctuation [`Script`]: scripted memory
-//! events shift effective per-device caps and the planner's thresholds
-//! mid-run, and scripted bandwidth events scale the link capacity every
-//! comm term (and Alg. 2's monitor) sees — both channels in one run.
+//! The schedule-specific logic lives in [`InterleavedPolicy`], an impl of
+//! [`SchedulePolicy`] driven by the unified executor core
+//! ([`crate::pipeline::core`]) — the core owns the shared mechanics
+//! (resources, link-stall accounting, scripted-event application,
+//! emergency-step counting, result assembly). The policy also drives the
+//! §IV-D machinery between steps: the online memory-aware planner (KV
+//! pressure → block-granular offload plans, with one-time reload charges
+//! when plans swap blocks, Fig. 9) and the bandwidth-sensitive KV transfer
+//! protocol (Alg. 2). Both can be disabled independently for the Table V
+//! ablations. [`run_interleaved_scripted`] additionally consumes a joint
+//! fluctuation [`Script`]: scripted memory events shift effective
+//! per-device caps and the planner's thresholds mid-run, and scripted
+//! bandwidth events scale the link capacity every comm term (and Alg. 2's
+//! monitor) sees — both channels in one run.
 
-use crate::adapt::{KvTransferProtocol, OffloadPlan, OnlinePlanner, Script};
+use crate::adapt::{KvTransferProtocol, MemEvent, OffloadPlan, OnlinePlanner, Script};
 use crate::cluster::Cluster;
 use crate::cost;
 use crate::model::ModelSpec;
-use crate::net::{link_transfer_secs, BandwidthTrace};
+use crate::net::link_transfer_secs;
+use crate::net::BandwidthTrace;
+use crate::pipeline::core::{run_single, CommonOptions, CoreState, SchedulePolicy, StepCtx};
 use crate::pipeline::result::SimResult;
 use crate::plan::allocation::Allocation;
-use crate::sim::{Label, MicroPhase, Resource, SpanKind, SsdModel, Trace, TraceMode};
+use crate::sim::{Label, MicroPhase, SpanKind, TraceMode};
 
 /// Online-adaptation configuration (Table V ablation axes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,7 +48,8 @@ pub enum PlannerMode {
     Off,
 }
 
-/// Executor options.
+/// Executor options: the policy-specific knobs plus the [`CommonOptions`]
+/// fields every executor shares (converted via `From<&ExecOptions>`).
 #[derive(Debug, Clone, Copy)]
 pub struct ExecOptions {
     pub planner: PlannerMode,
@@ -64,6 +72,16 @@ impl Default for ExecOptions {
             prompt_tokens: 64,
             seed: 0xC0FFEE,
             trace_mode: TraceMode::Full,
+        }
+    }
+}
+
+impl From<&ExecOptions> for CommonOptions {
+    fn from(o: &ExecOptions) -> CommonOptions {
+        CommonOptions {
+            prompt_tokens: o.prompt_tokens,
+            seed: o.seed,
+            trace_mode: o.trace_mode,
         }
     }
 }
@@ -135,146 +153,190 @@ pub fn run_interleaved_scripted(
     opts: &ExecOptions,
     script: &Script,
 ) -> SimResult {
-    // Scripted bandwidth events overlay the base trace up front — every
-    // consumer below (prefill, hops, KV shipping, the Alg. 2 monitor)
-    // then sees the scaled capacity through one unchanged query path.
-    let overlaid;
-    let bw_trace = if script.bw.is_empty() {
-        bw_trace
-    } else {
-        overlaid = bw_trace.overlay_scales(&script.bw_scale_points());
-        &overlaid
-    };
-    let spec = alloc.spec.clone();
-    let d = cluster.len();
-    let seg = alloc.seg.max(1);
-    let micro = micro_batches.max(1);
-
-    let mut trace = Trace::with_mode(opts.trace_mode);
-    let mut gpus: Vec<Resource> = (0..d).map(|_| Resource::new()).collect();
-    let mut ssds: Vec<SsdModel> = (0..d)
-        .map(|i| {
-            SsdModel::new(
-                cluster.devices[i].ssd_read_bps,
-                cluster.devices[i].ssd_write_bps,
-                opts.seed ^ (i as u64) << 8,
-            )
-        })
-        .collect();
-    // The edge LAN is a shared medium: one exclusive link resource.
-    let mut net = Resource::new();
-
-    let mut planner = OnlinePlanner::new(alloc, cluster, micro);
-    let mut protocol = KvTransferProtocol::new(
-        alloc,
+    run_single(
+        InterleavedPolicy::new(alloc, cluster, opts),
         cluster,
-        &planner,
-        opts.prompt_tokens,
-        micro,
-        bw_trace.at(0),
-    );
-    // Track current working allocation (online plans mutate offload sets).
-    let mut live = alloc.clone();
-    let mut last_plan: Vec<OffloadPlan> = (0..d)
-        .map(|_| OffloadPlan {
-            at_tokens: 0,
-            alpha: 0,
-            beta: 0,
-        })
-        .collect();
-    // KV tokens physically held per device (per micro-batch context).
-    let mut kv_held: Vec<usize> = vec![opts.prompt_tokens; d];
-    let mut kv_shipped_total: u64 = 0;
-    let mut plans_fired = 0usize;
-    let mut emergency_steps = 0usize;
-    // Link acquisitions (activation hops, KV shipments) that had to wait
-    // on a busy shared medium — the per-cell bandwidth-stall counter the
-    // sweep artifacts carry. Purely observational: never feeds timing.
-    let mut bw_stalls: u64 = 0;
-    // One-time reload bytes queued for the next step's segment-0 load.
-    let mut pending_reload: Vec<u64> = vec![0; d];
-    // Effective usable memory per device; scripted pressure events shift
-    // these away from the `DeviceSpec` capacities mid-run. Cumulative
-    // signed pressure is tracked against the unpressured base (mirroring
-    // `OnlinePlanner::apply_pressure`) so a dip that bottoms a device out
-    // restores exactly.
-    let mem_base: Vec<u64> = (0..d).map(|i| cluster.devices[i].usable_mem()).collect();
-    let mut mem_pressure: Vec<i64> = vec![0; d];
-    let mut mem_caps: Vec<u64> = mem_base.clone();
+        bw_trace,
+        micro_batches,
+        tokens,
+        &CommonOptions::from(opts),
+        script,
+    )
+}
 
-    // ---------------- prefill pass (charged, not measured) ----------------
-    let bw0 = bw_trace.at(0);
-    let mut t_prefill = 0.0f64;
-    for i in 0..d {
-        let a = &live.devices[i];
-        let flops = spec.layer_prefill_flops(opts.prompt_tokens)
-            * a.total_layers as f64
-            * micro as f64;
-        let comp = flops / cluster.devices[i].flops;
-        let load = cost::load_time(&spec, &cluster.devices[i], a);
-        t_prefill += comp.max(load);
-        t_prefill += link_transfer_secs(
-            spec.h_size(micro) * opts.prompt_tokens as u64,
-            bw0,
-        );
-    }
-    let decode_start = t_prefill;
+/// Per-request state of the interleaved schedule: rebuilt by
+/// `begin_request` so continuous serving starts every request with a fresh
+/// KV context and the offline allocation (scripted pressure accumulated on
+/// the stream carries over via `CoreState::mem_pressure`).
+struct ReqState {
+    planner: OnlinePlanner,
+    protocol: KvTransferProtocol,
+    /// Current working allocation (online plans mutate offload sets).
+    live: Allocation,
+    last_plan: Vec<OffloadPlan>,
+    /// KV tokens physically held per device (per micro-batch context).
+    kv_held: Vec<usize>,
+    /// One-time reload bytes queued for the next step's segment-0 load.
+    pending_reload: Vec<u64>,
+    /// When device i's offload slot last freed (gates the next segment's
+    /// SSD load).
+    slot_free: Vec<f64>,
+    /// Completion time of (micro m, previous stage) within the current
+    /// step. Reused across steps — the decode loop allocates nothing per
+    /// span.
+    micro_front: Vec<f64>,
+}
 
-    // `slot_free[i]`: when device i's offload slot last freed (gates the
-    // next segment's SSD load).
-    let mut slot_free: Vec<f64> = vec![decode_start; d];
-    // Completion time of (micro m, previous stage) within the current step.
-    let mut step_times = Vec::with_capacity(tokens);
-    let mut t_prev_step_end = decode_start;
-    // Reused across steps — the decode loop allocates nothing per span.
-    let mut micro_front: Vec<f64> = vec![0.0; micro];
+/// LIME's interleaved schedule as a [`SchedulePolicy`].
+pub struct InterleavedPolicy<'a> {
+    alloc: &'a Allocation,
+    cluster: &'a Cluster,
+    spec: ModelSpec,
+    seg: usize,
+    opts: ExecOptions,
+    st: Option<ReqState>,
+    kv_shipped_total: u64,
+    plans_fired: usize,
+}
 
-    for step in 0..tokens {
-        let bw = bw_trace.at(step);
-        let ctx = opts.prompt_tokens + step;
-
-        // ---- scripted memory fluctuation (scenario-matrix axis) ----
-        // Applied before the bandwidth monitor so a lowered threshold
-        // already counts as "imminent" for this step's Alg. 2 decisions.
-        for ev in script.mem.iter().filter(|ev| ev.at_step == step) {
-            mem_pressure[ev.device] = mem_pressure[ev.device].saturating_add(ev.delta_bytes);
-            mem_caps[ev.device] =
-                crate::adapt::planner::shifted(mem_base[ev.device], mem_pressure[ev.device]);
-            planner.apply_pressure(ev.device, ev.delta_bytes);
+impl<'a> InterleavedPolicy<'a> {
+    pub fn new(alloc: &'a Allocation, cluster: &'a Cluster, opts: &ExecOptions) -> Self {
+        InterleavedPolicy {
+            alloc,
+            cluster,
+            spec: alloc.spec.clone(),
+            seg: alloc.seg.max(1),
+            opts: *opts,
+            st: None,
+            kv_shipped_total: 0,
+            plans_fired: 0,
         }
+    }
+}
+
+impl SchedulePolicy for InterleavedPolicy<'_> {
+    fn begin_request(
+        &mut self,
+        core: &mut CoreState,
+        at: f64,
+        micro: usize,
+        global_step: usize,
+    ) -> f64 {
+        let d = self.cluster.len();
+        let mut planner = OnlinePlanner::new(self.alloc, self.cluster, micro);
+        // Scripted pressure accumulated earlier on the stream carries into
+        // the fresh planner, so mid-stream requests plan under the same
+        // shifted slack the effective caps describe.
+        for i in 0..d {
+            let pressure = core.mem_pressure(i);
+            if pressure != 0 {
+                planner.apply_pressure(i, pressure);
+            }
+        }
+        let protocol = KvTransferProtocol::new(
+            self.alloc,
+            self.cluster,
+            &planner,
+            self.opts.prompt_tokens,
+            micro,
+            core.bw_at(global_step),
+        );
+        let live = self.alloc.clone();
+
+        // ------------- prefill pass (charged, not measured) -------------
+        let bw0 = core.bw_at(global_step);
+        let mut t_prefill = at;
+        for i in 0..d {
+            let a = &live.devices[i];
+            let flops = self.spec.layer_prefill_flops(self.opts.prompt_tokens)
+                * a.total_layers as f64
+                * micro as f64;
+            let comp = flops / self.cluster.devices[i].flops;
+            let load = cost::load_time(&self.spec, &self.cluster.devices[i], a);
+            t_prefill += comp.max(load);
+            t_prefill += link_transfer_secs(
+                self.spec.h_size(micro) * self.opts.prompt_tokens as u64,
+                bw0,
+            );
+        }
+        let decode_start = t_prefill;
+
+        self.st = Some(ReqState {
+            planner,
+            protocol,
+            live,
+            last_plan: (0..d)
+                .map(|_| OffloadPlan {
+                    at_tokens: 0,
+                    alpha: 0,
+                    beta: 0,
+                })
+                .collect(),
+            kv_held: vec![self.opts.prompt_tokens; d],
+            pending_reload: vec![0; d],
+            slot_free: vec![decode_start; d],
+            micro_front: vec![0.0; micro],
+        });
+        decode_start
+    }
+
+    fn on_mem_event(&mut self, ev: &MemEvent) {
+        if let Some(st) = self.st.as_mut() {
+            st.planner.apply_pressure(ev.device, ev.delta_bytes);
+        }
+    }
+
+    fn step(&mut self, core: &mut CoreState, ctx: &StepCtx) -> f64 {
+        let st = self.st.as_mut().expect("begin_request precedes step");
+        let d = self.cluster.len();
+        let seg = self.seg;
+        let micro = ctx.micro;
+        let bw = core.bw_at(ctx.global_step);
+        let tok = self.opts.prompt_tokens + ctx.local_step;
 
         // ---- Alg. 2 lines 8-9: monitor bandwidth, adapt transfers ----
-        if opts.kv_transfer {
-            protocol.on_bandwidth(&live, cluster, &planner, step, ctx, micro, bw);
+        if self.opts.kv_transfer {
+            st.protocol.on_bandwidth(
+                &st.live,
+                self.cluster,
+                &st.planner,
+                ctx.local_step,
+                tok,
+                micro,
+                bw,
+            );
         }
 
-        let step_start = t_prev_step_end;
-        micro_front.fill(step_start);
+        let step_start = ctx.step_start;
+        st.micro_front.fill(step_start);
 
         for s in 0..seg {
             for i in 0..d {
-                let a = &live.devices[i];
-                let layers_here = live.layers_in_segment(i, s);
+                let a = &st.live.devices[i];
+                let layers_here = st.live.layers_in_segment(i, s);
                 if layers_here == 0 {
                     continue;
                 }
-                let off_here = live.offloaded_in_segment(i, s);
+                let off_here = st.live.offloaded_in_segment(i, s);
                 let res_here = layers_here - off_here.min(layers_here);
 
                 // Per-segment streamed bytes: the device's per-pass load
                 // spread across segments, plus any one-time reload.
-                let mut seg_load_bytes = a.load_bytes(&spec) / seg as u64;
+                let mut seg_load_bytes = a.load_bytes(&self.spec) / seg as u64;
                 if s == 0 {
-                    seg_load_bytes += pending_reload[i];
-                    pending_reload[i] = 0;
+                    seg_load_bytes += st.pending_reload[i];
+                    st.pending_reload[i] = 0;
                 }
                 // SSD load for this segment: starts when the slot freed.
                 let load_iv = if seg_load_bytes > 0 {
-                    let iv = ssds[i].read(slot_free[i], seg_load_bytes);
-                    trace.push(
+                    let iv = core.ssds[i].read(st.slot_free[i], seg_load_bytes);
+                    core.trace.push(
                         i,
                         SpanKind::Load,
-                        Label::SegLoad { step: step as u32, seg: s as u32 },
+                        Label::SegLoad {
+                            step: ctx.global_step as u32,
+                            seg: s as u32,
+                        },
                         iv.start,
                         iv.end,
                     );
@@ -284,21 +346,21 @@ pub fn run_interleaved_scripted(
                 };
 
                 let mut last_micro_end = step_start;
-                for (m, front) in micro_front.iter_mut().enumerate() {
+                for (m, front) in st.micro_front.iter_mut().enumerate() {
                     // Activation hop onto device i (shared medium).
-                    let hop = net.acquire(*front, link_transfer_secs(spec.h_size(1), bw));
-                    if hop.start > *front {
-                        bw_stalls += 1;
-                    }
+                    let hop =
+                        core.link_acquire(*front, link_transfer_secs(self.spec.h_size(1), bw));
                     let label = |phase| Label::Micro { m: m as u32, phase };
-                    trace.push(i, SpanKind::Comm, label(MicroPhase::Hop), hop.start, hop.end);
+                    core.trace
+                        .push(i, SpanKind::Comm, label(MicroPhase::Hop), hop.start, hop.end);
                     let arrive = hop.end;
 
                     // Resident fraction computes immediately.
-                    let comp_res = cost::comp_time(&spec, &cluster.devices[i], res_here, ctx, 1);
-                    let iv1 = gpus[i].acquire(arrive, comp_res);
+                    let comp_res =
+                        cost::comp_time(&self.spec, &self.cluster.devices[i], res_here, tok, 1);
+                    let iv1 = core.gpus[i].acquire(arrive, comp_res);
                     if comp_res > 0.0 {
-                        trace.push(
+                        core.trace.push(
                             i,
                             SpanKind::Compute,
                             label(MicroPhase::Resident),
@@ -311,12 +373,13 @@ pub fn run_interleaved_scripted(
                     if off_here > 0 {
                         let gate = load_iv.map(|iv| iv.end).unwrap_or(end);
                         if gate > end {
-                            trace.push(i, SpanKind::Stall, label(MicroPhase::Wait), end, gate);
+                            core.trace
+                                .push(i, SpanKind::Stall, label(MicroPhase::Wait), end, gate);
                         }
                         let comp_off =
-                            cost::comp_time(&spec, &cluster.devices[i], off_here, ctx, 1);
-                        let iv2 = gpus[i].acquire(end.max(gate), comp_off);
-                        trace.push(
+                            cost::comp_time(&self.spec, &self.cluster.devices[i], off_here, tok, 1);
+                        let iv2 = core.gpus[i].acquire(end.max(gate), comp_off);
+                        core.trace.push(
                             i,
                             SpanKind::Compute,
                             label(MicroPhase::Offloaded),
@@ -330,40 +393,37 @@ pub fn run_interleaved_scripted(
                 }
                 // Slot frees once the last micro-batch leaves this segment.
                 if off_here > 0 || seg_load_bytes > 0 {
-                    slot_free[i] = last_micro_end;
+                    st.slot_free[i] = last_micro_end;
                 }
             }
         }
 
-        let mut step_end = micro_front.iter().cloned().fold(step_start, f64::max);
+        let mut step_end = st.micro_front.iter().cloned().fold(step_start, f64::max);
 
         // ---- KV bookkeeping + online adaptation between steps ----
         for i in 0..d {
-            kv_held[i] += micro;
+            st.kv_held[i] += micro;
         }
 
         // KV transfer protocol: ship paced chunks to d_target. Shipping
         // costs link time, so it only pays when it delays an *imminent*
         // offload threshold (Fig. 10's motivation) — gate on proximity.
-        if opts.kv_transfer {
+        if self.opts.kv_transfer {
             for i in 0..d {
-                let ts_next = planner.next_threshold(i);
-                let imminent = ts_next != usize::MAX && ctx + 96 >= ts_next;
+                let ts_next = st.planner.next_threshold(i);
+                let imminent = ts_next != usize::MAX && tok + 96 >= ts_next;
                 if !imminent {
                     continue;
                 }
-                let target = protocol.states[i].target;
-                let ship = protocol.ship_now(i, kv_held[i], KV_SHIP_CAP);
+                let target = st.protocol.states[i].target;
+                let ship = st.protocol.ship_now(i, st.kv_held[i], KV_SHIP_CAP);
                 if ship > 0 {
                     let t = target.unwrap();
-                    let bytes = spec.kv_bytes_per_token_layer()
-                        * live.devices[i].total_layers as u64
+                    let bytes = self.spec.kv_bytes_per_token_layer()
+                        * st.live.devices[i].total_layers as u64
                         * ship as u64;
-                    let iv = net.acquire(step_end, link_transfer_secs(bytes, bw));
-                    if iv.start > step_end {
-                        bw_stalls += 1;
-                    }
-                    trace.push(
+                    let iv = core.link_acquire(step_end, link_transfer_secs(bytes, bw));
+                    core.trace.push(
                         i,
                         SpanKind::KvTransfer,
                         Label::KvTo { device: t as u32 },
@@ -372,41 +432,45 @@ pub fn run_interleaved_scripted(
                     );
                     // Asynchronous: does not extend the step unless the link
                     // is still busy when the next step's first hop needs it
-                    // (the shared `net` Resource captures that naturally).
-                    kv_held[i] -= ship;
-                    kv_held[t] += ship;
-                    protocol.record_receipt(t, ship);
-                    kv_shipped_total += ship as u64;
+                    // (the shared link Resource captures that naturally).
+                    st.kv_held[i] -= ship;
+                    st.kv_held[t] += ship;
+                    st.protocol.record_receipt(t, ship);
+                    self.kv_shipped_total += ship as u64;
                 }
             }
         }
 
         // Memory-aware planner (Eqs. 5-7) or its ablation substitutes.
         for i in 0..d {
-            let n_trans = if opts.kv_transfer { protocol.n_trans(i) } else { 0 };
-            match opts.planner {
+            let n_trans = if self.opts.kv_transfer {
+                st.protocol.n_trans(i)
+            } else {
+                0
+            };
+            match self.opts.planner {
                 PlannerMode::FineGrained => {
-                    if let Some(plan) = planner.on_token(i, ctx, n_trans) {
-                        plans_fired += 1;
+                    if let Some(plan) = st.planner.on_token(i, tok, n_trans) {
+                        self.plans_fired += 1;
                         // Apply the plan to the live allocation.
-                        let prev = last_plan[i];
+                        let prev = st.last_plan[i];
                         let da = plan.alpha as i64 - prev.alpha as i64;
                         let db = plan.beta as i64 - prev.beta as i64;
-                        apply_block_plan(&mut live, i, da, db);
+                        apply_block_plan(&mut st.live, i, da, db);
                         // Reload swapped-back blocks once (Fig. 9: the
                         // previously evicted block returns to GPU).
-                        let reload = reload_bytes(&spec, da, db);
-                        pending_reload[i] += reload;
-                        last_plan[i] = plan;
+                        let reload = reload_bytes(&self.spec, da, db);
+                        st.pending_reload[i] += reload;
+                        st.last_plan[i] = plan;
                     }
                 }
                 PlannerMode::FullLayer => {
                     // Ablation: when memory saturates, offload a whole layer.
-                    if mem_saturated(&live, i, ctx * micro, n_trans, mem_caps[i])
-                        && live.devices[i].non_offloaded_layers() > 0
+                    if mem_saturated(&st.live, i, tok * micro, n_trans, core.mem_caps[i])
+                        && st.live.devices[i].non_offloaded_layers() > 0
                     {
-                        plans_fired += 1;
-                        live.devices[i].full_offload += 1;
+                        self.plans_fired += 1;
+                        st.live.devices[i].full_offload += 1;
                     }
                 }
                 PlannerMode::Off => {}
@@ -415,44 +479,39 @@ pub fn run_interleaved_scripted(
 
         // Emergency fallback: devices still saturated swap KV to SSD
         // (write + read per step — the naive strategy of §III / Fig. 2b).
-        // A step counts as an emergency step at most once, however many
-        // devices overflow within it.
-        let mut emergency_this_step = false;
+        // The core counts a step as an emergency step at most once,
+        // however many devices overflow within it.
         for i in 0..d {
-            let n_trans = if opts.kv_transfer { protocol.n_trans(i) } else { 0 };
+            let n_trans = if self.opts.kv_transfer {
+                st.protocol.n_trans(i)
+            } else {
+                0
+            };
             let overflow =
-                cost::overflow_tokens_with_cap(&live, i, ctx * micro, n_trans, mem_caps[i])
-                    .min(kv_held[i]);
+                cost::overflow_tokens_with_cap(&st.live, i, tok * micro, n_trans, core.mem_caps[i])
+                    .min(st.kv_held[i]);
             if overflow > 0 {
-                emergency_this_step = true;
-                let bytes = spec.kv_bytes_per_token_layer()
-                    * live.devices[i].total_layers as u64
+                core.mark_emergency();
+                let bytes = self.spec.kv_bytes_per_token_layer()
+                    * st.live.devices[i].total_layers as u64
                     * overflow as u64;
-                let w = ssds[i].write(step_end, bytes);
-                trace.push(i, SpanKind::Store, "kv-spill", w.start, w.end);
-                let r = ssds[i].read(w.end, bytes);
-                trace.push(i, SpanKind::Load, "kv-fetch", r.start, r.end);
+                let w = core.ssds[i].write(step_end, bytes);
+                core.trace.push(i, SpanKind::Store, "kv-spill", w.start, w.end);
+                let r = core.ssds[i].read(w.end, bytes);
+                core.trace.push(i, SpanKind::Load, "kv-fetch", r.start, r.end);
                 step_end = step_end.max(r.end);
             }
         }
-        if emergency_this_step {
-            emergency_steps += 1;
-        }
 
-        step_times.push(step_end - step_start);
-        t_prev_step_end = step_end;
+        step_end
     }
 
-    SimResult {
-        tokens,
-        micro_batches: micro,
-        total_time: t_prev_step_end - decode_start,
-        step_times,
-        trace,
-        kv_tokens_transferred: kv_shipped_total,
-        online_plans_fired: plans_fired,
-        emergency_steps,
-        bw_stalls,
+    fn kv_tokens_transferred(&self) -> u64 {
+        self.kv_shipped_total
+    }
+
+    fn online_plans_fired(&self) -> usize {
+        self.plans_fired
     }
 }
 

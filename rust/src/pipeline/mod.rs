@@ -1,15 +1,34 @@
 //! Pipeline executors over the discrete-event substrate: LIME's interleaved
 //! schedule (§IV-A), the traditional PP(+offload) schedule (Figs 3a/4a),
 //! and the tensor-parallel family used by the TP baselines.
+//!
+//! All three are [`SchedulePolicy`] impls driven by the unified executor
+//! core ([`crate::pipeline::core`]): the core owns the shared mechanics
+//! (resources, link-stall accounting, scripted fluctuation application on
+//! the stream timeline, emergency-step counting, `SimResult` assembly),
+//! each policy owns only its schedule-specific decisions. The `run_*`
+//! entry points are single-request streams over the core;
+//! `serve::simqueue` drives the same policies continuously over queued
+//! request streams.
 
+pub mod core;
 pub mod interleaved;
 pub mod result;
 pub mod tensor;
 pub mod traditional;
 
+pub use self::core::{
+    CommonOptions, CoreState, ExecutorCore, RequestRun, SchedulePolicy, StepCtx,
+};
 pub use interleaved::{
-    run_interleaved, run_interleaved_scripted, sweep_interleaved, ExecOptions, PlannerMode,
+    run_interleaved, run_interleaved_scripted, sweep_interleaved, ExecOptions, InterleavedPolicy,
+    PlannerMode,
 };
 pub use result::SimResult;
-pub use tensor::{run_tensor_parallel, sweep_tensor_parallel, TpOptions};
-pub use traditional::{run_traditional, sweep_traditional, TradOptions};
+pub use tensor::{
+    run_tensor_parallel, run_tensor_parallel_scripted, sweep_tensor_parallel, TensorParallelPolicy,
+    TpOptions,
+};
+pub use traditional::{
+    run_traditional, run_traditional_scripted, sweep_traditional, TradOptions, TraditionalPolicy,
+};

@@ -12,15 +12,24 @@
 //! * `sliding_window` (TPI-LLM): shards stream from SSD through a sliding
 //!   window, so devices below shard size still run; loading serializes
 //!   with compute when the window stalls.
+//!
+//! The schedule lives in [`TensorParallelPolicy`], driven by the unified
+//! core ([`crate::pipeline::core`]) — which also gives the TP family a
+//! scripted entry point ([`run_tensor_parallel_scripted`]; KV overflow is
+//! judged against the scripted effective caps) and a continuous-serving
+//! path through `serve::simqueue`.
 
+use crate::adapt::Script;
 use crate::cluster::Cluster;
 use crate::cost;
 use crate::model::ModelSpec;
 use crate::net::{link_transfer_secs, BandwidthTrace};
+use crate::pipeline::core::{run_single, CommonOptions, CoreState, SchedulePolicy, StepCtx};
 use crate::pipeline::result::SimResult;
-use crate::sim::{Label, Resource, SpanKind, SsdModel, Trace, TraceMode};
+use crate::sim::{Label, SpanKind, TraceMode};
 
-/// Tensor-parallel baseline options.
+/// Tensor-parallel baseline options: the policy-specific knobs plus the
+/// [`CommonOptions`] fields (converted via `From<&TpOptions>`).
 #[derive(Debug, Clone, Copy)]
 pub struct TpOptions {
     pub prompt_tokens: usize,
@@ -56,6 +65,16 @@ impl Default for TpOptions {
     }
 }
 
+impl From<&TpOptions> for CommonOptions {
+    fn from(o: &TpOptions) -> CommonOptions {
+        CommonOptions {
+            prompt_tokens: o.prompt_tokens,
+            seed: o.seed,
+            trace_mode: o.trace_mode,
+        }
+    }
+}
+
 /// Sweep entry point: every `(micro_batches, tokens)` scenario of the
 /// tensor-parallel executor on the work-stealing pool, results in scenario
 /// order (bit-identical to the sequential loop; nested-submission safe).
@@ -80,102 +99,178 @@ pub fn run_tensor_parallel(
     tokens: usize,
     opts: &TpOptions,
 ) -> SimResult {
-    let d = cluster.len();
-    let micro = micro_batches.max(1);
-    let mut trace = Trace::with_mode(opts.trace_mode);
-    let mut ssds: Vec<SsdModel> = (0..d)
-        .map(|i| {
-            SsdModel::new(
-                cluster.devices[i].ssd_read_bps,
-                cluster.devices[i].ssd_write_bps,
-                opts.seed ^ (i as u64) << 8,
-            )
-        })
-        .collect();
-    let mut net = Resource::new();
+    run_tensor_parallel_scripted(
+        spec,
+        cluster,
+        bw_trace,
+        micro_batches,
+        tokens,
+        opts,
+        &Script::none(),
+    )
+}
 
-    // Per-device shard: Galaxy/TPI-LLM partition workload by device
-    // capability, so shard fractions follow usable memory (heterogeneous),
-    // not 1/d.
-    let total_usable: f64 = cluster.devices.iter().map(|x| x.usable_mem() as f64).sum();
-    let frac: Vec<f64> = (0..d)
-        .map(|i| cluster.devices[i].usable_mem() as f64 / total_usable)
-        .collect();
+/// [`run_tensor_parallel`] under a scripted joint fluctuation [`Script`]:
+/// memory events shift the effective caps the KV-overflow handling judges
+/// saturation against, bandwidth events scale every collective round. An
+/// empty script is bit-identical to [`run_tensor_parallel`].
+pub fn run_tensor_parallel_scripted(
+    spec: &ModelSpec,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    micro_batches: usize,
+    tokens: usize,
+    opts: &TpOptions,
+    script: &Script,
+) -> SimResult {
+    run_single(
+        TensorParallelPolicy::new(spec, cluster, opts),
+        cluster,
+        bw_trace,
+        micro_batches,
+        tokens,
+        &CommonOptions::from(opts),
+        script,
+    )
+}
 
-    // Streaming need per pass (sliding window): shard bytes that exceed the
-    // window resident in memory.
-    let stream_bytes: Vec<u64> = (0..d)
-        .map(|i| {
-            if !opts.sliding_window {
-                return 0;
-            }
-            let total_shard = (spec.layer_bytes() as f64 * spec.layers as f64 * frac[i]) as u64
-                + (spec.embed_bytes() as f64 * frac[i]) as u64;
-            let window = cluster.devices[i].usable_mem() * 7 / 10;
-            total_shard.saturating_sub(window)
-        })
-        .collect();
+/// Per-request state (the only pieces that vary with the admitted batch
+/// size; the shard geometry is batch-independent and lives on the
+/// policy).
+struct TpState {
+    round_bytes: u64,
+}
 
-    // One all-reduce = 2(d−1) serialized rounds on the shared medium
-    // (reduce-scatter + all-gather), each moving the full activation
-    // payload across the switch and paying the per-message latency floor —
-    // this latency amplification is why TP hurts on edge LANs (§III).
-    let sync_rounds = 2 * (d.max(2) - 1);
-    let round_bytes = spec.h_size(micro);
+/// The Megatron-style tensor-parallel schedule as a [`SchedulePolicy`].
+pub struct TensorParallelPolicy<'a> {
+    spec: &'a ModelSpec,
+    cluster: &'a Cluster,
+    opts: TpOptions,
+    /// Per-device shard fractions (by usable memory, heterogeneous).
+    frac: Vec<f64>,
+    /// Streaming need per pass (sliding window): shard bytes that exceed
+    /// the window resident in memory.
+    stream_bytes: Vec<u64>,
+    /// Serialized wire rounds per all-reduce: 2(d−1).
+    sync_rounds: usize,
+    st: Option<TpState>,
+}
 
-    let decode_start = 0.0;
-    let mut step_times = Vec::with_capacity(tokens);
-    let mut t_prev = decode_start;
-    let mut emergency_steps = 0usize;
-    let mut bw_stalls: u64 = 0;
+impl<'a> TensorParallelPolicy<'a> {
+    pub fn new(spec: &'a ModelSpec, cluster: &'a Cluster, opts: &TpOptions) -> Self {
+        let d = cluster.len();
+        // Per-device shard: Galaxy/TPI-LLM partition workload by device
+        // capability, so shard fractions follow usable memory
+        // (heterogeneous), not 1/d. Window sizing is a deployment-time
+        // decision, so it uses the nominal capacities — scripted pressure
+        // only moves the KV-overflow judgement in `step`.
+        let total_usable: f64 = cluster.devices.iter().map(|x| x.usable_mem() as f64).sum();
+        let frac: Vec<f64> = (0..d)
+            .map(|i| cluster.devices[i].usable_mem() as f64 / total_usable)
+            .collect();
+        let stream_bytes: Vec<u64> = (0..d)
+            .map(|i| {
+                if !opts.sliding_window {
+                    return 0;
+                }
+                let total_shard =
+                    (spec.layer_bytes() as f64 * spec.layers as f64 * frac[i]) as u64
+                        + (spec.embed_bytes() as f64 * frac[i]) as u64;
+                let window = cluster.devices[i].usable_mem() * 7 / 10;
+                total_shard.saturating_sub(window)
+            })
+            .collect();
+        TensorParallelPolicy {
+            spec,
+            cluster,
+            opts: *opts,
+            frac,
+            stream_bytes,
+            // One all-reduce = 2(d−1) serialized rounds on the shared
+            // medium (reduce-scatter + all-gather), each moving the full
+            // activation payload across the switch and paying the
+            // per-message latency floor — this latency amplification is
+            // why TP hurts on edge LANs (§III).
+            sync_rounds: 2 * (d.max(2) - 1),
+            st: None,
+        }
+    }
+}
 
-    for step in 0..tokens {
-        let bw = bw_trace.at(step);
-        let ctx = opts.prompt_tokens + step;
-        let step_start = t_prev;
+impl SchedulePolicy for TensorParallelPolicy<'_> {
+    fn begin_request(
+        &mut self,
+        _core: &mut CoreState,
+        at: f64,
+        micro: usize,
+        _global_step: usize,
+    ) -> f64 {
+        self.st = Some(TpState {
+            round_bytes: self.spec.h_size(micro),
+        });
+        // TP charges no pipeline prefill pass: decoding starts immediately.
+        at
+    }
+
+    fn step(&mut self, core: &mut CoreState, ctx: &StepCtx) -> f64 {
+        let st = self.st.as_ref().expect("begin_request precedes step");
+        let d = self.cluster.len();
+        let micro = ctx.micro;
+        let bw = core.bw_at(ctx.global_step);
+        let tok = self.opts.prompt_tokens + ctx.local_step;
+        let step_start = ctx.step_start;
 
         // Compute: every device works on every layer's shard; the step is
         // paced by the slowest device (synchronous TP).
         let comp_slowest = (0..d)
             .map(|i| {
-                let full = cost::comp_time(spec, &cluster.devices[i], spec.layers, ctx, micro);
-                full * frac[i]
+                let full = cost::comp_time(
+                    self.spec,
+                    &self.cluster.devices[i],
+                    self.spec.layers,
+                    tok,
+                    micro,
+                );
+                full * self.frac[i]
             })
             .fold(0.0f64, f64::max);
 
         // Collectives: 2 syncs per layer, each 2(d−1) serialized rounds on
         // the wire plus a per-sync software overhead (barrier + framework).
         let mut comm_total = 0.0;
-        for _ in 0..(2 * spec.layers * sync_rounds) {
+        for _ in 0..(2 * self.spec.layers * self.sync_rounds) {
             let at = step_start + comm_total;
-            let iv = net.acquire(at, link_transfer_secs(round_bytes, bw));
-            if iv.start > at {
-                bw_stalls += 1;
-            }
+            let iv = core.link_acquire(at, link_transfer_secs(st.round_bytes, bw));
             comm_total = iv.end - step_start;
         }
-        comm_total += 2.0 * spec.layers as f64 * opts.sync_overhead;
-        trace.push(
+        comm_total += 2.0 * self.spec.layers as f64 * self.opts.sync_overhead;
+        core.trace.push(
             0,
             SpanKind::Comm,
-            Label::Step { tag: "sync", step: step as u32 },
+            Label::Step {
+                tag: "sync",
+                step: ctx.global_step as u32,
+            },
             step_start,
             step_start + comm_total,
         );
-        let comm_visible = comm_total * (1.0 - opts.comm_overlap);
+        let comm_visible = comm_total * (1.0 - self.opts.comm_overlap);
 
         // Sliding-window streaming: overlaps with compute+comm, pays the
         // uncovered remainder (slowest device).
         let mut load_uncovered = 0.0f64;
         for i in 0..d {
-            if stream_bytes[i] == 0 {
+            if self.stream_bytes[i] == 0 {
                 continue;
             }
-            let iv = ssds[i].read(step_start, stream_bytes[i]);
-            trace.push(
+            let iv = core.ssds[i].read(step_start, self.stream_bytes[i]);
+            core.trace.push(
                 i,
                 SpanKind::Load,
-                Label::Step { tag: "w", step: step as u32 },
+                Label::Step {
+                    tag: "w",
+                    step: ctx.global_step as u32,
+                },
                 iv.start,
                 iv.end,
             );
@@ -184,65 +279,54 @@ pub fn run_tensor_parallel(
         }
 
         let mut step_end = step_start + comp_slowest + comm_visible + load_uncovered;
-        trace.push(
+        core.trace.push(
             0,
             SpanKind::Compute,
-            Label::Step { tag: "tp", step: step as u32 },
+            Label::Step {
+                tag: "tp",
+                step: ctx.global_step as u32,
+            },
             step_start + comm_visible,
             step_start + comm_visible + comp_slowest,
         );
 
-        // KV overflow handling.
+        // KV overflow handling, judged against the (possibly scripted)
+        // effective caps.
         let kv_bytes_i = |i: usize| {
-            (spec.kv_bytes_per_token_layer() as f64 * frac[i]) as u64
-                * spec.layers as u64
-                * (ctx * micro) as u64
-                + (spec.layer_bytes() as f64 * spec.layers as f64 * frac[i]) as u64
-                    * u64::from(stream_bytes[i] == 0)
+            (self.spec.kv_bytes_per_token_layer() as f64 * self.frac[i]) as u64
+                * self.spec.layers as u64
+                * (tok * micro) as u64
+                + (self.spec.layer_bytes() as f64 * self.spec.layers as f64 * self.frac[i]) as u64
+                    * u64::from(self.stream_bytes[i] == 0)
         };
-        // As in the pipeline executors, one step counts at most once.
-        let mut emergency_this_step = false;
+        // As in the pipeline executors, the core counts one step at most
+        // once.
         for i in 0..d {
-            let over_bytes = kv_bytes_i(i).saturating_sub(cluster.devices[i].usable_mem());
+            let over_bytes = kv_bytes_i(i).saturating_sub(core.mem_caps[i]);
             if over_bytes > 0 {
-                emergency_this_step = true;
-                let kv_tok = ((spec.kv_bytes_per_token_layer() as f64 * frac[i]) as u64
-                    * spec.layers as u64)
+                core.mark_emergency();
+                let kv_tok = ((self.spec.kv_bytes_per_token_layer() as f64 * self.frac[i]) as u64
+                    * self.spec.layers as u64)
                     .max(1);
-                let overflow = (over_bytes.div_ceil(kv_tok) as usize).min(ctx * micro);
-                if opts.offload_kv {
+                let overflow = (over_bytes.div_ceil(kv_tok) as usize).min(tok * micro);
+                if self.opts.offload_kv {
                     // Larger sliding window: stream the overflow through SSD.
                     let bytes = kv_tok * overflow as u64;
-                    let w = ssds[i].write(step_end, bytes);
-                    let r = ssds[i].read(w.end, bytes);
-                    trace.push(i, SpanKind::Store, "kv-window", w.start, w.end);
+                    let w = core.ssds[i].write(step_end, bytes);
+                    let r = core.ssds[i].read(w.end, bytes);
+                    core.trace.push(i, SpanKind::Store, "kv-window", w.start, w.end);
                     step_end = step_end.max(r.end);
                 } else {
                     // Recompute evicted KV (paper §V-A fallback).
-                    let flops =
-                        spec.layer_prefill_flops(overflow) * spec.layers as f64 * frac[i];
-                    step_end += flops / cluster.devices[i].flops;
+                    let flops = self.spec.layer_prefill_flops(overflow)
+                        * self.spec.layers as f64
+                        * self.frac[i];
+                    step_end += flops / self.cluster.devices[i].flops;
                 }
             }
         }
-        if emergency_this_step {
-            emergency_steps += 1;
-        }
 
-        step_times.push(step_end - step_start);
-        t_prev = step_end;
-    }
-
-    SimResult {
-        tokens,
-        micro_batches: micro,
-        total_time: t_prev - decode_start,
-        step_times,
-        trace,
-        kv_tokens_transferred: 0,
-        online_plans_fired: 0,
-        emergency_steps,
-        bw_stalls,
+        step_end
     }
 }
 

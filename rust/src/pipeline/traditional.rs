@@ -13,15 +13,25 @@
 //!   stage, so a micro-batch pays the load every time it reaches an evicted
 //!   layer, and the next micro-batch pays it again (no cross-segment reuse
 //!   window like the interleaved schedule has).
+//!
+//! The schedule lives in [`TraditionalPolicy`]; the unified core
+//! ([`crate::pipeline::core`]) owns resources, link-stall accounting,
+//! scripted-event application and result assembly, which also gives this
+//! baseline a scripted entry point ([`run_traditional_scripted`]) and a
+//! continuous-serving path through `serve::simqueue` for free.
 
+use crate::adapt::Script;
 use crate::cluster::Cluster;
 use crate::cost;
+use crate::model::ModelSpec;
 use crate::net::{link_transfer_secs, BandwidthTrace};
+use crate::pipeline::core::{run_single, CommonOptions, CoreState, SchedulePolicy, StepCtx};
 use crate::pipeline::result::SimResult;
 use crate::plan::allocation::Allocation;
-use crate::sim::{Label, MicroPhase, Resource, SpanKind, SsdModel, Trace, TraceMode};
+use crate::sim::{Label, MicroPhase, SpanKind, TraceMode};
 
-/// Options for the traditional executor.
+/// Options for the traditional executor: the policy-specific knob plus the
+/// [`CommonOptions`] fields (converted via `From<&TradOptions>`).
 #[derive(Debug, Clone, Copy)]
 pub struct TradOptions {
     pub prompt_tokens: usize,
@@ -41,6 +51,16 @@ impl Default for TradOptions {
             seed: 0xBA5E,
             recompute_fallback: true,
             trace_mode: TraceMode::Full,
+        }
+    }
+}
+
+impl From<&TradOptions> for CommonOptions {
+    fn from(o: &TradOptions) -> CommonOptions {
+        CommonOptions {
+            prompt_tokens: o.prompt_tokens,
+            seed: o.seed,
+            trace_mode: o.trace_mode,
         }
     }
 }
@@ -70,69 +90,129 @@ pub fn run_traditional(
     tokens: usize,
     opts: &TradOptions,
 ) -> SimResult {
-    let spec = alloc.spec.clone();
-    let d = cluster.len();
-    let micro = micro_batches.max(1);
+    run_traditional_scripted(
+        alloc,
+        cluster,
+        bw_trace,
+        micro_batches,
+        tokens,
+        opts,
+        &Script::none(),
+    )
+}
 
-    let mut trace = Trace::with_mode(opts.trace_mode);
-    let mut gpus: Vec<Resource> = (0..d).map(|_| Resource::new()).collect();
-    let mut ssds: Vec<SsdModel> = (0..d)
-        .map(|i| {
-            SsdModel::new(
-                cluster.devices[i].ssd_read_bps,
-                cluster.devices[i].ssd_write_bps,
-                opts.seed ^ (i as u64) << 8,
-            )
-        })
-        .collect();
-    let mut net = Resource::new();
+/// [`run_traditional`] under a scripted joint fluctuation [`Script`]:
+/// memory events shift the effective per-device caps the KV-overflow
+/// fallback judges saturation against, bandwidth events scale the link
+/// capacity. Baselines have no online planner, so memory pressure shows up
+/// directly as recompute/spill work. An empty script is bit-identical to
+/// [`run_traditional`].
+pub fn run_traditional_scripted(
+    alloc: &Allocation,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    micro_batches: usize,
+    tokens: usize,
+    opts: &TradOptions,
+    script: &Script,
+) -> SimResult {
+    run_single(
+        TraditionalPolicy::new(alloc, cluster, opts),
+        cluster,
+        bw_trace,
+        micro_batches,
+        tokens,
+        &CommonOptions::from(opts),
+        script,
+    )
+}
 
-    // Prefill charge (not measured).
-    let bw0 = bw_trace.at(0);
-    let mut t_prefill = 0.0;
-    for i in 0..d {
-        let a = &alloc.devices[i];
-        let flops =
-            spec.layer_prefill_flops(opts.prompt_tokens) * a.total_layers as f64 * micro as f64;
-        t_prefill += flops / cluster.devices[i].flops
-            + cost::load_time(&spec, &cluster.devices[i], a)
-            + link_transfer_secs(spec.h_size(micro) * opts.prompt_tokens as u64, bw0);
+struct TradState {
+    kv_held: Vec<usize>,
+    /// Reused across steps — no per-step allocation in the decode loop.
+    fronts: Vec<f64>,
+}
+
+/// The GPipe-style single-stage-per-device schedule as a
+/// [`SchedulePolicy`].
+pub struct TraditionalPolicy<'a> {
+    alloc: &'a Allocation,
+    cluster: &'a Cluster,
+    spec: ModelSpec,
+    opts: TradOptions,
+    st: Option<TradState>,
+}
+
+impl<'a> TraditionalPolicy<'a> {
+    pub fn new(alloc: &'a Allocation, cluster: &'a Cluster, opts: &TradOptions) -> Self {
+        TraditionalPolicy {
+            alloc,
+            cluster,
+            spec: alloc.spec.clone(),
+            opts: *opts,
+            st: None,
+        }
     }
-    let decode_start = t_prefill;
+}
 
-    let mut kv_held: Vec<usize> = vec![opts.prompt_tokens; d];
-    let mut emergency_steps = 0usize;
-    let mut bw_stalls: u64 = 0;
-    let mut step_times = Vec::with_capacity(tokens);
-    let mut t_prev = decode_start;
-    // Reused across steps — no per-step allocation in the decode loop.
-    let mut fronts = vec![0.0f64; micro];
+impl SchedulePolicy for TraditionalPolicy<'_> {
+    fn begin_request(
+        &mut self,
+        core: &mut CoreState,
+        at: f64,
+        micro: usize,
+        global_step: usize,
+    ) -> f64 {
+        let d = self.cluster.len();
+        // Prefill charge (not measured). The traditional schedule has no
+        // cross-segment overlap window, so load and compute serialize.
+        let bw0 = core.bw_at(global_step);
+        let mut t_prefill = at;
+        for i in 0..d {
+            let a = &self.alloc.devices[i];
+            let flops = self.spec.layer_prefill_flops(self.opts.prompt_tokens)
+                * a.total_layers as f64
+                * micro as f64;
+            t_prefill += flops / self.cluster.devices[i].flops
+                + cost::load_time(&self.spec, &self.cluster.devices[i], a)
+                + link_transfer_secs(
+                    self.spec.h_size(micro) * self.opts.prompt_tokens as u64,
+                    bw0,
+                );
+        }
+        self.st = Some(TradState {
+            kv_held: vec![self.opts.prompt_tokens; d],
+            fronts: vec![0.0f64; micro],
+        });
+        t_prefill
+    }
 
-    for step in 0..tokens {
-        let bw = bw_trace.at(step);
-        let ctx = opts.prompt_tokens + step;
-        let step_start = t_prev;
-        fronts.fill(step_start);
+    fn step(&mut self, core: &mut CoreState, ctx: &StepCtx) -> f64 {
+        let st = self.st.as_mut().expect("begin_request precedes step");
+        let d = self.cluster.len();
+        let micro = ctx.micro;
+        let bw = core.bw_at(ctx.global_step);
+        let tok = self.opts.prompt_tokens + ctx.local_step;
+        let step_start = ctx.step_start;
+        st.fronts.fill(step_start);
 
         for i in 0..d {
-            let a = &alloc.devices[i];
+            let a = &self.alloc.devices[i];
             let res = a.non_offloaded_layers();
             let off = a.offloaded_count();
 
-            for (m, front) in fronts.iter_mut().enumerate() {
+            for (m, front) in st.fronts.iter_mut().enumerate() {
                 let label = |phase| Label::Micro { m: m as u32, phase };
-                let hop = net.acquire(*front, link_transfer_secs(spec.h_size(1), bw));
-                if hop.start > *front {
-                    bw_stalls += 1;
-                }
-                trace.push(i, SpanKind::Comm, label(MicroPhase::Hop), hop.start, hop.end);
+                let hop = core.link_acquire(*front, link_transfer_secs(self.spec.h_size(1), bw));
+                core.trace
+                    .push(i, SpanKind::Comm, label(MicroPhase::Hop), hop.start, hop.end);
                 let mut cursor = hop.end;
 
                 // Resident layers compute first.
-                let comp_res = cost::comp_time(&spec, &cluster.devices[i], res, ctx, 1);
-                let iv = gpus[i].acquire(cursor, comp_res);
+                let comp_res = cost::comp_time(&self.spec, &self.cluster.devices[i], res, tok, 1);
+                let iv = core.gpus[i].acquire(cursor, comp_res);
                 if comp_res > 0.0 {
-                    trace.push(
+                    core.trace.push(
                         i,
                         SpanKind::Compute,
                         label(MicroPhase::Resident),
@@ -146,15 +226,18 @@ pub fn run_traditional(
                 // the "multiple loading delay" pathology. Loads start only
                 // when the micro-batch reaches them (no lookahead window).
                 if off > 0 {
-                    let bytes = a.load_bytes(&spec);
-                    let load = ssds[i].read(cursor, bytes);
-                    trace.push(i, SpanKind::Load, label(MicroPhase::Load), load.start, load.end);
+                    let bytes = a.load_bytes(&self.spec);
+                    let load = core.ssds[i].read(cursor, bytes);
+                    core.trace
+                        .push(i, SpanKind::Load, label(MicroPhase::Load), load.start, load.end);
                     if load.end > cursor {
-                        trace.push(i, SpanKind::Stall, label(MicroPhase::Wait), cursor, load.end);
+                        core.trace
+                            .push(i, SpanKind::Stall, label(MicroPhase::Wait), cursor, load.end);
                     }
-                    let comp_off = cost::comp_time(&spec, &cluster.devices[i], off, ctx, 1);
-                    let iv2 = gpus[i].acquire(load.end, comp_off);
-                    trace.push(
+                    let comp_off =
+                        cost::comp_time(&self.spec, &self.cluster.devices[i], off, tok, 1);
+                    let iv2 = core.gpus[i].acquire(load.end, comp_off);
+                    core.trace.push(
                         i,
                         SpanKind::Compute,
                         label(MicroPhase::Offloaded),
@@ -167,57 +250,44 @@ pub fn run_traditional(
             }
         }
 
-        let mut step_end = fronts.iter().cloned().fold(step_start, f64::max);
+        let mut step_end = st.fronts.iter().cloned().fold(step_start, f64::max);
 
-        // KV growth + saturation fallback. As in the interleaved executor,
-        // a step counts as an emergency step at most once.
-        let mut emergency_this_step = false;
+        // KV growth + saturation fallback (judged against the scripted
+        // effective caps). The core counts a step as an emergency step at
+        // most once.
         for i in 0..d {
-            kv_held[i] += micro;
+            st.kv_held[i] += micro;
             // Overflow grows with context: each step the evicted window is
             // whatever no longer fits (baselines have no adaptation).
-            let overflow = cost::overflow_tokens(alloc, cluster, i, ctx * micro, 0).min(ctx * micro);
+            let overflow =
+                cost::overflow_tokens_with_cap(self.alloc, i, tok * micro, 0, core.mem_caps[i])
+                    .min(tok * micro);
             if overflow > 0 {
-                emergency_this_step = true;
-                if opts.recompute_fallback {
+                core.mark_emergency();
+                if self.opts.recompute_fallback {
                     // Recompute evicted KV: an extra prefill-shaped pass
                     // over the overflow window (paper §V-A baseline note).
-                    let flops = spec.layer_prefill_flops(overflow)
-                        * alloc.devices[i].total_layers as f64;
-                    let t = flops / cluster.devices[i].flops;
-                    let iv = gpus[i].acquire(step_end, t);
-                    trace.push(i, SpanKind::Compute, "recompute", iv.start, iv.end);
+                    let flops = self.spec.layer_prefill_flops(overflow)
+                        * self.alloc.devices[i].total_layers as f64;
+                    let t = flops / self.cluster.devices[i].flops;
+                    let iv = core.gpus[i].acquire(step_end, t);
+                    core.trace
+                        .push(i, SpanKind::Compute, "recompute", iv.start, iv.end);
                     step_end = step_end.max(iv.end);
                 } else {
-                    let bytes = spec.kv_bytes_per_token_layer()
-                        * alloc.devices[i].total_layers as u64
+                    let bytes = self.spec.kv_bytes_per_token_layer()
+                        * self.alloc.devices[i].total_layers as u64
                         * overflow as u64;
-                    let w = ssds[i].write(step_end, bytes);
-                    let r = ssds[i].read(w.end, bytes);
-                    trace.push(i, SpanKind::Store, "kv-spill", w.start, w.end);
-                    trace.push(i, SpanKind::Load, "kv-fetch", r.start, r.end);
+                    let w = core.ssds[i].write(step_end, bytes);
+                    let r = core.ssds[i].read(w.end, bytes);
+                    core.trace.push(i, SpanKind::Store, "kv-spill", w.start, w.end);
+                    core.trace.push(i, SpanKind::Load, "kv-fetch", r.start, r.end);
                     step_end = step_end.max(r.end);
                 }
             }
         }
-        if emergency_this_step {
-            emergency_steps += 1;
-        }
 
-        step_times.push(step_end - step_start);
-        t_prev = step_end;
-    }
-
-    SimResult {
-        tokens,
-        micro_batches: micro,
-        total_time: t_prev - decode_start,
-        step_times,
-        trace,
-        kv_tokens_transferred: 0,
-        online_plans_fired: 0,
-        emergency_steps,
-        bw_stalls,
+        step_end
     }
 }
 
@@ -276,5 +346,45 @@ mod tests {
         let b4 = run_traditional(&alloc, &cluster, &bw, 4, 6, &TradOptions::default());
         // Per-token latency improves less than 4x (loads repeat per micro).
         assert!(b4.mean_step() > b1.mean_step());
+    }
+
+    #[test]
+    fn scripted_squeeze_inflates_fallback_work() {
+        // A hard squeeze on device 0 forces the overflow fallback earlier
+        // than the unscripted run — the baseline now reacts to scripted
+        // pressure through the shared core.
+        use crate::adapt::MemScenario;
+        let (alloc, cluster) = lowmem();
+        let bw = BandwidthTrace::fixed_mbps(200.0);
+        let opts = TradOptions {
+            trace_mode: TraceMode::Off,
+            ..TradOptions::default()
+        };
+        let plain = run_traditional(&alloc, &cluster, &bw, 1, 12, &opts);
+        let squeezed = run_traditional_scripted(
+            &alloc,
+            &cluster,
+            &bw,
+            1,
+            12,
+            &opts,
+            &Script::from_mem(MemScenario::squeeze(
+                "sq",
+                0,
+                crate::util::bytes::gib(40.0),
+                2,
+            )),
+        );
+        assert!(
+            squeezed.emergency_steps >= plain.emergency_steps,
+            "squeeze {} !>= plain {}",
+            squeezed.emergency_steps,
+            plain.emergency_steps
+        );
+        assert!(squeezed.emergency_steps > 0, "a 40 GiB squeeze must overflow");
+        // Empty script stays bit-identical.
+        let empty = run_traditional_scripted(&alloc, &cluster, &bw, 1, 12, &opts, &Script::none());
+        assert_eq!(empty.step_times, plain.step_times);
+        assert_eq!(empty.total_time, plain.total_time);
     }
 }

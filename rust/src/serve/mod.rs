@@ -1,19 +1,28 @@
-//! Real serving over PJRT: generation engine, virtual-cluster deployment,
-//! and the threaded request server (the end-to-end driver behind
-//! `examples/serve_cluster.rs`).
+//! Serving: the continuous-serving *simulator* ([`simqueue`], plain Rust,
+//! always builds) plus real serving over PJRT — generation engine,
+//! virtual-cluster deployment, and the threaded request server (the
+//! end-to-end driver behind `examples/serve_cluster.rs`).
 //!
 //! The engine and server execute real HLO through the `xla` PJRT bindings
 //! and are gated behind the off-by-default `pjrt` cargo feature; the
 //! deployment planning helpers (and [`LayerResidency`], the contract
-//! between the scheduler and the engine) are plain Rust and always build.
+//! between the scheduler and the engine) are plain Rust and always build,
+//! as does [`simqueue`] — the FIFO request-queue simulation over the
+//! unified executor core that the scenario matrix's arrival-process axis
+//! evaluates.
 
 pub mod deployment;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 #[cfg(feature = "pjrt")]
 pub mod server;
+pub mod simqueue;
 
 pub use deployment::{plan_tiny, residency_plan, virtual_cluster};
+pub use simqueue::{
+    serve_interleaved, serve_tensor_parallel, serve_traditional, simulate_stream, RequestMetrics,
+    StreamResult,
+};
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, Generation};
 #[cfg(feature = "pjrt")]

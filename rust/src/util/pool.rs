@@ -12,10 +12,14 @@
 //!   the `LIME_THREADS` env override (CI pins it for stable timings) or the
 //!   machine's `available_parallelism`. Workers are spawned once and reused
 //!   across every sweep in the process.
-//! * **Per-worker LIFO deques with steal-half.** A worker pops its own
-//!   deque from the back (newest first — nested jobs run with hot caches),
-//!   and an idle worker steals the oldest *half* of a sibling's deque in
-//!   one lock acquisition, so a burst of jobs spreads in O(log n) steals.
+//! * **Per-worker LIFO deques with steal-half, longest victim first.** A
+//!   worker pops its own deque from the back (newest first — nested jobs
+//!   run with hot caches), and an idle worker steals the oldest *half* of
+//!   the sibling with the **longest** deque — chosen by a lock-free scan
+//!   over per-deque atomic length mirrors, locking only the picked victim
+//!   (stalely-empty victims re-checked under the lock) — so a skewed
+//!   burst of jobs spreads in O(log n) steals instead of bleeding one
+//!   neighbour dry in fixed cyclic order.
 //! * **Nested job submission.** [`Pool::map_indexed`] called from inside a
 //!   pool job pushes the sub-jobs onto the calling worker's own deque and
 //!   the worker *helps* (executes pool jobs) while it waits for its
@@ -66,13 +70,34 @@ thread_local! {
 /// external caller by every other pool.
 static NEXT_POOL_ID: AtomicUsize = AtomicUsize::new(0);
 
+/// One worker's deque plus a lock-free length mirror. Thieves scan `len`
+/// without touching the mutex and only lock the victim they pick; every
+/// mutation updates the mirror to the exact post-mutation length while
+/// still holding the lock, so the mirror is exact whenever the lock is
+/// free. It is still only a *heuristic* for stealers — a victim may race
+/// to empty between the scan and the steal — so emptiness is re-checked
+/// under the lock.
+struct Deque {
+    tasks: Mutex<VecDeque<Task>>,
+    len: AtomicUsize,
+}
+
+impl Deque {
+    fn new() -> Deque {
+        Deque {
+            tasks: Mutex::new(VecDeque::new()),
+            len: AtomicUsize::new(0),
+        }
+    }
+}
+
 struct Shared {
     pool_id: usize,
     /// FIFO queue for jobs submitted from threads outside this pool.
     injector: Mutex<VecDeque<Task>>,
     /// Per-worker deques: owner pops the back (LIFO), thieves drain the
     /// oldest half from the front.
-    deques: Vec<Mutex<VecDeque<Task>>>,
+    deques: Vec<Deque>,
     /// Sleep coordination: submissions bump `epoch` and notify; a worker
     /// re-checks `epoch` under the lock before sleeping, so a submission
     /// between its (lock-free) scan and its wait cannot be lost.
@@ -84,31 +109,59 @@ struct Shared {
 
 impl Shared {
     /// Pull one runnable task: own deque (LIFO), then the injector, then
-    /// steal-half from a sibling. `me` is the calling worker's index in
-    /// *this* pool, or `None` for an external helper.
+    /// steal-half from a sibling — preferring the victim with the
+    /// *longest* deque. `me` is the calling worker's index in *this*
+    /// pool, or `None` for an external helper.
     fn find_task(&self, me: Option<usize>) -> Option<Task> {
         if let Some(i) = me {
-            if let Some(t) = self.deques[i].lock().unwrap().pop_back() {
+            let own = &self.deques[i];
+            let mut tasks = own.tasks.lock().unwrap();
+            if let Some(t) = tasks.pop_back() {
+                own.len.store(tasks.len(), Ordering::Relaxed);
                 return Some(t);
             }
+            drop(tasks);
         }
         if let Some(t) = self.injector.lock().unwrap().pop_front() {
             return Some(t);
         }
+        // Victim selection by deque length: one allocation-free,
+        // lock-free max-tracking scan over the length mirrors, then steal
+        // half of the LONGEST deque (one lock, on the chosen victim
+        // only). That balances a skewed burst in fewer steal rounds than
+        // fixed cyclic order, which repeatedly bled the same neighbour
+        // dry one steal at a time. The snapshot may be stale by the time
+        // the victim is locked, so emptiness is re-checked and a
+        // raced-to-empty victim triggers a rescan. Results are still
+        // placed by job index, so victim order never affects any
+        // `map_indexed` output (the determinism contract).
         let n = self.deques.len();
-        let start = me.map_or(0, |i| i + 1);
-        for off in 0..n {
-            let v = (start + off) % n;
-            if Some(v) == me {
-                continue;
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (len, index)
+            for v in 0..n {
+                if Some(v) == me {
+                    continue;
+                }
+                let len = self.deques[v].len.load(Ordering::Relaxed);
+                // `map_or` (not 1.82's `is_none_or`): the crate's MSRV
+                // is 1.75 (see rust/Cargo.toml).
+                if len > 0 && best.map_or(true, |(best_len, _)| len > best_len) {
+                    best = Some((len, v));
+                }
             }
+            let Some((_, v)) = best else {
+                return None;
+            };
             let mut stolen: VecDeque<Task> = {
-                let mut victim = self.deques[v].lock().unwrap();
-                let take = victim.len().div_ceil(2);
+                let victim = &self.deques[v];
+                let mut tasks = victim.tasks.lock().unwrap();
+                let take = tasks.len().div_ceil(2);
                 if take == 0 {
                     continue;
                 }
-                victim.drain(..take).collect()
+                let stolen: VecDeque<Task> = tasks.drain(..take).collect();
+                victim.len.store(tasks.len(), Ordering::Relaxed);
+                stolen
             };
             let first = stolen.pop_front();
             if !stolen.is_empty() {
@@ -116,10 +169,12 @@ impl Shared {
                 // other idle workers will find it) and wake a sleeper.
                 match me {
                     Some(i) => {
-                        let mut own = self.deques[i].lock().unwrap();
+                        let own = &self.deques[i];
+                        let mut tasks = own.tasks.lock().unwrap();
                         for t in stolen {
-                            own.push_back(t);
+                            tasks.push_back(t);
                         }
+                        own.len.store(tasks.len(), Ordering::Relaxed);
                     }
                     None => {
                         let mut inj = self.injector.lock().unwrap();
@@ -132,7 +187,6 @@ impl Shared {
             }
             return first;
         }
-        None
     }
 
     fn notify(&self) {
@@ -182,7 +236,7 @@ impl Pool {
         let shared = Arc::new(Shared {
             pool_id: NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed),
             injector: Mutex::new(VecDeque::new()),
-            deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            deques: (0..workers).map(|_| Deque::new()).collect(),
             idle_lock: Mutex::new(()),
             idle_cv: Condvar::new(),
             epoch: AtomicUsize::new(0),
@@ -233,7 +287,12 @@ impl Pool {
     /// meaning: each call's results are placed by its own job indices.
     fn submit_batch(&self, tasks: Vec<Task>) {
         match self.me() {
-            Some(i) => self.shared.deques[i].lock().unwrap().extend(tasks),
+            Some(i) => {
+                let own = &self.shared.deques[i];
+                let mut q = own.tasks.lock().unwrap();
+                q.extend(tasks);
+                own.len.store(q.len(), Ordering::Relaxed);
+            }
             None => {
                 let mut inj = self.shared.injector.lock().unwrap();
                 for t in tasks.into_iter().rev() {

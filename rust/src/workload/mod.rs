@@ -3,7 +3,7 @@
 
 pub mod requests;
 
-pub use requests::{poisson_arrivals, RequestGen};
+pub use requests::{poisson_arrivals, stream_requests, Request, RequestGen};
 
 use crate::cluster::Cluster;
 use crate::util::rng::Rng;

@@ -1,6 +1,8 @@
-//! Request arrival generators for the serving engine.
+//! Request arrival generators for the serving engine and the
+//! continuous-serving simulator (`serve::simqueue`).
 
 use crate::util::rng::Rng;
+use crate::workload::Pattern;
 
 /// One inference request.
 #[derive(Debug, Clone, PartialEq)]
@@ -73,6 +75,32 @@ impl RequestGen {
     }
 }
 
+/// Synthetic vocabulary for stream prompts. Prompt *content* only matters
+/// to the real PJRT serving path; the discrete-event simulator reads a
+/// request's arrival time and step count, and charges prefill from its
+/// own `CommonOptions::prompt_tokens` knob (see `serve::simqueue`).
+const STREAM_VOCAB: usize = 32_000;
+
+/// A request stream for the continuous-serving simulator, drawn per the
+/// paper's §V-A arrival patterns: `Sporadic` requests arrive occasionally
+/// (Poisson at `lambda` req/s), `Bursty` submits all `count` requests
+/// simultaneously at t = 0. Deterministic given `seed`; arrivals are
+/// sorted (the admission queue is FIFO).
+pub fn stream_requests(
+    pattern: Pattern,
+    seed: u64,
+    count: usize,
+    lambda: f64,
+    prompt_len: usize,
+    steps: usize,
+) -> Vec<Request> {
+    let mut gen = RequestGen::new(seed, STREAM_VOCAB, prompt_len, steps);
+    match pattern {
+        Pattern::Sporadic => gen.sporadic(count, lambda),
+        Pattern::Bursty => gen.bursty(count),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +131,18 @@ mod tests {
         let reqs = g.sporadic(5, 0.5);
         assert!(reqs.windows(2).all(|w| w[1].arrival > w[0].arrival));
         assert!(reqs.iter().all(|r| r.prompt.len() == 16 && r.steps == 8));
+    }
+
+    #[test]
+    fn stream_requests_follow_the_pattern() {
+        let spor = stream_requests(Pattern::Sporadic, 7, 6, 2.0, 16, 4);
+        assert_eq!(spor.len(), 6);
+        assert!(spor.windows(2).all(|w| w[1].arrival > w[0].arrival));
+        assert!(spor[0].arrival > 0.0);
+        let burst = stream_requests(Pattern::Bursty, 7, 6, 2.0, 16, 4);
+        assert_eq!(burst.len(), 6);
+        assert!(burst.iter().all(|r| r.arrival == 0.0 && r.steps == 4));
+        // Deterministic given the seed.
+        assert_eq!(spor, stream_requests(Pattern::Sporadic, 7, 6, 2.0, 16, 4));
     }
 }

@@ -134,13 +134,15 @@ fn pool_grid_equals_sequential_grid_over_real_experiments() {
 fn scenario_matrix_pool_equals_sequential() {
     // The scenario-matrix acceptance check: a matrix exercising ALL new
     // axes — #Seg overrides (nested plan_with_segs on the pool), a
-    // correlated multi-device dip, and a joint bandwidth+memory script,
-    // both patterns — must be bit-identical between the pooled evaluation
-    // and the sequential reference, cell for cell, and the serialized
-    // lime-sweep-v3 artifact must be byte-identical (the in-process proxy
-    // for CI's LIME_THREADS={1,4} sweep-determinism gate).
+    // correlated multi-device dip, a joint bandwidth+memory script, and a
+    // continuous-stream arrival point, both patterns — must be
+    // bit-identical between the pooled evaluation and the sequential
+    // reference, cell for cell (request-level metric arrays included),
+    // and the serialized lime-sweep-v4 artifact must be byte-identical
+    // (the in-process proxy for CI's LIME_THREADS={1,4}
+    // sweep-determinism gate).
     use lime::adapt::{MemScenario, Script};
-    use lime::experiments::{ScenarioMatrix, SegChoice};
+    use lime::experiments::{ArrivalSpec, ScenarioMatrix, SegChoice};
     use lime::util::bytes::gib;
     use lime::workload::Pattern;
 
@@ -168,6 +170,13 @@ fn scenario_matrix_pool_equals_sequential() {
         Script::from_mem(MemScenario::squeeze("sq", 0, gib(4.0), 1))
             .with_bandwidth_sag(0.5, 1, 3)
             .with_label("joint"),
+    ])
+    .with_arrivals(vec![
+        ArrivalSpec::Single,
+        ArrivalSpec::Stream {
+            count: 4,
+            lambda: 0.5,
+        },
     ]);
     let pooled = matrix.eval();
     let sequential = matrix.eval_sequential();
@@ -176,10 +185,14 @@ fn scenario_matrix_pool_equals_sequential() {
     for (p, s) in pooled.iter().zip(&sequential) {
         assert_eq!(p, s, "scenario cell diverged between pool and sequential");
     }
+    // Stream cells really evaluated on both paths (non-trivial arrays).
+    assert!(pooled
+        .iter()
+        .any(|c| c.requests.as_ref().is_some_and(|r| r.ttft_s.len() == 4)));
     assert_eq!(
         matrix.to_json(&pooled).to_string(),
         matrix.to_json(&sequential).to_string(),
-        "serialized artifact must be byte-identical"
+        "serialized v4 artifact must be byte-identical"
     );
 }
 

@@ -1,0 +1,279 @@
+//! Continuous-serving invariants over the unified executor core:
+//!
+//! * a **single-request stream is bit-identical** to the legacy `run_*`
+//!   entry point for all three schedule policies — step latencies,
+//!   counters, and trace — including under scripted joint pressure for
+//!   the interleaved policy (the refactor's acceptance property);
+//! * fluctuation scripts fire on the **stream timeline**: an event whose
+//!   step index lies beyond the first request lands mid-stream in a later
+//!   request, leaving every earlier step bit-identical;
+//! * **bursty arrivals queue at least as hard as sporadic arrivals** at
+//!   equal request count (the §V-A serving claim the simulator exists to
+//!   measure).
+
+use lime::adapt::{MemScenario, Script};
+use lime::cluster::Cluster;
+use lime::model::ModelSpec;
+use lime::net::BandwidthTrace;
+use lime::pipeline::{
+    run_interleaved, run_interleaved_scripted, run_tensor_parallel, run_traditional, ExecOptions,
+    SimResult, TpOptions, TradOptions,
+};
+use lime::plan::{plan, Allocation, PlanOptions};
+use lime::serve::{serve_interleaved, serve_tensor_parallel, serve_traditional, StreamResult};
+use lime::sim::TraceMode;
+use lime::util::bytes::{gib, mbps};
+use lime::util::prop::{check, pair, usize_in, Config, PropResult};
+use lime::workload::{stream_requests, Pattern, Request};
+
+fn setup_small() -> (Allocation, Cluster) {
+    let spec = ModelSpec::llama2_13b();
+    let cluster = Cluster::env_e1();
+    let opts = PlanOptions {
+        empirical_tokens: 128,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    };
+    (plan(&spec, &cluster, &opts).unwrap().allocation, cluster)
+}
+
+fn setup_lowmem() -> (Allocation, Cluster) {
+    let spec = ModelSpec::llama33_70b();
+    let cluster = Cluster::lowmem_setting1();
+    let opts = PlanOptions {
+        empirical_tokens: 128,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    };
+    (plan(&spec, &cluster, &opts).unwrap().allocation, cluster)
+}
+
+/// `micro` simultaneous zero-time requests, each decoding `tokens` — the
+/// stream shape whose single admitted batch must reproduce
+/// `run_*(micro, tokens)` bit for bit.
+fn batch_requests(micro: usize, tokens: usize) -> Vec<Request> {
+    stream_requests(Pattern::Bursty, 0xE0, micro, 1.0, 64, tokens)
+}
+
+fn assert_stream_matches_run(sr: &StreamResult, direct: &SimResult, what: &str) {
+    assert_eq!(sr.step_times, direct.step_times, "{what}: step latencies");
+    assert_eq!(sr.emergency_steps, direct.emergency_steps, "{what}: emergencies");
+    assert_eq!(sr.bw_stalls, direct.bw_stalls, "{what}: bw stalls");
+    assert_eq!(
+        sr.kv_tokens_transferred, direct.kv_tokens_transferred,
+        "{what}: kv shipped"
+    );
+    assert_eq!(
+        sr.online_plans_fired, direct.online_plans_fired,
+        "{what}: plans fired"
+    );
+    assert_eq!(
+        sr.trace.span_count(),
+        direct.trace.span_count(),
+        "{what}: span count"
+    );
+}
+
+#[test]
+fn prop_single_batch_stream_is_bit_identical_to_run_interleaved() {
+    let (alloc, cluster) = setup_small();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let opts = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let gen = pair(usize_in(1, 4), usize_in(1, 10));
+    let cfg = Config {
+        cases: 16,
+        seed: 0x57_AE,
+        max_shrink_steps: 16,
+    };
+    let result = check(&cfg, &gen, |&(micro, tokens)| {
+        let reqs = batch_requests(micro, tokens);
+        let sr = serve_interleaved(&alloc, &cluster, &bw, micro, &opts, &Script::none(), &reqs);
+        let direct = run_interleaved(&alloc, &cluster, &bw, micro, tokens, &opts);
+        if sr.step_times != direct.step_times {
+            return Err(format!(
+                "({micro},{tokens}): stream {:?} != direct {:?}",
+                sr.step_times, direct.step_times
+            ));
+        }
+        if sr.kv_tokens_transferred != direct.kv_tokens_transferred
+            || sr.online_plans_fired != direct.online_plans_fired
+            || sr.emergency_steps != direct.emergency_steps
+            || sr.bw_stalls != direct.bw_stalls
+        {
+            return Err(format!("({micro},{tokens}): counters diverged"));
+        }
+        Ok(())
+    });
+    assert!(matches!(result, PropResult::Pass { .. }), "{result:?}");
+}
+
+#[test]
+fn single_batch_stream_matches_run_interleaved_with_full_trace() {
+    let (alloc, cluster) = setup_small();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let opts = ExecOptions::default(); // TraceMode::Full
+    let reqs = batch_requests(2, 6);
+    let sr = serve_interleaved(&alloc, &cluster, &bw, 2, &opts, &Script::none(), &reqs);
+    let direct = run_interleaved(&alloc, &cluster, &bw, 2, 6, &opts);
+    assert_stream_matches_run(&sr, &direct, "interleaved/full-trace");
+    assert!(sr.trace.span_count() > 0);
+    // Stream metrics line up with the single run: no queueing, TTFT is
+    // prefill + first step, finish is the decode end.
+    let m = &sr.requests[0];
+    assert_eq!(m.queueing_delay, 0.0);
+    assert_eq!(sr.makespan, m.finish);
+    // finish − ttft spans steps 1..n (arrival is 0), i.e. the decode span
+    // minus the first step.
+    let decode_after_first = direct.total_time - direct.step_times[0];
+    assert!(
+        ((m.finish - m.ttft) - decode_after_first).abs() < 1e-9,
+        "decode span mismatch: {} vs {}",
+        m.finish - m.ttft,
+        decode_after_first
+    );
+}
+
+#[test]
+fn single_batch_stream_matches_scripted_run_interleaved() {
+    // Scripted joint pressure (memory + bandwidth channels) through the
+    // stream path reproduces run_interleaved_scripted bit for bit.
+    let (alloc, cluster) = setup_lowmem();
+    let bw = BandwidthTrace::fixed_mbps(150.0);
+    let opts = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let script = Script::from_mem(MemScenario::squeeze("sq", 0, gib(6.0), 2))
+        .with_bandwidth_sag(0.5, 1, 5)
+        .with_label("joint");
+    for (micro, tokens) in [(1usize, 8usize), (3, 6)] {
+        let reqs = batch_requests(micro, tokens);
+        let sr = serve_interleaved(&alloc, &cluster, &bw, micro, &opts, &script, &reqs);
+        let direct = run_interleaved_scripted(&alloc, &cluster, &bw, micro, tokens, &opts, &script);
+        assert_stream_matches_run(&sr, &direct, &format!("scripted ({micro},{tokens})"));
+    }
+}
+
+#[test]
+fn single_batch_stream_is_bit_identical_for_baseline_policies() {
+    let (alloc, cluster) = setup_small();
+    let spec = alloc.spec.clone();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let trad = TradOptions {
+        trace_mode: TraceMode::Off,
+        ..TradOptions::default()
+    };
+    let tp = TpOptions {
+        trace_mode: TraceMode::Off,
+        ..TpOptions::default()
+    };
+    for (micro, tokens) in [(1usize, 6usize), (2, 4), (4, 5)] {
+        let reqs = batch_requests(micro, tokens);
+        let sr = serve_traditional(&alloc, &cluster, &bw, micro, &trad, &Script::none(), &reqs);
+        let direct = run_traditional(&alloc, &cluster, &bw, micro, tokens, &trad);
+        assert_stream_matches_run(&sr, &direct, &format!("traditional ({micro},{tokens})"));
+
+        let sr = serve_tensor_parallel(&spec, &cluster, &bw, micro, &tp, &Script::none(), &reqs);
+        let direct = run_tensor_parallel(&spec, &cluster, &bw, micro, tokens, &tp);
+        assert_stream_matches_run(&sr, &direct, &format!("tensor ({micro},{tokens})"));
+    }
+}
+
+#[test]
+fn scripts_apply_on_the_stream_timeline_not_per_request() {
+    // Three back-to-back single-request runs of `tokens` steps each; the
+    // squeeze lands at stream step `tokens + 1` — inside the SECOND
+    // request. Per-request step counters never reach it, so any effect
+    // proves the script fired on the stream timeline. Before the event the
+    // stream must stay bit-identical to the unscripted one.
+    let (alloc, cluster) = setup_lowmem();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let opts = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let tokens = 4usize;
+    let reqs = batch_requests(3, tokens); // all at t=0, served one at a time
+    let plain = serve_interleaved(&alloc, &cluster, &bw, 1, &opts, &Script::none(), &reqs);
+    let script = Script::from_mem(MemScenario::squeeze("sq", 0, gib(48.0), tokens + 1));
+    let squeezed = serve_interleaved(&alloc, &cluster, &bw, 1, &opts, &script, &reqs);
+    assert_eq!(plain.batches, 3);
+    assert_eq!(squeezed.batches, 3);
+    assert_eq!(plain.step_times.len(), 3 * tokens);
+    // Request 1 (steps 0..tokens) precedes the event: bit-identical.
+    assert_eq!(
+        squeezed.step_times[..tokens],
+        plain.step_times[..tokens],
+        "pre-event steps must not change"
+    );
+    // The near-total squeeze must visibly disturb the later requests.
+    assert!(
+        squeezed.step_times != plain.step_times,
+        "a 48 GiB squeeze at stream step {} must perturb the stream",
+        tokens + 1
+    );
+    assert!(
+        squeezed.emergency_steps > plain.emergency_steps
+            || squeezed.online_plans_fired > plain.online_plans_fired,
+        "the squeeze must engage adaptation or the emergency fallback \
+         (squeezed: {} plans / {} emergencies, plain: {} / {})",
+        squeezed.online_plans_fired,
+        squeezed.emergency_steps,
+        plain.online_plans_fired,
+        plain.emergency_steps
+    );
+}
+
+#[test]
+fn prop_bursty_queues_at_least_as_hard_as_sporadic() {
+    // §V-A: at equal request count, simultaneous submission (bursty) can
+    // only increase queueing over occasional arrivals (sporadic). The
+    // sporadic rate is low (mean gap 100 s vs seconds of service), so
+    // its queue stays near-empty while the bursty backlog always waits.
+    let (alloc, cluster) = setup_small();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let opts = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let d = cluster.len();
+    let gen = pair(usize_in(d + 1, 2 * d + 2), usize_in(0, 1000));
+    let cfg = Config {
+        cases: 12,
+        seed: 0xB0_57,
+        max_shrink_steps: 8,
+    };
+    let result = check(&cfg, &gen, |&(count, salt)| {
+        let tokens = 3;
+        let seed = 0x5EED ^ salt as u64;
+        let bursty_reqs = stream_requests(Pattern::Bursty, seed, count, 0.01, 64, tokens);
+        let sporadic_reqs = stream_requests(Pattern::Sporadic, seed, count, 0.01, 64, tokens);
+        let bursty =
+            serve_interleaved(&alloc, &cluster, &bw, d, &opts, &Script::none(), &bursty_reqs);
+        let sporadic = serve_interleaved(
+            &alloc,
+            &cluster,
+            &bw,
+            d,
+            &opts,
+            &Script::none(),
+            &sporadic_reqs,
+        );
+        let (bq, sq) = (bursty.mean_queueing_delay(), sporadic.mean_queueing_delay());
+        if bq + 1e-9 < sq {
+            return Err(format!(
+                "count={count} seed={seed:#x}: bursty mean qd {bq:.3}s < sporadic {sq:.3}s"
+            ));
+        }
+        // count > |D| forces a second bursty batch, so bursty queueing is
+        // strictly positive.
+        if bq <= 0.0 {
+            return Err(format!("count={count}: bursty backlog never queued"));
+        }
+        Ok(())
+    });
+    assert!(matches!(result, PropResult::Pass { .. }), "{result:?}");
+}
