@@ -20,6 +20,13 @@ renders those artifacts into the paper's figure layouts:
 * :func:`speedup_summary` — LIME's speedup over the best completing
   baseline per column (the paper's headline numbers).
 
+``lime fleet`` writes one ``FLEET_<name>.json`` (schema
+``lime-fleet-v1``): N heterogeneous clusters behind a global admission
+router, with streaming P²/reservoir tail-latency quantiles per
+(router, pattern) cell. :func:`fig_fleet_tail_latency` renders the
+p50/p95/p99 TTFT / queueing-delay table by router policy and arrival
+pattern, plus the per-cluster request share.
+
 Everything is stdlib-only and renders Markdown tables; ``--plot`` adds
 PNGs when matplotlib is importable (it is optional on purpose — CI and
 edge boxes don't have it).
@@ -39,6 +46,7 @@ from dataclasses import dataclass
 from typing import Any
 
 SCHEMAS = ("lime-sweep-v2", "lime-sweep-v3", "lime-sweep-v4")
+FLEET_SCHEMA = "lime-fleet-v1"
 
 
 @dataclass
@@ -107,6 +115,56 @@ def load_sweeps(directory: str) -> list[Grid]:
     if not names:
         raise FileNotFoundError(f"no SWEEP_*.json artifacts in {directory}")
     return [load_grid(os.path.join(directory, n)) for n in names]
+
+
+@dataclass
+class Fleet:
+    """One parsed ``lime-fleet-v1`` artifact."""
+
+    name: str
+    model: str
+    count: int
+    steps: int
+    clusters: list[dict[str, Any]]
+    routers: list[str]
+    patterns: list[str]
+    cells: list[dict[str, Any]]
+    path: str = ""
+
+
+def load_fleet(path: str) -> Fleet:
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if doc.get("schema") != FLEET_SCHEMA:
+        raise ValueError(
+            f"{path}: expected schema {FLEET_SCHEMA!r}, got {doc.get('schema')!r}"
+        )
+    for key in ("name", "model", "count", "steps", "clusters", "routers", "patterns", "cells"):
+        if key not in doc:
+            raise ValueError(f"{path}: missing '{key}'")
+    return Fleet(
+        name=doc["name"],
+        model=doc["model"],
+        count=doc["count"],
+        steps=doc["steps"],
+        clusters=doc["clusters"],
+        routers=doc["routers"],
+        patterns=doc["patterns"],
+        cells=doc["cells"],
+        path=path,
+    )
+
+
+def load_fleets(directory: str) -> list[Fleet]:
+    """Load every ``FLEET_*.json`` artifact in ``directory``, sorted by
+    name. Unlike :func:`load_sweeps` an empty result is fine — fleets are
+    an optional second artifact family."""
+    names = sorted(
+        n
+        for n in os.listdir(directory)
+        if n.startswith("FLEET_") and n.endswith(".json")
+    )
+    return [load_fleet(os.path.join(directory, n)) for n in names]
 
 
 def _fmt_cell(cell: dict[str, Any]) -> str:
@@ -318,6 +376,85 @@ def speedup_summary(grid: Grid) -> str:
     return "\n\n".join(out)
 
 
+def fig_fleet_tail_latency(fleet: Fleet) -> str:
+    """The ``lime-fleet-v1`` view: streaming tail-latency quantiles per
+    (router policy × arrival pattern) cell — TTFT mean/p50/p95/p99,
+    queueing-delay p99, mean TBT and makespan — preceded by the fleet's
+    cluster roster and followed by how each router split the stream
+    across clusters."""
+    out = [
+        f"## {fleet.name} — fleet tail latency "
+        f"({fleet.model}, {fleet.count} requests x {fleet.steps} tok)"
+    ]
+
+    cluster_rows = [
+        [
+            c["label"],
+            str(c["devices"]),
+            f"{c['bw_mbps']:g}",
+            f"{c['planned_ms_per_token']:.1f}",
+        ]
+        for c in fleet.clusters
+    ]
+    out.append("### clusters")
+    out.append(
+        _md_table(
+            ["cluster", "devices", "bw (Mbps)", "planned ms/token"],
+            cluster_rows,
+        )
+    )
+
+    rows = []
+    for cell in fleet.cells:
+        ttft, qd, tbt = cell["ttft_s"], cell["queueing_delay_s"], cell["tbt_s"]
+        rows.append(
+            [
+                cell["router"],
+                cell["pattern"],
+                str(cell["count"]),
+                f"{ttft['mean']:.3f}",
+                f"{ttft['p50']:.3f}",
+                f"{ttft['p95']:.3f}",
+                f"{ttft['p99']:.3f}",
+                f"{qd['p99']:.3f}",
+                f"{tbt['mean'] * 1e3:.1f}",
+                f"{cell['makespan_s']:.2f}",
+            ]
+        )
+    header = [
+        "router",
+        "pattern",
+        "requests",
+        "TTFT mean (s)",
+        "TTFT p50",
+        "TTFT p95",
+        "TTFT p99",
+        "qd p99 (s)",
+        "mean TBT (ms)",
+        "makespan (s)",
+    ]
+    out.append("### tail latency by router x pattern")
+    out.append(_md_table(header, rows))
+
+    share_rows = [
+        [cell["router"], cell["pattern"]]
+        + [str(shard["count"]) for shard in cell["per_cluster"]]
+        for cell in fleet.cells
+    ]
+    out.append("### request share per cluster")
+    out.append(
+        _md_table(
+            ["router", "pattern"] + [c["label"] for c in fleet.clusters],
+            share_rows,
+        )
+    )
+    return "\n\n".join(out)
+
+
+def render_fleet(fleet: Fleet) -> str:
+    return fig_fleet_tail_latency(fleet)
+
+
 def render_grid(grid: Grid) -> str:
     parts = [
         fig_latency_vs_bandwidth(grid),
@@ -375,27 +512,40 @@ def plot_grid(grid: Grid, out_dir: str) -> list[str]:
 
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("sweep_dir", help="directory of SWEEP_*.json artifacts")
+    ap.add_argument("sweep_dir", help="directory of SWEEP_*.json / FLEET_*.json artifacts")
     ap.add_argument("--out", default="", help="write per-grid .md (and PNGs) here")
     ap.add_argument("--plot", action="store_true", help="also emit PNGs (needs matplotlib)")
     args = ap.parse_args(argv)
 
-    grids = load_sweeps(args.sweep_dir)
+    try:
+        grids = load_sweeps(args.sweep_dir)
+    except FileNotFoundError:
+        grids = []
+    fleets = load_fleets(args.sweep_dir)
+    if not grids and not fleets:
+        raise FileNotFoundError(
+            f"no SWEEP_*.json or FLEET_*.json artifacts in {args.sweep_dir}"
+        )
     if args.out:
         os.makedirs(args.out, exist_ok=True)
-    for grid in grids:
-        text = render_grid(grid)
+
+    def emit(text: str, stem: str) -> None:
         if args.out:
-            path = os.path.join(args.out, f"{grid.grid}.md")
+            path = os.path.join(args.out, f"{stem}.md")
             with open(path, "w", encoding="utf-8") as f:
                 f.write(text + "\n")
             print(f"wrote {path}")
-            if args.plot:
-                for png in plot_grid(grid, args.out):
-                    print(f"wrote {png}")
         else:
             print(text)
             print()
+
+    for grid in grids:
+        emit(render_grid(grid), grid.grid)
+        if args.out and args.plot:
+            for png in plot_grid(grid, args.out):
+                print(f"wrote {png}")
+    for fleet in fleets:
+        emit(render_fleet(fleet), fleet.name)
     return 0
 
 

@@ -303,3 +303,142 @@ def test_render_grid_and_cli(sweep_dir, tmp_path, capsys):
     assert rc == 0
     assert (out / "testgrid.md").exists()
     assert "wrote" in capsys.readouterr().out
+
+
+def _stat(mean, p50, p95, p99):
+    return {"mean": mean, "p50": p50, "p95": p95, "p99": p99}
+
+
+def _fleet_cell(router, pattern, count, shard_counts):
+    """One (router, pattern) cell in the exact shape `lime fleet` emits."""
+    return {
+        "count": count,
+        "makespan_s": 4.25,
+        "pattern": pattern,
+        "per_cluster": [
+            {
+                "count": n,
+                "decode_s": 0.5 * n,
+                "label": label,
+                "makespan_s": 4.25 if n else 0.0,
+                "queueing_delay_s": _stat(0.1, 0.05, 0.3, 0.4),
+                "tbt_s": _stat(0.02, 0.02, 0.03, 0.03),
+                "ttft_s": _stat(0.2, 0.15, 0.5, 0.6),
+            }
+            for label, n in shard_counts
+        ],
+        "queueing_delay_s": _stat(0.1, 0.05, 0.3, 0.456),
+        "router": router,
+        "tbt_s": _stat(0.025, 0.02, 0.03, 0.035),
+        "ttft_s": _stat(0.25, 0.125, 0.5, 0.75),
+    }
+
+
+@pytest.fixture
+def fleet_dir(tmp_path):
+    """A minimal lime-fleet-v1 artifact: two clusters, two routers, one
+    pattern — the streamed shape `lime fleet` writes."""
+    shard_counts = [("orin2", 3), ("edge2", 1)]
+    doc = {
+        "cells": [
+            _fleet_cell("rr", "sporadic", 4, shard_counts),
+            _fleet_cell("jsq", "sporadic", 4, [("orin2", 4), ("edge2", 0)]),
+        ],
+        "clusters": [
+            {"bw_mbps": 100.0, "devices": 2, "label": "orin2", "planned_ms_per_token": 83.0},
+            {"bw_mbps": 150.0, "devices": 2, "label": "edge2", "planned_ms_per_token": 61.5},
+        ],
+        "count": 4,
+        "lambda": 200.0,
+        "model": "Qwen3-32B",
+        "name": "fixture-fleet",
+        "patterns": ["sporadic"],
+        "routers": ["rr", "jsq"],
+        "schema": "lime-fleet-v1",
+        "seed": 1,
+        "steps": 4,
+    }
+    path = tmp_path / "FLEET_fixture-fleet.json"
+    path.write_text(json.dumps(doc))
+    return tmp_path
+
+
+def test_load_fleets_parses_artifact(fleet_dir):
+    fleets = figures.load_fleets(str(fleet_dir))
+    assert len(fleets) == 1
+    f = fleets[0]
+    assert f.name == "fixture-fleet"
+    assert f.model == "Qwen3-32B"
+    assert f.routers == ["rr", "jsq"]
+    assert len(f.cells) == 2
+
+
+def test_load_fleets_is_empty_when_absent(sweep_dir):
+    # A sweeps-only directory yields no fleets (and no error).
+    assert figures.load_fleets(str(sweep_dir)) == []
+
+
+def test_load_fleet_rejects_wrong_schema(tmp_path):
+    bad = tmp_path / "FLEET_bad.json"
+    bad.write_text(json.dumps({"schema": "lime-fleet-v0", "cells": []}))
+    with pytest.raises(ValueError, match="lime-fleet-v1"):
+        figures.load_fleet(str(bad))
+
+
+def test_fleet_tail_latency_table_renders_quantiles(fleet_dir):
+    f = figures.load_fleets(str(fleet_dir))[0]
+    text = figures.fig_fleet_tail_latency(f)
+    # Cluster roster: label, device count, bandwidth, planned latency.
+    assert "orin2" in text and "| 83.0 |" in text and "| 100 |" in text
+    # Tail table: TTFT p50/p99 and queueing p99 from the cell stats.
+    assert "| 0.125 |" in text and "| 0.750 |" in text
+    assert "| 0.456 |" in text
+    # Mean TBT renders in milliseconds, makespan in seconds.
+    assert "| 25.0 |" in text and "| 4.25 |" in text
+    # Request-share table: jsq sent everything to orin2.
+    assert "request share per cluster" in text
+    rows = [l for l in text.splitlines() if l.startswith("| jsq |")]
+    assert any("| 4 | 0 |" in r for r in rows)
+
+
+def test_cli_renders_fleet_only_directory(fleet_dir, tmp_path, capsys):
+    out = tmp_path / "figs"
+    rc = figures.main([str(fleet_dir), "--out", str(out)])
+    assert rc == 0
+    assert (out / "fixture-fleet.md").exists()
+    assert "wrote" in capsys.readouterr().out
+
+
+def test_cli_renders_sweeps_and_fleets_together(sweep_dir, tmp_path, capsys):
+    # Drop a fleet artifact into the sweep fixture directory: both
+    # families render side by side.
+    shard_counts = [("orin2", 2), ("edge2", 2)]
+    doc = {
+        "cells": [_fleet_cell("plan", "bursty", 4, shard_counts)],
+        "clusters": [
+            {"bw_mbps": 100.0, "devices": 2, "label": "orin2", "planned_ms_per_token": 83.0},
+            {"bw_mbps": 150.0, "devices": 2, "label": "edge2", "planned_ms_per_token": 61.5},
+        ],
+        "count": 4,
+        "lambda": 200.0,
+        "model": "Qwen3-32B",
+        "name": "side-fleet",
+        "patterns": ["bursty"],
+        "routers": ["plan"],
+        "schema": "lime-fleet-v1",
+        "seed": 1,
+        "steps": 4,
+    }
+    (sweep_dir / "FLEET_side-fleet.json").write_text(json.dumps(doc))
+    out = tmp_path / "figs"
+    rc = figures.main([str(sweep_dir), "--out", str(out)])
+    assert rc == 0
+    assert (out / "testgrid.md").exists()
+    assert (out / "side-fleet.md").exists()
+
+
+def test_cli_errors_when_no_artifacts(tmp_path):
+    empty = tmp_path / "nothing"
+    empty.mkdir()
+    with pytest.raises(FileNotFoundError, match="SWEEP_.*FLEET_"):
+        figures.main([str(empty)])

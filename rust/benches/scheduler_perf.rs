@@ -11,7 +11,9 @@
 //! the sequential reference. The `experiments_grid_e1_2bw*` pair measures
 //! full-grid sweep throughput — grid cells fan out on the pool and LIME
 //! cells nest their `plan()` candidates back into it — against the same
-//! grid evaluated sequentially.
+//! grid evaluated sequentially. The `fleet_stream_100k*` pair does the
+//! same for `serve::fleet`: a 10^5-request stream sharded one cluster per
+//! pool job versus the sequential reference it is byte-identical to.
 //!
 //! Pin the worker count with `LIME_THREADS=<n>` for stable timings (CI
 //! does). `Bench::finish` writes `BENCH_scheduler_perf.json` and prints
@@ -271,6 +273,33 @@ fn main() {
         b.row(
             "v4 arrivals sweep speedup (sequential / pool)",
             &format!("{:.2}x", arrivals_seq_s / arrivals_pool_s),
+        );
+    }
+
+    // Fleet-sharded serving throughput: a 10^5-request sporadic stream
+    // routed plan-aware across the four demo clusters, one cluster per
+    // pool job, aggregated memory-flat (P²/reservoir sinks — no
+    // per-request vectors retained). The sequential variant is the
+    // byte-identical reference the speedup is measured against.
+    let mut fleet = lime::serve::FleetSpec::demo(100_000, 4);
+    fleet.routers = vec![lime::serve::RouterPolicy::PlanAware];
+    fleet.patterns = vec![lime::workload::Pattern::Sporadic];
+    let fleet_pool_s = b
+        .time("fleet_stream_100k (pool)", 1, 3, || {
+            let cells = lime::serve::run_fleet(&fleet);
+            std::hint::black_box(cells[0].ttft.p99);
+        })
+        .mean;
+    let fleet_seq_s = b
+        .time("fleet_stream_100k_sequential", 1, 3, || {
+            let cells = lime::serve::run_fleet_sequential(&fleet);
+            std::hint::black_box(cells[0].ttft.p99);
+        })
+        .mean;
+    if fleet_pool_s > 0.0 {
+        b.row(
+            "fleet stream speedup (sequential / pool)",
+            &format!("{:.2}x", fleet_seq_s / fleet_pool_s),
         );
     }
 

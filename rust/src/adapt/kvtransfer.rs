@@ -25,7 +25,7 @@ use crate::cost;
 use crate::plan::allocation::Allocation;
 
 /// Per-device transfer state.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct TransferState {
     /// Dedicated receiver of this device's KV cache (None = this device is
     /// itself a `d_target` or never needs to ship).
@@ -38,7 +38,7 @@ pub struct TransferState {
 }
 
 /// The protocol driver.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct KvTransferProtocol {
     pub states: Vec<TransferState>,
     /// Hysteresis threshold `n_ts` in tokens.
@@ -60,14 +60,32 @@ impl KvTransferProtocol {
         micro: usize,
         bw: f64,
     ) -> Self {
+        let mut p = KvTransferProtocol {
+            states: Vec::with_capacity(alloc.devices.len()),
+            n_ts: 8,
+            last_bw: bw,
+            threshold_margin: 16,
+        };
+        p.reset(alloc, cluster, planner, ctx, micro, bw);
+        p
+    }
+
+    /// Re-initialize in place to exactly the state
+    /// [`KvTransferProtocol::new`] builds (pinned by
+    /// `reset_equals_new_after_use`), reusing the state buffer — the
+    /// per-request arena path for continuous streams.
+    pub fn reset(
+        &mut self,
+        alloc: &Allocation,
+        cluster: &Cluster,
+        planner: &OnlinePlanner,
+        ctx: usize,
+        micro: usize,
+        bw: f64,
+    ) {
         let n = alloc.devices.len();
-        let mut states: Vec<TransferState> = (0..n)
-            .map(|_| TransferState {
-                target: None,
-                n_trans: 0,
-                desired: 0,
-            })
-            .collect();
+        self.states.clear();
+        self.states.resize_with(n, TransferState::default);
 
         let target = planner.highest_threshold_device();
         for i in 0..n {
@@ -76,16 +94,13 @@ impl KvTransferProtocol {
             }
             let desired = eq8_tokens(alloc, cluster, i, ctx, micro, bw);
             if desired > 0 {
-                states[i].target = Some(target);
-                states[i].desired = desired;
+                self.states[i].target = Some(target);
+                self.states[i].desired = desired;
             }
         }
-        KvTransferProtocol {
-            states,
-            n_ts: 8,
-            last_bw: bw,
-            threshold_margin: 16,
-        }
+        self.n_ts = 8;
+        self.last_bw = bw;
+        self.threshold_margin = 16;
     }
 
     /// Alg. 2 lines 8–18: react to the bandwidth observed before an
@@ -285,6 +300,24 @@ mod tests {
             proto.on_bandwidth(&alloc, &cluster, &planner, 0, 256, 1, mbps(250.0));
         assert!(!changed.contains(&i));
         assert_eq!(proto.states[i].desired, before);
+    }
+
+    #[test]
+    fn reset_equals_new_after_use() {
+        // The arena contract: after shipping, receipts, and bandwidth
+        // reactions, `reset` must land on exactly what a fresh `new`
+        // builds for the same (ctx, micro, bw) arguments.
+        let (alloc, cluster, planner, mut used) = setup(200.0);
+        for i in 0..used.states.len() {
+            used.ship_now(i, usize::MAX, 4);
+        }
+        used.record_receipt(0, 5);
+        used.on_bandwidth(&alloc, &cluster, &planner, 10, 256, 1, mbps(50.0));
+        for (ctx, micro, bw) in [(256usize, 1usize, 200.0), (64, 3, 120.0)] {
+            used.reset(&alloc, &cluster, &planner, ctx, micro, mbps(bw));
+            let fresh = KvTransferProtocol::new(&alloc, &cluster, &planner, ctx, micro, mbps(bw));
+            assert_eq!(used, fresh);
+        }
     }
 
     #[test]

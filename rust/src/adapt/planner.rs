@@ -20,7 +20,7 @@ use crate::model::ModelSpec;
 use crate::plan::allocation::Allocation;
 
 /// One triggered offload plan.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct OffloadPlan {
     /// Generated-token count at which this plan fired (`TS_i^j`).
     pub at_tokens: usize,
@@ -38,7 +38,7 @@ impl OffloadPlan {
 }
 
 /// Per-device planner state.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct DeviceMemState {
     /// Free bytes right after offline allocation (before any KV),
     /// net of scripted pressure (`slack_base` shifted by `pressure_bytes`,
@@ -66,7 +66,7 @@ pub struct DeviceMemState {
 }
 
 /// Online planner over all devices of one allocation.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct OnlinePlanner {
     spec: ModelSpec,
     seg: usize,
@@ -77,40 +77,42 @@ impl OnlinePlanner {
     /// Build from the offline allocation at token 0. `micro` scales the KV
     /// growth rate (bursty pattern appends `micro` tokens per step).
     pub fn new(alloc: &Allocation, cluster: &Cluster, micro: usize) -> Self {
-        let spec = alloc.spec.clone();
-        let seg = alloc.seg.max(2); // plan granularity even for seg=1 plans
-        let states = (0..alloc.devices.len())
-            .map(|i| {
-                let a = &alloc.devices[i];
-                let used = cost::mem_demand(alloc, i, 0, 0);
-                let slack = cluster.devices[i].usable_mem().saturating_sub(used);
-                let kv_per_token = spec.kv_bytes_per_token_layer()
-                    * a.total_layers as u64
-                    * micro as u64;
-                // Evictable blocks: fully-resident layers expose both
-                // blocks; split layers expose their pinned block.
-                let alpha_avail = a.non_offloaded_layers() + a.mlp_offload;
-                let beta_avail = a.non_offloaded_layers() + a.mha_offload;
-                let mut st = DeviceMemState {
-                    slack_bytes: slack,
-                    slack_base: slack,
-                    pressure_bytes: 0,
-                    kv_per_token,
-                    alpha_avail,
-                    beta_avail,
-                    current: OffloadPlan {
-                        at_tokens: 0,
-                        alpha: 0,
-                        beta: 0,
-                    },
-                    next_threshold: 0,
-                    history: Vec::new(),
-                };
-                st.next_threshold = first_threshold(&st);
-                st
-            })
-            .collect();
-        OnlinePlanner { spec, seg, states }
+        let mut p = OnlinePlanner {
+            spec: alloc.spec.clone(),
+            seg: alloc.seg.max(2), // plan granularity even for seg=1 plans
+            states: Vec::with_capacity(alloc.devices.len()),
+        };
+        p.reset(alloc, cluster, micro);
+        p
+    }
+
+    /// Re-initialize in place to exactly the state [`OnlinePlanner::new`]
+    /// builds (pinned by `reset_equals_new_after_use`), reusing the state
+    /// and history buffers — the per-request arena path: a stream's
+    /// `begin_request` calls this instead of reallocating a planner.
+    pub fn reset(&mut self, alloc: &Allocation, cluster: &Cluster, micro: usize) {
+        if self.spec != alloc.spec {
+            self.spec = alloc.spec.clone();
+        }
+        self.seg = alloc.seg.max(2);
+        self.states.resize_with(alloc.devices.len(), DeviceMemState::default);
+        for (i, st) in self.states.iter_mut().enumerate() {
+            let a = &alloc.devices[i];
+            let used = cost::mem_demand(alloc, i, 0, 0);
+            let slack = cluster.devices[i].usable_mem().saturating_sub(used);
+            st.slack_bytes = slack;
+            st.slack_base = slack;
+            st.pressure_bytes = 0;
+            st.kv_per_token =
+                self.spec.kv_bytes_per_token_layer() * a.total_layers as u64 * micro as u64;
+            // Evictable blocks: fully-resident layers expose both blocks;
+            // split layers expose their pinned block.
+            st.alpha_avail = a.non_offloaded_layers() + a.mlp_offload;
+            st.beta_avail = a.non_offloaded_layers() + a.mha_offload;
+            st.current = OffloadPlan::default();
+            st.history.clear();
+            st.next_threshold = first_threshold(st);
+        }
     }
 
     pub fn seg(&self) -> usize {
@@ -396,6 +398,25 @@ mod tests {
         // All layers already streamed: nothing evictable.
         assert_eq!(planner.states[0].alpha_avail, 0);
         assert_eq!(planner.states[0].beta_avail, 0);
+    }
+
+    #[test]
+    fn reset_equals_new_after_use() {
+        // The arena contract: however far a planner has been driven —
+        // fired plans, scripted pressure, shipped KV — `reset` must land on
+        // exactly the state a fresh `new` builds, for any micro width.
+        let (alloc, cluster) = lowmem_setup();
+        let mut used = OnlinePlanner::new(&alloc, &cluster, 1);
+        for i in 0..used.states.len() {
+            used.apply_pressure(i, -(1 << 28));
+            for tok in (0..4096).step_by(64) {
+                used.on_token(i, tok, (tok / 8) as i64);
+            }
+        }
+        for micro in [1usize, 3] {
+            used.reset(&alloc, &cluster, micro);
+            assert_eq!(used, OnlinePlanner::new(&alloc, &cluster, micro));
+        }
     }
 
     #[test]

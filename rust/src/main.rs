@@ -21,6 +21,7 @@ fn main() {
         "simulate" => cmd_simulate(&argv),
         "serve" => cmd_serve(&argv),
         "experiments" => cmd_experiments(&argv),
+        "fleet" => cmd_fleet(&argv),
         "bench-check" => cmd_bench_check(&argv),
         "sweep-check" => cmd_sweep_check(&argv),
         "--help" | "-h" | "help" => println!("{}", usage()),
@@ -48,8 +49,12 @@ fn usage() -> String {
                     continuous request streams with per-request TTFT/\n\
                     queueing-delay metrics) with one lime-sweep-v4 JSON\n\
                     per grid\n\
-       sweep-check  validate sweep JSON artifacts against the\n\
-                    lime-sweep-v2/v3/v4 schemas (non-zero exit on violation)\n\
+       fleet        fleet-sharded request streams: N heterogeneous clusters\n\
+                    behind a global admission router (rr/jsq/plan), tail-\n\
+                    latency quantiles streamed as one lime-fleet-v1 JSON\n\
+       sweep-check  validate sweep/fleet JSON artifacts against the\n\
+                    lime-sweep-v2/v3/v4 and lime-fleet-v1 schemas\n\
+                    (non-zero exit on violation)\n\
        bench-check  diff a fresh BENCH_*.json against a committed baseline\n\
                     with a tolerance band (non-zero exit on regression)\n\
      \n\
@@ -165,12 +170,74 @@ fn cmd_experiments(argv: &[String]) {
     lime::experiments::run_by_id(args.get("id"), args.get_usize("tokens"), args.get("out"));
 }
 
+fn cmd_fleet(argv: &[String]) {
+    let cli = Cli::new(
+        "lime fleet",
+        "fleet-sharded request streams over heterogeneous clusters",
+    )
+    .opt("count", "2000", "requests per (router, pattern) cell")
+    .opt("tokens", "4", "decode steps per request")
+    .opt("out", "sweeps", "output directory for the FLEET_*.json artifact");
+    let args = parse(&cli, argv);
+    let count = args.get_usize("count");
+    let tokens = args.get_usize("tokens");
+    // validate_fleet rejects zero counts/steps — refuse to write an
+    // artifact our own sweep-check would then fail the directory on.
+    if count == 0 || tokens == 0 {
+        eprintln!("fleet: --count and --tokens must be positive");
+        std::process::exit(2);
+    }
+    let spec = lime::serve::FleetSpec::demo(count, tokens);
+    let cells = lime::serve::run_fleet(&spec);
+    let dir = args.get("out");
+    if let Err(e) = std::fs::create_dir_all(dir) {
+        eprintln!("fleet: cannot create {dir}: {e}");
+        std::process::exit(2);
+    }
+    let path = format!("{dir}/FLEET_{}.json", spec.name);
+    let file = std::fs::File::create(&path).unwrap_or_else(|e| {
+        eprintln!("fleet: cannot create {path}: {e}");
+        std::process::exit(2);
+    });
+    // Streamed cell-by-cell: the artifact never exists as one in-memory
+    // tree, however many requests the cells served.
+    let result = lime::serve::write_fleet(&spec, &cells, std::io::BufWriter::new(file))
+        .and_then(|mut out| std::io::Write::write_all(&mut out, b"\n"));
+    if let Err(e) = result {
+        eprintln!("fleet: cannot write {path}: {e}");
+        std::process::exit(2);
+    }
+    println!(
+        "fleet: {} ({}) — {} clusters, {} cells x {} requests -> {path}",
+        spec.name,
+        spec.model(),
+        spec.clusters.len(),
+        cells.len(),
+        spec.count
+    );
+    println!(
+        "{:6} {:9} {:>12} {:>12} {:>14} {:>12}",
+        "router", "pattern", "ttft p50 s", "ttft p99 s", "queue p99 s", "makespan s"
+    );
+    for c in &cells {
+        println!(
+            "{:6} {:9} {:>12.3} {:>12.3} {:>14.3} {:>12.1}",
+            c.router.key(),
+            lime::serve::fleet::pattern_key(c.pattern),
+            c.ttft.p50,
+            c.ttft.p99,
+            c.queueing.p99,
+            c.makespan
+        );
+    }
+}
+
 fn cmd_sweep_check(argv: &[String]) {
     let cli = Cli::new(
         "lime sweep-check",
-        "validate sweep artifacts against the lime-sweep-v2/v3/v4 schemas",
+        "validate sweep/fleet artifacts against the lime-sweep-v2/v3/v4 and lime-fleet-v1 schemas",
     )
-    .opt("dir", "sweeps", "directory holding SWEEP_*.json artifacts")
+    .opt("dir", "sweeps", "directory holding SWEEP_*.json / FLEET_*.json artifacts")
     .opt("file", "", "validate a single artifact instead of a directory");
     let args = parse(&cli, argv);
     let files: Vec<std::path::PathBuf> = if !args.get("file").is_empty() {
@@ -180,12 +247,13 @@ fn cmd_sweep_check(argv: &[String]) {
         let mut v: Vec<std::path::PathBuf> = match std::fs::read_dir(dir) {
             Ok(entries) => entries
                 .filter_map(|e| e.ok().map(|e| e.path()))
-                // Only the artifacts sweep() writes — a directory may also
-                // hold bench JSONs or other tooling output.
+                // Only the artifacts sweep()/fleet write — a directory may
+                // also hold bench JSONs or other tooling output.
                 .filter(|p| {
                     p.extension().is_some_and(|ext| ext == "json")
                         && p.file_name().is_some_and(|n| {
-                            n.to_string_lossy().starts_with("SWEEP_")
+                            let n = n.to_string_lossy();
+                            n.starts_with("SWEEP_") || n.starts_with("FLEET_")
                         })
                 })
                 .collect(),
@@ -198,29 +266,39 @@ fn cmd_sweep_check(argv: &[String]) {
         v
     };
     if files.is_empty() {
-        eprintln!("sweep-check: no SWEEP_*.json artifacts found");
+        eprintln!("sweep-check: no SWEEP_*.json or FLEET_*.json artifacts found");
         std::process::exit(2);
     }
     let mut failures = 0usize;
     for path in &files {
-        let verdict = std::fs::read_to_string(path)
+        let parsed = std::fs::read_to_string(path)
             .map_err(|e| format!("cannot read: {e}"))
             .and_then(|src| {
                 lime::util::json::Json::parse(src.trim()).map_err(|e| format!("invalid JSON: {e}"))
-            })
-            .and_then(|json| lime::experiments::validate_sweep(&json));
+            });
+        // Dispatch on the artifact's own schema tag, not the file name, so
+        // `--file` works on either family.
+        let verdict = parsed.and_then(|json| {
+            if json.get("schema").and_then(lime::util::json::Json::as_str)
+                == Some("lime-fleet-v1")
+            {
+                lime::serve::validate_fleet(&json).map(|s| {
+                    format!(
+                        "fleet {} ({}, {}), {} clusters, {} cells x {} requests",
+                        s.name, s.model, s.schema, s.clusters, s.cells, s.requests
+                    )
+                })
+            } else {
+                lime::experiments::validate_sweep(&json).map(|s| {
+                    format!(
+                        "grid {} ({}, {}), {} cells: {} completed, {} OOM, {} OOT",
+                        s.grid, s.model, s.schema, s.cells, s.completed, s.oom, s.oot
+                    )
+                })
+            }
+        });
         match verdict {
-            Ok(s) => println!(
-                "sweep-check: OK {} — grid {} ({}, {}), {} cells: {} completed, {} OOM, {} OOT",
-                path.display(),
-                s.grid,
-                s.model,
-                s.schema,
-                s.cells,
-                s.completed,
-                s.oom,
-                s.oot
-            ),
+            Ok(line) => println!("sweep-check: OK {} — {line}", path.display()),
             Err(e) => {
                 eprintln!("sweep-check: FAIL {}: {e}", path.display());
                 failures += 1;
@@ -299,6 +377,17 @@ fn cmd_bench_check(argv: &[String]) {
             );
             for line in &report.lines {
                 println!("{line}");
+            }
+            // An all-unpinned baseline (every mean_s: 0) gates nothing —
+            // say so explicitly instead of printing a green "OK" that
+            // looks like a pass.
+            if report.unpinned > 0 {
+                println!(
+                    "bench-check: {} baseline entr{} unpinned (mean_s 0 or non-finite) — \
+                     not gated; record a baseline to pin (see README.md, Benchmarks)",
+                    report.unpinned,
+                    if report.unpinned == 1 { "y" } else { "ies" }
+                );
             }
             if report.failures.is_empty() {
                 println!("bench-check: OK");

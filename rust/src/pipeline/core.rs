@@ -205,7 +205,7 @@ pub trait SchedulePolicy {
 }
 
 /// Timing of one request run on the core's shared timeline.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RequestRun {
     /// When service (the prefill pass) began.
     pub start: f64,
@@ -225,11 +225,35 @@ impl RequestRun {
     }
 }
 
+/// Reusable per-request scratch for long streams: holds the [`RequestRun`]
+/// buffers that [`ExecutorCore::run_request`] would otherwise allocate per
+/// call, so a 10^6-request stream touches the allocator O(1) times on the
+/// core side. [`ExecutorCore::run_request_in`] resets it instead of
+/// reallocating; the filled run is borrowed back until the next call.
+/// (The policy-side analogue is `InterleavedPolicy`'s in-place request
+/// reset — together they are the perf lever's "arena".)
+#[derive(Debug, Clone, Default)]
+pub struct CoreArena {
+    run: RequestRun,
+}
+
+impl CoreArena {
+    pub fn new() -> Self {
+        CoreArena::default()
+    }
+}
+
 /// Everything a finished core hands back: the trace plus the stream-level
 /// accumulators the per-policy counters join for result assembly.
 pub struct CoreTotals {
     pub trace: Trace,
+    /// Per-step latencies — empty when the core ran with
+    /// [`ExecutorCore::retain_step_times`] off (memory-flat streams).
     pub step_times: Vec<f64>,
+    /// Running sum of every step latency, accumulated left-to-right in
+    /// push order — bit-identical to `step_times.iter().sum()` whenever
+    /// the vector is retained, and the only decode-time record when not.
+    pub step_time_sum: f64,
     pub emergency_steps: usize,
     pub bw_stalls: u64,
     pub kv_tokens_transferred: u64,
@@ -245,6 +269,8 @@ pub struct ExecutorCore<'s, P: SchedulePolicy> {
     global_step: usize,
     emergency_steps: usize,
     step_times: Vec<f64>,
+    step_time_sum: f64,
+    retain_step_times: bool,
 }
 
 impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
@@ -274,6 +300,8 @@ impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
             global_step: 0,
             emergency_steps: 0,
             step_times: Vec::new(),
+            step_time_sum: 0.0,
+            retain_step_times: true,
         }
     }
 
@@ -282,17 +310,59 @@ impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
         self.global_step
     }
 
+    /// Keep (default) or drop the per-step latency vector. Million-request
+    /// fleet streams turn retention off so the core holds no per-request
+    /// state; the left-to-right [`CoreTotals::step_time_sum`] still records
+    /// total decode time bit-identically to summing the retained vector.
+    pub fn retain_step_times(&mut self, retain: bool) {
+        self.retain_step_times = retain;
+    }
+
     /// Run one request (prefill + `tokens` decode steps, `micro_batches`
     /// micro-batches) starting no earlier than `at`, on the shared
     /// timeline: resources, SSD jitter streams, the global step counter
     /// and the fluctuation script all carry over from previous requests.
     pub fn run_request(&mut self, at: f64, micro_batches: usize, tokens: usize) -> RequestRun {
+        let mut run = RequestRun {
+            step_ends: Vec::with_capacity(tokens),
+            ..RequestRun::default()
+        };
+        self.run_request_into(at, micro_batches, tokens, &mut run);
+        run
+    }
+
+    /// [`ExecutorCore::run_request`] recycling `arena`'s buffers — the
+    /// stream-serving entry point: no allocation once the step buffer has
+    /// grown to the stream's widest request.
+    pub fn run_request_in<'a>(
+        &mut self,
+        at: f64,
+        micro_batches: usize,
+        tokens: usize,
+        arena: &'a mut CoreArena,
+    ) -> &'a RequestRun {
+        // Split-borrow: take the run out so `self` stays free for the loop.
+        let mut run = std::mem::take(&mut arena.run);
+        self.run_request_into(at, micro_batches, tokens, &mut run);
+        arena.run = run;
+        &arena.run
+    }
+
+    fn run_request_into(
+        &mut self,
+        at: f64,
+        micro_batches: usize,
+        tokens: usize,
+        run: &mut RequestRun,
+    ) {
         let micro = micro_batches.max(1);
         let decode_start = self
             .policy
             .begin_request(&mut self.state, at, micro, self.global_step);
         let mut t_prev = decode_start;
-        let mut step_ends = Vec::with_capacity(tokens);
+        let step_ends = &mut run.step_ends;
+        step_ends.clear();
+        step_ends.reserve(tokens);
         for local in 0..tokens {
             let g = self.global_step;
             // Scripted memory fluctuation, fired on the STREAM timeline —
@@ -317,17 +387,18 @@ impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
             if self.state.take_emergency() {
                 self.emergency_steps += 1;
             }
-            self.step_times.push(step_end - step_start);
+            let dt = step_end - step_start;
+            self.step_time_sum += dt;
+            if self.retain_step_times {
+                self.step_times.push(dt);
+            }
             step_ends.push(step_end);
             t_prev = step_end;
             self.global_step += 1;
         }
-        RequestRun {
-            start: at,
-            decode_start,
-            step_ends,
-            micro,
-        }
+        run.start = at;
+        run.decode_start = decode_start;
+        run.micro = micro;
     }
 
     /// Tear down into the stream totals (trace, step latencies, counters).
@@ -339,6 +410,7 @@ impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
             bw_stalls: self.state.bw_stalls(),
             trace: self.state.trace,
             step_times: self.step_times,
+            step_time_sum: self.step_time_sum,
         }
     }
 
@@ -485,5 +557,61 @@ mod tests {
         // The link was idle between requests — no stalls counted.
         let totals = core.into_totals();
         assert_eq!(totals.bw_stalls, 0);
+    }
+
+    fn jitter_policy() -> FixedStep {
+        FixedStep {
+            dur: 0.375,
+            saturate_below: 0,
+            prefill: 0.125,
+            events_seen: 0,
+        }
+    }
+
+    #[test]
+    fn arena_runs_are_bit_identical_to_allocating_runs() {
+        let cluster = Cluster::env_e1();
+        let bw = BandwidthTrace::fixed_mbps(100.0);
+        let shapes = [(0.0, 1, 4), (2.5, 2, 7), (2.5, 1, 0), (9.0, 3, 2)];
+
+        let mut fresh = ExecutorCore::new(jitter_policy(), &cluster, &bw, &common(), &Script::none());
+        let want: Vec<RequestRun> = shapes
+            .iter()
+            .map(|&(at, m, t)| fresh.run_request(at, m, t))
+            .collect();
+
+        let mut reused =
+            ExecutorCore::new(jitter_policy(), &cluster, &bw, &common(), &Script::none());
+        let mut arena = CoreArena::new();
+        for (w, &(at, m, t)) in want.iter().zip(&shapes) {
+            let run = reused.run_request_in(at, m, t, &mut arena);
+            assert_eq!(run, w, "arena run diverged at shape {:?}", (at, m, t));
+        }
+        let (a, b) = (fresh.into_totals(), reused.into_totals());
+        assert_eq!(a.step_times, b.step_times);
+        assert_eq!(a.step_time_sum.to_bits(), b.step_time_sum.to_bits());
+    }
+
+    #[test]
+    fn dropping_step_times_keeps_the_sum_bit_identical() {
+        let cluster = Cluster::env_e1();
+        let bw = BandwidthTrace::fixed_mbps(100.0);
+        let mut retained =
+            ExecutorCore::new(jitter_policy(), &cluster, &bw, &common(), &Script::none());
+        let mut flat = ExecutorCore::new(jitter_policy(), &cluster, &bw, &common(), &Script::none());
+        flat.retain_step_times(false);
+        let mut arena = CoreArena::new();
+        let mut t = 0.0;
+        for _ in 0..5 {
+            let a = retained.run_request(t, 1, 6);
+            let b = flat.run_request_in(t, 1, 6, &mut arena);
+            assert_eq!(&a, b);
+            t = a.finish();
+        }
+        let (a, b) = (retained.into_totals(), flat.into_totals());
+        assert_eq!(a.step_times.len(), 30);
+        assert!(b.step_times.is_empty(), "memory-flat mode retains nothing");
+        assert_eq!(a.step_times.iter().sum::<f64>().to_bits(), a.step_time_sum.to_bits());
+        assert_eq!(a.step_time_sum.to_bits(), b.step_time_sum.to_bits());
     }
 }

@@ -212,6 +212,13 @@ impl<'a> InterleavedPolicy<'a> {
             plans_fired: 0,
         }
     }
+
+    /// Test hook: drop the per-request state so the next `begin_request`
+    /// takes the fresh-build path (the arena pin test streams both paths).
+    #[cfg(test)]
+    fn clear_request_state(&mut self) {
+        self.st = None;
+    }
 }
 
 impl SchedulePolicy for InterleavedPolicy<'_> {
@@ -223,31 +230,83 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
         global_step: usize,
     ) -> f64 {
         let d = self.cluster.len();
-        let mut planner = OnlinePlanner::new(self.alloc, self.cluster, micro);
-        // Scripted pressure accumulated earlier on the stream carries into
-        // the fresh planner, so mid-stream requests plan under the same
-        // shifted slack the effective caps describe.
-        for i in 0..d {
-            let pressure = core.mem_pressure(i);
-            if pressure != 0 {
-                planner.apply_pressure(i, pressure);
+        let bw0 = core.bw_at(global_step);
+
+        // Per-request state: built fresh on the first request, reset IN
+        // PLACE afterwards (the arena lever — a long stream touches the
+        // allocator O(1) times on the policy side). `reset` mirrors `new`
+        // field-for-field on the planner/protocol (pinned by their
+        // `reset_equals_new_after_use` tests) and the vectors below are
+        // clear+resize'd to the exact values the fresh path builds, so
+        // both paths are bit-identical (`in_place_request_reset_matches_
+        // fresh_rebuild` streams both).
+        if let Some(st) = self.st.as_mut() {
+            st.planner.reset(self.alloc, self.cluster, micro);
+            // Scripted pressure accumulated earlier on the stream carries
+            // into the reset planner, so mid-stream requests plan under
+            // the same shifted slack the effective caps describe.
+            for i in 0..d {
+                let pressure = core.mem_pressure(i);
+                if pressure != 0 {
+                    st.planner.apply_pressure(i, pressure);
+                }
             }
+            st.protocol.reset(
+                self.alloc,
+                self.cluster,
+                &st.planner,
+                self.opts.prompt_tokens,
+                micro,
+                bw0,
+            );
+            // Field-wise: `Vec::clone_from` reuses the buffer (a derived
+            // whole-struct `clone_from` would reallocate). The spec never
+            // changes mid-stream and online plans only mutate `devices`.
+            st.live.devices.clone_from(&self.alloc.devices);
+            st.live.seg = self.alloc.seg;
+            debug_assert!(st.live.spec == self.alloc.spec);
+            st.last_plan.clear();
+            st.last_plan.resize(d, OffloadPlan::default());
+            st.kv_held.clear();
+            st.kv_held.resize(d, self.opts.prompt_tokens);
+            st.pending_reload.clear();
+            st.pending_reload.resize(d, 0);
+            st.micro_front.clear();
+            st.micro_front.resize(micro, 0.0);
+        } else {
+            let mut planner = OnlinePlanner::new(self.alloc, self.cluster, micro);
+            for i in 0..d {
+                let pressure = core.mem_pressure(i);
+                if pressure != 0 {
+                    planner.apply_pressure(i, pressure);
+                }
+            }
+            let protocol = KvTransferProtocol::new(
+                self.alloc,
+                self.cluster,
+                &planner,
+                self.opts.prompt_tokens,
+                micro,
+                bw0,
+            );
+            self.st = Some(ReqState {
+                planner,
+                protocol,
+                live: self.alloc.clone(),
+                last_plan: vec![OffloadPlan::default(); d],
+                kv_held: vec![self.opts.prompt_tokens; d],
+                pending_reload: vec![0; d],
+                slot_free: Vec::new(), // filled once decode_start is known
+                micro_front: vec![0.0; micro],
+            });
         }
-        let protocol = KvTransferProtocol::new(
-            self.alloc,
-            self.cluster,
-            &planner,
-            self.opts.prompt_tokens,
-            micro,
-            core.bw_at(global_step),
-        );
-        let live = self.alloc.clone();
 
         // ------------- prefill pass (charged, not measured) -------------
-        let bw0 = core.bw_at(global_step);
+        // Reads the offline allocation — identical to the live allocation
+        // at this point on both paths.
         let mut t_prefill = at;
         for i in 0..d {
-            let a = &live.devices[i];
+            let a = &self.alloc.devices[i];
             let flops = self.spec.layer_prefill_flops(self.opts.prompt_tokens)
                 * a.total_layers as f64
                 * micro as f64;
@@ -261,22 +320,9 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
         }
         let decode_start = t_prefill;
 
-        self.st = Some(ReqState {
-            planner,
-            protocol,
-            live,
-            last_plan: (0..d)
-                .map(|_| OffloadPlan {
-                    at_tokens: 0,
-                    alpha: 0,
-                    beta: 0,
-                })
-                .collect(),
-            kv_held: vec![self.opts.prompt_tokens; d],
-            pending_reload: vec![0; d],
-            slot_free: vec![decode_start; d],
-            micro_front: vec![0.0; micro],
-        });
+        let st = self.st.as_mut().expect("state installed above");
+        st.slot_free.clear();
+        st.slot_free.resize(d, decode_start);
         decode_start
     }
 
@@ -709,6 +755,56 @@ mod tests {
         assert_eq!(full.emergency_steps, off.emergency_steps);
         assert!(full.trace.span_count() > 0);
         assert_eq!(off.trace.span_count(), 0);
+    }
+
+    #[test]
+    fn in_place_request_reset_matches_fresh_rebuild() {
+        // The arena pin at stream level: one policy resets its request
+        // state in place (the normal path); the other is forced to rebuild
+        // from scratch before every request. Driven through identical
+        // cores — including scripted mem pressure landing mid-stream — the
+        // two must stay bit-identical, request for request.
+        use crate::adapt::MemScenario;
+        use crate::pipeline::core::ExecutorCore;
+        use crate::util::bytes::gib;
+
+        let (alloc, cluster) = setup("low1");
+        let bw = BandwidthTrace::fixed_mbps(150.0);
+        let opts = ExecOptions {
+            trace_mode: crate::sim::TraceMode::Off,
+            ..ExecOptions::default()
+        };
+        let common = CommonOptions::from(&opts);
+        let script =
+            Script::from_mem(MemScenario::squeeze("sq", 0, gib(2.0), 20)).with_label("sq");
+        let mut reset_path = ExecutorCore::new(
+            InterleavedPolicy::new(&alloc, &cluster, &opts),
+            &cluster,
+            &bw,
+            &common,
+            &script,
+        );
+        let mut rebuild_path = ExecutorCore::new(
+            InterleavedPolicy::new(&alloc, &cluster, &opts),
+            &cluster,
+            &bw,
+            &common,
+            &script,
+        );
+        let (mut t_a, mut t_b) = (0.0, 0.0);
+        for (micro, tokens) in [(1usize, 12usize), (2, 24), (1, 48), (3, 8)] {
+            let a = reset_path.run_request(t_a, micro, tokens);
+            rebuild_path.policy.clear_request_state();
+            let b = rebuild_path.run_request(t_b, micro, tokens);
+            assert_eq!(a, b, "stream diverged at shape ({micro},{tokens})");
+            t_a = a.finish();
+            t_b = b.finish();
+        }
+        let (ta, tb) = (reset_path.into_totals(), rebuild_path.into_totals());
+        assert_eq!(ta.step_times, tb.step_times);
+        assert_eq!(ta.kv_tokens_transferred, tb.kv_tokens_transferred);
+        assert_eq!(ta.online_plans_fired, tb.online_plans_fired);
+        assert_eq!(ta.emergency_steps, tb.emergency_steps);
     }
 
     #[test]

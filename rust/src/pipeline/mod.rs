@@ -18,7 +18,7 @@ pub mod tensor;
 pub mod traditional;
 
 pub use self::core::{
-    CommonOptions, CoreState, ExecutorCore, RequestRun, SchedulePolicy, StepCtx,
+    CommonOptions, CoreArena, CoreState, ExecutorCore, RequestRun, SchedulePolicy, StepCtx,
 };
 pub use interleaved::{
     run_interleaved, run_interleaved_scripted, sweep_interleaved, ExecOptions, InterleavedPolicy,

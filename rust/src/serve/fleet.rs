@@ -1,0 +1,1076 @@
+//! Fleet-scale serving: N heterogeneous edge clusters behind one global
+//! admission router.
+//!
+//! The paper deploys LIME on *one* memory-constrained cluster; a real edge
+//! site runs several — an E3-class testbed next to a pair of Orins next to
+//! a mixed rack — and requests hit a front door that must pick a cluster
+//! before LIME's per-cluster scheduling even starts. This module models
+//! that layer on top of [`crate::serve::simqueue`]:
+//!
+//! * a fleet is a list of [`FleetCluster`]s, each a [`Cluster::subset`] of
+//!   some testbed with its own offline plan and network bandwidth;
+//! * a [`RouterPolicy`] assigns every arriving request to one cluster —
+//!   round-robin, join-shortest-queue on estimated backlog, or plan-aware
+//!   (route to the cluster whose *planned* ms/token finishes the request
+//!   earliest);
+//! * routing is a cheap sequential pass in global arrival order (the
+//!   router is a front door, not a simulator — it sees only arrival
+//!   times and the offline plans); the expensive per-cluster stream
+//!   simulations then fan out **one cluster per job** on the
+//!   work-stealing pool and merge by index, so a 10^6-request fleet
+//!   stream is embarrassingly parallel yet bit-identical to the
+//!   sequential reference at any worker count;
+//! * per-cluster shards fold requests into O(1) state as they finish —
+//!   running sums, [`P2Quantile`] markers and a capped [`Reservoir`] per
+//!   metric — never a per-request vector, so memory stays flat however
+//!   long the stream runs ([`simulate_stream_sink`] with
+//!   `retain_step_times = false`);
+//! * results serialize as schema `lime-fleet-v1` through the incremental
+//!   [`StreamWriter`] (bytes identical to `Json::Display`, pinned in
+//!   `util::json`); [`validate_fleet`] is the strict machine check behind
+//!   `lime sweep-check` and the CI artifact gate.
+//!
+//! Determinism: request streams, routing, P² updates and reservoir
+//! replacement are all seeded and sequential *within* a shard, and shards
+//! never share mutable state — `run_fleet` equals `run_fleet_sequential`
+//! byte-for-byte on the serialized artifact (pinned in
+//! `rust/tests/fleet.rs`, and byte-diffed across `LIME_THREADS={1,4}` in
+//! CI).
+
+use crate::adapt::Script;
+use crate::cluster::Cluster;
+use crate::model::ModelSpec;
+use crate::net::BandwidthTrace;
+use crate::pipeline::core::CommonOptions;
+use crate::pipeline::{ExecOptions, InterleavedPolicy};
+use crate::plan::allocation::Allocation;
+use crate::plan::{plan, PlanOptions};
+use crate::serve::simqueue::{simulate_stream_sink, RequestMetrics, StreamSink};
+use crate::sim::TraceMode;
+use crate::util::json::{obj, Json, StreamWriter};
+use crate::util::pool::Pool;
+use crate::util::stats::{weighted_percentile, P2Quantile, Reservoir};
+use crate::workload::requests::Request;
+use crate::workload::{stream_requests, Pattern};
+
+/// Prompt tokens charged per admitted batch (requests themselves are
+/// generated with empty prompts so million-request streams stay flat).
+const PROMPT_TOKENS: usize = 64;
+
+/// Retained samples per metric per shard — the reservoir bound that keeps
+/// tail-latency estimation O(1) in stream length.
+const RESERVOIR_CAP: usize = 512;
+
+/// One cluster of the fleet: a device subset with its own offline plan
+/// and network bandwidth.
+#[derive(Debug, Clone)]
+pub struct FleetCluster {
+    pub label: String,
+    pub cluster: Cluster,
+    pub alloc: Allocation,
+    /// Network bandwidth of this cluster's interconnect, Mbps.
+    pub bw_mbps: f64,
+    /// Offline cost-model estimate (Eq. 2 total) of one decode step,
+    /// seconds/token — the signal the plan-aware router routes on.
+    pub planned_s_per_token: f64,
+}
+
+impl FleetCluster {
+    /// Build one fleet member: subset `indices` of `testbed`, planned for
+    /// `spec` at `bw_mbps`.
+    pub fn new(
+        label: &str,
+        testbed: &Cluster,
+        indices: &[usize],
+        spec: &ModelSpec,
+        bw_mbps: f64,
+    ) -> Result<FleetCluster, String> {
+        let cluster = testbed.subset(indices);
+        let opts = PlanOptions {
+            empirical_tokens: 256,
+            micro_batch: 1,
+            bandwidth: crate::util::bytes::mbps(bw_mbps),
+        };
+        let report = plan(spec, &cluster, &opts)
+            .map_err(|e| format!("fleet cluster '{label}' does not plan: {e}"))?;
+        Ok(FleetCluster {
+            label: label.to_string(),
+            cluster,
+            planned_s_per_token: report.cost.total(),
+            alloc: report.allocation,
+            bw_mbps,
+        })
+    }
+}
+
+/// Global admission policy: which cluster serves an arriving request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Cycle through clusters by global request index.
+    RoundRobin,
+    /// Estimated-backlog join-shortest-queue: route to the cluster whose
+    /// estimated free time is nearest (ties to the lowest index).
+    JoinShortestQueue,
+    /// Route to the cluster that *finishes* the request earliest under
+    /// its offline plan: `max(est_free, arrival) + steps · planned_s/tok`.
+    PlanAware,
+}
+
+impl RouterPolicy {
+    pub fn key(self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "rr",
+            RouterPolicy::JoinShortestQueue => "jsq",
+            RouterPolicy::PlanAware => "plan",
+        }
+    }
+
+    pub fn all() -> [RouterPolicy; 3] {
+        [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::JoinShortestQueue,
+            RouterPolicy::PlanAware,
+        ]
+    }
+}
+
+/// Artifact key for a request pattern.
+pub fn pattern_key(p: Pattern) -> &'static str {
+    match p {
+        Pattern::Sporadic => "sporadic",
+        Pattern::Bursty => "bursty",
+    }
+}
+
+/// A fleet experiment: the cluster list crossed with router policies and
+/// arrival patterns, one stream of `count` requests per pattern.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub name: String,
+    pub clusters: Vec<FleetCluster>,
+    pub routers: Vec<RouterPolicy>,
+    pub patterns: Vec<Pattern>,
+    /// Requests per (router, pattern) cell.
+    pub count: usize,
+    /// Sporadic Poisson arrival rate, req/s.
+    pub lambda: f64,
+    /// Decode steps per request.
+    pub steps: usize,
+    pub seed: u64,
+}
+
+/// Fixed seed of the demo fleet (`lime fleet`, benches, CI determinism).
+pub const FLEET_SEED: u64 = 0x51DE_0A01;
+
+impl FleetSpec {
+    /// The demo fleet: four heterogeneous subsets of the E3 testbed
+    /// serving Qwen3-32B, bandwidth rising with cluster size. This is the
+    /// fleet behind `lime fleet`, the CI determinism artifact and the
+    /// `fleet_stream_100k` bench entries.
+    pub fn demo(count: usize, steps: usize) -> FleetSpec {
+        let spec = ModelSpec::qwen3_32b();
+        let e3 = Cluster::env_e3();
+        let members: [(&str, &[usize], f64); 4] = [
+            ("orin2", &[0, 1], 100.0),
+            ("edge2", &[0, 2], 150.0),
+            ("edge3", &[0, 2, 3], 200.0),
+            ("edge4", &[0, 1, 2, 3], 250.0),
+        ];
+        let clusters = members
+            .iter()
+            .map(|(label, idx, bw)| {
+                FleetCluster::new(label, &e3, idx, &spec, *bw).expect("demo fleet plans")
+            })
+            .collect();
+        FleetSpec {
+            name: "e3-demo-fleet".to_string(),
+            clusters,
+            routers: RouterPolicy::all().to_vec(),
+            patterns: vec![Pattern::Sporadic, Pattern::Bursty],
+            count,
+            lambda: 200.0,
+            steps,
+            seed: FLEET_SEED,
+        }
+    }
+
+    pub fn model(&self) -> &str {
+        &self.clusters[0].alloc.spec.name
+    }
+}
+
+/// Partition `requests` (sorted by arrival) across `clusters` under
+/// `policy`. Sequential in global arrival order — the router sees only
+/// arrival times, step counts and the offline plans, and tracks one
+/// estimated-free-time scalar per cluster. Returns per-cluster *index*
+/// lists into `requests` (4 bytes per routed request instead of a
+/// `Request` clone — routing a 10^6-request stream for every cell stays
+/// cheap); each list is ascending, so materializing it yields a
+/// subsequence of the sorted stream that feeds
+/// [`simulate_stream_sink`] directly.
+pub fn route(
+    policy: RouterPolicy,
+    requests: &[Request],
+    clusters: &[FleetCluster],
+) -> Vec<Vec<u32>> {
+    let n = clusters.len();
+    assert!(n > 0, "routing needs at least one cluster");
+    assert!(u32::try_from(requests.len()).is_ok(), "stream exceeds u32 indexing");
+    let mut est_free = vec![0.0f64; n];
+    let mut parts: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (k, r) in requests.iter().enumerate() {
+        let pick = match policy {
+            RouterPolicy::RoundRobin => k % n,
+            RouterPolicy::JoinShortestQueue => {
+                argmin(n, |c| (est_free[c] - r.arrival).max(0.0))
+            }
+            RouterPolicy::PlanAware => argmin(n, |c| {
+                est_free[c].max(r.arrival)
+                    + r.steps as f64 * clusters[c].planned_s_per_token
+            }),
+        };
+        // The estimate advances identically under every policy: service
+        // begins when the cluster frees (or the request arrives) and runs
+        // at the planned per-token rate.
+        est_free[pick] = est_free[pick].max(r.arrival)
+            + r.steps as f64 * clusters[pick].planned_s_per_token;
+        parts[pick].push(k as u32);
+    }
+    parts
+}
+
+/// First index minimizing `f` (strict comparison — ties go low, keeping
+/// routing deterministic across worker counts).
+fn argmin(n: usize, f: impl Fn(usize) -> f64) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f(0);
+    for c in 1..n {
+        let v = f(c);
+        if v < best_v {
+            best = c;
+            best_v = v;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------
+// Shard aggregation: O(1)-memory per-metric state.
+// ---------------------------------------------------------------------
+
+/// Streaming aggregate of one latency metric within one shard: running
+/// sum (means), P² markers (shard-local quantiles) and a capped reservoir
+/// (cell-level quantiles across shards).
+struct MetricAgg {
+    sum: f64,
+    p50: P2Quantile,
+    p95: P2Quantile,
+    p99: P2Quantile,
+    res: Reservoir,
+}
+
+impl MetricAgg {
+    fn new(seed: u64) -> MetricAgg {
+        MetricAgg {
+            sum: 0.0,
+            p50: P2Quantile::new(0.50),
+            p95: P2Quantile::new(0.95),
+            p99: P2Quantile::new(0.99),
+            res: Reservoir::new(RESERVOIR_CAP, seed),
+        }
+    }
+
+    fn push(&mut self, x: f64) {
+        self.sum += x;
+        self.p50.push(x);
+        self.p95.push(x);
+        self.p99.push(x);
+        self.res.push(x);
+    }
+
+    fn freeze(self, n: usize) -> MetricShard {
+        let v = |p: &P2Quantile| if n == 0 { 0.0 } else { p.value() };
+        // The three P² estimators run independently, so their estimates
+        // can invert by a hair on small heavy-tailed shards; clamp to the
+        // monotone order the validator enforces (deterministic — same
+        // clamp on the sequential and pooled paths).
+        let p50 = v(&self.p50);
+        let p95 = v(&self.p95).max(p50);
+        let p99 = v(&self.p99).max(p95);
+        MetricShard {
+            sum: self.sum,
+            p50,
+            p95,
+            p99,
+            samples: self.res.into_samples(),
+        }
+    }
+}
+
+/// Frozen per-shard metric state (what a pool job sends back).
+#[derive(Debug, Clone)]
+pub struct MetricShard {
+    /// Σ metric over the shard's requests (mean = sum / count).
+    pub sum: f64,
+    /// Shard-local P² quantile estimates (0.0 on empty shards).
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    /// Reservoir sample retained for cell-level weighted percentiles.
+    pub samples: Vec<f64>,
+}
+
+/// Per-request folding sink for one shard — the memory-flat consumer
+/// behind `retain_step_times = false`.
+struct ShardSink {
+    n: usize,
+    ttft: MetricAgg,
+    tbt: MetricAgg,
+    queueing: MetricAgg,
+}
+
+impl ShardSink {
+    fn new(seed: u64) -> ShardSink {
+        ShardSink {
+            n: 0,
+            ttft: MetricAgg::new(seed ^ 0x7f),
+            tbt: MetricAgg::new(seed ^ 0xb3),
+            queueing: MetricAgg::new(seed ^ 0xd5),
+        }
+    }
+}
+
+impl StreamSink for ShardSink {
+    fn on_request(&mut self, m: &RequestMetrics) {
+        self.n += 1;
+        self.ttft.push(m.ttft);
+        self.tbt.push(m.tbt);
+        self.queueing.push(m.queueing_delay);
+    }
+}
+
+/// Outcome of one cluster's stream within one (router, pattern) cell.
+#[derive(Debug, Clone)]
+pub struct ShardResult {
+    pub label: String,
+    pub count: usize,
+    pub makespan: f64,
+    pub decode_time: f64,
+    pub ttft: MetricShard,
+    pub tbt: MetricShard,
+    pub queueing: MetricShard,
+}
+
+/// Cell-level latency summary: mean plus weighted-reservoir percentiles
+/// across every shard of the cell.
+#[derive(Debug, Clone, Copy)]
+pub struct CellMetric {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// One (router, pattern) cell of the fleet matrix.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub router: RouterPolicy,
+    pub pattern: Pattern,
+    pub count: usize,
+    pub makespan: f64,
+    pub ttft: CellMetric,
+    pub tbt: CellMetric,
+    pub queueing: CellMetric,
+    pub shards: Vec<ShardResult>,
+}
+
+/// Merge shard metrics into a cell metric: exact mean from the running
+/// sums, percentiles from the reservoir union with each sample weighted
+/// by `shard_count / retained` so a big shard's tail is not diluted by a
+/// small shard's equal-size reservoir.
+fn cell_metric(shards: &[&MetricShard], counts: &[usize], total: usize) -> CellMetric {
+    let mean = if total == 0 {
+        0.0
+    } else {
+        shards.iter().map(|m| m.sum).sum::<f64>() / total as f64
+    };
+    let mut weighted: Vec<(f64, f64)> = Vec::new();
+    for (m, &n) in shards.iter().zip(counts) {
+        if n == 0 || m.samples.is_empty() {
+            continue;
+        }
+        let w = n as f64 / m.samples.len() as f64;
+        weighted.extend(m.samples.iter().map(|&s| (s, w)));
+    }
+    if weighted.is_empty() {
+        return CellMetric { mean, p50: 0.0, p95: 0.0, p99: 0.0 };
+    }
+    CellMetric {
+        mean,
+        p50: weighted_percentile(&mut weighted, 50.0),
+        p95: weighted_percentile(&mut weighted, 95.0),
+        p99: weighted_percentile(&mut weighted, 99.0),
+    }
+}
+
+// ---------------------------------------------------------------------
+// The runner.
+// ---------------------------------------------------------------------
+
+/// One pool job: one cluster's routed slice of one (router, pattern)
+/// cell. Jobs are fully self-contained — they reference the shared
+/// per-pattern stream plus their own routed index list, and materialize
+/// the sub-stream only while running (peak clones bounded by the worker
+/// count, not the cell count) — so the pool can execute them in any
+/// order on any worker without affecting a single output bit.
+struct ShardJob<'a> {
+    fc: &'a FleetCluster,
+    pattern: Pattern,
+    stream: &'a [Request],
+    indices: Vec<u32>,
+    exec_seed: u64,
+    res_seed: u64,
+}
+
+fn run_shard(job: &ShardJob) -> ShardResult {
+    let requests: Vec<Request> = job
+        .indices
+        .iter()
+        .map(|&i| job.stream[i as usize].clone())
+        .collect();
+    let bw = BandwidthTrace::fixed_mbps(job.fc.bw_mbps);
+    let opts = ExecOptions {
+        trace_mode: TraceMode::Off,
+        prompt_tokens: PROMPT_TOKENS,
+        seed: job.exec_seed,
+        ..ExecOptions::default()
+    };
+    let mut sink = ShardSink::new(job.res_seed);
+    let stats = simulate_stream_sink(
+        InterleavedPolicy::new(&job.fc.alloc, &job.fc.cluster, &opts),
+        &job.fc.cluster,
+        &bw,
+        job.pattern.micro_batches(&job.fc.cluster),
+        &CommonOptions::from(&opts),
+        &Script::none(),
+        &requests,
+        &mut sink,
+        false,
+    );
+    let n = sink.n;
+    ShardResult {
+        label: job.fc.label.clone(),
+        count: n,
+        makespan: stats.makespan,
+        decode_time: stats.decode_time,
+        ttft: sink.ttft.freeze(n),
+        tbt: sink.tbt.freeze(n),
+        queueing: sink.queueing.freeze(n),
+    }
+}
+
+/// Run the fleet matrix on the process-wide work-stealing pool.
+pub fn run_fleet(spec: &FleetSpec) -> Vec<CellResult> {
+    run_fleet_on(spec, Some(crate::util::pool::global()))
+}
+
+/// The exact sequential reference ([`run_fleet`] is pinned byte-identical
+/// to it on the serialized artifact).
+pub fn run_fleet_sequential(spec: &FleetSpec) -> Vec<CellResult> {
+    run_fleet_on(spec, None)
+}
+
+/// [`run_fleet`] on an explicit pool (`None` = in-place sequential).
+/// Cells come back router-major ordered: `(router[0], pattern[0]),
+/// (router[0], pattern[1]), …` — the artifact's `cells` order.
+pub fn run_fleet_on(spec: &FleetSpec, pool: Option<&Pool>) -> Vec<CellResult> {
+    assert!(!spec.clusters.is_empty(), "fleet needs at least one cluster");
+    assert!(!spec.routers.is_empty() && !spec.patterns.is_empty());
+    let nc = spec.clusters.len();
+
+    // One request stream per pattern, shared by every router so policies
+    // are compared on identical arrivals. Prompts are empty (prefill is
+    // charged from `PROMPT_TOKENS`), keeping 10^6-request streams flat.
+    let streams: Vec<Vec<Request>> = spec
+        .patterns
+        .iter()
+        .enumerate()
+        .map(|(pi, &p)| {
+            stream_requests(p, spec.seed.wrapping_add(pi as u64), spec.count, spec.lambda, 0, spec.steps)
+        })
+        .collect();
+
+    // Phase 1 — sequential routing, cheap: O(count · clusters) per cell.
+    let mut jobs: Vec<ShardJob> = Vec::with_capacity(spec.routers.len() * spec.patterns.len() * nc);
+    for (ri, &router) in spec.routers.iter().enumerate() {
+        for (pi, &pattern) in spec.patterns.iter().enumerate() {
+            let parts = route(router, &streams[pi], &spec.clusters);
+            for (ci, indices) in parts.into_iter().enumerate() {
+                let idx = ((ri * 97 + pi) * 97 + ci) as u64 + 1;
+                jobs.push(ShardJob {
+                    fc: &spec.clusters[ci],
+                    pattern,
+                    stream: &streams[pi],
+                    indices,
+                    exec_seed: spec.seed,
+                    res_seed: spec.seed ^ idx.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                });
+            }
+        }
+    }
+
+    // Phase 2 — one cluster per job on the pool, merged by index.
+    let shards: Vec<ShardResult> = match pool {
+        Some(p) => p.map_indexed(&jobs, run_shard),
+        None => jobs.iter().map(run_shard).collect(),
+    };
+
+    shards
+        .chunks(nc)
+        .enumerate()
+        .map(|(cell_i, chunk)| {
+            let ri = cell_i / spec.patterns.len();
+            let pi = cell_i % spec.patterns.len();
+            let counts: Vec<usize> = chunk.iter().map(|s| s.count).collect();
+            let total: usize = counts.iter().sum();
+            debug_assert_eq!(total, spec.count, "routing must partition the stream");
+            let pick = |f: fn(&ShardResult) -> &MetricShard| {
+                let refs: Vec<&MetricShard> = chunk.iter().map(f).collect();
+                cell_metric(&refs, &counts, total)
+            };
+            CellResult {
+                router: spec.routers[ri],
+                pattern: spec.patterns[pi],
+                count: total,
+                makespan: chunk.iter().fold(0.0f64, |m, s| m.max(s.makespan)),
+                ttft: pick(|s| &s.ttft),
+                tbt: pick(|s| &s.tbt),
+                queueing: pick(|s| &s.queueing),
+                shards: chunk.to_vec(),
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Artifact: schema lime-fleet-v1.
+// ---------------------------------------------------------------------
+
+fn metric_json(m: &CellMetric) -> Json {
+    obj(&[
+        ("mean", m.mean.into()),
+        ("p50", m.p50.into()),
+        ("p95", m.p95.into()),
+        ("p99", m.p99.into()),
+    ])
+}
+
+fn shard_json(s: &ShardResult) -> Json {
+    let stat = |m: &MetricShard| {
+        let mean = if s.count == 0 { 0.0 } else { m.sum / s.count as f64 };
+        obj(&[
+            ("mean", mean.into()),
+            ("p50", m.p50.into()),
+            ("p95", m.p95.into()),
+            ("p99", m.p99.into()),
+        ])
+    };
+    obj(&[
+        ("count", s.count.into()),
+        ("decode_s", s.decode_time.into()),
+        ("label", s.label.as_str().into()),
+        ("makespan_s", s.makespan.into()),
+        ("queueing_delay_s", stat(&s.queueing)),
+        ("tbt_s", stat(&s.tbt)),
+        ("ttft_s", stat(&s.ttft)),
+    ])
+}
+
+fn cell_json(c: &CellResult) -> Json {
+    obj(&[
+        ("count", c.count.into()),
+        ("makespan_s", c.makespan.into()),
+        ("pattern", pattern_key(c.pattern).into()),
+        (
+            "per_cluster",
+            Json::Arr(c.shards.iter().map(shard_json).collect()),
+        ),
+        ("queueing_delay_s", metric_json(&c.queueing)),
+        ("router", c.router.key().into()),
+        ("tbt_s", metric_json(&c.tbt)),
+        ("ttft_s", metric_json(&c.ttft)),
+    ])
+}
+
+/// Stream the `lime-fleet-v1` artifact to `out` cell by cell — the whole
+/// tree is never materialized (bytes are pinned identical to
+/// `Json::Display`). Returns the sink.
+pub fn write_fleet<W: std::io::Write>(
+    spec: &FleetSpec,
+    cells: &[CellResult],
+    out: W,
+) -> std::io::Result<W> {
+    let mut w = StreamWriter::new(out);
+    w.begin_obj()?;
+    w.key("cells")?;
+    w.begin_arr()?;
+    for c in cells {
+        w.value(&cell_json(c))?;
+    }
+    w.end()?;
+    w.key("clusters")?;
+    w.begin_arr()?;
+    for fc in &spec.clusters {
+        w.value(&obj(&[
+            ("bw_mbps", fc.bw_mbps.into()),
+            ("devices", fc.cluster.len().into()),
+            ("label", fc.label.as_str().into()),
+            ("planned_ms_per_token", (fc.planned_s_per_token * 1e3).into()),
+        ]))?;
+    }
+    w.end()?;
+    w.key("count")?;
+    w.value(&spec.count.into())?;
+    w.key("lambda")?;
+    w.value(&spec.lambda.into())?;
+    w.key("model")?;
+    w.value(&spec.model().into())?;
+    w.key("name")?;
+    w.value(&spec.name.as_str().into())?;
+    w.key("patterns")?;
+    w.value(&Json::Arr(
+        spec.patterns.iter().map(|&p| pattern_key(p).into()).collect(),
+    ))?;
+    w.key("routers")?;
+    w.value(&Json::Arr(
+        spec.routers.iter().map(|r| r.key().into()).collect(),
+    ))?;
+    w.key("schema")?;
+    w.value(&"lime-fleet-v1".into())?;
+    w.key("seed")?;
+    w.value(&spec.seed.into())?;
+    w.key("steps")?;
+    w.value(&spec.steps.into())?;
+    w.end()?;
+    w.finish()
+}
+
+/// [`write_fleet`] into a byte buffer — what the determinism tests diff.
+pub fn fleet_artifact_bytes(spec: &FleetSpec, cells: &[CellResult]) -> Vec<u8> {
+    write_fleet(spec, cells, Vec::new()).expect("writing to a Vec cannot fail")
+}
+
+/// Summary returned by a successful [`validate_fleet`] pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSummary {
+    pub name: String,
+    pub model: String,
+    pub schema: String,
+    pub clusters: usize,
+    pub cells: usize,
+    /// Requests per cell.
+    pub requests: usize,
+}
+
+fn field<'a>(json: &'a Json, key: &str, what: &str) -> Result<&'a Json, String> {
+    json.get(key).ok_or_else(|| format!("{what} missing '{key}'"))
+}
+
+fn finite_ge0(json: &Json, key: &str, what: &str) -> Result<f64, String> {
+    let v = field(json, key, what)?
+        .as_f64()
+        .ok_or_else(|| format!("{what}.{key} must be a number"))?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(format!("{what}.{key} must be finite and >= 0, got {v}"));
+    }
+    Ok(v)
+}
+
+/// Validate latency-summary shape: mean/p50/p95/p99, finite, non-negative
+/// and monotone in p when the cell is populated.
+fn check_stat(json: &Json, key: &str, what: &str, populated: bool) -> Result<(), String> {
+    let stat = field(json, key, what)?;
+    let here = format!("{what}.{key}");
+    let mean = finite_ge0(stat, "mean", &here)?;
+    let p50 = finite_ge0(stat, "p50", &here)?;
+    let p95 = finite_ge0(stat, "p95", &here)?;
+    let p99 = finite_ge0(stat, "p99", &here)?;
+    if populated && !(p50 <= p95 && p95 <= p99) {
+        return Err(format!(
+            "{here}: percentiles must be monotone, got p50={p50} p95={p95} p99={p99}"
+        ));
+    }
+    if !populated && (mean != 0.0 || p99 != 0.0) {
+        return Err(format!("{here}: empty shard must report zero stats"));
+    }
+    Ok(())
+}
+
+/// Validate one artifact strictly against the `lime-fleet-v1` schema —
+/// the machine check behind `lime sweep-check` for `FLEET_*.json` files
+/// and the CI artifact gate.
+pub fn validate_fleet(json: &Json) -> Result<FleetSummary, String> {
+    match json.get("schema").and_then(Json::as_str) {
+        Some("lime-fleet-v1") => {}
+        other => return Err(format!("expected schema lime-fleet-v1, got {other:?}")),
+    }
+    let name = field(json, "name", "artifact")?
+        .as_str()
+        .ok_or("'name' must be a string")?
+        .to_string();
+    let model = field(json, "model", "artifact")?
+        .as_str()
+        .ok_or("'model' must be a string")?
+        .to_string();
+    if name.is_empty() || model.is_empty() {
+        return Err("'name' and 'model' must be non-empty".into());
+    }
+    let count = field(json, "count", "artifact")?
+        .as_usize()
+        .filter(|&c| c > 0)
+        .ok_or("'count' must be a positive integer")?;
+    let steps = field(json, "steps", "artifact")?
+        .as_usize()
+        .filter(|&s| s > 0)
+        .ok_or("'steps' must be a positive integer")?;
+    let _ = steps;
+    let lambda = field(json, "lambda", "artifact")?
+        .as_f64()
+        .ok_or("'lambda' must be a number")?;
+    if !lambda.is_finite() || lambda <= 0.0 {
+        return Err(format!("'lambda' must be finite and positive, got {lambda}"));
+    }
+    field(json, "seed", "artifact")?
+        .as_u64()
+        .ok_or("'seed' must be a non-negative integer")?;
+
+    // Header: clusters.
+    let clusters = field(json, "clusters", "artifact")?
+        .as_arr()
+        .ok_or("'clusters' must be an array")?;
+    if clusters.is_empty() {
+        return Err("'clusters' must be non-empty".into());
+    }
+    let mut labels: Vec<&str> = Vec::with_capacity(clusters.len());
+    for (i, c) in clusters.iter().enumerate() {
+        let what = format!("clusters[{i}]");
+        let label = field(c, "label", &what)?
+            .as_str()
+            .ok_or_else(|| format!("{what}.label must be a string"))?;
+        if label.is_empty() || labels.contains(&label) {
+            return Err(format!("{what}.label must be non-empty and unique"));
+        }
+        labels.push(label);
+        let bw = finite_ge0(c, "bw_mbps", &what)?;
+        let ms = finite_ge0(c, "planned_ms_per_token", &what)?;
+        if bw == 0.0 || ms == 0.0 {
+            return Err(format!("{what}: bw_mbps and planned_ms_per_token must be positive"));
+        }
+        field(c, "devices", &what)?
+            .as_usize()
+            .filter(|&d| d > 0)
+            .ok_or_else(|| format!("{what}.devices must be a positive integer"))?;
+    }
+
+    // Header: routers / patterns.
+    let keyset = |key: &str, allowed: &[&str]| -> Result<Vec<String>, String> {
+        let arr = field(json, key, "artifact")?
+            .as_arr()
+            .ok_or_else(|| format!("'{key}' must be an array"))?;
+        if arr.is_empty() {
+            return Err(format!("'{key}' must be non-empty"));
+        }
+        let mut out: Vec<String> = Vec::with_capacity(arr.len());
+        for v in arr {
+            let s = v
+                .as_str()
+                .ok_or_else(|| format!("'{key}' entries must be strings"))?;
+            if !allowed.contains(&s) {
+                return Err(format!("'{key}' entry {s:?} not in {allowed:?}"));
+            }
+            if out.iter().any(|o| o == s) {
+                return Err(format!("'{key}' entries must be unique, {s:?} repeats"));
+            }
+            out.push(s.to_string());
+        }
+        Ok(out)
+    };
+    let routers = keyset("routers", &["rr", "jsq", "plan"])?;
+    let patterns = keyset("patterns", &["sporadic", "bursty"])?;
+
+    // Cells: exactly the router × pattern cross, each cell a partition of
+    // the stream across the header's clusters.
+    let cells = field(json, "cells", "artifact")?
+        .as_arr()
+        .ok_or("'cells' must be an array")?;
+    if cells.len() != routers.len() * patterns.len() {
+        return Err(format!(
+            "expected {} cells from the router x pattern cross, found {}",
+            routers.len() * patterns.len(),
+            cells.len()
+        ));
+    }
+    let mut seen: Vec<(String, String)> = Vec::with_capacity(cells.len());
+    for (i, cell) in cells.iter().enumerate() {
+        let what = format!("cells[{i}]");
+        let router = field(cell, "router", &what)?
+            .as_str()
+            .ok_or_else(|| format!("{what}.router must be a string"))?;
+        let pattern = field(cell, "pattern", &what)?
+            .as_str()
+            .ok_or_else(|| format!("{what}.pattern must be a string"))?;
+        if !routers.iter().any(|r| r == router) {
+            return Err(format!("{what}.router {router:?} not in header 'routers'"));
+        }
+        if !patterns.iter().any(|p| p == pattern) {
+            return Err(format!("{what}.pattern {pattern:?} not in header 'patterns'"));
+        }
+        let combo = (router.to_string(), pattern.to_string());
+        if seen.contains(&combo) {
+            return Err(format!("duplicate cell for router={router} pattern={pattern}"));
+        }
+        seen.push(combo);
+        let cell_count = field(cell, "count", &what)?
+            .as_usize()
+            .ok_or_else(|| format!("{what}.count must be an integer"))?;
+        if cell_count != count {
+            return Err(format!(
+                "{what}.count {cell_count} != artifact count {count} (routing must not drop requests)"
+            ));
+        }
+        let cell_makespan = finite_ge0(cell, "makespan_s", &what)?;
+        check_stat(cell, "queueing_delay_s", &what, cell_count > 0)?;
+        check_stat(cell, "tbt_s", &what, cell_count > 0)?;
+        check_stat(cell, "ttft_s", &what, cell_count > 0)?;
+
+        let per = field(cell, "per_cluster", &what)?
+            .as_arr()
+            .ok_or_else(|| format!("{what}.per_cluster must be an array"))?;
+        if per.len() != clusters.len() {
+            return Err(format!(
+                "{what}.per_cluster must have one entry per header cluster ({} != {})",
+                per.len(),
+                clusters.len()
+            ));
+        }
+        let mut sum = 0usize;
+        let mut max_shard_makespan = 0.0f64;
+        for (j, shard) in per.iter().enumerate() {
+            let swhat = format!("{what}.per_cluster[{j}]");
+            let label = field(shard, "label", &swhat)?
+                .as_str()
+                .ok_or_else(|| format!("{swhat}.label must be a string"))?;
+            if label != labels[j] {
+                return Err(format!(
+                    "{swhat}.label {label:?} must match header clusters[{j}] ({:?})",
+                    labels[j]
+                ));
+            }
+            let n = field(shard, "count", &swhat)?
+                .as_usize()
+                .ok_or_else(|| format!("{swhat}.count must be an integer"))?;
+            sum += n;
+            let mk = finite_ge0(shard, "makespan_s", &swhat)?;
+            max_shard_makespan = max_shard_makespan.max(mk);
+            finite_ge0(shard, "decode_s", &swhat)?;
+            check_stat(shard, "queueing_delay_s", &swhat, n > 0)?;
+            check_stat(shard, "tbt_s", &swhat, n > 0)?;
+            check_stat(shard, "ttft_s", &swhat, n > 0)?;
+        }
+        if sum != cell_count {
+            return Err(format!(
+                "{what}: per-cluster counts sum to {sum}, cell count is {cell_count}"
+            ));
+        }
+        if cell_makespan != max_shard_makespan {
+            return Err(format!(
+                "{what}.makespan_s {cell_makespan} != max per-cluster makespan {max_shard_makespan}"
+            ));
+        }
+    }
+    Ok(FleetSummary {
+        name,
+        model,
+        schema: "lime-fleet-v1".to_string(),
+        clusters: clusters.len(),
+        cells: cells.len(),
+        requests: count,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A cheap two-cluster fleet over TinyLM — E3 split into its Orin pair
+    /// and its mixed pair.
+    fn tiny_fleet(count: usize) -> FleetSpec {
+        let spec = ModelSpec::tiny_lm();
+        let e3 = Cluster::env_e3();
+        let clusters = vec![
+            FleetCluster::new("a-orin2", &e3, &[0, 1], &spec, 100.0).unwrap(),
+            FleetCluster::new("b-mixed2", &e3, &[2, 3], &spec, 200.0).unwrap(),
+        ];
+        FleetSpec {
+            name: "tiny-fleet".to_string(),
+            clusters,
+            routers: RouterPolicy::all().to_vec(),
+            patterns: vec![Pattern::Sporadic, Pattern::Bursty],
+            count,
+            lambda: 2.0,
+            steps: 3,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn routing_partitions_every_request_exactly_once() {
+        let spec = tiny_fleet(50);
+        let reqs = stream_requests(Pattern::Sporadic, 11, 50, 2.0, 0, 3);
+        for router in RouterPolicy::all() {
+            let parts = route(router, &reqs, &spec.clusters);
+            assert_eq!(parts.len(), 2);
+            let total: usize = parts.iter().map(Vec::len).sum();
+            assert_eq!(total, reqs.len(), "{router:?} dropped or duplicated");
+            let mut idxs: Vec<u32> = parts.iter().flatten().copied().collect();
+            idxs.sort_unstable();
+            let want: Vec<u32> = (0..reqs.len() as u32).collect();
+            assert_eq!(idxs, want);
+            for p in &parts {
+                assert!(
+                    p.windows(2).all(|w| w[0] < w[1]),
+                    "{router:?} must preserve arrival order (ascending indices)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_by_global_index() {
+        let spec = tiny_fleet(8);
+        let reqs = stream_requests(Pattern::Bursty, 5, 8, 1.0, 0, 2);
+        let parts = route(RouterPolicy::RoundRobin, &reqs, &spec.clusters);
+        assert_eq!(parts[0].len(), 4);
+        assert_eq!(parts[1].len(), 4);
+        // Even global indices to cluster 0, odd to cluster 1.
+        for k in 0..reqs.len() {
+            assert!(parts[k % 2].contains(&(k as u32)));
+        }
+    }
+
+    #[test]
+    fn plan_aware_prefers_the_faster_cluster_jsq_ties_low() {
+        let mut spec = tiny_fleet(1);
+        // Make cluster 1 decisively faster on paper.
+        spec.clusters[0].planned_s_per_token = 1.0;
+        spec.clusters[1].planned_s_per_token = 0.1;
+        let reqs = stream_requests(Pattern::Bursty, 1, 1, 1.0, 0, 4);
+        let plan_parts = route(RouterPolicy::PlanAware, &reqs, &spec.clusters);
+        assert_eq!(plan_parts[1].len(), 1, "plan-aware routes to the fast cluster");
+        // Both clusters idle: JSQ's backlog ties at 0 and goes low-index.
+        let jsq_parts = route(RouterPolicy::JoinShortestQueue, &reqs, &spec.clusters);
+        assert_eq!(jsq_parts[0].len(), 1, "idle tie breaks to the lowest index");
+    }
+
+    #[test]
+    fn jsq_spills_to_the_idle_cluster_under_backlog() {
+        let mut spec = tiny_fleet(4);
+        spec.clusters[0].planned_s_per_token = 10.0; // huge backlog per request
+        spec.clusters[1].planned_s_per_token = 10.0;
+        let reqs = stream_requests(Pattern::Bursty, 2, 4, 1.0, 0, 2);
+        let parts = route(RouterPolicy::JoinShortestQueue, &reqs, &spec.clusters);
+        // Simultaneous arrivals: each admission loads one cluster, so JSQ
+        // alternates rather than piling onto cluster 0.
+        assert_eq!(parts[0].len(), 2);
+        assert_eq!(parts[1].len(), 2);
+    }
+
+    #[test]
+    fn fleet_pool_matches_sequential_bytes_and_validates() {
+        let spec = tiny_fleet(24);
+        let seq = run_fleet_sequential(&spec);
+        let pool = Pool::new(4);
+        let par = run_fleet_on(&spec, Some(&pool));
+        let seq_bytes = fleet_artifact_bytes(&spec, &seq);
+        let par_bytes = fleet_artifact_bytes(&spec, &par);
+        assert_eq!(
+            seq_bytes, par_bytes,
+            "pool fleet must serialize byte-identically to sequential"
+        );
+
+        let parsed = Json::parse(std::str::from_utf8(&seq_bytes).unwrap()).unwrap();
+        let summary = validate_fleet(&parsed).expect("artifact validates");
+        assert_eq!(summary.schema, "lime-fleet-v1");
+        assert_eq!(summary.cells, 6);
+        assert_eq!(summary.clusters, 2);
+        assert_eq!(summary.requests, 24);
+        assert_eq!(summary.model, "TinyLM");
+
+        // Every cell serves the full stream and reports sane tails.
+        for cell in &seq {
+            assert_eq!(cell.count, 24);
+            assert!(cell.makespan > 0.0);
+            assert!(cell.ttft.p50 <= cell.ttft.p95 && cell.ttft.p95 <= cell.ttft.p99);
+            assert!(cell.ttft.mean > 0.0);
+        }
+    }
+
+    #[test]
+    fn validator_rejects_corruptions() {
+        let spec = tiny_fleet(12);
+        let cells = run_fleet_sequential(&spec);
+        let bytes = fleet_artifact_bytes(&spec, &cells);
+        let good = Json::parse(std::str::from_utf8(&bytes).unwrap()).unwrap();
+        assert!(validate_fleet(&good).is_ok());
+
+        let corrupt = |f: &dyn Fn(&mut std::collections::BTreeMap<String, Json>)| {
+            let Json::Obj(mut map) = good.clone() else {
+                panic!("artifact must be an object")
+            };
+            f(&mut map);
+            validate_fleet(&Json::Obj(map))
+        };
+
+        // Wrong schema tag.
+        assert!(corrupt(&|m| {
+            m.insert("schema".into(), "lime-sweep-v4".into());
+        })
+        .is_err());
+        // A dropped cell breaks the router x pattern cross.
+        assert!(corrupt(&|m| {
+            if let Some(Json::Arr(cells)) = m.get_mut("cells") {
+                cells.pop();
+            }
+        })
+        .is_err());
+        // A cell that lost requests must be caught.
+        assert!(corrupt(&|m| {
+            if let Some(Json::Arr(cells)) = m.get_mut("cells") {
+                if let Json::Obj(c0) = &mut cells[0] {
+                    c0.insert("count".into(), 11usize.into());
+                }
+            }
+        })
+        .is_err());
+        // Cell makespan must equal the max per-cluster makespan.
+        assert!(corrupt(&|m| {
+            if let Some(Json::Arr(cells)) = m.get_mut("cells") {
+                if let Json::Obj(c0) = &mut cells[0] {
+                    c0.insert("makespan_s".into(), 1e9.into());
+                }
+            }
+        })
+        .is_err());
+        // Non-monotone percentiles are a stats bug, not data.
+        assert!(corrupt(&|m| {
+            if let Some(Json::Arr(cells)) = m.get_mut("cells") {
+                if let Json::Obj(c0) = &mut cells[0] {
+                    if let Some(Json::Obj(t)) = c0.get_mut("ttft_s") {
+                        t.insert("p95".into(), 1e12.into());
+                    }
+                }
+            }
+        })
+        .is_err());
+    }
+}

@@ -9,19 +9,26 @@
 //! between the scheduler and the engine) are plain Rust and always build,
 //! as does [`simqueue`] — the FIFO request-queue simulation over the
 //! unified executor core that the scenario matrix's arrival-process axis
-//! evaluates.
+//! evaluates — and [`fleet`], the multi-cluster admission-router layer
+//! that shards million-request streams across the work-stealing pool and
+//! streams `lime-fleet-v1` tail-latency artifacts.
 
 pub mod deployment;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 #[cfg(feature = "pjrt")]
 pub mod server;
+pub mod fleet;
 pub mod simqueue;
 
 pub use deployment::{plan_tiny, residency_plan, virtual_cluster};
+pub use fleet::{
+    run_fleet, run_fleet_sequential, validate_fleet, write_fleet, FleetCluster, FleetSpec,
+    FleetSummary, RouterPolicy,
+};
 pub use simqueue::{
-    serve_interleaved, serve_tensor_parallel, serve_traditional, simulate_stream, RequestMetrics,
-    StreamResult,
+    serve_interleaved, serve_tensor_parallel, serve_traditional, simulate_stream,
+    simulate_stream_sink, RequestMetrics, StreamResult, StreamSink, StreamStats,
 };
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, Generation};

@@ -32,7 +32,7 @@ use crate::adapt::Script;
 use crate::cluster::Cluster;
 use crate::model::ModelSpec;
 use crate::net::BandwidthTrace;
-use crate::pipeline::core::{CommonOptions, ExecutorCore, SchedulePolicy};
+use crate::pipeline::core::{CommonOptions, CoreArena, ExecutorCore, SchedulePolicy};
 use crate::pipeline::{
     ExecOptions, InterleavedPolicy, TensorParallelPolicy, TpOptions, TradOptions,
     TraditionalPolicy,
@@ -118,6 +118,40 @@ fn mean(it: impl Iterator<Item = f64>) -> f64 {
     }
 }
 
+/// Consumer of per-request metrics as the stream produces them. The
+/// memory-flat path for million-request streams: a sink folds each
+/// request into O(1) state (means, P²/reservoir quantiles) instead of the
+/// driver retaining a `Vec<RequestMetrics>`. `Vec<RequestMetrics>` itself
+/// implements the trait — [`simulate_stream`] is the collecting special
+/// case of [`simulate_stream_sink`].
+pub trait StreamSink {
+    fn on_request(&mut self, m: &RequestMetrics);
+}
+
+impl StreamSink for Vec<RequestMetrics> {
+    fn on_request(&mut self, m: &RequestMetrics) {
+        self.push(m.clone());
+    }
+}
+
+/// Aggregate outcome of a sink-driven stream — everything
+/// [`StreamResult`] holds except the per-request vector.
+#[derive(Debug, Clone)]
+pub struct StreamStats {
+    pub batches: usize,
+    pub makespan: f64,
+    pub tokens_generated: usize,
+    pub decode_time: f64,
+    /// Empty when `retain_step_times` was off (memory-flat mode);
+    /// `decode_time` still sums every step either way.
+    pub step_times: Vec<f64>,
+    pub trace: Trace,
+    pub kv_tokens_transferred: u64,
+    pub online_plans_fired: usize,
+    pub emergency_steps: usize,
+    pub bw_stalls: u64,
+}
+
 /// Serve `requests` (sorted by arrival) through `policy` on one shared
 /// cluster timeline.
 ///
@@ -144,14 +178,62 @@ pub fn simulate_stream<P: SchedulePolicy>(
     script: &Script,
     requests: &[Request],
 ) -> StreamResult {
+    let mut metrics: Vec<RequestMetrics> = Vec::with_capacity(requests.len());
+    let stats = simulate_stream_sink(
+        policy,
+        cluster,
+        bw_trace,
+        max_batch,
+        common,
+        script,
+        requests,
+        &mut metrics,
+        true,
+    );
+    StreamResult {
+        requests: metrics,
+        batches: stats.batches,
+        makespan: stats.makespan,
+        tokens_generated: stats.tokens_generated,
+        decode_time: stats.decode_time,
+        step_times: stats.step_times,
+        trace: stats.trace,
+        kv_tokens_transferred: stats.kv_tokens_transferred,
+        online_plans_fired: stats.online_plans_fired,
+        emergency_steps: stats.emergency_steps,
+        bw_stalls: stats.bw_stalls,
+    }
+}
+
+/// [`simulate_stream`], metrics delivered through `sink` instead of
+/// collected — with `retain_step_times = false` this is the memory-flat
+/// driver for million-request fleet streams: per-request/per-batch state
+/// lives in one reused [`CoreArena`], the core keeps only a running
+/// decode-time sum, and the sink decides what (if anything) to retain.
+/// All aggregates are accumulated left-to-right in stream order, so they
+/// are bit-identical to the collecting path's post-hoc folds.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_stream_sink<P: SchedulePolicy, S: StreamSink>(
+    policy: P,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    max_batch: usize,
+    common: &CommonOptions,
+    script: &Script,
+    requests: &[Request],
+    sink: &mut S,
+    retain_step_times: bool,
+) -> StreamStats {
     assert!(
         requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
         "requests must be sorted by arrival (FIFO admission)"
     );
     let max_batch = max_batch.max(1);
     let mut core = ExecutorCore::new(policy, cluster, bw_trace, common, script);
-    let mut metrics: Vec<RequestMetrics> = Vec::with_capacity(requests.len());
+    core.retain_step_times(retain_step_times);
+    let mut arena = CoreArena::new();
     let mut batches = 0usize;
+    let mut makespan = 0.0f64;
     let mut t_free = 0.0f64;
     let mut i = 0usize;
     while i < requests.len() {
@@ -162,7 +244,7 @@ pub fn simulate_stream<P: SchedulePolicy>(
         }
         let batch = &requests[i..j];
         let tokens = batch.iter().map(|r| r.steps).max().unwrap_or(0);
-        let run = core.run_request(t_start, batch.len(), tokens);
+        let run = core.run_request_in(t_start, batch.len(), tokens, &mut arena);
         for r in batch {
             let finish = if r.steps == 0 {
                 run.decode_start
@@ -177,7 +259,7 @@ pub fn simulate_stream<P: SchedulePolicy>(
             } else {
                 run.step_ends[0]
             };
-            metrics.push(RequestMetrics {
+            let m = RequestMetrics {
                 id: r.id,
                 arrival: r.arrival,
                 admitted_at: t_start,
@@ -189,19 +271,20 @@ pub fn simulate_stream<P: SchedulePolicy>(
                     (finish - run.decode_start) / r.steps as f64
                 },
                 finish,
-            });
+            };
+            makespan = makespan.max(m.finish);
+            sink.on_request(&m);
         }
         t_free = run.finish();
         batches += 1;
         i = j;
     }
     let totals = core.into_totals();
-    StreamResult {
-        makespan: metrics.iter().map(|m| m.finish).fold(0.0, f64::max),
-        tokens_generated: requests.iter().map(|r| r.steps).sum(),
-        decode_time: totals.step_times.iter().sum(),
-        requests: metrics,
+    StreamStats {
         batches,
+        makespan,
+        tokens_generated: requests.iter().map(|r| r.steps).sum(),
+        decode_time: totals.step_time_sum,
         step_times: totals.step_times,
         trace: totals.trace,
         kv_tokens_transferred: totals.kv_tokens_transferred,
@@ -349,6 +432,69 @@ mod tests {
         let reqs = stream_requests(Pattern::Bursty, 3, 3, 0.5, 64, 2);
         let sr = serve_interleaved(&alloc, &cluster, &bw, 0, &exec_off(), &Script::none(), &reqs);
         assert_eq!(sr.batches, 3);
+    }
+
+    #[test]
+    fn memory_flat_sink_stream_equals_collected_stream() {
+        // The collecting path IS the sink path with a Vec sink, so the
+        // pin that matters is retention: a memory-flat run (no step-times
+        // vector, fold-as-you-go sink) must agree bit-for-bit on every
+        // aggregate and every per-request metric.
+        struct Fold {
+            n: usize,
+            ttft_sum: f64,
+            last_finish: f64,
+            max_finish: f64,
+        }
+        impl StreamSink for Fold {
+            fn on_request(&mut self, m: &RequestMetrics) {
+                self.n += 1;
+                self.ttft_sum += m.ttft;
+                self.last_finish = m.finish;
+                self.max_finish = self.max_finish.max(m.finish);
+            }
+        }
+
+        let (alloc, cluster) = setup();
+        let bw = BandwidthTrace::fixed_mbps(200.0);
+        let reqs = stream_requests(Pattern::Sporadic, 9, 8, 0.4, 64, 4);
+        let opts = exec_off();
+        let collected =
+            serve_interleaved(&alloc, &cluster, &bw, 2, &opts, &Script::none(), &reqs);
+
+        let mut fold = Fold {
+            n: 0,
+            ttft_sum: 0.0,
+            last_finish: 0.0,
+            max_finish: 0.0,
+        };
+        let flat = simulate_stream_sink(
+            InterleavedPolicy::new(&alloc, &cluster, &opts),
+            &cluster,
+            &bw,
+            2,
+            &CommonOptions::from(&opts),
+            &Script::none(),
+            &reqs,
+            &mut fold,
+            false,
+        );
+        assert!(flat.step_times.is_empty(), "memory-flat retains no steps");
+        assert_eq!(fold.n, collected.requests.len());
+        let ttft_sum: f64 = collected.requests.iter().map(|r| r.ttft).sum();
+        assert_eq!(fold.ttft_sum.to_bits(), ttft_sum.to_bits());
+        assert_eq!(fold.max_finish.to_bits(), collected.makespan.to_bits());
+        assert_eq!(flat.makespan.to_bits(), collected.makespan.to_bits());
+        assert_eq!(flat.decode_time.to_bits(), collected.decode_time.to_bits());
+        assert_eq!(
+            collected.step_times.iter().sum::<f64>().to_bits(),
+            collected.decode_time.to_bits(),
+            "retained sum must equal the running sum"
+        );
+        assert_eq!(flat.batches, collected.batches);
+        assert_eq!(flat.kv_tokens_transferred, collected.kv_tokens_transferred);
+        assert_eq!(flat.emergency_steps, collected.emergency_steps);
+        assert_eq!(flat.bw_stalls, collected.bw_stalls);
     }
 
     #[test]

@@ -137,7 +137,9 @@ impl Bench {
             let Some(&prev_mean) = prev_means.get(&m.name) else {
                 continue;
             };
-            if prev_mean <= 0.0 || m.summary.mean <= 0.0 {
+            // NOTE `<= 0.0` alone would let NaN through (NaN compares false
+            // both ways) and print a NaN "speedup"; require a pinned mean.
+            if !pinned_mean(prev_mean) || !pinned_mean(m.summary.mean) {
                 continue;
             }
             if !printed_header {
@@ -190,6 +192,17 @@ pub struct RegressionReport {
     /// Measurements slower than `tolerance ×` their baseline — CI fails
     /// loudly when this is non-empty.
     pub failures: Vec<String>,
+    /// Baseline entries carrying no perf signal (`mean_s <= 0` placeholders
+    /// or non-finite values) — `lime bench-check` surfaces this count so an
+    /// all-unpinned baseline reads as "nothing gated", not as a green pass.
+    pub unpinned: usize,
+}
+
+/// A mean carries a usable perf signal only when it is finite and positive.
+/// `mean <= 0.0` alone misclassifies NaN (every comparison with NaN is
+/// false), which would fall through to ratio checks that silently pass.
+fn pinned_mean(mean: f64) -> bool {
+    mean.is_finite() && mean > 0.0
 }
 
 /// Diff a fresh `lime-bench-v1` snapshot against a committed baseline with
@@ -239,16 +252,29 @@ pub fn check_regression(
     let mut report = RegressionReport {
         lines: Vec::new(),
         failures: Vec::new(),
+        unpinned: 0,
     };
     for (name, &cur_mean) in &cur {
         match base.get(name) {
             None => report
                 .lines
                 .push(format!("  {name:48} {:>12}  (new, no baseline)", fmt_secs(cur_mean))),
-            Some(&b) if b <= 0.0 => report.lines.push(format!(
-                "  {name:48} {:>12}  (baseline unpinned — record one, see README)",
-                fmt_secs(cur_mean)
-            )),
+            Some(&b) if !pinned_mean(b) => {
+                report.unpinned += 1;
+                report.lines.push(format!(
+                    "  {name:48} {:>12}  (baseline unpinned — record one, see README)",
+                    fmt_secs(cur_mean)
+                ));
+            }
+            Some(&b) if !cur_mean.is_finite() => {
+                // A NaN/inf current mean against a pinned baseline is a
+                // broken measurement, not a pass — NaN ratios compare false
+                // against any tolerance, so fail it explicitly.
+                report.failures.push(format!(
+                    "BROKEN     {name}: non-finite current mean {cur_mean} vs pinned baseline {}",
+                    fmt_secs(b)
+                ));
+            }
             Some(&b) => {
                 let ratio = cur_mean / b;
                 let line = format!(
@@ -266,7 +292,8 @@ pub fn check_regression(
     }
     for (name, &b) in &base {
         if !cur.contains_key(name) {
-            if b <= 0.0 {
+            if !pinned_mean(b) {
+                report.unpinned += 1;
                 // Unpinned placeholders carry no perf signal; losing one is
                 // renaming noise, not silent coverage loss.
                 report.lines.push(format!(
@@ -393,6 +420,37 @@ mod tests {
         assert!(r.lines.iter().any(|l| l.contains("unpinned")));
         assert!(r.lines.iter().any(|l| l.contains("no baseline")));
         assert!(r.lines.iter().any(|l| l.contains("gone-unpinned")));
+        assert_eq!(r.unpinned, 2, "both zero-mean entries counted as unpinned");
+    }
+
+    #[test]
+    fn regression_gate_treats_nan_baseline_as_unpinned_not_pass() {
+        // NaN compares false against everything, so the old `b <= 0.0`
+        // guard let a NaN baseline fall through to a NaN ratio that could
+        // never exceed tolerance — a silent pass. It must read as unpinned.
+        let base = bench_json(&[("a", f64::NAN)]);
+        let cur = bench_json(&[("a", 99.0)]);
+        let r = check_regression(&cur, &base, 1.5).unwrap();
+        assert!(r.failures.is_empty(), "{:?}", r.failures);
+        assert_eq!(r.unpinned, 1);
+        assert!(r.lines.iter().any(|l| l.contains("unpinned")));
+    }
+
+    #[test]
+    fn regression_gate_fails_nonfinite_current_mean_loudly() {
+        let base = bench_json(&[("a", 1.0)]);
+        let cur = bench_json(&[("a", f64::NAN)]);
+        let r = check_regression(&cur, &base, 1.5).unwrap();
+        assert_eq!(r.failures.len(), 1, "{:?}", r.lines);
+        assert!(r.failures[0].contains("BROKEN"), "{}", r.failures[0]);
+    }
+
+    #[test]
+    fn regression_gate_counts_zero_unpinned_on_pinned_baselines() {
+        let base = bench_json(&[("a", 1.0)]);
+        let cur = bench_json(&[("a", 1.0)]);
+        let r = check_regression(&cur, &base, 1.5).unwrap();
+        assert_eq!(r.unpinned, 0);
     }
 
     #[test]

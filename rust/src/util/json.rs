@@ -195,7 +195,7 @@ impl fmt::Display for Json {
     }
 }
 
-fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+fn write_escaped<W: fmt::Write>(f: &mut W, s: &str) -> fmt::Result {
     write!(f, "\"")?;
     for c in s.chars() {
         match c {
@@ -209,6 +209,143 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
         }
     }
     write!(f, "\"")
+}
+
+// -------------------------------------------------------- streaming writer
+
+/// Incremental JSON emitter for artifacts too large to hold as one [`Json`]
+/// tree (the fleet writer streams one cell at a time instead of retaining
+/// per-request vectors). Byte-compatibility contract: the emitted bytes are
+/// **identical** to `Json::Display` on the equivalent tree — same number
+/// formatting (via `Display` on the values pushed), same escaping, no
+/// whitespace — so artifacts written either way diff clean. Because `Display`
+/// renders objects in `BTreeMap` (alphabetical) key order, [`StreamWriter::key`]
+/// enforces strictly ascending keys per object and panics otherwise; panics
+/// also flag structural misuse (value without a key, unbalanced `end`).
+/// I/O errors surface as `io::Result`.
+pub struct StreamWriter<W: std::io::Write> {
+    out: W,
+    stack: Vec<Frame>,
+    /// Values written at the root (must end at exactly 1).
+    root_values: usize,
+    /// Reusable escape scratch for object keys.
+    scratch: String,
+}
+
+enum Frame {
+    Arr {
+        count: usize,
+    },
+    Obj {
+        count: usize,
+        last_key: String,
+        key_armed: bool,
+    },
+}
+
+impl<W: std::io::Write> StreamWriter<W> {
+    pub fn new(out: W) -> Self {
+        StreamWriter {
+            out,
+            stack: Vec::new(),
+            root_values: 0,
+            scratch: String::new(),
+        }
+    }
+
+    /// Separator/arming bookkeeping shared by every value-producing call.
+    fn before_value(&mut self) -> std::io::Result<()> {
+        match self.stack.last_mut() {
+            None => {
+                assert_eq!(self.root_values, 0, "JSON document has a single root");
+                self.root_values = 1;
+            }
+            Some(Frame::Arr { count }) => {
+                if *count > 0 {
+                    self.out.write_all(b",")?;
+                }
+                *count += 1;
+            }
+            Some(Frame::Obj { key_armed, .. }) => {
+                assert!(*key_armed, "object value requires a preceding key()");
+                *key_armed = false;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn begin_obj(&mut self) -> std::io::Result<()> {
+        self.before_value()?;
+        self.stack.push(Frame::Obj {
+            count: 0,
+            last_key: String::new(),
+            key_armed: false,
+        });
+        self.out.write_all(b"{")
+    }
+
+    pub fn begin_arr(&mut self) -> std::io::Result<()> {
+        self.before_value()?;
+        self.stack.push(Frame::Arr { count: 0 });
+        self.out.write_all(b"[")
+    }
+
+    /// Emit an object key. Keys must arrive in strictly ascending order —
+    /// the order `Json::Obj`'s BTreeMap would render them in.
+    pub fn key(&mut self, k: &str) -> std::io::Result<()> {
+        match self.stack.last_mut() {
+            Some(Frame::Obj {
+                count,
+                last_key,
+                key_armed,
+            }) => {
+                assert!(!*key_armed, "key() twice without a value");
+                assert!(
+                    *count == 0 || k > last_key.as_str(),
+                    "keys must be strictly ascending to match Json::Display \
+                     (got {k:?} after {last_key:?})"
+                );
+                if *count > 0 {
+                    self.out.write_all(b",")?;
+                }
+                *count += 1;
+                *key_armed = true;
+                last_key.clear();
+                last_key.push_str(k);
+            }
+            _ => panic!("key() outside an object"),
+        }
+        self.scratch.clear();
+        write_escaped(&mut self.scratch, k).expect("string formatting");
+        self.out.write_all(self.scratch.as_bytes())?;
+        self.out.write_all(b":")
+    }
+
+    /// Emit a complete value (any `Json` tree) in place.
+    pub fn value(&mut self, v: &Json) -> std::io::Result<()> {
+        self.before_value()?;
+        write!(self.out, "{v}")
+    }
+
+    /// Close the innermost open object/array.
+    pub fn end(&mut self) -> std::io::Result<()> {
+        match self.stack.pop() {
+            Some(Frame::Arr { .. }) => self.out.write_all(b"]"),
+            Some(Frame::Obj { key_armed, .. }) => {
+                assert!(!key_armed, "object closed with a dangling key");
+                self.out.write_all(b"}")
+            }
+            None => panic!("end() with nothing open"),
+        }
+    }
+
+    /// Assert the document is complete and flush; returns the sink.
+    pub fn finish(mut self) -> std::io::Result<W> {
+        assert!(self.stack.is_empty(), "unclosed containers at finish()");
+        assert_eq!(self.root_values, 1, "empty document at finish()");
+        self.out.flush()?;
+        Ok(self.out)
+    }
 }
 
 // ---------------------------------------------------------------- parser
@@ -482,5 +619,79 @@ mod tests {
     fn obj_builder() {
         let v = obj(&[("x", 1.0.into()), ("y", "z".into())]);
         assert_eq!(v.to_string(), r#"{"x":1,"y":"z"}"#);
+    }
+
+    #[test]
+    fn stream_writer_bytes_match_display_on_equivalent_tree() {
+        // The artifact-writer contract: streaming the same document must be
+        // byte-identical to rendering the monolithic tree.
+        let cells: Vec<Json> = (0..3)
+            .map(|i| {
+                obj(&[
+                    ("id", (i as u64).into()),
+                    ("ttft_s", (0.5 + i as f64).into()),
+                    ("tag", format!("cell-{i}").into()),
+                ])
+            })
+            .collect();
+        let tree = obj(&[
+            ("cells", Json::Arr(cells.clone())),
+            ("count", 3u64.into()),
+            ("schema", "lime-fleet-v1".into()),
+        ]);
+
+        let mut w = StreamWriter::new(Vec::new());
+        w.begin_obj().unwrap();
+        w.key("cells").unwrap();
+        w.begin_arr().unwrap();
+        for c in &cells {
+            w.value(c).unwrap();
+        }
+        w.end().unwrap();
+        w.key("count").unwrap();
+        w.value(&3u64.into()).unwrap();
+        w.key("schema").unwrap();
+        w.value(&"lime-fleet-v1".into()).unwrap();
+        w.end().unwrap();
+        let bytes = w.finish().unwrap();
+        let streamed = String::from_utf8(bytes).unwrap();
+
+        assert_eq!(streamed, tree.to_string());
+        assert_eq!(Json::parse(&streamed).unwrap(), tree);
+    }
+
+    #[test]
+    fn stream_writer_escapes_keys_and_nested_values() {
+        let mut w = StreamWriter::new(Vec::new());
+        w.begin_obj().unwrap();
+        w.key("a\"b").unwrap();
+        w.value(&Json::Str("x\ny".into())).unwrap();
+        w.end().unwrap();
+        let streamed = String::from_utf8(w.finish().unwrap()).unwrap();
+        let expect = Json::Obj(
+            [("a\"b".to_string(), Json::Str("x\ny".into()))]
+                .into_iter()
+                .collect(),
+        );
+        assert_eq!(streamed, expect.to_string());
+        assert_eq!(Json::parse(&streamed).unwrap(), expect);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn stream_writer_rejects_out_of_order_keys() {
+        let mut w = StreamWriter::new(Vec::new());
+        w.begin_obj().unwrap();
+        w.key("b").unwrap();
+        w.value(&Json::Null).unwrap();
+        w.key("a").unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "unclosed containers")]
+    fn stream_writer_rejects_unbalanced_finish() {
+        let mut w = StreamWriter::new(Vec::new());
+        w.begin_arr().unwrap();
+        let _ = w.finish();
     }
 }

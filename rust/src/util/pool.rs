@@ -12,14 +12,20 @@
 //!   the `LIME_THREADS` env override (CI pins it for stable timings) or the
 //!   machine's `available_parallelism`. Workers are spawned once and reused
 //!   across every sweep in the process.
-//! * **Per-worker LIFO deques with steal-half, longest victim first.** A
-//!   worker pops its own deque from the back (newest first — nested jobs
-//!   run with hot caches), and an idle worker steals the oldest *half* of
-//!   the sibling with the **longest** deque — chosen by a lock-free scan
-//!   over per-deque atomic length mirrors, locking only the picked victim
-//!   (stalely-empty victims re-checked under the lock) — so a skewed
-//!   burst of jobs spreads in O(log n) steals instead of bleeding one
-//!   neighbour dry in fixed cyclic order.
+//! * **Lock-free per-worker deques (Chase–Lev), steal-half, longest
+//!   victim first.** Each worker owns a bounded Chase–Lev deque built
+//!   from std atomics only: the owner pushes and pops at the *bottom*
+//!   (newest first — nested jobs run with hot caches) without taking any
+//!   lock, and thieves CAS the *top* cursor to claim the oldest task. The
+//!   `bottom − top` cursor distance doubles as the length mirror the old
+//!   mutexed deques kept separately, so the longest-victim scan stays
+//!   allocation- and lock-free; a thief still steals up to *half* of the
+//!   longest deque (repeated single-task claims re-homed onto its own
+//!   deque), so a skewed burst of jobs spreads in O(log n) steal rounds
+//!   instead of bleeding one neighbour dry in fixed cyclic order. A full
+//!   deque spills to the (mutexed, unbounded, cold-path) injector queue;
+//!   the monotonic top cursor rules out ABA, and a raced-to-empty victim
+//!   triggers a rescan exactly like the old under-lock re-check did.
 //! * **Nested job submission.** [`Pool::map_indexed`] called from inside a
 //!   pool job pushes the sub-jobs onto the calling worker's own deque and
 //!   the worker *helps* (executes pool jobs) while it waits for its
@@ -44,7 +50,7 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{fence, AtomicBool, AtomicIsize, AtomicPtr, AtomicUsize, Ordering};
 use std::sync::mpsc::TryRecvError;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
@@ -70,23 +76,153 @@ thread_local! {
 /// external caller by every other pool.
 static NEXT_POOL_ID: AtomicUsize = AtomicUsize::new(0);
 
-/// One worker's deque plus a lock-free length mirror. Thieves scan `len`
-/// without touching the mutex and only lock the victim they pick; every
-/// mutation updates the mirror to the exact post-mutation length while
-/// still holding the lock, so the mirror is exact whenever the lock is
-/// free. It is still only a *heuristic* for stealers — a victim may race
-/// to empty between the scan and the steal — so emptiness is re-checked
-/// under the lock.
+/// Per-worker deque capacity. A power of two so ring indexing is a mask.
+/// Batches larger than this spill their overflow to the injector (cold
+/// path, unbounded); the big fan-outs — grid cells, fleet shards — sit
+/// comfortably under it per worker.
+const DEQUE_CAP: usize = 1024;
+
+/// A task travels through the lock-free deque as a *thin* raw pointer:
+/// `Task` is a fat `Box<dyn FnOnce()>`, so it is boxed once more and the
+/// outer pointer is what the `AtomicPtr` slots carry.
+type TaskPtr = *mut Task;
+
+fn task_into_ptr(t: Task) -> TaskPtr {
+    Box::into_raw(Box::new(t))
+}
+
+/// SAFETY: `p` must come from [`task_into_ptr`] and ownership must have
+/// been transferred to the caller (a successful pop/steal, or `&mut`
+/// drain in `Drop`).
+unsafe fn task_from_ptr(p: TaskPtr) -> Task {
+    *Box::from_raw(p)
+}
+
+enum Steal {
+    /// The thief owns the task behind this pointer.
+    Taken(TaskPtr),
+    Empty,
+    /// Lost the top-cursor CAS to another thief (or the owner's last-task
+    /// pop) — the deque made progress, re-decide.
+    Retry,
+}
+
+/// One worker's bounded lock-free deque — the C11 Chase–Lev design on std
+/// atomics. The single OWNER thread pushes and pops at `bottom`; any
+/// number of THIEVES claim the oldest task by CAS-ing `top` forward.
+/// `top` only ever increases, so a stale thief loses its CAS instead of
+/// resurrecting a recycled slot (no ABA), and the `bottom − top` distance
+/// is the lock-free length mirror the victim-selection scan reads.
 struct Deque {
-    tasks: Mutex<VecDeque<Task>>,
-    len: AtomicUsize,
+    /// Thief end. Monotonically increasing.
+    top: AtomicIsize,
+    /// Owner end. Only the owner stores to it (thieves just read).
+    bottom: AtomicIsize,
+    slots: Box<[AtomicPtr<Task>]>,
 }
 
 impl Deque {
     fn new() -> Deque {
         Deque {
-            tasks: Mutex::new(VecDeque::new()),
-            len: AtomicUsize::new(0),
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            slots: (0..DEQUE_CAP)
+                .map(|_| AtomicPtr::new(std::ptr::null_mut()))
+                .collect(),
+        }
+    }
+
+    /// Snapshot length — exact for the owner, a heuristic for thieves
+    /// (the victim may race to empty before the steal lands, which the
+    /// caller handles by rescanning).
+    fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    /// Owner-only. `Err` returns the task when the ring is full.
+    fn push(&self, task: TaskPtr) -> Result<(), TaskPtr> {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        if b - t >= DEQUE_CAP as isize {
+            return Err(task);
+        }
+        self.slots[(b as usize) & (DEQUE_CAP - 1)].store(task, Ordering::Relaxed);
+        // Publish the slot before the new bottom becomes visible to
+        // thieves.
+        fence(Ordering::Release);
+        self.bottom.store(b + 1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Owner-only LIFO pop from the bottom.
+    fn pop(&self) -> Option<TaskPtr> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        self.bottom.store(b, Ordering::Relaxed);
+        // The store above must be ordered before the top load: it is what
+        // makes a concurrent thief's CAS race *visible* as a race.
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t <= b {
+            let p = self.slots[(b as usize) & (DEQUE_CAP - 1)].load(Ordering::Relaxed);
+            if t == b {
+                // Last task: the owner races thieves for it via the same
+                // top CAS a thief would use.
+                let won = self
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_ok();
+                self.bottom.store(b + 1, Ordering::Relaxed);
+                if won {
+                    Some(p)
+                } else {
+                    None
+                }
+            } else {
+                Some(p)
+            }
+        } else {
+            // Already empty: restore bottom.
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Any-thread FIFO steal from the top.
+    fn steal(&self) -> Steal {
+        let t = self.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t < b {
+            let p = self.slots[(t as usize) & (DEQUE_CAP - 1)].load(Ordering::Relaxed);
+            // The slot read may be stale if the owner wrapped the ring —
+            // but wrapping slot `t` requires `top > t` (the push full-check
+            // reads `top`), so this CAS fails and the stale read is
+            // discarded.
+            if self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok()
+            {
+                Steal::Taken(p)
+            } else {
+                Steal::Retry
+            }
+        } else {
+            Steal::Empty
+        }
+    }
+}
+
+impl Drop for Deque {
+    fn drop(&mut self) {
+        // `&mut self`: no concurrent owner or thieves. Free any tasks a
+        // shutdown stranded in the ring.
+        while let Some(p) = self.pop() {
+            // SAFETY: a successful pop transfers ownership; the pointer
+            // came from `task_into_ptr`.
+            drop(unsafe { task_from_ptr(p) });
         }
     }
 }
@@ -95,8 +231,8 @@ struct Shared {
     pool_id: usize,
     /// FIFO queue for jobs submitted from threads outside this pool.
     injector: Mutex<VecDeque<Task>>,
-    /// Per-worker deques: owner pops the back (LIFO), thieves drain the
-    /// oldest half from the front.
+    /// Per-worker lock-free Chase–Lev deques: the owner pushes/pops the
+    /// bottom (LIFO), thieves CAS the oldest half off the top.
     deques: Vec<Deque>,
     /// Sleep coordination: submissions bump `epoch` and notify; a worker
     /// re-checks `epoch` under the lock before sleeping, so a submission
@@ -108,33 +244,30 @@ struct Shared {
 }
 
 impl Shared {
-    /// Pull one runnable task: own deque (LIFO), then the injector, then
-    /// steal-half from a sibling — preferring the victim with the
-    /// *longest* deque. `me` is the calling worker's index in *this*
-    /// pool, or `None` for an external helper.
+    /// Pull one runnable task: own deque (lock-free LIFO pop), then the
+    /// injector, then steal-half from a sibling — preferring the victim
+    /// with the *longest* deque. `me` is the calling worker's index in
+    /// *this* pool, or `None` for an external helper.
     fn find_task(&self, me: Option<usize>) -> Option<Task> {
         if let Some(i) = me {
-            let own = &self.deques[i];
-            let mut tasks = own.tasks.lock().unwrap();
-            if let Some(t) = tasks.pop_back() {
-                own.len.store(tasks.len(), Ordering::Relaxed);
-                return Some(t);
+            if let Some(p) = self.deques[i].pop() {
+                // SAFETY: a successful pop transfers ownership.
+                return Some(unsafe { task_from_ptr(p) });
             }
-            drop(tasks);
         }
         if let Some(t) = self.injector.lock().unwrap().pop_front() {
             return Some(t);
         }
         // Victim selection by deque length: one allocation-free,
-        // lock-free max-tracking scan over the length mirrors, then steal
-        // half of the LONGEST deque (one lock, on the chosen victim
-        // only). That balances a skewed burst in fewer steal rounds than
-        // fixed cyclic order, which repeatedly bled the same neighbour
-        // dry one steal at a time. The snapshot may be stale by the time
-        // the victim is locked, so emptiness is re-checked and a
-        // raced-to-empty victim triggers a rescan. Results are still
-        // placed by job index, so victim order never affects any
-        // `map_indexed` output (the determinism contract).
+        // lock-free max-tracking scan over the cursor-derived lengths,
+        // then steal half of the LONGEST deque via repeated lock-free
+        // single-task claims. That balances a skewed burst in fewer steal
+        // rounds than fixed cyclic order, which repeatedly bled the same
+        // neighbour dry one steal at a time. The snapshot may be stale by
+        // the time the first CAS lands, so a raced-to-empty (or CAS-lost)
+        // victim triggers a rescan. Results are still placed by job
+        // index, so victim order never affects any `map_indexed` output
+        // (the determinism contract).
         let n = self.deques.len();
         loop {
             let mut best: Option<(usize, usize)> = None; // (len, index)
@@ -142,50 +275,70 @@ impl Shared {
                 if Some(v) == me {
                     continue;
                 }
-                let len = self.deques[v].len.load(Ordering::Relaxed);
+                let len = self.deques[v].len();
                 // `map_or` (not 1.82's `is_none_or`): the crate's MSRV
                 // is 1.75 (see rust/Cargo.toml).
                 if len > 0 && best.map_or(true, |(best_len, _)| len > best_len) {
                     best = Some((len, v));
                 }
             }
-            let Some((_, v)) = best else {
+            let Some((len, v)) = best else {
                 return None;
             };
-            let mut stolen: VecDeque<Task> = {
-                let victim = &self.deques[v];
-                let mut tasks = victim.tasks.lock().unwrap();
-                let take = tasks.len().div_ceil(2);
-                if take == 0 {
-                    continue;
-                }
-                let stolen: VecDeque<Task> = tasks.drain(..take).collect();
-                victim.len.store(tasks.len(), Ordering::Relaxed);
-                stolen
+            let victim = &self.deques[v];
+            let take = len.div_ceil(2);
+            let first = match victim.steal() {
+                Steal::Taken(p) => p,
+                Steal::Empty | Steal::Retry => continue, // raced: rescan
             };
-            let first = stolen.pop_front();
-            if !stolen.is_empty() {
-                // Re-home the surplus where the caller can pop it (or where
-                // other idle workers will find it) and wake a sleeper.
-                match me {
-                    Some(i) => {
-                        let own = &self.deques[i];
-                        let mut tasks = own.tasks.lock().unwrap();
-                        for t in stolen {
-                            tasks.push_back(t);
+            // Steal-half: claim up to `take − 1` more tasks and re-home
+            // them where the caller can pop them (or where other idle
+            // workers will find them), then wake a sleeper.
+            let mut moved = false;
+            match me {
+                Some(i) => {
+                    let own = &self.deques[i];
+                    for _ in 1..take {
+                        match victim.steal() {
+                            Steal::Taken(p) => {
+                                moved = true;
+                                if let Err(p) = own.push(p) {
+                                    // Own ring full — spill to the
+                                    // injector instead of dropping work.
+                                    // SAFETY: the failed push returned
+                                    // ownership of the stolen task.
+                                    let t = unsafe { task_from_ptr(p) };
+                                    self.injector.lock().unwrap().push_back(t);
+                                }
+                            }
+                            Steal::Empty | Steal::Retry => break,
                         }
-                        own.len.store(tasks.len(), Ordering::Relaxed);
                     }
-                    None => {
+                }
+                None => {
+                    let mut surplus: Vec<Task> = Vec::new();
+                    for _ in 1..take {
+                        match victim.steal() {
+                            // SAFETY: a successful steal transfers
+                            // ownership.
+                            Steal::Taken(p) => surplus.push(unsafe { task_from_ptr(p) }),
+                            Steal::Empty | Steal::Retry => break,
+                        }
+                    }
+                    if !surplus.is_empty() {
+                        moved = true;
                         let mut inj = self.injector.lock().unwrap();
-                        for t in stolen {
+                        for t in surplus {
                             inj.push_back(t);
                         }
                     }
                 }
+            }
+            if moved {
                 self.notify();
             }
-            return first;
+            // SAFETY: the successful first steal transferred ownership.
+            return Some(unsafe { task_from_ptr(first) });
         }
     }
 
@@ -288,10 +441,24 @@ impl Pool {
     fn submit_batch(&self, tasks: Vec<Task>) {
         match self.me() {
             Some(i) => {
+                // Lock-free pushes onto the calling worker's own deque;
+                // overflow past the ring capacity spills to the injector
+                // in one lock acquisition (cold path — only batches wider
+                // than DEQUE_CAP per worker reach it).
                 let own = &self.shared.deques[i];
-                let mut q = own.tasks.lock().unwrap();
-                q.extend(tasks);
-                own.len.store(q.len(), Ordering::Relaxed);
+                let mut spill: Vec<Task> = Vec::new();
+                for t in tasks {
+                    if let Err(p) = own.push(task_into_ptr(t)) {
+                        // SAFETY: the failed push returned ownership.
+                        spill.push(unsafe { task_from_ptr(p) });
+                    }
+                }
+                if !spill.is_empty() {
+                    let mut inj = self.shared.injector.lock().unwrap();
+                    for t in spill {
+                        inj.push_back(t);
+                    }
+                }
             }
             None => {
                 let mut inj = self.shared.injector.lock().unwrap();
@@ -573,6 +740,80 @@ mod tests {
     #[test]
     fn configured_workers_positive() {
         assert!(configured_workers() >= 1);
+    }
+
+    #[test]
+    fn deque_is_lifo_for_owner_and_fifo_for_thieves() {
+        let d = Deque::new();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..4 {
+            let log = log.clone();
+            let t: Task = Box::new(move || log.lock().unwrap().push(i));
+            d.push(task_into_ptr(t)).expect("ring has room");
+        }
+        assert_eq!(d.len(), 4);
+        // A thief claims the OLDEST task (0); the owner pops the NEWEST (3).
+        match d.steal() {
+            Steal::Taken(p) => unsafe { task_from_ptr(p)() },
+            _ => panic!("steal from a non-empty deque"),
+        }
+        let p = d.pop().expect("owner pop");
+        unsafe { task_from_ptr(p)() };
+        assert_eq!(*log.lock().unwrap(), vec![0, 3]);
+        assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn deque_full_push_returns_the_task_and_drop_frees_leftovers() {
+        let alive = Arc::new(());
+        let d = Deque::new();
+        for _ in 0..DEQUE_CAP {
+            let a = alive.clone();
+            let t: Task = Box::new(move || drop(a));
+            d.push(task_into_ptr(t)).expect("ring has room");
+        }
+        let a = alive.clone();
+        let t: Task = Box::new(move || drop(a));
+        let p = d.push(task_into_ptr(t)).expect_err("ring is full");
+        drop(unsafe { task_from_ptr(p) });
+        drop(d); // must free the DEQUE_CAP stranded tasks
+        assert_eq!(Arc::strong_count(&alive), 1, "a stranded task leaked");
+    }
+
+    #[test]
+    fn worker_batch_overflow_spills_to_injector_and_completes() {
+        // A nested submission wider than the ring capacity forces the
+        // owner-push overflow path; every job still runs exactly once and
+        // lands at its index.
+        let pool = Pool::new(2);
+        let outer = [0usize];
+        let wide = 3 * DEQUE_CAP;
+        let got = pool.map_indexed(&outer, |_| {
+            let inner: Vec<usize> = (0..wide).collect();
+            pool.map_indexed(&inner, |&i| i as u64)
+                .into_iter()
+                .sum::<u64>()
+        });
+        let n = wide as u64;
+        assert_eq!(got, vec![n * (n - 1) / 2]);
+    }
+
+    #[test]
+    fn heavy_contention_keeps_exactly_once_semantics() {
+        // Repeated wide fan-outs on many workers: the lock-free claims
+        // must neither lose nor duplicate a job.
+        let pool = Pool::new(8);
+        let counter = AtomicU64::new(0);
+        for _ in 0..20 {
+            let jobs: Vec<usize> = (0..900).collect();
+            let got = pool.map_indexed(&jobs, |&x| {
+                counter.fetch_add(1, Ordering::Relaxed);
+                x as u64
+            });
+            assert_eq!(got.len(), 900);
+            assert!(got.iter().enumerate().all(|(i, &v)| v == i as u64));
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 20 * 900);
     }
 
     #[test]

@@ -1,5 +1,12 @@
-//! Small statistics toolkit for benchmark reporting (criterion is
-//! unavailable offline; the bench harness in `util::bench` builds on this).
+//! Small statistics toolkit: batch summaries for benchmark reporting
+//! (criterion is unavailable offline; `util::bench` builds on this) and
+//! **streaming** quantile state for the fleet-scale serving artifacts —
+//! [`P2Quantile`] (the Jain–Chlamtac P² estimator, O(1) memory per
+//! tracked quantile) and [`Reservoir`] (Algorithm R sampling over the
+//! crate's deterministic [`Rng`](crate::util::rng::Rng)), merged across
+//! shards by [`weighted_percentile`]. Both are deterministic given the
+//! input order and seed, which is what lets `serve::fleet` emit
+//! byte-identical `lime-fleet-v1` artifacts at any worker count.
 
 /// Summary statistics over a sample of f64 observations.
 #[derive(Debug, Clone, PartialEq)]
@@ -63,6 +70,211 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 pub fn mean(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty());
     xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Streaming quantile estimator — the Jain & Chlamtac **P² algorithm**:
+/// five markers (min, two intermediates, the tracked quantile, max) whose
+/// heights are nudged by parabolic (or, when that overshoots, linear)
+/// interpolation as observations arrive. O(1) memory and O(1) work per
+/// observation, no samples retained — the state a fleet cell keeps per
+/// latency metric instead of a million-entry vector.
+///
+/// Exact while fewer than five observations have arrived; deterministic
+/// given the observation order (no randomness), so a sharded fleet run
+/// reproduces it bit-for-bit at any worker count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct P2Quantile {
+    q: f64,
+    /// Marker heights (h[2] is the running estimate once primed).
+    h: [f64; 5],
+    /// Actual marker positions (integers, kept as f64 for the formulas).
+    pos: [f64; 5],
+    desired: [f64; 5],
+    inc: [f64; 5],
+    count: usize,
+    /// Buffer for the first five observations.
+    init: [f64; 5],
+}
+
+impl P2Quantile {
+    /// Track the `q`-quantile, `0 < q < 1` (e.g. `0.99` for p99).
+    pub fn new(q: f64) -> P2Quantile {
+        assert!(q > 0.0 && q < 1.0, "quantile must be in (0, 1), got {q}");
+        P2Quantile {
+            q,
+            h: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            inc: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+            count: 0,
+            init: [0.0; 5],
+        }
+    }
+
+    /// The tracked quantile in (0, 1).
+    pub fn quantile(&self) -> f64 {
+        self.q
+    }
+
+    /// Observations seen so far.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Feed one observation.
+    pub fn push(&mut self, x: f64) {
+        if self.count < 5 {
+            self.init[self.count] = x;
+            self.count += 1;
+            if self.count == 5 {
+                let mut s = self.init;
+                s.sort_by(f64::total_cmp);
+                self.h = s;
+            }
+            return;
+        }
+        self.count += 1;
+        // Locate the cell k with h[k] <= x < h[k+1], clamping the
+        // extreme markers to the running min/max.
+        let k = if x < self.h[0] {
+            self.h[0] = x;
+            0
+        } else if x >= self.h[4] {
+            self.h[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            while k < 3 && x >= self.h[k + 1] {
+                k += 1;
+            }
+            k
+        };
+        for i in (k + 1)..5 {
+            self.pos[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.desired[i] += self.inc[i];
+        }
+        for i in 1..4 {
+            let off = self.desired[i] - self.pos[i];
+            if (off >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (off <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let d = off.signum();
+                let candidate = self.parabolic(i, d);
+                self.h[i] = if self.h[i - 1] < candidate && candidate < self.h[i + 1] {
+                    candidate
+                } else {
+                    self.linear(i, d)
+                };
+                self.pos[i] += d;
+            }
+        }
+    }
+
+    /// Piecewise-parabolic marker adjustment (P² eq. for h'_i).
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (hm, h, hp) = (self.h[i - 1], self.h[i], self.h[i + 1]);
+        let (nm, n, np) = (self.pos[i - 1], self.pos[i], self.pos[i + 1]);
+        h + d / (np - nm) * ((n - nm + d) * (hp - h) / (np - n) + (np - n - d) * (h - hm) / (n - nm))
+    }
+
+    /// Linear fallback when the parabola overshoots a neighbour.
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.h[i] + d * (self.h[j] - self.h[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current estimate. Exact below five observations; `NaN` when empty
+    /// (callers that may see empty shards must guard).
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if self.count < 5 {
+            let mut s: Vec<f64> = self.init[..self.count].to_vec();
+            s.sort_by(f64::total_cmp);
+            return percentile_sorted(&s, self.q * 100.0);
+        }
+        self.h[2]
+    }
+}
+
+/// Fixed-capacity uniform sample over an unbounded stream — **Algorithm
+/// R** reservoir sampling on the crate's deterministic
+/// [`Rng`](crate::util::rng::Rng). Each per-shard reservoir is seeded per
+/// (cell, shard) so a sharded fleet run is reproducible at any worker
+/// count; cross-shard quantiles come from [`weighted_percentile`] over
+/// the union of reservoirs.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    samples: Vec<f64>,
+    cap: usize,
+    seen: u64,
+    rng: crate::util::rng::Rng,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Reservoir {
+            samples: Vec::with_capacity(cap),
+            cap,
+            seen: 0,
+            rng: crate::util::rng::Rng::new(seed),
+        }
+    }
+
+    /// Feed one observation; O(1), never grows past the capacity.
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            let j = self.rng.below(self.seen);
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = x;
+            }
+        }
+    }
+
+    /// The retained sample (unsorted, insertion/replacement order).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Consume the reservoir, yielding the retained sample without a copy.
+    pub fn into_samples(self) -> Vec<f64> {
+        self.samples
+    }
+
+    /// Total observations fed (not the retained count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+}
+
+/// Percentile over weighted samples — e.g. the union of per-shard
+/// reservoirs, each sample carrying `shard_total / shard_sample_count`
+/// weight so shards of different sizes contribute proportionally. Sorts
+/// by value (stable, `total_cmp`) and walks the cumulative weight to the
+/// first sample at or past `p`% of the total: a deterministic
+/// step-function quantile, tolerance-tested against the exact sorted
+/// percentile. `p` is in percent (0–100) like [`percentile`].
+pub fn weighted_percentile(samples: &mut [(f64, f64)], p: f64) -> f64 {
+    assert!(!samples.is_empty(), "empty weighted sample");
+    assert!((0.0..=100.0).contains(&p));
+    samples.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let total: f64 = samples.iter().map(|s| s.1).sum();
+    let target = p / 100.0 * total;
+    let mut acc = 0.0;
+    for &(v, w) in samples.iter() {
+        acc += w;
+        if acc >= target {
+            return v;
+        }
+    }
+    samples[samples.len() - 1].0
 }
 
 /// Geometric mean (used for speedup aggregation across workloads).
@@ -129,5 +341,144 @@ mod tests {
         let s = summarize(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
         // Sample std-dev of this classic set is ~2.138.
         assert!((s.std_dev - 2.13809).abs() < 1e-4, "{}", s.std_dev);
+    }
+
+    use crate::util::rng::Rng;
+
+    /// Fuzzed observation streams from three distribution shapes:
+    /// uniform, heavy-tailed exponential, and bimodal.
+    fn fuzz_stream(seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(0xF1EE7 ^ seed.wrapping_mul(0x9E37_79B9));
+        let n = rng.range(300, 4000);
+        (0..n)
+            .map(|_| match seed % 3 {
+                0 => rng.f64(),
+                1 => rng.exponential(1.0),
+                _ => {
+                    if rng.chance(0.8) {
+                        rng.f64()
+                    } else {
+                        10.0 + rng.f64()
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Rank of `v` within `xs` as a fraction in [0, 1] — the tolerance
+    /// metric for quantile estimates (value-space error is unbounded on
+    /// heavy tails; rank-space error is what both estimators bound).
+    fn rank_of(xs: &[f64], v: f64) -> f64 {
+        xs.iter().filter(|&&x| x <= v).count() as f64 / xs.len() as f64
+    }
+
+    #[test]
+    fn p2_is_exact_below_five_observations() {
+        let mut est = P2Quantile::new(0.5);
+        for x in [3.0, 1.0, 2.0] {
+            est.push(x);
+        }
+        assert_eq!(est.value(), percentile(&[3.0, 1.0, 2.0], 50.0));
+        assert_eq!(est.count(), 3);
+        assert!(P2Quantile::new(0.9).value().is_nan(), "empty => NaN");
+    }
+
+    #[test]
+    fn p2_tracks_exact_quantiles_on_fuzzed_streams() {
+        for seed in 0..18u64 {
+            let xs = fuzz_stream(seed);
+            for q in [0.5, 0.95, 0.99] {
+                let mut est = P2Quantile::new(q);
+                for &x in &xs {
+                    est.push(x);
+                }
+                let rank = rank_of(&xs, est.value());
+                assert!(
+                    (rank - q).abs() <= 0.1 + 5.0 / xs.len() as f64,
+                    "seed {seed} q {q}: estimate {} sits at rank {rank} (n={})",
+                    est.value(),
+                    xs.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn p2_is_deterministic_and_monotone_across_quantiles() {
+        let xs = fuzz_stream(1);
+        let run = |q: f64| {
+            let mut est = P2Quantile::new(q);
+            for &x in &xs {
+                est.push(x);
+            }
+            est.value()
+        };
+        assert_eq!(run(0.95).to_bits(), run(0.95).to_bits(), "deterministic");
+        assert!(run(0.5) <= run(0.95) && run(0.95) <= run(0.99));
+    }
+
+    #[test]
+    fn reservoir_keeps_everything_under_capacity() {
+        let xs = [5.0, 1.0, 3.0];
+        let mut r = Reservoir::new(8, 42);
+        for &x in &xs {
+            r.push(x);
+        }
+        assert_eq!(r.samples(), &xs);
+        assert_eq!(r.seen(), 3);
+    }
+
+    #[test]
+    fn reservoir_is_deterministic_by_seed_and_capacity_bounded() {
+        let xs = fuzz_stream(2);
+        let sample = |seed: u64| {
+            let mut r = Reservoir::new(64, seed);
+            for &x in &xs {
+                r.push(x);
+            }
+            r.samples().to_vec()
+        };
+        assert_eq!(sample(7), sample(7));
+        assert_eq!(sample(7).len(), 64);
+        assert_ne!(sample(7), sample(8), "different seeds sample differently");
+    }
+
+    #[test]
+    fn reservoir_weighted_percentile_tracks_exact_on_fuzzed_streams() {
+        // The fleet merge shape: shard the stream, reservoir-sample each
+        // shard, weight each sample by shard_total / shard_sample_count,
+        // and take the weighted percentile of the union. Rank-space
+        // tolerance ~ a few sampling standard errors at cap 512.
+        for seed in 0..12u64 {
+            let xs = fuzz_stream(seed);
+            let shards: Vec<&[f64]> = xs.chunks(xs.len().div_ceil(3)).collect();
+            let mut union: Vec<(f64, f64)> = Vec::new();
+            for (si, shard) in shards.iter().enumerate() {
+                let mut r = Reservoir::new(512, 0xCAFE + si as u64);
+                for &x in shard.iter() {
+                    r.push(x);
+                }
+                let w = shard.len() as f64 / r.samples().len() as f64;
+                union.extend(r.samples().iter().map(|&v| (v, w)));
+            }
+            for (p, tol) in [(50.0, 0.12), (95.0, 0.06), (99.0, 0.03)] {
+                let v = weighted_percentile(&mut union, p);
+                let rank = rank_of(&xs, v);
+                assert!(
+                    (rank - p / 100.0).abs() <= tol + 5.0 / xs.len() as f64,
+                    "seed {seed} p {p}: merged estimate {v} at rank {rank}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_percentile_unweighted_matches_step_quantile() {
+        // With unit weights the walk lands on the classic step-function
+        // quantile of the sorted values.
+        let mut s: Vec<(f64, f64)> = [4.0, 1.0, 3.0, 2.0].iter().map(|&v| (v, 1.0)).collect();
+        assert_eq!(weighted_percentile(&mut s, 50.0), 2.0);
+        assert_eq!(weighted_percentile(&mut s, 100.0), 4.0);
+        assert_eq!(weighted_percentile(&mut s, 0.0), 1.0);
     }
 }

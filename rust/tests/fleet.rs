@@ -1,0 +1,87 @@
+//! Fleet determinism properties: the sharded pool run must serialize the
+//! `lime-fleet-v1` artifact byte-for-byte identically to the sequential
+//! reference at any worker count, and the artifact must round-trip
+//! through the parser and the strict validator. CI additionally runs the
+//! `lime fleet` CLI under `LIME_THREADS={1,4}` and byte-diffs the two
+//! artifact trees.
+
+use lime::serve::fleet::{
+    fleet_artifact_bytes, run_fleet_on, run_fleet_sequential, validate_fleet, FleetSpec,
+    RouterPolicy,
+};
+use lime::util::json::Json;
+use lime::util::pool::Pool;
+use lime::workload::Pattern;
+
+/// The demo fleet at integration-test scale: all four E3 subsets, every
+/// router and both patterns, but a short stream.
+fn small_demo() -> FleetSpec {
+    FleetSpec::demo(120, 2)
+}
+
+#[test]
+fn fleet_artifact_is_byte_identical_across_worker_counts() {
+    let spec = small_demo();
+    let reference = fleet_artifact_bytes(&spec, &run_fleet_sequential(&spec));
+    for workers in [1usize, 4] {
+        let pool = Pool::new(workers);
+        let bytes = fleet_artifact_bytes(&spec, &run_fleet_on(&spec, Some(&pool)));
+        assert_eq!(
+            bytes, reference,
+            "fleet artifact differs at {workers} workers"
+        );
+    }
+}
+
+#[test]
+fn demo_artifact_validates_and_round_trips() {
+    let spec = small_demo();
+    let cells = run_fleet_sequential(&spec);
+    let bytes = fleet_artifact_bytes(&spec, &cells);
+    let parsed = Json::parse(std::str::from_utf8(&bytes).unwrap()).expect("valid JSON");
+    let summary = validate_fleet(&parsed).expect("artifact validates");
+    assert_eq!(summary.schema, "lime-fleet-v1");
+    assert_eq!(summary.name, "e3-demo-fleet");
+    assert_eq!(summary.model, "Qwen3-32B");
+    assert_eq!(summary.clusters, 4);
+    assert_eq!(summary.cells, 6);
+    assert_eq!(summary.requests, 120);
+
+    // Every cell serves the whole stream; routing never drops requests.
+    for cell in &cells {
+        assert_eq!(cell.count, 120);
+        let shard_sum: usize = cell.shards.iter().map(|s| s.count).sum();
+        assert_eq!(shard_sum, 120);
+        assert!(cell.makespan > 0.0);
+        assert!(cell.ttft.mean > 0.0);
+        assert!(cell.ttft.p50 <= cell.ttft.p95 && cell.ttft.p95 <= cell.ttft.p99);
+    }
+}
+
+#[test]
+fn sparse_fleet_reports_zero_stats_on_idle_clusters() {
+    // Two round-robin requests across four clusters: half the shards are
+    // empty and must serialize as validator-clean zero stats, never NaN.
+    let mut spec = small_demo();
+    spec.count = 2;
+    spec.routers = vec![RouterPolicy::RoundRobin];
+    spec.patterns = vec![Pattern::Sporadic];
+    let cells = run_fleet_sequential(&spec);
+    assert_eq!(cells.len(), 1);
+    let cell = &cells[0];
+    assert_eq!(cell.count, 2);
+    let served: Vec<usize> = cell.shards.iter().map(|s| s.count).collect();
+    assert_eq!(served, vec![1, 1, 0, 0]);
+    for shard in &cell.shards[2..] {
+        assert_eq!(shard.makespan, 0.0);
+        assert_eq!(shard.ttft.sum, 0.0);
+        assert_eq!(shard.ttft.p99, 0.0);
+    }
+    let bytes = fleet_artifact_bytes(&spec, &cells);
+    assert!(
+        !std::str::from_utf8(&bytes).unwrap().contains("NaN"),
+        "artifact must never contain NaN"
+    );
+    let parsed = Json::parse(std::str::from_utf8(&bytes).unwrap()).unwrap();
+    validate_fleet(&parsed).expect("sparse artifact validates");
+}
