@@ -1,6 +1,6 @@
-"""Consumer for the Rust sweep artifacts (schemas ``lime-sweep-v2``,
-``lime-sweep-v3`` and ``lime-sweep-v4``; see ``docs/SWEEPS.md`` for the
-schema reference).
+"""Consumer for the Rust sweep artifacts (schemas ``lime-sweep-v2``
+through ``lime-sweep-v5``; see ``docs/SWEEPS.md`` for the schema
+reference).
 
 ``lime experiments --id sweep`` writes one ``SWEEP_<grid>.json`` per
 scenario matrix (lowmem settings + cluster-size subsets). This module
@@ -17,6 +17,10 @@ renders those artifacts into the paper's figure layouts:
 * :func:`fig_queueing_delay` — request-level serving metrics from the
   v4 arrival-process axis: per-stream-cell mean/max queueing delay,
   TTFT, and time-between-tokens (the §V-A continuous-serving view);
+* :func:`fig_recovery_latency` — the v5 device-churn axis: per churn
+  script and method, latency plus the re-plans fired, KV bytes
+  migrated, and recovery steps per Down event (``—`` when the run
+  ended degraded) — the LIME-vs-EdgeShard robustness comparison;
 * :func:`speedup_summary` — LIME's speedup over the best completing
   baseline per column (the paper's headline numbers).
 
@@ -45,7 +49,7 @@ import sys
 from dataclasses import dataclass
 from typing import Any
 
-SCHEMAS = ("lime-sweep-v2", "lime-sweep-v3", "lime-sweep-v4")
+SCHEMAS = ("lime-sweep-v2", "lime-sweep-v3", "lime-sweep-v4", "lime-sweep-v5")
 FLEET_SCHEMA = "lime-fleet-v1"
 
 
@@ -64,15 +68,27 @@ class Grid:
     def baseline_mem(self) -> str:
         return self.axes["mem_scenarios"][0]["label"]
 
+    @property
+    def baseline_churn(self) -> str:
+        """Label of the event-free churn script — v5 pins it at index 0;
+        pre-v5 artifacts carry no churn axis and every cell is fault-free."""
+        scripts = self.axes.get("churn_scripts")
+        return scripts[0]["label"] if scripts else "none"
+
+    def at_baseline_churn(self, cell: dict[str, Any]) -> bool:
+        return cell.get("churn", self.baseline_churn) == self.baseline_churn
+
     def baseline_cells(self) -> list[dict[str, Any]]:
         """Cells at the baseline axis point (auto seg, no pressure,
-        single-run arrival — pre-v4 artifacts carry no arrival key)."""
+        single-run arrival, no churn — pre-v4/v5 artifacts carry no
+        arrival/churn keys)."""
         return [
             c
             for c in self.cells
             if c["seg"] == "auto"
             and c["mem"] == self.baseline_mem
             and c.get("arrival", "single") == "single"
+            and self.at_baseline_churn(c)
         ]
 
     def lime_cells(self) -> list[dict[str, Any]]:
@@ -81,6 +97,14 @@ class Grid:
     def stream_cells(self) -> list[dict[str, Any]]:
         """v4 continuous-serving cells (non-null ``requests`` arrays)."""
         return [c for c in self.cells if c.get("requests")]
+
+    def churn_labels(self) -> list[str]:
+        """Labels of the event-carrying churn scripts (v5; empty pre-v5)."""
+        return [
+            s["label"]
+            for s in self.axes.get("churn_scripts", [])
+            if s.get("events")
+        ]
 
 
 def load_grid(path: str) -> Grid:
@@ -240,6 +264,7 @@ def fig_seg_curve(grid: Grid) -> str:
                 and c["pattern"] == pattern
                 and c["mem"] == grid.baseline_mem
                 and c.get("arrival", "single") == "single"
+                and grid.at_baseline_churn(c)
             }
             row = [f"{c_bw:g} Mbps / {pattern}"]
             for seg in segs:
@@ -273,6 +298,7 @@ def fig_memory_fluctuation(grid: Grid) -> str:
                 c["mem"] != label
                 or c["seg"] != "auto"
                 or c.get("arrival", "single") != "single"
+                or not grid.at_baseline_churn(c)
             ):
                 continue
             row = [
@@ -313,7 +339,12 @@ def fig_queueing_delay(grid: Grid) -> str:
 
     rows = []
     for c in grid.stream_cells():
-        if c["method"] != "lime" or c["seg"] != "auto" or c["mem"] != grid.baseline_mem:
+        if (
+            c["method"] != "lime"
+            or c["seg"] != "auto"
+            or c["mem"] != grid.baseline_mem
+            or not grid.at_baseline_churn(c)
+        ):
             continue
         req = c["requests"]
         qd, ttft, tbt = req["queueing_delay_s"], req["ttft_s"], req["tbt_s"]
@@ -336,6 +367,75 @@ def fig_queueing_delay(grid: Grid) -> str:
         "max qd (s)",
         "mean TTFT (s)",
         "mean TBT (ms)",
+    ]
+    out.append(_md_table(header, rows))
+    return "\n\n".join(out)
+
+
+def fig_recovery_latency(grid: Grid) -> str:
+    """The v5 device-churn view: for each event-carrying churn script,
+    every method that ran under it (LIME's adaptive family plus the
+    churn-capable EdgeShard baseline) at the baseline axis point — its
+    degraded-vs-baseline latency, the re-plans the fault fired, the KV
+    bytes migrated off the departing device (Eq. 8 volume model), and the
+    recovery steps per Down event, ``—`` when the run ended degraded.
+    This is the robustness comparison the churn axis exists for: LIME
+    re-plans around the fault while static partitions ride it out."""
+    out = [f"## {grid.grid} — recovery latency under device churn"]
+
+    def recovery(cell: dict[str, Any]) -> str:
+        steps = cell.get("recovery_steps")
+        if not steps:
+            return "-"
+        return ", ".join("—" if s is None else str(s) for s in steps)
+
+    def at_point(method: str, churn: str) -> list[dict[str, Any]]:
+        return [
+            c
+            for c in grid.cells
+            if c["method"] == method
+            and c.get("churn", grid.baseline_churn) == churn
+            and c["seg"] == "auto"
+            and c["mem"] == grid.baseline_mem
+            and c.get("arrival", "single") == "single"
+        ]
+
+    rows = []
+    for churn in grid.churn_labels():
+        for method in grid.axes["methods"]:
+            # Rigid baselines are pinned to the no-churn point, so this
+            # is empty for them and they drop out of the table.
+            for cell in at_point(method, churn):
+                base = next(
+                    (
+                        b
+                        for b in at_point(method, grid.baseline_churn)
+                        if b["bandwidth_mbps"] == cell["bandwidth_mbps"]
+                        and b["pattern"] == cell["pattern"]
+                    ),
+                    None,
+                )
+                rows.append(
+                    [
+                        churn,
+                        cell["method_name"],
+                        f"{cell['bandwidth_mbps']:g} Mbps / {cell['pattern']}",
+                        _fmt_cell(base) if base else "-",
+                        _fmt_cell(cell),
+                        _fmt_counter(cell, "replans_fired"),
+                        _fmt_counter(cell, "kv_migrated_bytes"),
+                        recovery(cell),
+                    ]
+                )
+    header = [
+        "churn script",
+        "method",
+        "column",
+        "baseline ms/token",
+        "churned ms/token",
+        "re-plans",
+        "KV migrated (B)",
+        "recovery (steps per Down)",
     ]
     out.append(_md_table(header, rows))
     return "\n\n".join(out)
@@ -463,6 +563,8 @@ def render_grid(grid: Grid) -> str:
     ]
     if grid.stream_cells():
         parts.append(fig_queueing_delay(grid))
+    if grid.churn_labels():
+        parts.append(fig_recovery_latency(grid))
     parts.append(speedup_summary(grid))
     return "\n\n".join(parts)
 

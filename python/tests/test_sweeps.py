@@ -1,8 +1,8 @@
-"""Consumer-side tests for the ``lime-sweep-v2``/``v3``/``v4``
-artifacts: loading, figure-layout rendering, the request-level serving
-table, and the speedup summary — against small hand-built grids
-mirroring what ``lime experiments --id sweep`` emits (v4) and what older
-checkouts emitted (v2/v3)."""
+"""Consumer-side tests for the ``lime-sweep-v2``..``v5`` artifacts:
+loading, figure-layout rendering, the request-level serving table, the
+device-churn recovery-latency table, and the speedup summary — against
+small hand-built grids mirroring what ``lime experiments --id sweep``
+emits (v5) and what older checkouts emitted (v2/v3/v4)."""
 
 import json
 
@@ -292,7 +292,102 @@ def test_v4_stream_cells_do_not_pollute_single_run_figures(sweep_dir_v4):
 def test_pre_v4_grids_render_without_serving_section(sweep_dir):
     g = figures.load_sweeps(str(sweep_dir))[0]
     assert g.stream_cells() == []
-    assert "request-level serving metrics" not in figures.render_grid(g)
+    assert g.churn_labels() == []
+    rendered = figures.render_grid(g)
+    assert "request-level serving metrics" not in rendered
+    assert "recovery latency" not in rendered
+
+
+@pytest.fixture
+def sweep_dir_v5(tmp_path):
+    """A minimal lime-sweep-v5 artifact: the device-churn axis with one
+    Down/Up blip, LIME recovering (re-plans, KV migrated, finite recovery
+    steps) and the churn-capable EdgeShard baseline riding the same fault
+    out degraded (a null recovery slot); the rigid pp baseline stays
+    pinned to the no-churn point."""
+
+    def v5_cell(method, name, churn, ms, replans=0, kv_mig=0, recovery=()):
+        cell = _cell(method, name, 200.0, "sporadic", "auto", "none", ms)
+        cell["bw_stalls"] = None if ms is None else 0
+        cell["arrival"] = "single"
+        cell["churn"] = churn
+        cell["replans_fired"] = None if ms is None else replans
+        cell["kv_migrated_bytes"] = None if ms is None else kv_mig
+        cell["recovery_steps"] = None if ms is None else list(recovery)
+        return cell
+
+    cells = [
+        v5_cell("lime", "LIME", "none", 100.0),
+        v5_cell("lime", "LIME", "blip-d1", 130.0, replans=2, kv_mig=4096, recovery=(3,)),
+        v5_cell("edgeshard", "EdgeShard", "none", 150.0),
+        v5_cell("edgeshard", "EdgeShard", "blip-d1", 210.0, recovery=(None,)),
+        v5_cell("pp", "Pipeline parallelism", "none", 250.0),
+    ]
+    doc = {
+        "schema": "lime-sweep-v5",
+        "grid": "v5grid",
+        "model": "Qwen3-32B",
+        "tokens": 12,
+        "bandwidths_mbps": [200.0],
+        "axes": {
+            "cluster": {"label": "v5grid", "devices": ["AGXOrin-64G", "XavierNX-16G"]},
+            "bandwidths_mbps": [200.0],
+            "patterns": ["sporadic"],
+            "methods": ["lime", "edgeshard", "pp"],
+            "segs": ["auto"],
+            "mem_scenarios": [{"label": "none", "events": []}],
+            "pressure_scripts": [{"label": "none", "mem_events": [], "bw_events": []}],
+            "arrivals": [{"label": "single", "kind": "single"}],
+            "churn_scripts": [
+                {"label": "none", "events": []},
+                {
+                    "label": "blip-d1",
+                    "events": [
+                        {"at_step": 4, "device": 1, "kind": "down"},
+                        {"at_step": 8, "device": 1, "kind": "up"},
+                    ],
+                },
+            ],
+        },
+        "cells": cells,
+    }
+    path = tmp_path / "SWEEP_v5grid.json"
+    path.write_text(json.dumps(doc))
+    return tmp_path
+
+
+def test_v5_artifact_loads_and_renders_recovery_table(sweep_dir_v5):
+    g = figures.load_sweeps(str(sweep_dir_v5))[0]
+    assert g.grid == "v5grid"
+    assert g.baseline_churn == "none"
+    assert g.churn_labels() == ["blip-d1"]
+    text = figures.fig_recovery_latency(g)
+    # LIME recovered: 2 re-plans, 4096 B migrated, 3 steps to recover,
+    # with the no-churn twin latency alongside the churned one.
+    assert "| 100.0 | 130.0 | 2 | 4096 | 3 |" in text
+    # EdgeShard rode the fault out: zero recovery machinery and a
+    # degraded (em-dash) recovery slot, never "None".
+    assert "| 150.0 | 210.0 | 0 | 0 | — |" in text
+    assert "None" not in text
+    # The rigid baseline is pinned to the no-churn point and drops out.
+    assert "Pipeline parallelism" not in text
+
+
+def test_v5_churned_cells_do_not_pollute_baseline_figures(sweep_dir_v5):
+    g = figures.load_sweeps(str(sweep_dir_v5))[0]
+    # Baseline point: 3 methods at (auto, none, single, no-churn).
+    assert len(g.baseline_cells()) == 3
+    text = figures.fig_latency_vs_bandwidth(g)
+    assert "100.0" in text and "150.0" in text and "250.0" in text
+    assert "130.0" not in text and "210.0" not in text
+    # Speedup compares fault-free cells only: 150/100 = 1.50x.
+    assert "1.50x" in figures.speedup_summary(g)
+
+
+def test_v5_render_grid_includes_recovery_section_once(sweep_dir_v5):
+    g = figures.load_sweeps(str(sweep_dir_v5))[0]
+    rendered = figures.render_grid(g)
+    assert rendered.count("recovery latency under device churn") == 1
 
 
 def test_render_grid_and_cli(sweep_dir, tmp_path, capsys):

@@ -178,6 +178,18 @@ impl KvTransferProtocol {
     }
 }
 
+/// KV bytes resident on device `i` for a context of `tokens` tokens — the
+/// volume churn migration ships over the shared link when `i` departs
+/// (its whole holding moves to survivors) or rejoins (survivors ship the
+/// KV its newly assigned layers need). Same per-token-per-layer unit as
+/// Eq. 8's denominator, so migrated volume and Eq. 8 shipments stay
+/// directly comparable in artifacts.
+pub fn resident_kv_bytes(alloc: &Allocation, i: usize, tokens: usize) -> u64 {
+    alloc.spec.kv_bytes_per_token_layer()
+        * alloc.devices[i].total_layers as u64
+        * tokens as u64
+}
+
 /// Eq. 8: KV tokens whose transfer hides the uncovered load of device `i`.
 pub fn eq8_tokens(
     alloc: &Allocation,
@@ -318,6 +330,22 @@ mod tests {
             let fresh = KvTransferProtocol::new(&alloc, &cluster, &planner, ctx, micro, mbps(bw));
             assert_eq!(used, fresh);
         }
+    }
+
+    #[test]
+    fn resident_kv_scales_with_layers_and_tokens() {
+        let (alloc, _, _, _) = setup(200.0);
+        let per = alloc.spec.kv_bytes_per_token_layer();
+        for (i, d) in alloc.devices.iter().enumerate() {
+            assert_eq!(
+                resident_kv_bytes(&alloc, i, 7),
+                per * d.total_layers as u64 * 7
+            );
+        }
+        // A 0-layer (churned-out) device holds nothing.
+        let mut gone = alloc.clone();
+        gone.devices[0].total_layers = 0;
+        assert_eq!(resident_kv_bytes(&gone, 0, 1000), 0);
     }
 
     #[test]

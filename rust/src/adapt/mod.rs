@@ -13,10 +13,12 @@
 //!   increases (lazy unless a threshold is imminent);
 //! * [`scripts`] — composable disturbance timelines ([`MemScenario`],
 //!   [`Script`]): single- and multi-device memory pressure (correlated
-//!   thermal dips with lag, staggered squeezes, recovery ramps) plus a
-//!   bandwidth event channel ([`BwEvent`]), consumed jointly by
+//!   thermal dips with lag, staggered squeezes, recovery ramps), a
+//!   bandwidth event channel ([`BwEvent`]), and a device-churn channel
+//!   ([`ChurnEvent`]: Down/Up faults triggering online re-planning and
+//!   KV migration), consumed jointly by
 //!   `pipeline::run_interleaved_scripted` and swept by
-//!   `experiments::scenario::ScenarioMatrix`'s pressure axis.
+//!   `experiments::scenario::ScenarioMatrix`'s pressure and churn axes.
 //!
 //! The planner and protocol are pure state machines: the discrete-event
 //! simulator and the real PJRT serving engine drive the same types.
@@ -25,6 +27,6 @@ pub mod kvtransfer;
 pub mod planner;
 pub mod scripts;
 
-pub use kvtransfer::{eq8_tokens, KvTransferProtocol, TransferState};
+pub use kvtransfer::{eq8_tokens, resident_kv_bytes, KvTransferProtocol, TransferState};
 pub use planner::{DeviceMemState, OffloadPlan, OnlinePlanner};
-pub use scripts::{BwEvent, MemEvent, MemScenario, Script, ScriptEvent};
+pub use scripts::{BwEvent, ChurnEvent, ChurnKind, MemEvent, MemScenario, Script, ScriptEvent};

@@ -184,10 +184,14 @@ impl OnlinePlanner {
     }
 
     /// Device with the largest next threshold — the preferred `d_target`.
+    /// Devices with no KV growth (`kv_per_token == 0`, i.e. zero assigned
+    /// layers — the shape churn re-plans give a departed device) are
+    /// skipped: they hold no model state, so they cannot receive KV.
     pub fn highest_threshold_device(&self) -> usize {
         (0..self.states.len())
+            .filter(|&i| self.states[i].kv_per_token > 0)
             .max_by_key(|&i| self.states[i].next_threshold)
-            .unwrap()
+            .unwrap_or(0)
     }
 }
 

@@ -16,13 +16,23 @@
 //!   effect before a decode step (`scale < 1` is a sag, `1.0` restores),
 //!   applied on top of whatever base [`crate::net::BandwidthTrace`] the
 //!   run uses so scripts compose with the sweep's bandwidth axis;
-//! * [`Script`] — a labelled joint timeline of both event kinds
+//! * [`ChurnEvent`] — a device leaving ([`ChurnKind::Down`]) or
+//!   rejoining ([`ChurnKind::Up`]) the cluster mid-stream, the
+//!   intermittent-participation regime of real edge fleets. The executor
+//!   core zeroes a down device's effective capacity; adaptive policies
+//!   re-plan onto the survivors and migrate the departed device's
+//!   resident KV (Eq. 8 volume over the shared link), non-adaptive
+//!   policies degrade honestly through their overflow fallbacks. At
+//!   fleet level the same events (with `device` read as a cluster index
+//!   and `at_step` as an arrival index) drain a dead cluster's queue
+//!   back through the router;
+//! * [`Script`] — a labelled joint timeline of all three event kinds
 //!   ([`ScriptEvent`]), consumed by
 //!   `pipeline::run_interleaved_scripted`: memory events shift effective
 //!   caps and the online planner's thresholds
 //!   (`OnlinePlanner::apply_pressure`), bandwidth events scale the link
-//!   capacity the Eq. 2 comm terms and Alg. 2's bandwidth monitor see —
-//!   in the same run.
+//!   capacity the Eq. 2 comm terms and Alg. 2's bandwidth monitor see,
+//!   churn events remove/restore whole devices — in the same run.
 //!
 //! Scripts are deterministic given their event lists, replayable at any
 //! worker count, and serialized verbatim into the `lime-sweep-v3` axis
@@ -57,11 +67,44 @@ pub struct BwEvent {
     pub scale: f64,
 }
 
+/// Direction of a churn event: a device leaving or rejoining.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ChurnKind {
+    /// The device drops out of the cluster (fault, battery, mobility).
+    Down,
+    /// The device rejoins the cluster.
+    Up,
+}
+
+impl ChurnKind {
+    /// Stable artifact name (`"down"` / `"up"`), used by sweep metadata.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChurnKind::Down => "down",
+            ChurnKind::Up => "up",
+        }
+    }
+}
+
+/// One scripted churn event: `device` goes [`ChurnKind::Down`] or comes
+/// back [`ChurnKind::Up`] before decode step `at_step`. At fleet level
+/// (`serve::fleet`), `device` is a cluster index and `at_step` an arrival
+/// index — the same timeline type drives both granularities.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChurnEvent {
+    /// Decode step (0-based) *before* which the event applies.
+    pub at_step: usize,
+    /// Device index in the cluster (cluster index at fleet level).
+    pub device: usize,
+    pub kind: ChurnKind,
+}
+
 /// One entry of a joint fluctuation timeline.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ScriptEvent {
     Mem(MemEvent),
     Bw(BwEvent),
+    Churn(ChurnEvent),
 }
 
 impl ScriptEvent {
@@ -70,6 +113,7 @@ impl ScriptEvent {
         match self {
             ScriptEvent::Mem(e) => e.at_step,
             ScriptEvent::Bw(e) => e.at_step,
+            ScriptEvent::Churn(e) => e.at_step,
         }
     }
 }
@@ -289,6 +333,10 @@ pub struct Script {
     /// Bandwidth channel, sorted by `at_step`; the latest event at or
     /// before a step wins.
     pub bw: Vec<BwEvent>,
+    /// Churn channel, sorted by `(at_step, device)`. Empty for every
+    /// pre-churn script shape — an empty channel is bit-identical to the
+    /// churn-free executor (property-tested in `rust/tests/churn.rs`).
+    pub churn: Vec<ChurnEvent>,
 }
 
 impl Script {
@@ -298,6 +346,7 @@ impl Script {
             label: "none".into(),
             mem: Vec::new(),
             bw: Vec::new(),
+            churn: Vec::new(),
         }
     }
 
@@ -308,6 +357,7 @@ impl Script {
             label: scenario.label,
             mem: scenario.events,
             bw: Vec::new(),
+            churn: Vec::new(),
         }
     }
 
@@ -318,6 +368,84 @@ impl Script {
             label: label.into(),
             mem: events,
             bw: Vec::new(),
+            churn: Vec::new(),
+        }
+    }
+
+    /// A single device fault window: `device` goes down before
+    /// `down_step` and rejoins before `up_step` — the transient-fault
+    /// shape every recovery experiment starts from.
+    ///
+    /// ```
+    /// use lime::adapt::{ChurnKind, Script};
+    /// let s = Script::device_down_up("fault-d1", 1, 8, 24);
+    /// assert_eq!(s.churn.len(), 2);
+    /// assert_eq!(s.churn[0].kind, ChurnKind::Down);
+    /// assert_eq!(s.churn[1].kind, ChurnKind::Up);
+    /// assert!(s.mem.is_empty() && s.bw.is_empty());
+    /// ```
+    pub fn device_down_up(label: &str, device: usize, down_step: usize, up_step: usize) -> Self {
+        assert!(down_step < up_step, "device must rejoin after it departs");
+        Script {
+            label: label.into(),
+            mem: Vec::new(),
+            bw: Vec::new(),
+            churn: vec![
+                ChurnEvent {
+                    at_step: down_step,
+                    device,
+                    kind: ChurnKind::Down,
+                },
+                ChurnEvent {
+                    at_step: up_step,
+                    device,
+                    kind: ChurnKind::Up,
+                },
+            ],
+        }
+    }
+
+    /// Rolling fleet churn: the k-th member of `members` goes down
+    /// before `down_step + k × stagger` and rejoins before
+    /// `up_step + k × stagger` (each keeps its outage duration) — the
+    /// cascading-outage shape, mirroring
+    /// [`MemScenario::correlated_dip`]'s lag semantics. At fleet level
+    /// `members` are cluster indices and steps are arrival indices.
+    ///
+    /// ```
+    /// use lime::adapt::Script;
+    /// let s = Script::fleet_churn("wave", &[0, 2], 3, 4, 10);
+    /// let steps: Vec<usize> = s.churn.iter().map(|e| e.at_step).collect();
+    /// assert_eq!(steps, vec![4, 7, 10, 13]);
+    /// ```
+    pub fn fleet_churn(
+        label: &str,
+        members: &[usize],
+        stagger: usize,
+        down_step: usize,
+        up_step: usize,
+    ) -> Self {
+        assert!(!members.is_empty(), "fleet churn needs members");
+        assert!(down_step < up_step, "members must rejoin after departing");
+        let mut churn = Vec::with_capacity(members.len() * 2);
+        for (k, &device) in members.iter().enumerate() {
+            churn.push(ChurnEvent {
+                at_step: down_step + k * stagger,
+                device,
+                kind: ChurnKind::Down,
+            });
+            churn.push(ChurnEvent {
+                at_step: up_step + k * stagger,
+                device,
+                kind: ChurnKind::Up,
+            });
+        }
+        churn.sort_by_key(|e| (e.at_step, e.device));
+        Script {
+            label: label.into(),
+            mem: Vec::new(),
+            bw: Vec::new(),
+            churn,
         }
     }
 
@@ -350,26 +478,32 @@ impl Script {
                     scale: 1.0,
                 },
             ],
+            churn: Vec::new(),
         }
     }
 
-    /// Build from a joint `(MemEvent | BwEvent)` timeline (events split
-    /// per channel; bandwidth events re-sorted by step, stably, so the
-    /// later entry of a same-step pair still wins).
+    /// Build from a joint `(MemEvent | BwEvent | ChurnEvent)` timeline
+    /// (events split per channel; bandwidth events re-sorted by step,
+    /// stably, so the later entry of a same-step pair still wins; churn
+    /// events re-sorted by `(at_step, device)`).
     pub fn from_events(label: &str, events: Vec<ScriptEvent>) -> Self {
         let mut mem = Vec::new();
         let mut bw = Vec::new();
+        let mut churn = Vec::new();
         for ev in events {
             match ev {
                 ScriptEvent::Mem(e) => mem.push(e),
                 ScriptEvent::Bw(e) => bw.push(e),
+                ScriptEvent::Churn(e) => churn.push(e),
             }
         }
         bw.sort_by_key(|e| e.at_step);
+        churn.sort_by_key(|e: &ChurnEvent| (e.at_step, e.device));
         Script {
             label: label.into(),
             mem,
             bw,
+            churn,
         }
     }
 
@@ -397,27 +531,55 @@ impl Script {
         self
     }
 
+    /// Add a device fault window to this script (joint-scenario
+    /// builder), keeping the current label — churn composed with the
+    /// mem/bw channels, e.g. a thermal dip plus a link sag plus a device
+    /// dropping out, all in one run.
+    ///
+    /// ```
+    /// use lime::adapt::{MemScenario, Script};
+    /// let joint = Script::from_mem(MemScenario::correlated_dip("c", &[0, 1], 2, 1024, 4, 10))
+    ///     .with_bandwidth_sag(0.5, 4, 12)
+    ///     .with_device_down_up(1, 6, 20)
+    ///     .with_label("dip-sag-fault");
+    /// assert!(!joint.mem.is_empty() && !joint.bw.is_empty() && !joint.churn.is_empty());
+    /// ```
+    pub fn with_device_down_up(mut self, device: usize, down_step: usize, up_step: usize) -> Self {
+        let fault = Script::device_down_up("fault", device, down_step, up_step);
+        self.churn.extend(fault.churn);
+        self.churn.sort_by_key(|e| (e.at_step, e.device));
+        self
+    }
+
     /// Rename the script (stable label used in sweep artifacts).
     pub fn with_label(mut self, label: &str) -> Self {
         self.label = label.into();
         self
     }
 
-    /// True when the script has no events on either channel.
+    /// True when the script has no events on any channel.
     pub fn is_none(&self) -> bool {
-        self.mem.is_empty() && self.bw.is_empty()
+        self.mem.is_empty() && self.bw.is_empty() && self.churn.is_empty()
     }
 
-    /// The joint timeline, sorted by step (memory before bandwidth within
-    /// a step) — the serialization/display order.
+    /// The joint timeline, sorted by step (memory, then bandwidth, then
+    /// churn within a step) — the serialization/display order.
     pub fn events(&self) -> Vec<ScriptEvent> {
         let mut out: Vec<ScriptEvent> = self
             .mem
             .iter()
             .map(|&e| ScriptEvent::Mem(e))
             .chain(self.bw.iter().map(|&e| ScriptEvent::Bw(e)))
+            .chain(self.churn.iter().map(|&e| ScriptEvent::Churn(e)))
             .collect();
-        out.sort_by_key(|e| (e.at_step(), matches!(e, ScriptEvent::Bw(_)) as u8));
+        out.sort_by_key(|e| {
+            let rank = match e {
+                ScriptEvent::Mem(_) => 0u8,
+                ScriptEvent::Bw(_) => 1,
+                ScriptEvent::Churn(_) => 2,
+            };
+            (e.at_step(), rank)
+        });
         out
     }
 
@@ -578,6 +740,106 @@ mod tests {
         );
         assert_eq!(s.mem.len(), 1);
         assert_eq!(s.bw_scale_points(), vec![(2, 0.5), (6, 1.0)]);
+    }
+
+    #[test]
+    fn device_down_up_orders_fault_then_recovery() {
+        let s = Script::device_down_up("f", 2, 5, 9);
+        assert_eq!(s.churn.len(), 2);
+        assert_eq!(
+            (s.churn[0].at_step, s.churn[0].device, s.churn[0].kind),
+            (5, 2, ChurnKind::Down)
+        );
+        assert_eq!(
+            (s.churn[1].at_step, s.churn[1].device, s.churn[1].kind),
+            (9, 2, ChurnKind::Up)
+        );
+        assert!(!s.is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn device_down_up_rejects_inverted_steps() {
+        Script::device_down_up("bad", 0, 7, 7);
+    }
+
+    #[test]
+    fn fleet_churn_staggers_and_restores_everyone() {
+        let s = Script::fleet_churn("wave", &[1, 3], 4, 2, 8);
+        assert_eq!(s.churn.len(), 4);
+        for &m in &[1usize, 3] {
+            let downs = s
+                .churn
+                .iter()
+                .filter(|e| e.device == m && e.kind == ChurnKind::Down)
+                .count();
+            let ups = s
+                .churn
+                .iter()
+                .filter(|e| e.device == m && e.kind == ChurnKind::Up)
+                .count();
+            assert_eq!((downs, ups), (1, 1), "member {m}");
+        }
+        assert!(s.churn.windows(2).all(|w| w[0].at_step <= w[1].at_step));
+    }
+
+    #[test]
+    fn churn_composes_with_mem_and_bw_channels() {
+        let joint = Script::from_mem(MemScenario::correlated_dip("c", &[0, 1], 2, 64, 4, 10))
+            .with_bandwidth_sag(0.5, 4, 12)
+            .with_device_down_up(1, 6, 20);
+        assert!(!joint.mem.is_empty());
+        assert!(!joint.bw.is_empty());
+        assert_eq!(joint.churn.len(), 2);
+        // Joint timeline keeps all three channels, step-ordered with
+        // mem < bw < churn within a step.
+        let evs = joint.events();
+        assert!(evs
+            .windows(2)
+            .all(|w| w[0].at_step() <= w[1].at_step()));
+        assert_eq!(
+            evs.len(),
+            joint.mem.len() + joint.bw.len() + joint.churn.len()
+        );
+    }
+
+    #[test]
+    fn from_events_splits_churn_channel_and_sorts_it() {
+        let s = Script::from_events(
+            "j",
+            vec![
+                ScriptEvent::Churn(ChurnEvent {
+                    at_step: 9,
+                    device: 0,
+                    kind: ChurnKind::Up,
+                }),
+                ScriptEvent::Mem(MemEvent {
+                    at_step: 2,
+                    device: 1,
+                    delta_bytes: -8,
+                }),
+                ScriptEvent::Churn(ChurnEvent {
+                    at_step: 3,
+                    device: 0,
+                    kind: ChurnKind::Down,
+                }),
+            ],
+        );
+        assert_eq!(s.mem.len(), 1);
+        assert_eq!(s.churn.len(), 2);
+        assert_eq!(s.churn[0].kind, ChurnKind::Down);
+        assert_eq!(s.churn[1].kind, ChurnKind::Up);
+    }
+
+    #[test]
+    fn empty_churn_channel_keeps_legacy_scripts_none_free() {
+        // Every pre-churn constructor must leave the churn channel empty
+        // (the executor's empty-channel fast path depends on it).
+        assert!(Script::none().churn.is_empty());
+        assert!(Script::from_mem(MemScenario::squeeze("s", 0, 8, 1)).churn.is_empty());
+        assert!(Script::bandwidth_sag("b", 0.5, 1, 2).churn.is_empty());
+        assert!(Script::from_mem_events("m", Vec::new()).churn.is_empty());
+        assert!(Script::from_events("e", Vec::new()).churn.is_empty());
     }
 
     #[test]

@@ -14,12 +14,13 @@
 
 pub mod edgeshard;
 
+use crate::adapt::Script;
 use crate::cluster::Cluster;
 use crate::model::ModelSpec;
 use crate::net::BandwidthTrace;
 use crate::pipeline::{
-    run_interleaved, run_tensor_parallel, run_traditional, ExecOptions, PlannerMode, SimResult,
-    TpOptions, TradOptions,
+    run_interleaved, run_tensor_parallel, run_traditional, run_traditional_scripted, ExecOptions,
+    PlannerMode, SimResult, TpOptions, TradOptions,
 };
 use crate::plan::allocation::{Allocation, DeviceAssignment};
 use crate::plan::{plan, PlanOptions};
@@ -69,6 +70,35 @@ pub trait Method: Sync {
     /// baseline (auto-seg, no-pressure) point.
     fn adaptive_exec(&self) -> Option<AdaptiveExec> {
         None
+    }
+
+    /// `true` when the scenario matrix should also expand this method
+    /// along its device-churn axis: the method runs under a scripted
+    /// churn timeline ([`Method::run_scripted`]) and degrades honestly
+    /// when a device drops mid-run. LIME-family methods are already
+    /// covered through `adaptive_exec`; among the baselines only
+    /// EdgeShard opts in — its static PP schedule keeps executing
+    /// against the zeroed device capacity, which is exactly the
+    /// degradation the recovery-latency artifacts compare LIME against.
+    fn churn_capable(&self) -> bool {
+        false
+    }
+
+    /// Run under a fluctuation [`Script`] (churn channel included).
+    /// Default: ignore the script and take the baseline measurement —
+    /// only [`Method::churn_capable`] methods override this.
+    fn run_scripted(
+        &self,
+        spec: &ModelSpec,
+        cluster: &Cluster,
+        bw: &BandwidthTrace,
+        pattern: Pattern,
+        tokens: usize,
+        trace: TraceMode,
+        script: &Script,
+    ) -> Outcome {
+        let _ = script;
+        self.run_mode(spec, cluster, bw, pattern, tokens, trace)
     }
 
     /// Run with an explicit [`TraceMode`]. Experiment grids pass
@@ -389,7 +419,11 @@ impl Method for EdgeShardMethod {
         "edgeshard"
     }
 
-    fn run_mode(
+    fn churn_capable(&self) -> bool {
+        true
+    }
+
+    fn run_scripted(
         &self,
         spec: &ModelSpec,
         cluster: &Cluster,
@@ -397,10 +431,17 @@ impl Method for EdgeShardMethod {
         pattern: Pattern,
         tokens: usize,
         trace: TraceMode,
+        script: &Script,
     ) -> Outcome {
         let micro = pattern.micro_batches(cluster);
-        match edgeshard::partition(spec, cluster, bw.mean_over(tokens.max(1)), tokens.max(128), micro) {
-            Some(alloc) => Outcome::Ok(run_traditional(
+        match edgeshard::partition(spec, cluster, bw.mean_over(tokens.max(1)), tokens.max(128), micro)
+        {
+            // The partition is static: a Down zeroes the device's capacity
+            // and EdgeShard pays overflow/recompute until the Up restores
+            // it — no re-planning, no KV migration. The executor core still
+            // records the recovery latency, which is the comparison the
+            // churn artifacts exist for.
+            Some(alloc) => Outcome::Ok(run_traditional_scripted(
                 &alloc,
                 cluster,
                 bw,
@@ -410,9 +451,22 @@ impl Method for EdgeShardMethod {
                     trace_mode: trace,
                     ..TradOptions::default()
                 },
+                script,
             )),
             None => Outcome::Oom("no memory-feasible partition".into()),
         }
+    }
+
+    fn run_mode(
+        &self,
+        spec: &ModelSpec,
+        cluster: &Cluster,
+        bw: &BandwidthTrace,
+        pattern: Pattern,
+        tokens: usize,
+        trace: TraceMode,
+    ) -> Outcome {
+        self.run_scripted(spec, cluster, bw, pattern, tokens, trace, &Script::none())
     }
 }
 

@@ -11,19 +11,22 @@
 //!
 //! The legacy (method × bandwidth × pattern) grid is the baseline slice of
 //! the composable [`scenario::ScenarioMatrix`], which adds cluster-size,
-//! `#Seg`-override, pressure (joint memory/bandwidth fluctuation script)
-//! and arrival-process (single run vs continuous queued stream, served
-//! through `serve::simqueue`) axes; the `--id sweep` experiment evaluates
-//! one matrix per cluster point and writes one `lime-sweep-v4` JSON each,
-//! with per-request queueing-delay/TTFT/TBT arrays on stream cells. See
+//! `#Seg`-override, pressure (joint memory/bandwidth fluctuation script),
+//! arrival-process (single run vs continuous queued stream, served
+//! through `serve::simqueue`) and device-churn (mid-stream Down/Up
+//! events with online re-planning and KV migration) axes; the
+//! `--id sweep` experiment evaluates one matrix per cluster point and
+//! writes one `lime-sweep-v5` JSON each, with per-request
+//! queueing-delay/TTFT/TBT arrays on stream cells and
+//! replans/KV-migration/recovery counters on churn cells. See
 //! `docs/ARCHITECTURE.md` for the module map and `docs/SWEEPS.md` for
 //! the artifact schemas.
 
 pub mod scenario;
 
 pub use scenario::{
-    validate_sweep, validate_sweep_v2, validate_sweep_v3, validate_sweep_v4, ArrivalSpec,
-    RequestLevel, ScenarioCell, ScenarioMatrix, SegChoice, SweepSummary,
+    validate_sweep, validate_sweep_v2, validate_sweep_v3, validate_sweep_v4, validate_sweep_v5,
+    ArrivalSpec, RequestLevel, ScenarioCell, ScenarioMatrix, SegChoice, SweepSummary,
 };
 
 use crate::adapt::{MemScenario, Script};
@@ -482,6 +485,21 @@ fn lowmem_pressure_axis(tokens: usize) -> Vec<Script> {
     ]
 }
 
+/// The device-churn axis shared by every sweep grid: the mandatory
+/// no-churn baseline plus a mid-stream Down/Up blip of the cluster's
+/// *last* device — the smallest-memory member in every sweep cluster, so
+/// the survivor prefix is never empty and usually still plannable. The
+/// event steps follow the pressure axis' thirds, so tiny CI horizons
+/// still fire both the failure and the recovery inside the run.
+fn churn_axis(cluster: &Cluster, tokens: usize) -> Vec<Script> {
+    let down = (tokens / 3).max(1);
+    let up = (2 * tokens / 3).max(down + 1);
+    vec![
+        Script::none(),
+        Script::device_down_up("blip-last", cluster.len() - 1, down, up),
+    ]
+}
+
 /// The stream point of the arrival axis for a cluster: twice the device
 /// count of queued requests (so bursty admissions always need at least
 /// two batches), Poisson rate 0.5 req/s on sporadic cells.
@@ -500,9 +518,10 @@ fn stream_arrivals(cluster: &Cluster) -> Vec<ArrivalSpec> {
 /// axis, plus cluster-size points — 2/3/4-device subsets of the
 /// heterogeneous E3 Jetson cluster (Qwen3-32B, the E2-scale model) — all
 /// with `#Seg`-override, pressure-script (correlated multi-device dips
-/// and joint bandwidth+memory scenarios included) and arrival-process
-/// (single run vs continuous 2·|D|-request stream) axes on the LIME
-/// family.
+/// and joint bandwidth+memory scenarios included), arrival-process
+/// (single run vs continuous 2·|D|-request stream) and device-churn
+/// (mid-stream Down/Up of the smallest device; the churn-capable
+/// EdgeShard baseline rides the axis too and degrades honestly) axes.
 fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMatrix<'_>> {
     let mut out = Vec::new();
     let spec70 = ModelSpec::llama33_70b();
@@ -513,6 +532,7 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
     ];
     for (label, cluster) in lowmem {
         let arrivals = stream_arrivals(&cluster);
+        let churn = churn_axis(&cluster, tokens);
         out.push(
             ScenarioMatrix::new(
                 label,
@@ -525,7 +545,8 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
             )
             .with_segs(vec![SegChoice::Auto, SegChoice::Fixed(4), SegChoice::Fixed(8)])
             .with_pressure(lowmem_pressure_axis(tokens))
-            .with_arrivals(arrivals),
+            .with_arrivals(arrivals)
+            .with_churn(churn),
         );
     }
 
@@ -548,6 +569,7 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
         let all_devices: Vec<usize> = (0..cluster.len()).collect();
         let corr = MemScenario::correlated_dip("corr-dip-all", &all_devices, 1, gib(2.0), down, up);
         let arrivals = stream_arrivals(&cluster);
+        let churn = churn_axis(&cluster, tokens);
         out.push(
             ScenarioMatrix::new(
                 label,
@@ -564,7 +586,8 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
                 Script::from_mem(dip),
                 Script::from_mem(corr),
             ])
-            .with_arrivals(arrivals),
+            .with_arrivals(arrivals)
+            .with_churn(churn),
         );
     }
     out
@@ -573,11 +596,13 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
 /// The `--id sweep` experiment: evaluate every scenario matrix —
 /// extremely-low-memory settings plus cluster-size points, each crossing
 /// bandwidth × pattern × method with `#Seg`-override, pressure-script
-/// (correlated multi-device dips, joint bandwidth+memory scenarios) and
-/// arrival-process (single run vs continuous queued stream) axes on the
-/// LIME family — on the work-stealing pool, and emit **one
-/// machine-readable JSON per grid** (schema `lime-sweep-v4`, validated by
-/// `lime sweep-check`) into `out_dir`. Returns the paths written; any I/O
+/// (correlated multi-device dips, joint bandwidth+memory scenarios),
+/// arrival-process (single run vs continuous queued stream) and
+/// device-churn (mid-stream Down/Up with online re-planning, KV
+/// migration and recovery-latency counters) axes — on the work-stealing
+/// pool, and emit **one machine-readable JSON per grid** (schema
+/// `lime-sweep-v5`, validated by `lime sweep-check`) into `out_dir`.
+/// Returns the paths written; any I/O
 /// failure is an error (the CLI exits non-zero), never a silently missing
 /// artifact.
 pub fn sweep(tokens: usize, out_dir: &str) -> anyhow::Result<Vec<std::path::PathBuf>> {
@@ -615,6 +640,33 @@ pub fn sweep(tokens: usize, out_dir: &str) -> anyhow::Result<Vec<std::path::Path
         written.push(path);
     }
     Ok(written)
+}
+
+/// Collect the artifacts `lime sweep-check --dir` validates: every
+/// `SWEEP_*.json` / `FLEET_*.json` directly under `dir`, sorted by path.
+/// An unreadable directory or an empty match set is an `Err` — zero
+/// artifacts is a failed check (the CLI exits 2), never a silent pass
+/// that would let a sweep which wrote nothing slip through CI.
+pub fn collect_sweep_artifacts(dir: &str) -> Result<Vec<std::path::PathBuf>, String> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("sweep-check: cannot read directory {dir}: {e}"))?;
+    let mut files: Vec<std::path::PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        // Only the artifacts sweep()/fleet write — a directory may also
+        // hold bench JSONs or other tooling output.
+        .filter(|p| {
+            p.extension().is_some_and(|ext| ext == "json")
+                && p.file_name().is_some_and(|n| {
+                    let n = n.to_string_lossy();
+                    n.starts_with("SWEEP_") || n.starts_with("FLEET_")
+                })
+        })
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        return Err("sweep-check: no SWEEP_*.json or FLEET_*.json artifacts found".into());
+    }
+    Ok(files)
 }
 
 /// Dispatch used by `lime experiments --id <id>`. `sweep_out` is the
@@ -701,7 +753,7 @@ mod tests {
     }
 
     #[test]
-    fn sweep_emits_one_valid_v4_json_per_grid() {
+    fn sweep_emits_one_valid_v5_json_per_grid() {
         use crate::util::json::Json;
         let dir = std::env::temp_dir().join(format!("lime_sweep_{}", std::process::id()));
         let out = dir.to_str().unwrap().to_string();
@@ -712,15 +764,20 @@ mod tests {
             let json = Json::parse(src.trim()).unwrap();
             let summary = validate_sweep(&json)
                 .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
-            assert_eq!(summary.schema, "lime-sweep-v4");
+            assert_eq!(summary.schema, "lime-sweep-v5");
             let lowmem = summary.grid.starts_with("lowmem");
             // lowmem: 1 LIME × 5bw × 2pat × 3seg × 5scripts × 2arrivals
-            //         + 6 baselines × 10.
+            //           × 2churn                                  = 600
+            //         + EdgeShard (churn-capable) 10 × 2churn     =  20
+            //         + 5 rigid baselines × 10                    =  50.
             // edge:   1 LIME × 2bw × 2pat × 3seg × 3scripts × 2arrivals
-            //         + 6 baselines × 4.
-            assert_eq!(summary.cells, if lowmem { 360 } else { 96 }, "{}", summary.grid);
+            //           × 2churn                                  = 144
+            //         + EdgeShard 4 × 2churn                      =   8
+            //         + 5 rigid baselines × 4                     =  20.
+            assert_eq!(summary.cells, if lowmem { 670 } else { 172 }, "{}", summary.grid);
             assert_eq!(summary.completed + summary.oom, summary.cells);
             let mut stream_with_requests = 0usize;
+            let mut churn_completed = 0usize;
             for cell in json.get("cells").unwrap().as_arr().unwrap() {
                 let key = cell.get("method").unwrap().as_str().unwrap();
                 let oom = cell.get("oom").unwrap().as_bool().unwrap();
@@ -741,10 +798,32 @@ mod tests {
                     );
                     stream_with_requests += 1;
                 }
+                // Churn cells that completed must carry the robustness
+                // counters (recovery slots, replans, migrated KV bytes).
+                let churn = cell.get("churn").unwrap().as_str().unwrap();
+                if churn != "none" && !oom {
+                    assert!(
+                        cell.get("recovery_steps").unwrap().as_arr().is_some(),
+                        "{}: churn cell without recovery slots: {cell}",
+                        path.display()
+                    );
+                    assert!(
+                        cell.get("replans_fired").unwrap().as_u64().is_some()
+                            && cell.get("kv_migrated_bytes").unwrap().as_u64().is_some(),
+                        "{}: churn cell without counters: {cell}",
+                        path.display()
+                    );
+                    churn_completed += 1;
+                }
             }
             assert!(
                 stream_with_requests > 0,
                 "{}: no completed stream cells",
+                path.display()
+            );
+            assert!(
+                churn_completed > 0,
+                "{}: no completed churn cells",
                 path.display()
             );
         }
@@ -764,6 +843,10 @@ mod tests {
         let lowmem1 = &matrices[0];
         assert!(lowmem1.segs.len() == 3 && lowmem1.pressure.len() == 5);
         assert_eq!(lowmem1.arrivals.len(), 2);
+        // Churn axis: the no-churn baseline plus one last-device blip.
+        assert_eq!(lowmem1.churn.len(), 2);
+        assert!(lowmem1.churn[0].churn.is_empty());
+        assert!(!lowmem1.churn[1].churn.is_empty());
         assert!(matches!(
             lowmem1.arrivals[1],
             ArrivalSpec::Stream { count, .. } if count == 2 * lowmem1.cluster.len()
@@ -781,6 +864,26 @@ mod tests {
         assert!(cells.iter().any(|c| c.mem == "squeeze-d0"));
         assert!(cells.iter().any(|c| c.mem == "corr-dip-d01"));
         assert!(cells.iter().any(|c| c.mem == "joint-sag-squeeze-d0"));
+        // Churn cells fire the Down/Up blip: every completed one records a
+        // recovery slot, and LIME really migrates the departed KV.
+        let churned: Vec<_> = cells
+            .iter()
+            .filter(|c| c.churn == "blip-last" && c.ms_per_token.is_some())
+            .collect();
+        assert!(!churned.is_empty(), "no completed churn cells");
+        for c in &churned {
+            assert_eq!(
+                c.recovery_steps.as_ref().map(|r| r.len()),
+                Some(1),
+                "one Down event, one recovery slot"
+            );
+        }
+        assert!(
+            churned
+                .iter()
+                .any(|c| c.method_key == "lime" && c.kv_migrated_bytes.unwrap_or(0) > 0),
+            "LIME never migrated KV under churn"
+        );
         // Stream cells exist under BOTH arrival patterns and carry
         // per-request metrics (the continuous-serving acceptance shape).
         for pattern in [Pattern::Sporadic, Pattern::Bursty] {
@@ -802,6 +905,34 @@ mod tests {
                 m.grid
             );
         }
+    }
+
+    #[test]
+    fn collect_sweep_artifacts_guards_the_empty_directory() {
+        let dir = std::env::temp_dir().join(format!("lime_collect_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let d = dir.to_str().unwrap();
+        // Unreadable directory: a distinct, descriptive error.
+        let missing = dir.join("nope");
+        let err = collect_sweep_artifacts(missing.to_str().unwrap()).unwrap_err();
+        assert!(err.contains("cannot read directory"), "{err}");
+        // A directory with only decoys counts as ZERO artifacts — that is
+        // the regression this guard exists for (sweep wrote nothing, or
+        // the glob drifted), so it must be an error, not an empty Ok.
+        std::fs::write(dir.join("bench.json"), "{}").unwrap();
+        std::fs::write(dir.join("SWEEP_notes.txt"), "").unwrap();
+        let err = collect_sweep_artifacts(d).unwrap_err();
+        assert!(err.contains("no SWEEP_*.json or FLEET_*.json"), "{err}");
+        // Real artifacts are picked up sorted; decoys stay excluded.
+        std::fs::write(dir.join("SWEEP_g.json"), "{}").unwrap();
+        std::fs::write(dir.join("FLEET_f.json"), "{}").unwrap();
+        let files = collect_sweep_artifacts(d).unwrap();
+        let names: Vec<_> = files
+            .iter()
+            .map(|p| p.file_name().unwrap().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, ["FLEET_f.json", "SWEEP_g.json"]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -28,6 +28,13 @@
 //!   admission batches are capped at the pattern's micro-batch count.
 //!   Stream cells carry request-level metric arrays (queueing delay,
 //!   TTFT, time between tokens).
+//! * **device churn** — churn-only [`Script`]s (Down/Up faults on the
+//!   stream step timeline) composed with the pressure axis per cell.
+//!   Adaptive methods re-plan onto the survivors and migrate departed KV
+//!   (cells record `replans_fired`, `kv_migrated_bytes` and per-fault
+//!   `recovery_steps`); the churn-capable EdgeShard baseline expands
+//!   along this axis alone and degrades without re-planning — the
+//!   recovery-latency comparison the churn artifacts exist for.
 //!
 //! The override axes only have meaning for methods that plan offline and
 //! adapt online (the LIME family — [`Method::adaptive_exec`] returns
@@ -39,13 +46,14 @@
 //! work-stealing pool with results written by index —
 //! [`ScenarioMatrix::eval`] is bit-identical to
 //! [`ScenarioMatrix::eval_sequential`] at any worker count (pinned in
-//! `rust/tests/pool.rs`). Artifacts serialize as schema `lime-sweep-v4`,
-//! a strict superset of `lime-sweep-v3` (which was a strict superset of
-//! v2): every v3 key keeps its meaning, plus the `axes.arrivals` metadata,
-//! a per-cell `arrival` coordinate, and per-cell `requests` metric arrays
-//! (null on single-run and OOM cells); [`validate_sweep`] accepts v2, v3
-//! and v4 and is the machine check behind `lime sweep-check` and the CI
-//! artifact gate. See `docs/SWEEPS.md` for the full schema reference.
+//! `rust/tests/pool.rs`). Artifacts serialize as schema `lime-sweep-v5`,
+//! a strict superset of `lime-sweep-v4` (itself a strict superset of
+//! v3/v2): every v4 key keeps its meaning, plus the `axes.churn_scripts`
+//! metadata, a per-cell `churn` coordinate, and the per-cell
+//! `replans_fired`/`kv_migrated_bytes`/`recovery_steps` churn counters;
+//! [`validate_sweep`] accepts v2 through v5 and is the machine check
+//! behind `lime sweep-check` and the CI artifact gate. See
+//! `docs/SWEEPS.md` for the full schema reference.
 
 use crate::adapt::{MemScenario, Script};
 use crate::baselines::{by_name, plan_opts, Method};
@@ -154,6 +162,9 @@ pub struct ScenarioCell {
     /// Label of the [`ArrivalSpec`] this cell ran under (`"single"` for
     /// the legacy one-run point).
     pub arrival: String,
+    /// Label of the churn [`Script`] this cell ran under (`"none"` for the
+    /// baseline point).
+    pub churn: String,
     /// `#Seg` of the allocation actually executed (None for baseline
     /// methods and OOM cells).
     pub planned_seg: Option<usize>,
@@ -167,6 +178,16 @@ pub struct ScenarioCell {
     /// Link acquisitions that waited on the busy shared medium — inflated
     /// by scripted bandwidth sags.
     pub bw_stalls: Option<u64>,
+    /// Online re-plans fired by churn events (Down re-plans onto the
+    /// survivors, Up re-expansions). Zero for methods that cannot re-plan.
+    pub replans_fired: Option<usize>,
+    /// KV-cache bytes migrated off departing (and back onto rejoining)
+    /// devices over the Eq. 8 volume model.
+    pub kv_migrated_bytes: Option<u64>,
+    /// Per-`Down`-fault recovery latency in steps (step time back within
+    /// tolerance of the pre-fault baseline); `None` entries are faults the
+    /// run never recovered from.
+    pub recovery_steps: Option<Vec<Option<usize>>>,
     /// Request-level metrics — `Some` exactly on completed stream cells.
     pub requests: Option<RequestLevel>,
 }
@@ -209,6 +230,11 @@ pub struct ScenarioMatrix<'a> {
     pub pressure: Vec<Script>,
     /// The arrival-process axis: single batched run vs queued streams.
     pub arrivals: Vec<ArrivalSpec>,
+    /// The device-churn axis: churn-only scripts (Down/Up faults on the
+    /// stream step timeline). Composed with the pressure axis per cell for
+    /// adaptive methods; churn-capable baselines (EdgeShard) expand along
+    /// this axis alone.
+    pub churn: Vec<Script>,
     pub tokens: usize,
 }
 
@@ -228,6 +254,7 @@ struct PointRef {
     si: usize,
     mj: usize,
     ai: usize,
+    ci: usize,
 }
 
 impl<'a> ScenarioMatrix<'a> {
@@ -252,6 +279,7 @@ impl<'a> ScenarioMatrix<'a> {
             segs: vec![SegChoice::Auto],
             pressure: vec![Script::none()],
             arrivals: vec![ArrivalSpec::Single],
+            churn: vec![Script::none()],
             tokens,
         }
     }
@@ -283,6 +311,17 @@ impl<'a> ScenarioMatrix<'a> {
     /// [`ArrivalSpec::Single`], the baseline point).
     pub fn with_arrivals(mut self, arrivals: Vec<ArrivalSpec>) -> Self {
         self.arrivals = arrivals;
+        self.assert_valid();
+        self
+    }
+
+    /// Replace the device-churn axis. Scripts must be churn-only (memory
+    /// and bandwidth pressure compose on the pressure axis), the first
+    /// entry must have no events (the baseline point), and no prefix of
+    /// any script's timeline may leave the cluster without a surviving
+    /// device.
+    pub fn with_churn(mut self, churn: Vec<Script>) -> Self {
+        self.churn = churn;
         self.assert_valid();
         self
     }
@@ -349,36 +388,90 @@ impl<'a> ScenarioMatrix<'a> {
                     ev.scale
                 );
             }
+            assert!(
+                script.churn.is_empty(),
+                "pressure scenario '{}' carries churn events — put them on the churn axis",
+                script.label
+            );
+        }
+        assert!(
+            self.churn.first().is_some_and(|s| s.churn.is_empty()),
+            "churn[0] must have no churn events (the baseline point)"
+        );
+        let mut churn_labels = std::collections::BTreeSet::new();
+        for script in &self.churn {
+            assert!(
+                churn_labels.insert(script.label.as_str()),
+                "duplicate churn script '{}'",
+                script.label
+            );
+            assert!(
+                script.mem.is_empty() && script.bw.is_empty(),
+                "churn script '{}' carries pressure events — put them on the pressure axis",
+                script.label
+            );
+            // Every prefix of the timeline must leave a survivor: the
+            // executor core treats losing the last device as a structured
+            // error, and the stream driver relies on this check to unwrap.
+            let mut down = vec![false; self.cluster.len()];
+            for ev in &script.churn {
+                assert!(
+                    ev.device < self.cluster.len(),
+                    "churn script '{}' addresses device {} of a {}-device cluster",
+                    script.label,
+                    ev.device,
+                    self.cluster.len()
+                );
+                match ev.kind {
+                    crate::adapt::ChurnKind::Down => down[ev.device] = true,
+                    crate::adapt::ChurnKind::Up => down[ev.device] = false,
+                }
+                assert!(
+                    down.iter().any(|d| !d),
+                    "churn script '{}' leaves no surviving device at step {}",
+                    script.label,
+                    ev.at_step
+                );
+            }
         }
     }
 
     /// Cell coordinates in deterministic (index) order: methods outermost,
-    /// then bandwidths, patterns, and — for adaptive methods only — the
-    /// seg, pressure and arrival axes. With singleton override axes this
-    /// is exactly the legacy grid's job order.
+    /// then bandwidths, patterns, and — for adaptive methods — the seg,
+    /// pressure, arrival and churn axes. Churn-capable baselines
+    /// (EdgeShard) expand along the churn axis only; other baselines stay
+    /// on the single baseline point. With singleton override axes this is
+    /// exactly the legacy grid's job order.
     fn points(&self) -> Vec<PointRef> {
         let mut pts = Vec::new();
         for mi in 0..self.methods.len() {
             let adaptive = self.methods[mi].adaptive_exec().is_some();
+            let churny = self.methods[mi].churn_capable();
             for bi in 0..self.bandwidths_mbps.len() {
                 for pi in 0..self.patterns.len() {
                     if adaptive {
                         for si in 0..self.segs.len() {
                             for mj in 0..self.pressure.len() {
                                 for ai in 0..self.arrivals.len() {
-                                    pts.push(PointRef { mi, bi, pi, si, mj, ai });
+                                    for ci in 0..self.churn.len() {
+                                        pts.push(PointRef { mi, bi, pi, si, mj, ai, ci });
+                                    }
                                 }
                             }
                         }
                     } else {
-                        pts.push(PointRef {
-                            mi,
-                            bi,
-                            pi,
-                            si: 0,
-                            mj: 0,
-                            ai: 0,
-                        });
+                        let churn_pts = if churny { self.churn.len() } else { 1 };
+                        for ci in 0..churn_pts {
+                            pts.push(PointRef {
+                                mi,
+                                bi,
+                                pi,
+                                si: 0,
+                                mj: 0,
+                                ai: 0,
+                                ci,
+                            });
+                        }
                     }
                 }
             }
@@ -388,14 +481,22 @@ impl<'a> ScenarioMatrix<'a> {
 
     /// Total cells this matrix evaluates.
     pub fn cell_count(&self) -> usize {
-        let adaptive = self
-            .methods
-            .iter()
-            .filter(|m| m.adaptive_exec().is_some())
-            .count();
         let base = self.bandwidths_mbps.len() * self.patterns.len();
-        adaptive * base * self.segs.len() * self.pressure.len() * self.arrivals.len()
-            + (self.methods.len() - adaptive) * base
+        self.methods
+            .iter()
+            .map(|m| {
+                if m.adaptive_exec().is_some() {
+                    base * self.segs.len()
+                        * self.pressure.len()
+                        * self.arrivals.len()
+                        * self.churn.len()
+                } else if m.churn_capable() {
+                    base * self.churn.len()
+                } else {
+                    base
+                }
+            })
+            .sum()
     }
 
     /// Evaluate every cell on the work-stealing pool. Results are written
@@ -476,30 +577,52 @@ impl<'a> ScenarioMatrix<'a> {
                 seg: self.segs[p.si],
                 mem: self.pressure[p.mj].label.clone(),
                 arrival: self.arrivals[p.ai].label(),
+                churn: self.churn[p.ci].label.clone(),
                 planned_seg: None,
                 ms_per_token: None,
                 online_plans_fired: None,
                 kv_tokens_transferred: None,
                 emergency_steps: None,
                 bw_stalls: None,
+                replans_fired: None,
+                kv_migrated_bytes: None,
+                recovery_steps: None,
                 requests: None,
+            };
+            // The script a cell actually runs: the pressure script with the
+            // churn point's fault timeline spliced onto its churn channel
+            // (both axes are validated to own disjoint channels).
+            let combined_storage;
+            let script: &Script = if self.churn[p.ci].churn.is_empty() {
+                &self.pressure[p.mj]
+            } else {
+                let mut s = self.pressure[p.mj].clone();
+                s.churn.extend(self.churn[p.ci].churn.iter().cloned());
+                s.churn.sort_by_key(|e| (e.at_step, e.device));
+                combined_storage = s;
+                &combined_storage
             };
             match method.adaptive_exec() {
                 None => {
-                    // Baseline method at the matrix's baseline point.
-                    if let crate::baselines::Outcome::Ok(r) = method.run_mode(
+                    // Baseline method at its baseline point — churn-capable
+                    // baselines additionally run each churn timeline.
+                    if let crate::baselines::Outcome::Ok(r) = method.run_scripted(
                         &self.spec,
                         &self.cluster,
                         &trace,
                         pattern,
                         self.tokens,
                         TraceMode::Off,
+                        script,
                     ) {
                         cell.ms_per_token = Some(r.ms_per_token());
                         cell.online_plans_fired = Some(r.online_plans_fired);
                         cell.kv_tokens_transferred = Some(r.kv_tokens_transferred);
                         cell.emergency_steps = Some(r.emergency_steps);
                         cell.bw_stalls = Some(r.bw_stalls);
+                        cell.replans_fired = Some(r.replans_fired);
+                        cell.kv_migrated_bytes = Some(r.kv_migrated_bytes);
+                        cell.recovery_steps = Some(r.recovery_steps.clone());
                     }
                 }
                 Some(cfg) => {
@@ -524,7 +647,7 @@ impl<'a> ScenarioMatrix<'a> {
                                     pattern.micro_batches(&self.cluster),
                                     self.tokens,
                                     &exec,
-                                    &self.pressure[p.mj],
+                                    script,
                                 );
                                 cell.planned_seg = Some(alloc.seg);
                                 cell.ms_per_token = Some(r.ms_per_token());
@@ -532,6 +655,9 @@ impl<'a> ScenarioMatrix<'a> {
                                 cell.kv_tokens_transferred = Some(r.kv_tokens_transferred);
                                 cell.emergency_steps = Some(r.emergency_steps);
                                 cell.bw_stalls = Some(r.bw_stalls);
+                                cell.replans_fired = Some(r.replans_fired);
+                                cell.kv_migrated_bytes = Some(r.kv_migrated_bytes);
+                                cell.recovery_steps = Some(r.recovery_steps.clone());
                             }
                             ArrivalSpec::Stream { count, lambda } => {
                                 let reqs = stream_requests(
@@ -548,7 +674,7 @@ impl<'a> ScenarioMatrix<'a> {
                                     &trace,
                                     pattern.micro_batches(&self.cluster),
                                     &exec,
-                                    &self.pressure[p.mj],
+                                    script,
                                     &reqs,
                                 );
                                 cell.planned_seg = Some(alloc.seg);
@@ -557,6 +683,9 @@ impl<'a> ScenarioMatrix<'a> {
                                 cell.kv_tokens_transferred = Some(sr.kv_tokens_transferred);
                                 cell.emergency_steps = Some(sr.emergency_steps);
                                 cell.bw_stalls = Some(sr.bw_stalls);
+                                cell.replans_fired = Some(sr.replans_fired);
+                                cell.kv_migrated_bytes = Some(sr.kv_migrated_bytes);
+                                cell.recovery_steps = Some(sr.recovery_steps.clone());
                                 cell.requests = Some(RequestLevel {
                                     queueing_delay_s: sr
                                         .requests
@@ -580,13 +709,13 @@ impl<'a> ScenarioMatrix<'a> {
         }
     }
 
-    /// Serialize evaluated cells as a `lime-sweep-v4` artifact — a strict
-    /// superset of `lime-sweep-v3` (itself a strict superset of v2): every
-    /// v3 key is present with its meaning (`axes.mem_scenarios` carries
-    /// each script's memory channel, `axes.pressure_scripts` the full
-    /// joint-script metadata, `bw_stalls` the per-cell stall counter),
-    /// plus `axes.arrivals`, the per-cell `arrival` coordinate, and the
-    /// per-cell `requests` metric arrays (null on single-run/OOM cells).
+    /// Serialize evaluated cells as a `lime-sweep-v5` artifact — a strict
+    /// superset of `lime-sweep-v4` (itself a strict superset of v3/v2):
+    /// every v4 key is present with its meaning, plus `axes.churn_scripts`,
+    /// the per-cell `churn` coordinate, and the per-cell `replans_fired`,
+    /// `kv_migrated_bytes` and `recovery_steps` churn counters (null iff
+    /// OOM; `recovery_steps` entries are step counts or null for faults the
+    /// run never recovered from).
     pub fn to_json(&self, cells: &[ScenarioCell]) -> Json {
         self.assert_valid();
         let cell_rows: Vec<Json> = cells
@@ -603,6 +732,14 @@ impl<'a> ScenarioMatrix<'a> {
                         ])
                     }
                 };
+                let recovery = match &c.recovery_steps {
+                    None => Json::Null,
+                    Some(v) => Json::Arr(
+                        v.iter()
+                            .map(|r| r.map_or(Json::Null, Into::into))
+                            .collect(),
+                    ),
+                };
                 obj(&[
                     ("method", c.method_key.into()),
                     ("method_name", c.method.into()),
@@ -611,6 +748,7 @@ impl<'a> ScenarioMatrix<'a> {
                     ("seg", c.seg.json()),
                     ("mem", c.mem.as_str().into()),
                     ("arrival", c.arrival.as_str().into()),
+                    ("churn", c.churn.as_str().into()),
                     (
                         "planned_seg",
                         c.planned_seg.map_or(Json::Null, Into::into),
@@ -634,6 +772,15 @@ impl<'a> ScenarioMatrix<'a> {
                         c.emergency_steps.map_or(Json::Null, Into::into),
                     ),
                     ("bw_stalls", c.bw_stalls.map_or(Json::Null, Into::into)),
+                    (
+                        "replans_fired",
+                        c.replans_fired.map_or(Json::Null, Into::into),
+                    ),
+                    (
+                        "kv_migrated_bytes",
+                        c.kv_migrated_bytes.map_or(Json::Null, Into::into),
+                    ),
+                    ("recovery_steps", recovery),
                     ("requests", requests),
                 ])
             })
@@ -728,9 +875,34 @@ impl<'a> ScenarioMatrix<'a> {
                 "arrivals",
                 Json::Arr(self.arrivals.iter().map(ArrivalSpec::json).collect()),
             ),
+            (
+                "churn_scripts",
+                Json::Arr(
+                    self.churn
+                        .iter()
+                        .map(|script| {
+                            let events: Vec<Json> = script
+                                .churn
+                                .iter()
+                                .map(|ev| {
+                                    obj(&[
+                                        ("at_step", ev.at_step.into()),
+                                        ("device", ev.device.into()),
+                                        ("kind", ev.kind.name().into()),
+                                    ])
+                                })
+                                .collect();
+                            obj(&[
+                                ("label", script.label.as_str().into()),
+                                ("events", Json::Arr(events)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ]);
         obj(&[
-            ("schema", "lime-sweep-v4".into()),
+            ("schema", "lime-sweep-v5".into()),
             ("grid", self.grid.as_str().into()),
             ("model", self.spec.name.as_str().into()),
             ("tokens", self.tokens.into()),
@@ -749,8 +921,8 @@ impl<'a> ScenarioMatrix<'a> {
 pub struct SweepSummary {
     pub grid: String,
     pub model: String,
-    /// The schema version the artifact validated against ("lime-sweep-v2"
-    /// or "lime-sweep-v3").
+    /// The schema version the artifact validated against
+    /// ("lime-sweep-v2" .. "lime-sweep-v5").
     pub schema: String,
     pub cells: usize,
     pub completed: usize,
@@ -770,6 +942,7 @@ enum SweepSchema {
     V2,
     V3,
     V4,
+    V5,
 }
 
 impl SweepSchema {
@@ -778,20 +951,22 @@ impl SweepSchema {
             SweepSchema::V2 => "lime-sweep-v2",
             SweepSchema::V3 => "lime-sweep-v3",
             SweepSchema::V4 => "lime-sweep-v4",
+            SweepSchema::V5 => "lime-sweep-v5",
         }
     }
 }
 
 /// Validate one artifact against whichever supported schema it declares
-/// (`lime-sweep-v2`, `lime-sweep-v3` or `lime-sweep-v4`) — the check
-/// behind `lime sweep-check` and the CI artifact gate.
+/// (`lime-sweep-v2` through `lime-sweep-v5`) — the check behind
+/// `lime sweep-check` and the CI artifact gate.
 pub fn validate_sweep(json: &Json) -> Result<SweepSummary, String> {
     match json.get("schema").and_then(Json::as_str) {
         Some("lime-sweep-v2") => validate_sweep_impl(json, SweepSchema::V2),
         Some("lime-sweep-v3") => validate_sweep_impl(json, SweepSchema::V3),
         Some("lime-sweep-v4") => validate_sweep_impl(json, SweepSchema::V4),
+        Some("lime-sweep-v5") => validate_sweep_impl(json, SweepSchema::V5),
         other => Err(format!(
-            "expected schema lime-sweep-v2, lime-sweep-v3 or lime-sweep-v4, got {other:?}"
+            "expected schema lime-sweep-v2 .. lime-sweep-v5, got {other:?}"
         )),
     }
 }
@@ -821,6 +996,14 @@ pub fn validate_sweep_v4(json: &Json) -> Result<SweepSummary, String> {
     }
 }
 
+/// Validate one artifact strictly against the `lime-sweep-v5` schema.
+pub fn validate_sweep_v5(json: &Json) -> Result<SweepSummary, String> {
+    match json.get("schema").and_then(Json::as_str) {
+        Some("lime-sweep-v5") => validate_sweep_impl(json, SweepSchema::V5),
+        other => Err(format!("expected schema lime-sweep-v5, got {other:?}")),
+    }
+}
+
 /// The shared validation core: structural keys, axis metadata, per-cell
 /// coordinate membership, `Method::key` round-trips, OOM/metric
 /// consistency, cell uniqueness, and the exact per-method cell counts the
@@ -831,7 +1014,13 @@ pub fn validate_sweep_v4(json: &Json) -> Result<SweepSummary, String> {
 /// `single`; stream entries with positive integer `count` and finite
 /// positive `lambda`), the per-cell `arrival` coordinate, and the
 /// per-cell `requests` arrays — present with `count` entries exactly on
-/// completed stream cells, null otherwise.
+/// completed stream cells, null otherwise. V5 additionally requires
+/// `axes.churn_scripts` (first entry event-free; events with integer
+/// `at_step`/`device` and `kind` down|up), the per-cell `churn`
+/// coordinate (non-churn-capable baselines pinned to the first label),
+/// and the per-cell `replans_fired`/`kv_migrated_bytes`/`recovery_steps`
+/// counters (null iff OOM; `recovery_steps` an array of step counts or
+/// nulls).
 fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary, String> {
     let grid = field(json, "grid", "artifact")?
         .as_str()
@@ -872,9 +1061,11 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
     }
     let methods = axis_strs("methods")?;
     let mut adaptive = std::collections::BTreeMap::new();
+    let mut churn_cap = std::collections::BTreeMap::new();
     for key in &methods {
         let m = by_name(key).ok_or_else(|| format!("axes.methods: unknown method '{key}'"))?;
         adaptive.insert(key.clone(), m.adaptive_exec().is_some());
+        churn_cap.insert(key.clone(), m.churn_capable());
     }
     let segs = field(axes, "segs", "axes")?
         .as_arr()
@@ -1047,6 +1238,51 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
         }
     }
 
+    // V5: the device-churn axis — first entry event-free, events with
+    // integer coordinates and a down|up kind.
+    let mut churn_labels: Vec<String> = Vec::new();
+    if schema >= SweepSchema::V5 {
+        let scripts = field(axes, "churn_scripts", "axes")?
+            .as_arr()
+            .ok_or("axes.churn_scripts must be an array")?;
+        if scripts.is_empty() {
+            return Err("axes.churn_scripts must be non-empty".into());
+        }
+        for (i, script) in scripts.iter().enumerate() {
+            let ctx = format!("axes.churn_scripts[{i}]");
+            let label = field(script, "label", &ctx)?
+                .as_str()
+                .ok_or_else(|| format!("{ctx}.label must be a string"))?;
+            let events = field(script, "events", &ctx)?
+                .as_arr()
+                .ok_or_else(|| format!("{ctx}.events must be an array"))?;
+            if i == 0 && !events.is_empty() {
+                return Err("axes.churn_scripts[0] must have no events (the baseline point)".into());
+            }
+            for (j, ev) in events.iter().enumerate() {
+                for k in ["at_step", "device"] {
+                    if ev.get(k).and_then(Json::as_usize).is_none() {
+                        return Err(format!(
+                            "{ctx}.events[{j}].{k} must be a non-negative integer"
+                        ));
+                    }
+                }
+                match ev.get("kind").and_then(Json::as_str) {
+                    Some("down") | Some("up") => {}
+                    other => {
+                        return Err(format!(
+                            "{ctx}.events[{j}].kind must be \"down\" or \"up\", got {other:?}"
+                        ))
+                    }
+                }
+            }
+            if churn_labels.iter().any(|l| l == label) {
+                return Err(format!("{ctx}: duplicate churn label '{label}'"));
+            }
+            churn_labels.push(label.to_string());
+        }
+    }
+
     let cells = field(json, "cells", "artifact")?
         .as_arr()
         .ok_or("'cells' must be an array")?;
@@ -1118,6 +1354,24 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
         } else {
             "single".to_string()
         };
+        // V5: the churn coordinate; methods that cannot run under churn
+        // are pinned to the no-churn baseline label.
+        let churn = if schema >= SweepSchema::V5 {
+            let c = field(cell, "churn", &ctx)?
+                .as_str()
+                .ok_or_else(|| format!("{ctx}.churn must be a string"))?;
+            if !churn_labels.iter().any(|l| l == c) {
+                return Err(format!("{ctx}: churn '{c}' not on the axis"));
+            }
+            if !adaptive[key] && !churn_cap[key] && c != churn_labels[0] {
+                return Err(format!(
+                    "{ctx}: method '{key}' cannot run under churn but sits off the baseline"
+                ));
+            }
+            c.to_string()
+        } else {
+            "none".to_string()
+        };
         let is_oom = field(cell, "oom", &ctx)?
             .as_bool()
             .ok_or_else(|| format!("{ctx}.oom must be a bool"))?;
@@ -1142,6 +1396,14 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
                 "emergency_steps",
                 "bw_stalls",
             ],
+            SweepSchema::V5 => &[
+                "online_plans_fired",
+                "kv_tokens_transferred",
+                "emergency_steps",
+                "bw_stalls",
+                "replans_fired",
+                "kv_migrated_bytes",
+            ],
         };
         for counter in counters {
             let v = field(cell, counter, &ctx)?;
@@ -1151,6 +1413,29 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
                 _ => {
                     return Err(format!(
                         "{ctx}.{counter} must be a non-negative integer (null iff oom)"
+                    ))
+                }
+            }
+        }
+        // V5: per-fault recovery latencies — an array of step counts (or
+        // null for faults the run never recovered from) on completed
+        // cells, null exactly on OOM cells.
+        if schema >= SweepSchema::V5 {
+            let rec = field(cell, "recovery_steps", &ctx)?;
+            match (is_oom, rec) {
+                (true, Json::Null) => {}
+                (false, Json::Arr(entries)) => {
+                    for (j, e) in entries.iter().enumerate() {
+                        if e != &Json::Null && e.as_u64().is_none() {
+                            return Err(format!(
+                                "{ctx}.recovery_steps[{j}] must be a non-negative integer or null"
+                            ));
+                        }
+                    }
+                }
+                _ => {
+                    return Err(format!(
+                        "{ctx}.recovery_steps must be an array of step counts (null iff oom)"
                     ))
                 }
             }
@@ -1190,7 +1475,7 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
                 }
             }
         }
-        if !seen.insert(format!("{key}|{bw}|{pattern}|{seg_label}|{mem}|{arrival}")) {
+        if !seen.insert(format!("{key}|{bw}|{pattern}|{seg_label}|{mem}|{arrival}|{churn}")) {
             return Err(format!("{ctx}: duplicate cell coordinates"));
         }
         *per_method.entry(key.to_string()).or_default() += 1;
@@ -1209,9 +1494,16 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
     } else {
         1
     };
+    let churn_axis_len = if schema >= SweepSchema::V5 {
+        churn_labels.len()
+    } else {
+        1
+    };
     for key in &methods {
         let expect = if adaptive[key] {
-            base * seg_labels.len() * mem_labels.len() * arrival_axis_len
+            base * seg_labels.len() * mem_labels.len() * arrival_axis_len * churn_axis_len
+        } else if churn_cap[key] {
+            base * churn_axis_len
         } else {
             base
         };
@@ -1315,7 +1607,7 @@ mod tests {
     }
 
     #[test]
-    fn eval_emits_valid_v4_artifact() {
+    fn eval_emits_valid_v5_artifact() {
         let methods = all();
         let m = tiny_matrix(&methods);
         let cells = m.eval();
@@ -1325,12 +1617,13 @@ mod tests {
         let parsed = Json::parse(&json.to_string()).unwrap();
         let summary = validate_sweep(&parsed).expect("artifact validates");
         assert_eq!(summary.grid, "e1-test");
-        assert_eq!(summary.schema, "lime-sweep-v4");
+        assert_eq!(summary.schema, "lime-sweep-v5");
         assert_eq!(summary.cells, m.cell_count());
         assert_eq!(summary.completed + summary.oom, summary.cells);
-        // The dispatcher and the strict v4 validator agree; the strict
-        // v2/v3 validators reject a v4 artifact by its schema tag.
-        assert!(validate_sweep_v4(&parsed).is_ok());
+        // The dispatcher and the strict v5 validator agree; the strict
+        // v2/v3/v4 validators reject a v5 artifact by its schema tag.
+        assert!(validate_sweep_v5(&parsed).is_ok());
+        assert!(validate_sweep_v4(&parsed).is_err());
         assert!(validate_sweep_v3(&parsed).is_err());
         assert!(validate_sweep_v2(&parsed).is_err());
         // LIME completes on E1 at every override point; stream cells carry
@@ -1378,10 +1671,10 @@ mod tests {
     }
 
     #[test]
-    fn v4_artifact_downgrades_to_v3_by_relabel() {
-        // Strict-superset chain: with a singleton arrival axis, relabel a
-        // v4 artifact as v3 and it validates as v3 (the extra arrival
-        // keys are ignored).
+    fn v5_artifact_downgrades_to_v3_by_relabel() {
+        // Strict-superset chain: with singleton arrival and churn axes,
+        // relabel a v5 artifact as v3 and it validates as v3 (the extra
+        // arrival/churn keys are ignored).
         let methods = all();
         let m = tiny_matrix_single_arrival(&methods);
         let cells = m.eval();
@@ -1395,6 +1688,26 @@ mod tests {
         assert_eq!(summary.schema, "lime-sweep-v3");
         assert!(validate_sweep_v3(&v3).is_ok());
         assert!(validate_sweep_v4(&v3).is_err());
+    }
+
+    #[test]
+    fn v5_artifact_downgrades_to_v4_by_relabel() {
+        // With a singleton churn axis the cell set is exactly a v4 cross:
+        // relabel the artifact as v4 and it validates (the churn keys are
+        // v5 additions v4 ignores).
+        let methods = all();
+        let m = tiny_matrix(&methods);
+        let cells = m.eval();
+        let parsed = Json::parse(&m.to_json(&cells).to_string()).unwrap();
+        let Json::Obj(mut map) = parsed else {
+            panic!("artifact must be an object")
+        };
+        map.insert("schema".into(), "lime-sweep-v4".into());
+        let v4 = Json::Obj(map);
+        let summary = validate_sweep(&v4).expect("relabelled artifact validates as v4");
+        assert_eq!(summary.schema, "lime-sweep-v4");
+        assert!(validate_sweep_v4(&v4).is_ok());
+        assert!(validate_sweep_v5(&v4).is_err());
     }
 
     #[test]
@@ -1467,10 +1780,11 @@ mod tests {
         let good = m.to_json(&cells).to_string();
         assert!(validate_sweep(&Json::parse(&good).unwrap()).is_ok());
         for (needle, replacement, why) in [
-            ("lime-sweep-v4", "lime-sweep-v1", "unknown schema"),
+            ("lime-sweep-v5", "lime-sweep-v1", "unknown schema"),
             ("\"sporadic\"", "\"sporadıc\"", "unknown pattern"),
             ("\"oom\":false", "\"oom\":true", "oom/ms inconsistency"),
             ("\"arrival\":\"stream3\"", "\"arrival\":\"stream9\"", "off-axis arrival"),
+            ("\"churn\":\"none\"", "\"churn\":\"ghost\"", "off-axis churn"),
         ] {
             let bad = good.replacen(needle, replacement, 1);
             assert_ne!(bad, good, "{why}: replacement must apply");
@@ -1522,11 +1836,21 @@ mod tests {
         } else {
             panic!("artifact must be an object");
         }
-        // Dropping the v4 arrival axis must fail a v4 artifact.
+        // Dropping the v4 arrival axis must fail a v4+ artifact.
         let parsed = Json::parse(&good).unwrap();
         if let Json::Obj(mut map) = parsed {
             if let Some(Json::Obj(axes)) = map.get_mut("axes") {
                 axes.remove("arrivals");
+            }
+            assert!(validate_sweep(&Json::Obj(map)).is_err());
+        } else {
+            panic!("artifact must be an object");
+        }
+        // Dropping the v5 churn axis must fail a v5 artifact.
+        let parsed = Json::parse(&good).unwrap();
+        if let Json::Obj(mut map) = parsed {
+            if let Some(Json::Obj(axes)) = map.get_mut("axes") {
+                axes.remove("churn_scripts");
             }
             assert!(validate_sweep(&Json::Obj(map)).is_err());
         } else {
@@ -1580,6 +1904,89 @@ mod tests {
         let methods = all();
         let _ = tiny_matrix(&methods)
             .with_pressure(vec![Script::bandwidth_sag("sag-only", 0.5, 1, 2)]);
+    }
+
+    #[test]
+    fn churn_axis_expands_lime_and_edgeshard() {
+        let methods = all();
+        let m = ScenarioMatrix::new(
+            "e1-churn",
+            ModelSpec::llama2_13b(),
+            Cluster::env_e1(),
+            &methods,
+            vec![100.0, 200.0],
+            vec![Pattern::Sporadic, Pattern::Bursty],
+            8,
+        )
+        .with_churn(vec![
+            Script::none(),
+            Script::device_down_up("d1-blip", 1, 2, 6),
+        ]);
+        // 1 adaptive (LIME) × 4 base × 2 churn + EdgeShard × 4 × 2 churn
+        // + 5 other baselines × 4.
+        assert_eq!(m.cell_count(), 8 + 8 + 20);
+        let cells = m.eval();
+        assert_eq!(cells.len(), m.cell_count());
+
+        // LIME under the fault: re-plans fire, KV migrates off the dead
+        // device, and the fault's recovery latency is tracked.
+        for c in cells.iter().filter(|c| c.method_key == "lime" && c.churn == "d1-blip") {
+            assert!(c.ms_per_token.is_some(), "{c:?}");
+            assert!(c.replans_fired.unwrap() >= 1, "{c:?}");
+            assert!(c.kv_migrated_bytes.unwrap() > 0, "{c:?}");
+            assert_eq!(c.recovery_steps.as_ref().unwrap().len(), 1, "{c:?}");
+        }
+        // EdgeShard runs the same fault without re-planning or migration —
+        // the honest-degradation comparison. Its recovery latency is still
+        // recorded by the executor core.
+        for c in cells.iter().filter(|c| c.method_key == "edgeshard" && c.churn == "d1-blip") {
+            assert!(c.ms_per_token.is_some(), "{c:?}");
+            assert_eq!(c.replans_fired, Some(0), "{c:?}");
+            assert_eq!(c.kv_migrated_bytes, Some(0), "{c:?}");
+            assert_eq!(c.recovery_steps.as_ref().unwrap().len(), 1, "{c:?}");
+            // Degradation shows up against the no-churn twin cell.
+            let base = cells
+                .iter()
+                .find(|b| {
+                    b.method_key == "edgeshard"
+                        && b.churn == "none"
+                        && b.bandwidth_mbps == c.bandwidth_mbps
+                        && b.pattern == c.pattern
+                })
+                .expect("baseline twin exists");
+            assert!(
+                c.ms_per_token.unwrap() >= base.ms_per_token.unwrap(),
+                "churn must not speed EdgeShard up: {c:?} vs {base:?}"
+            );
+        }
+        // Non-churn-capable baselines stay on the baseline point.
+        assert!(cells
+            .iter()
+            .filter(|c| c.method_key == "galaxy" || c.method_key == "pp")
+            .all(|c| c.churn == "none"));
+
+        // The artifact round-trips through the strict v5 validator.
+        let parsed = Json::parse(&m.to_json(&cells).to_string()).unwrap();
+        let summary = validate_sweep_v5(&parsed).expect("churned artifact validates");
+        assert_eq!(summary.cells, m.cell_count());
+    }
+
+    #[test]
+    #[should_panic]
+    fn churn_must_start_with_no_events() {
+        let methods = all();
+        let _ = tiny_matrix(&methods)
+            .with_churn(vec![Script::device_down_up("blip", 0, 1, 2)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn churn_scripts_must_leave_a_survivor() {
+        let methods = all();
+        let _ = tiny_matrix(&methods).with_churn(vec![
+            Script::none(),
+            Script::fleet_churn("kill-all", &[0, 1], 0, 1, 5),
+        ]);
     }
 
     #[test]

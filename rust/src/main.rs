@@ -45,15 +45,17 @@ fn usage() -> String {
                     fig14 lowmem fig18 tab5), or `sweep` for the scenario\n\
                     matrix (lowmem + cluster-size grids × bandwidth ×\n\
                     pattern, #Seg-override, joint memory/bandwidth\n\
-                    pressure-script and arrival-process axes on LIME —\n\
-                    continuous request streams with per-request TTFT/\n\
-                    queueing-delay metrics) with one lime-sweep-v4 JSON\n\
+                    pressure-script, arrival-process and device-churn\n\
+                    axes — continuous request streams with per-request\n\
+                    TTFT/queueing-delay metrics, plus re-plan/KV-migration\n\
+                    /recovery counters) with one lime-sweep-v5 JSON\n\
                     per grid\n\
        fleet        fleet-sharded request streams: N heterogeneous clusters\n\
                     behind a global admission router (rr/jsq/plan), tail-\n\
-                    latency quantiles streamed as one lime-fleet-v1 JSON\n\
+                    latency quantiles streamed as one lime-fleet-v1 JSON,\n\
+                    with optional cluster churn (down/up + re-routing)\n\
        sweep-check  validate sweep/fleet JSON artifacts against the\n\
-                    lime-sweep-v2/v3/v4 and lime-fleet-v1 schemas\n\
+                    lime-sweep-v2/v3/v4/v5 and lime-fleet-v1 schemas\n\
                     (non-zero exit on violation)\n\
        bench-check  diff a fresh BENCH_*.json against a committed baseline\n\
                     with a tolerance band (non-zero exit on regression)\n\
@@ -235,7 +237,7 @@ fn cmd_fleet(argv: &[String]) {
 fn cmd_sweep_check(argv: &[String]) {
     let cli = Cli::new(
         "lime sweep-check",
-        "validate sweep/fleet artifacts against the lime-sweep-v2/v3/v4 and lime-fleet-v1 schemas",
+        "validate sweep/fleet artifacts against the lime-sweep-v2/v3/v4/v5 and lime-fleet-v1 schemas",
     )
     .opt("dir", "sweeps", "directory holding SWEEP_*.json / FLEET_*.json artifacts")
     .opt("file", "", "validate a single artifact instead of a directory");
@@ -243,32 +245,17 @@ fn cmd_sweep_check(argv: &[String]) {
     let files: Vec<std::path::PathBuf> = if !args.get("file").is_empty() {
         vec![std::path::PathBuf::from(args.get("file"))]
     } else {
-        let dir = args.get("dir");
-        let mut v: Vec<std::path::PathBuf> = match std::fs::read_dir(dir) {
-            Ok(entries) => entries
-                .filter_map(|e| e.ok().map(|e| e.path()))
-                // Only the artifacts sweep()/fleet write — a directory may
-                // also hold bench JSONs or other tooling output.
-                .filter(|p| {
-                    p.extension().is_some_and(|ext| ext == "json")
-                        && p.file_name().is_some_and(|n| {
-                            let n = n.to_string_lossy();
-                            n.starts_with("SWEEP_") || n.starts_with("FLEET_")
-                        })
-                })
-                .collect(),
+        // The collection + zero-artifact guard lives in the library
+        // (`experiments::collect_sweep_artifacts`) so its "a sweep that
+        // wrote nothing must fail the check" contract is unit-tested.
+        match lime::experiments::collect_sweep_artifacts(args.get("dir")) {
+            Ok(files) => files,
             Err(e) => {
-                eprintln!("sweep-check: cannot read directory {dir}: {e}");
+                eprintln!("{e}");
                 std::process::exit(2);
             }
-        };
-        v.sort();
-        v
+        }
     };
-    if files.is_empty() {
-        eprintln!("sweep-check: no SWEEP_*.json or FLEET_*.json artifacts found");
-        std::process::exit(2);
-    }
     let mut failures = 0usize;
     for path in &files {
         let parsed = std::fs::read_to_string(path)

@@ -35,11 +35,54 @@
 //! property-tested bit-identical to the pre-refactor executors
 //! (`rust/tests/serving_stream.rs`).
 
-use crate::adapt::{MemEvent, Script};
+use crate::adapt::{ChurnEvent, ChurnKind, MemEvent, Script};
 use crate::cluster::Cluster;
 use crate::net::BandwidthTrace;
 use crate::pipeline::result::SimResult;
 use crate::sim::{Interval, Resource, SsdModel, Trace, TraceMode};
+
+/// A churn script asked for the impossible: taking down the last
+/// surviving device. Surfaced as a structured error (never a panic) by
+/// the fallible run entry points ([`ExecutorCore::run_request`],
+/// [`run_single_checked`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChurnError {
+    /// Stream step the offending event fired at.
+    pub at_step: usize,
+    /// The device the script tried to take down.
+    pub device: usize,
+}
+
+impl std::fmt::Display for ChurnError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "churn event at step {} takes down device {} — no surviving devices would remain",
+            self.at_step, self.device
+        )
+    }
+}
+
+impl std::error::Error for ChurnError {}
+
+/// Step-latency tolerance for recovery detection: a fault counts as
+/// recovered once a decode step lands within 10% of the pre-fault mean.
+const RECOVERY_TOLERANCE: f64 = 1.10;
+
+/// Context handed to [`SchedulePolicy::on_churn_event`]: where on the
+/// stream/request timeline the fault landed, so policies can size KV
+/// migrations and time their link traffic.
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnCtx {
+    /// Absolute time the event applies (= the upcoming step's start).
+    pub at: f64,
+    /// Step index on the stream timeline.
+    pub global_step: usize,
+    /// Decode steps already completed within the current request.
+    pub local_step: usize,
+    /// Micro-batches in flight for the current request.
+    pub micro: usize,
+}
 
 /// The options every schedule policy shares, consumed by the core.
 /// `ExecOptions`/`TradOptions`/`TpOptions` each carry these three fields
@@ -95,7 +138,12 @@ pub struct CoreState {
     mem_pressure: Vec<i64>,
     /// Current effective per-device caps every policy judges saturation
     /// against (`== usable_mem()` while no script event has fired).
+    /// A churned-down device's cap is pinned at 0 until it rejoins, so
+    /// non-adaptive policies degrade honestly through the same overflow
+    /// fallbacks that handle scripted memory pressure.
     pub mem_caps: Vec<u64>,
+    /// Which devices a churn script currently holds down.
+    churn_down: Vec<bool>,
 }
 
 impl CoreState {
@@ -121,6 +169,7 @@ impl CoreState {
             mem_pressure: vec![0; d],
             mem_caps: mem_base.clone(),
             mem_base,
+            churn_down: vec![false; d],
         }
     }
 
@@ -159,10 +208,52 @@ impl CoreState {
         self.bw_stalls
     }
 
+    /// Is device `i` currently churned down?
+    pub fn device_down(&self, i: usize) -> bool {
+        self.churn_down[i]
+    }
+
+    /// Indices of the devices currently up (in device order).
+    pub fn survivors(&self) -> Vec<usize> {
+        (0..self.churn_down.len())
+            .filter(|&i| !self.churn_down[i])
+            .collect()
+    }
+
     fn apply_mem_event(&mut self, ev: &MemEvent) {
         self.mem_pressure[ev.device] = self.mem_pressure[ev.device].saturating_add(ev.delta_bytes);
-        self.mem_caps[ev.device] =
-            crate::adapt::planner::shifted(self.mem_base[ev.device], self.mem_pressure[ev.device]);
+        self.refresh_cap(ev.device);
+    }
+
+    /// Effective cap of device `i` from its base capacity, accumulated
+    /// scripted pressure, and churn state (down pins the cap at 0).
+    fn refresh_cap(&mut self, i: usize) {
+        self.mem_caps[i] = if self.churn_down[i] {
+            0
+        } else {
+            crate::adapt::planner::shifted(self.mem_base[i], self.mem_pressure[i])
+        };
+    }
+
+    /// Apply one churn event. `Down` on the last surviving device is the
+    /// structured [`ChurnError`]; repeated `Down`s (or `Up`s) on one
+    /// device are idempotent.
+    fn apply_churn_event(&mut self, ev: &ChurnEvent) -> Result<(), ChurnError> {
+        match ev.kind {
+            ChurnKind::Down => {
+                let up_count = self.churn_down.iter().filter(|&&down| !down).count();
+                if !self.churn_down[ev.device] && up_count == 1 {
+                    return Err(ChurnError {
+                        at_step: ev.at_step,
+                        device: ev.device,
+                    });
+                }
+                self.churn_down[ev.device] = true;
+            }
+            ChurnKind::Up => self.churn_down[ev.device] = false,
+        }
+        self.refresh_cap(ev.device);
+        Ok(())
     }
 
     fn take_emergency(&mut self) -> bool {
@@ -193,6 +284,14 @@ pub trait SchedulePolicy {
     /// (the effective cap shift has already been applied by the core).
     fn on_mem_event(&mut self, _ev: &MemEvent) {}
 
+    /// A scripted churn event fired: the core has already zeroed (Down)
+    /// or restored (Up) the device's effective cap. Adaptive policies
+    /// re-plan onto the survivors and migrate the departed device's
+    /// resident KV over the shared link; the default no-op leaves
+    /// non-adaptive policies to degrade through their overflow fallbacks
+    /// against the zeroed cap.
+    fn on_churn_event(&mut self, _core: &mut CoreState, _ev: &ChurnEvent, _ctx: &ChurnCtx) {}
+
     /// KV tokens shipped between devices so far (stream total).
     fn kv_tokens_transferred(&self) -> u64 {
         0
@@ -200,6 +299,16 @@ pub trait SchedulePolicy {
 
     /// Online offload plans fired so far (stream total).
     fn online_plans_fired(&self) -> usize {
+        0
+    }
+
+    /// Churn-triggered re-plans fired so far (stream total).
+    fn replans_fired(&self) -> usize {
+        0
+    }
+
+    /// KV bytes migrated off/onto churned devices so far (stream total).
+    fn kv_migrated_bytes(&self) -> u64 {
         0
     }
 }
@@ -258,6 +367,12 @@ pub struct CoreTotals {
     pub bw_stalls: u64,
     pub kv_tokens_transferred: u64,
     pub online_plans_fired: usize,
+    pub replans_fired: usize,
+    pub kv_migrated_bytes: u64,
+    /// Per-`Down`-event recovery latency in steps (firing order): steps
+    /// until a decode step lands back within [`RECOVERY_TOLERANCE`] of
+    /// the pre-fault mean; `None` when the stream ends first.
+    pub recovery_steps: Vec<Option<usize>>,
 }
 
 /// The unified step driver: owns the [`CoreState`] and the stream-global
@@ -271,6 +386,13 @@ pub struct ExecutorCore<'s, P: SchedulePolicy> {
     step_times: Vec<f64>,
     step_time_sum: f64,
     retain_step_times: bool,
+    /// One slot per fired `Down` event (firing order); filled in when the
+    /// fault's step latency recovers, left `None` if the stream ends
+    /// first.
+    recovery_steps: Vec<Option<usize>>,
+    /// Faults still counting toward recovery: `(slot, pre-fault mean
+    /// step latency, steps elapsed since the fault)`.
+    pending_recovery: Vec<(usize, f64, usize)>,
 }
 
 impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
@@ -302,6 +424,8 @@ impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
             step_times: Vec::new(),
             step_time_sum: 0.0,
             retain_step_times: true,
+            recovery_steps: Vec::new(),
+            pending_recovery: Vec::new(),
         }
     }
 
@@ -322,13 +446,21 @@ impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
     /// micro-batches) starting no earlier than `at`, on the shared
     /// timeline: resources, SSD jitter streams, the global step counter
     /// and the fluctuation script all carry over from previous requests.
-    pub fn run_request(&mut self, at: f64, micro_batches: usize, tokens: usize) -> RequestRun {
+    ///
+    /// Errs only when the script takes down the last surviving device
+    /// ([`ChurnError`]) — impossible for churn-free scripts.
+    pub fn run_request(
+        &mut self,
+        at: f64,
+        micro_batches: usize,
+        tokens: usize,
+    ) -> Result<RequestRun, ChurnError> {
         let mut run = RequestRun {
             step_ends: Vec::with_capacity(tokens),
             ..RequestRun::default()
         };
-        self.run_request_into(at, micro_batches, tokens, &mut run);
-        run
+        self.run_request_into(at, micro_batches, tokens, &mut run)?;
+        Ok(run)
     }
 
     /// [`ExecutorCore::run_request`] recycling `arena`'s buffers — the
@@ -340,12 +472,13 @@ impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
         micro_batches: usize,
         tokens: usize,
         arena: &'a mut CoreArena,
-    ) -> &'a RequestRun {
+    ) -> Result<&'a RequestRun, ChurnError> {
         // Split-borrow: take the run out so `self` stays free for the loop.
         let mut run = std::mem::take(&mut arena.run);
-        self.run_request_into(at, micro_batches, tokens, &mut run);
+        let outcome = self.run_request_into(at, micro_batches, tokens, &mut run);
         arena.run = run;
-        &arena.run
+        outcome?;
+        Ok(&arena.run)
     }
 
     fn run_request_into(
@@ -354,7 +487,7 @@ impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
         micro_batches: usize,
         tokens: usize,
         run: &mut RequestRun,
-    ) {
+    ) -> Result<(), ChurnError> {
         let micro = micro_batches.max(1);
         let decode_start = self
             .policy
@@ -374,6 +507,33 @@ impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
                 self.state.apply_mem_event(ev);
                 self.policy.on_mem_event(ev);
             }
+            // Churn fires after memory events within a step (the
+            // [`Script::events`] order): the core flips the device's
+            // availability and cap, opens a recovery tracker for Downs,
+            // then lets the policy re-plan/migrate before the step runs.
+            for ev in script.churn.iter().filter(|ev| ev.at_step == g) {
+                self.state.apply_churn_event(ev)?;
+                if ev.kind == ChurnKind::Down {
+                    let baseline = if g > 0 {
+                        self.step_time_sum / g as f64
+                    } else {
+                        f64::INFINITY
+                    };
+                    let slot = self.recovery_steps.len();
+                    self.recovery_steps.push(None);
+                    self.pending_recovery.push((slot, baseline, 0));
+                }
+                self.policy.on_churn_event(
+                    &mut self.state,
+                    ev,
+                    &ChurnCtx {
+                        at: t_prev,
+                        global_step: g,
+                        local_step: local,
+                        micro,
+                    },
+                );
+            }
             let step_start = t_prev;
             let step_end = self.policy.step(
                 &mut self.state,
@@ -392,6 +552,18 @@ impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
             if self.retain_step_times {
                 self.step_times.push(dt);
             }
+            if !self.pending_recovery.is_empty() {
+                let recovered = &mut self.recovery_steps;
+                self.pending_recovery.retain_mut(|(slot, baseline, steps)| {
+                    *steps += 1;
+                    if dt <= *baseline * RECOVERY_TOLERANCE {
+                        recovered[*slot] = Some(*steps);
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
             step_ends.push(step_end);
             t_prev = step_end;
             self.global_step += 1;
@@ -399,6 +571,7 @@ impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
         run.start = at;
         run.decode_start = decode_start;
         run.micro = micro;
+        Ok(())
     }
 
     /// Tear down into the stream totals (trace, step latencies, counters).
@@ -406,6 +579,9 @@ impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
         CoreTotals {
             kv_tokens_transferred: self.policy.kv_tokens_transferred(),
             online_plans_fired: self.policy.online_plans_fired(),
+            replans_fired: self.policy.replans_fired(),
+            kv_migrated_bytes: self.policy.kv_migrated_bytes(),
+            recovery_steps: self.recovery_steps,
             emergency_steps: self.emergency_steps,
             bw_stalls: self.state.bw_stalls(),
             trace: self.state.trace,
@@ -429,12 +605,17 @@ impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
             online_plans_fired: totals.online_plans_fired,
             emergency_steps: totals.emergency_steps,
             bw_stalls: totals.bw_stalls,
+            replans_fired: totals.replans_fired,
+            kv_migrated_bytes: totals.kv_migrated_bytes,
+            recovery_steps: totals.recovery_steps,
         }
     }
 }
 
 /// Run `policy` as a one-request stream starting at t = 0 — the shape of
 /// the legacy `run_*` entry points, which are thin wrappers over this.
+/// Panics if the script takes down the last surviving device; churn
+/// scripts that can do so must go through [`run_single_checked`].
 pub fn run_single<P: SchedulePolicy>(
     policy: P,
     cluster: &Cluster,
@@ -444,9 +625,25 @@ pub fn run_single<P: SchedulePolicy>(
     common: &CommonOptions,
     script: &Script,
 ) -> SimResult {
+    run_single_checked(policy, cluster, bw_trace, micro_batches, tokens, common, script)
+        .unwrap_or_else(|e| panic!("{e}; use run_single_checked for fallible churn scripts"))
+}
+
+/// Fallible [`run_single`]: surfaces a churn script that takes down the
+/// last surviving device as a structured [`ChurnError`] instead of a
+/// panic.
+pub fn run_single_checked<P: SchedulePolicy>(
+    policy: P,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    micro_batches: usize,
+    tokens: usize,
+    common: &CommonOptions,
+    script: &Script,
+) -> Result<SimResult, ChurnError> {
     let mut core = ExecutorCore::new(policy, cluster, bw_trace, common, script);
-    let run = core.run_request(0.0, micro_batches, tokens);
-    core.into_result(run)
+    let run = core.run_request(0.0, micro_batches, tokens)?;
+    Ok(core.into_result(run))
 }
 
 #[cfg(test)]
@@ -527,8 +724,8 @@ mod tests {
             events_seen: 0,
         };
         let mut core = ExecutorCore::new(policy, &cluster, &bw, &common(), &script);
-        let a = core.run_request(0.0, 1, 4);
-        let b = core.run_request(a.finish(), 1, 4);
+        let a = core.run_request(0.0, 1, 4).unwrap();
+        let b = core.run_request(a.finish(), 1, 4).unwrap();
         assert_eq!(core.global_step(), 8);
         assert_eq!(core.policy.events_seen, 1, "event fires exactly once");
         assert!(b.finish() > a.finish());
@@ -549,9 +746,9 @@ mod tests {
             events_seen: 0,
         };
         let mut core = ExecutorCore::new(policy, &cluster, &bw, &common(), &Script::none());
-        let a = core.run_request(0.0, 1, 2);
+        let a = core.run_request(0.0, 1, 2).unwrap();
         // Admitted mid-flight of nothing: starts exactly at its arrival.
-        let b = core.run_request(a.finish(), 1, 2);
+        let b = core.run_request(a.finish(), 1, 2).unwrap();
         assert_eq!(b.start, a.finish());
         assert_eq!(b.decode_start, b.start);
         // The link was idle between requests — no stalls counted.
@@ -577,19 +774,180 @@ mod tests {
         let mut fresh = ExecutorCore::new(jitter_policy(), &cluster, &bw, &common(), &Script::none());
         let want: Vec<RequestRun> = shapes
             .iter()
-            .map(|&(at, m, t)| fresh.run_request(at, m, t))
+            .map(|&(at, m, t)| fresh.run_request(at, m, t).unwrap())
             .collect();
 
         let mut reused =
             ExecutorCore::new(jitter_policy(), &cluster, &bw, &common(), &Script::none());
         let mut arena = CoreArena::new();
         for (w, &(at, m, t)) in want.iter().zip(&shapes) {
-            let run = reused.run_request_in(at, m, t, &mut arena);
+            let run = reused.run_request_in(at, m, t, &mut arena).unwrap();
             assert_eq!(run, w, "arena run diverged at shape {:?}", (at, m, t));
         }
         let (a, b) = (fresh.into_totals(), reused.into_totals());
         assert_eq!(a.step_times, b.step_times);
         assert_eq!(a.step_time_sum.to_bits(), b.step_time_sum.to_bits());
+    }
+
+    /// A policy whose step slows 4× while any device is down — enough
+    /// structure to exercise the core's recovery tracking without a real
+    /// schedule.
+    struct ChurnSensitive {
+        dur: f64,
+    }
+
+    impl SchedulePolicy for ChurnSensitive {
+        fn begin_request(
+            &mut self,
+            _core: &mut CoreState,
+            at: f64,
+            _micro: usize,
+            _global_step: usize,
+        ) -> f64 {
+            at
+        }
+
+        fn step(&mut self, core: &mut CoreState, ctx: &StepCtx) -> f64 {
+            let slow = (0..core.mem_caps.len()).any(|i| core.device_down(i));
+            ctx.step_start + if slow { self.dur * 4.0 } else { self.dur }
+        }
+    }
+
+    #[test]
+    fn churn_down_zeroes_the_cap_and_up_restores_it_with_pressure() {
+        use crate::adapt::{ChurnEvent, ScriptEvent};
+        let cluster = Cluster::env_e1();
+        let bw = BandwidthTrace::fixed_mbps(100.0);
+        let base_cap = cluster.devices[0].usable_mem();
+        let squeeze = 1024i64;
+        let script = Script::from_events(
+            "churn-mem",
+            vec![
+                ScriptEvent::Mem(MemEvent {
+                    at_step: 1,
+                    device: 0,
+                    delta_bytes: -squeeze,
+                }),
+                ScriptEvent::Churn(ChurnEvent {
+                    at_step: 2,
+                    device: 0,
+                    kind: ChurnKind::Down,
+                }),
+                ScriptEvent::Churn(ChurnEvent {
+                    at_step: 4,
+                    device: 0,
+                    kind: ChurnKind::Up,
+                }),
+            ],
+        );
+        // env_e1 must have >1 device for a lone Down to be legal.
+        assert!(cluster.len() > 1);
+        let mut core = ExecutorCore::new(
+            ChurnSensitive { dur: 0.5 },
+            &cluster,
+            &bw,
+            &common(),
+            &script,
+        );
+        let run = core.run_request(0.0, 1, 6).unwrap();
+        assert_eq!(run.step_ends.len(), 6);
+        // After the stream: device back up, cap = base − squeeze (the
+        // scripted pressure survives the down/up cycle).
+        assert!(!core.state.device_down(0));
+        assert_eq!(core.state.mem_caps[0], base_cap - squeeze as u64);
+        assert_eq!(core.state.survivors().len(), cluster.len());
+        let totals = core.into_totals();
+        // One Down event → one recovery slot; the policy recovers the
+        // first step after Up: down at step 2, up at step 4 → steps
+        // 2 and 3 degraded, step 4 back at baseline → 3 steps to recover.
+        assert_eq!(totals.recovery_steps, vec![Some(3)]);
+        assert_eq!(totals.replans_fired, 0, "default policy hook is a no-op");
+        assert_eq!(totals.kv_migrated_bytes, 0);
+    }
+
+    #[test]
+    fn unrecovered_fault_reports_none() {
+        let cluster = Cluster::env_e1();
+        let bw = BandwidthTrace::fixed_mbps(100.0);
+        let script = Script::device_down_up("late-up", 0, 2, 100);
+        let mut core = ExecutorCore::new(
+            ChurnSensitive { dur: 0.5 },
+            &cluster,
+            &bw,
+            &common(),
+            &script,
+        );
+        core.run_request(0.0, 1, 8).unwrap();
+        // Still down at stream end: the cap stays pinned at zero.
+        assert!(core.state.device_down(0));
+        assert_eq!(core.state.mem_caps[0], 0);
+        let totals = core.into_totals();
+        assert_eq!(totals.recovery_steps, vec![None], "stream ended degraded");
+    }
+
+    #[test]
+    fn down_of_last_surviving_device_is_a_structured_error() {
+        use crate::adapt::ChurnEvent;
+        let cluster = Cluster::env_e1();
+        let bw = BandwidthTrace::fixed_mbps(100.0);
+        let d = cluster.len();
+        // Take every device down, one per step; the last one must error.
+        let churn: Vec<crate::adapt::ScriptEvent> = (0..d)
+            .map(|i| {
+                crate::adapt::ScriptEvent::Churn(ChurnEvent {
+                    at_step: i + 1,
+                    device: i,
+                    kind: ChurnKind::Down,
+                })
+            })
+            .collect();
+        let script = Script::from_events("kill-all", churn);
+        let mut core = ExecutorCore::new(
+            ChurnSensitive { dur: 0.5 },
+            &cluster,
+            &bw,
+            &common(),
+            &script,
+        );
+        let err = core.run_request(0.0, 1, d + 2).unwrap_err();
+        assert_eq!(err.device, d - 1);
+        assert_eq!(err.at_step, d);
+        let msg = err.to_string();
+        assert!(msg.contains("no surviving devices"), "got: {msg}");
+    }
+
+    #[test]
+    fn repeated_down_events_are_idempotent() {
+        use crate::adapt::ChurnEvent;
+        let cluster = Cluster::env_e1();
+        let bw = BandwidthTrace::fixed_mbps(100.0);
+        let script = Script::from_events(
+            "double-down",
+            vec![
+                crate::adapt::ScriptEvent::Churn(ChurnEvent {
+                    at_step: 1,
+                    device: 0,
+                    kind: ChurnKind::Down,
+                }),
+                crate::adapt::ScriptEvent::Churn(ChurnEvent {
+                    at_step: 2,
+                    device: 0,
+                    kind: ChurnKind::Down,
+                }),
+            ],
+        );
+        let mut core = ExecutorCore::new(
+            ChurnSensitive { dur: 0.5 },
+            &cluster,
+            &bw,
+            &common(),
+            &script,
+        );
+        core.run_request(0.0, 1, 4).unwrap();
+        // Two Down events → two recovery slots, both unrecovered.
+        assert_eq!(core.state.survivors().len(), cluster.len() - 1);
+        let totals = core.into_totals();
+        assert_eq!(totals.recovery_steps.len(), 2);
     }
 
     #[test]
@@ -603,8 +961,8 @@ mod tests {
         let mut arena = CoreArena::new();
         let mut t = 0.0;
         for _ in 0..5 {
-            let a = retained.run_request(t, 1, 6);
-            let b = flat.run_request_in(t, 1, 6, &mut arena);
+            let a = retained.run_request(t, 1, 6).unwrap();
+            let b = flat.run_request_in(t, 1, 6, &mut arena).unwrap();
             assert_eq!(&a, b);
             t = a.finish();
         }

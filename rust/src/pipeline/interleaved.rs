@@ -24,15 +24,21 @@
 //! bandwidth events scale the link capacity every comm term (and Alg. 2's
 //! monitor) sees — both channels in one run.
 
-use crate::adapt::{KvTransferProtocol, MemEvent, OffloadPlan, OnlinePlanner, Script};
+use crate::adapt::{
+    resident_kv_bytes, ChurnEvent, ChurnKind, KvTransferProtocol, MemEvent, OffloadPlan,
+    OnlinePlanner, Script,
+};
 use crate::cluster::Cluster;
 use crate::cost;
 use crate::model::ModelSpec;
 use crate::net::link_transfer_secs;
 use crate::net::BandwidthTrace;
-use crate::pipeline::core::{run_single, CommonOptions, CoreState, SchedulePolicy, StepCtx};
+use crate::pipeline::core::{
+    run_single, ChurnCtx, CommonOptions, CoreState, SchedulePolicy, StepCtx,
+};
 use crate::pipeline::result::SimResult;
-use crate::plan::allocation::Allocation;
+use crate::plan::allocation::{Allocation, DeviceAssignment};
+use crate::plan::{plan, PlanOptions};
 use crate::sim::{Label, MicroPhase, SpanKind, TraceMode};
 
 /// Online-adaptation configuration (Table V ablation axes).
@@ -197,6 +203,13 @@ pub struct InterleavedPolicy<'a> {
     st: Option<ReqState>,
     kv_shipped_total: u64,
     plans_fired: usize,
+    /// Churn overlay: the current re-planned allocation, full cluster
+    /// length with 0-layer entries for down devices. `None` (no churn has
+    /// fired, or the full fleet is restored) means the offline allocation
+    /// rules — so churn-free runs never touch this path.
+    churn_alloc: Option<Allocation>,
+    replans: usize,
+    migrated_bytes: u64,
 }
 
 impl<'a> InterleavedPolicy<'a> {
@@ -210,6 +223,9 @@ impl<'a> InterleavedPolicy<'a> {
             st: None,
             kv_shipped_total: 0,
             plans_fired: 0,
+            churn_alloc: None,
+            replans: 0,
+            migrated_bytes: 0,
         }
     }
 
@@ -231,6 +247,9 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
     ) -> f64 {
         let d = self.cluster.len();
         let bw0 = core.bw_at(global_step);
+        // Effective base allocation: the churn overlay when a re-plan is
+        // in force, the offline allocation otherwise (always, churn-free).
+        let alloc = self.churn_alloc.as_ref().unwrap_or(self.alloc);
 
         // Per-request state: built fresh on the first request, reset IN
         // PLACE afterwards (the arena lever — a long stream touches the
@@ -241,7 +260,7 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
         // both paths are bit-identical (`in_place_request_reset_matches_
         // fresh_rebuild` streams both).
         if let Some(st) = self.st.as_mut() {
-            st.planner.reset(self.alloc, self.cluster, micro);
+            st.planner.reset(alloc, self.cluster, micro);
             // Scripted pressure accumulated earlier on the stream carries
             // into the reset planner, so mid-stream requests plan under
             // the same shifted slack the effective caps describe.
@@ -252,7 +271,7 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
                 }
             }
             st.protocol.reset(
-                self.alloc,
+                alloc,
                 self.cluster,
                 &st.planner,
                 self.opts.prompt_tokens,
@@ -262,9 +281,9 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
             // Field-wise: `Vec::clone_from` reuses the buffer (a derived
             // whole-struct `clone_from` would reallocate). The spec never
             // changes mid-stream and online plans only mutate `devices`.
-            st.live.devices.clone_from(&self.alloc.devices);
-            st.live.seg = self.alloc.seg;
-            debug_assert!(st.live.spec == self.alloc.spec);
+            st.live.devices.clone_from(&alloc.devices);
+            st.live.seg = alloc.seg;
+            debug_assert!(st.live.spec == alloc.spec);
             st.last_plan.clear();
             st.last_plan.resize(d, OffloadPlan::default());
             st.kv_held.clear();
@@ -274,7 +293,7 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
             st.micro_front.clear();
             st.micro_front.resize(micro, 0.0);
         } else {
-            let mut planner = OnlinePlanner::new(self.alloc, self.cluster, micro);
+            let mut planner = OnlinePlanner::new(alloc, self.cluster, micro);
             for i in 0..d {
                 let pressure = core.mem_pressure(i);
                 if pressure != 0 {
@@ -282,7 +301,7 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
                 }
             }
             let protocol = KvTransferProtocol::new(
-                self.alloc,
+                alloc,
                 self.cluster,
                 &planner,
                 self.opts.prompt_tokens,
@@ -292,7 +311,7 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
             self.st = Some(ReqState {
                 planner,
                 protocol,
-                live: self.alloc.clone(),
+                live: alloc.clone(),
                 last_plan: vec![OffloadPlan::default(); d],
                 kv_held: vec![self.opts.prompt_tokens; d],
                 pending_reload: vec![0; d],
@@ -302,11 +321,16 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
         }
 
         // ------------- prefill pass (charged, not measured) -------------
-        // Reads the offline allocation — identical to the live allocation
-        // at this point on both paths.
+        // Reads the effective base allocation — identical to the live
+        // allocation at this point on both paths. Down devices (0 layers
+        // under a churn re-plan) host no stage, so they neither compute
+        // nor relay activations.
         let mut t_prefill = at;
         for i in 0..d {
-            let a = &self.alloc.devices[i];
+            let a = &alloc.devices[i];
+            if a.total_layers == 0 {
+                continue;
+            }
             let flops = self.spec.layer_prefill_flops(self.opts.prompt_tokens)
                 * a.total_layers as f64
                 * micro as f64;
@@ -329,6 +353,123 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
     fn on_mem_event(&mut self, ev: &MemEvent) {
         if let Some(st) = self.st.as_mut() {
             st.planner.apply_pressure(ev.device, ev.delta_bytes);
+        }
+    }
+
+    /// Online re-planning + KV migration on device churn (the robustness
+    /// half of §IV-D): `Down` re-plans the model onto the surviving
+    /// subset and ships the departed device's resident KV to survivors
+    /// over the shared link (Eq. 8's volume model — the migration
+    /// contends, so it stalls and delays whatever else needs the
+    /// medium); `Up` re-expands onto the restored set and ships the KV
+    /// the rejoined device's new layers need back onto it. When the
+    /// survivors cannot fit the model, the current allocation is kept
+    /// and the run degrades honestly through the zeroed cap (emergency
+    /// spills, stalls) until capacity returns.
+    fn on_churn_event(&mut self, core: &mut CoreState, ev: &ChurnEvent, ctx: &ChurnCtx) {
+        let d = self.cluster.len();
+        let bw = core.bw_at(ctx.global_step);
+
+        // A departing device's holdings move out *before* its assignment
+        // is dropped — price the migration under the current live alloc.
+        if ev.kind == ChurnKind::Down {
+            if let Some(st) = self.st.as_ref() {
+                let bytes = resident_kv_bytes(&st.live, ev.device, st.kv_held[ev.device]);
+                if bytes > 0 {
+                    let iv = core.link_acquire(ctx.at, link_transfer_secs(bytes, bw));
+                    core.trace
+                        .push(ev.device, SpanKind::KvTransfer, "kv-migrate", iv.start, iv.end);
+                    self.migrated_bytes += bytes;
+                }
+            }
+        }
+
+        // Re-plan onto the post-event survivor set (Alg. 1 reused on the
+        // subset), then expand back to full cluster length with 0-layer
+        // entries for down devices so every index keeps meaning the same
+        // physical device.
+        let survivors = core.survivors();
+        debug_assert!(!survivors.is_empty(), "the core rejects a last-device Down");
+        let overlay = if survivors.len() == d {
+            // Full fleet restored: drop the overlay, the offline
+            // allocation rules again.
+            Some(None)
+        } else {
+            let popts = PlanOptions {
+                empirical_tokens: 256,
+                micro_batch: ctx.micro,
+                bandwidth: bw,
+            };
+            plan(&self.spec, &self.cluster.subset(&survivors), &popts)
+                .ok()
+                .map(|report| {
+                    let mut devices = vec![DeviceAssignment::resident(0); d];
+                    for (k, &i) in survivors.iter().enumerate() {
+                        devices[i] = report.allocation.devices[k].clone();
+                    }
+                    Some(Allocation::new(
+                        self.spec.clone(),
+                        report.allocation.seg,
+                        devices,
+                    ))
+                })
+        };
+        let Some(overlay) = overlay else {
+            return; // survivors can't fit the model: keep degrading
+        };
+        self.replans += 1;
+        self.churn_alloc = overlay;
+        let alloc = self.churn_alloc.as_ref().unwrap_or(self.alloc);
+        self.seg = alloc.seg.max(1);
+
+        // A rejoining device receives from survivors the KV its newly
+        // assigned layers need for the context built so far.
+        if ev.kind == ChurnKind::Up {
+            if let Some(st) = self.st.as_ref() {
+                let bytes = resident_kv_bytes(alloc, ev.device, st.kv_held[ev.device]);
+                if bytes > 0 {
+                    let iv = core.link_acquire(ctx.at, link_transfer_secs(bytes, bw));
+                    core.trace
+                        .push(ev.device, SpanKind::KvTransfer, "kv-migrate", iv.start, iv.end);
+                    self.migrated_bytes += bytes;
+                }
+            }
+        }
+
+        // Rebuild the in-flight request's adaptation state on the new
+        // allocation; shared-resource clocks (slot_free, micro_front,
+        // the link) keep their times — the schedule resumes from
+        // wherever the simulated hardware actually is.
+        let tok = self.opts.prompt_tokens + ctx.local_step;
+        let prompt = self.opts.prompt_tokens;
+        if let Some(st) = self.st.as_mut() {
+            st.planner.reset(alloc, self.cluster, ctx.micro);
+            for i in 0..d {
+                let pressure = core.mem_pressure(i);
+                if pressure != 0 {
+                    st.planner.apply_pressure(i, pressure);
+                }
+            }
+            st.protocol
+                .reset(alloc, self.cluster, &st.planner, tok, ctx.micro, bw);
+            st.live.devices.clone_from(&alloc.devices);
+            st.live.seg = alloc.seg;
+            st.last_plan.clear();
+            st.last_plan.resize(d, OffloadPlan::default());
+            st.pending_reload.clear();
+            st.pending_reload.resize(d, 0);
+            // KV holdings follow the migration.
+            match ev.kind {
+                ChurnKind::Down => {
+                    let moved = st.kv_held[ev.device];
+                    st.kv_held[ev.device] = 0;
+                    let target = st.planner.highest_threshold_device();
+                    st.kv_held[target] += moved;
+                }
+                ChurnKind::Up => {
+                    st.kv_held[ev.device] = prompt + ctx.micro * ctx.local_step;
+                }
+            }
         }
     }
 
@@ -528,6 +669,12 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
         // The core counts a step as an emergency step at most once,
         // however many devices overflow within it.
         for i in 0..d {
+            if st.live.devices[i].total_layers == 0 {
+                // Churned-out device: hosts no layers, holds no KV — the
+                // positional embedding charge in `mem_demand` must not
+                // saturate it against its zeroed cap.
+                continue;
+            }
             let n_trans = if self.opts.kv_transfer {
                 st.protocol.n_trans(i)
             } else {
@@ -558,6 +705,14 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
 
     fn online_plans_fired(&self) -> usize {
         self.plans_fired
+    }
+
+    fn replans_fired(&self) -> usize {
+        self.replans
+    }
+
+    fn kv_migrated_bytes(&self) -> u64 {
+        self.migrated_bytes
     }
 }
 
@@ -793,9 +948,9 @@ mod tests {
         );
         let (mut t_a, mut t_b) = (0.0, 0.0);
         for (micro, tokens) in [(1usize, 12usize), (2, 24), (1, 48), (3, 8)] {
-            let a = reset_path.run_request(t_a, micro, tokens);
+            let a = reset_path.run_request(t_a, micro, tokens).unwrap();
             rebuild_path.policy.clear_request_state();
-            let b = rebuild_path.run_request(t_b, micro, tokens);
+            let b = rebuild_path.run_request(t_b, micro, tokens).unwrap();
             assert_eq!(a, b, "stream diverged at shape ({micro},{tokens})");
             t_a = a.finish();
             t_b = b.finish();
@@ -805,6 +960,61 @@ mod tests {
         assert_eq!(ta.kv_tokens_transferred, tb.kv_tokens_transferred);
         assert_eq!(ta.online_plans_fired, tb.online_plans_fired);
         assert_eq!(ta.emergency_steps, tb.emergency_steps);
+    }
+
+    #[test]
+    fn churn_down_replans_migrates_and_tracks_recovery() {
+        let (alloc, cluster) = setup("low1");
+        let bw = BandwidthTrace::fixed_mbps(200.0);
+        // Take down the weakest device that actually hosts layers, so the
+        // Down migration has resident KV to ship and the survivors (which
+        // include every stronger device) can re-fit the model.
+        let dev = (0..cluster.len())
+            .rev()
+            .find(|&i| alloc.devices[i].total_layers > 0)
+            .expect("offline plan assigns layers somewhere");
+        let script = Script::device_down_up("blip", dev, 4, 12);
+        let r = run_interleaved_scripted(
+            &alloc,
+            &cluster,
+            &bw,
+            1,
+            24,
+            &ExecOptions::default(),
+            &script,
+        );
+        assert_eq!(r.tokens, 24);
+        assert_eq!(r.replans_fired, 2, "Down re-plan + Up re-expansion");
+        assert!(
+            r.kv_migrated_bytes > 0,
+            "the departed device's resident KV must ship over the link"
+        );
+        assert_eq!(r.recovery_steps.len(), 1, "one Down event, one recovery slot");
+    }
+
+    #[test]
+    fn unfired_churn_is_bit_identical_to_plain_run() {
+        // Churn scheduled beyond the horizon never fires: the run must be
+        // byte-identical to the script-free one (the policy's churn
+        // overlay stays None and no churn-only code path executes).
+        let (alloc, cluster) = setup("e3");
+        let bw = BandwidthTrace::fixed_mbps(200.0);
+        let plain = run_interleaved(&alloc, &cluster, &bw, 2, 16, &ExecOptions::default());
+        let scripted = run_interleaved_scripted(
+            &alloc,
+            &cluster,
+            &bw,
+            2,
+            16,
+            &ExecOptions::default(),
+            &Script::device_down_up("never", 0, 1_000, 1_001),
+        );
+        assert_eq!(plain.total_time, scripted.total_time);
+        assert_eq!(plain.step_times, scripted.step_times);
+        assert_eq!(plain.kv_tokens_transferred, scripted.kv_tokens_transferred);
+        assert_eq!(scripted.replans_fired, 0);
+        assert_eq!(scripted.kv_migrated_bytes, 0);
+        assert!(scripted.recovery_steps.is_empty());
     }
 
     #[test]

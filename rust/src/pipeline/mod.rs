@@ -18,7 +18,8 @@ pub mod tensor;
 pub mod traditional;
 
 pub use self::core::{
-    CommonOptions, CoreArena, CoreState, ExecutorCore, RequestRun, SchedulePolicy, StepCtx,
+    run_single_checked, ChurnCtx, ChurnError, CommonOptions, CoreArena, CoreState, ExecutorCore,
+    RequestRun, SchedulePolicy, StepCtx,
 };
 pub use interleaved::{
     run_interleaved, run_interleaved_scripted, sweep_interleaved, ExecOptions, InterleavedPolicy,

@@ -27,6 +27,17 @@ pub struct SimResult {
     /// contention — which scripted bandwidth sags inflate — in sweep
     /// artifacts.
     pub bw_stalls: u64,
+    /// Churn-triggered re-plans (Down re-plan onto survivors + Up
+    /// re-expansion) fired by the policy.
+    pub replans_fired: usize,
+    /// KV bytes migrated off departing / onto rejoining devices over the
+    /// shared link (Eq. 8 volume model — migration traffic contends, so
+    /// `bw_stalls` sees it).
+    pub kv_migrated_bytes: u64,
+    /// Per-`Down`-event recovery latency in decode steps (firing order):
+    /// steps until step latency returns within tolerance of the
+    /// pre-fault mean, `None` when the run ends still degraded.
+    pub recovery_steps: Vec<Option<usize>>,
 }
 
 impl SimResult {
@@ -62,6 +73,9 @@ mod tests {
             online_plans_fired: 0,
             emergency_steps: 0,
             bw_stalls: 0,
+            replans_fired: 0,
+            kv_migrated_bytes: 0,
+            recovery_steps: Vec::new(),
         };
         assert!((r.ms_per_token() - 50.0).abs() < 1e-9);
         assert!((r.mean_step() - 0.2).abs() < 1e-12);

@@ -37,7 +37,7 @@
 //! `rust/tests/fleet.rs`, and byte-diffed across `LIME_THREADS={1,4}` in
 //! CI).
 
-use crate::adapt::Script;
+use crate::adapt::{ChurnEvent, ChurnKind, Script};
 use crate::cluster::Cluster;
 use crate::model::ModelSpec;
 use crate::net::BandwidthTrace;
@@ -157,6 +157,13 @@ pub struct FleetSpec {
     /// Decode steps per request.
     pub steps: usize,
     pub seed: u64,
+    /// Cluster-level churn: only the script's churn channel is read at
+    /// fleet level, with `ChurnEvent::device` indexing this spec's
+    /// cluster list and `at_step` the global *arrival index* the event
+    /// fires before. `Script::none()` (the default everywhere churn is
+    /// not under test) keeps routing — and the serialized artifact —
+    /// byte-identical to the pre-churn fleet.
+    pub churn: Script,
 }
 
 /// Fixed seed of the demo fleet (`lime fleet`, benches, CI determinism).
@@ -191,6 +198,7 @@ impl FleetSpec {
             lambda: 200.0,
             steps,
             seed: FLEET_SEED,
+            churn: Script::none(),
         }
     }
 
@@ -218,40 +226,170 @@ pub fn route(
     assert!(u32::try_from(requests.len()).is_ok(), "stream exceeds u32 indexing");
     let mut est_free = vec![0.0f64; n];
     let mut parts: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let alive = vec![true; n];
     for (k, r) in requests.iter().enumerate() {
-        let pick = match policy {
-            RouterPolicy::RoundRobin => k % n,
-            RouterPolicy::JoinShortestQueue => {
-                argmin(n, |c| (est_free[c] - r.arrival).max(0.0))
-            }
-            RouterPolicy::PlanAware => argmin(n, |c| {
-                est_free[c].max(r.arrival)
-                    + r.steps as f64 * clusters[c].planned_s_per_token
-            }),
-        };
+        let pick = pick_cluster(policy, k, r, clusters, &est_free, &alive);
         // The estimate advances identically under every policy: service
         // begins when the cluster frees (or the request arrives) and runs
         // at the planned per-token rate.
-        est_free[pick] = est_free[pick].max(r.arrival)
-            + r.steps as f64 * clusters[pick].planned_s_per_token;
+        est_free[pick] =
+            est_free[pick].max(r.arrival) + r.steps as f64 * plan_rate(clusters, pick);
         parts[pick].push(k as u32);
     }
     parts
 }
 
-/// First index minimizing `f` (strict comparison — ties go low, keeping
-/// routing deterministic across worker counts).
-fn argmin(n: usize, f: impl Fn(usize) -> f64) -> usize {
-    let mut best = 0usize;
-    let mut best_v = f(0);
-    for c in 1..n {
+/// [`route`] under a cluster-churn timeline. `ChurnEvent::device` indexes
+/// `clusters` and `at_step` is the global *arrival index* the event fires
+/// before. A `Down` marks the cluster unroutable and drains its
+/// queued-but-not-started requests (estimated start still in the future
+/// at the fault) back through `policy` to the surviving clusters, in
+/// arrival order; in-service requests stay where they are. An `Up` makes
+/// the cluster routable again. Returns the per-cluster ascending index
+/// lists plus the re-route count. With an empty event list this routes
+/// exactly like [`route`].
+pub fn route_churn(
+    policy: RouterPolicy,
+    requests: &[Request],
+    clusters: &[FleetCluster],
+    churn: &[ChurnEvent],
+) -> (Vec<Vec<u32>>, u64) {
+    let n = clusters.len();
+    assert!(n > 0, "routing needs at least one cluster");
+    assert!(u32::try_from(requests.len()).is_ok(), "stream exceeds u32 indexing");
+    for ev in churn {
+        assert!(
+            ev.device < n,
+            "churn event targets cluster {} of a {n}-cluster fleet",
+            ev.device
+        );
+    }
+    let mut alive = vec![true; n];
+    let mut est_free = vec![0.0f64; n];
+    // Committed work per cluster: (request index, est_start, est_end),
+    // est_start non-decreasing within a queue.
+    let mut queues: Vec<Vec<(u32, f64, f64)>> = vec![Vec::new(); n];
+    let mut rerouted = 0u64;
+    for (k, r) in requests.iter().enumerate() {
+        for ev in churn.iter().filter(|ev| ev.at_step == k) {
+            match ev.kind {
+                ChurnKind::Down => {
+                    if !alive[ev.device] {
+                        continue; // idempotent, like the pipeline core
+                    }
+                    alive[ev.device] = false;
+                    assert!(
+                        alive.iter().any(|&a| a),
+                        "churn script leaves no routable cluster at arrival {k}"
+                    );
+                    // Drain everything that has not started by the fault
+                    // time; the cluster keeps only its in-service work.
+                    let now = r.arrival;
+                    let q = &mut queues[ev.device];
+                    let keep = q.partition_point(|&(_, start, _)| start < now);
+                    let drained = q.split_off(keep);
+                    est_free[ev.device] = q.last().map_or(0.0, |&(_, _, end)| end);
+                    for (idx, _, _) in drained {
+                        let rr = &requests[idx as usize];
+                        let pick =
+                            pick_cluster(policy, idx as usize, rr, clusters, &est_free, &alive);
+                        // Re-dispatch happens at the fault: the drained
+                        // request cannot start before `now`.
+                        let start = est_free[pick].max(now);
+                        let end = start + rr.steps as f64 * plan_rate(clusters, pick);
+                        est_free[pick] = end;
+                        queues[pick].push((idx, start, end));
+                        rerouted += 1;
+                    }
+                }
+                ChurnKind::Up => alive[ev.device] = true,
+            }
+        }
+        let pick = pick_cluster(policy, k, r, clusters, &est_free, &alive);
+        let start = est_free[pick].max(r.arrival);
+        let end = start + r.steps as f64 * plan_rate(clusters, pick);
+        est_free[pick] = end;
+        queues[pick].push((k as u32, start, end));
+    }
+    let parts = queues
+        .into_iter()
+        .map(|q| {
+            // Re-routes append out of arrival order; the shard contract
+            // (and `simulate_stream_sink`) wants ascending indices.
+            let mut idx: Vec<u32> = q.into_iter().map(|(i, _, _)| i).collect();
+            idx.sort_unstable();
+            idx
+        })
+        .collect();
+    (parts, rerouted)
+}
+
+/// Planned seconds/token of cluster `c`, guarded: a non-finite or
+/// non-positive offline signal (a corrupted plan, a division blow-up)
+/// contributes zero service-time estimate instead of poisoning `est_free`
+/// for every later routing decision.
+fn plan_rate(clusters: &[FleetCluster], c: usize) -> f64 {
+    let s = clusters[c].planned_s_per_token;
+    if s.is_finite() && s > 0.0 {
+        s
+    } else {
+        0.0
+    }
+}
+
+/// Is the plan-aware signal usable across the whole fleet?
+fn plan_signal_ok(clusters: &[FleetCluster]) -> bool {
+    clusters
+        .iter()
+        .all(|c| c.planned_s_per_token.is_finite() && c.planned_s_per_token > 0.0)
+}
+
+/// One routing decision among the currently-alive clusters. `PlanAware`
+/// falls back to the JSQ criterion per request whenever any cluster's
+/// `planned_s_per_token` is non-finite or non-positive — a degenerate
+/// signal must not silently route every request to the "free" cluster.
+fn pick_cluster(
+    policy: RouterPolicy,
+    k: usize,
+    r: &Request,
+    clusters: &[FleetCluster],
+    est_free: &[f64],
+    alive: &[bool],
+) -> usize {
+    let n = clusters.len();
+    match policy {
+        RouterPolicy::RoundRobin => {
+            let mut pick = k % n;
+            while !alive[pick] {
+                pick = (pick + 1) % n;
+            }
+            pick
+        }
+        RouterPolicy::JoinShortestQueue => {
+            argmin_alive(alive, |c| (est_free[c] - r.arrival).max(0.0))
+        }
+        RouterPolicy::PlanAware if plan_signal_ok(clusters) => argmin_alive(alive, |c| {
+            est_free[c].max(r.arrival) + r.steps as f64 * clusters[c].planned_s_per_token
+        }),
+        RouterPolicy::PlanAware => argmin_alive(alive, |c| (est_free[c] - r.arrival).max(0.0)),
+    }
+}
+
+/// First alive index minimizing `f` (strict comparison — ties go low,
+/// keeping routing deterministic across worker counts).
+fn argmin_alive(alive: &[bool], f: impl Fn(usize) -> f64) -> usize {
+    let mut best: Option<(usize, f64)> = None;
+    for c in 0..alive.len() {
+        if !alive[c] {
+            continue;
+        }
         let v = f(c);
-        if v < best_v {
-            best = c;
-            best_v = v;
+        match best {
+            Some((_, bv)) if v >= bv => {}
+            _ => best = Some((c, v)),
         }
     }
-    best
+    best.expect("at least one cluster must be alive").0
 }
 
 // ---------------------------------------------------------------------
@@ -382,6 +520,11 @@ pub struct CellResult {
     pub tbt: CellMetric,
     pub queueing: CellMetric,
     pub shards: Vec<ShardResult>,
+    /// Requests drained off churned-down clusters and re-routed —
+    /// `Some` only when the fleet ran with a non-empty churn channel, so
+    /// churn-free artifacts stay byte-identical to `lime-fleet-v1` before
+    /// the churn axis existed.
+    pub rerouted: Option<u64>,
 }
 
 /// Merge shard metrics into a cell metric: exact mean from the running
@@ -501,10 +644,20 @@ pub fn run_fleet_on(spec: &FleetSpec, pool: Option<&Pool>) -> Vec<CellResult> {
         .collect();
 
     // Phase 1 — sequential routing, cheap: O(count · clusters) per cell.
+    // The churn-aware router runs only when the spec's churn channel is
+    // non-empty; otherwise this is exactly the pre-churn path.
     let mut jobs: Vec<ShardJob> = Vec::with_capacity(spec.routers.len() * spec.patterns.len() * nc);
+    let mut cell_rerouted: Vec<Option<u64>> =
+        Vec::with_capacity(spec.routers.len() * spec.patterns.len());
     for (ri, &router) in spec.routers.iter().enumerate() {
         for (pi, &pattern) in spec.patterns.iter().enumerate() {
-            let parts = route(router, &streams[pi], &spec.clusters);
+            let (parts, rerouted) = if spec.churn.churn.is_empty() {
+                (route(router, &streams[pi], &spec.clusters), None)
+            } else {
+                let (p, n) = route_churn(router, &streams[pi], &spec.clusters, &spec.churn.churn);
+                (p, Some(n))
+            };
+            cell_rerouted.push(rerouted);
             for (ci, indices) in parts.into_iter().enumerate() {
                 let idx = ((ri * 97 + pi) * 97 + ci) as u64 + 1;
                 jobs.push(ShardJob {
@@ -547,6 +700,7 @@ pub fn run_fleet_on(spec: &FleetSpec, pool: Option<&Pool>) -> Vec<CellResult> {
                 tbt: pick(|s| &s.tbt),
                 queueing: pick(|s| &s.queueing),
                 shards: chunk.to_vec(),
+                rerouted: cell_rerouted[cell_i],
             }
         })
         .collect()
@@ -587,7 +741,9 @@ fn shard_json(s: &ShardResult) -> Json {
 }
 
 fn cell_json(c: &CellResult) -> Json {
-    obj(&[
+    // Keys ascending; "rerouted" slots between "queueing_delay_s" and
+    // "router" and appears only on churn runs.
+    let mut fields: Vec<(&str, Json)> = vec![
         ("count", c.count.into()),
         ("makespan_s", c.makespan.into()),
         ("pattern", pattern_key(c.pattern).into()),
@@ -596,10 +752,14 @@ fn cell_json(c: &CellResult) -> Json {
             Json::Arr(c.shards.iter().map(shard_json).collect()),
         ),
         ("queueing_delay_s", metric_json(&c.queueing)),
-        ("router", c.router.key().into()),
-        ("tbt_s", metric_json(&c.tbt)),
-        ("ttft_s", metric_json(&c.ttft)),
-    ])
+    ];
+    if let Some(n) = c.rerouted {
+        fields.push(("rerouted", n.into()));
+    }
+    fields.push(("router", c.router.key().into()));
+    fields.push(("tbt_s", metric_json(&c.tbt)));
+    fields.push(("ttft_s", metric_json(&c.ttft)));
+    obj(&fields)
 }
 
 /// Stream the `lime-fleet-v1` artifact to `out` cell by cell — the whole
@@ -618,6 +778,21 @@ pub fn write_fleet<W: std::io::Write>(
         w.value(&cell_json(c))?;
     }
     w.end()?;
+    // "cells" < "churn" < "clusters": the optional header keeps keys
+    // ascending, and is absent entirely on churn-free runs (byte-identity
+    // with pre-churn artifacts).
+    if !spec.churn.churn.is_empty() {
+        w.key("churn")?;
+        w.begin_arr()?;
+        for ev in &spec.churn.churn {
+            w.value(&obj(&[
+                ("at_arrival", ev.at_step.into()),
+                ("cluster", ev.device.into()),
+                ("kind", ev.kind.name().into()),
+            ]))?;
+        }
+        w.end()?;
+    }
     w.key("clusters")?;
     w.begin_arr()?;
     for fc in &spec.clusters {
@@ -798,6 +973,40 @@ pub fn validate_fleet(json: &Json) -> Result<FleetSummary, String> {
     let routers = keyset("routers", &["rr", "jsq", "plan"])?;
     let patterns = keyset("patterns", &["sporadic", "bursty"])?;
 
+    // Header: optional churn channel (absent on churn-free artifacts — its
+    // absence is part of the byte-identity contract with older runs).
+    let has_churn = match json.get("churn") {
+        None => false,
+        Some(ch) => {
+            let arr = ch.as_arr().ok_or("'churn' must be an array")?;
+            if arr.is_empty() {
+                return Err("'churn' must be absent rather than empty".into());
+            }
+            for (i, ev) in arr.iter().enumerate() {
+                let what = format!("churn[{i}]");
+                field(ev, "at_arrival", &what)?
+                    .as_u64()
+                    .ok_or_else(|| format!("{what}.at_arrival must be a non-negative integer"))?;
+                let c = field(ev, "cluster", &what)?
+                    .as_usize()
+                    .ok_or_else(|| format!("{what}.cluster must be an integer"))?;
+                if c >= clusters.len() {
+                    return Err(format!(
+                        "{what}.cluster {c} out of range for {} clusters",
+                        clusters.len()
+                    ));
+                }
+                match field(ev, "kind", &what)?.as_str() {
+                    Some("down") | Some("up") => {}
+                    other => {
+                        return Err(format!("{what}.kind must be \"down\" or \"up\", got {other:?}"))
+                    }
+                }
+            }
+            true
+        }
+    };
+
     // Cells: exactly the router × pattern cross, each cell a partition of
     // the stream across the header's clusters.
     let cells = field(json, "cells", "artifact")?
@@ -839,6 +1048,13 @@ pub fn validate_fleet(json: &Json) -> Result<FleetSummary, String> {
             ));
         }
         let cell_makespan = finite_ge0(cell, "makespan_s", &what)?;
+        if has_churn {
+            field(cell, "rerouted", &what)?
+                .as_u64()
+                .ok_or_else(|| format!("{what}.rerouted must be a non-negative integer"))?;
+        } else if cell.get("rerouted").is_some() {
+            return Err(format!("{what}.rerouted requires a 'churn' header"));
+        }
         check_stat(cell, "queueing_delay_s", &what, cell_count > 0)?;
         check_stat(cell, "tbt_s", &what, cell_count > 0)?;
         check_stat(cell, "ttft_s", &what, cell_count > 0)?;
@@ -920,6 +1136,7 @@ mod tests {
             lambda: 2.0,
             steps: 3,
             seed: 7,
+            churn: Script::none(),
         }
     }
 
@@ -970,6 +1187,81 @@ mod tests {
         // Both clusters idle: JSQ's backlog ties at 0 and goes low-index.
         let jsq_parts = route(RouterPolicy::JoinShortestQueue, &reqs, &spec.clusters);
         assert_eq!(jsq_parts[0].len(), 1, "idle tie breaks to the lowest index");
+    }
+
+    #[test]
+    fn degenerate_plan_signal_falls_back_to_jsq() {
+        let mut spec = tiny_fleet(8);
+        spec.clusters[0].planned_s_per_token = f64::NAN;
+        let reqs = stream_requests(Pattern::Bursty, 5, 8, 1.0, 0, 2);
+        let plan_parts = route(RouterPolicy::PlanAware, &reqs, &spec.clusters);
+        let total: usize = plan_parts.iter().map(Vec::len).sum();
+        assert_eq!(total, reqs.len(), "a NaN plan signal must not drop requests");
+        // With the plan criterion unusable, PlanAware is defined to route
+        // exactly like JSQ — not to compare against NaN.
+        let jsq_parts = route(RouterPolicy::JoinShortestQueue, &reqs, &spec.clusters);
+        assert_eq!(plan_parts, jsq_parts);
+    }
+
+    #[test]
+    fn churn_reroutes_the_dead_clusters_backlog_and_conserves_the_stream() {
+        let mut spec = tiny_fleet(24);
+        // A slow cluster 0 accumulates a queue under round-robin, so the
+        // mid-stream fault finds queued-but-unstarted work to drain.
+        spec.clusters[0].planned_s_per_token = 10.0;
+        let script = Script::device_down_up("c0-blip", 0, 6, 18);
+        let reqs = stream_requests(Pattern::Sporadic, 11, 24, 2.0, 0, 3);
+        let (parts, rerouted) =
+            route_churn(RouterPolicy::RoundRobin, &reqs, &spec.clusters, &script.churn);
+        assert!(rerouted > 0, "the dead cluster's backlog must drain to survivors");
+        // Conservation: every request routed exactly once, parts ascending.
+        let mut idxs: Vec<u32> = parts.iter().flatten().copied().collect();
+        idxs.sort_unstable();
+        assert_eq!(idxs, (0..reqs.len() as u32).collect::<Vec<_>>());
+        for p in &parts {
+            assert!(p.windows(2).all(|w| w[0] < w[1]), "parts must stay ascending");
+        }
+        // No arrival in the outage window lands on the dead cluster.
+        assert!(
+            parts[0].iter().all(|&k| k < 6 || k >= 18),
+            "cluster 0 must not be routable while down: {:?}",
+            parts[0]
+        );
+    }
+
+    #[test]
+    fn empty_churn_routes_exactly_like_route() {
+        let spec = tiny_fleet(24);
+        let reqs = stream_requests(Pattern::Bursty, 11, 24, 2.0, 0, 3);
+        for router in RouterPolicy::all() {
+            let plain = route(router, &reqs, &spec.clusters);
+            let (churned, rerouted) = route_churn(router, &reqs, &spec.clusters, &[]);
+            assert_eq!(plain, churned, "{router:?} diverged with an empty timeline");
+            assert_eq!(rerouted, 0);
+        }
+    }
+
+    #[test]
+    fn churned_fleet_pool_matches_sequential_and_validates() {
+        let mut spec = tiny_fleet(24);
+        spec.churn = Script::device_down_up("c0-blip", 0, 6, 18);
+        let seq = run_fleet_sequential(&spec);
+        let pool = Pool::new(4);
+        let par = run_fleet_on(&spec, Some(&pool));
+        let seq_bytes = fleet_artifact_bytes(&spec, &seq);
+        assert_eq!(
+            seq_bytes,
+            fleet_artifact_bytes(&spec, &par),
+            "churned pool fleet must serialize byte-identically to sequential"
+        );
+        let parsed = Json::parse(std::str::from_utf8(&seq_bytes).unwrap()).unwrap();
+        let summary = validate_fleet(&parsed).expect("churned artifact validates");
+        assert_eq!(summary.requests, 24);
+        assert!(parsed.get("churn").is_some(), "churn header must be emitted");
+        for cell in &seq {
+            assert_eq!(cell.count, 24, "churn must not drop requests");
+            assert!(cell.rerouted.is_some(), "every cell reports a reroute count");
+        }
     }
 
     #[test]
@@ -1059,6 +1351,27 @@ mod tests {
                     c0.insert("makespan_s".into(), 1e9.into());
                 }
             }
+        })
+        .is_err());
+        // A reroute counter without a churn header is a schema violation.
+        assert!(corrupt(&|m| {
+            if let Some(Json::Arr(cells)) = m.get_mut("cells") {
+                if let Json::Obj(c0) = &mut cells[0] {
+                    c0.insert("rerouted".into(), 3usize.into());
+                }
+            }
+        })
+        .is_err());
+        // A churn header obliges every cell to carry a reroute counter.
+        assert!(corrupt(&|m| {
+            m.insert(
+                "churn".into(),
+                Json::Arr(vec![obj(&[
+                    ("at_arrival", 6usize.into()),
+                    ("cluster", 0usize.into()),
+                    ("kind", "down".into()),
+                ])]),
+            );
         })
         .is_err());
         // Non-monotone percentiles are a stats bug, not data.

@@ -82,6 +82,13 @@ pub struct StreamResult {
     pub online_plans_fired: usize,
     pub emergency_steps: usize,
     pub bw_stalls: u64,
+    /// Churn-triggered re-plans fired across the stream.
+    pub replans_fired: usize,
+    /// KV bytes migrated off departing / onto rejoining devices.
+    pub kv_migrated_bytes: u64,
+    /// Per-`Down`-event recovery latency in decode steps, stream-wide
+    /// firing order (`None` = the stream ended still degraded).
+    pub recovery_steps: Vec<Option<usize>>,
 }
 
 impl StreamResult {
@@ -150,6 +157,9 @@ pub struct StreamStats {
     pub online_plans_fired: usize,
     pub emergency_steps: usize,
     pub bw_stalls: u64,
+    pub replans_fired: usize,
+    pub kv_migrated_bytes: u64,
+    pub recovery_steps: Vec<Option<usize>>,
 }
 
 /// Serve `requests` (sorted by arrival) through `policy` on one shared
@@ -202,6 +212,9 @@ pub fn simulate_stream<P: SchedulePolicy>(
         online_plans_fired: stats.online_plans_fired,
         emergency_steps: stats.emergency_steps,
         bw_stalls: stats.bw_stalls,
+        replans_fired: stats.replans_fired,
+        kv_migrated_bytes: stats.kv_migrated_bytes,
+        recovery_steps: stats.recovery_steps,
     }
 }
 
@@ -244,7 +257,13 @@ pub fn simulate_stream_sink<P: SchedulePolicy, S: StreamSink>(
         }
         let batch = &requests[i..j];
         let tokens = batch.iter().map(|r| r.steps).max().unwrap_or(0);
-        let run = core.run_request_in(t_start, batch.len(), tokens, &mut arena);
+        // Scripted churn that would take down the last surviving device is
+        // a scenario-authoring error, rejected by `ScenarioMatrix::
+        // assert_valid` before any stream runs; fail loudly if one slips
+        // through rather than serving from an empty cluster.
+        let run = core
+            .run_request_in(t_start, batch.len(), tokens, &mut arena)
+            .expect("churn script must leave at least one surviving device");
         for r in batch {
             let finish = if r.steps == 0 {
                 run.decode_start
@@ -291,6 +310,9 @@ pub fn simulate_stream_sink<P: SchedulePolicy, S: StreamSink>(
         online_plans_fired: totals.online_plans_fired,
         emergency_steps: totals.emergency_steps,
         bw_stalls: totals.bw_stalls,
+        replans_fired: totals.replans_fired,
+        kv_migrated_bytes: totals.kv_migrated_bytes,
+        recovery_steps: totals.recovery_steps,
     }
 }
 

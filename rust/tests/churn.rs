@@ -1,0 +1,241 @@
+//! Device-churn robustness invariants (CI runs this suite under
+//! `LIME_THREADS={1,4}`):
+//!
+//! * a churn script whose events never fire leaves **every executor and
+//!   the serving path bit-identical** to the no-churn run — churn is a
+//!   pay-for-what-you-use overlay, never a perturbation;
+//! * one composed script (correlated memory dip + bandwidth sag + a
+//!   device Down/Up blip) fires pressure adaptation **and** churn
+//!   re-planning with KV migration in a single run, and records a
+//!   recovery slot per Down event;
+//! * a script that takes down the **last surviving device** surfaces as
+//!   a structured [`ChurnError`], not a panic;
+//! * the churn-capable static baseline (EdgeShard) degrades honestly
+//!   under the same fault LIME re-plans around.
+
+use lime::adapt::{MemScenario, Script};
+use lime::baselines::{by_name, Outcome};
+use lime::cluster::Cluster;
+use lime::model::ModelSpec;
+use lime::net::BandwidthTrace;
+use lime::pipeline::{
+    run_interleaved_scripted, run_single_checked, run_tensor_parallel_scripted,
+    run_traditional_scripted, CommonOptions, ExecOptions, InterleavedPolicy, TpOptions,
+    TradOptions,
+};
+use lime::plan::{plan, Allocation, PlanOptions};
+use lime::serve::serve_interleaved;
+use lime::sim::TraceMode;
+use lime::util::bytes::{gib, mbps};
+use lime::workload::{stream_requests, Pattern, Request};
+
+fn setup_small() -> (Allocation, Cluster) {
+    let spec = ModelSpec::llama2_13b();
+    let cluster = Cluster::env_e1();
+    let opts = PlanOptions {
+        empirical_tokens: 128,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    };
+    (plan(&spec, &cluster, &opts).unwrap().allocation, cluster)
+}
+
+fn setup_lowmem() -> (Allocation, Cluster) {
+    let spec = ModelSpec::llama33_70b();
+    let cluster = Cluster::lowmem_setting1();
+    let opts = PlanOptions {
+        empirical_tokens: 128,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    };
+    (plan(&spec, &cluster, &opts).unwrap().allocation, cluster)
+}
+
+fn batch_requests(micro: usize, tokens: usize) -> Vec<Request> {
+    stream_requests(Pattern::Bursty, 0xE0, micro, 1.0, 64, tokens)
+}
+
+#[test]
+fn unfired_churn_leaves_every_executor_bit_identical() {
+    // Events scheduled past the horizon never fire; the overlay must be
+    // invisible — same timings, same counters, zero churn telemetry.
+    let (alloc, cluster) = setup_small();
+    let spec = ModelSpec::llama2_13b();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let tokens = 6;
+    let late = Script::device_down_up("late-blip", 1, 1_000, 2_000);
+    let none = Script::none();
+
+    let exec = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let a = run_interleaved_scripted(&alloc, &cluster, &bw, 1, tokens, &exec, &none);
+    let b = run_interleaved_scripted(&alloc, &cluster, &bw, 1, tokens, &exec, &late);
+    assert_eq!(a.step_times, b.step_times, "interleaved timings");
+    assert_eq!(a.total_time, b.total_time);
+    assert_eq!(a.kv_tokens_transferred, b.kv_tokens_transferred);
+    assert_eq!(b.replans_fired, 0);
+    assert_eq!(b.kv_migrated_bytes, 0);
+    assert!(b.recovery_steps.is_empty());
+
+    let trad = TradOptions {
+        trace_mode: TraceMode::Off,
+        ..TradOptions::default()
+    };
+    let a = run_traditional_scripted(&alloc, &cluster, &bw, 1, tokens, &trad, &none);
+    let b = run_traditional_scripted(&alloc, &cluster, &bw, 1, tokens, &trad, &late);
+    assert_eq!(a.step_times, b.step_times, "traditional timings");
+    assert_eq!(a.total_time, b.total_time);
+
+    let tp = TpOptions {
+        trace_mode: TraceMode::Off,
+        ..TpOptions::default()
+    };
+    let a = run_tensor_parallel_scripted(&spec, &cluster, &bw, 1, tokens, &tp, &none);
+    let b = run_tensor_parallel_scripted(&spec, &cluster, &bw, 1, tokens, &tp, &late);
+    assert_eq!(a.step_times, b.step_times, "tensor-parallel timings");
+    assert_eq!(a.total_time, b.total_time);
+
+    // Serving path: the whole stream, not just one request.
+    let reqs = batch_requests(2, 4);
+    let sa = serve_interleaved(&alloc, &cluster, &bw, 2, &exec, &none, &reqs);
+    let sb = serve_interleaved(&alloc, &cluster, &bw, 2, &exec, &late, &reqs);
+    assert_eq!(sa.step_times, sb.step_times, "stream timings");
+    assert_eq!(sa.makespan, sb.makespan);
+    assert_eq!(sb.replans_fired, 0);
+    assert!(sb.recovery_steps.is_empty());
+}
+
+#[test]
+fn composed_pressure_and_churn_fire_adaptation_and_migration_in_one_run() {
+    // One script carrying all three channels: the correlated dip +
+    // bandwidth sag drive LIME's online pressure machinery while the
+    // Down/Up blip of the smallest device forces a churn re-plan and a
+    // KV migration — in the same run, on the lowmem 70B deployment.
+    let (alloc, cluster) = setup_lowmem();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let tokens = 48;
+    let last = cluster.len() - 1;
+    let script = Script::from_mem(MemScenario::correlated_dip(
+        "corr-dip-d01",
+        &[0, 1],
+        2,
+        gib(4.0),
+        8,
+        40,
+    ))
+    .with_bandwidth_sag(0.5, 8, 40)
+    .with_device_down_up(last, 16, 32)
+    .with_label("joint-pressure-churn");
+
+    let exec = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let r = run_interleaved_scripted(&alloc, &cluster, &bw, 1, tokens, &exec, &script);
+    assert!(
+        r.online_plans_fired > 0 || r.emergency_steps > 0,
+        "memory pressure must fire the online adaptation"
+    );
+    assert!(r.replans_fired >= 1, "the Down/Up blip must fire a re-plan");
+    assert!(r.kv_migrated_bytes > 0, "the departing device's KV must migrate");
+    assert_eq!(r.recovery_steps.len(), 1, "one Down event, one recovery slot");
+    // The fault window really costs something: the churned run is no
+    // faster than the same pressure script without the blip.
+    let pressure_only = Script::from_mem(MemScenario::correlated_dip(
+        "corr-dip-d01",
+        &[0, 1],
+        2,
+        gib(4.0),
+        8,
+        40,
+    ))
+    .with_bandwidth_sag(0.5, 8, 40);
+    let p = run_interleaved_scripted(&alloc, &cluster, &bw, 1, tokens, &exec, &pressure_only);
+    assert!(r.total_time >= p.total_time, "churn cannot make the run faster");
+}
+
+#[test]
+fn taking_down_the_last_device_is_a_structured_error() {
+    // A single-device deployment whose only device goes down: the checked
+    // entry point must return the typed error (the unchecked run_* family
+    // documents the panic), naming the step and device.
+    let spec = ModelSpec::llama2_13b();
+    let cluster = Cluster::env_e1().subset(&[0]);
+    let popts = PlanOptions {
+        empirical_tokens: 128,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    };
+    let alloc = plan(&spec, &cluster, &popts).unwrap().allocation;
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let exec = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let script = Script::device_down_up("kill-d0", 0, 2, 4);
+    let err = run_single_checked(
+        InterleavedPolicy::new(&alloc, &cluster, &exec),
+        &cluster,
+        &bw,
+        1,
+        6,
+        &CommonOptions::from(&exec),
+        &script,
+    )
+    .expect_err("downing the only device must fail");
+    assert_eq!(err.device, 0);
+    assert_eq!(err.at_step, 2);
+    assert!(err.to_string().contains("no surviving devices"));
+}
+
+#[test]
+fn edgeshard_degrades_under_the_fault_lime_replans_around() {
+    // The honest-degradation contract: EdgeShard's static partition rides
+    // the churn axis (zeroed caps, emergency spills) without any of
+    // LIME's recovery machinery, while LIME re-plans onto the survivors.
+    let spec = ModelSpec::llama2_13b();
+    let cluster = Cluster::env_e1();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let tokens = 24;
+    let script = Script::device_down_up("d1-blip", 1, 8, 16);
+
+    let es = by_name("edgeshard").unwrap();
+    assert!(es.churn_capable());
+    let base = es.run_mode(&spec, &cluster, &bw, Pattern::Sporadic, tokens, TraceMode::Off);
+    let churned =
+        es.run_scripted(&spec, &cluster, &bw, Pattern::Sporadic, tokens, TraceMode::Off, &script);
+    let (Outcome::Ok(b), Outcome::Ok(c)) = (base, churned) else {
+        panic!("EdgeShard must complete on E1 with and without churn");
+    };
+    assert!(
+        c.total_time >= b.total_time,
+        "a static partition cannot get faster when a device dies: {} < {}",
+        c.total_time,
+        b.total_time
+    );
+    assert_eq!(c.replans_fired, 0, "no re-planning machinery");
+    assert_eq!(c.kv_migrated_bytes, 0, "no migration machinery");
+    assert_eq!(c.recovery_steps.len(), 1, "the core still tracks recovery");
+
+    // Rigid baselines without the capability stay off the axis entirely:
+    // run_scripted falls back to the unscripted run.
+    let galaxy = by_name("galaxy").unwrap();
+    assert!(!galaxy.churn_capable());
+    let g0 = galaxy.run_mode(&spec, &cluster, &bw, Pattern::Sporadic, tokens, TraceMode::Off);
+    let g1 = galaxy
+        .run_scripted(&spec, &cluster, &bw, Pattern::Sporadic, tokens, TraceMode::Off, &script);
+    assert_eq!(g0.ms_per_token(), g1.ms_per_token());
+
+    // LIME on the same fault: re-plan fired, KV migrated, recovery slot
+    // recorded (finite once the device returns and latency settles).
+    let (alloc, cluster) = setup_small();
+    let exec = ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    };
+    let r = run_interleaved_scripted(&alloc, &cluster, &bw, 1, tokens, &exec, &script);
+    assert!(r.replans_fired >= 1);
+    assert_eq!(r.recovery_steps.len(), 1);
+}

@@ -59,6 +59,32 @@ fn demo_artifact_validates_and_round_trips() {
 }
 
 #[test]
+fn churned_fleet_artifact_is_deterministic_and_validates() {
+    // Mid-stream cluster churn (down at arrival 10, back up at 60): the
+    // re-routed artifact must stay byte-identical across worker counts
+    // and pass the strict validator, churn header and per-cell re-route
+    // counts included.
+    let mut spec = small_demo();
+    spec.churn = lime::adapt::Script::device_down_up("c1-blip", 1, 10, 60);
+    let reference = fleet_artifact_bytes(&spec, &run_fleet_sequential(&spec));
+    for workers in [1usize, 4] {
+        let pool = Pool::new(workers);
+        let bytes = fleet_artifact_bytes(&spec, &run_fleet_on(&spec, Some(&pool)));
+        assert_eq!(
+            bytes, reference,
+            "churned fleet artifact differs at {workers} workers"
+        );
+    }
+    let parsed = Json::parse(std::str::from_utf8(&reference).unwrap()).unwrap();
+    let summary = validate_fleet(&parsed).expect("churned artifact validates");
+    assert_eq!(summary.cells, 6);
+    assert!(parsed.get("churn").is_some(), "churn header must be emitted");
+    for cell in parsed.get("cells").unwrap().as_arr().unwrap() {
+        assert!(cell.get("rerouted").unwrap().as_u64().is_some());
+    }
+}
+
+#[test]
 fn sparse_fleet_reports_zero_stats_on_idle_clusters() {
     // Two round-robin requests across four clusters: half the shards are
     // empty and must serialize as validator-clean zero stats, never NaN.

@@ -134,12 +134,13 @@ fn pool_grid_equals_sequential_grid_over_real_experiments() {
 fn scenario_matrix_pool_equals_sequential() {
     // The scenario-matrix acceptance check: a matrix exercising ALL new
     // axes — #Seg overrides (nested plan_with_segs on the pool), a
-    // correlated multi-device dip, a joint bandwidth+memory script, and a
-    // continuous-stream arrival point, both patterns — must be
+    // correlated multi-device dip, a joint bandwidth+memory script, a
+    // continuous-stream arrival point and a device-churn blip (online
+    // re-plan + KV migration inside the cell), both patterns — must be
     // bit-identical between the pooled evaluation and the sequential
-    // reference, cell for cell (request-level metric arrays included),
-    // and the serialized lime-sweep-v4 artifact must be byte-identical
-    // (the in-process proxy for CI's LIME_THREADS={1,4}
+    // reference, cell for cell (request-level metric arrays and churn
+    // counters included), and the serialized lime-sweep-v5 artifact must
+    // be byte-identical (the in-process proxy for CI's LIME_THREADS={1,4}
     // sweep-determinism gate).
     use lime::adapt::{MemScenario, Script};
     use lime::experiments::{ArrivalSpec, ScenarioMatrix, SegChoice};
@@ -177,6 +178,10 @@ fn scenario_matrix_pool_equals_sequential() {
             count: 4,
             lambda: 0.5,
         },
+    ])
+    .with_churn(vec![
+        Script::none(),
+        Script::device_down_up("blip-d1", 1, 1, 3),
     ]);
     let pooled = matrix.eval();
     let sequential = matrix.eval_sequential();
@@ -189,10 +194,14 @@ fn scenario_matrix_pool_equals_sequential() {
     assert!(pooled
         .iter()
         .any(|c| c.requests.as_ref().is_some_and(|r| r.ttft_s.len() == 4)));
+    // Churn cells really fired on both paths (non-trivial counters).
+    assert!(pooled
+        .iter()
+        .any(|c| c.churn == "blip-d1" && c.ms_per_token.is_some()));
     assert_eq!(
         matrix.to_json(&pooled).to_string(),
         matrix.to_json(&sequential).to_string(),
-        "serialized v4 artifact must be byte-identical"
+        "serialized v5 artifact must be byte-identical"
     );
 }
 
