@@ -1,5 +1,5 @@
 """Consumer for the Rust sweep artifacts (schemas ``lime-sweep-v2``
-through ``lime-sweep-v5``; see ``docs/SWEEPS.md`` for the schema
+through ``lime-sweep-v6``; see ``docs/SWEEPS.md`` for the schema
 reference).
 
 ``lime experiments --id sweep`` writes one ``SWEEP_<grid>.json`` per
@@ -21,6 +21,11 @@ renders those artifacts into the paper's figure layouts:
   script and method, latency plus the re-plans fired, KV bytes
   migrated, and recovery steps per Down event (``—`` when the run
   ended degraded) — the LIME-vs-EdgeShard robustness comparison;
+* :func:`fig_batching` — the v6 batching-policy axis: FIFO vs
+  step-level continuous admission per (bandwidth, pattern) stream
+  column — mean/max queueing delay, TTFT, TBT plus the paged-KV
+  counters (pages allocated / spilled, peak fragmentation) the
+  continuous cells carry (see ``docs/SERVING.md``);
 * :func:`speedup_summary` — LIME's speedup over the best completing
   baseline per column (the paper's headline numbers).
 
@@ -49,7 +54,13 @@ import sys
 from dataclasses import dataclass
 from typing import Any
 
-SCHEMAS = ("lime-sweep-v2", "lime-sweep-v3", "lime-sweep-v4", "lime-sweep-v5")
+SCHEMAS = (
+    "lime-sweep-v2",
+    "lime-sweep-v3",
+    "lime-sweep-v4",
+    "lime-sweep-v5",
+    "lime-sweep-v6",
+)
 FLEET_SCHEMA = "lime-fleet-v1"
 
 
@@ -77,6 +88,21 @@ class Grid:
 
     def at_baseline_churn(self, cell: dict[str, Any]) -> bool:
         return cell.get("churn", self.baseline_churn) == self.baseline_churn
+
+    @property
+    def baseline_batching(self) -> str:
+        """Label of the FIFO batching policy — v6 pins it at index 0;
+        pre-v6 artifacts carry no batching axis and every cell is FIFO."""
+        axis = self.axes.get("batching")
+        return axis[0]["label"] if axis else "fifo"
+
+    def at_baseline_batching(self, cell: dict[str, Any]) -> bool:
+        return cell.get("batching", self.baseline_batching) == self.baseline_batching
+
+    def batching_labels(self) -> list[str]:
+        """All batching-policy labels (v6; ``["fifo"]`` pre-v6)."""
+        axis = self.axes.get("batching")
+        return [b["label"] for b in axis] if axis else ["fifo"]
 
     def baseline_cells(self) -> list[dict[str, Any]]:
         """Cells at the baseline axis point (auto seg, no pressure,
@@ -329,9 +355,11 @@ def fig_memory_fluctuation(grid: Grid) -> str:
 def fig_queueing_delay(grid: Grid) -> str:
     """The v4 continuous-serving view: per-request queueing delay, TTFT
     and time-between-tokens summaries for every completed stream cell
-    (auto seg, baseline pressure), one row per (arrival, column). Bursty
-    streams should show the queueing the sporadic pattern avoids — the
-    serving-side shape of the paper's §V-A comparison."""
+    (auto seg, baseline pressure, FIFO batching — the v6 continuous
+    twins get their own :func:`fig_batching` comparison), one row per
+    (arrival, column). Bursty streams should show the queueing the
+    sporadic pattern avoids — the serving-side shape of the paper's
+    §V-A comparison."""
     out = [f"## {grid.grid} — request-level serving metrics (stream cells)"]
 
     def mean(vals: list[float]) -> float:
@@ -344,6 +372,7 @@ def fig_queueing_delay(grid: Grid) -> str:
             or c["seg"] != "auto"
             or c["mem"] != grid.baseline_mem
             or not grid.at_baseline_churn(c)
+            or not grid.at_baseline_batching(c)
         ):
             continue
         req = c["requests"]
@@ -367,6 +396,69 @@ def fig_queueing_delay(grid: Grid) -> str:
         "max qd (s)",
         "mean TTFT (s)",
         "mean TBT (ms)",
+    ]
+    out.append(_md_table(header, rows))
+    return "\n\n".join(out)
+
+
+def fig_batching(grid: Grid) -> str:
+    """The v6 batching-policy view: FIFO vs step-level continuous
+    admission on the same stream columns (LIME, auto seg, baseline
+    pressure/churn). One row per (batching policy, column) — the serving
+    metrics FIFO rows share with :func:`fig_queueing_delay`, plus the
+    paged-KV counters (pages allocated / spilled and peak
+    fragmentation; exactly zero on FIFO rows, which never touch the
+    page pool — ``-`` only on OOM). Continuous rows should show the lower mean
+    queueing delay the admission overlap exists for — the sweep's
+    acceptance gate pins that strictly on the bursty columns (see
+    ``docs/SERVING.md``)."""
+    out = [f"## {grid.grid} — FIFO vs continuous batching (stream cells)"]
+
+    def mean(vals: list[float]) -> float:
+        return sum(vals) / len(vals) if vals else 0.0
+
+    def frag(cell: dict[str, Any]) -> str:
+        value = cell.get("fragmentation")
+        return "-" if value is None else f"{value:.3f}"
+
+    rows = []
+    for batching in grid.batching_labels():
+        for c in grid.stream_cells():
+            if (
+                c["method"] != "lime"
+                or c["seg"] != "auto"
+                or c["mem"] != grid.baseline_mem
+                or not grid.at_baseline_churn(c)
+                or c.get("batching", grid.baseline_batching) != batching
+            ):
+                continue
+            req = c["requests"]
+            qd, ttft, tbt = req["queueing_delay_s"], req["ttft_s"], req["tbt_s"]
+            rows.append(
+                [
+                    batching,
+                    f"{c['bandwidth_mbps']:g} Mbps / {c['pattern']}",
+                    str(len(qd)),
+                    f"{mean(qd):.3f}",
+                    f"{max(qd):.3f}" if qd else "-",
+                    f"{mean(ttft):.3f}",
+                    f"{mean(tbt) * 1e3:.1f}",
+                    _fmt_counter(c, "kv_pages_allocated"),
+                    _fmt_counter(c, "kv_pages_spilled"),
+                    frag(c),
+                ]
+            )
+    header = [
+        "batching",
+        "column",
+        "requests",
+        "mean qd (s)",
+        "max qd (s)",
+        "mean TTFT (s)",
+        "mean TBT (ms)",
+        "KV pages",
+        "pages spilled",
+        "peak frag",
     ]
     out.append(_md_table(header, rows))
     return "\n\n".join(out)
@@ -563,6 +655,8 @@ def render_grid(grid: Grid) -> str:
     ]
     if grid.stream_cells():
         parts.append(fig_queueing_delay(grid))
+    if len(grid.batching_labels()) > 1:
+        parts.append(fig_batching(grid))
     if grid.churn_labels():
         parts.append(fig_recovery_latency(grid))
     parts.append(speedup_summary(grid))

@@ -1,8 +1,9 @@
-"""Consumer-side tests for the ``lime-sweep-v2``..``v5`` artifacts:
+"""Consumer-side tests for the ``lime-sweep-v2``..``v6`` artifacts:
 loading, figure-layout rendering, the request-level serving table, the
-device-churn recovery-latency table, and the speedup summary — against
-small hand-built grids mirroring what ``lime experiments --id sweep``
-emits (v5) and what older checkouts emitted (v2/v3/v4)."""
+batching-policy comparison table, the device-churn recovery-latency
+table, and the speedup summary — against small hand-built grids
+mirroring what ``lime experiments --id sweep`` emits (v6) and what
+older checkouts emitted (v2/v3/v4/v5)."""
 
 import json
 
@@ -388,6 +389,120 @@ def test_v5_render_grid_includes_recovery_section_once(sweep_dir_v5):
     g = figures.load_sweeps(str(sweep_dir_v5))[0]
     rendered = figures.render_grid(g)
     assert rendered.count("recovery latency under device churn") == 1
+
+
+@pytest.fixture
+def sweep_dir_v6(tmp_path):
+    """A minimal lime-sweep-v6 artifact: the batching-policy axis with a
+    FIFO/continuous twin pair on one bursty stream column — the
+    continuous cell admits between decode steps (lower queueing/TTFT)
+    and carries the paged-KV counters; the FIFO twin never touches the
+    page pool, so its counters are exactly zero."""
+
+    def v6_cell(method, name, arrival, batching, ms, requests=None, **kv):
+        cell = _cell(method, name, 200.0, "bursty", "auto", "none", ms)
+        cell["bw_stalls"] = None if ms is None else 0
+        cell["arrival"] = arrival
+        cell["requests"] = requests
+        cell["churn"] = "none"
+        cell["replans_fired"] = None if ms is None else 0
+        cell["kv_migrated_bytes"] = None if ms is None else 0
+        cell["recovery_steps"] = None if ms is None else []
+        cell["batching"] = batching
+        cell["kv_pages_allocated"] = None if ms is None else kv.get("pages", 0)
+        cell["kv_pages_spilled"] = None if ms is None else kv.get("spilled", 0)
+        cell["fragmentation"] = None if ms is None else kv.get("frag", 0.0)
+        return cell
+
+    fifo_stream = {
+        "queueing_delay_s": [0.0, 2.5, 5.0],
+        "ttft_s": [1.0, 3.5, 6.0],
+        "tbt_s": [0.25, 0.25, 0.25],
+    }
+    cont_stream = {
+        "queueing_delay_s": [0.0, 0.8, 1.6],
+        "ttft_s": [1.0, 1.9, 2.7],
+        "tbt_s": [0.25, 0.25, 0.25],
+    }
+    cells = [
+        v6_cell("lime", "LIME", "single", "fifo", 100.0),
+        v6_cell("lime", "LIME", "stream3", "fifo", 95.0, requests=fifo_stream),
+        v6_cell(
+            "lime", "LIME", "stream3", "cont16", 93.0,
+            requests=cont_stream, pages=12, spilled=2, frag=0.25,
+        ),
+        v6_cell("pp", "Pipeline parallelism", "single", "fifo", 250.0),
+    ]
+    doc = {
+        "schema": "lime-sweep-v6",
+        "grid": "v6grid",
+        "model": "Qwen3-32B",
+        "tokens": 8,
+        "bandwidths_mbps": [200.0],
+        "axes": {
+            "cluster": {"label": "v6grid", "devices": ["AGXOrin-64G", "AGXOrin-32G"]},
+            "bandwidths_mbps": [200.0],
+            "patterns": ["bursty"],
+            "methods": ["lime", "pp"],
+            "segs": ["auto"],
+            "mem_scenarios": [{"label": "none", "events": []}],
+            "pressure_scripts": [{"label": "none", "mem_events": [], "bw_events": []}],
+            "arrivals": [
+                {"label": "single", "kind": "single"},
+                {"label": "stream3", "kind": "stream", "count": 3, "lambda": 0.5},
+            ],
+            "churn_scripts": [{"label": "none", "events": []}],
+            "batching": [
+                {"label": "fifo", "mode": "fifo"},
+                {"label": "cont16", "mode": "continuous", "page_tokens": 16},
+            ],
+        },
+        "cells": cells,
+    }
+    path = tmp_path / "SWEEP_v6grid.json"
+    path.write_text(json.dumps(doc))
+    return tmp_path
+
+
+def test_v6_artifact_loads_and_renders_batching_table(sweep_dir_v6):
+    g = figures.load_sweeps(str(sweep_dir_v6))[0]
+    assert g.grid == "v6grid"
+    assert g.baseline_batching == "fifo"
+    assert g.batching_labels() == ["fifo", "cont16"]
+    text = figures.fig_batching(g)
+    # The FIFO row: mean qd (0+2.5+5)/3 = 2.5 and zero page counters.
+    assert "| fifo |" in text
+    assert "| 2.500 |" in text
+    assert "| 0 | 0 | 0.000 |" in text
+    # The continuous twin: mean qd 0.8, mean TTFT 1.867, and its paged-KV
+    # counters (12 pages, 2 spilled, peak fragmentation 0.25).
+    assert "| cont16 |" in text
+    assert "| 0.800 |" in text
+    assert "| 1.867 |" in text
+    assert "| 12 | 2 | 0.250 |" in text
+    assert "None" not in text
+
+
+def test_v6_continuous_cells_do_not_pollute_older_figures(sweep_dir_v6):
+    g = figures.load_sweeps(str(sweep_dir_v6))[0]
+    # The v4 queueing table shows the FIFO stream only; the continuous
+    # twin lives in fig_batching.
+    text = figures.fig_queueing_delay(g)
+    assert "| 2.500 |" in text
+    assert "0.800" not in text
+    # Baseline figures use single-run cells (always FIFO): 2 methods.
+    assert len(g.baseline_cells()) == 2
+    assert "2.50x" in figures.speedup_summary(g)
+    # The full render includes the batching section exactly once.
+    rendered = figures.render_grid(g)
+    assert rendered.count("FIFO vs continuous batching") == 1
+
+
+def test_pre_v6_grids_render_without_batching_section(sweep_dir_v5):
+    g = figures.load_sweeps(str(sweep_dir_v5))[0]
+    assert g.baseline_batching == "fifo"
+    assert g.batching_labels() == ["fifo"]
+    assert "FIFO vs continuous batching" not in figures.render_grid(g)
 
 
 def test_render_grid_and_cli(sweep_dir, tmp_path, capsys):

@@ -13,7 +13,10 @@
 //! cells nest their `plan()` candidates back into it — against the same
 //! grid evaluated sequentially. The `fleet_stream_100k*` pair does the
 //! same for `serve::fleet`: a 10^5-request stream sharded one cluster per
-//! pool job versus the sequential reference it is byte-identical to.
+//! pool job versus the sequential reference it is byte-identical to. The
+//! `serving_continuous_batching_*` pair compares the FIFO admission path
+//! against the step-level continuous driver (paged-KV accounting on) over
+//! one oversubscribed bursty stream.
 //!
 //! Pin the worker count with `LIME_THREADS=<n>` for stable timings (CI
 //! does). `Bench::finish` writes `BENCH_scheduler_perf.json` and prints
@@ -219,6 +222,47 @@ fn main() {
             &off,
             &lime::adapt::Script::none(),
             &serve_reqs,
+        );
+        std::hint::black_box(sr.mean_queueing_delay());
+    });
+
+    // Batching-policy pair: the same oversubscribed bursty stream served
+    // under FIFO epochs vs step-level continuous admission with paged-KV
+    // accounting on (16-token pages, a generous no-spill budget) — the
+    // continuous driver's extra per-step work (ready-queue joins, page
+    // growth, eviction) must stay in the same band as the FIFO path it
+    // generalizes. See docs/SERVING.md for the admission semantics.
+    let batch_reqs = lime::workload::stream_requests(
+        lime::workload::Pattern::Bursty,
+        0xBF,
+        2 * cluster.len(),
+        0.5,
+        64,
+        32,
+    );
+    b.time("serving_continuous_batching_fifo", 1, 10, || {
+        let sr = lime::serve::serve_interleaved(
+            &alloc,
+            &cluster,
+            &bw,
+            cluster.len(),
+            &off,
+            &lime::adapt::Script::none(),
+            &batch_reqs,
+        );
+        std::hint::black_box(sr.mean_queueing_delay());
+    });
+    b.time("serving_continuous_batching_cont16", 1, 10, || {
+        let sr = lime::serve::serve_interleaved_opts(
+            &alloc,
+            &cluster,
+            &bw,
+            cluster.len(),
+            &off,
+            &lime::adapt::Script::none(),
+            &batch_reqs,
+            &lime::serve::BatchingOpts::continuous(1)
+                .with_kv_pages(lime::serve::KvPageConfig::for_alloc(&alloc, 16, 4096)),
         );
         std::hint::black_box(sr.mean_queueing_delay());
     });

@@ -13,11 +13,13 @@
 //! the composable [`scenario::ScenarioMatrix`], which adds cluster-size,
 //! `#Seg`-override, pressure (joint memory/bandwidth fluctuation script),
 //! arrival-process (single run vs continuous queued stream, served
-//! through `serve::simqueue`) and device-churn (mid-stream Down/Up
-//! events with online re-planning and KV migration) axes; the
-//! `--id sweep` experiment evaluates one matrix per cluster point and
-//! writes one `lime-sweep-v5` JSON each, with per-request
-//! queueing-delay/TTFT/TBT arrays on stream cells and
+//! through `serve::simqueue`), batching-policy (FIFO vs step-level
+//! continuous batching with paged-KV accounting, on stream cells only)
+//! and device-churn (mid-stream Down/Up events with online re-planning
+//! and KV migration) axes; the `--id sweep` experiment evaluates one
+//! matrix per cluster point and writes one `lime-sweep-v6` JSON each,
+//! with per-request queueing-delay/TTFT/TBT arrays on stream cells,
+//! paged-KV counters on continuous-batching cells and
 //! replans/KV-migration/recovery counters on churn cells. See
 //! `docs/ARCHITECTURE.md` for the module map and `docs/SWEEPS.md` for
 //! the artifact schemas.
@@ -26,7 +28,8 @@ pub mod scenario;
 
 pub use scenario::{
     validate_sweep, validate_sweep_v2, validate_sweep_v3, validate_sweep_v4, validate_sweep_v5,
-    ArrivalSpec, RequestLevel, ScenarioCell, ScenarioMatrix, SegChoice, SweepSummary,
+    validate_sweep_v6, ArrivalSpec, BatchingSpec, RequestLevel, ScenarioCell, ScenarioMatrix,
+    SegChoice, SweepSummary,
 };
 
 use crate::adapt::{MemScenario, Script};
@@ -513,6 +516,16 @@ fn stream_arrivals(cluster: &Cluster) -> Vec<ArrivalSpec> {
     ]
 }
 
+/// The batching-policy axis every sweep grid runs on its stream cells:
+/// the FIFO baseline plus step-level continuous batching at 16 tokens per
+/// KV page (vLLM's default block size). Because stream counts exceed the
+/// bursty admission cap (2·|D| requests vs |D| micro-batches), the bursty
+/// continuous cells genuinely overlap prefill with decode and show a
+/// lower mean queueing delay than their FIFO twins.
+fn batching_axis() -> Vec<BatchingSpec> {
+    vec![BatchingSpec::Fifo, BatchingSpec::Continuous { page_tokens: 16 }]
+}
+
 /// The scenario matrices behind `--id sweep`: the three extremely-low-
 /// memory settings (Figs 15–17, Llama3.3-70B) across the full bandwidth
 /// axis, plus cluster-size points — 2/3/4-device subsets of the
@@ -546,7 +559,8 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
             .with_segs(vec![SegChoice::Auto, SegChoice::Fixed(4), SegChoice::Fixed(8)])
             .with_pressure(lowmem_pressure_axis(tokens))
             .with_arrivals(arrivals)
-            .with_churn(churn),
+            .with_churn(churn)
+            .with_batching(batching_axis()),
         );
     }
 
@@ -587,7 +601,8 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
                 Script::from_mem(corr),
             ])
             .with_arrivals(arrivals)
-            .with_churn(churn),
+            .with_churn(churn)
+            .with_batching(batching_axis()),
         );
     }
     out
@@ -597,11 +612,13 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
 /// extremely-low-memory settings plus cluster-size points, each crossing
 /// bandwidth × pattern × method with `#Seg`-override, pressure-script
 /// (correlated multi-device dips, joint bandwidth+memory scenarios),
-/// arrival-process (single run vs continuous queued stream) and
+/// arrival-process (single run vs continuous queued stream),
 /// device-churn (mid-stream Down/Up with online re-planning, KV
-/// migration and recovery-latency counters) axes — on the work-stealing
-/// pool, and emit **one machine-readable JSON per grid** (schema
-/// `lime-sweep-v5`, validated by `lime sweep-check`) into `out_dir`.
+/// migration and recovery-latency counters) and batching-policy (FIFO
+/// vs step-level continuous with paged-KV accounting, stream cells
+/// only) axes — on the work-stealing pool, and emit **one
+/// machine-readable JSON per grid** (schema `lime-sweep-v6`, validated
+/// by `lime sweep-check`) into `out_dir`.
 /// Returns the paths written; any I/O
 /// failure is an error (the CLI exits non-zero), never a silently missing
 /// artifact.
@@ -753,7 +770,7 @@ mod tests {
     }
 
     #[test]
-    fn sweep_emits_one_valid_v5_json_per_grid() {
+    fn sweep_emits_one_valid_v6_json_per_grid() {
         use crate::util::json::Json;
         let dir = std::env::temp_dir().join(format!("lime_sweep_{}", std::process::id()));
         let out = dir.to_str().unwrap().to_string();
@@ -764,20 +781,23 @@ mod tests {
             let json = Json::parse(src.trim()).unwrap();
             let summary = validate_sweep(&json)
                 .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
-            assert_eq!(summary.schema, "lime-sweep-v5");
+            assert_eq!(summary.schema, "lime-sweep-v6");
             let lowmem = summary.grid.starts_with("lowmem");
-            // lowmem: 1 LIME × 5bw × 2pat × 3seg × 5scripts × 2arrivals
-            //           × 2churn                                  = 600
+            // Arrival cells per adaptive coordinate: 1 single + 1 stream
+            // × 2 batching policies (fifo, cont16) = 3.
+            // lowmem: 1 LIME × 5bw × 2pat × 3seg × 5scripts × 3arrival-cells
+            //           × 2churn                                  = 900
             //         + EdgeShard (churn-capable) 10 × 2churn     =  20
             //         + 5 rigid baselines × 10                    =  50.
-            // edge:   1 LIME × 2bw × 2pat × 3seg × 3scripts × 2arrivals
-            //           × 2churn                                  = 144
+            // edge:   1 LIME × 2bw × 2pat × 3seg × 3scripts × 3arrival-cells
+            //           × 2churn                                  = 216
             //         + EdgeShard 4 × 2churn                      =   8
             //         + 5 rigid baselines × 4                     =  20.
-            assert_eq!(summary.cells, if lowmem { 670 } else { 172 }, "{}", summary.grid);
+            assert_eq!(summary.cells, if lowmem { 970 } else { 244 }, "{}", summary.grid);
             assert_eq!(summary.completed + summary.oom, summary.cells);
             let mut stream_with_requests = 0usize;
             let mut churn_completed = 0usize;
+            let mut continuous_with_pages = 0usize;
             for cell in json.get("cells").unwrap().as_arr().unwrap() {
                 let key = cell.get("method").unwrap().as_str().unwrap();
                 let oom = cell.get("oom").unwrap().as_bool().unwrap();
@@ -815,6 +835,20 @@ mod tests {
                     );
                     churn_completed += 1;
                 }
+                // Continuous-batching cells account KV through the paged
+                // allocator; FIFO cells keep the counters exactly zero.
+                let batching = cell.get("batching").unwrap().as_str().unwrap();
+                let pages = cell.get("kv_pages_allocated").unwrap().as_u64();
+                if batching != "fifo" && !oom {
+                    assert!(
+                        pages.unwrap_or(0) > 0,
+                        "{}: continuous cell without page accounting: {cell}",
+                        path.display()
+                    );
+                    continuous_with_pages += 1;
+                } else if !oom {
+                    assert_eq!(pages, Some(0), "{}: {cell}", path.display());
+                }
             }
             assert!(
                 stream_with_requests > 0,
@@ -824,6 +858,11 @@ mod tests {
             assert!(
                 churn_completed > 0,
                 "{}: no completed churn cells",
+                path.display()
+            );
+            assert!(
+                continuous_with_pages > 0,
+                "{}: no completed continuous-batching cells",
                 path.display()
             );
         }
@@ -894,6 +933,54 @@ mod tests {
             let req = stream.requests.as_ref().unwrap();
             assert_eq!(req.queueing_delay_s.len(), 2 * lowmem1.cluster.len());
             assert!(req.ttft_s.iter().all(|&t| t > 0.0));
+        }
+        // Batching axis: FIFO baseline plus one continuous policy, and
+        // continuous cells really account KV through the paged allocator.
+        assert_eq!(lowmem1.batching.len(), 2);
+        assert_eq!(lowmem1.batching[1], BatchingSpec::Continuous { page_tokens: 16 });
+        let cont16 = cells
+            .iter()
+            .find(|c| c.batching == "cont16" && c.ms_per_token.is_some())
+            .expect("no completed cont16 cell");
+        assert!(cont16.kv_pages_allocated.unwrap() > 0);
+        assert_eq!(cont16.kv_pages_spilled, Some(0), "sweep budget is no-spill");
+        let frag = cont16.fragmentation.unwrap();
+        assert!((0.0..=1.0).contains(&frag), "fragmentation {frag} out of [0,1]");
+        // The headline acceptance cell: under BURSTY arrivals the stream
+        // count 2·|D| exceeds the admission cap |D|, so FIFO queues a full
+        // first epoch while continuous admits between decode steps — mean
+        // queueing delay must drop STRICTLY, at every bandwidth point of
+        // the unperturbed (seg-auto, no-pressure, no-churn) LIME slice.
+        let mean_queueing = |c: &&ScenarioCell| {
+            let q = &c.requests.as_ref().unwrap().queueing_delay_s;
+            q.iter().sum::<f64>() / q.len() as f64
+        };
+        let slice = |batching: &str| -> Vec<&ScenarioCell> {
+            cells
+                .iter()
+                .filter(|c| {
+                    c.method_key == "lime"
+                        && c.pattern == Pattern::Bursty
+                        && c.seg == SegChoice::Auto
+                        && c.mem == "none"
+                        && c.churn == "none"
+                        && c.batching == batching
+                        && c.requests.is_some()
+                })
+                .collect()
+        };
+        let fifo = slice("fifo");
+        let cont = slice("cont16");
+        assert!(!fifo.is_empty() && fifo.len() == cont.len(), "twin slices must pair up");
+        for (f, c) in fifo.iter().zip(&cont) {
+            assert_eq!(f.bandwidth_mbps, c.bandwidth_mbps, "twins must share coordinates");
+            assert!(
+                mean_queueing(c) < mean_queueing(f),
+                "continuous must strictly beat FIFO queueing at {} Mbps: {} vs {}",
+                f.bandwidth_mbps,
+                mean_queueing(c),
+                mean_queueing(f)
+            );
         }
         // Every edge matrix carries its whole-subset correlated dip.
         for m in &matrices[3..] {

@@ -28,6 +28,14 @@
 //!   admission batches are capped at the pattern's micro-batch count.
 //!   Stream cells carry request-level metric arrays (queueing delay,
 //!   TTFT, time between tokens).
+//! * **batching policy** — [`BatchingSpec`]: queue-then-drain FIFO
+//!   admission ([`BatchingSpec::Fifo`], the baseline point) vs step-level
+//!   continuous batching ([`BatchingSpec::Continuous`]) through
+//!   [`crate::serve::BatchingOpts`], with KV accounted by the paged
+//!   allocator model (`serve::kvpages`). Only stream cells of adaptive
+//!   methods expand along this axis — single-run and baseline cells are
+//!   pinned to the FIFO label. Continuous cells surface the
+//!   `kv_pages_allocated`/`kv_pages_spilled`/`fragmentation` counters.
 //! * **device churn** — churn-only [`Script`]s (Down/Up faults on the
 //!   stream step timeline) composed with the pressure axis per cell.
 //!   Adaptive methods re-plan onto the survivors and migrate departed KV
@@ -46,13 +54,13 @@
 //! work-stealing pool with results written by index —
 //! [`ScenarioMatrix::eval`] is bit-identical to
 //! [`ScenarioMatrix::eval_sequential`] at any worker count (pinned in
-//! `rust/tests/pool.rs`). Artifacts serialize as schema `lime-sweep-v5`,
-//! a strict superset of `lime-sweep-v4` (itself a strict superset of
-//! v3/v2): every v4 key keeps its meaning, plus the `axes.churn_scripts`
-//! metadata, a per-cell `churn` coordinate, and the per-cell
-//! `replans_fired`/`kv_migrated_bytes`/`recovery_steps` churn counters;
-//! [`validate_sweep`] accepts v2 through v5 and is the machine check
-//! behind `lime sweep-check` and the CI artifact gate. See
+//! `rust/tests/pool.rs`). Artifacts serialize as schema `lime-sweep-v6`,
+//! a strict superset of `lime-sweep-v5` (itself a strict superset of
+//! v4/v3/v2): every v5 key keeps its meaning, plus the `axes.batching`
+//! metadata, a per-cell `batching` coordinate, and the per-cell
+//! `kv_pages_allocated`/`kv_pages_spilled`/`fragmentation` paged-KV
+//! counters; [`validate_sweep`] accepts v2 through v6 and is the machine
+//! check behind `lime sweep-check` and the CI artifact gate. See
 //! `docs/SWEEPS.md` for the full schema reference.
 
 use crate::adapt::{MemScenario, Script};
@@ -62,7 +70,8 @@ use crate::model::ModelSpec;
 use crate::net::BandwidthTrace;
 use crate::pipeline::{run_interleaved_scripted, ExecOptions};
 use crate::plan::{plan, plan_with_segs, Allocation};
-use crate::serve::simqueue::serve_interleaved;
+use crate::serve::kvpages::KvPageConfig;
+use crate::serve::simqueue::{serve_interleaved_opts, BatchingOpts};
 use crate::sim::TraceMode;
 use crate::util::json::{obj, Json};
 use crate::util::pool;
@@ -137,8 +146,52 @@ impl ArrivalSpec {
     }
 }
 
-/// Request-level metric arrays of one stream cell (one entry per request,
-/// in admission order; seconds).
+/// One value of the batching-policy axis — how stream cells admit queued
+/// requests into the decode batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchingSpec {
+    /// Queue-then-drain FIFO admission (the baseline point): an admitted
+    /// batch runs to completion before the next admission forms, and KV
+    /// is modelled as a contiguous preallocation (no page accounting).
+    Fifo,
+    /// Step-level continuous batching through
+    /// [`crate::serve::BatchingOpts`]: finished requests leave the batch
+    /// between decode steps, waiting requests join mid-flight, and the
+    /// next admission's prefill overlaps the current decode. KV is
+    /// accounted through the paged allocator model
+    /// ([`crate::serve::KvPagePool`]) at `page_tokens` tokens per page;
+    /// sweep cells size the page budget so a full admissible batch stays
+    /// resident, making FIFO-vs-continuous deltas pure admission-policy
+    /// effects (spill costing is exercised by the simqueue/kvpages
+    /// tests instead).
+    Continuous { page_tokens: usize },
+}
+
+impl BatchingSpec {
+    /// Stable axis label used as the per-cell coordinate in artifacts.
+    pub fn label(&self) -> String {
+        match self {
+            BatchingSpec::Fifo => "fifo".into(),
+            BatchingSpec::Continuous { page_tokens } => format!("cont{page_tokens}"),
+        }
+    }
+
+    fn json(&self) -> Json {
+        match self {
+            BatchingSpec::Fifo => obj(&[("label", "fifo".into()), ("mode", "fifo".into())]),
+            BatchingSpec::Continuous { page_tokens } => obj(&[
+                ("label", self.label().into()),
+                ("mode", "continuous".into()),
+                ("page_tokens", (*page_tokens).into()),
+            ]),
+        }
+    }
+}
+
+/// Request-level metric arrays of one stream cell (one entry per
+/// request; seconds). Entries are in admission order on FIFO cells and
+/// in completion order on continuous-batching cells — see
+/// `docs/SERVING.md`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RequestLevel {
     pub queueing_delay_s: Vec<f64>,
@@ -165,6 +218,10 @@ pub struct ScenarioCell {
     /// Label of the churn [`Script`] this cell ran under (`"none"` for the
     /// baseline point).
     pub churn: String,
+    /// Label of the [`BatchingSpec`] this cell ran under (`"fifo"` for
+    /// the baseline point; continuous labels appear only on stream cells
+    /// of adaptive methods).
+    pub batching: String,
     /// `#Seg` of the allocation actually executed (None for baseline
     /// methods and OOM cells).
     pub planned_seg: Option<usize>,
@@ -188,6 +245,19 @@ pub struct ScenarioCell {
     /// tolerance of the pre-fault baseline); `None` entries are faults the
     /// run never recovered from.
     pub recovery_steps: Option<Vec<Option<usize>>>,
+    /// Cumulative KV pages the paged allocator model handed out. Zero
+    /// everywhere except continuous-batching stream cells (FIFO models KV
+    /// as a contiguous preallocation); `None` = OOM.
+    pub kv_pages_allocated: Option<u64>,
+    /// Cumulative KV pages spilled to SSD under page-budget pressure
+    /// (write-only, costed via the Eq. 8 volume model). Zero on sweep
+    /// cells by construction — the grids run a no-spill budget; `None` =
+    /// OOM.
+    pub kv_pages_spilled: Option<u64>,
+    /// Peak internal fragmentation of the paged model: the wasted
+    /// fraction of allocated page capacity, in `[0, 1]`. Exactly 0.0 off
+    /// the continuous points; `None` = OOM.
+    pub fragmentation: Option<f64>,
     /// Request-level metrics — `Some` exactly on completed stream cells.
     pub requests: Option<RequestLevel>,
 }
@@ -235,6 +305,9 @@ pub struct ScenarioMatrix<'a> {
     /// adaptive methods; churn-capable baselines (EdgeShard) expand along
     /// this axis alone.
     pub churn: Vec<Script>,
+    /// The batching-policy axis: FIFO vs step-level continuous admission.
+    /// Expands stream-arrival cells of adaptive methods only.
+    pub batching: Vec<BatchingSpec>,
     pub tokens: usize,
 }
 
@@ -254,6 +327,7 @@ struct PointRef {
     si: usize,
     mj: usize,
     ai: usize,
+    ki: usize,
     ci: usize,
 }
 
@@ -280,6 +354,7 @@ impl<'a> ScenarioMatrix<'a> {
             pressure: vec![Script::none()],
             arrivals: vec![ArrivalSpec::Single],
             churn: vec![Script::none()],
+            batching: vec![BatchingSpec::Fifo],
             tokens,
         }
     }
@@ -322,6 +397,16 @@ impl<'a> ScenarioMatrix<'a> {
     /// device.
     pub fn with_churn(mut self, churn: Vec<Script>) -> Self {
         self.churn = churn;
+        self.assert_valid();
+        self
+    }
+
+    /// Replace the batching-policy axis (must start with
+    /// [`BatchingSpec::Fifo`], the baseline point). The axis expands
+    /// stream-arrival cells of adaptive methods only — a matrix without a
+    /// stream arrival evaluates the same cells regardless of this axis.
+    pub fn with_batching(mut self, batching: Vec<BatchingSpec>) -> Self {
+        self.batching = batching;
         self.assert_valid();
         self
     }
@@ -395,6 +480,21 @@ impl<'a> ScenarioMatrix<'a> {
             );
         }
         assert!(
+            matches!(self.batching.first(), Some(BatchingSpec::Fifo)),
+            "batching[0] must be BatchingSpec::Fifo (the baseline point)"
+        );
+        let mut batching_labels = std::collections::BTreeSet::new();
+        for b in &self.batching {
+            assert!(
+                batching_labels.insert(b.label()),
+                "duplicate batching spec '{}'",
+                b.label()
+            );
+            if let BatchingSpec::Continuous { page_tokens } = b {
+                assert!(*page_tokens >= 1, "continuous batching needs page_tokens >= 1");
+            }
+        }
+        assert!(
             self.churn.first().is_some_and(|s| s.churn.is_empty()),
             "churn[0] must have no churn events (the baseline point)"
         );
@@ -438,10 +538,12 @@ impl<'a> ScenarioMatrix<'a> {
 
     /// Cell coordinates in deterministic (index) order: methods outermost,
     /// then bandwidths, patterns, and — for adaptive methods — the seg,
-    /// pressure, arrival and churn axes. Churn-capable baselines
-    /// (EdgeShard) expand along the churn axis only; other baselines stay
-    /// on the single baseline point. With singleton override axes this is
-    /// exactly the legacy grid's job order.
+    /// pressure, arrival, batching and churn axes. The batching axis only
+    /// expands on stream-arrival points (single runs have no admission
+    /// loop to re-batch); churn-capable baselines (EdgeShard) expand
+    /// along the churn axis only; other baselines stay on the single
+    /// baseline point. With singleton override axes this is exactly the
+    /// legacy grid's job order.
     fn points(&self) -> Vec<PointRef> {
         let mut pts = Vec::new();
         for mi in 0..self.methods.len() {
@@ -453,8 +555,13 @@ impl<'a> ScenarioMatrix<'a> {
                         for si in 0..self.segs.len() {
                             for mj in 0..self.pressure.len() {
                                 for ai in 0..self.arrivals.len() {
-                                    for ci in 0..self.churn.len() {
-                                        pts.push(PointRef { mi, bi, pi, si, mj, ai, ci });
+                                    let stream =
+                                        matches!(self.arrivals[ai], ArrivalSpec::Stream { .. });
+                                    let batch_pts = if stream { self.batching.len() } else { 1 };
+                                    for ki in 0..batch_pts {
+                                        for ci in 0..self.churn.len() {
+                                            pts.push(PointRef { mi, bi, pi, si, mj, ai, ki, ci });
+                                        }
                                     }
                                 }
                             }
@@ -469,6 +576,7 @@ impl<'a> ScenarioMatrix<'a> {
                                 si: 0,
                                 mj: 0,
                                 ai: 0,
+                                ki: 0,
                                 ci,
                             });
                         }
@@ -482,14 +590,20 @@ impl<'a> ScenarioMatrix<'a> {
     /// Total cells this matrix evaluates.
     pub fn cell_count(&self) -> usize {
         let base = self.bandwidths_mbps.len() * self.patterns.len();
+        // The batching axis multiplies stream-arrival points only.
+        let arrival_cells: usize = self
+            .arrivals
+            .iter()
+            .map(|a| match a {
+                ArrivalSpec::Single => 1,
+                ArrivalSpec::Stream { .. } => self.batching.len(),
+            })
+            .sum();
         self.methods
             .iter()
             .map(|m| {
                 if m.adaptive_exec().is_some() {
-                    base * self.segs.len()
-                        * self.pressure.len()
-                        * self.arrivals.len()
-                        * self.churn.len()
+                    base * self.segs.len() * self.pressure.len() * arrival_cells * self.churn.len()
                 } else if m.churn_capable() {
                     base * self.churn.len()
                 } else {
@@ -578,6 +692,7 @@ impl<'a> ScenarioMatrix<'a> {
                 mem: self.pressure[p.mj].label.clone(),
                 arrival: self.arrivals[p.ai].label(),
                 churn: self.churn[p.ci].label.clone(),
+                batching: self.batching[p.ki].label(),
                 planned_seg: None,
                 ms_per_token: None,
                 online_plans_fired: None,
@@ -587,6 +702,9 @@ impl<'a> ScenarioMatrix<'a> {
                 replans_fired: None,
                 kv_migrated_bytes: None,
                 recovery_steps: None,
+                kv_pages_allocated: None,
+                kv_pages_spilled: None,
+                fragmentation: None,
                 requests: None,
             };
             // The script a cell actually runs: the pressure script with the
@@ -623,6 +741,9 @@ impl<'a> ScenarioMatrix<'a> {
                         cell.replans_fired = Some(r.replans_fired);
                         cell.kv_migrated_bytes = Some(r.kv_migrated_bytes);
                         cell.recovery_steps = Some(r.recovery_steps.clone());
+                        cell.kv_pages_allocated = Some(r.kv_pages_allocated);
+                        cell.kv_pages_spilled = Some(r.kv_pages_spilled);
+                        cell.fragmentation = Some(r.kv_fragmentation);
                     }
                 }
                 Some(cfg) => {
@@ -658,6 +779,9 @@ impl<'a> ScenarioMatrix<'a> {
                                 cell.replans_fired = Some(r.replans_fired);
                                 cell.kv_migrated_bytes = Some(r.kv_migrated_bytes);
                                 cell.recovery_steps = Some(r.recovery_steps.clone());
+                                cell.kv_pages_allocated = Some(r.kv_pages_allocated);
+                                cell.kv_pages_spilled = Some(r.kv_pages_spilled);
+                                cell.fragmentation = Some(r.kv_fragmentation);
                             }
                             ArrivalSpec::Stream { count, lambda } => {
                                 let reqs = stream_requests(
@@ -668,14 +792,38 @@ impl<'a> ScenarioMatrix<'a> {
                                     exec.prompt_tokens,
                                     self.tokens,
                                 );
-                                let sr = serve_interleaved(
+                                let max_batch = pattern.micro_batches(&self.cluster);
+                                let batching = match self.batching[p.ki] {
+                                    BatchingSpec::Fifo => BatchingOpts::fifo(),
+                                    BatchingSpec::Continuous { page_tokens } => {
+                                        // Budget the pages so a full
+                                        // admissible batch stays resident:
+                                        // spill only prices genuine
+                                        // overcommit, which the grids avoid
+                                        // to keep FIFO-vs-continuous deltas
+                                        // pure admission-policy effects.
+                                        // Round each context's demand up to
+                                        // whole pages — the last page of a
+                                        // context is partially filled, so a
+                                        // token-count budget alone would
+                                        // force spills at peak width.
+                                        let per_ctx_pages = (exec.prompt_tokens + self.tokens)
+                                            .div_ceil(page_tokens);
+                                        let budget = max_batch * per_ctx_pages * page_tokens;
+                                        BatchingOpts::continuous(1).with_kv_pages(
+                                            KvPageConfig::for_alloc(alloc, page_tokens, budget),
+                                        )
+                                    }
+                                };
+                                let sr = serve_interleaved_opts(
                                     alloc,
                                     &self.cluster,
                                     &trace,
-                                    pattern.micro_batches(&self.cluster),
+                                    max_batch,
                                     &exec,
                                     script,
                                     &reqs,
+                                    &batching,
                                 );
                                 cell.planned_seg = Some(alloc.seg);
                                 cell.ms_per_token = Some(sr.ms_per_token());
@@ -686,6 +834,9 @@ impl<'a> ScenarioMatrix<'a> {
                                 cell.replans_fired = Some(sr.replans_fired);
                                 cell.kv_migrated_bytes = Some(sr.kv_migrated_bytes);
                                 cell.recovery_steps = Some(sr.recovery_steps.clone());
+                                cell.kv_pages_allocated = Some(sr.kv_pages_allocated);
+                                cell.kv_pages_spilled = Some(sr.kv_pages_spilled);
+                                cell.fragmentation = Some(sr.kv_fragmentation);
                                 cell.requests = Some(RequestLevel {
                                     queueing_delay_s: sr
                                         .requests
@@ -709,13 +860,14 @@ impl<'a> ScenarioMatrix<'a> {
         }
     }
 
-    /// Serialize evaluated cells as a `lime-sweep-v5` artifact — a strict
-    /// superset of `lime-sweep-v4` (itself a strict superset of v3/v2):
-    /// every v4 key is present with its meaning, plus `axes.churn_scripts`,
-    /// the per-cell `churn` coordinate, and the per-cell `replans_fired`,
-    /// `kv_migrated_bytes` and `recovery_steps` churn counters (null iff
-    /// OOM; `recovery_steps` entries are step counts or null for faults the
-    /// run never recovered from).
+    /// Serialize evaluated cells as a `lime-sweep-v6` artifact — a strict
+    /// superset of `lime-sweep-v5` (itself a strict superset of v4/v3/v2):
+    /// every v5 key is present with its meaning, plus the `axes.batching`
+    /// metadata, the per-cell `batching` coordinate, and the per-cell
+    /// `kv_pages_allocated`/`kv_pages_spilled`/`fragmentation` paged-KV
+    /// counters (null iff OOM; exactly zero on every cell off the
+    /// continuous-batching points, where KV is modelled as a contiguous
+    /// preallocation).
     pub fn to_json(&self, cells: &[ScenarioCell]) -> Json {
         self.assert_valid();
         let cell_rows: Vec<Json> = cells
@@ -749,6 +901,7 @@ impl<'a> ScenarioMatrix<'a> {
                     ("mem", c.mem.as_str().into()),
                     ("arrival", c.arrival.as_str().into()),
                     ("churn", c.churn.as_str().into()),
+                    ("batching", c.batching.as_str().into()),
                     (
                         "planned_seg",
                         c.planned_seg.map_or(Json::Null, Into::into),
@@ -781,6 +934,18 @@ impl<'a> ScenarioMatrix<'a> {
                         c.kv_migrated_bytes.map_or(Json::Null, Into::into),
                     ),
                     ("recovery_steps", recovery),
+                    (
+                        "kv_pages_allocated",
+                        c.kv_pages_allocated.map_or(Json::Null, Into::into),
+                    ),
+                    (
+                        "kv_pages_spilled",
+                        c.kv_pages_spilled.map_or(Json::Null, Into::into),
+                    ),
+                    (
+                        "fragmentation",
+                        c.fragmentation.map_or(Json::Null, Json::Num),
+                    ),
                     ("requests", requests),
                 ])
             })
@@ -876,6 +1041,10 @@ impl<'a> ScenarioMatrix<'a> {
                 Json::Arr(self.arrivals.iter().map(ArrivalSpec::json).collect()),
             ),
             (
+                "batching",
+                Json::Arr(self.batching.iter().map(BatchingSpec::json).collect()),
+            ),
+            (
                 "churn_scripts",
                 Json::Arr(
                     self.churn
@@ -902,7 +1071,7 @@ impl<'a> ScenarioMatrix<'a> {
             ),
         ]);
         obj(&[
-            ("schema", "lime-sweep-v5".into()),
+            ("schema", "lime-sweep-v6".into()),
             ("grid", self.grid.as_str().into()),
             ("model", self.spec.name.as_str().into()),
             ("tokens", self.tokens.into()),
@@ -922,7 +1091,7 @@ pub struct SweepSummary {
     pub grid: String,
     pub model: String,
     /// The schema version the artifact validated against
-    /// ("lime-sweep-v2" .. "lime-sweep-v5").
+    /// ("lime-sweep-v2" .. "lime-sweep-v6").
     pub schema: String,
     pub cells: usize,
     pub completed: usize,
@@ -943,6 +1112,7 @@ enum SweepSchema {
     V3,
     V4,
     V5,
+    V6,
 }
 
 impl SweepSchema {
@@ -952,12 +1122,13 @@ impl SweepSchema {
             SweepSchema::V3 => "lime-sweep-v3",
             SweepSchema::V4 => "lime-sweep-v4",
             SweepSchema::V5 => "lime-sweep-v5",
+            SweepSchema::V6 => "lime-sweep-v6",
         }
     }
 }
 
 /// Validate one artifact against whichever supported schema it declares
-/// (`lime-sweep-v2` through `lime-sweep-v5`) — the check behind
+/// (`lime-sweep-v2` through `lime-sweep-v6`) — the check behind
 /// `lime sweep-check` and the CI artifact gate.
 pub fn validate_sweep(json: &Json) -> Result<SweepSummary, String> {
     match json.get("schema").and_then(Json::as_str) {
@@ -965,8 +1136,9 @@ pub fn validate_sweep(json: &Json) -> Result<SweepSummary, String> {
         Some("lime-sweep-v3") => validate_sweep_impl(json, SweepSchema::V3),
         Some("lime-sweep-v4") => validate_sweep_impl(json, SweepSchema::V4),
         Some("lime-sweep-v5") => validate_sweep_impl(json, SweepSchema::V5),
+        Some("lime-sweep-v6") => validate_sweep_impl(json, SweepSchema::V6),
         other => Err(format!(
-            "expected schema lime-sweep-v2 .. lime-sweep-v5, got {other:?}"
+            "expected schema lime-sweep-v2 .. lime-sweep-v6, got {other:?}"
         )),
     }
 }
@@ -1004,6 +1176,14 @@ pub fn validate_sweep_v5(json: &Json) -> Result<SweepSummary, String> {
     }
 }
 
+/// Validate one artifact strictly against the `lime-sweep-v6` schema.
+pub fn validate_sweep_v6(json: &Json) -> Result<SweepSummary, String> {
+    match json.get("schema").and_then(Json::as_str) {
+        Some("lime-sweep-v6") => validate_sweep_impl(json, SweepSchema::V6),
+        other => Err(format!("expected schema lime-sweep-v6, got {other:?}")),
+    }
+}
+
 /// The shared validation core: structural keys, axis metadata, per-cell
 /// coordinate membership, `Method::key` round-trips, OOM/metric
 /// consistency, cell uniqueness, and the exact per-method cell counts the
@@ -1020,7 +1200,13 @@ pub fn validate_sweep_v5(json: &Json) -> Result<SweepSummary, String> {
 /// coordinate (non-churn-capable baselines pinned to the first label),
 /// and the per-cell `replans_fired`/`kv_migrated_bytes`/`recovery_steps`
 /// counters (null iff OOM; `recovery_steps` an array of step counts or
-/// nulls).
+/// nulls). V6 additionally requires `axes.batching` (first entry the
+/// FIFO baseline; continuous entries with an integer `page_tokens` >= 1),
+/// the per-cell `batching` coordinate (pinned to the FIFO label off
+/// adaptive stream cells), and the per-cell
+/// `kv_pages_allocated`/`kv_pages_spilled`/`fragmentation` paged-KV
+/// counters (null iff OOM; `fragmentation` in `[0, 1]`; all exactly zero
+/// on FIFO cells, which model KV as a contiguous preallocation).
 fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary, String> {
     let grid = field(json, "grid", "artifact")?
         .as_str()
@@ -1283,6 +1469,44 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
         }
     }
 
+    // V6: the batching-policy axis — first entry the FIFO baseline,
+    // continuous entries carrying their page-size knob.
+    let mut batching_labels: Vec<String> = Vec::new();
+    if schema >= SweepSchema::V6 {
+        let batching = field(axes, "batching", "axes")?
+            .as_arr()
+            .ok_or("axes.batching must be an array")?;
+        if batching.is_empty() {
+            return Err("axes.batching must be non-empty".into());
+        }
+        for (i, b) in batching.iter().enumerate() {
+            let ctx = format!("axes.batching[{i}]");
+            let label = field(b, "label", &ctx)?
+                .as_str()
+                .ok_or_else(|| format!("{ctx}.label must be a string"))?;
+            let mode = field(b, "mode", &ctx)?
+                .as_str()
+                .ok_or_else(|| format!("{ctx}.mode must be a string"))?;
+            match mode {
+                "fifo" => {}
+                "continuous" => match b.get("page_tokens").and_then(Json::as_usize) {
+                    Some(p) if p >= 1 => {}
+                    _ => return Err(format!("{ctx}.page_tokens must be an integer >= 1")),
+                },
+                other => {
+                    return Err(format!("{ctx}.mode must be fifo|continuous, got '{other}'"))
+                }
+            }
+            if i == 0 && mode != "fifo" {
+                return Err("axes.batching[0] must be the FIFO baseline".into());
+            }
+            if batching_labels.iter().any(|l| l == label) {
+                return Err(format!("{ctx}: duplicate batching label '{label}'"));
+            }
+            batching_labels.push(label.to_string());
+        }
+    }
+
     let cells = field(json, "cells", "artifact")?
         .as_arr()
         .ok_or("'cells' must be an array")?;
@@ -1372,6 +1596,26 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
         } else {
             "none".to_string()
         };
+        // V6: the batching coordinate. Continuous batching only has
+        // meaning on the stream cells of adaptive methods — everything
+        // else is pinned to the FIFO baseline label.
+        let batching = if schema >= SweepSchema::V6 {
+            let b = field(cell, "batching", &ctx)?
+                .as_str()
+                .ok_or_else(|| format!("{ctx}.batching must be a string"))?;
+            if !batching_labels.iter().any(|l| l == b) {
+                return Err(format!("{ctx}: batching '{b}' not on the axis"));
+            }
+            let is_stream = arrival_counts.contains_key(&arrival);
+            if (!adaptive[key] || !is_stream) && b != batching_labels[0] {
+                return Err(format!(
+                    "{ctx}: batching '{b}' off the FIFO baseline on a non-stream cell"
+                ));
+            }
+            b.to_string()
+        } else {
+            "fifo".to_string()
+        };
         let is_oom = field(cell, "oom", &ctx)?
             .as_bool()
             .ok_or_else(|| format!("{ctx}.oom must be a bool"))?;
@@ -1440,6 +1684,43 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
                 }
             }
         }
+        // V6: the paged-KV counters — integers (null iff OOM), the
+        // fragmentation ratio inside [0, 1], and all exactly zero off the
+        // continuous points (FIFO models KV as contiguous preallocation).
+        if schema >= SweepSchema::V6 {
+            for counter in ["kv_pages_allocated", "kv_pages_spilled"] {
+                let v = field(cell, counter, &ctx)?;
+                match (is_oom, v.as_u64()) {
+                    (true, _) if v == &Json::Null => {}
+                    (false, Some(_)) => {}
+                    _ => {
+                        return Err(format!(
+                            "{ctx}.{counter} must be a non-negative integer (null iff oom)"
+                        ))
+                    }
+                }
+            }
+            let frag = field(cell, "fragmentation", &ctx)?;
+            match (is_oom, frag.as_f64()) {
+                (true, _) if frag == &Json::Null => {}
+                (false, Some(f)) if (0.0..=1.0).contains(&f) => {}
+                _ => {
+                    return Err(format!(
+                        "{ctx}.fragmentation must be a number in [0, 1] (null iff oom)"
+                    ))
+                }
+            }
+            if !is_oom && batching == batching_labels[0] {
+                let pages = cell.get("kv_pages_allocated").and_then(Json::as_u64);
+                let spilled = cell.get("kv_pages_spilled").and_then(Json::as_u64);
+                let f = frag.as_f64();
+                if pages != Some(0) || spilled != Some(0) || f != Some(0.0) {
+                    return Err(format!(
+                        "{ctx}: non-zero paged-KV counters on a FIFO cell"
+                    ));
+                }
+            }
+        }
         // V4: request-level metric arrays — an object with `count` equal-
         // length number arrays exactly on completed stream cells, null
         // everywhere else (single-run cells and OOM cells).
@@ -1475,7 +1756,8 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
                 }
             }
         }
-        if !seen.insert(format!("{key}|{bw}|{pattern}|{seg_label}|{mem}|{arrival}|{churn}")) {
+        let coords = format!("{key}|{bw}|{pattern}|{seg_label}|{mem}|{arrival}|{churn}|{batching}");
+        if !seen.insert(coords) {
             return Err(format!("{ctx}: duplicate cell coordinates"));
         }
         *per_method.entry(key.to_string()).or_default() += 1;
@@ -1489,7 +1771,12 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
         }
     }
     let base = bandwidths.len() * patterns.len();
-    let arrival_axis_len = if schema >= SweepSchema::V4 {
+    // V6: the batching axis multiplies the stream arrival points only
+    // (single-run cells have no admission loop to re-batch).
+    let arrival_cells = if schema >= SweepSchema::V6 {
+        let streams = arrival_counts.len();
+        (arrival_labels.len() - streams) + streams * batching_labels.len()
+    } else if schema >= SweepSchema::V4 {
         arrival_labels.len()
     } else {
         1
@@ -1501,7 +1788,7 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
     };
     for key in &methods {
         let expect = if adaptive[key] {
-            base * seg_labels.len() * mem_labels.len() * arrival_axis_len * churn_axis_len
+            base * seg_labels.len() * mem_labels.len() * arrival_cells * churn_axis_len
         } else if churn_cap[key] {
             base * churn_axis_len
         } else {
@@ -1607,7 +1894,7 @@ mod tests {
     }
 
     #[test]
-    fn eval_emits_valid_v5_artifact() {
+    fn eval_emits_valid_v6_artifact() {
         let methods = all();
         let m = tiny_matrix(&methods);
         let cells = m.eval();
@@ -1617,12 +1904,13 @@ mod tests {
         let parsed = Json::parse(&json.to_string()).unwrap();
         let summary = validate_sweep(&parsed).expect("artifact validates");
         assert_eq!(summary.grid, "e1-test");
-        assert_eq!(summary.schema, "lime-sweep-v5");
+        assert_eq!(summary.schema, "lime-sweep-v6");
         assert_eq!(summary.cells, m.cell_count());
         assert_eq!(summary.completed + summary.oom, summary.cells);
-        // The dispatcher and the strict v5 validator agree; the strict
-        // v2/v3/v4 validators reject a v5 artifact by its schema tag.
-        assert!(validate_sweep_v5(&parsed).is_ok());
+        // The dispatcher and the strict v6 validator agree; the strict
+        // v2..v5 validators reject a v6 artifact by its schema tag.
+        assert!(validate_sweep_v6(&parsed).is_ok());
+        assert!(validate_sweep_v5(&parsed).is_err());
         assert!(validate_sweep_v4(&parsed).is_err());
         assert!(validate_sweep_v3(&parsed).is_err());
         assert!(validate_sweep_v2(&parsed).is_err());
@@ -1632,6 +1920,12 @@ mod tests {
             assert!(c.ms_per_token.is_some(), "{c:?}");
             assert!(c.planned_seg.is_some());
             assert!(c.bw_stalls.is_some());
+            // Singleton batching axis: every cell sits on the FIFO point
+            // with zeroed paged-KV counters.
+            assert_eq!(c.batching, "fifo");
+            assert_eq!(c.kv_pages_allocated, Some(0), "{c:?}");
+            assert_eq!(c.kv_pages_spilled, Some(0), "{c:?}");
+            assert_eq!(c.fragmentation, Some(0.0), "{c:?}");
             if let SegChoice::Fixed(k) = c.seg {
                 assert_eq!(c.planned_seg, Some(k), "fixed seg must be honored");
             }
@@ -1671,10 +1965,10 @@ mod tests {
     }
 
     #[test]
-    fn v5_artifact_downgrades_to_v3_by_relabel() {
-        // Strict-superset chain: with singleton arrival and churn axes,
-        // relabel a v5 artifact as v3 and it validates as v3 (the extra
-        // arrival/churn keys are ignored).
+    fn v6_artifact_downgrades_to_v3_by_relabel() {
+        // Strict-superset chain: with singleton arrival, churn and
+        // batching axes, relabel a v6 artifact as v3 and it validates as
+        // v3 (the extra arrival/churn/batching keys are ignored).
         let methods = all();
         let m = tiny_matrix_single_arrival(&methods);
         let cells = m.eval();
@@ -1691,10 +1985,10 @@ mod tests {
     }
 
     #[test]
-    fn v5_artifact_downgrades_to_v4_by_relabel() {
-        // With a singleton churn axis the cell set is exactly a v4 cross:
-        // relabel the artifact as v4 and it validates (the churn keys are
-        // v5 additions v4 ignores).
+    fn v6_artifact_downgrades_to_v4_by_relabel() {
+        // With singleton churn and batching axes the cell set is exactly
+        // a v4 cross: relabel the artifact as v4 and it validates (the
+        // churn and paged-KV keys are v5/v6 additions v4 ignores).
         let methods = all();
         let m = tiny_matrix(&methods);
         let cells = m.eval();
@@ -1708,6 +2002,27 @@ mod tests {
         assert_eq!(summary.schema, "lime-sweep-v4");
         assert!(validate_sweep_v4(&v4).is_ok());
         assert!(validate_sweep_v5(&v4).is_err());
+    }
+
+    #[test]
+    fn v6_artifact_downgrades_to_v5_by_relabel() {
+        // With a singleton batching axis the cell set is exactly a v5
+        // cross: relabel the artifact as v5 and it validates (the
+        // batching/paged-KV keys are v6 additions v5 ignores). The strict
+        // v6 validator rejects the relabelled artifact by its schema tag.
+        let methods = all();
+        let m = tiny_matrix(&methods);
+        let cells = m.eval();
+        let parsed = Json::parse(&m.to_json(&cells).to_string()).unwrap();
+        let Json::Obj(mut map) = parsed else {
+            panic!("artifact must be an object")
+        };
+        map.insert("schema".into(), "lime-sweep-v5".into());
+        let v5 = Json::Obj(map);
+        let summary = validate_sweep(&v5).expect("relabelled artifact validates as v5");
+        assert_eq!(summary.schema, "lime-sweep-v5");
+        assert!(validate_sweep_v5(&v5).is_ok());
+        assert!(validate_sweep_v6(&v5).is_err());
     }
 
     #[test]
@@ -1780,11 +2095,12 @@ mod tests {
         let good = m.to_json(&cells).to_string();
         assert!(validate_sweep(&Json::parse(&good).unwrap()).is_ok());
         for (needle, replacement, why) in [
-            ("lime-sweep-v5", "lime-sweep-v1", "unknown schema"),
+            ("lime-sweep-v6", "lime-sweep-v1", "unknown schema"),
             ("\"sporadic\"", "\"sporadıc\"", "unknown pattern"),
             ("\"oom\":false", "\"oom\":true", "oom/ms inconsistency"),
             ("\"arrival\":\"stream3\"", "\"arrival\":\"stream9\"", "off-axis arrival"),
             ("\"churn\":\"none\"", "\"churn\":\"ghost\"", "off-axis churn"),
+            ("\"batching\":\"fifo\"", "\"batching\":\"warp\"", "off-axis batching"),
         ] {
             let bad = good.replacen(needle, replacement, 1);
             assert_ne!(bad, good, "{why}: replacement must apply");
@@ -1856,6 +2172,22 @@ mod tests {
         } else {
             panic!("artifact must be an object");
         }
+        // Dropping the v6 batching axis must fail a v6 artifact.
+        let parsed = Json::parse(&good).unwrap();
+        if let Json::Obj(mut map) = parsed {
+            if let Some(Json::Obj(axes)) = map.get_mut("axes") {
+                axes.remove("batching");
+            }
+            assert!(validate_sweep(&Json::Obj(map)).is_err());
+        } else {
+            panic!("artifact must be an object");
+        }
+        // A non-zero page counter on a FIFO cell must fail: FIFO models
+        // KV as a contiguous preallocation, never pages.
+        let bad = good.replacen("\"kv_pages_allocated\":0", "\"kv_pages_allocated\":7", 1);
+        assert_ne!(bad, good, "a completed FIFO cell must exist");
+        let err = validate_sweep(&Json::parse(&bad).unwrap()).unwrap_err();
+        assert!(err.contains("FIFO cell"), "unexpected error: {err}");
         // Nulling a completed stream cell's request arrays must fail: the
         // per-request metrics are the point of the arrival axis.
         let parsed = Json::parse(&good).unwrap();
@@ -1965,9 +2297,9 @@ mod tests {
             .filter(|c| c.method_key == "galaxy" || c.method_key == "pp")
             .all(|c| c.churn == "none"));
 
-        // The artifact round-trips through the strict v5 validator.
+        // The artifact round-trips through the strict v6 validator.
         let parsed = Json::parse(&m.to_json(&cells).to_string()).unwrap();
-        let summary = validate_sweep_v5(&parsed).expect("churned artifact validates");
+        let summary = validate_sweep_v6(&parsed).expect("churned artifact validates");
         assert_eq!(summary.cells, m.cell_count());
     }
 
@@ -1997,6 +2329,86 @@ mod tests {
             count: 4,
             lambda: 1.0,
         }]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn batching_must_start_with_fifo() {
+        let methods = all();
+        let _ = tiny_matrix(&methods)
+            .with_batching(vec![BatchingSpec::Continuous { page_tokens: 16 }]);
+    }
+
+    #[test]
+    fn batching_axis_expands_stream_cells() {
+        let methods = all();
+        let m = tiny_matrix(&methods)
+            .with_batching(vec![BatchingSpec::Fifo, BatchingSpec::Continuous { page_tokens: 16 }]);
+        // LIME: 2bw × 2pat × 2seg × 2mem × (single + stream3 × 2 batching)
+        // = 48; the 6 baselines stay at 2bw × 2pat each.
+        assert_eq!(m.cell_count(), 48 + 24);
+        let cells = m.eval();
+        assert_eq!(cells.len(), m.cell_count());
+
+        // Continuous points exist exactly on LIME's stream cells.
+        for c in &cells {
+            if c.batching != "fifo" {
+                assert_eq!(c.method_key, "lime", "{c:?}");
+                assert_eq!(c.arrival, "stream3", "{c:?}");
+                assert_eq!(c.batching, "cont16", "{c:?}");
+            }
+        }
+        for c in cells.iter().filter(|c| c.method_key == "lime") {
+            assert!(c.ms_per_token.is_some(), "{c:?}");
+            if c.batching == "cont16" {
+                // The paged model accounted this cell; the grid budget is
+                // sized so nothing spills.
+                assert!(c.kv_pages_allocated.unwrap() > 0, "{c:?}");
+                assert_eq!(c.kv_pages_spilled, Some(0), "{c:?}");
+                let f = c.fragmentation.unwrap();
+                assert!((0.0..=1.0).contains(&f), "{c:?}");
+            } else {
+                assert_eq!(c.kv_pages_allocated, Some(0), "{c:?}");
+                assert_eq!(c.kv_pages_spilled, Some(0), "{c:?}");
+                assert_eq!(c.fragmentation, Some(0.0), "{c:?}");
+            }
+        }
+        // Continuous admission never queues a request longer than FIFO on
+        // the same coordinates (prefill-ahead only admits earlier).
+        for c in cells.iter().filter(|c| c.batching == "cont16") {
+            let twin = cells
+                .iter()
+                .find(|f| {
+                    f.batching == "fifo"
+                        && f.method_key == c.method_key
+                        && f.bandwidth_mbps == c.bandwidth_mbps
+                        && f.pattern == c.pattern
+                        && f.seg == c.seg
+                        && f.mem == c.mem
+                        && f.arrival == c.arrival
+                })
+                .expect("FIFO twin exists");
+            let mean = |r: &RequestLevel| {
+                r.queueing_delay_s.iter().sum::<f64>() / r.queueing_delay_s.len() as f64
+            };
+            let cont = mean(c.requests.as_ref().unwrap());
+            let fifo = mean(twin.requests.as_ref().unwrap());
+            assert!(
+                cont <= fifo + 1e-12,
+                "continuous queueing must not exceed FIFO: {cont} vs {fifo} in {c:?}"
+            );
+        }
+
+        // Round-trips through the strict v6 validator; a v5 relabel fails
+        // because the continuous cells break v5's exact axis cross.
+        let parsed = Json::parse(&m.to_json(&cells).to_string()).unwrap();
+        let summary = validate_sweep_v6(&parsed).expect("batched artifact validates");
+        assert_eq!(summary.cells, m.cell_count());
+        let Json::Obj(mut map) = parsed else {
+            panic!("artifact must be an object")
+        };
+        map.insert("schema".into(), "lime-sweep-v5".into());
+        assert!(validate_sweep(&Json::Obj(map)).is_err());
     }
 
     #[test]

@@ -45,17 +45,18 @@ fn usage() -> String {
                     fig14 lowmem fig18 tab5), or `sweep` for the scenario\n\
                     matrix (lowmem + cluster-size grids × bandwidth ×\n\
                     pattern, #Seg-override, joint memory/bandwidth\n\
-                    pressure-script, arrival-process and device-churn\n\
-                    axes — continuous request streams with per-request\n\
-                    TTFT/queueing-delay metrics, plus re-plan/KV-migration\n\
-                    /recovery counters) with one lime-sweep-v5 JSON\n\
-                    per grid\n\
+                    pressure-script, arrival-process, device-churn and\n\
+                    batching-policy axes — continuous request streams with\n\
+                    per-request TTFT/queueing-delay metrics, FIFO vs\n\
+                    step-level continuous batching with paged-KV counters,\n\
+                    plus re-plan/KV-migration/recovery counters) with one\n\
+                    lime-sweep-v6 JSON per grid\n\
        fleet        fleet-sharded request streams: N heterogeneous clusters\n\
                     behind a global admission router (rr/jsq/plan), tail-\n\
                     latency quantiles streamed as one lime-fleet-v1 JSON,\n\
                     with optional cluster churn (down/up + re-routing)\n\
        sweep-check  validate sweep/fleet JSON artifacts against the\n\
-                    lime-sweep-v2/v3/v4/v5 and lime-fleet-v1 schemas\n\
+                    lime-sweep-v2..v6 and lime-fleet-v1 schemas\n\
                     (non-zero exit on violation)\n\
        bench-check  diff a fresh BENCH_*.json against a committed baseline\n\
                     with a tolerance band (non-zero exit on regression)\n\
@@ -237,7 +238,7 @@ fn cmd_fleet(argv: &[String]) {
 fn cmd_sweep_check(argv: &[String]) {
     let cli = Cli::new(
         "lime sweep-check",
-        "validate sweep/fleet artifacts against the lime-sweep-v2/v3/v4/v5 and lime-fleet-v1 schemas",
+        "validate sweep/fleet artifacts against the lime-sweep-v2..v6 and lime-fleet-v1 schemas",
     )
     .opt("dir", "sweeps", "directory holding SWEEP_*.json / FLEET_*.json artifacts")
     .opt("file", "", "validate a single artifact instead of a directory");

@@ -265,6 +265,13 @@ impl CoreState {
 /// drives implementations through `begin_request` → `step`*, firing
 /// `on_mem_event` whenever a scripted memory event lands on the stream
 /// timeline (the core has already shifted [`CoreState::mem_caps`]).
+///
+/// The continuous-batching serving driver decomposes admission into the
+/// finer-grained [`SchedulePolicy::prefill_end`] (charge prefill while an
+/// earlier epoch still decodes) / [`SchedulePolicy::begin_batch`] (reset
+/// state at the epoch boundary) pair and signals mid-epoch batch-width
+/// changes through [`SchedulePolicy::on_batch_resize`]; all three default
+/// to behaviour that keeps FIFO-only policies correct unchanged.
 pub trait SchedulePolicy {
     /// Reset per-request state and charge the prefill pass for a request
     /// with `micro` micro-batches whose service begins at absolute time
@@ -291,6 +298,45 @@ pub trait SchedulePolicy {
     /// non-adaptive policies to degrade through their overflow fallbacks
     /// against the zeroed cap.
     fn on_churn_event(&mut self, _core: &mut CoreState, _ev: &ChurnEvent, _ctx: &ChurnCtx) {}
+
+    /// Charge the prefill pass only (no per-request state reset) for a
+    /// request with `micro` micro-batches whose prefill begins at absolute
+    /// time `at`. Pure time arithmetic: the continuous-batching driver
+    /// calls this to overlap a *pending* admission's prefill with the
+    /// current batch's decode, so implementations must not touch state the
+    /// in-flight decode steps read. Returns the prefill-end time; the
+    /// default charges nothing (policies without a prefill model).
+    fn prefill_end(
+        &mut self,
+        _core: &mut CoreState,
+        at: f64,
+        _micro: usize,
+        _global_step: usize,
+    ) -> f64 {
+        at
+    }
+
+    /// Reset per-request state for a batch epoch whose decode begins at
+    /// `at`, *without* charging prefill (already charged through
+    /// [`SchedulePolicy::prefill_end`] while the previous epoch decoded).
+    /// Returns the decode-start time. The default composes the legacy
+    /// path — [`SchedulePolicy::begin_request`] resets *and* charges
+    /// prefill — so policies that never overlap keep one code path.
+    fn begin_batch(
+        &mut self,
+        core: &mut CoreState,
+        at: f64,
+        micro: usize,
+        global_step: usize,
+    ) -> f64 {
+        self.begin_request(core, at, micro, global_step)
+    }
+
+    /// The active batch width changed between decode steps (a finished
+    /// request was evicted or a prefilled one joined). Implementations
+    /// resize whatever per-micro-batch state they keep; the next
+    /// [`SchedulePolicy::step`] sees the new `micro` in its [`StepCtx`].
+    fn on_batch_resize(&mut self, _core: &mut CoreState, _micro: usize) {}
 
     /// KV tokens shipped between devices so far (stream total).
     fn kv_tokens_transferred(&self) -> u64 {
@@ -497,81 +543,99 @@ impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
         step_ends.clear();
         step_ends.reserve(tokens);
         for local in 0..tokens {
-            let g = self.global_step;
-            // Scripted memory fluctuation, fired on the STREAM timeline —
-            // applied before the policy's step so a lowered threshold
-            // already counts as "imminent" for this step's Alg. 2
-            // decisions.
-            let script = self.script;
-            for ev in script.mem.iter().filter(|ev| ev.at_step == g) {
-                self.state.apply_mem_event(ev);
-                self.policy.on_mem_event(ev);
-            }
-            // Churn fires after memory events within a step (the
-            // [`Script::events`] order): the core flips the device's
-            // availability and cap, opens a recovery tracker for Downs,
-            // then lets the policy re-plan/migrate before the step runs.
-            for ev in script.churn.iter().filter(|ev| ev.at_step == g) {
-                self.state.apply_churn_event(ev)?;
-                if ev.kind == ChurnKind::Down {
-                    let baseline = if g > 0 {
-                        self.step_time_sum / g as f64
-                    } else {
-                        f64::INFINITY
-                    };
-                    let slot = self.recovery_steps.len();
-                    self.recovery_steps.push(None);
-                    self.pending_recovery.push((slot, baseline, 0));
-                }
-                self.policy.on_churn_event(
-                    &mut self.state,
-                    ev,
-                    &ChurnCtx {
-                        at: t_prev,
-                        global_step: g,
-                        local_step: local,
-                        micro,
-                    },
-                );
-            }
-            let step_start = t_prev;
-            let step_end = self.policy.step(
-                &mut self.state,
-                &StepCtx {
-                    global_step: g,
-                    local_step: local,
-                    step_start,
-                    micro,
-                },
-            );
-            if self.state.take_emergency() {
-                self.emergency_steps += 1;
-            }
-            let dt = step_end - step_start;
-            self.step_time_sum += dt;
-            if self.retain_step_times {
-                self.step_times.push(dt);
-            }
-            if !self.pending_recovery.is_empty() {
-                let recovered = &mut self.recovery_steps;
-                self.pending_recovery.retain_mut(|(slot, baseline, steps)| {
-                    *steps += 1;
-                    if dt <= *baseline * RECOVERY_TOLERANCE {
-                        recovered[*slot] = Some(*steps);
-                        false
-                    } else {
-                        true
-                    }
-                });
-            }
+            let step_end = self.step_stream(t_prev, micro, local)?;
             step_ends.push(step_end);
             t_prev = step_end;
-            self.global_step += 1;
         }
         run.start = at;
         run.decode_start = decode_start;
         run.micro = micro;
         Ok(())
+    }
+
+    /// Advance the stream by exactly one decode step starting at `t_prev`
+    /// with `micro` micro-batches in flight, `local_step` being the oldest
+    /// active request's completed-step count. This is the single step body
+    /// [`ExecutorCore::run_request_into`] loops over *and* the primitive
+    /// the continuous-batching driver (`serve::simqueue`) calls directly —
+    /// scripted mem/churn events fire on the stream timeline, emergency
+    /// steps are counted, recovery trackers advance, and the global step
+    /// counter increments. Returns the absolute step-end time.
+    pub fn step_stream(
+        &mut self,
+        t_prev: f64,
+        micro: usize,
+        local_step: usize,
+    ) -> Result<f64, ChurnError> {
+        let g = self.global_step;
+        // Scripted memory fluctuation, fired on the STREAM timeline —
+        // applied before the policy's step so a lowered threshold
+        // already counts as "imminent" for this step's Alg. 2
+        // decisions.
+        let script = self.script;
+        for ev in script.mem.iter().filter(|ev| ev.at_step == g) {
+            self.state.apply_mem_event(ev);
+            self.policy.on_mem_event(ev);
+        }
+        // Churn fires after memory events within a step (the
+        // [`Script::events`] order): the core flips the device's
+        // availability and cap, opens a recovery tracker for Downs,
+        // then lets the policy re-plan/migrate before the step runs.
+        for ev in script.churn.iter().filter(|ev| ev.at_step == g) {
+            self.state.apply_churn_event(ev)?;
+            if ev.kind == ChurnKind::Down {
+                let baseline = if g > 0 {
+                    self.step_time_sum / g as f64
+                } else {
+                    f64::INFINITY
+                };
+                let slot = self.recovery_steps.len();
+                self.recovery_steps.push(None);
+                self.pending_recovery.push((slot, baseline, 0));
+            }
+            self.policy.on_churn_event(
+                &mut self.state,
+                ev,
+                &ChurnCtx {
+                    at: t_prev,
+                    global_step: g,
+                    local_step,
+                    micro,
+                },
+            );
+        }
+        let step_start = t_prev;
+        let step_end = self.policy.step(
+            &mut self.state,
+            &StepCtx {
+                global_step: g,
+                local_step,
+                step_start,
+                micro,
+            },
+        );
+        if self.state.take_emergency() {
+            self.emergency_steps += 1;
+        }
+        let dt = step_end - step_start;
+        self.step_time_sum += dt;
+        if self.retain_step_times {
+            self.step_times.push(dt);
+        }
+        if !self.pending_recovery.is_empty() {
+            let recovered = &mut self.recovery_steps;
+            self.pending_recovery.retain_mut(|(slot, baseline, steps)| {
+                *steps += 1;
+                if dt <= *baseline * RECOVERY_TOLERANCE {
+                    recovered[*slot] = Some(*steps);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        self.global_step += 1;
+        Ok(step_end)
     }
 
     /// Tear down into the stream totals (trace, step latencies, counters).
@@ -608,6 +672,12 @@ impl<'s, P: SchedulePolicy> ExecutorCore<'s, P> {
             replans_fired: totals.replans_fired,
             kv_migrated_bytes: totals.kv_migrated_bytes,
             recovery_steps: totals.recovery_steps,
+            // Single-request runs model KV as contiguous preallocation;
+            // paged accounting exists only on the continuous-batching
+            // serving path (`serve::kvpages`).
+            kv_pages_allocated: 0,
+            kv_pages_spilled: 0,
+            kv_fragmentation: 0.0,
         }
     }
 }

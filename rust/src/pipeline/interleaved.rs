@@ -235,35 +235,25 @@ impl<'a> InterleavedPolicy<'a> {
     fn clear_request_state(&mut self) {
         self.st = None;
     }
-}
 
-impl SchedulePolicy for InterleavedPolicy<'_> {
-    fn begin_request(
-        &mut self,
-        core: &mut CoreState,
-        at: f64,
-        micro: usize,
-        global_step: usize,
-    ) -> f64 {
+    /// Rebuild the per-request adaptation state for a batch of `micro`
+    /// micro-batches: fresh on the first request, reset in place
+    /// afterwards (the arena lever — a long stream touches the allocator
+    /// O(1) times on the policy side). `reset` mirrors `new`
+    /// field-for-field on the planner/protocol (pinned by their
+    /// `reset_equals_new_after_use` tests) and the vectors are
+    /// clear+resize'd to the exact values the fresh path builds, so both
+    /// paths are bit-identical (`in_place_request_reset_matches_fresh_
+    /// rebuild` streams both). Scripted pressure accumulated earlier on
+    /// the stream carries into the reset planner, so mid-stream requests
+    /// plan under the same shifted slack the effective caps describe.
+    fn reset_request_state(&mut self, core: &mut CoreState, micro: usize, bw0: f64) {
         let d = self.cluster.len();
-        let bw0 = core.bw_at(global_step);
         // Effective base allocation: the churn overlay when a re-plan is
         // in force, the offline allocation otherwise (always, churn-free).
         let alloc = self.churn_alloc.as_ref().unwrap_or(self.alloc);
-
-        // Per-request state: built fresh on the first request, reset IN
-        // PLACE afterwards (the arena lever — a long stream touches the
-        // allocator O(1) times on the policy side). `reset` mirrors `new`
-        // field-for-field on the planner/protocol (pinned by their
-        // `reset_equals_new_after_use` tests) and the vectors below are
-        // clear+resize'd to the exact values the fresh path builds, so
-        // both paths are bit-identical (`in_place_request_reset_matches_
-        // fresh_rebuild` streams both).
         if let Some(st) = self.st.as_mut() {
             st.planner.reset(alloc, self.cluster, micro);
-            // Scripted pressure accumulated earlier on the stream carries
-            // into the reset planner, so mid-stream requests plan under
-            // the same shifted slack the effective caps describe.
             for i in 0..d {
                 let pressure = core.mem_pressure(i);
                 if pressure != 0 {
@@ -319,14 +309,18 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
                 micro_front: vec![0.0; micro],
             });
         }
+    }
 
-        // ------------- prefill pass (charged, not measured) -------------
-        // Reads the effective base allocation — identical to the live
-        // allocation at this point on both paths. Down devices (0 layers
-        // under a churn re-plan) host no stage, so they neither compute
-        // nor relay activations.
+    /// Prefill-pass charge for a `micro`-wide admission beginning at `at`
+    /// (charged, not measured). Pure time arithmetic over the effective
+    /// base allocation — touches no per-request state, so the continuous
+    /// driver may overlap it with an in-flight batch's decode. Down
+    /// devices (0 layers under a churn re-plan) host no stage, so they
+    /// neither compute nor relay activations.
+    fn charge_prefill(&self, at: f64, micro: usize, bw0: f64) -> f64 {
+        let alloc = self.churn_alloc.as_ref().unwrap_or(self.alloc);
         let mut t_prefill = at;
-        for i in 0..d {
+        for i in 0..self.cluster.len() {
             let a = &alloc.devices[i];
             if a.total_layers == 0 {
                 continue;
@@ -342,12 +336,65 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
                 bw0,
             );
         }
-        let decode_start = t_prefill;
+        t_prefill
+    }
+}
 
+impl SchedulePolicy for InterleavedPolicy<'_> {
+    fn begin_request(
+        &mut self,
+        core: &mut CoreState,
+        at: f64,
+        micro: usize,
+        global_step: usize,
+    ) -> f64 {
+        let d = self.cluster.len();
+        let bw0 = core.bw_at(global_step);
+        self.reset_request_state(core, micro, bw0);
+        let decode_start = self.charge_prefill(at, micro, bw0);
         let st = self.st.as_mut().expect("state installed above");
         st.slot_free.clear();
         st.slot_free.resize(d, decode_start);
         decode_start
+    }
+
+    fn prefill_end(
+        &mut self,
+        core: &mut CoreState,
+        at: f64,
+        micro: usize,
+        global_step: usize,
+    ) -> f64 {
+        let bw0 = core.bw_at(global_step);
+        self.charge_prefill(at, micro, bw0)
+    }
+
+    fn begin_batch(
+        &mut self,
+        core: &mut CoreState,
+        at: f64,
+        micro: usize,
+        global_step: usize,
+    ) -> f64 {
+        // Prefill was already charged through `prefill_end` while the
+        // previous epoch decoded; only the per-request state resets here.
+        let d = self.cluster.len();
+        let bw0 = core.bw_at(global_step);
+        self.reset_request_state(core, micro, bw0);
+        let st = self.st.as_mut().expect("state installed above");
+        st.slot_free.clear();
+        st.slot_free.resize(d, at);
+        at
+    }
+
+    fn on_batch_resize(&mut self, _core: &mut CoreState, micro: usize) {
+        // `step` fills `micro_front` with the step start, so resizing is
+        // the only bookkeeping a width change needs. The planner/protocol
+        // keep the epoch's admission-time micro — a modeling
+        // simplification documented in docs/SERVING.md.
+        if let Some(st) = self.st.as_mut() {
+            st.micro_front.resize(micro, 0.0);
+        }
     }
 
     fn on_mem_event(&mut self, ev: &MemEvent) {

@@ -38,6 +38,17 @@ pub struct SimResult {
     /// steps until step latency returns within tolerance of the
     /// pre-fault mean, `None` when the run ends still degraded.
     pub recovery_steps: Vec<Option<usize>>,
+    /// KV pages handed out by the paged allocator (`serve::kvpages`) —
+    /// cumulative over the run. Zero on runs that model KV as contiguous
+    /// preallocation (every single-request run and the FIFO serving path).
+    pub kv_pages_allocated: u64,
+    /// KV pages spilled to SSD when the page budget ran dry, costed
+    /// through the Eq. 8 volume model. Zero without paged accounting.
+    pub kv_pages_spilled: u64,
+    /// Peak internal fragmentation of the paged allocator:
+    /// max over steps of `1 − used_tokens / (pages_held × page_tokens)`.
+    /// 0.0 without paged accounting.
+    pub kv_fragmentation: f64,
 }
 
 impl SimResult {
@@ -76,6 +87,9 @@ mod tests {
             replans_fired: 0,
             kv_migrated_bytes: 0,
             recovery_steps: Vec::new(),
+            kv_pages_allocated: 0,
+            kv_pages_spilled: 0,
+            kv_fragmentation: 0.0,
         };
         assert!((r.ms_per_token() - 50.0).abs() < 1e-9);
         assert!((r.mean_step() - 0.2).abs() < 1e-12);

@@ -209,7 +209,17 @@ impl SchedulePolicy for TensorParallelPolicy<'_> {
             round_bytes: self.spec.h_size(micro),
         });
         // TP charges no pipeline prefill pass: decoding starts immediately.
+        // (The default `prefill_end`/`begin_batch` hooks are therefore
+        // exactly right for this policy: prefill-ahead charges nothing and
+        // a batch epoch just reinstalls the state above.)
         at
+    }
+
+    fn on_batch_resize(&mut self, _core: &mut CoreState, micro: usize) {
+        // The collective payload scales with the live batch width.
+        if let Some(st) = self.st.as_mut() {
+            st.round_bytes = self.spec.h_size(micro);
+        }
     }
 
     fn step(&mut self, core: &mut CoreState, ctx: &StepCtx) -> f64 {

@@ -153,22 +153,15 @@ impl<'a> TraditionalPolicy<'a> {
             st: None,
         }
     }
-}
 
-impl SchedulePolicy for TraditionalPolicy<'_> {
-    fn begin_request(
-        &mut self,
-        core: &mut CoreState,
-        at: f64,
-        micro: usize,
-        global_step: usize,
-    ) -> f64 {
-        let d = self.cluster.len();
-        // Prefill charge (not measured). The traditional schedule has no
-        // cross-segment overlap window, so load and compute serialize.
-        let bw0 = core.bw_at(global_step);
+    /// Prefill charge for a `micro`-wide admission beginning at `at` (not
+    /// measured). The traditional schedule has no cross-segment overlap
+    /// window, so load and compute serialize. Pure time arithmetic — no
+    /// per-request state touched, so the continuous driver may overlap it
+    /// with an in-flight batch's decode.
+    fn charge_prefill(&self, at: f64, micro: usize, bw0: f64) -> f64 {
         let mut t_prefill = at;
-        for i in 0..d {
+        for i in 0..self.cluster.len() {
             let a = &self.alloc.devices[i];
             let flops = self.spec.layer_prefill_flops(self.opts.prompt_tokens)
                 * a.total_layers as f64
@@ -180,11 +173,61 @@ impl SchedulePolicy for TraditionalPolicy<'_> {
                     bw0,
                 );
         }
+        t_prefill
+    }
+
+    fn install_state(&mut self, micro: usize) {
         self.st = Some(TradState {
-            kv_held: vec![self.opts.prompt_tokens; d],
+            kv_held: vec![self.opts.prompt_tokens; self.cluster.len()],
             fronts: vec![0.0f64; micro],
         });
+    }
+}
+
+impl SchedulePolicy for TraditionalPolicy<'_> {
+    fn begin_request(
+        &mut self,
+        core: &mut CoreState,
+        at: f64,
+        micro: usize,
+        global_step: usize,
+    ) -> f64 {
+        let bw0 = core.bw_at(global_step);
+        let t_prefill = self.charge_prefill(at, micro, bw0);
+        self.install_state(micro);
         t_prefill
+    }
+
+    fn prefill_end(
+        &mut self,
+        core: &mut CoreState,
+        at: f64,
+        micro: usize,
+        global_step: usize,
+    ) -> f64 {
+        let bw0 = core.bw_at(global_step);
+        self.charge_prefill(at, micro, bw0)
+    }
+
+    fn begin_batch(
+        &mut self,
+        _core: &mut CoreState,
+        at: f64,
+        micro: usize,
+        _global_step: usize,
+    ) -> f64 {
+        // Prefill already charged through `prefill_end` during the
+        // previous epoch's decode; just rebuild the per-batch state.
+        self.install_state(micro);
+        at
+    }
+
+    fn on_batch_resize(&mut self, _core: &mut CoreState, micro: usize) {
+        // `step` fills `fronts` with the step start, so resizing is all a
+        // width change needs.
+        if let Some(st) = self.st.as_mut() {
+            st.fronts.resize(micro, 0.0);
+        }
     }
 
     fn step(&mut self, core: &mut CoreState, ctx: &StepCtx) -> f64 {

@@ -24,7 +24,12 @@
 //!   running sums, [`P2Quantile`] markers and a capped [`Reservoir`] per
 //!   metric — never a per-request vector, so memory stays flat however
 //!   long the stream runs ([`simulate_stream_sink`] with
-//!   `retain_step_times = false`);
+//!   `retain_step_times = false`). Shards run under **FIFO batching**
+//!   ([`simulate_stream_sink`] delegates to the FIFO admission path, not
+//!   [`crate::serve::simqueue::BatchingOpts::continuous`]), which keeps
+//!   `lime-fleet-v1` artifacts byte-identical to runs predating the
+//!   continuous-batching axis — see `docs/SERVING.md` for the policy
+//!   semantics;
 //! * results serialize as schema `lime-fleet-v1` through the incremental
 //!   [`StreamWriter`] (bytes identical to `Json::Display`, pinned in
 //!   `util::json`); [`validate_fleet`] is the strict machine check behind

@@ -1,0 +1,400 @@
+//! Paged KV-cache allocator model — the vLLM-style PagedAttention memory
+//! discipline (SNIPPETS §3B) in token-space accounting.
+//!
+//! The FIFO serving path (and every single-request run) models KV as
+//! **contiguous preallocation**: a request's whole KV extent is implicitly
+//! reserved for its lifetime. Real engines instead hand out fixed-size
+//! **pages** (`page_tokens` KV slots each) from a bounded pool with a free
+//! list, which is what makes step-level continuous batching viable under
+//! memory pressure: an evicted request's pages return to the free list
+//! immediately, a joining request takes pages as its context grows, and
+//! only the *last* page of each context is internally fragmented.
+//!
+//! [`KvPagePool`] is pure accounting — deterministic integer/f64
+//! arithmetic, no clocks, no RNG — so the continuous-batching driver
+//! (`serve::simqueue`) stays bit-deterministic across worker counts. The
+//! pool is device-replicated in token space: every device holds the same
+//! token counts for its own layer slice, so one token-space pool models
+//! all devices, and per-device *bytes* come out by scaling with the Eq. 8
+//! per-token-per-layer unit ([`crate::adapt::resident_kv_bytes`], wired
+//! through [`KvPageConfig::bytes_per_token`]).
+//!
+//! When the free list runs dry the pool **spills**: the context holding
+//! the most resident pages (ties broken toward the lowest request id)
+//! loses its coldest page to SSD. The driver drains
+//! [`KvPagePool::take_spilled_tokens`] each step and costs the write on
+//! every layer-hosting device through the same [`crate::sim::SsdModel`]
+//! channel the emergency KV fallback uses — so spill traffic shows up in
+//! step timing, not just counters. Spilled pages are modeled
+//! write-only (no read-back on a later step; the simplification is
+//! documented in `docs/SERVING.md`).
+
+/// Shape of the paged allocator: the page-size knob and the pool budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPageSpec {
+    /// KV token slots per page (the sweep's page-size knob; ≥ 1).
+    pub page_tokens: usize,
+    /// Total KV token slots the pool may hold resident across all
+    /// contexts; the pool carves `ceil(budget_tokens / page_tokens)`
+    /// pages out of it.
+    pub budget_tokens: usize,
+}
+
+impl KvPageSpec {
+    pub fn new(page_tokens: usize, budget_tokens: usize) -> Self {
+        assert!(page_tokens >= 1, "page must hold at least one token");
+        assert!(
+            budget_tokens >= page_tokens,
+            "budget must fit at least one page"
+        );
+        KvPageSpec {
+            page_tokens,
+            budget_tokens,
+        }
+    }
+
+    /// Pages the pool holds (`ceil(budget_tokens / page_tokens)`).
+    pub fn total_pages(&self) -> usize {
+        self.budget_tokens.div_ceil(self.page_tokens)
+    }
+}
+
+/// Paged-allocator wiring for one allocation: the pool shape plus the
+/// per-device byte scale that turns spilled *tokens* into SSD-write
+/// *bytes* (Eq. 8 unit: `kv_bytes_per_token_layer × device layers`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KvPageConfig {
+    pub spec: KvPageSpec,
+    /// KV bytes one token occupies on each device
+    /// (`resident_kv_bytes(alloc, i, 1)`); zero for devices hosting no
+    /// layers, which the spill costing skips.
+    pub bytes_per_token: Vec<u64>,
+}
+
+impl KvPageConfig {
+    /// Build the config for `alloc`: page-size knob, token budget, and the
+    /// per-device byte scales from the Eq. 8 volume model.
+    pub fn for_alloc(
+        alloc: &crate::plan::allocation::Allocation,
+        page_tokens: usize,
+        budget_tokens: usize,
+    ) -> Self {
+        KvPageConfig {
+            spec: KvPageSpec::new(page_tokens, budget_tokens),
+            bytes_per_token: (0..alloc.devices.len())
+                .map(|i| crate::adapt::resident_kv_bytes(alloc, i, 1))
+                .collect(),
+        }
+    }
+}
+
+/// One context's page accounting.
+#[derive(Debug, Clone)]
+struct Ctx {
+    /// Total KV tokens the context has produced (prompt + decoded).
+    tokens: usize,
+    /// Pages currently resident in the pool.
+    resident_pages: usize,
+    /// Pages spilled to SSD (write-only; never read back).
+    spilled_pages: usize,
+    /// Tokens backed by resident pages (`tokens − spilled tokens`).
+    resident_tokens: usize,
+}
+
+/// The paged KV allocator: a bounded page pool with free-list accounting,
+/// per-context growth, immediate release on eviction, and deterministic
+/// spill victim selection. See the module docs for the model.
+#[derive(Debug, Clone)]
+pub struct KvPagePool {
+    spec: KvPageSpec,
+    /// Pages not held by any context.
+    free_pages: usize,
+    /// Live contexts, keyed by request id — a `BTreeMap` so victim scans
+    /// iterate in deterministic id order.
+    contexts: std::collections::BTreeMap<u64, Ctx>,
+    /// Cumulative pages handed out (fresh or recycled).
+    pages_allocated: u64,
+    /// Cumulative pages spilled to SSD.
+    pages_spilled: u64,
+    /// Spilled tokens not yet drained by the driver for SSD costing.
+    spilled_tokens_pending: usize,
+    /// Peak internal fragmentation observed (see [`KvPagePool::fragmentation`]).
+    frag_peak: f64,
+}
+
+impl KvPagePool {
+    pub fn new(spec: KvPageSpec) -> Self {
+        KvPagePool {
+            free_pages: spec.total_pages(),
+            spec,
+            contexts: std::collections::BTreeMap::new(),
+            pages_allocated: 0,
+            pages_spilled: 0,
+            spilled_tokens_pending: 0,
+            frag_peak: 0.0,
+        }
+    }
+
+    pub fn spec(&self) -> KvPageSpec {
+        self.spec
+    }
+
+    /// Admit a context holding `tokens` KV tokens (its prompt), allocating
+    /// `ceil(tokens / page_tokens)` pages (spilling others' pages if the
+    /// free list runs dry). Panics if `id` is already live.
+    pub fn register(&mut self, id: u64, tokens: usize) {
+        let pages = tokens.div_ceil(self.spec.page_tokens);
+        assert!(
+            self.contexts
+                .insert(
+                    id,
+                    Ctx {
+                        tokens,
+                        resident_pages: 0,
+                        spilled_pages: 0,
+                        resident_tokens: tokens,
+                    },
+                )
+                .is_none(),
+            "context {id} already registered"
+        );
+        for _ in 0..pages {
+            self.take_page_for(id);
+        }
+        self.note_fragmentation();
+    }
+
+    /// Grow context `id` by one decoded token, allocating a page when the
+    /// token crosses a page boundary.
+    pub fn append_token(&mut self, id: u64) {
+        let page_tokens = self.spec.page_tokens;
+        let ctx = self.contexts.get_mut(&id).expect("context not registered");
+        ctx.tokens += 1;
+        ctx.resident_tokens += 1;
+        if ctx.resident_tokens > ctx.resident_pages * page_tokens {
+            self.take_page_for(id);
+        }
+        self.note_fragmentation();
+    }
+
+    /// Release every resident page of context `id` back to the free list
+    /// (the eviction path: pages free the moment a request finishes).
+    /// Spilled pages are SSD-side and simply forgotten.
+    pub fn release(&mut self, id: u64) {
+        let ctx = self.contexts.remove(&id).expect("context not registered");
+        debug_assert!(
+            ctx.resident_tokens <= ctx.resident_pages * self.spec.page_tokens
+                && ctx.resident_pages + ctx.spilled_pages
+                    >= ctx.tokens.div_ceil(self.spec.page_tokens),
+            "page accounting must cover the context's tokens"
+        );
+        self.free_pages += ctx.resident_pages;
+        self.note_fragmentation();
+    }
+
+    /// Hand one page to `ctx_id`, spilling a victim's page when the free
+    /// list is empty.
+    fn take_page_for(&mut self, ctx_id: u64) {
+        if self.free_pages == 0 {
+            self.spill_one(ctx_id);
+        }
+        assert!(self.free_pages > 0, "spill must have freed a page");
+        self.free_pages -= 1;
+        self.pages_allocated += 1;
+        self.contexts
+            .get_mut(&ctx_id)
+            .expect("context not registered")
+            .resident_pages += 1;
+    }
+
+    /// Spill the coldest page of the context holding the most resident
+    /// pages (ties → lowest id; the requester itself is eligible, as in
+    /// vLLM preemption). The page's resident tokens (a full page except
+    /// for a context down to its last, partial page) queue for SSD
+    /// costing via [`KvPagePool::take_spilled_tokens`].
+    fn spill_one(&mut self, _requester: u64) {
+        let victim = self
+            .contexts
+            .iter()
+            .filter(|(_, c)| c.resident_pages > 0)
+            .max_by_key(|(id, c)| (c.resident_pages, std::cmp::Reverse(**id)))
+            .map(|(id, _)| *id)
+            .expect("a pool with zero free pages holds resident pages");
+        let page_tokens = self.spec.page_tokens;
+        let ctx = self.contexts.get_mut(&victim).expect("victim is live");
+        let moved = ctx.resident_tokens.min(page_tokens);
+        ctx.resident_pages -= 1;
+        ctx.spilled_pages += 1;
+        ctx.resident_tokens -= moved;
+        self.free_pages += 1;
+        self.pages_spilled += 1;
+        self.spilled_tokens_pending += moved;
+    }
+
+    /// Tokens spilled since the last drain — the driver converts these to
+    /// per-device SSD-write bytes through [`KvPageConfig::bytes_per_token`].
+    pub fn take_spilled_tokens(&mut self) -> usize {
+        std::mem::take(&mut self.spilled_tokens_pending)
+    }
+
+    /// Internal fragmentation right now: `1 − resident_tokens /
+    /// (resident_pages × page_tokens)` across all live contexts (0.0 when
+    /// no pages are held). Only the last page of each context can be
+    /// partial, so this measures exactly the paged-vs-contiguous overhead.
+    pub fn fragmentation(&self) -> f64 {
+        let held: usize = self.contexts.values().map(|c| c.resident_pages).sum();
+        if held == 0 {
+            return 0.0;
+        }
+        let used: usize = self.contexts.values().map(|c| c.resident_tokens).sum();
+        1.0 - used as f64 / (held * self.spec.page_tokens) as f64
+    }
+
+    fn note_fragmentation(&mut self) {
+        let f = self.fragmentation();
+        if f > self.frag_peak {
+            self.frag_peak = f;
+        }
+    }
+
+    /// Peak of [`KvPagePool::fragmentation`] over every mutation so far.
+    pub fn fragmentation_peak(&self) -> f64 {
+        self.frag_peak
+    }
+
+    /// Cumulative pages handed out.
+    pub fn pages_allocated(&self) -> u64 {
+        self.pages_allocated
+    }
+
+    /// Cumulative pages spilled to SSD.
+    pub fn pages_spilled(&self) -> u64 {
+        self.pages_spilled
+    }
+
+    /// Pages on the free list right now.
+    pub fn free_pages(&self) -> usize {
+        self.free_pages
+    }
+
+    /// Pages held by live contexts right now (summed from the contexts, so
+    /// the free-list/held split is independently checkable:
+    /// `pages_in_use() + free_pages() == spec.total_pages()` always).
+    pub fn pages_in_use(&self) -> usize {
+        self.contexts.values().map(|c| c.resident_pages).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_grow_release_round_trips_the_free_list() {
+        let mut pool = KvPagePool::new(KvPageSpec::new(4, 64)); // 16 pages
+        assert_eq!(pool.free_pages(), 16);
+        pool.register(1, 6); // ceil(6/4) = 2 pages
+        assert_eq!(pool.pages_in_use(), 2);
+        assert_eq!(pool.pages_allocated(), 2);
+        // Tokens 7, 8 fit the second page; token 9 crosses the boundary.
+        pool.append_token(1);
+        pool.append_token(1);
+        assert_eq!(pool.pages_in_use(), 2);
+        pool.append_token(1);
+        assert_eq!(pool.pages_in_use(), 3);
+        assert_eq!(pool.pages_allocated(), 3);
+        pool.release(1);
+        assert_eq!(pool.free_pages(), 16);
+        assert_eq!(pool.pages_spilled(), 0);
+    }
+
+    #[test]
+    fn fragmentation_tracks_the_partial_last_page() {
+        let mut pool = KvPagePool::new(KvPageSpec::new(8, 64));
+        pool.register(1, 9); // 2 pages for 9 tokens → 7/16 wasted
+        let f = pool.fragmentation();
+        assert!((f - 7.0 / 16.0).abs() < 1e-12, "{f}");
+        assert!(pool.fragmentation_peak() >= f);
+        // Filling the page shrinks live fragmentation; the peak stays.
+        for _ in 0..7 {
+            pool.append_token(1);
+        }
+        assert!(pool.fragmentation() < 1e-12);
+        assert!((pool.fragmentation_peak() - 7.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exhausted_pool_spills_the_largest_context() {
+        // 4 pages of 2 tokens. Two contexts fill them; growth spills.
+        let mut pool = KvPagePool::new(KvPageSpec::new(2, 8));
+        pool.register(10, 6); // 3 pages
+        pool.register(20, 2); // 1 page — pool full
+        assert_eq!(pool.free_pages(), 0);
+        pool.append_token(20); // needs a page → spills one of ctx 10's
+        assert_eq!(pool.pages_spilled(), 1);
+        assert_eq!(pool.take_spilled_tokens(), 2, "a full page moved");
+        assert_eq!(pool.take_spilled_tokens(), 0, "drain is one-shot");
+        // Victim was the largest context (10), ties impossible here.
+        pool.release(10); // 2 resident pages return (1 spilled)
+        assert_eq!(pool.free_pages(), 2);
+    }
+
+    #[test]
+    fn spill_victim_ties_break_toward_lowest_id() {
+        let mut pool = KvPagePool::new(KvPageSpec::new(2, 4)); // 2 pages
+        pool.register(7, 2);
+        pool.register(3, 2);
+        pool.append_token(7); // boundary cross → spill; 3 and 7 tie at 1 page
+        assert_eq!(pool.pages_spilled(), 1);
+        // Context 3 lost its page: releasing it returns nothing.
+        pool.release(3);
+        assert_eq!(pool.free_pages(), 0);
+        pool.release(7);
+        assert_eq!(pool.free_pages(), 2);
+    }
+
+    #[test]
+    fn no_page_leaks_under_fuzzed_churn() {
+        // Deterministic LCG fuzz: random register/append/release against a
+        // small pool; every page must be accounted for at every step, and
+        // releasing everything must restore the full free list.
+        let spec = KvPageSpec::new(4, 32); // 8 pages
+        let mut pool = KvPagePool::new(spec);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        let mut state = 0x2545_F491_4F6C_DD1Du64;
+        let mut rng = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as usize
+        };
+        for _ in 0..2000 {
+            match rng() % 4 {
+                0 => {
+                    pool.register(next_id, rng() % 9);
+                    live.push(next_id);
+                    next_id += 1;
+                }
+                _ if !live.is_empty() => {
+                    let k = rng() % live.len();
+                    if rng() % 3 == 0 {
+                        pool.release(live.swap_remove(k));
+                    } else {
+                        pool.append_token(live[k]);
+                    }
+                }
+                _ => {}
+            }
+            assert!(
+                pool.pages_in_use() + pool.free_pages() == spec.total_pages(),
+                "page conservation violated"
+            );
+            let f = pool.fragmentation();
+            assert!((0.0..=1.0).contains(&f), "fragmentation out of range: {f}");
+        }
+        for id in live.drain(..) {
+            pool.release(id);
+        }
+        assert_eq!(pool.free_pages(), spec.total_pages(), "pages leaked");
+        pool.take_spilled_tokens();
+    }
+}

@@ -7,11 +7,14 @@
 //! and are gated behind the off-by-default `pjrt` cargo feature; the
 //! deployment planning helpers (and [`LayerResidency`], the contract
 //! between the scheduler and the engine) are plain Rust and always build,
-//! as does [`simqueue`] — the FIFO request-queue simulation over the
-//! unified executor core that the scenario matrix's arrival-process axis
-//! evaluates — and [`fleet`], the multi-cluster admission-router layer
-//! that shards million-request streams across the work-stealing pool and
-//! streams `lime-fleet-v1` tail-latency artifacts.
+//! as does [`simqueue`] — the request-queue simulation over the unified
+//! executor core (FIFO or step-level continuous batching, selected by
+//! [`BatchingOpts`]) that the scenario matrix's arrival-process and
+//! batching axes evaluate — [`kvpages`], the paged KV allocator model the
+//! continuous driver can account pages through — and [`fleet`], the
+//! multi-cluster admission-router layer that shards million-request
+//! streams across the work-stealing pool and streams `lime-fleet-v1`
+//! tail-latency artifacts.
 
 pub mod deployment;
 #[cfg(feature = "pjrt")]
@@ -19,6 +22,7 @@ pub mod engine;
 #[cfg(feature = "pjrt")]
 pub mod server;
 pub mod fleet;
+pub mod kvpages;
 pub mod simqueue;
 
 pub use deployment::{plan_tiny, residency_plan, virtual_cluster};
@@ -26,9 +30,11 @@ pub use fleet::{
     run_fleet, run_fleet_sequential, validate_fleet, write_fleet, FleetCluster, FleetSpec,
     FleetSummary, RouterPolicy,
 };
+pub use kvpages::{KvPageConfig, KvPagePool, KvPageSpec};
 pub use simqueue::{
-    serve_interleaved, serve_tensor_parallel, serve_traditional, simulate_stream,
-    simulate_stream_sink, RequestMetrics, StreamResult, StreamSink, StreamStats,
+    serve_interleaved, serve_interleaved_opts, serve_tensor_parallel, serve_traditional,
+    simulate_stream, simulate_stream_opts, simulate_stream_sink, simulate_stream_sink_opts,
+    BatchingMode, BatchingOpts, RequestMetrics, StreamResult, StreamSink, StreamStats,
 };
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, Generation};

@@ -27,7 +27,30 @@
 //! `serve_*` helpers wrap the three policies. A single-request stream is
 //! bit-identical to the corresponding `run_*` entry point
 //! (property-tested in `rust/tests/serving_stream.rs`).
+//!
+//! Two admission disciplines share the queue (selected by
+//! [`BatchingOpts`], see `docs/SERVING.md`):
+//!
+//! * **FIFO** (the default, and the only pre-v6 behaviour): a batch is
+//!   formed once, runs to its longest member's completion, and the next
+//!   admission waits for the whole batch — KV is modeled as contiguous
+//!   preallocation.
+//! * **Continuous** (step-level re-batching, SNIPPETS §3C): finished
+//!   requests are evicted between decode steps, waiting prefilled
+//!   requests join mid-epoch, and up to `prefill_ahead` pending
+//!   admissions charge their prefill *while the current batch decodes*
+//!   (the overlap that shrinks queueing delay under bursty arrivals).
+//!   Decode advances through [`ExecutorCore::step_stream`] — the same
+//!   single-step primitive `run_request_into` loops over — so scripted
+//!   pressure/churn, emergency accounting and recovery tracking ride the
+//!   identical path. Optionally a paged KV allocator
+//!   ([`super::kvpages::KvPagePool`]) accounts pages per step and costs
+//!   page spills as SSD writes through the Eq. 8 byte scales. With
+//!   `max_batch = 1` and `prefill_ahead = 0` the continuous driver is
+//!   bit-identical to FIFO (property-pinned in
+//!   `rust/tests/serving_batching.rs`).
 
+use super::kvpages::{KvPageConfig, KvPagePool};
 use crate::adapt::Script;
 use crate::cluster::Cluster;
 use crate::model::ModelSpec;
@@ -38,8 +61,61 @@ use crate::pipeline::{
     TraditionalPolicy,
 };
 use crate::plan::allocation::Allocation;
-use crate::sim::Trace;
+use crate::sim::{SpanKind, Trace};
 use crate::workload::requests::Request;
+
+/// Admission discipline of the serving queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchingMode {
+    /// Batch once, run to the longest member's completion, admit again.
+    Fifo,
+    /// Re-batch every decode step: evict finished requests immediately,
+    /// join prefilled ones, overlap pending prefills with decode.
+    Continuous,
+}
+
+/// Batching-policy knobs for [`simulate_stream_opts`] /
+/// [`simulate_stream_sink_opts`].
+#[derive(Debug, Clone)]
+pub struct BatchingOpts {
+    pub mode: BatchingMode,
+    /// Continuous mode only: how many pending admissions may charge their
+    /// prefill concurrently with the current batch's decode (each through
+    /// [`SchedulePolicy::prefill_end`], micro-batch count 1). `0` disables
+    /// the overlap — new epochs then admit exactly like FIFO.
+    pub prefill_ahead: usize,
+    /// Continuous mode only: when set, a [`KvPagePool`] tracks KV pages
+    /// per step and page spills are costed as SSD writes through the
+    /// config's Eq. 8 byte scales. `None` (and the whole FIFO path) models
+    /// contiguous preallocation and reports zero page counters.
+    pub kv_pages: Option<KvPageConfig>,
+}
+
+impl BatchingOpts {
+    /// The pre-v6 behaviour: FIFO admission, contiguous KV.
+    pub fn fifo() -> Self {
+        BatchingOpts {
+            mode: BatchingMode::Fifo,
+            prefill_ahead: 0,
+            kv_pages: None,
+        }
+    }
+
+    /// Continuous batching with up to `prefill_ahead` overlapped prefills.
+    pub fn continuous(prefill_ahead: usize) -> Self {
+        BatchingOpts {
+            mode: BatchingMode::Continuous,
+            prefill_ahead,
+            kv_pages: None,
+        }
+    }
+
+    /// Attach a paged KV allocator (continuous mode only).
+    pub fn with_kv_pages(mut self, cfg: KvPageConfig) -> Self {
+        self.kv_pages = Some(cfg);
+        self
+    }
+}
 
 /// Request-level metrics of one served request.
 #[derive(Debug, Clone, PartialEq)]
@@ -63,9 +139,11 @@ pub struct RequestMetrics {
 /// Outcome of serving one request stream.
 #[derive(Debug, Clone)]
 pub struct StreamResult {
-    /// Per-request metrics, in arrival (= admission) order.
+    /// Per-request metrics: admission order on the FIFO path, completion
+    /// order on the continuous path (requests finish independently there).
     pub requests: Vec<RequestMetrics>,
-    /// Batched runs executed (= admissions).
+    /// Batched runs executed: admissions on the FIFO path, batch *epochs*
+    /// (batch formed from an empty cluster) on the continuous path.
     pub batches: usize,
     /// Completion time of the last request (arrivals start at t = 0).
     pub makespan: f64,
@@ -89,6 +167,16 @@ pub struct StreamResult {
     /// Per-`Down`-event recovery latency in decode steps, stream-wide
     /// firing order (`None` = the stream ended still degraded).
     pub recovery_steps: Vec<Option<usize>>,
+    /// KV pages handed out by the paged allocator, cumulative over the
+    /// stream. Zero on the FIFO path and on continuous runs without
+    /// [`BatchingOpts::kv_pages`] (contiguous preallocation).
+    pub kv_pages_allocated: u64,
+    /// KV pages spilled to SSD when the page budget ran dry, costed as
+    /// SSD writes through the Eq. 8 byte scales. Zero without paging.
+    pub kv_pages_spilled: u64,
+    /// Peak internal fragmentation of the paged allocator
+    /// ([`KvPagePool::fragmentation_peak`]); 0.0 without paging.
+    pub kv_fragmentation: f64,
 }
 
 impl StreamResult {
@@ -160,6 +248,9 @@ pub struct StreamStats {
     pub replans_fired: usize,
     pub kv_migrated_bytes: u64,
     pub recovery_steps: Vec<Option<usize>>,
+    pub kv_pages_allocated: u64,
+    pub kv_pages_spilled: u64,
+    pub kv_fragmentation: f64,
 }
 
 /// Serve `requests` (sorted by arrival) through `policy` on one shared
@@ -188,8 +279,7 @@ pub fn simulate_stream<P: SchedulePolicy>(
     script: &Script,
     requests: &[Request],
 ) -> StreamResult {
-    let mut metrics: Vec<RequestMetrics> = Vec::with_capacity(requests.len());
-    let stats = simulate_stream_sink(
+    simulate_stream_opts(
         policy,
         cluster,
         bw_trace,
@@ -197,6 +287,35 @@ pub fn simulate_stream<P: SchedulePolicy>(
         common,
         script,
         requests,
+        &BatchingOpts::fifo(),
+    )
+}
+
+/// [`simulate_stream`] under an explicit batching policy
+/// ([`BatchingOpts`]): `BatchingOpts::fifo()` reproduces
+/// [`simulate_stream`] bit-for-bit, `BatchingOpts::continuous(..)`
+/// selects the step-level re-batching driver.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_stream_opts<P: SchedulePolicy>(
+    policy: P,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    max_batch: usize,
+    common: &CommonOptions,
+    script: &Script,
+    requests: &[Request],
+    batching: &BatchingOpts,
+) -> StreamResult {
+    let mut metrics: Vec<RequestMetrics> = Vec::with_capacity(requests.len());
+    let stats = simulate_stream_sink_opts(
+        policy,
+        cluster,
+        bw_trace,
+        max_batch,
+        common,
+        script,
+        requests,
+        batching,
         &mut metrics,
         true,
     );
@@ -215,6 +334,9 @@ pub fn simulate_stream<P: SchedulePolicy>(
         replans_fired: stats.replans_fired,
         kv_migrated_bytes: stats.kv_migrated_bytes,
         recovery_steps: stats.recovery_steps,
+        kv_pages_allocated: stats.kv_pages_allocated,
+        kv_pages_spilled: stats.kv_pages_spilled,
+        kv_fragmentation: stats.kv_fragmentation,
     }
 }
 
@@ -237,10 +359,79 @@ pub fn simulate_stream_sink<P: SchedulePolicy, S: StreamSink>(
     sink: &mut S,
     retain_step_times: bool,
 ) -> StreamStats {
+    simulate_stream_sink_opts(
+        policy,
+        cluster,
+        bw_trace,
+        max_batch,
+        common,
+        script,
+        requests,
+        &BatchingOpts::fifo(),
+        sink,
+        retain_step_times,
+    )
+}
+
+/// [`simulate_stream_sink`] under an explicit batching policy — the one
+/// driver both entry points funnel into.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_stream_sink_opts<P: SchedulePolicy, S: StreamSink>(
+    policy: P,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    max_batch: usize,
+    common: &CommonOptions,
+    script: &Script,
+    requests: &[Request],
+    batching: &BatchingOpts,
+    sink: &mut S,
+    retain_step_times: bool,
+) -> StreamStats {
     assert!(
         requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
         "requests must be sorted by arrival (FIFO admission)"
     );
+    match batching.mode {
+        BatchingMode::Fifo => run_fifo(
+            policy,
+            cluster,
+            bw_trace,
+            max_batch,
+            common,
+            script,
+            requests,
+            sink,
+            retain_step_times,
+        ),
+        BatchingMode::Continuous => run_continuous(
+            policy,
+            cluster,
+            bw_trace,
+            max_batch,
+            common,
+            script,
+            requests,
+            batching,
+            sink,
+            retain_step_times,
+        ),
+    }
+}
+
+/// The FIFO admission loop (the pre-v6 driver, byte-for-byte).
+#[allow(clippy::too_many_arguments)]
+fn run_fifo<P: SchedulePolicy, S: StreamSink>(
+    policy: P,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    max_batch: usize,
+    common: &CommonOptions,
+    script: &Script,
+    requests: &[Request],
+    sink: &mut S,
+    retain_step_times: bool,
+) -> StreamStats {
     let max_batch = max_batch.max(1);
     let mut core = ExecutorCore::new(policy, cluster, bw_trace, common, script);
     core.retain_step_times(retain_step_times);
@@ -313,6 +504,302 @@ pub fn simulate_stream_sink<P: SchedulePolicy, S: StreamSink>(
         replans_fired: totals.replans_fired,
         kv_migrated_bytes: totals.kv_migrated_bytes,
         recovery_steps: totals.recovery_steps,
+        // FIFO models KV as contiguous preallocation: no pages, ever.
+        kv_pages_allocated: 0,
+        kv_pages_spilled: 0,
+        kv_fragmentation: 0.0,
+    }
+}
+
+/// One in-flight request of the continuous driver.
+struct ActiveSlot {
+    /// Index into the request slice.
+    idx: usize,
+    /// Decode steps completed so far.
+    done: usize,
+    /// When this request's decode began (its batch epoch's decode start,
+    /// or the step boundary it joined at).
+    decode_start: f64,
+    /// When admission work for it began (epoch formation or prefill-ahead
+    /// launch) — the moment it left the queue.
+    admitted_at: f64,
+    /// First-token time (set when `done` reaches 1).
+    first: f64,
+}
+
+/// A request whose prefill was overlapped with the current batch's decode
+/// and is waiting for a free batch slot.
+struct ReadyReq {
+    idx: usize,
+    admitted_at: f64,
+    /// Prefill-end time: the request may join at the first step boundary
+    /// at or after this.
+    ready_at: f64,
+}
+
+/// The step-level continuous-batching driver (module docs, SNIPPETS §3C).
+///
+/// Structure per iteration: (1) with an empty cluster, form a new batch
+/// epoch — from already-prefilled [`ReadyReq`]s via
+/// [`SchedulePolicy::begin_batch`], else from the FIFO queue via
+/// [`SchedulePolicy::begin_request`] (exactly the FIFO path's admission,
+/// which is what makes `max_batch = 1, prefill_ahead = 0` bit-identical
+/// to FIFO); (2) launch up to `prefill_ahead` pending prefills through
+/// [`SchedulePolicy::prefill_end`] (micro-batch count 1, pure time
+/// arithmetic overlapped with decode); (3) advance one decode step via
+/// [`ExecutorCore::step_stream`] with the *current* batch width and the
+/// oldest member's completed-step count; (4) grow/spill KV pages and cost
+/// spills as SSD writes; (5) evict finished members (emitting their
+/// metrics and releasing their pages immediately) and join ready ones,
+/// signalling a width change through [`SchedulePolicy::on_batch_resize`].
+#[allow(clippy::too_many_arguments)]
+fn run_continuous<P: SchedulePolicy, S: StreamSink>(
+    policy: P,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    max_batch: usize,
+    common: &CommonOptions,
+    script: &Script,
+    requests: &[Request],
+    batching: &BatchingOpts,
+    sink: &mut S,
+    retain_step_times: bool,
+) -> StreamStats {
+    let max_batch = max_batch.max(1);
+    let mut core = ExecutorCore::new(policy, cluster, bw_trace, common, script);
+    core.retain_step_times(retain_step_times);
+    let kv_cfg = batching.kv_pages.as_ref();
+    let mut pool = kv_cfg.map(|cfg| KvPagePool::new(cfg.spec));
+
+    let mut active: Vec<ActiveSlot> = Vec::new();
+    let mut ready: std::collections::VecDeque<ReadyReq> = std::collections::VecDeque::new();
+    let mut next = 0usize; // FIFO cursor into `requests`
+    let mut batches = 0usize;
+    let mut makespan = 0.0f64;
+    let mut t = 0.0f64;
+
+    // Emits a finished request. A zero-step request "finishes" the moment
+    // its prefill does (it generates no token), mirroring the FIFO path's
+    // degenerate metrics: first = finish = prefill end, TBT = 0.
+    fn emit<S: StreamSink>(
+        sink: &mut S,
+        makespan: &mut f64,
+        r: &Request,
+        admitted_at: f64,
+        decode_start: f64,
+        first: f64,
+        finish: f64,
+    ) {
+        let m = RequestMetrics {
+            id: r.id,
+            arrival: r.arrival,
+            admitted_at,
+            queueing_delay: admitted_at - r.arrival,
+            ttft: first - r.arrival,
+            tbt: if r.steps == 0 {
+                0.0
+            } else {
+                (finish - decode_start) / r.steps as f64
+            },
+            finish,
+        };
+        *makespan = makespan.max(m.finish);
+        sink.on_request(&m);
+    }
+
+    while next < requests.len() || !ready.is_empty() || !active.is_empty() {
+        if active.is_empty() {
+            // ---- form a new batch epoch on the idle cluster ----
+            if !ready.is_empty() {
+                let take = ready.len().min(max_batch);
+                let members: Vec<ReadyReq> = ready.drain(..take).collect();
+                let t_dec = members.iter().fold(t, |acc, r| acc.max(r.ready_at));
+                let g = core.global_step();
+                let decode_start = core.policy.begin_batch(&mut core.state, t_dec, take, g);
+                batches += 1;
+                for m in members {
+                    let r = &requests[m.idx];
+                    if let Some(pool) = pool.as_mut() {
+                        pool.register(r.id, common.prompt_tokens);
+                    }
+                    active.push(ActiveSlot {
+                        idx: m.idx,
+                        done: 0,
+                        decode_start,
+                        admitted_at: m.admitted_at,
+                        first: decode_start,
+                    });
+                }
+                t = decode_start;
+            } else if next < requests.len() {
+                // FIFO-style admission: identical gather + begin_request
+                // arithmetic to `run_fifo`, so prefill-ahead-free
+                // single-slot streams stay bit-identical.
+                let t_start = t.max(requests[next].arrival);
+                let mut j = next + 1;
+                while j < requests.len() && j - next < max_batch && requests[j].arrival <= t_start {
+                    j += 1;
+                }
+                let g = core.global_step();
+                let decode_start =
+                    core.policy.begin_request(&mut core.state, t_start, j - next, g);
+                batches += 1;
+                for idx in next..j {
+                    let r = &requests[idx];
+                    if r.steps == 0 {
+                        emit(
+                            sink,
+                            &mut makespan,
+                            r,
+                            t_start,
+                            decode_start,
+                            decode_start,
+                            decode_start,
+                        );
+                        continue;
+                    }
+                    if let Some(pool) = pool.as_mut() {
+                        pool.register(r.id, common.prompt_tokens);
+                    }
+                    active.push(ActiveSlot {
+                        idx,
+                        done: 0,
+                        decode_start,
+                        admitted_at: t_start,
+                        first: decode_start,
+                    });
+                }
+                next = j;
+                t = decode_start;
+            } else {
+                break;
+            }
+            if active.is_empty() {
+                continue; // the whole epoch was zero-step requests
+            }
+        }
+
+        // ---- overlap pending admissions' prefill with this decode ----
+        while batching.prefill_ahead > 0
+            && ready.len() < batching.prefill_ahead
+            && next < requests.len()
+            && requests[next].arrival <= t
+        {
+            let r = &requests[next];
+            let g = core.global_step();
+            let ready_at = core.policy.prefill_end(&mut core.state, t, 1, g);
+            if r.steps == 0 {
+                emit(sink, &mut makespan, r, t, ready_at, ready_at, ready_at);
+            } else {
+                ready.push_back(ReadyReq {
+                    idx: next,
+                    admitted_at: t,
+                    ready_at,
+                });
+            }
+            next += 1;
+        }
+
+        // ---- one decode step at the current batch width ----
+        let local = active.iter().map(|s| s.done).max().unwrap_or(0);
+        // Scripted churn that would take down the last surviving device is
+        // rejected by `ScenarioMatrix::assert_valid` before any stream
+        // runs; fail loudly if one slips through.
+        let step_end = core
+            .step_stream(t, active.len(), local)
+            .expect("churn script must leave at least one surviving device");
+        let mut t_next = step_end;
+
+        // ---- paged-KV growth + spill costing ----
+        if let (Some(pool), Some(cfg)) = (pool.as_mut(), kv_cfg) {
+            for s in &active {
+                pool.append_token(requests[s.idx].id);
+            }
+            let spilled = pool.take_spilled_tokens();
+            if spilled > 0 {
+                for (i, &bpt) in cfg.bytes_per_token.iter().enumerate() {
+                    if bpt == 0 {
+                        continue;
+                    }
+                    let w = core.state.ssds[i].write(step_end, bpt * spilled as u64);
+                    core.state.trace.push(i, SpanKind::Store, "kv-page-spill", w.start, w.end);
+                    t_next = t_next.max(w.end);
+                }
+            }
+        }
+
+        // ---- evict finished members, join ready ones ----
+        let width_before = active.len();
+        for s in active.iter_mut() {
+            s.done += 1;
+            if s.done == 1 {
+                s.first = step_end;
+            }
+        }
+        let mut k = 0;
+        while k < active.len() {
+            if active[k].done >= requests[active[k].idx].steps {
+                let s = active.remove(k);
+                let r = &requests[s.idx];
+                if let Some(pool) = pool.as_mut() {
+                    pool.release(r.id);
+                }
+                emit(
+                    sink,
+                    &mut makespan,
+                    r,
+                    s.admitted_at,
+                    s.decode_start,
+                    s.first,
+                    step_end,
+                );
+            } else {
+                k += 1;
+            }
+        }
+        while active.len() < max_batch && ready.front().is_some_and(|r| r.ready_at <= step_end) {
+            let m = ready.pop_front().expect("front checked above");
+            let r = &requests[m.idx];
+            if let Some(pool) = pool.as_mut() {
+                pool.register(r.id, common.prompt_tokens);
+            }
+            active.push(ActiveSlot {
+                idx: m.idx,
+                done: 0,
+                decode_start: step_end,
+                admitted_at: m.admitted_at,
+                first: step_end,
+            });
+        }
+        if active.len() != width_before && !active.is_empty() {
+            let width = active.len();
+            core.policy.on_batch_resize(&mut core.state, width);
+        }
+
+        t = t_next;
+    }
+
+    let (kv_pages_allocated, kv_pages_spilled, kv_fragmentation) = pool
+        .map(|p| (p.pages_allocated(), p.pages_spilled(), p.fragmentation_peak()))
+        .unwrap_or((0, 0, 0.0));
+    let totals = core.into_totals();
+    StreamStats {
+        batches,
+        makespan,
+        tokens_generated: requests.iter().map(|r| r.steps).sum(),
+        decode_time: totals.step_time_sum,
+        step_times: totals.step_times,
+        trace: totals.trace,
+        kv_tokens_transferred: totals.kv_tokens_transferred,
+        online_plans_fired: totals.online_plans_fired,
+        emergency_steps: totals.emergency_steps,
+        bw_stalls: totals.bw_stalls,
+        replans_fired: totals.replans_fired,
+        kv_migrated_bytes: totals.kv_migrated_bytes,
+        recovery_steps: totals.recovery_steps,
+        kv_pages_allocated,
+        kv_pages_spilled,
+        kv_fragmentation,
     }
 }
 
@@ -335,6 +822,33 @@ pub fn serve_interleaved(
         &CommonOptions::from(opts),
         script,
         requests,
+    )
+}
+
+/// [`serve_interleaved`] under an explicit batching policy — the entry
+/// point the scenario matrix's v6 batching axis runs (`fifo` cells call
+/// it with [`BatchingOpts::fifo`] and stay bit-identical to
+/// [`serve_interleaved`]).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_interleaved_opts(
+    alloc: &Allocation,
+    cluster: &Cluster,
+    bw_trace: &BandwidthTrace,
+    max_batch: usize,
+    opts: &ExecOptions,
+    script: &Script,
+    requests: &[Request],
+    batching: &BatchingOpts,
+) -> StreamResult {
+    simulate_stream_opts(
+        InterleavedPolicy::new(alloc, cluster, opts),
+        cluster,
+        bw_trace,
+        max_batch,
+        &CommonOptions::from(opts),
+        script,
+        requests,
+        batching,
     )
 }
 
@@ -517,6 +1031,40 @@ mod tests {
         assert_eq!(flat.kv_tokens_transferred, collected.kv_tokens_transferred);
         assert_eq!(flat.emergency_steps, collected.emergency_steps);
         assert_eq!(flat.bw_stalls, collected.bw_stalls);
+    }
+
+    #[test]
+    fn continuous_driver_smoke_with_pages() {
+        let (alloc, cluster) = setup();
+        let bw = BandwidthTrace::fixed_mbps(200.0);
+        let d = cluster.len();
+        let reqs = stream_requests(Pattern::Bursty, 3, 2 * d, 0.5, 64, 3);
+        let batching =
+            BatchingOpts::continuous(2).with_kv_pages(KvPageConfig::for_alloc(&alloc, 16, 80));
+        let sr = serve_interleaved_opts(
+            &alloc,
+            &cluster,
+            &bw,
+            d,
+            &exec_off(),
+            &Script::none(),
+            &reqs,
+            &batching,
+        );
+        assert_eq!(sr.requests.len(), 2 * d);
+        assert_eq!(sr.tokens_generated, 6 * d);
+        assert!(sr.kv_pages_allocated > 0);
+        assert!(
+            sr.kv_pages_spilled > 0,
+            "an 80-token budget must spill under {} 64-token prompts",
+            2 * d
+        );
+        assert!((0.0..=1.0).contains(&sr.kv_fragmentation));
+        for r in &sr.requests {
+            assert!(r.queueing_delay >= 0.0, "{r:?}");
+            assert!(r.finish >= r.admitted_at, "{r:?}");
+            assert!(r.ttft >= 0.0, "{r:?}");
+        }
     }
 
     #[test]

@@ -135,15 +135,16 @@ fn scenario_matrix_pool_equals_sequential() {
     // The scenario-matrix acceptance check: a matrix exercising ALL new
     // axes — #Seg overrides (nested plan_with_segs on the pool), a
     // correlated multi-device dip, a joint bandwidth+memory script, a
-    // continuous-stream arrival point and a device-churn blip (online
-    // re-plan + KV migration inside the cell), both patterns — must be
-    // bit-identical between the pooled evaluation and the sequential
-    // reference, cell for cell (request-level metric arrays and churn
-    // counters included), and the serialized lime-sweep-v5 artifact must
-    // be byte-identical (the in-process proxy for CI's LIME_THREADS={1,4}
-    // sweep-determinism gate).
+    // continuous-stream arrival point, a device-churn blip (online
+    // re-plan + KV migration inside the cell) and a continuous-batching
+    // point (paged-KV accounting inside the cell), both patterns — must
+    // be bit-identical between the pooled evaluation and the sequential
+    // reference, cell for cell (request-level metric arrays, churn and
+    // paged-KV counters included), and the serialized lime-sweep-v6
+    // artifact must be byte-identical (the in-process proxy for CI's
+    // LIME_THREADS={1,4} sweep-determinism gate).
     use lime::adapt::{MemScenario, Script};
-    use lime::experiments::{ArrivalSpec, ScenarioMatrix, SegChoice};
+    use lime::experiments::{ArrivalSpec, BatchingSpec, ScenarioMatrix, SegChoice};
     use lime::util::bytes::gib;
     use lime::workload::Pattern;
 
@@ -182,7 +183,8 @@ fn scenario_matrix_pool_equals_sequential() {
     .with_churn(vec![
         Script::none(),
         Script::device_down_up("blip-d1", 1, 1, 3),
-    ]);
+    ])
+    .with_batching(vec![BatchingSpec::Fifo, BatchingSpec::Continuous { page_tokens: 16 }]);
     let pooled = matrix.eval();
     let sequential = matrix.eval_sequential();
     assert_eq!(pooled.len(), matrix.cell_count());
@@ -198,10 +200,14 @@ fn scenario_matrix_pool_equals_sequential() {
     assert!(pooled
         .iter()
         .any(|c| c.churn == "blip-d1" && c.ms_per_token.is_some()));
+    // Continuous-batching cells really accounted pages on both paths.
+    assert!(pooled
+        .iter()
+        .any(|c| c.batching == "cont16" && c.kv_pages_allocated.unwrap_or(0) > 0));
     assert_eq!(
         matrix.to_json(&pooled).to_string(),
         matrix.to_json(&sequential).to_string(),
-        "serialized v5 artifact must be byte-identical"
+        "serialized v6 artifact must be byte-identical"
     );
 }
 

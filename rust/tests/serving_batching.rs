@@ -1,0 +1,240 @@
+//! Batching-policy contracts of the serving simulator (`serve::simqueue`
+//! + `serve::kvpages`, see `docs/SERVING.md`):
+//!
+//! * **FIFO equivalence**: the continuous driver with `max_batch = 1` and
+//!   `prefill_ahead = 0` is bit-identical to the FIFO driver — per-request
+//!   metrics and every aggregate — property-tested over random streams of
+//!   both arrival patterns (the ISSUE's batch-size-1 acceptance pin).
+//! * **Queueing improvement**: under bursty arrivals with more requests
+//!   than batch slots, step-level continuous batching strictly lowers the
+//!   mean queueing delay vs FIFO (pinned on a concrete stream), and never
+//!   raises it (property over random bursty streams).
+//! * **Paged KV**: the sweep's `KvPageConfig` carries exactly the Eq. 8
+//!   per-device byte scales, and a budget-starved continuous run really
+//!   spills pages and pays for them in stream time.
+//!
+//! This suite runs in CI's LIME_THREADS={1,4} determinism matrix: nothing
+//! here may depend on worker count.
+
+use lime::adapt::{resident_kv_bytes, Script};
+use lime::cluster::Cluster;
+use lime::model::ModelSpec;
+use lime::net::BandwidthTrace;
+use lime::pipeline::ExecOptions;
+use lime::plan::{plan, Allocation, PlanOptions};
+use lime::serve::{serve_interleaved, serve_interleaved_opts, BatchingOpts, KvPageConfig};
+use lime::sim::TraceMode;
+use lime::util::bytes::mbps;
+use lime::util::prop::{check, pair, usize_in, Config, PropResult};
+use lime::workload::{stream_requests, Pattern};
+
+fn setup() -> (Allocation, Cluster) {
+    let spec = ModelSpec::llama2_13b();
+    let cluster = Cluster::env_e1();
+    let opts = PlanOptions {
+        empirical_tokens: 128,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    };
+    (plan(&spec, &cluster, &opts).unwrap().allocation, cluster)
+}
+
+fn exec_off() -> ExecOptions {
+    ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    }
+}
+
+#[test]
+fn prop_continuous_batch1_is_bit_identical_to_fifo() {
+    // With one batch slot and no prefill-ahead there is nothing to
+    // re-batch: the continuous driver must reduce to FIFO exactly —
+    // same admission times, same step arithmetic, same bits.
+    let (alloc, cluster) = setup();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let opts = exec_off();
+    let gen = pair(usize_in(1, 8), usize_in(0, 1000));
+    let cfg = Config {
+        cases: 10,
+        seed: 0xBA7C_0001,
+        max_shrink_steps: 16,
+    };
+    let result = check(&cfg, &gen, |&(count, salt)| {
+        let pattern = if salt % 2 == 0 {
+            Pattern::Sporadic
+        } else {
+            Pattern::Bursty
+        };
+        let reqs = stream_requests(pattern, salt as u64, count, 0.5, 64, 3);
+        let fifo = serve_interleaved(&alloc, &cluster, &bw, 1, &opts, &Script::none(), &reqs);
+        let cont = serve_interleaved_opts(
+            &alloc,
+            &cluster,
+            &bw,
+            1,
+            &opts,
+            &Script::none(),
+            &reqs,
+            &BatchingOpts::continuous(0),
+        );
+        if fifo.requests != cont.requests {
+            return Err(format!(
+                "per-request metrics diverged: {:?} vs {:?}",
+                fifo.requests, cont.requests
+            ));
+        }
+        if fifo.batches != cont.batches {
+            return Err(format!("batches {} vs {}", fifo.batches, cont.batches));
+        }
+        for (name, a, b) in [
+            ("makespan", fifo.makespan, cont.makespan),
+            ("decode_time", fifo.decode_time, cont.decode_time),
+        ] {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("{name} diverged: {a} vs {b}"));
+            }
+        }
+        if fifo.step_times != cont.step_times {
+            return Err("step_times diverged".to_string());
+        }
+        if cont.kv_pages_allocated != 0 || cont.kv_fragmentation != 0.0 {
+            return Err("pageless continuous run reported page counters".to_string());
+        }
+        Ok(())
+    });
+    assert!(matches!(result, PropResult::Pass { .. }), "{result:?}");
+}
+
+#[test]
+fn bursty_continuous_strictly_improves_mean_queueing() {
+    // The headline acceptance shape: 6 simultaneous requests, 2 batch
+    // slots. FIFO admits {0,1} at t=0 and makes {2,3} wait one full epoch
+    // and {4,5} two; continuous prefills request 2 while epoch 1 decodes
+    // and back-fills slots at step boundaries, so later requests leave
+    // the queue roughly one decode step apart instead of one epoch apart.
+    let (alloc, cluster) = setup();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let opts = exec_off();
+    let reqs = stream_requests(Pattern::Bursty, 7, 6, 0.5, 64, 4);
+    let fifo = serve_interleaved(&alloc, &cluster, &bw, 2, &opts, &Script::none(), &reqs);
+    let cont = serve_interleaved_opts(
+        &alloc,
+        &cluster,
+        &bw,
+        2,
+        &opts,
+        &Script::none(),
+        &reqs,
+        &BatchingOpts::continuous(1),
+    );
+    assert_eq!(cont.requests.len(), 6);
+    assert_eq!(cont.tokens_generated, fifo.tokens_generated);
+    assert!(fifo.mean_queueing_delay() > 0.0, "FIFO must actually queue here");
+    assert!(
+        cont.mean_queueing_delay() < fifo.mean_queueing_delay(),
+        "continuous {} must strictly beat FIFO {}",
+        cont.mean_queueing_delay(),
+        fifo.mean_queueing_delay()
+    );
+    // TTFT improves with it: the overlapped prefill is the first-token
+    // path for every request that skipped an epoch wait.
+    assert!(cont.mean_ttft() < fifo.mean_ttft());
+}
+
+#[test]
+fn prop_bursty_continuous_never_queues_worse_than_fifo() {
+    // The one-sided property behind the strict pin above, over random
+    // bursty stream sizes: whatever the count/slot ratio, continuous
+    // admission may not increase the mean queueing delay (equality is
+    // legitimate when everything fits one batch).
+    let (alloc, cluster) = setup();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let opts = exec_off();
+    let gen = pair(usize_in(1, 10), usize_in(0, 1000));
+    let cfg = Config {
+        cases: 10,
+        seed: 0xBA7C_0002,
+        max_shrink_steps: 16,
+    };
+    let result = check(&cfg, &gen, |&(count, salt)| {
+        let reqs = stream_requests(Pattern::Bursty, salt as u64, count, 0.5, 64, 3);
+        let fifo = serve_interleaved(&alloc, &cluster, &bw, 2, &opts, &Script::none(), &reqs);
+        let cont = serve_interleaved_opts(
+            &alloc,
+            &cluster,
+            &bw,
+            2,
+            &opts,
+            &Script::none(),
+            &reqs,
+            &BatchingOpts::continuous(1),
+        );
+        if cont.requests.len() != reqs.len() {
+            return Err(format!("served {} of {}", cont.requests.len(), reqs.len()));
+        }
+        let (f, c) = (fifo.mean_queueing_delay(), cont.mean_queueing_delay());
+        if c > f + 1e-12 {
+            return Err(format!("continuous queued worse: {c} > {f} (count {count})"));
+        }
+        Ok(())
+    });
+    assert!(matches!(result, PropResult::Pass { .. }), "{result:?}");
+}
+
+#[test]
+fn kv_page_config_carries_the_eq8_byte_scales() {
+    // Spilled pages are costed as SSD writes at `bytes_per_token[i] ×
+    // tokens` per device — the config must carry exactly the Eq. 8 unit
+    // (`resident_kv_bytes(alloc, i, 1)`), zero on layer-less devices.
+    let (alloc, _cluster) = setup();
+    let cfg = KvPageConfig::for_alloc(&alloc, 16, 1024);
+    assert_eq!(cfg.bytes_per_token.len(), alloc.devices.len());
+    for (i, &bpt) in cfg.bytes_per_token.iter().enumerate() {
+        assert_eq!(bpt, resident_kv_bytes(&alloc, i, 1), "device {i}");
+    }
+    assert!(
+        cfg.bytes_per_token.iter().sum::<u64>() > 0,
+        "a planned allocation must host KV somewhere"
+    );
+    assert_eq!(cfg.spec.page_tokens, 16);
+    assert_eq!(cfg.spec.total_pages(), 64);
+}
+
+#[test]
+fn budget_starved_continuous_run_spills_and_pays_in_stream_time() {
+    // Same stream, two budgets. The generous pool never spills; the
+    // starved pool must spill (8 × 64-token prompts against an 80-token
+    // budget) and the spill SSD writes land in the timeline, so the
+    // starved makespan cannot be shorter.
+    let (alloc, cluster) = setup();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let opts = exec_off();
+    let d = cluster.len();
+    let reqs = stream_requests(Pattern::Bursty, 11, 2 * d, 0.5, 64, 3);
+    let run = |budget: usize| {
+        serve_interleaved_opts(
+            &alloc,
+            &cluster,
+            &bw,
+            d,
+            &opts,
+            &Script::none(),
+            &reqs,
+            &BatchingOpts::continuous(1)
+                .with_kv_pages(KvPageConfig::for_alloc(&alloc, 16, budget)),
+        )
+    };
+    let generous = run(d * (64 + 3) * 2 + 16);
+    let starved = run(80);
+    assert_eq!(generous.kv_pages_spilled, 0, "generous budget must not spill");
+    assert!(generous.kv_pages_allocated > 0);
+    assert!(starved.kv_pages_spilled > 0, "an 80-token budget must spill");
+    assert!((0.0..=1.0).contains(&starved.kv_fragmentation));
+    assert!(
+        starved.makespan >= generous.makespan,
+        "spill writes must not make the stream faster: {} < {}",
+        starved.makespan,
+        generous.makespan
+    );
+}
