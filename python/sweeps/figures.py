@@ -1,5 +1,5 @@
 """Consumer for the Rust sweep artifacts (schemas ``lime-sweep-v2``
-through ``lime-sweep-v6``; see ``docs/SWEEPS.md`` for the schema
+through ``lime-sweep-v7``; see ``docs/SWEEPS.md`` for the schema
 reference).
 
 ``lime experiments --id sweep`` writes one ``SWEEP_<grid>.json`` per
@@ -26,6 +26,11 @@ renders those artifacts into the paper's figure layouts:
   column — mean/max queueing delay, TTFT, TBT plus the paged-KV
   counters (pages allocated / spilled, peak fragmentation) the
   continuous cells carry (see ``docs/SERVING.md``);
+* :func:`fig_length_mix` — the v7 workload-mix axis: fixed-length vs
+  mixed-length request streams on the same (batching, column) point —
+  the per-request ``prompt_len``/``steps`` spread each cell served
+  alongside its queueing/TTFT/TBT metrics, the serving-side cost of
+  ragged batches;
 * :func:`speedup_summary` — LIME's speedup over the best completing
   baseline per column (the paper's headline numbers).
 
@@ -60,6 +65,7 @@ SCHEMAS = (
     "lime-sweep-v4",
     "lime-sweep-v5",
     "lime-sweep-v6",
+    "lime-sweep-v7",
 )
 FLEET_SCHEMA = "lime-fleet-v1"
 
@@ -103,6 +109,22 @@ class Grid:
         """All batching-policy labels (v6; ``["fifo"]`` pre-v6)."""
         axis = self.axes.get("batching")
         return [b["label"] for b in axis] if axis else ["fifo"]
+
+    @property
+    def baseline_workload(self) -> str:
+        """Label of the fixed-length workload — v7 pins it at index 0;
+        pre-v7 artifacts carry no workload axis and every cell serves
+        the global fixed-length stream."""
+        axis = self.axes.get("workloads")
+        return axis[0]["label"] if axis else "fixed"
+
+    def at_baseline_workload(self, cell: dict[str, Any]) -> bool:
+        return cell.get("workload", self.baseline_workload) == self.baseline_workload
+
+    def workload_labels(self) -> list[str]:
+        """All workload-distribution labels (v7; ``["fixed"]`` pre-v7)."""
+        axis = self.axes.get("workloads")
+        return [w["label"] for w in axis] if axis else ["fixed"]
 
     def baseline_cells(self) -> list[dict[str, Any]]:
         """Cells at the baseline axis point (auto seg, no pressure,
@@ -355,9 +377,10 @@ def fig_memory_fluctuation(grid: Grid) -> str:
 def fig_queueing_delay(grid: Grid) -> str:
     """The v4 continuous-serving view: per-request queueing delay, TTFT
     and time-between-tokens summaries for every completed stream cell
-    (auto seg, baseline pressure, FIFO batching — the v6 continuous
-    twins get their own :func:`fig_batching` comparison), one row per
-    (arrival, column). Bursty streams should show the queueing the
+    (auto seg, baseline pressure, FIFO batching, fixed-length workload —
+    the v6 continuous twins get their own :func:`fig_batching`
+    comparison and the v7 mixed-length twins their own
+    :func:`fig_length_mix`), one row per (arrival, column). Bursty streams should show the queueing the
     sporadic pattern avoids — the serving-side shape of the paper's
     §V-A comparison."""
     out = [f"## {grid.grid} — request-level serving metrics (stream cells)"]
@@ -373,6 +396,7 @@ def fig_queueing_delay(grid: Grid) -> str:
             or c["mem"] != grid.baseline_mem
             or not grid.at_baseline_churn(c)
             or not grid.at_baseline_batching(c)
+            or not grid.at_baseline_workload(c)
         ):
             continue
         req = c["requests"]
@@ -404,7 +428,8 @@ def fig_queueing_delay(grid: Grid) -> str:
 def fig_batching(grid: Grid) -> str:
     """The v6 batching-policy view: FIFO vs step-level continuous
     admission on the same stream columns (LIME, auto seg, baseline
-    pressure/churn). One row per (batching policy, column) — the serving
+    pressure/churn/workload — mixed-length twins get their own
+    :func:`fig_length_mix` view). One row per (batching policy, column) — the serving
     metrics FIFO rows share with :func:`fig_queueing_delay`, plus the
     paged-KV counters (pages allocated / spilled and peak
     fragmentation; exactly zero on FIFO rows, which never touch the
@@ -429,6 +454,7 @@ def fig_batching(grid: Grid) -> str:
                 or c["seg"] != "auto"
                 or c["mem"] != grid.baseline_mem
                 or not grid.at_baseline_churn(c)
+                or not grid.at_baseline_workload(c)
                 or c.get("batching", grid.baseline_batching) != batching
             ):
                 continue
@@ -459,6 +485,72 @@ def fig_batching(grid: Grid) -> str:
         "KV pages",
         "pages spilled",
         "peak frag",
+    ]
+    out.append(_md_table(header, rows))
+    return "\n\n".join(out)
+
+
+def fig_length_mix(grid: Grid) -> str:
+    """The v7 workload-mix view: the same stream columns served under
+    each request-length distribution (LIME, auto seg, baseline
+    pressure/churn), one row per (workload, batching, column). The
+    per-request ``prompt_len``/``steps`` arrays the v7 cells carry make
+    the spread visible next to the serving metrics: the fixed rows show
+    degenerate ``min=max`` spreads, the bimodal rows the short-chat /
+    long-context mix whose stragglers continuous admission exists to
+    absorb (see ``docs/SERVING.md``)."""
+    out = [f"## {grid.grid} — fixed vs mixed-length workloads (stream cells)"]
+
+    def mean(vals: list[float]) -> float:
+        return sum(vals) / len(vals) if vals else 0.0
+
+    def spread(vals: list[int]) -> str:
+        if not vals:
+            return "-"
+        return f"{min(vals)}/{mean(vals):.0f}/{max(vals)}"
+
+    rows = []
+    for workload in grid.workload_labels():
+        for batching in grid.batching_labels():
+            for c in grid.stream_cells():
+                if (
+                    c["method"] != "lime"
+                    or c["seg"] != "auto"
+                    or c["mem"] != grid.baseline_mem
+                    or not grid.at_baseline_churn(c)
+                    or c.get("workload", grid.baseline_workload) != workload
+                    or c.get("batching", grid.baseline_batching) != batching
+                ):
+                    continue
+                req = c["requests"]
+                qd, ttft, tbt = req["queueing_delay_s"], req["ttft_s"], req["tbt_s"]
+                # Pre-v7 artifacts carry no length arrays; the global
+                # fixed-length knob applies and the spread shows "-".
+                prompts = req.get("prompt_len", [])
+                steps = req.get("steps", [])
+                rows.append(
+                    [
+                        workload,
+                        batching,
+                        f"{c['bandwidth_mbps']:g} Mbps / {c['pattern']}",
+                        str(len(qd)),
+                        spread(prompts),
+                        spread(steps),
+                        f"{mean(qd):.3f}",
+                        f"{mean(ttft):.3f}",
+                        f"{mean(tbt) * 1e3:.1f}",
+                    ]
+                )
+    header = [
+        "workload",
+        "batching",
+        "column",
+        "requests",
+        "prompt min/mean/max",
+        "steps min/mean/max",
+        "mean qd (s)",
+        "mean TTFT (s)",
+        "mean TBT (ms)",
     ]
     out.append(_md_table(header, rows))
     return "\n\n".join(out)
@@ -657,6 +749,8 @@ def render_grid(grid: Grid) -> str:
         parts.append(fig_queueing_delay(grid))
     if len(grid.batching_labels()) > 1:
         parts.append(fig_batching(grid))
+    if len(grid.workload_labels()) > 1:
+        parts.append(fig_length_mix(grid))
     if grid.churn_labels():
         parts.append(fig_recovery_latency(grid))
     parts.append(speedup_summary(grid))

@@ -1,9 +1,9 @@
-"""Consumer-side tests for the ``lime-sweep-v2``..``v6`` artifacts:
+"""Consumer-side tests for the ``lime-sweep-v2``..``v7`` artifacts:
 loading, figure-layout rendering, the request-level serving table, the
 batching-policy comparison table, the device-churn recovery-latency
-table, and the speedup summary — against small hand-built grids
-mirroring what ``lime experiments --id sweep`` emits (v6) and what
-older checkouts emitted (v2/v3/v4/v5)."""
+table, the workload-mix length table, and the speedup summary — against
+small hand-built grids mirroring what ``lime experiments --id sweep``
+emits (v7) and what older checkouts emitted (v2/v3/v4/v5/v6)."""
 
 import json
 
@@ -503,6 +503,133 @@ def test_pre_v6_grids_render_without_batching_section(sweep_dir_v5):
     assert g.baseline_batching == "fifo"
     assert g.batching_labels() == ["fifo"]
     assert "FIFO vs continuous batching" not in figures.render_grid(g)
+
+
+@pytest.fixture
+def sweep_dir_v7(tmp_path):
+    """A minimal lime-sweep-v7 artifact: the workload-mix axis with a
+    fixed-length / bimodal twin pair on one bursty stream column — the
+    mixed cell's request arrays carry ragged per-request
+    ``prompt_len``/``steps``, the fixed twin's are constant."""
+
+    def v7_cell(method, name, arrival, workload, ms, requests=None):
+        cell = _cell(method, name, 200.0, "bursty", "auto", "none", ms)
+        cell["bw_stalls"] = None if ms is None else 0
+        cell["arrival"] = arrival
+        cell["requests"] = requests
+        cell["churn"] = "none"
+        cell["replans_fired"] = None if ms is None else 0
+        cell["kv_migrated_bytes"] = None if ms is None else 0
+        cell["recovery_steps"] = None if ms is None else []
+        cell["batching"] = "fifo"
+        cell["kv_pages_allocated"] = None if ms is None else 0
+        cell["kv_pages_spilled"] = None if ms is None else 0
+        cell["fragmentation"] = None if ms is None else 0.0
+        cell["workload"] = workload
+        return cell
+
+    fixed_stream = {
+        "queueing_delay_s": [0.0, 2.5, 5.0],
+        "ttft_s": [1.0, 3.5, 6.0],
+        "tbt_s": [0.25, 0.25, 0.25],
+        "prompt_len": [64, 64, 64],
+        "steps": [3, 3, 3],
+    }
+    mixed_stream = {
+        "queueing_delay_s": [0.0, 3.0, 7.0],
+        "ttft_s": [1.0, 4.0, 8.5],
+        "tbt_s": [0.25, 0.25, 0.25],
+        "prompt_len": [32, 128, 32],
+        "steps": [2, 8, 2],
+    }
+    cells = [
+        v7_cell("lime", "LIME", "single", "fixed", 100.0),
+        v7_cell("lime", "LIME", "stream3", "fixed", 95.0, requests=fixed_stream),
+        v7_cell("lime", "LIME", "stream3", "bimix50", 105.0, requests=mixed_stream),
+        v7_cell("pp", "Pipeline parallelism", "single", "fixed", 250.0),
+    ]
+    doc = {
+        "schema": "lime-sweep-v7",
+        "grid": "v7grid",
+        "model": "Qwen3-32B",
+        "tokens": 8,
+        "bandwidths_mbps": [200.0],
+        "axes": {
+            "cluster": {"label": "v7grid", "devices": ["AGXOrin-64G", "AGXOrin-32G"]},
+            "bandwidths_mbps": [200.0],
+            "patterns": ["bursty"],
+            "methods": ["lime", "pp"],
+            "segs": ["auto"],
+            "mem_scenarios": [{"label": "none", "events": []}],
+            "pressure_scripts": [{"label": "none", "mem_events": [], "bw_events": []}],
+            "arrivals": [
+                {"label": "single", "kind": "single"},
+                {"label": "stream3", "kind": "stream", "count": 3, "lambda": 0.5},
+            ],
+            "churn_scripts": [{"label": "none", "events": []}],
+            "batching": [{"label": "fifo", "mode": "fifo"}],
+            "workloads": [
+                {"label": "fixed", "kind": "fixed", "prompt_tokens": 64, "steps": 3},
+                {
+                    "label": "bimix50",
+                    "kind": "bimodal",
+                    "short_prompt": 32,
+                    "short_steps": 2,
+                    "long_prompt": 128,
+                    "long_steps": 8,
+                    "long_frac": 0.5,
+                },
+            ],
+        },
+        "cells": cells,
+    }
+    path = tmp_path / "SWEEP_v7grid.json"
+    path.write_text(json.dumps(doc))
+    return tmp_path
+
+
+def test_v7_artifact_loads_and_renders_length_mix_table(sweep_dir_v7):
+    g = figures.load_sweeps(str(sweep_dir_v7))[0]
+    assert g.grid == "v7grid"
+    assert g.baseline_workload == "fixed"
+    assert g.workload_labels() == ["fixed", "bimix50"]
+    text = figures.fig_length_mix(g)
+    # The fixed row: degenerate spreads and the v4-table serving metrics.
+    assert "| fixed |" in text
+    assert "| 64/64/64 |" in text and "| 3/3/3 |" in text
+    assert "| 2.500 |" in text
+    # The bimodal twin: ragged min/mean/max spreads from the per-request
+    # arrays, mean qd (0+3+7)/3 and mean TTFT (1+4+8.5)/3.
+    assert "| bimix50 |" in text
+    assert "| 32/64/128 |" in text and "| 2/4/8 |" in text
+    assert "| 3.333 |" in text
+    assert "| 4.500 |" in text
+    assert "None" not in text
+
+
+def test_v7_mixed_cells_do_not_pollute_older_figures(sweep_dir_v7):
+    g = figures.load_sweeps(str(sweep_dir_v7))[0]
+    # The v4 queueing table pins the baseline (fixed) workload only; the
+    # mixed twin lives in fig_length_mix.
+    text = figures.fig_queueing_delay(g)
+    assert "| 2.500 |" in text
+    assert "3.333" not in text
+    # Baseline figures use single-run cells (always fixed): 2 methods.
+    assert len(g.baseline_cells()) == 2
+    assert "2.50x" in figures.speedup_summary(g)
+    # The full render includes the workload section exactly once.
+    rendered = figures.render_grid(g)
+    assert rendered.count("fixed vs mixed-length workloads") == 1
+
+
+def test_pre_v7_grids_render_without_workload_section(sweep_dir_v6):
+    g = figures.load_sweeps(str(sweep_dir_v6))[0]
+    # Pre-v7 cells carry no "workload" key: everything sits at the
+    # implicit fixed baseline and the length-mix section is omitted.
+    assert g.baseline_workload == "fixed"
+    assert g.workload_labels() == ["fixed"]
+    assert all(g.at_baseline_workload(c) for c in g.cells)
+    assert "fixed vs mixed-length workloads" not in figures.render_grid(g)
 
 
 def test_render_grid_and_cli(sweep_dir, tmp_path, capsys):

@@ -16,7 +16,9 @@
 //! pool job versus the sequential reference it is byte-identical to. The
 //! `serving_continuous_batching_*` pair compares the FIFO admission path
 //! against the step-level continuous driver (paged-KV accounting on) over
-//! one oversubscribed bursty stream.
+//! one oversubscribed bursty stream; the `mixed_length_stream_*` pair
+//! replays it with bimodal per-request lengths, pricing the ragged-slot
+//! arithmetic of the workload-mix axis.
 //!
 //! Pin the worker count with `LIME_THREADS=<n>` for stable timings (CI
 //! does). `Bench::finish` writes `BENCH_scheduler_perf.json` and prints
@@ -261,6 +263,50 @@ fn main() {
             &off,
             &lime::adapt::Script::none(),
             &batch_reqs,
+            &lime::serve::BatchingOpts::continuous(1)
+                .with_kv_pages(lime::serve::KvPageConfig::for_alloc(&alloc, 16, 4096)),
+        );
+        std::hint::black_box(sr.mean_queueing_delay());
+    });
+
+    // Workload-mix pair: the same oversubscribed burst drawn from a
+    // bimodal short-chat / long-context distribution. Ragged slots put
+    // the per-slot prefill/KV arithmetic on its slow (non-uniform) path
+    // and make request completions stagger, so the continuous driver's
+    // slot recycling actually churns — the cost of the length-mix axis
+    // must stay in the same band as the fixed-length pair above.
+    let mixed_reqs = lime::workload::stream_requests_mix(
+        lime::workload::Pattern::Bursty,
+        0xBF,
+        2 * cluster.len(),
+        0.5,
+        &lime::workload::LengthDist::Bimodal {
+            short: (32, 8),
+            long: (128, 48),
+            long_frac: 0.5,
+        },
+    );
+    b.time("mixed_length_stream_fifo", 1, 10, || {
+        let sr = lime::serve::serve_interleaved(
+            &alloc,
+            &cluster,
+            &bw,
+            cluster.len(),
+            &off,
+            &lime::adapt::Script::none(),
+            &mixed_reqs,
+        );
+        std::hint::black_box(sr.mean_queueing_delay());
+    });
+    b.time("mixed_length_stream_cont16", 1, 10, || {
+        let sr = lime::serve::serve_interleaved_opts(
+            &alloc,
+            &cluster,
+            &bw,
+            cluster.len(),
+            &off,
+            &lime::adapt::Script::none(),
+            &mixed_reqs,
             &lime::serve::BatchingOpts::continuous(1)
                 .with_kv_pages(lime::serve::KvPageConfig::for_alloc(&alloc, 16, 4096)),
         );

@@ -184,10 +184,17 @@ impl KvTransferProtocol {
 /// KV its newly assigned layers need). Same per-token-per-layer unit as
 /// Eq. 8's denominator, so migrated volume and Eq. 8 shipments stay
 /// directly comparable in artifacts.
+///
+/// Known limit: the `kv_ctx` window cap applies here, but the executor's
+/// `kv_held` token bookkeeping grows uncapped — a sliding-window spec
+/// served long enough would migrate fewer bytes than `kv_held` implies.
+/// Latent today: window variants are unit-test constructors only (no
+/// matrix/fleet path builds one — see the ROADMAP follow-on about
+/// promoting KV-shape variants to a matrix axis).
 pub fn resident_kv_bytes(alloc: &Allocation, i: usize, tokens: usize) -> u64 {
     alloc.spec.kv_bytes_per_token_layer()
         * alloc.devices[i].total_layers as u64
-        * tokens as u64
+        * alloc.spec.kv_ctx(tokens) as u64
 }
 
 /// Eq. 8: KV tokens whose transfer hides the uncovered load of device `i`.

@@ -63,8 +63,10 @@ pub fn comp_time(
     }
     let flops = spec.layer_decode_flops(ctx) * layers as f64 * micro as f64;
     let weight_bytes = spec.layer_bytes() as f64 * layers as f64;
+    // Sliding-window specs stream at most `window` cached tokens per step.
+    let kv_ctx = spec.kv_ctx(ctx);
     let kv_bytes =
-        (spec.kv_bytes_per_token_layer() * ctx as u64 * layers as u64 * micro as u64) as f64;
+        (spec.kv_bytes_per_token_layer() * kv_ctx as u64 * layers as u64 * micro as u64) as f64;
     let t_flops = flops / dev.flops;
     let t_mem = (weight_bytes + kv_bytes) / dev.mem_bw;
     t_flops.max(t_mem)
@@ -260,7 +262,13 @@ pub fn mem_demand(
     } else {
         0
     };
-    let kv_tokens = (n_tokens as i64 - kv_transferred).max(0) as u64;
+    // A sliding-window spec only ever holds `window` tokens of KV; the
+    // window caps what is *resident*, so transferred tokens come out of
+    // the capped count (cap-then-subtract, not subtract-then-cap —
+    // otherwise shipping KV away would not relieve a windowed device
+    // until the raw context itself dropped below the window).
+    let kv_tokens =
+        (spec.kv_ctx(n_tokens) as i64 - kv_transferred).max(0) as u64;
     let kv = kv_tokens
         * spec.kv_bytes_per_token_layer()
         * a.total_layers as u64;
@@ -485,6 +493,49 @@ mod tests {
         // Negative transfer = receiving KV from peers -> more demand.
         let recv = mem_demand(&alloc, 0, 1000, -400);
         assert!(recv > without);
+    }
+
+    #[test]
+    fn kv_transfer_relieves_windowed_memory() {
+        let (spec, _) = toy();
+        let swa = spec.clone().with_sliding_window(256);
+        let alloc = alloc_with(&swa, &[(20, 8), (20, 14)], 4);
+        // Context far past the window: 256 tokens are resident, and
+        // shipping 100 away must shrink demand (cap-then-subtract; the
+        // subtract-then-cap ordering would leave demand flat until the
+        // raw context itself fell below the window).
+        let full = mem_demand(&alloc, 0, 10_000, 0);
+        let relieved = mem_demand(&alloc, 0, 10_000, 100);
+        assert!(relieved < full);
+        assert_eq!(relieved, mem_demand(&alloc, 0, 256, 100));
+        // Shipping at least the whole window leaves zero resident KV.
+        assert_eq!(mem_demand(&alloc, 0, 10_000, 400), mem_demand(&alloc, 0, 0, 0));
+    }
+
+    #[test]
+    fn sliding_window_bounds_kv_memory_and_compute() {
+        let (spec, cluster) = toy();
+        let swa = spec.clone().with_sliding_window(256);
+        let alloc_full = alloc_with(&spec, &[(20, 8), (20, 14)], 4);
+        let alloc_swa = alloc_with(&swa, &[(20, 8), (20, 14)], 4);
+        // Below the window the variant is the identity; above it KV memory
+        // and per-step streaming cost saturate at the window.
+        assert_eq!(
+            mem_demand(&alloc_swa, 0, 100, 0),
+            mem_demand(&alloc_full, 0, 100, 0)
+        );
+        assert_eq!(
+            mem_demand(&alloc_swa, 0, 10_000, 0),
+            mem_demand(&alloc_swa, 0, 256, 0)
+        );
+        assert!(mem_demand(&alloc_swa, 0, 10_000, 0) < mem_demand(&alloc_full, 0, 10_000, 0));
+        let c_full = comp_time(&spec, &cluster.devices[0], 10, 8192, 1);
+        let c_swa = comp_time(&swa, &cluster.devices[0], 10, 8192, 1);
+        assert!(c_swa < c_full);
+        assert_eq!(
+            c_swa.to_bits(),
+            comp_time(&swa, &cluster.devices[0], 10, 256, 1).to_bits()
+        );
     }
 
     #[test]

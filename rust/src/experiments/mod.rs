@@ -17,9 +17,11 @@
 //! continuous batching with paged-KV accounting, on stream cells only)
 //! and device-churn (mid-stream Down/Up events with online re-planning
 //! and KV migration) axes; the `--id sweep` experiment evaluates one
-//! matrix per cluster point and writes one `lime-sweep-v6` JSON each,
-//! with per-request queueing-delay/TTFT/TBT arrays on stream cells,
-//! paged-KV counters on continuous-batching cells and
+//! matrix per cluster point and writes one `lime-sweep-v7` JSON each,
+//! with per-request queueing-delay/TTFT/TBT/length arrays on stream
+//! cells, a workload-mix coordinate (fixed baseline vs bimodal
+//! short-chat / long-context lengths), paged-KV counters on
+//! continuous-batching cells and
 //! replans/KV-migration/recovery counters on churn cells. See
 //! `docs/ARCHITECTURE.md` for the module map and `docs/SWEEPS.md` for
 //! the artifact schemas.
@@ -28,8 +30,8 @@ pub mod scenario;
 
 pub use scenario::{
     validate_sweep, validate_sweep_v2, validate_sweep_v3, validate_sweep_v4, validate_sweep_v5,
-    validate_sweep_v6, ArrivalSpec, BatchingSpec, RequestLevel, ScenarioCell, ScenarioMatrix,
-    SegChoice, SweepSummary,
+    validate_sweep_v6, validate_sweep_v7, ArrivalSpec, BatchingSpec, RequestLevel, ScenarioCell,
+    ScenarioMatrix, SegChoice, SweepSummary,
 };
 
 use crate::adapt::{MemScenario, Script};
@@ -42,7 +44,7 @@ use crate::plan::{plan, plan_with_segs, PlanOptions};
 use crate::sim::{SsdModel, TraceMode};
 use crate::util::bytes::{gib, mbps};
 use crate::util::pool;
-use crate::workload::Pattern;
+use crate::workload::{LengthDist, Pattern};
 
 /// A single (method × bandwidth × pattern) measurement.
 #[derive(Debug, Clone, PartialEq)]
@@ -526,15 +528,36 @@ fn batching_axis() -> Vec<BatchingSpec> {
     vec![BatchingSpec::Fifo, BatchingSpec::Continuous { page_tokens: 16 }]
 }
 
+/// The workload-mix axis every sweep grid runs on its stream cells: the
+/// fixed pre-mix baseline (64-token prompts, `tokens` decode steps — the
+/// exact global-knob shape, property-pinned bit-identical in
+/// `rust/tests/workload_mix.rs`) plus a bimodal short-chat /
+/// long-context mixture. Decode lengths scale with the horizon so tiny
+/// CI sweeps stay fast, and the long mode's prompt only doubles the
+/// baseline context — plan feasibility is judged from the planning
+/// knobs, so the mix changes timings, never the OOM frontier.
+fn workload_axis(tokens: usize) -> Vec<LengthDist> {
+    vec![
+        LengthDist::fixed(64, tokens),
+        LengthDist::Bimodal {
+            short: (32, (tokens / 2).max(1)),
+            long: (128, 2 * tokens),
+            long_frac: 0.25,
+        },
+    ]
+}
+
 /// The scenario matrices behind `--id sweep`: the three extremely-low-
 /// memory settings (Figs 15–17, Llama3.3-70B) across the full bandwidth
 /// axis, plus cluster-size points — 2/3/4-device subsets of the
 /// heterogeneous E3 Jetson cluster (Qwen3-32B, the E2-scale model) — all
 /// with `#Seg`-override, pressure-script (correlated multi-device dips
 /// and joint bandwidth+memory scenarios included), arrival-process
-/// (single run vs continuous 2·|D|-request stream) and device-churn
+/// (single run vs continuous 2·|D|-request stream), device-churn
 /// (mid-stream Down/Up of the smallest device; the churn-capable
-/// EdgeShard baseline rides the axis too and degrades honestly) axes.
+/// EdgeShard baseline rides the axis too and degrades honestly) and
+/// workload-mix (fixed lengths vs a bimodal short-chat / long-context
+/// distribution, stream cells only) axes.
 fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMatrix<'_>> {
     let mut out = Vec::new();
     let spec70 = ModelSpec::llama33_70b();
@@ -560,7 +583,8 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
             .with_pressure(lowmem_pressure_axis(tokens))
             .with_arrivals(arrivals)
             .with_churn(churn)
-            .with_batching(batching_axis()),
+            .with_batching(batching_axis())
+            .with_workloads(workload_axis(tokens)),
         );
     }
 
@@ -602,7 +626,8 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
             ])
             .with_arrivals(arrivals)
             .with_churn(churn)
-            .with_batching(batching_axis()),
+            .with_batching(batching_axis())
+            .with_workloads(workload_axis(tokens)),
         );
     }
     out
@@ -614,10 +639,11 @@ fn sweep_matrices(methods: &[Box<dyn Method>], tokens: usize) -> Vec<ScenarioMat
 /// (correlated multi-device dips, joint bandwidth+memory scenarios),
 /// arrival-process (single run vs continuous queued stream),
 /// device-churn (mid-stream Down/Up with online re-planning, KV
-/// migration and recovery-latency counters) and batching-policy (FIFO
+/// migration and recovery-latency counters), batching-policy (FIFO
 /// vs step-level continuous with paged-KV accounting, stream cells
-/// only) axes — on the work-stealing pool, and emit **one
-/// machine-readable JSON per grid** (schema `lime-sweep-v6`, validated
+/// only) and workload-mix (fixed vs bimodal per-request lengths,
+/// stream cells only) axes — on the work-stealing pool, and emit **one
+/// machine-readable JSON per grid** (schema `lime-sweep-v7`, validated
 /// by `lime sweep-check`) into `out_dir`.
 /// Returns the paths written; any I/O
 /// failure is an error (the CLI exits non-zero), never a silently missing
@@ -770,7 +796,7 @@ mod tests {
     }
 
     #[test]
-    fn sweep_emits_one_valid_v6_json_per_grid() {
+    fn sweep_emits_one_valid_v7_json_per_grid() {
         use crate::util::json::Json;
         let dir = std::env::temp_dir().join(format!("lime_sweep_{}", std::process::id()));
         let out = dir.to_str().unwrap().to_string();
@@ -781,23 +807,25 @@ mod tests {
             let json = Json::parse(src.trim()).unwrap();
             let summary = validate_sweep(&json)
                 .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
-            assert_eq!(summary.schema, "lime-sweep-v6");
+            assert_eq!(summary.schema, "lime-sweep-v7");
             let lowmem = summary.grid.starts_with("lowmem");
             // Arrival cells per adaptive coordinate: 1 single + 1 stream
-            // × 2 batching policies (fifo, cont16) = 3.
-            // lowmem: 1 LIME × 5bw × 2pat × 3seg × 5scripts × 3arrival-cells
-            //           × 2churn                                  = 900
-            //         + EdgeShard (churn-capable) 10 × 2churn     =  20
-            //         + 5 rigid baselines × 10                    =  50.
-            // edge:   1 LIME × 2bw × 2pat × 3seg × 3scripts × 3arrival-cells
-            //           × 2churn                                  = 216
+            // × 2 batching policies (fifo, cont16) × 2 workloads
+            // (fixed, bimix25) = 5.
+            // lowmem: 1 LIME × 5bw × 2pat × 3seg × 5scripts × 5arrival-cells
+            //           × 2churn                                  = 1500
+            //         + EdgeShard (churn-capable) 10 × 2churn     =   20
+            //         + 5 rigid baselines × 10                    =   50.
+            // edge:   1 LIME × 2bw × 2pat × 3seg × 3scripts × 5arrival-cells
+            //           × 2churn                                  = 360
             //         + EdgeShard 4 × 2churn                      =   8
             //         + 5 rigid baselines × 4                     =  20.
-            assert_eq!(summary.cells, if lowmem { 970 } else { 244 }, "{}", summary.grid);
+            assert_eq!(summary.cells, if lowmem { 1570 } else { 388 }, "{}", summary.grid);
             assert_eq!(summary.completed + summary.oom, summary.cells);
             let mut stream_with_requests = 0usize;
             let mut churn_completed = 0usize;
             let mut continuous_with_pages = 0usize;
+            let mut mixed_ragged = 0usize;
             for cell in json.get("cells").unwrap().as_arr().unwrap() {
                 let key = cell.get("method").unwrap().as_str().unwrap();
                 let oom = cell.get("oom").unwrap().as_bool().unwrap();
@@ -849,6 +877,33 @@ mod tests {
                 } else if !oom {
                     assert_eq!(pages, Some(0), "{}: {cell}", path.display());
                 }
+                // Mixed-workload cells draw per-request lengths from the
+                // bimodal distribution; the arrays stay on-mode, and the
+                // sporadic streams genuinely mix both modes. (Tiny bursty
+                // streams may legitimately draw a single mode — e.g. the
+                // 4-request edge2 burst — so raggedness is asserted per
+                // grid, not per cell.)
+                let workload = cell.get("workload").unwrap().as_str().unwrap();
+                if workload != "fixed" && !oom {
+                    let pl: Vec<u64> = cell
+                        .get("requests")
+                        .unwrap()
+                        .get("prompt_len")
+                        .unwrap()
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|p| p.as_u64().unwrap())
+                        .collect();
+                    assert!(
+                        pl.iter().all(|&p| p == 32 || p == 128),
+                        "{}: off-mode prompt length in {cell}",
+                        path.display()
+                    );
+                    if pl.contains(&32) && pl.contains(&128) {
+                        mixed_ragged += 1;
+                    }
+                }
             }
             assert!(
                 stream_with_requests > 0,
@@ -863,6 +918,11 @@ mod tests {
             assert!(
                 continuous_with_pages > 0,
                 "{}: no completed continuous-batching cells",
+                path.display()
+            );
+            assert!(
+                mixed_ragged > 0,
+                "{}: no mixed-length stream cells",
                 path.display()
             );
         }
@@ -946,6 +1006,30 @@ mod tests {
         assert_eq!(cont16.kv_pages_spilled, Some(0), "sweep budget is no-spill");
         let frag = cont16.fragmentation.unwrap();
         assert!((0.0..=1.0).contains(&frag), "fragmentation {frag} out of [0,1]");
+        // Workload axis: the fixed pre-mix baseline plus one bimodal
+        // short-chat / long-context mix, and mixed cells really carry
+        // ragged per-request length arrays (10 draws at 25% long mix
+        // both modes under either arrival pattern).
+        assert_eq!(lowmem1.workloads.len(), 2);
+        assert!(lowmem1.workloads[0].is_fixed());
+        assert_eq!(lowmem1.workloads[1].label(), "bimix25");
+        for pattern in [Pattern::Sporadic, Pattern::Bursty] {
+            let mixed = cells
+                .iter()
+                .find(|c| {
+                    c.workload == "bimix25" && c.pattern == pattern && c.requests.is_some()
+                })
+                .unwrap_or_else(|| panic!("no completed {pattern:?} bimix25 cell"));
+            let req = mixed.requests.as_ref().unwrap();
+            assert_eq!(req.prompt_len.len(), 2 * lowmem1.cluster.len());
+            assert!(req.prompt_len.iter().all(|&p| p == 32 || p == 128));
+            assert!(
+                req.prompt_len.contains(&32) && req.prompt_len.contains(&128),
+                "bimodal stream must mix both modes: {:?}",
+                req.prompt_len
+            );
+            assert!(req.steps.iter().all(|&s| s == 1 || s == 6));
+        }
         // The headline acceptance cell: under BURSTY arrivals the stream
         // count 2·|D| exceeds the admission cap |D|, so FIFO queues a full
         // first epoch while continuous admits between decode steps — mean

@@ -43,6 +43,17 @@
 //!   `recovery_steps`); the churn-capable EdgeShard baseline expands
 //!   along this axis alone and degrades without re-planning — the
 //!   recovery-latency comparison the churn artifacts exist for.
+//! * **workload mix** — [`LengthDist`]: the per-request length
+//!   distribution stream cells draw their `(prompt_len, steps)` pairs
+//!   from. The baseline point is the degenerate
+//!   [`LengthDist::Fixed`] shape (every request prefills
+//!   `prompt_tokens` and decodes the matrix's `tokens`) — bit-identical
+//!   to the pre-mix streams; further points (bimodal short-chat /
+//!   long-context mixes, uniform or truncated-geometric lengths) make
+//!   request raggedness a sweepable quantity. Like batching, the axis
+//!   expands stream cells of adaptive methods only, and cells record
+//!   each request's own lengths in the `requests.prompt_len`/`steps`
+//!   arrays.
 //!
 //! The override axes only have meaning for methods that plan offline and
 //! adapt online (the LIME family — [`Method::adaptive_exec`] returns
@@ -54,14 +65,14 @@
 //! work-stealing pool with results written by index —
 //! [`ScenarioMatrix::eval`] is bit-identical to
 //! [`ScenarioMatrix::eval_sequential`] at any worker count (pinned in
-//! `rust/tests/pool.rs`). Artifacts serialize as schema `lime-sweep-v6`,
-//! a strict superset of `lime-sweep-v5` (itself a strict superset of
-//! v4/v3/v2): every v5 key keeps its meaning, plus the `axes.batching`
-//! metadata, a per-cell `batching` coordinate, and the per-cell
-//! `kv_pages_allocated`/`kv_pages_spilled`/`fragmentation` paged-KV
-//! counters; [`validate_sweep`] accepts v2 through v6 and is the machine
-//! check behind `lime sweep-check` and the CI artifact gate. See
-//! `docs/SWEEPS.md` for the full schema reference.
+//! `rust/tests/pool.rs`). Artifacts serialize as schema `lime-sweep-v7`,
+//! a strict superset of `lime-sweep-v6` (itself a strict superset of
+//! v5/v4/v3/v2): every v6 key keeps its meaning, plus the
+//! `axes.workloads` metadata, a per-cell `workload` coordinate, and the
+//! per-request `prompt_len`/`steps` arrays inside each stream cell's
+//! `requests` object; [`validate_sweep`] accepts v2 through v7 and is
+//! the machine check behind `lime sweep-check` and the CI artifact
+//! gate. See `docs/SWEEPS.md` for the full schema reference.
 
 use crate::adapt::{MemScenario, Script};
 use crate::baselines::{by_name, plan_opts, Method};
@@ -75,7 +86,7 @@ use crate::serve::simqueue::{serve_interleaved_opts, BatchingOpts};
 use crate::sim::TraceMode;
 use crate::util::json::{obj, Json};
 use crate::util::pool;
-use crate::workload::{stream_requests, Pattern};
+use crate::workload::{stream_requests_mix, LengthDist, Pattern};
 
 /// One value of the `#Seg`-override axis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -188,15 +199,69 @@ impl BatchingSpec {
     }
 }
 
+/// Axis metadata of one workload point (`axes.workloads[]`): the label,
+/// the distribution kind, and its parameters.
+fn workload_json(d: &LengthDist) -> Json {
+    match *d {
+        LengthDist::Fixed {
+            prompt_tokens,
+            steps,
+        } => obj(&[
+            ("label", d.label().into()),
+            ("kind", "fixed".into()),
+            ("prompt_tokens", prompt_tokens.into()),
+            ("steps", steps.into()),
+        ]),
+        LengthDist::Uniform { prompt, steps } => obj(&[
+            ("label", d.label().into()),
+            ("kind", "uniform".into()),
+            ("prompt_min", prompt.0.into()),
+            ("prompt_max", prompt.1.into()),
+            ("steps_min", steps.0.into()),
+            ("steps_max", steps.1.into()),
+        ]),
+        LengthDist::Bimodal {
+            short,
+            long,
+            long_frac,
+        } => obj(&[
+            ("label", d.label().into()),
+            ("kind", "bimodal".into()),
+            ("short_prompt", short.0.into()),
+            ("short_steps", short.1.into()),
+            ("long_prompt", long.0.into()),
+            ("long_steps", long.1.into()),
+            ("long_frac", Json::Num(long_frac)),
+        ]),
+        LengthDist::Geometric {
+            prompt_tokens,
+            mean_steps,
+            max_steps,
+        } => obj(&[
+            ("label", d.label().into()),
+            ("kind", "geometric".into()),
+            ("prompt_tokens", prompt_tokens.into()),
+            ("mean_steps", mean_steps.into()),
+            ("max_steps", max_steps.into()),
+        ]),
+    }
+}
+
 /// Request-level metric arrays of one stream cell (one entry per
-/// request; seconds). Entries are in admission order on FIFO cells and
-/// in completion order on continuous-batching cells — see
+/// request; seconds for the latency arrays, token counts for the length
+/// arrays). Entries are in admission order on FIFO cells and in
+/// completion order on continuous-batching cells — see
 /// `docs/SERVING.md`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RequestLevel {
     pub queueing_delay_s: Vec<f64>,
     pub ttft_s: Vec<f64>,
     pub tbt_s: Vec<f64>,
+    /// Each request's own prompt length (v7 workload axis) — constant on
+    /// fixed-workload cells, ragged on mixed ones.
+    pub prompt_len: Vec<usize>,
+    /// Each request's own decode length.
+    pub steps: Vec<usize>,
 }
 
 /// One evaluated matrix cell. Superset of the legacy grid
@@ -222,6 +287,10 @@ pub struct ScenarioCell {
     /// the baseline point; continuous labels appear only on stream cells
     /// of adaptive methods).
     pub batching: String,
+    /// Label of the [`LengthDist`] workload this cell's stream drew its
+    /// request lengths from (`"fixed"` for the baseline point; mixed
+    /// labels appear only on stream cells of adaptive methods).
+    pub workload: String,
     /// `#Seg` of the allocation actually executed (None for baseline
     /// methods and OOM cells).
     pub planned_seg: Option<usize>,
@@ -308,6 +377,10 @@ pub struct ScenarioMatrix<'a> {
     /// The batching-policy axis: FIFO vs step-level continuous admission.
     /// Expands stream-arrival cells of adaptive methods only.
     pub batching: Vec<BatchingSpec>,
+    /// The workload-mix axis: the per-request length distribution stream
+    /// cells draw from. Expands stream-arrival cells of adaptive methods
+    /// only; `workloads[0]` must be the fixed baseline shape.
+    pub workloads: Vec<LengthDist>,
     pub tokens: usize,
 }
 
@@ -328,6 +401,7 @@ struct PointRef {
     mj: usize,
     ai: usize,
     ki: usize,
+    wi: usize,
     ci: usize,
 }
 
@@ -355,6 +429,13 @@ impl<'a> ScenarioMatrix<'a> {
             arrivals: vec![ArrivalSpec::Single],
             churn: vec![Script::none()],
             batching: vec![BatchingSpec::Fifo],
+            // The fixed baseline shape: every stream request prefills the
+            // executor's default prompt length and decodes `tokens` —
+            // exactly the pre-v7 stream generator.
+            workloads: vec![LengthDist::fixed(
+                ExecOptions::default().prompt_tokens,
+                tokens,
+            )],
             tokens,
         }
     }
@@ -407,6 +488,16 @@ impl<'a> ScenarioMatrix<'a> {
     /// stream arrival evaluates the same cells regardless of this axis.
     pub fn with_batching(mut self, batching: Vec<BatchingSpec>) -> Self {
         self.batching = batching;
+        self.assert_valid();
+        self
+    }
+
+    /// Replace the workload-mix axis (must start with a
+    /// [`LengthDist::Fixed`] entry, the baseline point every pre-v7
+    /// artifact implicitly ran). Like batching, the axis expands
+    /// stream-arrival cells of adaptive methods only.
+    pub fn with_workloads(mut self, workloads: Vec<LengthDist>) -> Self {
+        self.workloads = workloads;
         self.assert_valid();
         self
     }
@@ -495,6 +586,39 @@ impl<'a> ScenarioMatrix<'a> {
             }
         }
         assert!(
+            self.workloads.first().is_some_and(LengthDist::is_fixed),
+            "workloads[0] must be a fixed length distribution (the baseline point)"
+        );
+        let mut workload_labels = std::collections::BTreeSet::new();
+        for w in &self.workloads {
+            assert!(
+                workload_labels.insert(w.label()),
+                "duplicate workload '{}'",
+                w.label()
+            );
+            if let LengthDist::Uniform { prompt, steps } = w {
+                assert!(
+                    prompt.0 <= prompt.1 && steps.0 <= steps.1,
+                    "workload '{}' has an unordered range",
+                    w.label()
+                );
+            }
+            if let LengthDist::Bimodal { long_frac, .. } = w {
+                assert!(
+                    long_frac.is_finite() && (0.0..=1.0).contains(long_frac),
+                    "workload '{}' needs long_frac in [0, 1]",
+                    w.label()
+                );
+            }
+            if let LengthDist::Geometric { max_steps, .. } = w {
+                assert!(
+                    *max_steps >= 1,
+                    "workload '{}' needs max_steps >= 1",
+                    w.label()
+                );
+            }
+        }
+        assert!(
             self.churn.first().is_some_and(|s| s.churn.is_empty()),
             "churn[0] must have no churn events (the baseline point)"
         );
@@ -538,12 +662,13 @@ impl<'a> ScenarioMatrix<'a> {
 
     /// Cell coordinates in deterministic (index) order: methods outermost,
     /// then bandwidths, patterns, and — for adaptive methods — the seg,
-    /// pressure, arrival, batching and churn axes. The batching axis only
-    /// expands on stream-arrival points (single runs have no admission
-    /// loop to re-batch); churn-capable baselines (EdgeShard) expand
-    /// along the churn axis only; other baselines stay on the single
-    /// baseline point. With singleton override axes this is exactly the
-    /// legacy grid's job order.
+    /// pressure, arrival, batching, workload and churn axes. The batching
+    /// and workload axes only expand on stream-arrival points (single
+    /// runs have no admission loop to re-batch and no stream to draw
+    /// lengths for); churn-capable baselines (EdgeShard) expand along the
+    /// churn axis only; other baselines stay on the single baseline
+    /// point. With singleton override axes this is exactly the legacy
+    /// grid's job order.
     fn points(&self) -> Vec<PointRef> {
         let mut pts = Vec::new();
         for mi in 0..self.methods.len() {
@@ -558,9 +683,22 @@ impl<'a> ScenarioMatrix<'a> {
                                     let stream =
                                         matches!(self.arrivals[ai], ArrivalSpec::Stream { .. });
                                     let batch_pts = if stream { self.batching.len() } else { 1 };
+                                    let wl_pts = if stream { self.workloads.len() } else { 1 };
                                     for ki in 0..batch_pts {
-                                        for ci in 0..self.churn.len() {
-                                            pts.push(PointRef { mi, bi, pi, si, mj, ai, ki, ci });
+                                        for wi in 0..wl_pts {
+                                            for ci in 0..self.churn.len() {
+                                                pts.push(PointRef {
+                                                    mi,
+                                                    bi,
+                                                    pi,
+                                                    si,
+                                                    mj,
+                                                    ai,
+                                                    ki,
+                                                    wi,
+                                                    ci,
+                                                });
+                                            }
                                         }
                                     }
                                 }
@@ -577,6 +715,7 @@ impl<'a> ScenarioMatrix<'a> {
                                 mj: 0,
                                 ai: 0,
                                 ki: 0,
+                                wi: 0,
                                 ci,
                             });
                         }
@@ -590,13 +729,14 @@ impl<'a> ScenarioMatrix<'a> {
     /// Total cells this matrix evaluates.
     pub fn cell_count(&self) -> usize {
         let base = self.bandwidths_mbps.len() * self.patterns.len();
-        // The batching axis multiplies stream-arrival points only.
+        // The batching and workload axes multiply stream-arrival points
+        // only.
         let arrival_cells: usize = self
             .arrivals
             .iter()
             .map(|a| match a {
                 ArrivalSpec::Single => 1,
-                ArrivalSpec::Stream { .. } => self.batching.len(),
+                ArrivalSpec::Stream { .. } => self.batching.len() * self.workloads.len(),
             })
             .sum();
         self.methods
@@ -693,6 +833,7 @@ impl<'a> ScenarioMatrix<'a> {
                 arrival: self.arrivals[p.ai].label(),
                 churn: self.churn[p.ci].label.clone(),
                 batching: self.batching[p.ki].label(),
+                workload: self.workloads[p.wi].label(),
                 planned_seg: None,
                 ms_per_token: None,
                 online_plans_fired: None,
@@ -784,13 +925,13 @@ impl<'a> ScenarioMatrix<'a> {
                                 cell.fragmentation = Some(r.kv_fragmentation);
                             }
                             ArrivalSpec::Stream { count, lambda } => {
-                                let reqs = stream_requests(
+                                let workload = &self.workloads[p.wi];
+                                let reqs = stream_requests_mix(
                                     pattern,
                                     STREAM_SEED,
                                     count,
                                     lambda,
-                                    exec.prompt_tokens,
-                                    self.tokens,
+                                    workload,
                                 );
                                 let max_batch = pattern.micro_batches(&self.cluster);
                                 let batching = match self.batching[p.ki] {
@@ -806,9 +947,14 @@ impl<'a> ScenarioMatrix<'a> {
                                         // whole pages — the last page of a
                                         // context is partially filled, so a
                                         // token-count budget alone would
-                                        // force spills at peak width.
-                                        let per_ctx_pages = (exec.prompt_tokens + self.tokens)
-                                            .div_ceil(page_tokens);
+                                        // force spills at peak width. Mixed
+                                        // workloads size for the longest
+                                        // context the distribution can emit
+                                        // (the fixed baseline reduces to
+                                        // the old prompt+tokens formula).
+                                        let per_ctx_pages = (workload.max_prompt_tokens()
+                                            + workload.max_steps())
+                                        .div_ceil(page_tokens);
                                         let budget = max_batch * per_ctx_pages * page_tokens;
                                         BatchingOpts::continuous(1).with_kv_pages(
                                             KvPageConfig::for_alloc(alloc, page_tokens, budget),
@@ -837,6 +983,14 @@ impl<'a> ScenarioMatrix<'a> {
                                 cell.kv_pages_allocated = Some(sr.kv_pages_allocated);
                                 cell.kv_pages_spilled = Some(sr.kv_pages_spilled);
                                 cell.fragmentation = Some(sr.kv_fragmentation);
+                                // Length arrays must align entry-for-entry
+                                // with the metric arrays, which follow the
+                                // driver's emission order (admission order
+                                // on FIFO, completion order on continuous)
+                                // — so look each metric row's request up
+                                // by id rather than assuming arrival order.
+                                let by_id: std::collections::BTreeMap<u64, &crate::workload::Request> =
+                                    reqs.iter().map(|r| (r.id, r)).collect();
                                 cell.requests = Some(RequestLevel {
                                     queueing_delay_s: sr
                                         .requests
@@ -845,6 +999,16 @@ impl<'a> ScenarioMatrix<'a> {
                                         .collect(),
                                     ttft_s: sr.requests.iter().map(|r| r.ttft).collect(),
                                     tbt_s: sr.requests.iter().map(|r| r.tbt).collect(),
+                                    prompt_len: sr
+                                        .requests
+                                        .iter()
+                                        .map(|m| by_id[&m.id].prompt.len())
+                                        .collect(),
+                                    steps: sr
+                                        .requests
+                                        .iter()
+                                        .map(|m| by_id[&m.id].steps)
+                                        .collect(),
                                 });
                             }
                         }
@@ -860,14 +1024,13 @@ impl<'a> ScenarioMatrix<'a> {
         }
     }
 
-    /// Serialize evaluated cells as a `lime-sweep-v6` artifact — a strict
-    /// superset of `lime-sweep-v5` (itself a strict superset of v4/v3/v2):
-    /// every v5 key is present with its meaning, plus the `axes.batching`
-    /// metadata, the per-cell `batching` coordinate, and the per-cell
-    /// `kv_pages_allocated`/`kv_pages_spilled`/`fragmentation` paged-KV
-    /// counters (null iff OOM; exactly zero on every cell off the
-    /// continuous-batching points, where KV is modelled as a contiguous
-    /// preallocation).
+    /// Serialize evaluated cells as a `lime-sweep-v7` artifact — a strict
+    /// superset of `lime-sweep-v6` (itself a strict superset of
+    /// v5/v4/v3/v2): every v6 key is present with its meaning, plus the
+    /// `axes.workloads` metadata, the per-cell `workload` coordinate, and
+    /// the per-request `prompt_len`/`steps` arrays inside each stream
+    /// cell's `requests` object (constant on fixed-workload cells, ragged
+    /// on mixed ones).
     pub fn to_json(&self, cells: &[ScenarioCell]) -> Json {
         self.assert_valid();
         let cell_rows: Vec<Json> = cells
@@ -877,10 +1040,14 @@ impl<'a> ScenarioMatrix<'a> {
                     None => Json::Null,
                     Some(r) => {
                         let arr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+                        let ints =
+                            |v: &[usize]| Json::Arr(v.iter().map(|&x| x.into()).collect());
                         obj(&[
                             ("queueing_delay_s", arr(&r.queueing_delay_s)),
                             ("ttft_s", arr(&r.ttft_s)),
                             ("tbt_s", arr(&r.tbt_s)),
+                            ("prompt_len", ints(&r.prompt_len)),
+                            ("steps", ints(&r.steps)),
                         ])
                     }
                 };
@@ -902,6 +1069,7 @@ impl<'a> ScenarioMatrix<'a> {
                     ("arrival", c.arrival.as_str().into()),
                     ("churn", c.churn.as_str().into()),
                     ("batching", c.batching.as_str().into()),
+                    ("workload", c.workload.as_str().into()),
                     (
                         "planned_seg",
                         c.planned_seg.map_or(Json::Null, Into::into),
@@ -1045,6 +1213,10 @@ impl<'a> ScenarioMatrix<'a> {
                 Json::Arr(self.batching.iter().map(BatchingSpec::json).collect()),
             ),
             (
+                "workloads",
+                Json::Arr(self.workloads.iter().map(workload_json).collect()),
+            ),
+            (
                 "churn_scripts",
                 Json::Arr(
                     self.churn
@@ -1071,7 +1243,7 @@ impl<'a> ScenarioMatrix<'a> {
             ),
         ]);
         obj(&[
-            ("schema", "lime-sweep-v6".into()),
+            ("schema", "lime-sweep-v7".into()),
             ("grid", self.grid.as_str().into()),
             ("model", self.spec.name.as_str().into()),
             ("tokens", self.tokens.into()),
@@ -1091,7 +1263,7 @@ pub struct SweepSummary {
     pub grid: String,
     pub model: String,
     /// The schema version the artifact validated against
-    /// ("lime-sweep-v2" .. "lime-sweep-v6").
+    /// ("lime-sweep-v2" .. "lime-sweep-v7").
     pub schema: String,
     pub cells: usize,
     pub completed: usize,
@@ -1113,6 +1285,7 @@ enum SweepSchema {
     V4,
     V5,
     V6,
+    V7,
 }
 
 impl SweepSchema {
@@ -1123,12 +1296,13 @@ impl SweepSchema {
             SweepSchema::V4 => "lime-sweep-v4",
             SweepSchema::V5 => "lime-sweep-v5",
             SweepSchema::V6 => "lime-sweep-v6",
+            SweepSchema::V7 => "lime-sweep-v7",
         }
     }
 }
 
 /// Validate one artifact against whichever supported schema it declares
-/// (`lime-sweep-v2` through `lime-sweep-v6`) — the check behind
+/// (`lime-sweep-v2` through `lime-sweep-v7`) — the check behind
 /// `lime sweep-check` and the CI artifact gate.
 pub fn validate_sweep(json: &Json) -> Result<SweepSummary, String> {
     match json.get("schema").and_then(Json::as_str) {
@@ -1137,8 +1311,9 @@ pub fn validate_sweep(json: &Json) -> Result<SweepSummary, String> {
         Some("lime-sweep-v4") => validate_sweep_impl(json, SweepSchema::V4),
         Some("lime-sweep-v5") => validate_sweep_impl(json, SweepSchema::V5),
         Some("lime-sweep-v6") => validate_sweep_impl(json, SweepSchema::V6),
+        Some("lime-sweep-v7") => validate_sweep_impl(json, SweepSchema::V7),
         other => Err(format!(
-            "expected schema lime-sweep-v2 .. lime-sweep-v6, got {other:?}"
+            "expected schema lime-sweep-v2 .. lime-sweep-v7, got {other:?}"
         )),
     }
 }
@@ -1184,6 +1359,14 @@ pub fn validate_sweep_v6(json: &Json) -> Result<SweepSummary, String> {
     }
 }
 
+/// Validate one artifact strictly against the `lime-sweep-v7` schema.
+pub fn validate_sweep_v7(json: &Json) -> Result<SweepSummary, String> {
+    match json.get("schema").and_then(Json::as_str) {
+        Some("lime-sweep-v7") => validate_sweep_impl(json, SweepSchema::V7),
+        other => Err(format!("expected schema lime-sweep-v7, got {other:?}")),
+    }
+}
+
 /// The shared validation core: structural keys, axis metadata, per-cell
 /// coordinate membership, `Method::key` round-trips, OOM/metric
 /// consistency, cell uniqueness, and the exact per-method cell counts the
@@ -1206,7 +1389,14 @@ pub fn validate_sweep_v6(json: &Json) -> Result<SweepSummary, String> {
 /// adaptive stream cells), and the per-cell
 /// `kv_pages_allocated`/`kv_pages_spilled`/`fragmentation` paged-KV
 /// counters (null iff OOM; `fragmentation` in `[0, 1]`; all exactly zero
-/// on FIFO cells, which model KV as a contiguous preallocation).
+/// on FIFO cells, which model KV as a contiguous preallocation). V7
+/// additionally requires `axes.workloads` (first entry a `fixed`
+/// distribution — the pre-mix baseline shape; entries with a unique
+/// label, a known kind and that kind's numeric parameters), the per-cell
+/// `workload` coordinate (pinned to the baseline label off adaptive
+/// stream cells), and the per-request `prompt_len`/`steps` arrays inside
+/// each completed stream cell's `requests` object (length `count`,
+/// non-negative integers).
 fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary, String> {
     let grid = field(json, "grid", "artifact")?
         .as_str()
@@ -1507,6 +1697,63 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
         }
     }
 
+    // V7: the workload-mix axis — first entry the fixed baseline shape,
+    // each entry carrying its distribution kind and parameters.
+    let mut workload_labels: Vec<String> = Vec::new();
+    if schema >= SweepSchema::V7 {
+        let workloads = field(axes, "workloads", "axes")?
+            .as_arr()
+            .ok_or("axes.workloads must be an array")?;
+        if workloads.is_empty() {
+            return Err("axes.workloads must be non-empty".into());
+        }
+        for (i, w) in workloads.iter().enumerate() {
+            let ctx = format!("axes.workloads[{i}]");
+            let label = field(w, "label", &ctx)?
+                .as_str()
+                .ok_or_else(|| format!("{ctx}.label must be a string"))?;
+            let kind = field(w, "kind", &ctx)?
+                .as_str()
+                .ok_or_else(|| format!("{ctx}.kind must be a string"))?;
+            let need_ints = |keys: &[&str]| -> Result<(), String> {
+                for k in keys {
+                    if w.get(k).and_then(Json::as_usize).is_none() {
+                        return Err(format!("{ctx}.{k} must be a non-negative integer"));
+                    }
+                }
+                Ok(())
+            };
+            match kind {
+                "fixed" => need_ints(&["prompt_tokens", "steps"])?,
+                "uniform" => {
+                    need_ints(&["prompt_min", "prompt_max", "steps_min", "steps_max"])?
+                }
+                "bimodal" => {
+                    need_ints(&["short_prompt", "short_steps", "long_prompt", "long_steps"])?;
+                    match w.get("long_frac").and_then(Json::as_f64) {
+                        Some(f) if f.is_finite() && (0.0..=1.0).contains(&f) => {}
+                        _ => {
+                            return Err(format!("{ctx}.long_frac must be a number in [0, 1]"))
+                        }
+                    }
+                }
+                "geometric" => need_ints(&["prompt_tokens", "mean_steps", "max_steps"])?,
+                other => {
+                    return Err(format!(
+                        "{ctx}.kind must be fixed|uniform|bimodal|geometric, got '{other}'"
+                    ))
+                }
+            }
+            if i == 0 && kind != "fixed" {
+                return Err("axes.workloads[0] must be the fixed baseline shape".into());
+            }
+            if workload_labels.iter().any(|l| l == label) {
+                return Err(format!("{ctx}: duplicate workload label '{label}'"));
+            }
+            workload_labels.push(label.to_string());
+        }
+    }
+
     let cells = field(json, "cells", "artifact")?
         .as_arr()
         .ok_or("'cells' must be an array")?;
@@ -1616,6 +1863,26 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
         } else {
             "fifo".to_string()
         };
+        // V7: the workload coordinate. Mixed length distributions only
+        // have meaning on the stream cells of adaptive methods —
+        // everything else is pinned to the fixed baseline label.
+        let workload = if schema >= SweepSchema::V7 {
+            let w = field(cell, "workload", &ctx)?
+                .as_str()
+                .ok_or_else(|| format!("{ctx}.workload must be a string"))?;
+            if !workload_labels.iter().any(|l| l == w) {
+                return Err(format!("{ctx}: workload '{w}' not on the axis"));
+            }
+            let is_stream = arrival_counts.contains_key(&arrival);
+            if (!adaptive[key] || !is_stream) && w != workload_labels[0] {
+                return Err(format!(
+                    "{ctx}: workload '{w}' off the fixed baseline on a non-stream cell"
+                ));
+            }
+            w.to_string()
+        } else {
+            "fixed".to_string()
+        };
         let is_oom = field(cell, "oom", &ctx)?
             .as_bool()
             .ok_or_else(|| format!("{ctx}.oom must be a bool"))?;
@@ -1640,7 +1907,7 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
                 "emergency_steps",
                 "bw_stalls",
             ],
-            SweepSchema::V5 => &[
+            SweepSchema::V5 | SweepSchema::V6 | SweepSchema::V7 => &[
                 "online_plans_fired",
                 "kv_tokens_transferred",
                 "emergency_steps",
@@ -1746,6 +2013,28 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
                             ));
                         }
                     }
+                    // V7: each request's own lengths ride along with the
+                    // metric arrays, entry-for-entry.
+                    if schema >= SweepSchema::V7 {
+                        for rk in ["prompt_len", "steps"] {
+                            let arr = requests
+                                .get(rk)
+                                .and_then(Json::as_arr)
+                                .ok_or_else(|| format!("{ctx}.requests.{rk} must be an array"))?;
+                            if arr.len() != count {
+                                return Err(format!(
+                                    "{ctx}.requests.{rk} has {} entries, expected {count} \
+                                     (the '{arrival}' stream size)",
+                                    arr.len()
+                                ));
+                            }
+                            if arr.iter().any(|v| v.as_usize().is_none()) {
+                                return Err(format!(
+                                    "{ctx}.requests.{rk} entries must be non-negative integers"
+                                ));
+                            }
+                        }
+                    }
                 }
                 _ => {
                     if requests != &Json::Null {
@@ -1756,7 +2045,8 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
                 }
             }
         }
-        let coords = format!("{key}|{bw}|{pattern}|{seg_label}|{mem}|{arrival}|{churn}|{batching}");
+        let coords =
+            format!("{key}|{bw}|{pattern}|{seg_label}|{mem}|{arrival}|{churn}|{batching}|{workload}");
         if !seen.insert(coords) {
             return Err(format!("{ctx}: duplicate cell coordinates"));
         }
@@ -1772,10 +2062,16 @@ fn validate_sweep_impl(json: &Json, schema: SweepSchema) -> Result<SweepSummary,
     }
     let base = bandwidths.len() * patterns.len();
     // V6: the batching axis multiplies the stream arrival points only
-    // (single-run cells have no admission loop to re-batch).
+    // (single-run cells have no admission loop to re-batch); V7 adds the
+    // workload-mix factor on the same points.
     let arrival_cells = if schema >= SweepSchema::V6 {
         let streams = arrival_counts.len();
-        (arrival_labels.len() - streams) + streams * batching_labels.len()
+        let workload_factor = if schema >= SweepSchema::V7 {
+            workload_labels.len()
+        } else {
+            1
+        };
+        (arrival_labels.len() - streams) + streams * batching_labels.len() * workload_factor
     } else if schema >= SweepSchema::V4 {
         arrival_labels.len()
     } else {
@@ -1894,7 +2190,7 @@ mod tests {
     }
 
     #[test]
-    fn eval_emits_valid_v6_artifact() {
+    fn eval_emits_valid_v7_artifact() {
         let methods = all();
         let m = tiny_matrix(&methods);
         let cells = m.eval();
@@ -1904,12 +2200,13 @@ mod tests {
         let parsed = Json::parse(&json.to_string()).unwrap();
         let summary = validate_sweep(&parsed).expect("artifact validates");
         assert_eq!(summary.grid, "e1-test");
-        assert_eq!(summary.schema, "lime-sweep-v6");
+        assert_eq!(summary.schema, "lime-sweep-v7");
         assert_eq!(summary.cells, m.cell_count());
         assert_eq!(summary.completed + summary.oom, summary.cells);
-        // The dispatcher and the strict v6 validator agree; the strict
-        // v2..v5 validators reject a v6 artifact by its schema tag.
-        assert!(validate_sweep_v6(&parsed).is_ok());
+        // The dispatcher and the strict v7 validator agree; the strict
+        // v2..v6 validators reject a v7 artifact by its schema tag.
+        assert!(validate_sweep_v7(&parsed).is_ok());
+        assert!(validate_sweep_v6(&parsed).is_err());
         assert!(validate_sweep_v5(&parsed).is_err());
         assert!(validate_sweep_v4(&parsed).is_err());
         assert!(validate_sweep_v3(&parsed).is_err());
@@ -1923,6 +2220,9 @@ mod tests {
             // Singleton batching axis: every cell sits on the FIFO point
             // with zeroed paged-KV counters.
             assert_eq!(c.batching, "fifo");
+            // Singleton workload axis: every cell sits on the fixed
+            // baseline shape.
+            assert_eq!(c.workload, "fixed");
             assert_eq!(c.kv_pages_allocated, Some(0), "{c:?}");
             assert_eq!(c.kv_pages_spilled, Some(0), "{c:?}");
             assert_eq!(c.fragmentation, Some(0.0), "{c:?}");
@@ -1937,6 +2237,10 @@ mod tests {
                 assert_eq!(r.ttft_s.len(), 3);
                 assert_eq!(r.tbt_s.len(), 3);
                 assert!(r.ttft_s.iter().all(|&t| t > 0.0), "{c:?}");
+                // Fixed-workload lengths: every request carries the
+                // executor's default prompt and the matrix's tokens.
+                assert_eq!(r.prompt_len, vec![64; 3], "{c:?}");
+                assert_eq!(r.steps, vec![3; 3], "{c:?}");
             }
         }
         // Both arrival coordinates actually evaluated for LIME.
@@ -1965,10 +2269,11 @@ mod tests {
     }
 
     #[test]
-    fn v6_artifact_downgrades_to_v3_by_relabel() {
-        // Strict-superset chain: with singleton arrival, churn and
-        // batching axes, relabel a v6 artifact as v3 and it validates as
-        // v3 (the extra arrival/churn/batching keys are ignored).
+    fn v7_artifact_downgrades_to_v3_by_relabel() {
+        // Strict-superset chain: with singleton arrival, churn, batching
+        // and workload axes, relabel a v7 artifact as v3 and it validates
+        // as v3 (the extra arrival/churn/batching/workload keys are
+        // ignored).
         let methods = all();
         let m = tiny_matrix_single_arrival(&methods);
         let cells = m.eval();
@@ -1985,10 +2290,11 @@ mod tests {
     }
 
     #[test]
-    fn v6_artifact_downgrades_to_v4_by_relabel() {
-        // With singleton churn and batching axes the cell set is exactly
-        // a v4 cross: relabel the artifact as v4 and it validates (the
-        // churn and paged-KV keys are v5/v6 additions v4 ignores).
+    fn v7_artifact_downgrades_to_v4_by_relabel() {
+        // With singleton churn, batching and workload axes the cell set
+        // is exactly a v4 cross: relabel the artifact as v4 and it
+        // validates (the churn/paged-KV/workload keys are v5/v6/v7
+        // additions v4 ignores).
         let methods = all();
         let m = tiny_matrix(&methods);
         let cells = m.eval();
@@ -2005,11 +2311,12 @@ mod tests {
     }
 
     #[test]
-    fn v6_artifact_downgrades_to_v5_by_relabel() {
-        // With a singleton batching axis the cell set is exactly a v5
-        // cross: relabel the artifact as v5 and it validates (the
-        // batching/paged-KV keys are v6 additions v5 ignores). The strict
-        // v6 validator rejects the relabelled artifact by its schema tag.
+    fn v7_artifact_downgrades_to_v5_by_relabel() {
+        // With singleton batching and workload axes the cell set is
+        // exactly a v5 cross: relabel the artifact as v5 and it validates
+        // (the batching/paged-KV/workload keys are v6/v7 additions v5
+        // ignores). The strict v6 validator rejects the relabelled
+        // artifact by its schema tag.
         let methods = all();
         let m = tiny_matrix(&methods);
         let cells = m.eval();
@@ -2023,6 +2330,28 @@ mod tests {
         assert_eq!(summary.schema, "lime-sweep-v5");
         assert!(validate_sweep_v5(&v5).is_ok());
         assert!(validate_sweep_v6(&v5).is_err());
+    }
+
+    #[test]
+    fn v7_artifact_downgrades_to_v6_by_relabel() {
+        // With a singleton workload axis the cell set is exactly a v6
+        // cross: relabel the artifact as v6 and it validates (the
+        // workload axis, per-cell coordinate and length arrays are v7
+        // additions v6 ignores). The strict v7 validator rejects the
+        // relabelled artifact by its schema tag.
+        let methods = all();
+        let m = tiny_matrix(&methods);
+        let cells = m.eval();
+        let parsed = Json::parse(&m.to_json(&cells).to_string()).unwrap();
+        let Json::Obj(mut map) = parsed else {
+            panic!("artifact must be an object")
+        };
+        map.insert("schema".into(), "lime-sweep-v6".into());
+        let v6 = Json::Obj(map);
+        let summary = validate_sweep(&v6).expect("relabelled artifact validates as v6");
+        assert_eq!(summary.schema, "lime-sweep-v6");
+        assert!(validate_sweep_v6(&v6).is_ok());
+        assert!(validate_sweep_v7(&v6).is_err());
     }
 
     #[test]
@@ -2095,12 +2424,13 @@ mod tests {
         let good = m.to_json(&cells).to_string();
         assert!(validate_sweep(&Json::parse(&good).unwrap()).is_ok());
         for (needle, replacement, why) in [
-            ("lime-sweep-v6", "lime-sweep-v1", "unknown schema"),
+            ("lime-sweep-v7", "lime-sweep-v1", "unknown schema"),
             ("\"sporadic\"", "\"sporadıc\"", "unknown pattern"),
             ("\"oom\":false", "\"oom\":true", "oom/ms inconsistency"),
             ("\"arrival\":\"stream3\"", "\"arrival\":\"stream9\"", "off-axis arrival"),
             ("\"churn\":\"none\"", "\"churn\":\"ghost\"", "off-axis churn"),
             ("\"batching\":\"fifo\"", "\"batching\":\"warp\"", "off-axis batching"),
+            ("\"workload\":\"fixed\"", "\"workload\":\"warped\"", "off-axis workload"),
         ] {
             let bad = good.replacen(needle, replacement, 1);
             assert_ne!(bad, good, "{why}: replacement must apply");
@@ -2177,6 +2507,16 @@ mod tests {
         if let Json::Obj(mut map) = parsed {
             if let Some(Json::Obj(axes)) = map.get_mut("axes") {
                 axes.remove("batching");
+            }
+            assert!(validate_sweep(&Json::Obj(map)).is_err());
+        } else {
+            panic!("artifact must be an object");
+        }
+        // Dropping the v7 workload axis must fail a v7 artifact.
+        let parsed = Json::parse(&good).unwrap();
+        if let Json::Obj(mut map) = parsed {
+            if let Some(Json::Obj(axes)) = map.get_mut("axes") {
+                axes.remove("workloads");
             }
             assert!(validate_sweep(&Json::Obj(map)).is_err());
         } else {
@@ -2297,9 +2637,9 @@ mod tests {
             .filter(|c| c.method_key == "galaxy" || c.method_key == "pp")
             .all(|c| c.churn == "none"));
 
-        // The artifact round-trips through the strict v6 validator.
+        // The artifact round-trips through the strict v7 validator.
         let parsed = Json::parse(&m.to_json(&cells).to_string()).unwrap();
-        let summary = validate_sweep_v6(&parsed).expect("churned artifact validates");
+        let summary = validate_sweep_v7(&parsed).expect("churned artifact validates");
         assert_eq!(summary.cells, m.cell_count());
     }
 
@@ -2399,16 +2739,84 @@ mod tests {
             );
         }
 
-        // Round-trips through the strict v6 validator; a v5 relabel fails
+        // Round-trips through the strict v7 validator; a v5 relabel fails
         // because the continuous cells break v5's exact axis cross.
         let parsed = Json::parse(&m.to_json(&cells).to_string()).unwrap();
-        let summary = validate_sweep_v6(&parsed).expect("batched artifact validates");
+        let summary = validate_sweep_v7(&parsed).expect("batched artifact validates");
         assert_eq!(summary.cells, m.cell_count());
         let Json::Obj(mut map) = parsed else {
             panic!("artifact must be an object")
         };
         map.insert("schema".into(), "lime-sweep-v5".into());
         assert!(validate_sweep(&Json::Obj(map)).is_err());
+    }
+
+    #[test]
+    fn workload_axis_expands_stream_cells() {
+        let methods = all();
+        let m = tiny_matrix(&methods)
+            .with_arrivals(vec![
+                ArrivalSpec::Single,
+                ArrivalSpec::Stream {
+                    count: 12,
+                    lambda: 2.0,
+                },
+            ])
+            .with_workloads(vec![
+                LengthDist::fixed(64, 3),
+                LengthDist::Bimodal {
+                    short: (32, 2),
+                    long: (128, 8),
+                    long_frac: 0.5,
+                },
+            ]);
+        // LIME: 2bw × 2pat × 2seg × 2mem × (single + stream12 × 1 batching
+        // × 2 workloads) = 48; the 6 baselines stay at 2bw × 2pat each.
+        assert_eq!(m.cell_count(), 48 + 24);
+        let cells = m.eval();
+        assert_eq!(cells.len(), m.cell_count());
+
+        // Mixed-length points exist exactly on LIME's stream cells.
+        for c in &cells {
+            if c.workload != "fixed" {
+                assert_eq!(c.method_key, "lime", "{c:?}");
+                assert_eq!(c.arrival, "stream12", "{c:?}");
+                assert_eq!(c.workload, "bimix50", "{c:?}");
+            }
+        }
+        // Per-request length arrays mirror the distribution that drew them:
+        // the fixed coordinate reproduces the global-knob lengths exactly,
+        // the bimodal coordinate is ragged across the two modes.
+        for c in cells.iter().filter(|c| c.arrival == "stream12") {
+            let r = c.requests.as_ref().expect("stream cells carry requests");
+            assert_eq!(r.prompt_len.len(), 12, "{c:?}");
+            assert_eq!(r.steps.len(), 12, "{c:?}");
+            if c.workload == "fixed" {
+                assert_eq!(r.prompt_len, vec![64; 12], "{c:?}");
+                assert_eq!(r.steps, vec![3; 12], "{c:?}");
+            } else {
+                for (&p, &s) in r.prompt_len.iter().zip(&r.steps) {
+                    assert!(
+                        (p, s) == (32, 2) || (p, s) == (128, 8),
+                        "off-mode request ({p}, {s}) in {c:?}"
+                    );
+                }
+                assert!(
+                    r.prompt_len.contains(&32) && r.prompt_len.contains(&128),
+                    "bimodal stream must mix both modes: {:?}",
+                    r.prompt_len
+                );
+            }
+        }
+        for c in cells.iter().filter(|c| c.method_key == "lime") {
+            assert!(c.ms_per_token.is_some(), "{c:?}");
+        }
+
+        // Round-trips through the strict v7 validator with the workload
+        // coordinate folded into the coverage cross.
+        let parsed = Json::parse(&m.to_json(&cells).to_string()).unwrap();
+        let summary = validate_sweep_v7(&parsed).expect("mixed artifact validates");
+        assert_eq!(summary.cells, m.cell_count());
     }
 
     #[test]

@@ -45,18 +45,19 @@ fn usage() -> String {
                     fig14 lowmem fig18 tab5), or `sweep` for the scenario\n\
                     matrix (lowmem + cluster-size grids × bandwidth ×\n\
                     pattern, #Seg-override, joint memory/bandwidth\n\
-                    pressure-script, arrival-process, device-churn and\n\
-                    batching-policy axes — continuous request streams with\n\
-                    per-request TTFT/queueing-delay metrics, FIFO vs\n\
-                    step-level continuous batching with paged-KV counters,\n\
-                    plus re-plan/KV-migration/recovery counters) with one\n\
-                    lime-sweep-v6 JSON per grid\n\
+                    pressure-script, arrival-process, device-churn,\n\
+                    batching-policy and workload-mix axes — continuous\n\
+                    request streams with per-request TTFT/queueing-delay\n\
+                    and length metrics, FIFO vs step-level continuous\n\
+                    batching with paged-KV counters, fixed vs bimodal\n\
+                    request lengths, plus re-plan/KV-migration/recovery\n\
+                    counters) with one lime-sweep-v7 JSON per grid\n\
        fleet        fleet-sharded request streams: N heterogeneous clusters\n\
                     behind a global admission router (rr/jsq/plan), tail-\n\
                     latency quantiles streamed as one lime-fleet-v1 JSON,\n\
                     with optional cluster churn (down/up + re-routing)\n\
        sweep-check  validate sweep/fleet JSON artifacts against the\n\
-                    lime-sweep-v2..v6 and lime-fleet-v1 schemas\n\
+                    lime-sweep-v2..v7 and lime-fleet-v1 schemas\n\
                     (non-zero exit on violation)\n\
        bench-check  diff a fresh BENCH_*.json against a committed baseline\n\
                     with a tolerance band (non-zero exit on regression)\n\
@@ -238,7 +239,7 @@ fn cmd_fleet(argv: &[String]) {
 fn cmd_sweep_check(argv: &[String]) {
     let cli = Cli::new(
         "lime sweep-check",
-        "validate sweep/fleet artifacts against the lime-sweep-v2..v6 and lime-fleet-v1 schemas",
+        "validate sweep/fleet artifacts against the lime-sweep-v2..v7 and lime-fleet-v1 schemas",
     )
     .opt("dir", "sweeps", "directory holding SWEEP_*.json / FLEET_*.json artifacts")
     .opt("file", "", "validate a single artifact instead of a directory");

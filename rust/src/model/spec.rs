@@ -19,6 +19,11 @@ pub struct ModelSpec {
     pub vocab: usize,
     /// Bytes per weight element (2 = fp16/bf16 deployment, 4 = f32).
     pub dtype_bytes: u64,
+    /// Sliding-window attention cap: when set, a layer attends over (and
+    /// caches KV for) at most this many trailing tokens, bounding KV
+    /// bytes/context and attention FLOPs. `None` = full attention — the
+    /// identity on every derived quantity (all Tab. III presets).
+    pub sliding_window: Option<usize>,
 }
 
 impl ModelSpec {
@@ -34,6 +39,7 @@ impl ModelSpec {
             ffn: 13824,
             vocab: 32000,
             dtype_bytes: 2,
+            sliding_window: None,
         }
     }
 
@@ -49,6 +55,7 @@ impl ModelSpec {
             ffn: 25600,
             vocab: 151936,
             dtype_bytes: 2,
+            sliding_window: None,
         }
     }
 
@@ -64,6 +71,7 @@ impl ModelSpec {
             ffn: 28672,
             vocab: 128256,
             dtype_bytes: 2,
+            sliding_window: None,
         }
     }
 
@@ -79,6 +87,7 @@ impl ModelSpec {
             ffn: 384,
             vocab: 256,
             dtype_bytes: 4,
+            sliding_window: None,
         }
     }
 
@@ -96,6 +105,42 @@ impl ModelSpec {
 
     pub fn head_dim(&self) -> usize {
         self.hidden / self.heads
+    }
+
+    // ---------------------------------------------------- variant builders
+
+    /// KV-shape variant: override the KV-head count (GQA/MQA ablations —
+    /// `1` = MQA, `heads` = MHA). Scales `kv_bytes_per_token_layer` and
+    /// the Wk/Wv parameter bytes exactly as a retrained variant would.
+    pub fn with_kv_heads(mut self, kv_heads: usize) -> Self {
+        assert!(
+            kv_heads >= 1 && self.heads % kv_heads == 0,
+            "kv_heads {kv_heads} must divide query heads {}",
+            self.heads
+        );
+        self.kv_heads = kv_heads;
+        self.name = format!("{}-kv{kv_heads}", self.name);
+        self
+    }
+
+    /// KV-shape variant: cap attention (and cached KV) at a sliding
+    /// window of `window` trailing tokens.
+    pub fn with_sliding_window(mut self, window: usize) -> Self {
+        assert!(window >= 1, "window must hold at least one token");
+        self.sliding_window = Some(window);
+        self.name = format!("{}-swa{window}", self.name);
+        self
+    }
+
+    /// Tokens actually cached/attended at logical context `ctx`:
+    /// `min(ctx, window)` under sliding-window attention, `ctx` (the
+    /// identity) for full-attention specs — so every pre-variant spec
+    /// keeps bit-identical derived quantities.
+    pub fn kv_ctx(&self, ctx: usize) -> usize {
+        match self.sliding_window {
+            Some(w) => ctx.min(w),
+            None => ctx,
+        }
     }
 
     // ------------------------------------------------------------ memory
@@ -159,18 +204,23 @@ impl ModelSpec {
     // ----------------------------------------------------------- compute
 
     /// Decode-step FLOPs for one token through one layer: 2 * params
-    /// (matmul dominated) + attention over `ctx` cached tokens.
+    /// (matmul dominated) + attention over the cached tokens (at most
+    /// the sliding window when the spec caps one).
     pub fn layer_decode_flops(&self, ctx: usize) -> f64 {
+        let ctx = self.kv_ctx(ctx);
         let param_elems = (self.layer_bytes() / self.dtype_bytes) as f64;
         let attn = 2.0 * 2.0 * (self.heads * self.head_dim() * ctx) as f64;
         2.0 * param_elems + attn
     }
 
-    /// Prefill FLOPs for a `prompt` of tokens through one layer.
+    /// Prefill FLOPs for a `prompt` of tokens through one layer. Each
+    /// position attends over at most `kv_ctx(prompt)` keys, so the
+    /// quadratic term flattens to `prompt × window` under a sliding
+    /// window (and is untouched for full attention).
     pub fn layer_prefill_flops(&self, prompt: usize) -> f64 {
         let param_elems = (self.layer_bytes() / self.dtype_bytes) as f64;
         let attn = 2.0 * 2.0 * (self.heads * self.head_dim()) as f64
-            * (prompt * prompt) as f64
+            * (prompt * self.kv_ctx(prompt)) as f64
             / 2.0;
         2.0 * param_elems * prompt as f64 + attn
     }
@@ -252,5 +302,41 @@ mod tests {
         let spec = ModelSpec::llama33_70b();
         assert!(spec.layer_decode_flops(2048) > spec.layer_decode_flops(1));
         assert!(spec.layer_prefill_flops(256) > spec.layer_prefill_flops(16));
+    }
+
+    #[test]
+    fn kv_head_variants_scale_kv_bytes() {
+        let base = ModelSpec::llama2_13b(); // MHA: 40 kv heads
+        let mqa = base.clone().with_kv_heads(1);
+        let gqa = base.clone().with_kv_heads(8);
+        assert_eq!(mqa.kv_bytes_per_token_layer() * 40, base.kv_bytes_per_token_layer());
+        assert_eq!(gqa.kv_bytes_per_token_layer() * 5, base.kv_bytes_per_token_layer());
+        // Variant names stay distinct (scenario coords key off them).
+        assert_ne!(mqa.name, base.name);
+        assert_ne!(gqa.name, mqa.name);
+        // Smaller Wk/Wv shrink the MHA block too.
+        assert!(mqa.mha_bytes() < base.mha_bytes());
+    }
+
+    #[test]
+    fn sliding_window_caps_context_derived_quantities() {
+        let full = ModelSpec::qwen3_32b();
+        let swa = full.clone().with_sliding_window(512);
+        // Identity below the window...
+        assert_eq!(swa.kv_ctx(100), 100);
+        assert_eq!(
+            swa.layer_decode_flops(100).to_bits(),
+            full.layer_decode_flops(100).to_bits()
+        );
+        // ...hard cap above it.
+        assert_eq!(swa.kv_ctx(4096), 512);
+        assert_eq!(
+            swa.layer_decode_flops(4096).to_bits(),
+            full.layer_decode_flops(512).to_bits()
+        );
+        assert!(swa.layer_prefill_flops(2048) < full.layer_prefill_flops(2048));
+        // Full-attention specs are untouched (None = identity, pinning the
+        // pre-variant path bit-identical).
+        assert_eq!(full.kv_ctx(1 << 20), 1 << 20);
     }
 }

@@ -338,6 +338,16 @@ pub trait SchedulePolicy {
     /// [`SchedulePolicy::step`] sees the new `micro` in its [`StepCtx`].
     fn on_batch_resize(&mut self, _core: &mut CoreState, _micro: usize) {}
 
+    /// Install the per-slot request lengths for the next admission charge
+    /// or decode step: one `(prompt_len, completed_steps)` pair per active
+    /// micro-batch slot. The serving driver (`serve::simqueue`) calls this
+    /// so length-aware policies charge each slot's prefill FLOPs,
+    /// activation volume and KV context from the request's *own* lengths;
+    /// an empty slice (and the default no-op) means "use the global
+    /// `CommonOptions::prompt_tokens` knob" — the pre-mix behaviour every
+    /// non-serving entry point keeps bit-identically.
+    fn set_slot_lengths(&mut self, _slots: &[(usize, usize)]) {}
+
     /// KV tokens shipped between devices so far (stream total).
     fn kv_tokens_transferred(&self) -> u64 {
         0

@@ -210,6 +210,13 @@ pub struct InterleavedPolicy<'a> {
     churn_alloc: Option<Allocation>,
     replans: usize,
     migrated_bytes: u64,
+    /// Per-active-slot `(prompt_len, completed_steps)` installed by the
+    /// serving driver through [`SchedulePolicy::set_slot_lengths`]. Empty
+    /// — every non-serving entry point — means "use the global
+    /// `prompt_tokens` knob", reproducing the pre-mix arithmetic bit for
+    /// bit; homogeneous installed slots take the same fast paths with the
+    /// shared per-request value.
+    slot_lens: Vec<(usize, usize)>,
 }
 
 impl<'a> InterleavedPolicy<'a> {
@@ -226,6 +233,7 @@ impl<'a> InterleavedPolicy<'a> {
             churn_alloc: None,
             replans: 0,
             migrated_bytes: 0,
+            slot_lens: Vec::new(),
         }
     }
 
@@ -234,6 +242,48 @@ impl<'a> InterleavedPolicy<'a> {
     #[cfg(test)]
     fn clear_request_state(&mut self) {
         self.st = None;
+    }
+
+    /// Prompt length of slot `m` — the global knob when no slot lengths
+    /// are installed (every non-serving path).
+    fn prompt_of(&self, m: usize) -> usize {
+        self.slot_lens
+            .get(m)
+            .map_or(self.opts.prompt_tokens, |&(p, _)| p)
+    }
+
+    /// The single prompt shared by every slot: the global knob when no
+    /// slot lengths are installed, `Some(p)` when all installed slots
+    /// agree (the homogeneous fast path reuses the exact pre-mix
+    /// expressions, keeping fixed-length serving bit-identical), `None`
+    /// when ragged.
+    fn uniform_prompt(&self) -> Option<usize> {
+        match self.slot_lens.first() {
+            None => Some(self.opts.prompt_tokens),
+            Some(&(p0, _)) => self.slot_lens.iter().all(|&(p, _)| p == p0).then_some(p0),
+        }
+    }
+
+    /// Largest per-slot prompt — the stand-in for the scalar
+    /// `prompt_tokens` knob in the per-device KV bookkeeping (`kv_held`
+    /// is device-replicated token space, so the widest context governs).
+    fn effective_prompt(&self) -> usize {
+        self.slot_lens
+            .iter()
+            .map(|&(p, _)| p)
+            .max()
+            .unwrap_or(self.opts.prompt_tokens)
+    }
+
+    /// Scalar context driving planner thresholds, Alg. 2 and overflow
+    /// checks: max over slots of `prompt + completed steps`; the pre-mix
+    /// `prompt_tokens + local_step` when no slot lengths are installed.
+    fn effective_tok(&self, local_step: usize) -> usize {
+        self.slot_lens
+            .iter()
+            .map(|&(p, done)| p + done)
+            .max()
+            .unwrap_or(self.opts.prompt_tokens + local_step)
     }
 
     /// Rebuild the per-request adaptation state for a batch of `micro`
@@ -249,6 +299,9 @@ impl<'a> InterleavedPolicy<'a> {
     /// plan under the same shifted slack the effective caps describe.
     fn reset_request_state(&mut self, core: &mut CoreState, micro: usize, bw0: f64) {
         let d = self.cluster.len();
+        // Per-request prompt for the KV/protocol bookkeeping: the widest
+        // installed slot, or the global knob on non-serving paths.
+        let prompt = self.effective_prompt();
         // Effective base allocation: the churn overlay when a re-plan is
         // in force, the offline allocation otherwise (always, churn-free).
         let alloc = self.churn_alloc.as_ref().unwrap_or(self.alloc);
@@ -264,7 +317,7 @@ impl<'a> InterleavedPolicy<'a> {
                 alloc,
                 self.cluster,
                 &st.planner,
-                self.opts.prompt_tokens,
+                prompt,
                 micro,
                 bw0,
             );
@@ -277,7 +330,7 @@ impl<'a> InterleavedPolicy<'a> {
             st.last_plan.clear();
             st.last_plan.resize(d, OffloadPlan::default());
             st.kv_held.clear();
-            st.kv_held.resize(d, self.opts.prompt_tokens);
+            st.kv_held.resize(d, prompt);
             st.pending_reload.clear();
             st.pending_reload.resize(d, 0);
             st.micro_front.clear();
@@ -294,7 +347,7 @@ impl<'a> InterleavedPolicy<'a> {
                 alloc,
                 self.cluster,
                 &planner,
-                self.opts.prompt_tokens,
+                prompt,
                 micro,
                 bw0,
             );
@@ -303,7 +356,7 @@ impl<'a> InterleavedPolicy<'a> {
                 protocol,
                 live: alloc.clone(),
                 last_plan: vec![OffloadPlan::default(); d],
-                kv_held: vec![self.opts.prompt_tokens; d],
+                kv_held: vec![prompt; d],
                 pending_reload: vec![0; d],
                 slot_free: Vec::new(), // filled once decode_start is known
                 micro_front: vec![0.0; micro],
@@ -319,22 +372,37 @@ impl<'a> InterleavedPolicy<'a> {
     /// neither compute nor relay activations.
     fn charge_prefill(&self, at: f64, micro: usize, bw0: f64) -> f64 {
         let alloc = self.churn_alloc.as_ref().unwrap_or(self.alloc);
+        // Homogeneous prompts — every non-serving call, and fixed-length
+        // serving — reuse the exact pre-mix expressions (bit-identity
+        // pin); ragged slots sum per-request FLOPs and activation volume.
+        let uniform = self.uniform_prompt();
         let mut t_prefill = at;
         for i in 0..self.cluster.len() {
             let a = &alloc.devices[i];
             if a.total_layers == 0 {
                 continue;
             }
-            let flops = self.spec.layer_prefill_flops(self.opts.prompt_tokens)
-                * a.total_layers as f64
-                * micro as f64;
+            let flops = match uniform {
+                Some(p) => {
+                    self.spec.layer_prefill_flops(p) * a.total_layers as f64 * micro as f64
+                }
+                None => {
+                    let per_slot: f64 = (0..micro)
+                        .map(|m| self.spec.layer_prefill_flops(self.prompt_of(m)))
+                        .sum();
+                    per_slot * a.total_layers as f64
+                }
+            };
             let comp = flops / self.cluster.devices[i].flops;
             let load = cost::load_time(&self.spec, &self.cluster.devices[i], a);
             t_prefill += comp.max(load);
-            t_prefill += link_transfer_secs(
-                self.spec.h_size(micro) * self.opts.prompt_tokens as u64,
-                bw0,
-            );
+            let act_bytes = match uniform {
+                Some(p) => self.spec.h_size(micro) * p as u64,
+                None => (0..micro)
+                    .map(|m| self.spec.h_size(1) * self.prompt_of(m) as u64)
+                    .sum(),
+            };
+            t_prefill += link_transfer_secs(act_bytes, bw0);
         }
         t_prefill
     }
@@ -385,6 +453,11 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
         st.slot_free.clear();
         st.slot_free.resize(d, at);
         at
+    }
+
+    fn set_slot_lengths(&mut self, slots: &[(usize, usize)]) {
+        self.slot_lens.clear();
+        self.slot_lens.extend_from_slice(slots);
     }
 
     fn on_batch_resize(&mut self, _core: &mut CoreState, micro: usize) {
@@ -487,8 +560,8 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
         // allocation; shared-resource clocks (slot_free, micro_front,
         // the link) keep their times — the schedule resumes from
         // wherever the simulated hardware actually is.
-        let tok = self.opts.prompt_tokens + ctx.local_step;
-        let prompt = self.opts.prompt_tokens;
+        let tok = self.effective_tok(ctx.local_step);
+        let prompt = self.effective_prompt();
         if let Some(st) = self.st.as_mut() {
             st.planner.reset(alloc, self.cluster, ctx.micro);
             for i in 0..d {
@@ -521,12 +594,15 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
     }
 
     fn step(&mut self, core: &mut CoreState, ctx: &StepCtx) -> f64 {
+        // Scalar context (planner thresholds, Alg. 2, overflow): the
+        // widest slot's prompt + completed steps; pre-mix arithmetic when
+        // no slot lengths are installed. Computed before `st` is borrowed.
+        let tok = self.effective_tok(ctx.local_step);
         let st = self.st.as_mut().expect("begin_request precedes step");
         let d = self.cluster.len();
         let seg = self.seg;
         let micro = ctx.micro;
         let bw = core.bw_at(ctx.global_step);
-        let tok = self.opts.prompt_tokens + ctx.local_step;
 
         // ---- Alg. 2 lines 8-9: monitor bandwidth, adapt transfers ----
         if self.opts.kv_transfer {
@@ -581,6 +657,14 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
 
                 let mut last_micro_end = step_start;
                 for (m, front) in st.micro_front.iter_mut().enumerate() {
+                    // Slot m computes at its own request's context when
+                    // slot lengths are installed (ragged-length serving);
+                    // the scalar `tok` otherwise — identical by value on
+                    // every homogeneous path.
+                    let tok_m = self
+                        .slot_lens
+                        .get(m)
+                        .map_or(tok, |&(p, done)| p + done);
                     // Activation hop onto device i (shared medium).
                     let hop =
                         core.link_acquire(*front, link_transfer_secs(self.spec.h_size(1), bw));
@@ -591,7 +675,7 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
 
                     // Resident fraction computes immediately.
                     let comp_res =
-                        cost::comp_time(&self.spec, &self.cluster.devices[i], res_here, tok, 1);
+                        cost::comp_time(&self.spec, &self.cluster.devices[i], res_here, tok_m, 1);
                     let iv1 = core.gpus[i].acquire(arrive, comp_res);
                     if comp_res > 0.0 {
                         core.trace.push(
@@ -610,8 +694,13 @@ impl SchedulePolicy for InterleavedPolicy<'_> {
                             core.trace
                                 .push(i, SpanKind::Stall, label(MicroPhase::Wait), end, gate);
                         }
-                        let comp_off =
-                            cost::comp_time(&self.spec, &self.cluster.devices[i], off_here, tok, 1);
+                        let comp_off = cost::comp_time(
+                            &self.spec,
+                            &self.cluster.devices[i],
+                            off_here,
+                            tok_m,
+                            1,
+                        );
                         let iv2 = core.gpus[i].acquire(end.max(gate), comp_off);
                         core.trace.push(
                             i,

@@ -28,6 +28,14 @@
 //! step timing, not just counters. Spilled pages are modeled
 //! write-only (no read-back on a later step; the simplification is
 //! documented in `docs/SERVING.md`).
+//!
+//! Known limit: page accounting tracks the *raw* context (prompt +
+//! generated tokens) and never applies a sliding-window `kv_ctx` cap —
+//! a window spec's pages would keep growing past the window here while
+//! `cost::mem_demand` saturates. Latent today: window variants are
+//! unit-test constructors only (no matrix/fleet path builds one — see
+//! the ROADMAP follow-on about promoting KV-shape variants to a matrix
+//! axis).
 
 /// Shape of the paged allocator: the page-size knob and the pool budget.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -55,7 +55,7 @@ use crate::adapt::Script;
 use crate::cluster::Cluster;
 use crate::model::ModelSpec;
 use crate::net::BandwidthTrace;
-use crate::pipeline::core::{CommonOptions, CoreArena, ExecutorCore, SchedulePolicy};
+use crate::pipeline::core::{CommonOptions, ExecutorCore, SchedulePolicy};
 use crate::pipeline::{
     ExecOptions, InterleavedPolicy, TensorParallelPolicy, TpOptions, TradOptions,
     TraditionalPolicy,
@@ -265,11 +265,21 @@ pub struct StreamStats {
 /// step counts are allowed (the batch decodes to the longest request, and
 /// each request's finish/TBT are measured at its own step count).
 ///
-/// Prefill is charged from `common.prompt_tokens` — the same knob the
-/// `run_*` entry points use — not from each request's `prompt` vector,
-/// whose content only matters to the real PJRT serving path. Generate
-/// streams with `prompt_len == common.prompt_tokens` (as the scenario
-/// matrix does) when the two should agree.
+/// Each request's *own* lengths are honored end-to-end: prefill FLOPs,
+/// activation volume and KV context are charged from `r.prompt.len()`,
+/// decode advances each slot's context by its completed step count, and
+/// the paged allocator registers `r.prompt.len()` tokens per request.
+/// An *empty* prompt falls back to `common.prompt_tokens` for all of the
+/// above — the memory-flat convention `serve::fleet` uses to stream
+/// 10^6 requests without materializing token vectors.
+/// The driver installs the per-slot `(prompt_len, completed_steps)`
+/// pairs through [`SchedulePolicy::set_slot_lengths`] before every
+/// admission charge and decode step; policies that ignore the hook keep
+/// charging from `common.prompt_tokens` as before. When every request
+/// carries `prompt_len == common.prompt_tokens` and a uniform step
+/// count — i.e. any `LengthDist::Fixed` stream — the timings are
+/// bit-identical to the pre-mix global-knob path (property-pinned in
+/// `rust/tests/workload_mix.rs`).
 pub fn simulate_stream<P: SchedulePolicy>(
     policy: P,
     cluster: &Cluster,
@@ -419,7 +429,26 @@ pub fn simulate_stream_sink_opts<P: SchedulePolicy, S: StreamSink>(
     }
 }
 
-/// The FIFO admission loop (the pre-v6 driver, byte-for-byte).
+/// A request's effective prompt length for slot installation and paged-KV
+/// registration. An *empty* prompt means "charge from the global knob"
+/// (`common.prompt_tokens`): `serve::fleet` deliberately streams
+/// zero-token prompts to stay memory-flat at 10^6 requests, and any
+/// pre-mix caller that never materialized tokens relied on the knob. A
+/// non-empty prompt always wins over the knob.
+fn slot_prompt(r: &Request, common: &CommonOptions) -> usize {
+    if r.prompt.is_empty() {
+        common.prompt_tokens
+    } else {
+        r.prompt.len()
+    }
+}
+
+/// The FIFO admission loop. The batch loop replicates
+/// [`ExecutorCore::run_request_into`]'s arithmetic step for step
+/// (`begin_request`, then one `step_stream` per decode token) so the
+/// driver can re-install each slot's `(prompt_len, completed_steps)`
+/// between steps; with uniform lengths the sequence of calls — and thus
+/// every timing — is identical to the pre-mix `run_request_in` path.
 #[allow(clippy::too_many_arguments)]
 fn run_fifo<P: SchedulePolicy, S: StreamSink>(
     policy: P,
@@ -435,11 +464,14 @@ fn run_fifo<P: SchedulePolicy, S: StreamSink>(
     let max_batch = max_batch.max(1);
     let mut core = ExecutorCore::new(policy, cluster, bw_trace, common, script);
     core.retain_step_times(retain_step_times);
-    let mut arena = CoreArena::new();
     let mut batches = 0usize;
     let mut makespan = 0.0f64;
     let mut t_free = 0.0f64;
     let mut i = 0usize;
+    // Reused across batches: per-step completion times and the per-slot
+    // (prompt_len, completed_steps) pairs installed before every charge.
+    let mut step_ends: Vec<f64> = Vec::new();
+    let mut slots: Vec<(usize, usize)> = Vec::new();
     while i < requests.len() {
         let t_start = t_free.max(requests[i].arrival);
         let mut j = i + 1;
@@ -448,26 +480,47 @@ fn run_fifo<P: SchedulePolicy, S: StreamSink>(
         }
         let batch = &requests[i..j];
         let tokens = batch.iter().map(|r| r.steps).max().unwrap_or(0);
-        // Scripted churn that would take down the last surviving device is
-        // a scenario-authoring error, rejected by `ScenarioMatrix::
-        // assert_valid` before any stream runs; fail loudly if one slips
-        // through rather than serving from an empty cluster.
-        let run = core
-            .run_request_in(t_start, batch.len(), tokens, &mut arena)
-            .expect("churn script must leave at least one surviving device");
+        let micro = batch.len().max(1);
+        slots.clear();
+        slots.extend(batch.iter().map(|r| (slot_prompt(r, common), 0usize)));
+        core.policy.set_slot_lengths(&slots);
+        let g = core.global_step();
+        let decode_start = core.policy.begin_request(&mut core.state, t_start, micro, g);
+        let mut t_prev = decode_start;
+        step_ends.clear();
+        step_ends.reserve(tokens);
+        for local in 0..tokens {
+            // A member that already finished keeps its batch slot (FIFO
+            // runs to the longest request) but its context stops growing
+            // at its own step count.
+            for (s, r) in slots.iter_mut().zip(batch) {
+                s.1 = local.min(r.steps);
+            }
+            core.policy.set_slot_lengths(&slots);
+            // Scripted churn that would take down the last surviving
+            // device is a scenario-authoring error, rejected by
+            // `ScenarioMatrix::assert_valid` before any stream runs; fail
+            // loudly if one slips through rather than serving from an
+            // empty cluster.
+            let step_end = core
+                .step_stream(t_prev, micro, local)
+                .expect("churn script must leave at least one surviving device");
+            step_ends.push(step_end);
+            t_prev = step_end;
+        }
         for r in batch {
             let finish = if r.steps == 0 {
-                run.decode_start
+                decode_start
             } else {
-                run.step_ends[r.steps - 1]
+                step_ends[r.steps - 1]
             };
             // A zero-step request emits no token: its "first token" time
             // degenerates to its own finish (prefill end), never to a
             // batch-mate's first decode step.
             let first = if r.steps == 0 {
-                run.decode_start
+                decode_start
             } else {
-                run.step_ends[0]
+                step_ends[0]
             };
             let m = RequestMetrics {
                 id: r.id,
@@ -478,17 +531,18 @@ fn run_fifo<P: SchedulePolicy, S: StreamSink>(
                 tbt: if r.steps == 0 {
                     0.0
                 } else {
-                    (finish - run.decode_start) / r.steps as f64
+                    (finish - decode_start) / r.steps as f64
                 },
                 finish,
             };
             makespan = makespan.max(m.finish);
             sink.on_request(&m);
         }
-        t_free = run.finish();
+        t_free = step_ends.last().copied().unwrap_or(decode_start);
         batches += 1;
         i = j;
     }
+    core.policy.set_slot_lengths(&[]);
     let totals = core.into_totals();
     StreamStats {
         batches,
@@ -577,6 +631,10 @@ fn run_continuous<P: SchedulePolicy, S: StreamSink>(
     let mut batches = 0usize;
     let mut makespan = 0.0f64;
     let mut t = 0.0f64;
+    // Reused per-slot (prompt_len, completed_steps) buffer, installed
+    // through `SchedulePolicy::set_slot_lengths` before every admission
+    // charge and decode step.
+    let mut slots: Vec<(usize, usize)> = Vec::new();
 
     // Emits a finished request. A zero-step request "finishes" the moment
     // its prefill does (it generates no token), mirroring the FIFO path's
@@ -614,13 +672,20 @@ fn run_continuous<P: SchedulePolicy, S: StreamSink>(
                 let take = ready.len().min(max_batch);
                 let members: Vec<ReadyReq> = ready.drain(..take).collect();
                 let t_dec = members.iter().fold(t, |acc, r| acc.max(r.ready_at));
+                slots.clear();
+                slots.extend(
+                    members
+                        .iter()
+                        .map(|m| (slot_prompt(&requests[m.idx], common), 0usize)),
+                );
+                core.policy.set_slot_lengths(&slots);
                 let g = core.global_step();
                 let decode_start = core.policy.begin_batch(&mut core.state, t_dec, take, g);
                 batches += 1;
                 for m in members {
                     let r = &requests[m.idx];
                     if let Some(pool) = pool.as_mut() {
-                        pool.register(r.id, common.prompt_tokens);
+                        pool.register(r.id, slot_prompt(r, common));
                     }
                     active.push(ActiveSlot {
                         idx: m.idx,
@@ -640,6 +705,13 @@ fn run_continuous<P: SchedulePolicy, S: StreamSink>(
                 while j < requests.len() && j - next < max_batch && requests[j].arrival <= t_start {
                     j += 1;
                 }
+                slots.clear();
+                slots.extend(
+                    requests[next..j]
+                        .iter()
+                        .map(|r| (slot_prompt(r, common), 0usize)),
+                );
+                core.policy.set_slot_lengths(&slots);
                 let g = core.global_step();
                 let decode_start =
                     core.policy.begin_request(&mut core.state, t_start, j - next, g);
@@ -659,7 +731,7 @@ fn run_continuous<P: SchedulePolicy, S: StreamSink>(
                         continue;
                     }
                     if let Some(pool) = pool.as_mut() {
-                        pool.register(r.id, common.prompt_tokens);
+                        pool.register(r.id, slot_prompt(r, common));
                     }
                     active.push(ActiveSlot {
                         idx,
@@ -686,6 +758,7 @@ fn run_continuous<P: SchedulePolicy, S: StreamSink>(
             && requests[next].arrival <= t
         {
             let r = &requests[next];
+            core.policy.set_slot_lengths(&[(slot_prompt(r, common), 0)]);
             let g = core.global_step();
             let ready_at = core.policy.prefill_end(&mut core.state, t, 1, g);
             if r.steps == 0 {
@@ -702,6 +775,13 @@ fn run_continuous<P: SchedulePolicy, S: StreamSink>(
 
         // ---- one decode step at the current batch width ----
         let local = active.iter().map(|s| s.done).max().unwrap_or(0);
+        slots.clear();
+        slots.extend(
+            active
+                .iter()
+                .map(|s| (slot_prompt(&requests[s.idx], common), s.done)),
+        );
+        core.policy.set_slot_lengths(&slots);
         // Scripted churn that would take down the last surviving device is
         // rejected by `ScenarioMatrix::assert_valid` before any stream
         // runs; fail loudly if one slips through.
@@ -761,7 +841,7 @@ fn run_continuous<P: SchedulePolicy, S: StreamSink>(
             let m = ready.pop_front().expect("front checked above");
             let r = &requests[m.idx];
             if let Some(pool) = pool.as_mut() {
-                pool.register(r.id, common.prompt_tokens);
+                pool.register(r.id, slot_prompt(r, common));
             }
             active.push(ActiveSlot {
                 idx: m.idx,
@@ -779,6 +859,7 @@ fn run_continuous<P: SchedulePolicy, S: StreamSink>(
         t = t_next;
     }
 
+    core.policy.set_slot_lengths(&[]);
     let (kv_pages_allocated, kv_pages_spilled, kv_fragmentation) = pool
         .map(|p| (p.pages_allocated(), p.pages_spilled(), p.fragmentation_peak()))
         .unwrap_or((0, 0, 0.0));

@@ -1,0 +1,287 @@
+//! Deterministic request-length distributions — the mixed-length workload
+//! axis (EdgeShard-style serving realism; SNIPPETS §3C motivation).
+//!
+//! Every request in a stream carries its own `(prompt_len, steps)` pair.
+//! A [`LengthDist`] draws that pair from the stream's seeded [`Rng`], so
+//! length mixes are exactly as reproducible as the arrival process:
+//! same seed, same stream, bit for bit, at any worker count.
+//!
+//! [`LengthDist::Fixed`] is the degenerate distribution every pre-mix
+//! stream used implicitly. It samples **without touching the RNG**, so a
+//! `Fixed` stream consumes the identical draw sequence the old
+//! fixed-length generator consumed — the property that lets
+//! `rust/tests/workload_mix.rs` pin `Fixed` bit-identical to the pre-axis
+//! path end-to-end (request ids, arrivals, prompt tokens, and every
+//! downstream timing).
+
+use crate::util::rng::Rng;
+
+/// A per-request `(prompt_len, steps)` sampler. All variants are
+/// deterministic functions of the stream's `Rng` state.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LengthDist {
+    /// Every request prefills `prompt_tokens` and decodes `steps` tokens.
+    /// Draws nothing from the RNG — bit-identical to the pre-mix path.
+    Fixed { prompt_tokens: usize, steps: usize },
+    /// Independent uniform draws over inclusive `[min, max]` ranges.
+    Uniform {
+        prompt: (usize, usize),
+        steps: (usize, usize),
+    },
+    /// Short-chat / long-context mixture: with probability `long_frac`
+    /// the request is a `long` `(prompt, steps)` pair, otherwise `short`.
+    Bimodal {
+        short: (usize, usize),
+        long: (usize, usize),
+        long_frac: f64,
+    },
+    /// Fixed prompt, truncated-geometric decode length: steps are
+    /// `1 + Geom(1/mean_steps)` capped at `max_steps` (inversion method),
+    /// the classic open-ended-generation length model.
+    Geometric {
+        prompt_tokens: usize,
+        mean_steps: usize,
+        max_steps: usize,
+    },
+}
+
+impl LengthDist {
+    /// The pre-mix default: one fixed `(prompt_tokens, steps)` shape.
+    pub fn fixed(prompt_tokens: usize, steps: usize) -> Self {
+        LengthDist::Fixed {
+            prompt_tokens,
+            steps,
+        }
+    }
+
+    /// Draw one request's `(prompt_len, steps)`.
+    ///
+    /// `Fixed` returns its pair without advancing `rng`; every other
+    /// variant draws a deterministic number of values (prompt first,
+    /// then steps, then the mixture coin where applicable).
+    pub fn sample(&self, rng: &mut Rng) -> (usize, usize) {
+        match *self {
+            LengthDist::Fixed {
+                prompt_tokens,
+                steps,
+            } => (prompt_tokens, steps),
+            LengthDist::Uniform { prompt, steps } => {
+                let p = sample_inclusive(rng, prompt);
+                let s = sample_inclusive(rng, steps);
+                (p, s)
+            }
+            LengthDist::Bimodal {
+                short,
+                long,
+                long_frac,
+            } => {
+                if rng.chance(long_frac) {
+                    long
+                } else {
+                    short
+                }
+            }
+            LengthDist::Geometric {
+                prompt_tokens,
+                mean_steps,
+                max_steps,
+            } => {
+                let s = sample_truncated_geometric(rng, mean_steps, max_steps);
+                (prompt_tokens, s)
+            }
+        }
+    }
+
+    /// True for the degenerate (pre-mix-identical) distribution.
+    pub fn is_fixed(&self) -> bool {
+        matches!(self, LengthDist::Fixed { .. })
+    }
+
+    /// Schema tag for artifacts (`axes.workloads[].kind`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            LengthDist::Fixed { .. } => "fixed",
+            LengthDist::Uniform { .. } => "uniform",
+            LengthDist::Bimodal { .. } => "bimodal",
+            LengthDist::Geometric { .. } => "geometric",
+        }
+    }
+
+    /// Short human/axis label (`axes.workloads[].label`, per-cell
+    /// `workload` coordinate). Unique across any sanely-built axis:
+    /// parameters are baked in for the non-fixed variants.
+    pub fn label(&self) -> String {
+        match *self {
+            LengthDist::Fixed { .. } => "fixed".into(),
+            LengthDist::Uniform { prompt, steps } => {
+                format!("uni{}-{}x{}-{}", prompt.0, prompt.1, steps.0, steps.1)
+            }
+            LengthDist::Bimodal { long_frac, .. } => {
+                format!("bimix{}", (long_frac * 100.0).round() as u32)
+            }
+            LengthDist::Geometric { mean_steps, .. } => format!("geo{mean_steps}"),
+        }
+    }
+
+    /// Largest prompt the distribution can emit (sizing KV page budgets).
+    pub fn max_prompt_tokens(&self) -> usize {
+        match *self {
+            LengthDist::Fixed { prompt_tokens, .. } => prompt_tokens,
+            LengthDist::Uniform { prompt, .. } => prompt.1,
+            LengthDist::Bimodal { short, long, .. } => short.0.max(long.0),
+            LengthDist::Geometric { prompt_tokens, .. } => prompt_tokens,
+        }
+    }
+
+    /// Largest decode length the distribution can emit.
+    pub fn max_steps(&self) -> usize {
+        match *self {
+            LengthDist::Fixed { steps, .. } => steps,
+            LengthDist::Uniform { steps, .. } => steps.1,
+            LengthDist::Bimodal { short, long, .. } => short.1.max(long.1),
+            LengthDist::Geometric { max_steps, .. } => max_steps,
+        }
+    }
+}
+
+/// Uniform draw over an inclusive `[min, max]` range (degenerate ranges
+/// still consume one draw, keeping the draw count shape-independent).
+fn sample_inclusive(rng: &mut Rng, (lo, hi): (usize, usize)) -> usize {
+    assert!(lo <= hi, "inclusive range must be ordered: [{lo}, {hi}]");
+    lo + rng.below((hi - lo + 1) as u64) as usize
+}
+
+/// `1 + Geom(p)` with `p = 1/mean`, truncated to `max` (inversion of one
+/// uniform draw; mean ≤ 1 degenerates to constant 1, still one draw).
+fn sample_truncated_geometric(rng: &mut Rng, mean: usize, max: usize) -> usize {
+    assert!(max >= 1, "truncation bound must allow one step");
+    let u = rng.f64();
+    if mean <= 1 {
+        return 1.min(max);
+    }
+    let p = 1.0 / mean as f64;
+    // (1-u) in (0, 1]: ln is finite; u = 0 maps to exactly 1 step.
+    let k = ((1.0 - u).ln() / (1.0 - p).ln()).floor();
+    (1 + k as usize).min(max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_never_touches_the_rng() {
+        let dist = LengthDist::fixed(64, 8);
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..16 {
+            assert_eq!(dist.sample(&mut a), (64, 8));
+        }
+        // a saw zero draws: its stream still matches a fresh twin.
+        for _ in 0..8 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_respects_inclusive_bounds() {
+        let dist = LengthDist::Uniform {
+            prompt: (16, 64),
+            steps: (2, 9),
+        };
+        let mut rng = Rng::new(7);
+        let (mut saw_plo, mut saw_phi) = (false, false);
+        for _ in 0..2000 {
+            let (p, s) = dist.sample(&mut rng);
+            assert!((16..=64).contains(&p), "prompt {p}");
+            assert!((2..=9).contains(&s), "steps {s}");
+            saw_plo |= p == 16;
+            saw_phi |= p == 64;
+        }
+        assert!(saw_plo && saw_phi, "inclusive endpoints must be reachable");
+    }
+
+    #[test]
+    fn bimodal_mixes_both_modes_at_the_requested_rate() {
+        let dist = LengthDist::Bimodal {
+            short: (32, 4),
+            long: (256, 24),
+            long_frac: 0.25,
+        };
+        let mut rng = Rng::new(11);
+        let mut longs = 0usize;
+        let n = 10_000;
+        for _ in 0..n {
+            match dist.sample(&mut rng) {
+                (256, 24) => longs += 1,
+                (32, 4) => {}
+                other => panic!("off-mode sample {other:?}"),
+            }
+        }
+        let frac = longs as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "long fraction {frac}");
+    }
+
+    #[test]
+    fn geometric_truncates_and_hits_its_mean() {
+        let dist = LengthDist::Geometric {
+            prompt_tokens: 64,
+            mean_steps: 8,
+            max_steps: 64,
+        };
+        let mut rng = Rng::new(3);
+        let n = 20_000;
+        let mut sum = 0usize;
+        for _ in 0..n {
+            let (p, s) = dist.sample(&mut rng);
+            assert_eq!(p, 64);
+            assert!((1..=64).contains(&s), "steps {s}");
+            sum += s;
+        }
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 8.0).abs() < 0.5, "mean steps {mean}");
+    }
+
+    #[test]
+    fn samples_are_seed_deterministic() {
+        for dist in [
+            LengthDist::Uniform {
+                prompt: (8, 128),
+                steps: (1, 16),
+            },
+            LengthDist::Bimodal {
+                short: (32, 4),
+                long: (256, 24),
+                long_frac: 0.3,
+            },
+            LengthDist::Geometric {
+                prompt_tokens: 48,
+                mean_steps: 6,
+                max_steps: 32,
+            },
+        ] {
+            let mut a = Rng::new(0xD15E);
+            let mut b = Rng::new(0xD15E);
+            let xs: Vec<_> = (0..64).map(|_| dist.sample(&mut a)).collect();
+            let ys: Vec<_> = (0..64).map(|_| dist.sample(&mut b)).collect();
+            assert_eq!(xs, ys, "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn labels_and_bounds_line_up() {
+        let bi = LengthDist::Bimodal {
+            short: (32, 4),
+            long: (256, 24),
+            long_frac: 0.25,
+        };
+        assert_eq!(bi.label(), "bimix25");
+        assert_eq!(bi.kind(), "bimodal");
+        assert_eq!(bi.max_prompt_tokens(), 256);
+        assert_eq!(bi.max_steps(), 24);
+        let fixed = LengthDist::fixed(64, 8);
+        assert_eq!(fixed.label(), "fixed");
+        assert!(fixed.is_fixed());
+        assert_eq!((fixed.max_prompt_tokens(), fixed.max_steps()), (64, 8));
+    }
+}

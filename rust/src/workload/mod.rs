@@ -1,9 +1,13 @@
 //! Workloads: the paper's two request patterns (§V-A) plus arrival-process
 //! and synthetic-corpus generators for the real serving path.
 
+pub mod lengths;
 pub mod requests;
 
-pub use requests::{poisson_arrivals, stream_requests, Request, RequestGen};
+pub use lengths::LengthDist;
+pub use requests::{
+    poisson_arrivals, stream_requests, stream_requests_mix, Request, RequestGen,
+};
 
 use crate::cluster::Cluster;
 use crate::util::rng::Rng;

@@ -2,7 +2,7 @@
 //! continuous-serving simulator (`serve::simqueue`).
 
 use crate::util::rng::Rng;
-use crate::workload::Pattern;
+use crate::workload::{LengthDist, Pattern};
 
 /// One inference request.
 #[derive(Debug, Clone, PartialEq)]
@@ -29,23 +29,31 @@ pub fn poisson_arrivals(seed: u64, lambda: f64, count: usize) -> Vec<f64> {
 }
 
 /// Deterministic request stream generator.
+///
+/// Request shapes come from a [`LengthDist`]: each request first samples
+/// its `(prompt_len, steps)` pair, then draws `prompt_len` tokens.
+/// [`LengthDist::Fixed`] samples without touching the RNG, so fixed-shape
+/// streams consume the exact draw sequence the pre-mix generator did —
+/// bit-identical requests (pinned in `rust/tests/workload_mix.rs`).
 #[derive(Debug)]
 pub struct RequestGen {
     rng: Rng,
     next_id: u64,
     vocab: usize,
-    prompt_len: usize,
-    steps: usize,
+    lengths: LengthDist,
 }
 
 impl RequestGen {
     pub fn new(seed: u64, vocab: usize, prompt_len: usize, steps: usize) -> Self {
+        Self::with_lengths(seed, vocab, LengthDist::fixed(prompt_len, steps))
+    }
+
+    pub fn with_lengths(seed: u64, vocab: usize, lengths: LengthDist) -> Self {
         RequestGen {
             rng: Rng::new(seed),
             next_id: 0,
             vocab,
-            prompt_len,
-            steps,
+            lengths,
         }
     }
 
@@ -63,22 +71,24 @@ impl RequestGen {
     fn make(&mut self, arrival: f64) -> Request {
         let id = self.next_id;
         self.next_id += 1;
-        let prompt = (0..self.prompt_len)
+        let (prompt_len, steps) = self.lengths.sample(&mut self.rng);
+        let prompt = (0..prompt_len)
             .map(|_| self.rng.below(self.vocab as u64) as i32)
             .collect();
         Request {
             id,
             arrival,
             prompt,
-            steps: self.steps,
+            steps,
         }
     }
 }
 
 /// Synthetic vocabulary for stream prompts. Prompt *content* only matters
 /// to the real PJRT serving path; the discrete-event simulator reads a
-/// request's arrival time and step count, and charges prefill from its
-/// own `CommonOptions::prompt_tokens` knob (see `serve::simqueue`).
+/// request's arrival time, `prompt.len()` and step count — per-request
+/// prefill FLOPs, activation volume and KV page registration all follow
+/// the request's own lengths (see `serve::simqueue`).
 const STREAM_VOCAB: usize = 32_000;
 
 /// A request stream for the continuous-serving simulator, drawn per the
@@ -94,7 +104,27 @@ pub fn stream_requests(
     prompt_len: usize,
     steps: usize,
 ) -> Vec<Request> {
-    let mut gen = RequestGen::new(seed, STREAM_VOCAB, prompt_len, steps);
+    stream_requests_mix(
+        pattern,
+        seed,
+        count,
+        lambda,
+        &LengthDist::fixed(prompt_len, steps),
+    )
+}
+
+/// [`stream_requests`] with per-request shapes drawn from `lengths`.
+/// `LengthDist::Fixed` reproduces [`stream_requests`] bit for bit (same
+/// RNG draw sequence); mixed distributions give every request its own
+/// `(prompt_len, steps)` while keeping the stream seed-deterministic.
+pub fn stream_requests_mix(
+    pattern: Pattern,
+    seed: u64,
+    count: usize,
+    lambda: f64,
+    lengths: &LengthDist,
+) -> Vec<Request> {
+    let mut gen = RequestGen::with_lengths(seed, STREAM_VOCAB, lengths.clone());
     match pattern {
         Pattern::Sporadic => gen.sporadic(count, lambda),
         Pattern::Bursty => gen.bursty(count),
@@ -144,5 +174,33 @@ mod tests {
         assert!(burst.iter().all(|r| r.arrival == 0.0 && r.steps == 4));
         // Deterministic given the seed.
         assert_eq!(spor, stream_requests(Pattern::Sporadic, 7, 6, 2.0, 16, 4));
+    }
+
+    #[test]
+    fn fixed_mix_reproduces_stream_requests_exactly() {
+        for pattern in [Pattern::Sporadic, Pattern::Bursty] {
+            let plain = stream_requests(pattern, 9, 8, 0.5, 64, 6);
+            let mixed =
+                stream_requests_mix(pattern, 9, 8, 0.5, &LengthDist::fixed(64, 6));
+            assert_eq!(plain, mixed, "{pattern:?}");
+        }
+    }
+
+    #[test]
+    fn mixed_streams_are_seed_deterministic_and_actually_ragged() {
+        let dist = LengthDist::Bimodal {
+            short: (32, 2),
+            long: (128, 12),
+            long_frac: 0.4,
+        };
+        let a = stream_requests_mix(Pattern::Sporadic, 13, 24, 1.0, &dist);
+        let b = stream_requests_mix(Pattern::Sporadic, 13, 24, 1.0, &dist);
+        assert_eq!(a, b);
+        assert!(
+            a.iter().any(|r| r.prompt.len() != a[0].prompt.len()),
+            "24 bimodal draws at 40% long must mix both modes"
+        );
+        assert!(a.iter().all(|r| r.prompt.len() == 32 || r.prompt.len() == 128));
+        assert!(a.iter().all(|r| r.steps == 2 || r.steps == 12));
     }
 }

@@ -136,17 +136,19 @@ fn scenario_matrix_pool_equals_sequential() {
     // axes — #Seg overrides (nested plan_with_segs on the pool), a
     // correlated multi-device dip, a joint bandwidth+memory script, a
     // continuous-stream arrival point, a device-churn blip (online
-    // re-plan + KV migration inside the cell) and a continuous-batching
-    // point (paged-KV accounting inside the cell), both patterns — must
-    // be bit-identical between the pooled evaluation and the sequential
-    // reference, cell for cell (request-level metric arrays, churn and
-    // paged-KV counters included), and the serialized lime-sweep-v6
-    // artifact must be byte-identical (the in-process proxy for CI's
+    // re-plan + KV migration inside the cell), a continuous-batching
+    // point (paged-KV accounting inside the cell) and a bimodal
+    // workload-mix point (ragged per-request lengths inside the cell),
+    // both patterns — must be bit-identical between the pooled
+    // evaluation and the sequential reference, cell for cell
+    // (request-level metric and length arrays, churn and paged-KV
+    // counters included), and the serialized lime-sweep-v7 artifact
+    // must be byte-identical (the in-process proxy for CI's
     // LIME_THREADS={1,4} sweep-determinism gate).
     use lime::adapt::{MemScenario, Script};
     use lime::experiments::{ArrivalSpec, BatchingSpec, ScenarioMatrix, SegChoice};
     use lime::util::bytes::gib;
-    use lime::workload::Pattern;
+    use lime::workload::{LengthDist, Pattern};
 
     let methods = all();
     let matrix = ScenarioMatrix::new(
@@ -184,7 +186,15 @@ fn scenario_matrix_pool_equals_sequential() {
         Script::none(),
         Script::device_down_up("blip-d1", 1, 1, 3),
     ])
-    .with_batching(vec![BatchingSpec::Fifo, BatchingSpec::Continuous { page_tokens: 16 }]);
+    .with_batching(vec![BatchingSpec::Fifo, BatchingSpec::Continuous { page_tokens: 16 }])
+    .with_workloads(vec![
+        LengthDist::fixed(64, 4),
+        LengthDist::Bimodal {
+            short: (32, 2),
+            long: (128, 8),
+            long_frac: 0.5,
+        },
+    ]);
     let pooled = matrix.eval();
     let sequential = matrix.eval_sequential();
     assert_eq!(pooled.len(), matrix.cell_count());
@@ -204,10 +214,15 @@ fn scenario_matrix_pool_equals_sequential() {
     assert!(pooled
         .iter()
         .any(|c| c.batching == "cont16" && c.kv_pages_allocated.unwrap_or(0) > 0));
+    // Mixed-workload cells really drew ragged lengths on both paths.
+    assert!(pooled.iter().any(|c| c
+        .requests
+        .as_ref()
+        .is_some_and(|r| r.prompt_len.contains(&32) && r.prompt_len.contains(&128))));
     assert_eq!(
         matrix.to_json(&pooled).to_string(),
         matrix.to_json(&sequential).to_string(),
-        "serialized v6 artifact must be byte-identical"
+        "serialized v7 artifact must be byte-identical"
     );
 }
 

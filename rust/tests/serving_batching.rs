@@ -4,7 +4,8 @@
 //! * **FIFO equivalence**: the continuous driver with `max_batch = 1` and
 //!   `prefill_ahead = 0` is bit-identical to the FIFO driver — per-request
 //!   metrics and every aggregate — property-tested over random streams of
-//!   both arrival patterns (the ISSUE's batch-size-1 acceptance pin).
+//!   both arrival patterns (the ISSUE's batch-size-1 acceptance pin), on
+//!   fixed-length and bimodal mixed-length streams alike.
 //! * **Queueing improvement**: under bursty arrivals with more requests
 //!   than batch slots, step-level continuous batching strictly lowers the
 //!   mean queueing delay vs FIFO (pinned on a concrete stream), and never
@@ -26,7 +27,7 @@ use lime::serve::{serve_interleaved, serve_interleaved_opts, BatchingOpts, KvPag
 use lime::sim::TraceMode;
 use lime::util::bytes::mbps;
 use lime::util::prop::{check, pair, usize_in, Config, PropResult};
-use lime::workload::{stream_requests, Pattern};
+use lime::workload::{stream_requests, stream_requests_mix, LengthDist, Pattern};
 
 fn setup() -> (Allocation, Cluster) {
     let spec = ModelSpec::llama2_13b();
@@ -100,6 +101,63 @@ fn prop_continuous_batch1_is_bit_identical_to_fifo() {
         }
         if cont.kv_pages_allocated != 0 || cont.kv_fragmentation != 0.0 {
             return Err("pageless continuous run reported page counters".to_string());
+        }
+        Ok(())
+    });
+    assert!(matches!(result, PropResult::Pass { .. }), "{result:?}");
+}
+
+#[test]
+fn prop_continuous_batch1_equals_fifo_on_mixed_length_streams() {
+    // The batch-size-1 pin must survive the workload-mix axis: with one
+    // slot there is still nothing to re-batch even when every request
+    // carries its own (prompt_len, steps), so the continuous driver must
+    // stay bit-identical to FIFO on ragged streams too.
+    let (alloc, cluster) = setup();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let opts = exec_off();
+    let dist = LengthDist::Bimodal {
+        short: (32, 2),
+        long: (128, 6),
+        long_frac: 0.5,
+    };
+    let gen = pair(usize_in(2, 8), usize_in(0, 1000));
+    let cfg = Config {
+        cases: 8,
+        seed: 0xBA7C_0003,
+        max_shrink_steps: 16,
+    };
+    let result = check(&cfg, &gen, |&(count, salt)| {
+        let pattern = if salt % 2 == 0 {
+            Pattern::Sporadic
+        } else {
+            Pattern::Bursty
+        };
+        let reqs = stream_requests_mix(pattern, salt as u64, count, 0.5, &dist);
+        let fifo = serve_interleaved(&alloc, &cluster, &bw, 1, &opts, &Script::none(), &reqs);
+        let cont = serve_interleaved_opts(
+            &alloc,
+            &cluster,
+            &bw,
+            1,
+            &opts,
+            &Script::none(),
+            &reqs,
+            &BatchingOpts::continuous(0),
+        );
+        if fifo.requests != cont.requests {
+            return Err(format!(
+                "per-request metrics diverged on a mixed stream: {:?} vs {:?}",
+                fifo.requests, cont.requests
+            ));
+        }
+        if fifo.step_times != cont.step_times
+            || fifo.makespan.to_bits() != cont.makespan.to_bits()
+        {
+            return Err("stream timings diverged on a mixed stream".to_string());
+        }
+        if fifo.tokens_generated != reqs.iter().map(|r| r.steps).sum::<usize>() {
+            return Err("tokens_generated must sum per-request steps".to_string());
         }
         Ok(())
     });

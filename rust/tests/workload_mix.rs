@@ -1,0 +1,522 @@
+//! Differential/property layer pinning the mixed-length workload axis
+//! (see `docs/SERVING.md` and `docs/SWEEPS.md`):
+//!
+//! * **Fixed ≡ pre-mix**: `LengthDist::Fixed` streams are bit-identical
+//!   to the global-knob path end-to-end — the generator reproduces
+//!   `stream_requests` exactly, and serving a `Fixed(P, S)` stream under
+//!   the default `ExecOptions` equals serving it with `prompt_tokens = P`
+//!   as the global knob, on the FIFO *and* the continuous driver (the
+//!   per-request install path replays the pre-mix arithmetic bit for
+//!   bit). A matrix without `with_workloads` serializes byte-identically
+//!   to one carrying the explicit singleton `Fixed` axis, and the v7
+//!   artifact downgrades to v6 by schema relabel alone.
+//! * **Determinism**: mixed-length matrices are bit-identical between
+//!   the pooled and sequential evaluations and across re-runs — this
+//!   suite rides CI's LIME_THREADS={1,4} matrix, so nothing here may
+//!   depend on worker count.
+//! * **Batching under a mix**: on a bursty bimodal stream, step-level
+//!   continuous batching strictly improves the mean queueing delay over
+//!   FIFO (short requests free slots early; FIFO holds them hostage to
+//!   the batch's longest request).
+//! * **Per-request lengths honored**: heterogeneous step counts produce
+//!   per-request finish times and per-request TBT denominators; the
+//!   paged KV allocator conserves pages under fuzzed variable-length
+//!   register/append/release churn with mid-stream eviction.
+
+use lime::adapt::Script;
+use lime::cluster::Cluster;
+use lime::experiments::{validate_sweep, validate_sweep_v7, ArrivalSpec, ScenarioMatrix};
+use lime::model::ModelSpec;
+use lime::net::BandwidthTrace;
+use lime::pipeline::{run_interleaved, ExecOptions};
+use lime::plan::{plan, Allocation, PlanOptions};
+use lime::serve::{serve_interleaved, serve_interleaved_opts, BatchingOpts, KvPagePool, KvPageSpec};
+use lime::sim::TraceMode;
+use lime::util::bytes::mbps;
+use lime::util::json::Json;
+use lime::util::prop::{check, pair, usize_in, Config, PropResult};
+use lime::util::rng::Rng;
+use lime::workload::{stream_requests, stream_requests_mix, LengthDist, Pattern, Request};
+
+fn setup() -> (Allocation, Cluster) {
+    let spec = ModelSpec::llama2_13b();
+    let cluster = Cluster::env_e1();
+    let opts = PlanOptions {
+        empirical_tokens: 128,
+        micro_batch: 1,
+        bandwidth: mbps(200.0),
+    };
+    (plan(&spec, &cluster, &opts).unwrap().allocation, cluster)
+}
+
+fn exec_off() -> ExecOptions {
+    ExecOptions {
+        trace_mode: TraceMode::Off,
+        ..ExecOptions::default()
+    }
+}
+
+/// Bitwise stream-result comparison (shared by the differential props).
+fn diff_streams(a: &lime::serve::StreamResult, b: &lime::serve::StreamResult) -> Result<(), String> {
+    if a.requests != b.requests {
+        return Err(format!(
+            "per-request metrics diverged: {:?} vs {:?}",
+            a.requests, b.requests
+        ));
+    }
+    if a.batches != b.batches {
+        return Err(format!("batches {} vs {}", a.batches, b.batches));
+    }
+    if a.tokens_generated != b.tokens_generated {
+        return Err("tokens_generated diverged".into());
+    }
+    for (name, x, y) in [
+        ("makespan", a.makespan, b.makespan),
+        ("decode_time", a.decode_time, b.decode_time),
+    ] {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{name} diverged: {x} vs {y}"));
+        }
+    }
+    if a.step_times != b.step_times {
+        return Err("step_times diverged".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_fixed_dist_serving_is_bit_identical_to_the_global_knob_path() {
+    // Knob-independence half of the backward-compatibility pin: a
+    // `Fixed(P, S)` stream served under the *default* options (global
+    // knob still 64) is bit-identical to the same stream served with
+    // `prompt_tokens = P` — once per-request lengths are installed, the
+    // knob is inert, on both drivers. The companion test below anchors
+    // the installed path to `run_interleaved` (no slot lengths at all),
+    // which together make serving `Fixed(P, S)` ≡ the pre-mix
+    // global-knob arithmetic at P.
+    let (alloc, cluster) = setup();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let prompts = [16usize, 32, 64, 96];
+    let gen = pair(pair(usize_in(1, 6), usize_in(0, 3)), pair(usize_in(1, 5), usize_in(0, 500)));
+    let cfg = Config {
+        cases: 12,
+        seed: 0x3117_0001,
+        max_shrink_steps: 16,
+    };
+    let result = check(&cfg, &gen, |&((count, pi), (steps, salt))| {
+        let p = prompts[pi];
+        let pattern = if salt % 2 == 0 {
+            Pattern::Sporadic
+        } else {
+            Pattern::Bursty
+        };
+        let dist = LengthDist::fixed(p, steps);
+        let reqs = stream_requests_mix(pattern, salt as u64, count, 0.5, &dist);
+        // Generator identity: Fixed draws nothing from the RNG, so the
+        // mix generator IS the pre-mix generator.
+        if reqs != stream_requests(pattern, salt as u64, count, 0.5, p, steps) {
+            return Err(format!("generator diverged for P={p} S={steps}"));
+        }
+        let knob_default = exec_off(); // prompt_tokens = 64, whatever P is
+        let knob_p = ExecOptions {
+            prompt_tokens: p,
+            ..exec_off()
+        };
+        for max_batch in [1usize, 2] {
+            let a = serve_interleaved(&alloc, &cluster, &bw, max_batch, &knob_default, &Script::none(), &reqs);
+            let b = serve_interleaved(&alloc, &cluster, &bw, max_batch, &knob_p, &Script::none(), &reqs);
+            diff_streams(&a, &b).map_err(|e| format!("fifo mb={max_batch} P={p}: {e}"))?;
+            let ca = serve_interleaved_opts(
+                &alloc,
+                &cluster,
+                &bw,
+                max_batch,
+                &knob_default,
+                &Script::none(),
+                &reqs,
+                &BatchingOpts::continuous(1),
+            );
+            let cb = serve_interleaved_opts(
+                &alloc,
+                &cluster,
+                &bw,
+                max_batch,
+                &knob_p,
+                &Script::none(),
+                &reqs,
+                &BatchingOpts::continuous(1),
+            );
+            diff_streams(&ca, &cb).map_err(|e| format!("cont mb={max_batch} P={p}: {e}"))?;
+        }
+        Ok(())
+    });
+    assert!(matches!(result, PropResult::Pass { .. }), "{result:?}");
+}
+
+#[test]
+fn prop_fixed_dist_single_batch_matches_run_interleaved_at_that_prompt() {
+    // The anchor half of the backward-compatibility pin: serving a
+    // bursty `Fixed(P, S)` burst under the *default* knob reproduces
+    // `run_interleaved` with `prompt_tokens = P` — the executor with no
+    // slot lengths installed at all, i.e. the literal pre-mix
+    // global-knob arithmetic, for every P (not just the default 64 that
+    // `serving_stream.rs` pins).
+    let (alloc, cluster) = setup();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let prompts = [16usize, 32, 64, 96];
+    let gen = pair(pair(usize_in(1, 4), usize_in(0, 3)), usize_in(1, 8));
+    let cfg = Config {
+        cases: 12,
+        seed: 0x3117_0002,
+        max_shrink_steps: 16,
+    };
+    let result = check(&cfg, &gen, |&((micro, pi), steps)| {
+        let p = prompts[pi];
+        // A bursty stream admits as one batch of width `micro` at t = 0 —
+        // exactly the shape `run_interleaved(micro, steps)` computes.
+        let reqs =
+            stream_requests_mix(Pattern::Bursty, 0xE0, micro, 1.0, &LengthDist::fixed(p, steps));
+        let sr = serve_interleaved(&alloc, &cluster, &bw, micro, &exec_off(), &Script::none(), &reqs);
+        let knob = ExecOptions {
+            prompt_tokens: p,
+            ..exec_off()
+        };
+        let direct = run_interleaved(&alloc, &cluster, &bw, micro, steps, &knob);
+        if sr.step_times != direct.step_times {
+            return Err(format!(
+                "P={p} micro={micro} steps={steps}: stream {:?} != direct {:?}",
+                sr.step_times, direct.step_times
+            ));
+        }
+        if sr.kv_tokens_transferred != direct.kv_tokens_transferred
+            || sr.online_plans_fired != direct.online_plans_fired
+            || sr.emergency_steps != direct.emergency_steps
+            || sr.bw_stalls != direct.bw_stalls
+        {
+            return Err(format!("P={p} micro={micro} steps={steps}: counters diverged"));
+        }
+        Ok(())
+    });
+    assert!(matches!(result, PropResult::Pass { .. }), "{result:?}");
+}
+
+#[test]
+fn empty_prompts_fall_back_to_the_global_knob() {
+    // `serve::fleet` streams zero-token prompts (memory-flat at 10^6
+    // requests) and relies on `prompt_tokens` for prefill; pin that an
+    // empty-prompt stream is bit-identical to the same stream with
+    // materialized knob-length prompts, on both drivers — i.e. the
+    // per-request install path treats an empty prompt as "use the knob"
+    // for prefill, KV growth and page registration alike.
+    let (alloc, cluster) = setup();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let opts = exec_off(); // prompt_tokens = 64
+    for pattern in [Pattern::Sporadic, Pattern::Bursty] {
+        let full = stream_requests(pattern, 0xF1EE7, 6, 1.0, 64, 4);
+        let mut empty = full.clone();
+        for r in &mut empty {
+            r.prompt.clear();
+        }
+        for max_batch in [1usize, 3] {
+            let a =
+                serve_interleaved(&alloc, &cluster, &bw, max_batch, &opts, &Script::none(), &full);
+            let b =
+                serve_interleaved(&alloc, &cluster, &bw, max_batch, &opts, &Script::none(), &empty);
+            diff_streams(&a, &b).unwrap_or_else(|e| panic!("fifo {pattern:?} mb={max_batch}: {e}"));
+            let ca = serve_interleaved_opts(
+                &alloc,
+                &cluster,
+                &bw,
+                max_batch,
+                &opts,
+                &Script::none(),
+                &full,
+                &BatchingOpts::continuous(1),
+            );
+            let cb = serve_interleaved_opts(
+                &alloc,
+                &cluster,
+                &bw,
+                max_batch,
+                &opts,
+                &Script::none(),
+                &empty,
+                &BatchingOpts::continuous(1),
+            );
+            diff_streams(&ca, &cb)
+                .unwrap_or_else(|e| panic!("cont {pattern:?} mb={max_batch}: {e}"));
+        }
+    }
+}
+
+/// A small stream-bearing matrix over the env-E1 cluster; `workloads`
+/// empty = the constructor's implicit fixed axis.
+fn small_matrix<'a>(
+    methods: &'a [Box<dyn lime::baselines::Method>],
+    workloads: Vec<LengthDist>,
+) -> ScenarioMatrix<'a> {
+    let m = ScenarioMatrix::new(
+        "mix-test",
+        ModelSpec::llama2_13b(),
+        Cluster::env_e1(),
+        methods,
+        vec![100.0, 200.0],
+        vec![Pattern::Sporadic, Pattern::Bursty],
+        3,
+    )
+    .with_arrivals(vec![
+        ArrivalSpec::Single,
+        ArrivalSpec::Stream {
+            count: 4,
+            lambda: 1.0,
+        },
+    ]);
+    if workloads.is_empty() {
+        m
+    } else {
+        m.with_workloads(workloads)
+    }
+}
+
+#[test]
+fn fixed_workload_matrix_matches_the_default_and_downgrades_to_v6() {
+    // Axis-level Fixed pin: a matrix that never calls `with_workloads`
+    // and one carrying the explicit singleton `Fixed(64, tokens)` axis
+    // must serialize byte-identically (the constructor's default IS that
+    // singleton), and the v7 artifact must downgrade to v6 by schema
+    // relabel alone — v7 is a strict superset.
+    let methods = lime::baselines::all();
+    let implicit = small_matrix(&methods, vec![]);
+    let explicit = small_matrix(&methods, vec![LengthDist::fixed(64, 3)]);
+    let a = implicit.eval_sequential();
+    let b = explicit.eval_sequential();
+    assert_eq!(a.len(), b.len());
+    let ja = implicit.to_json(&a).to_string();
+    let jb = explicit.to_json(&b).to_string();
+    assert_eq!(ja, jb, "explicit singleton Fixed axis must change nothing");
+
+    let parsed = Json::parse(&ja).unwrap();
+    let summary = validate_sweep_v7(&parsed).expect("v7 artifact validates");
+    assert_eq!(summary.schema, "lime-sweep-v7");
+    assert_eq!(summary.cells, implicit.cell_count());
+
+    // Strict-superset downgrade: relabel the schema tag, nothing else.
+    let relabelled = ja.replacen("lime-sweep-v7", "lime-sweep-v6", 1);
+    assert_ne!(relabelled, ja);
+    let v6 = validate_sweep(&Json::parse(&relabelled).unwrap())
+        .expect("relabelled v6 artifact validates");
+    assert_eq!(v6.schema, "lime-sweep-v6");
+}
+
+#[test]
+fn mixed_length_matrix_is_deterministic_across_worker_counts_and_reruns() {
+    // Satellite 1b: a genuinely ragged matrix must be bit-identical
+    // between the pooled and the sequential evaluation and across
+    // re-runs. CI runs this binary under LIME_THREADS=1 and =4 and
+    // byte-diffs full sweep artifacts on top, so the pooled side really
+    // executes at both worker counts.
+    let methods = lime::baselines::all();
+    let m = small_matrix(
+        &methods,
+        vec![
+            LengthDist::fixed(64, 3),
+            LengthDist::Bimodal {
+                short: (32, 2),
+                long: (128, 8),
+                long_frac: 0.5,
+            },
+        ],
+    );
+    let pooled = m.eval();
+    let sequential = m.eval_sequential();
+    assert_eq!(pooled.len(), m.cell_count());
+    assert_eq!(pooled.len(), sequential.len());
+    for (p, s) in pooled.iter().zip(&sequential) {
+        assert_eq!(p, s, "mixed-length cell diverged between pool and sequential");
+    }
+    let ja = m.to_json(&pooled).to_string();
+    assert_eq!(ja, m.to_json(&sequential).to_string());
+    // Seed-reproducible: evaluating again replays the identical stream.
+    assert_eq!(ja, m.to_json(&m.eval()).to_string());
+    // The mix really happened: some completed cell carries a ragged
+    // prompt_len array on-mode with the bimodal distribution.
+    assert!(
+        pooled.iter().any(|c| c.requests.as_ref().is_some_and(|r| {
+            r.prompt_len.contains(&32) && r.prompt_len.contains(&128)
+        })),
+        "no ragged stream cell evaluated"
+    );
+    validate_sweep_v7(&Json::parse(&ja).unwrap()).expect("mixed v7 artifact validates");
+}
+
+#[test]
+fn bimodal_bursty_continuous_strictly_improves_mean_queueing() {
+    // Satellite 1c. Six simultaneous bimodal requests, two batch slots:
+    // FIFO holds each epoch open for its longest member (8 steps even
+    // when the twin finished after 2), so later requests wait whole
+    // epochs; continuous releases the short slot at its own finish and
+    // back-fills between decode steps.
+    let (alloc, cluster) = setup();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let opts = exec_off();
+    let dist = LengthDist::Bimodal {
+        short: (32, 2),
+        long: (128, 8),
+        long_frac: 0.5,
+    };
+    let reqs = stream_requests_mix(Pattern::Bursty, 0, 6, 0.5, &dist);
+    // The seed-0 draw mixes both modes with a short+long first batch.
+    assert!(reqs.iter().any(|r| r.steps == 2) && reqs.iter().any(|r| r.steps == 8));
+    let fifo = serve_interleaved(&alloc, &cluster, &bw, 2, &opts, &Script::none(), &reqs);
+    let cont = serve_interleaved_opts(
+        &alloc,
+        &cluster,
+        &bw,
+        2,
+        &opts,
+        &Script::none(),
+        &reqs,
+        &BatchingOpts::continuous(1),
+    );
+    assert_eq!(cont.requests.len(), 6);
+    let want_tokens: usize = reqs.iter().map(|r| r.steps).sum();
+    assert_eq!(fifo.tokens_generated, want_tokens);
+    assert_eq!(cont.tokens_generated, want_tokens);
+    assert!(fifo.mean_queueing_delay() > 0.0, "FIFO must actually queue here");
+    assert!(
+        cont.mean_queueing_delay() < fifo.mean_queueing_delay(),
+        "continuous {} must strictly beat FIFO {} on the bimodal burst",
+        cont.mean_queueing_delay(),
+        fifo.mean_queueing_delay()
+    );
+}
+
+#[test]
+fn heterogeneous_steps_finish_independently_and_tbt_uses_own_step_count() {
+    // The satellite-2 regression: `Request::steps` is honored per
+    // request, not flattened to the batch maximum. Two simultaneous
+    // requests share one FIFO batch; the 2-step member must finish
+    // strictly before the 8-step member, and each TBT must average over
+    // the request's *own* step count.
+    let (alloc, cluster) = setup();
+    let bw = BandwidthTrace::fixed_mbps(200.0);
+    let opts = exec_off();
+    let mk = |id: u64, steps: usize| Request {
+        id,
+        arrival: 0.0,
+        prompt: vec![7; 64],
+        steps,
+    };
+    let reqs = vec![mk(0, 8), mk(1, 2)];
+    let r = serve_interleaved(&alloc, &cluster, &bw, 2, &opts, &Script::none(), &reqs);
+    assert_eq!(r.requests.len(), 2);
+    assert_eq!(r.tokens_generated, 10, "Σ per-request steps, not 2 × max");
+    let long = r.requests.iter().find(|m| m.id == 0).unwrap();
+    let short = r.requests.iter().find(|m| m.id == 1).unwrap();
+    // Shared admission: same batch, same prefill, same first token.
+    assert_eq!(long.admitted_at.to_bits(), short.admitted_at.to_bits());
+    assert_eq!(long.ttft.to_bits(), short.ttft.to_bits());
+    // Independent completion: the short request's last token lands at
+    // decode step 2, strictly before the long one's step 8.
+    assert!(
+        short.finish < long.finish,
+        "2-step request must finish before its 8-step batchmate: {} vs {}",
+        short.finish,
+        long.finish
+    );
+    assert_eq!(long.finish, r.makespan);
+    // TBT denominators are per-request: each mean × its own step count
+    // recovers that request's decode span, and the short span is a
+    // strict prefix of the long one.
+    let span_short = short.tbt * 2.0;
+    let span_long = long.tbt * 8.0;
+    assert!(span_short > 0.0 && span_long > span_short);
+    assert!(((short.finish - span_short) - (long.finish - span_long)).abs() < 1e-9);
+}
+
+#[test]
+fn prop_paged_pool_conserves_pages_under_mixed_length_churn() {
+    // Satellite 1d: fuzzed register/append/release churn with
+    // variable-length contexts against a budget small enough to force
+    // mid-stream eviction (spills). After every operation the page
+    // accounting must balance — no leak, no double-booked page — and
+    // draining the stream must return the pool to empty.
+    let gen = pair(pair(usize_in(2, 6), usize_in(48, 256)), usize_in(0, 10_000));
+    let cfg = Config {
+        cases: 24,
+        seed: 0x9A6E_0001,
+        max_shrink_steps: 16,
+    };
+    let result = check(&cfg, &gen, |&((page_tokens, budget_tokens), salt)| {
+        let spec = KvPageSpec::new(page_tokens, budget_tokens);
+        let total = spec.total_pages();
+        let mut pool = KvPagePool::new(spec);
+        let mut rng = Rng::new(salt as u64);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        let mut drained_tokens = 0usize;
+        let balance = |pool: &KvPagePool, what: &str| -> Result<(), String> {
+            if pool.pages_in_use() + pool.free_pages() != total {
+                return Err(format!(
+                    "{what}: {} in use + {} free != {total} total",
+                    pool.pages_in_use(),
+                    pool.free_pages()
+                ));
+            }
+            let f = pool.fragmentation();
+            if !(0.0..=1.0).contains(&f) {
+                return Err(format!("{what}: fragmentation {f} out of [0,1]"));
+            }
+            Ok(())
+        };
+        for _ in 0..120 {
+            match rng.below(4) {
+                // Admit a variable-length context (ragged prompts).
+                0 | 1 => {
+                    let tokens = 1 + rng.below(96) as usize;
+                    pool.register(next_id, tokens);
+                    live.push(next_id);
+                    next_id += 1;
+                    balance(&pool, "register")?;
+                }
+                // Grow a random live context by one decode token.
+                2 if !live.is_empty() => {
+                    let id = live[rng.below(live.len() as u64) as usize];
+                    pool.append_token(id);
+                    balance(&pool, "append")?;
+                }
+                // Mid-stream eviction of a random live context.
+                3 if !live.is_empty() => {
+                    let id = live.swap_remove(rng.below(live.len() as u64) as usize);
+                    pool.release(id);
+                    balance(&pool, "release")?;
+                }
+                _ => {}
+            }
+            drained_tokens += pool.take_spilled_tokens();
+        }
+        // Spill accounting: every spilled page moved at most one page of
+        // tokens, and the drain saw every one of them.
+        drained_tokens += pool.take_spilled_tokens();
+        if drained_tokens > pool.pages_spilled() as usize * page_tokens {
+            return Err(format!(
+                "drained {drained_tokens} tokens from {} spilled pages of {page_tokens}",
+                pool.pages_spilled()
+            ));
+        }
+        // Drain the stream: releasing every live context must return the
+        // pool to exactly-empty — the no-leak half of the contract.
+        for id in live.drain(..) {
+            pool.release(id);
+        }
+        if pool.pages_in_use() != 0 || pool.free_pages() != total {
+            return Err(format!(
+                "leak: {} pages still in use, {} free of {total}",
+                pool.pages_in_use(),
+                pool.free_pages()
+            ));
+        }
+        Ok(())
+    });
+    assert!(matches!(result, PropResult::Pass { .. }), "{result:?}");
+}
