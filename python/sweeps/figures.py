@@ -35,11 +35,14 @@ renders those artifacts into the paper's figure layouts:
   baseline per column (the paper's headline numbers).
 
 ``lime fleet`` writes one ``FLEET_<name>.json`` (schema
-``lime-fleet-v1``): N heterogeneous clusters behind a global admission
+``lime-fleet-v1``, or ``lime-fleet-v2`` when sticky-session affinity
+routing is on): N heterogeneous clusters behind a global admission
 router, with streaming P²/reservoir tail-latency quantiles per
 (router, pattern) cell. :func:`fig_fleet_tail_latency` renders the
 p50/p95/p99 TTFT / queueing-delay table by router policy and arrival
-pattern, plus the per-cluster request share.
+pattern, plus the per-cluster request share;
+:func:`fig_fleet_affinity` adds the v2 view — per-cell affinity hits,
+hit rate, KV tokens saved by prefix reuse, and session spills.
 
 Everything is stdlib-only and renders Markdown tables; ``--plot`` adds
 PNGs when matplotlib is importable (it is optional on purpose — CI and
@@ -67,7 +70,8 @@ SCHEMAS = (
     "lime-sweep-v6",
     "lime-sweep-v7",
 )
-FLEET_SCHEMA = "lime-fleet-v1"
+FLEET_SCHEMAS = ("lime-fleet-v1", "lime-fleet-v2")
+FLEET_SCHEMA = FLEET_SCHEMAS[0]  # kept for callers pinned to the v1 tag
 
 
 @dataclass
@@ -191,7 +195,7 @@ def load_sweeps(directory: str) -> list[Grid]:
 
 @dataclass
 class Fleet:
-    """One parsed ``lime-fleet-v1`` artifact."""
+    """One parsed ``lime-fleet-v1``/``lime-fleet-v2`` artifact."""
 
     name: str
     model: str
@@ -201,19 +205,27 @@ class Fleet:
     routers: list[str]
     patterns: list[str]
     cells: list[dict[str, Any]]
+    schema: str = FLEET_SCHEMA
+    affinity: dict[str, Any] | None = None
     path: str = ""
 
 
 def load_fleet(path: str) -> Fleet:
     with open(path, encoding="utf-8") as f:
         doc = json.load(f)
-    if doc.get("schema") != FLEET_SCHEMA:
+    if doc.get("schema") not in FLEET_SCHEMAS:
         raise ValueError(
-            f"{path}: expected schema {FLEET_SCHEMA!r}, got {doc.get('schema')!r}"
+            f"{path}: expected schema in {FLEET_SCHEMAS!r}, got {doc.get('schema')!r}"
         )
     for key in ("name", "model", "count", "steps", "clusters", "routers", "patterns", "cells"):
         if key not in doc:
             raise ValueError(f"{path}: missing '{key}'")
+    # The singleton-downgrade rule: the affinity header and the v2 tag
+    # imply each other (the Rust validator enforces the same invariant).
+    if (doc["schema"] == "lime-fleet-v2") != ("affinity" in doc):
+        raise ValueError(
+            f"{path}: schema {doc['schema']!r} and affinity header presence disagree"
+        )
     return Fleet(
         name=doc["name"],
         model=doc["model"],
@@ -223,6 +235,8 @@ def load_fleet(path: str) -> Fleet:
         routers=doc["routers"],
         patterns=doc["patterns"],
         cells=doc["cells"],
+        schema=doc["schema"],
+        affinity=doc.get("affinity"),
         path=path,
     )
 
@@ -735,8 +749,58 @@ def fig_fleet_tail_latency(fleet: Fleet) -> str:
     return "\n\n".join(out)
 
 
+def fig_fleet_affinity(fleet: Fleet) -> str:
+    """The ``lime-fleet-v2`` view: what sticky-session routing bought per
+    (router × pattern) cell — affinity hits and hit rate (requests whose
+    session returned to its resident cluster with KV still warm), decode
+    tokens of prefill skipped via prefix reuse, and sessions spilled off
+    their resident cluster by the backlog threshold — headed by the
+    affinity knobs the artifact was generated with."""
+    aff = fleet.affinity
+    assert aff is not None, "fig_fleet_affinity needs a lime-fleet-v2 artifact"
+    out = [
+        f"## {fleet.name} — session affinity / KV reuse",
+        f"{aff['sessions']} sessions, Zipf s={aff['zipf_s']:g}, "
+        f"spill threshold {aff['spill_threshold_s']:g} s, "
+        f"{aff['page_tokens']}-token pages, "
+        f"budget {aff['budget_tokens']} tokens/cluster",
+    ]
+    rows = []
+    for cell in fleet.cells:
+        hits = cell["affinity_hits"]
+        rows.append(
+            [
+                cell["router"],
+                cell["pattern"],
+                str(cell["count"]),
+                str(hits),
+                f"{hits / cell['count'] * 100.0:.1f}%",
+                _fmt_counter(cell, "reuse_tokens_saved"),
+                _fmt_counter(cell, "spilled_sessions"),
+            ]
+        )
+    out.append(
+        _md_table(
+            [
+                "router",
+                "pattern",
+                "requests",
+                "affinity hits",
+                "hit rate",
+                "reuse tokens saved",
+                "spilled sessions",
+            ],
+            rows,
+        )
+    )
+    return "\n\n".join(out)
+
+
 def render_fleet(fleet: Fleet) -> str:
-    return fig_fleet_tail_latency(fleet)
+    parts = [fig_fleet_tail_latency(fleet)]
+    if fleet.affinity is not None:
+        parts.append(fig_fleet_affinity(fleet))
+    return "\n\n".join(parts)
 
 
 def render_grid(grid: Grid) -> str:

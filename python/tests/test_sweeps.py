@@ -738,6 +738,72 @@ def test_fleet_tail_latency_table_renders_quantiles(fleet_dir):
     assert any("| 4 | 0 |" in r for r in rows)
 
 
+def _affinity_doc():
+    """A minimal lime-fleet-v2 artifact: the v1 fixture shape plus the
+    affinity header and per-cell/per-shard reuse counters."""
+    cell = _fleet_cell("plan", "sporadic", 4, [("orin2", 3), ("edge2", 1)])
+    cell["affinity_hits"] = 2
+    cell["reuse_tokens_saved"] = 96
+    cell["spilled_sessions"] = 1
+    for shard, hits in zip(cell["per_cluster"], (2, 0)):
+        shard["affinity_hits"] = hits
+        shard["reuse_tokens_saved"] = 48 * hits
+    return {
+        "affinity": {
+            "budget_tokens": 4096,
+            "page_tokens": 16,
+            "sessions": 256,
+            "spill_threshold_s": 0.5,
+            "zipf_s": 1.1,
+        },
+        "cells": [cell],
+        "clusters": [
+            {"bw_mbps": 100.0, "devices": 2, "label": "orin2", "planned_ms_per_token": 83.0},
+            {"bw_mbps": 150.0, "devices": 2, "label": "edge2", "planned_ms_per_token": 61.5},
+        ],
+        "count": 4,
+        "lambda": 200.0,
+        "model": "Qwen3-32B",
+        "name": "fixture-fleet-affinity",
+        "patterns": ["sporadic"],
+        "routers": ["plan"],
+        "schema": "lime-fleet-v2",
+        "seed": 1,
+        "steps": 4,
+    }
+
+
+def test_load_fleet_accepts_v2_and_renders_the_affinity_view(tmp_path):
+    path = tmp_path / "FLEET_fixture-fleet-affinity.json"
+    path.write_text(json.dumps(_affinity_doc()))
+    f = figures.load_fleet(str(path))
+    assert f.schema == "lime-fleet-v2"
+    assert f.affinity["sessions"] == 256
+    text = figures.render_fleet(f)
+    assert "session affinity / KV reuse" in text
+    # Header knobs plus the counter row: 2/4 hits is a 50% hit rate.
+    assert "256 sessions" in text and "Zipf s=1.1" in text
+    assert "| 2 | 50.0% | 96 | 1 |" in text
+
+
+def test_load_fleet_enforces_the_downgrade_rule(tmp_path):
+    # v2 tag without the affinity header — and the v1 tag with it — must
+    # both be rejected, mirroring the Rust validator.
+    doc = _affinity_doc()
+    headerless = dict(doc)
+    del headerless["affinity"]
+    bad1 = tmp_path / "FLEET_headerless.json"
+    bad1.write_text(json.dumps(headerless))
+    with pytest.raises(ValueError, match="disagree"):
+        figures.load_fleet(str(bad1))
+    downgraded = dict(doc)
+    downgraded["schema"] = "lime-fleet-v1"
+    bad2 = tmp_path / "FLEET_downgraded.json"
+    bad2.write_text(json.dumps(downgraded))
+    with pytest.raises(ValueError, match="disagree"):
+        figures.load_fleet(str(bad2))
+
+
 def test_cli_renders_fleet_only_directory(fleet_dir, tmp_path, capsys):
     out = tmp_path / "figs"
     rc = figures.main([str(fleet_dir), "--out", str(out)])

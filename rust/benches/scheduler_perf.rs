@@ -13,7 +13,10 @@
 //! cells nest their `plan()` candidates back into it — against the same
 //! grid evaluated sequentially. The `fleet_stream_100k*` pair does the
 //! same for `serve::fleet`: a 10^5-request stream sharded one cluster per
-//! pool job versus the sequential reference it is byte-identical to. The
+//! pool job versus the sequential reference it is byte-identical to, and
+//! the `fleet_stream_1M_des`/`fleet_stream_1M_scan` pair isolates the
+//! admission router itself at 10^6 requests — the event-driven heap
+//! router against the legacy O(C) scan it is decision-identical to. The
 //! `serving_continuous_batching_*` pair compares the FIFO admission path
 //! against the step-level continuous driver (paged-KV accounting on) over
 //! one oversubscribed bursty stream; the `mixed_length_stream_*` pair
@@ -390,6 +393,47 @@ fn main() {
         b.row(
             "fleet stream speedup (sequential / pool)",
             &format!("{:.2}x", fleet_seq_s / fleet_pool_s),
+        );
+    }
+
+    // Headline router pair: one 10^6-request sporadic stream routed
+    // plan-aware across the four demo clusters — the event-driven
+    // heap-indexed router (O(log C) per decision) against the legacy
+    // O(C)-scan reference it is decision-identical to. Routing only: the
+    // stream is pre-generated once and both sides emit just the
+    // per-cluster u32 index lists, so memory stays flat at any scale.
+    let route_reqs = lime::workload::stream_requests(
+        lime::workload::Pattern::Sporadic,
+        lime::serve::fleet::FLEET_SEED,
+        1_000_000,
+        200.0,
+        64,
+        4,
+    );
+    let des_s = b
+        .time("fleet_stream_1M_des", 1, 5, || {
+            let parts = lime::serve::fleet::route(
+                lime::serve::RouterPolicy::PlanAware,
+                &route_reqs,
+                &fleet.clusters,
+            );
+            std::hint::black_box(parts[0].len());
+        })
+        .mean;
+    let scan_s = b
+        .time("fleet_stream_1M_scan", 1, 5, || {
+            let parts = lime::serve::fleet::route_scan(
+                lime::serve::RouterPolicy::PlanAware,
+                &route_reqs,
+                &fleet.clusters,
+            );
+            std::hint::black_box(parts[0].len());
+        })
+        .mean;
+    if des_s > 0.0 {
+        b.row(
+            "1M-request routing speedup (scan / DES)",
+            &format!("{:.2}x", scan_s / des_s),
         );
     }
 

@@ -449,6 +449,77 @@ impl Script {
         }
     }
 
+    /// MTBF-driven probabilistic churn: each of `devices` alternates
+    /// exponentially-distributed up-times (mean `1/rate` steps — `rate`
+    /// is faults per step) and down-times (mean a quarter of that, so
+    /// repair is faster than failure) from an independent seeded stream,
+    /// emitting Down/Up pairs until `horizon`. Per-device streams are
+    /// seeded as `seed ^ (device+1)·φ64`, so the timeline of one device
+    /// never depends on which others churn, and the whole schedule is
+    /// reproducible from `(seed, rate, devices, horizon)` alone. Events
+    /// come back sorted by `(at_step, device)` — the same channel shape
+    /// the executor and the fleet router consume.
+    ///
+    /// ```
+    /// use lime::adapt::{ChurnKind, Script};
+    /// let s = Script::churn_mtbf("mtbf", 9, 0.05, &[0, 1], 200);
+    /// let again = Script::churn_mtbf("mtbf", 9, 0.05, &[0, 1], 200);
+    /// assert_eq!(s, again);
+    /// assert!(s.churn.iter().any(|e| e.kind == ChurnKind::Down));
+    /// assert!(s.churn.windows(2).all(|w| (w[0].at_step, w[0].device)
+    ///     <= (w[1].at_step, w[1].device)));
+    /// ```
+    pub fn churn_mtbf(
+        label: &str,
+        seed: u64,
+        rate: f64,
+        devices: &[usize],
+        horizon: usize,
+    ) -> Self {
+        assert!(rate.is_finite() && rate > 0.0, "fault rate must be finite and > 0");
+        assert!(horizon > 0, "churn needs a positive horizon");
+        assert!(!devices.is_empty(), "mtbf churn needs devices");
+        let mut churn = Vec::new();
+        for &device in devices {
+            let mut rng = crate::util::rng::Rng::new(
+                seed ^ (device as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            let mut t = 0.0f64;
+            loop {
+                // Exponential up-time, then a shorter exponential outage.
+                t += rng.exponential(rate);
+                let down = t.ceil() as usize;
+                if down >= horizon {
+                    break;
+                }
+                let up_t = t + rng.exponential(rate * 4.0);
+                // An outage always spans at least one arrival/step.
+                let up = (up_t.ceil() as usize).max(down + 1);
+                churn.push(ChurnEvent {
+                    at_step: down,
+                    device,
+                    kind: ChurnKind::Down,
+                });
+                if up >= horizon {
+                    break;
+                }
+                churn.push(ChurnEvent {
+                    at_step: up,
+                    device,
+                    kind: ChurnKind::Up,
+                });
+                t = up as f64;
+            }
+        }
+        churn.sort_by_key(|e| (e.at_step, e.device));
+        Script {
+            label: label.into(),
+            mem: Vec::new(),
+            bw: Vec::new(),
+            churn,
+        }
+    }
+
     /// A bandwidth sag: the link runs at `scale × base` from `from_step`
     /// until `to_step`, then restores. The restore is an absolute
     /// `scale: 1.0` event — see [`Script::with_bandwidth_sag`] for the
@@ -781,6 +852,55 @@ mod tests {
             assert_eq!((downs, ups), (1, 1), "member {m}");
         }
         assert!(s.churn.windows(2).all(|w| w[0].at_step <= w[1].at_step));
+    }
+
+    #[test]
+    fn churn_mtbf_is_deterministic_and_well_formed() {
+        let a = Script::churn_mtbf("mtbf", 0xC0FFEE, 0.03, &[0, 2], 400);
+        let b = Script::churn_mtbf("mtbf", 0xC0FFEE, 0.03, &[0, 2], 400);
+        assert_eq!(a, b, "same inputs must reproduce the same schedule");
+        assert!(
+            a.churn.iter().any(|e| e.kind == ChurnKind::Down),
+            "mean up-time ~33 steps over a 400-step horizon must fault"
+        );
+        assert!(
+            a.churn.windows(2).all(|w| (w[0].at_step, w[0].device) <= (w[1].at_step, w[1].device)),
+            "channel must come back sorted by (step, device)"
+        );
+        assert!(a.churn.iter().all(|e| e.at_step < 400), "no event past the horizon");
+        // Per device, kinds strictly alternate starting with Down.
+        for &d in &[0usize, 2] {
+            let kinds: Vec<ChurnKind> = a
+                .churn
+                .iter()
+                .filter(|e| e.device == d)
+                .map(|e| e.kind)
+                .collect();
+            assert!(!kinds.is_empty(), "device {d} must churn at this rate");
+            for (i, k) in kinds.iter().enumerate() {
+                let want = if i % 2 == 0 { ChurnKind::Down } else { ChurnKind::Up };
+                assert_eq!(*k, want, "device {d} event {i}");
+            }
+        }
+        let different = Script::churn_mtbf("mtbf", 0xBEEF, 0.03, &[0, 2], 400);
+        assert_ne!(a.churn, different.churn, "the seed must matter");
+    }
+
+    #[test]
+    fn churn_mtbf_streams_are_independent_per_device() {
+        // Adding a device must not perturb the schedule of an existing
+        // one — streams are seeded per device index, not shared.
+        let solo = Script::churn_mtbf("m", 42, 0.05, &[7], 300);
+        let duo = Script::churn_mtbf("m", 42, 0.05, &[7, 9], 300);
+        let solo_d7: Vec<_> = solo.churn.iter().filter(|e| e.device == 7).collect();
+        let duo_d7: Vec<_> = duo.churn.iter().filter(|e| e.device == 7).collect();
+        assert_eq!(solo_d7, duo_d7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn churn_mtbf_rejects_a_degenerate_rate() {
+        Script::churn_mtbf("bad", 1, 0.0, &[0], 100);
     }
 
     #[test]

@@ -22,9 +22,13 @@
 //! cells, a workload-mix coordinate (fixed baseline vs bimodal
 //! short-chat / long-context lengths), paged-KV counters on
 //! continuous-batching cells and
-//! replans/KV-migration/recovery counters on churn cells. See
-//! `docs/ARCHITECTURE.md` for the module map and `docs/SWEEPS.md` for
-//! the artifact schemas.
+//! replans/KV-migration/recovery counters on churn cells. Fleet-scale
+//! admission lives next door in `serve::fleet`: the event-driven router
+//! on `sim::Engine` emits its own `lime-fleet-v1`/`v2` artifact family
+//! (v2 adds sticky-session affinity / KV-reuse counters), validated by
+//! the same `lime sweep-check` entry point as the sweep schemas here.
+//! See `docs/ARCHITECTURE.md` for the module map and `docs/SWEEPS.md`
+//! for the artifact schemas.
 
 pub mod scenario;
 

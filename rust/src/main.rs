@@ -53,14 +53,19 @@ fn usage() -> String {
                     request lengths, plus re-plan/KV-migration/recovery\n\
                     counters) with one lime-sweep-v7 JSON per grid\n\
        fleet        fleet-sharded request streams: N heterogeneous clusters\n\
-                    behind a global admission router (rr/jsq/plan), tail-\n\
-                    latency quantiles streamed as one lime-fleet-v1 JSON,\n\
-                    with optional cluster churn (down/up + re-routing)\n\
+                    behind a global event-driven admission router (rr/jsq/\n\
+                    plan), tail-latency quantiles streamed as one\n\
+                    lime-fleet-v1 JSON, with optional cluster churn\n\
+                    (down/up + re-routing); `--affinity` adds sticky-\n\
+                    session KV-reuse routing and upgrades the artifact\n\
+                    to lime-fleet-v2\n\
        sweep-check  validate sweep/fleet JSON artifacts against the\n\
-                    lime-sweep-v2..v7 and lime-fleet-v1 schemas\n\
+                    lime-sweep-v2..v7 and lime-fleet-v1/v2 schemas\n\
                     (non-zero exit on violation)\n\
        bench-check  diff a fresh BENCH_*.json against a committed baseline\n\
-                    with a tolerance band (non-zero exit on regression)\n\
+                    with a tolerance band (non-zero exit on regression);\n\
+                    `--max-unpinned N` also fails when more than N\n\
+                    baseline entries are unpinned (mean_s 0)\n\
      \n\
      Run `lime <subcommand> --help` for options."
         .to_string()
@@ -181,7 +186,11 @@ fn cmd_fleet(argv: &[String]) {
     )
     .opt("count", "2000", "requests per (router, pattern) cell")
     .opt("tokens", "4", "decode steps per request")
-    .opt("out", "sweeps", "output directory for the FLEET_*.json artifact");
+    .opt("out", "sweeps", "output directory for the FLEET_*.json artifact")
+    .flag(
+        "affinity",
+        "enable sticky-session KV-reuse routing (emits a lime-fleet-v2 artifact)",
+    );
     let args = parse(&cli, argv);
     let count = args.get_usize("count");
     let tokens = args.get_usize("tokens");
@@ -191,7 +200,13 @@ fn cmd_fleet(argv: &[String]) {
         eprintln!("fleet: --count and --tokens must be positive");
         std::process::exit(2);
     }
-    let spec = lime::serve::FleetSpec::demo(count, tokens);
+    // The affinity demo spec carries a distinct name, so the v2 artifact
+    // lands next to (never over) the plain v1 one in the same directory.
+    let spec = if args.get_flag("affinity") {
+        lime::serve::FleetSpec::demo_affinity(count, tokens)
+    } else {
+        lime::serve::FleetSpec::demo(count, tokens)
+    };
     let cells = lime::serve::run_fleet(&spec);
     let dir = args.get("out");
     if let Err(e) = std::fs::create_dir_all(dir) {
@@ -212,9 +227,10 @@ fn cmd_fleet(argv: &[String]) {
         std::process::exit(2);
     }
     println!(
-        "fleet: {} ({}) — {} clusters, {} cells x {} requests -> {path}",
+        "fleet: {} ({}, {}) — {} clusters, {} cells x {} requests -> {path}",
         spec.name,
         spec.model(),
+        lime::serve::fleet::schema_tag(&spec),
         spec.clusters.len(),
         cells.len(),
         spec.count
@@ -239,7 +255,7 @@ fn cmd_fleet(argv: &[String]) {
 fn cmd_sweep_check(argv: &[String]) {
     let cli = Cli::new(
         "lime sweep-check",
-        "validate sweep/fleet artifacts against the lime-sweep-v2..v7 and lime-fleet-v1 schemas",
+        "validate sweep/fleet artifacts against the lime-sweep-v2..v7 and lime-fleet-v1/v2 schemas",
     )
     .opt("dir", "sweeps", "directory holding SWEEP_*.json / FLEET_*.json artifacts")
     .opt("file", "", "validate a single artifact instead of a directory");
@@ -268,9 +284,10 @@ fn cmd_sweep_check(argv: &[String]) {
         // Dispatch on the artifact's own schema tag, not the file name, so
         // `--file` works on either family.
         let verdict = parsed.and_then(|json| {
-            if json.get("schema").and_then(lime::util::json::Json::as_str)
-                == Some("lime-fleet-v1")
-            {
+            if matches!(
+                json.get("schema").and_then(lime::util::json::Json::as_str),
+                Some("lime-fleet-v1" | "lime-fleet-v2")
+            ) {
                 lime::serve::validate_fleet(&json).map(|s| {
                     format!(
                         "fleet {} ({}, {}), {} clusters, {} cells x {} requests",
@@ -313,6 +330,11 @@ fn cmd_bench_check(argv: &[String]) {
         "committed lime-bench-v1 baseline",
     )
     .opt("tolerance", "2.0", "fail when current mean > tolerance x baseline mean")
+    .opt(
+        "max-unpinned",
+        "",
+        "fail when more than N baseline entries are unpinned (mean_s 0; empty = unlimited)",
+    )
     .opt(
         "emit-candidate",
         "",
@@ -377,6 +399,23 @@ fn cmd_bench_check(argv: &[String]) {
                     report.unpinned,
                     if report.unpinned == 1 { "y" } else { "ies" }
                 );
+            }
+            // --max-unpinned turns the warning above into a ratchet: once a
+            // baseline is (mostly) pinned, CI can stop it from silently
+            // drifting back to an all-zero, gate-nothing state.
+            let max_unpinned = args.get("max-unpinned");
+            if !max_unpinned.is_empty() {
+                let cap: usize = max_unpinned.parse().unwrap_or_else(|_| {
+                    eprintln!("bench-check: --max-unpinned expects an integer, got '{max_unpinned}'");
+                    std::process::exit(2);
+                });
+                if report.unpinned > cap {
+                    eprintln!(
+                        "bench-check: {} unpinned baseline entries exceed --max-unpinned {cap}",
+                        report.unpinned
+                    );
+                    std::process::exit(1);
+                }
             }
             if report.failures.is_empty() {
                 println!("bench-check: OK");

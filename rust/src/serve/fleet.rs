@@ -13,13 +13,30 @@
 //!   round-robin, join-shortest-queue on estimated backlog, or plan-aware
 //!   (route to the cluster whose *planned* ms/token finishes the request
 //!   earliest);
-//! * routing is a cheap sequential pass in global arrival order (the
-//!   router is a front door, not a simulator — it sees only arrival
-//!   times and the offline plans); the expensive per-cluster stream
-//!   simulations then fan out **one cluster per job** on the
-//!   work-stealing pool and merge by index, so a 10^6-request fleet
-//!   stream is embarrassingly parallel yet bit-identical to the
-//!   sequential reference at any worker count;
+//! * routing runs as an **event-driven simulation** on the binary-heap
+//!   DES core ([`crate::sim::Engine`]): the arrival cursor advances the
+//!   calendar, per-cluster completion-feedback events retire estimates
+//!   mid-stream, and the per-cluster state lives in version-stamped lazy
+//!   min-heaps keyed by estimated free time — O(log C) per decision
+//!   instead of the legacy O(C) scan ([`route_scan`], kept as the
+//!   reference), with **identical decisions** when affinity is off
+//!   (property-pinned in `rust/tests/fleet_des.rs`). The calendar holds
+//!   at most one arrival plus C feedback events, so routing a
+//!   10^6-request stream stays memory-flat;
+//! * an optional **affinity router** ([`AffinitySpec`]) adds sticky
+//!   sessions on top of the base policy: requests carry Zipf-distributed
+//!   `session_id`s, a session returns to its resident cluster while the
+//!   estimated-backlog penalty stays under a spill threshold, and a hit
+//!   skips re-prefill for whatever prompt prefix is still resident in
+//!   that cluster's [`KvPagePool`] (modeled as a shorter effective
+//!   prompt: prefill FLOPs, activation volume and page registration are
+//!   all charged from the non-cached suffix only — at least one token is
+//!   always recomputed). Hits/reuse/spill counters flow through
+//!   `StreamResult` into the `lime-fleet-v2` artifact;
+//! * the expensive per-cluster stream simulations then fan out **one
+//!   cluster per job** on the work-stealing pool and merge by index, so
+//!   a 10^6-request fleet stream is embarrassingly parallel yet
+//!   bit-identical to the sequential reference at any worker count;
 //! * per-cluster shards fold requests into O(1) state as they finish —
 //!   running sums, [`P2Quantile`] markers and a capped [`Reservoir`] per
 //!   metric — never a per-request vector, so memory stays flat however
@@ -30,10 +47,14 @@
 //!   `lime-fleet-v1` artifacts byte-identical to runs predating the
 //!   continuous-batching axis — see `docs/SERVING.md` for the policy
 //!   semantics;
-//! * results serialize as schema `lime-fleet-v1` through the incremental
-//!   [`StreamWriter`] (bytes identical to `Json::Display`, pinned in
-//!   `util::json`); [`validate_fleet`] is the strict machine check behind
-//!   `lime sweep-check` and the CI artifact gate.
+//! * results serialize as schema `lime-fleet-v1` — or `lime-fleet-v2`, a
+//!   strict superset adding an `affinity` header plus per-cell/per-shard
+//!   reuse counters, if and only if the spec enables affinity (the
+//!   singleton-downgrade rule: an affinity-free run *must* serialize as
+//!   plain v1, byte-identical to earlier releases) — through the
+//!   incremental [`StreamWriter`] (bytes identical to `Json::Display`,
+//!   pinned in `util::json`); [`validate_fleet`] is the strict machine
+//!   check behind `lime sweep-check` and the CI artifact gate.
 //!
 //! Determinism: request streams, routing, P² updates and reservoir
 //! replacement are all seeded and sequential *within* a shard, and shards
@@ -50,13 +71,17 @@ use crate::pipeline::core::CommonOptions;
 use crate::pipeline::{ExecOptions, InterleavedPolicy};
 use crate::plan::allocation::Allocation;
 use crate::plan::{plan, PlanOptions};
+use crate::serve::kvpages::{KvPagePool, KvPageSpec};
 use crate::serve::simqueue::{simulate_stream_sink, RequestMetrics, StreamSink};
+use crate::sim::engine::Engine as DesEngine;
 use crate::sim::TraceMode;
 use crate::util::json::{obj, Json, StreamWriter};
 use crate::util::pool::Pool;
 use crate::util::stats::{weighted_percentile, P2Quantile, Reservoir};
 use crate::workload::requests::Request;
-use crate::workload::{stream_requests, Pattern};
+use crate::workload::{assign_sessions, stream_requests, Pattern};
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeSet, BinaryHeap, HashMap};
 
 /// Prompt tokens charged per admitted batch (requests themselves are
 /// generated with empty prompts so million-request streams stay flat).
@@ -147,6 +172,46 @@ pub fn pattern_key(p: Pattern) -> &'static str {
     }
 }
 
+/// Session-affinity routing knobs. `Some` on a [`FleetSpec`] turns the
+/// base policy into a sticky-session router: requests gain
+/// Zipf-distributed `session_id`s, a session returns to its resident
+/// cluster while the backlog penalty stays under `spill_threshold_s`,
+/// and a hit skips re-prefill for the prompt prefix still resident in
+/// that cluster's [`KvPagePool`]. `None` keeps routing — and the
+/// serialized artifact — byte-identical to the affinity-free v1 fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AffinitySpec {
+    /// Session population per stream (ids `0..sessions`).
+    pub sessions: u64,
+    /// Zipf exponent of the session popularity distribution (> 0; larger
+    /// means a hotter head and more reuse).
+    pub zipf_s: f64,
+    /// Maximum estimated-backlog penalty (seconds) a session tolerates on
+    /// its resident cluster before spilling to the policy's pick.
+    pub spill_threshold_s: f64,
+    /// Tokens per KV page in the per-cluster resident-context pools.
+    pub page_tokens: usize,
+    /// KV page budget per cluster, tokens — bounds resident contexts;
+    /// overflow spills coldest pages and decays future reuse.
+    pub budget_tokens: usize,
+}
+
+impl AffinitySpec {
+    /// The demo affinity config behind `lime fleet --affinity` and the CI
+    /// v2 determinism artifact: a 256-session Zipf(1.1) population, a
+    /// half-second spill threshold, and a page budget of 64 full prompts
+    /// per cluster.
+    pub fn demo() -> AffinitySpec {
+        AffinitySpec {
+            sessions: 256,
+            zipf_s: 1.1,
+            spill_threshold_s: 0.5,
+            page_tokens: 16,
+            budget_tokens: 64 * PROMPT_TOKENS,
+        }
+    }
+}
+
 /// A fleet experiment: the cluster list crossed with router policies and
 /// arrival patterns, one stream of `count` requests per pattern.
 #[derive(Debug, Clone)]
@@ -169,6 +234,10 @@ pub struct FleetSpec {
     /// not under test) keeps routing — and the serialized artifact —
     /// byte-identical to the pre-churn fleet.
     pub churn: Script,
+    /// Sticky-session routing with KV reuse; `None` (the default) emits
+    /// exactly the v1 artifact. Does not compose with `churn` yet —
+    /// [`run_fleet`] asserts the combination away.
+    pub affinity: Option<AffinitySpec>,
 }
 
 /// Fixed seed of the demo fleet (`lime fleet`, benches, CI determinism).
@@ -204,7 +273,18 @@ impl FleetSpec {
             steps,
             seed: FLEET_SEED,
             churn: Script::none(),
+            affinity: None,
         }
+    }
+
+    /// [`FleetSpec::demo`] with the demo affinity config enabled — the
+    /// spec behind `lime fleet --affinity` and the `lime-fleet-v2` CI
+    /// determinism artifact.
+    pub fn demo_affinity(count: usize, steps: usize) -> FleetSpec {
+        let mut spec = FleetSpec::demo(count, steps);
+        spec.name = "e3-demo-fleet-affinity".to_string();
+        spec.affinity = Some(AffinitySpec::demo());
+        spec
     }
 
     pub fn model(&self) -> &str {
@@ -213,15 +293,31 @@ impl FleetSpec {
 }
 
 /// Partition `requests` (sorted by arrival) across `clusters` under
-/// `policy`. Sequential in global arrival order — the router sees only
-/// arrival times, step counts and the offline plans, and tracks one
-/// estimated-free-time scalar per cluster. Returns per-cluster *index*
-/// lists into `requests` (4 bytes per routed request instead of a
-/// `Request` clone — routing a 10^6-request stream for every cell stays
-/// cheap); each list is ascending, so materializing it yields a
-/// subsequence of the sorted stream that feeds
-/// [`simulate_stream_sink`] directly.
+/// `policy`. Returns per-cluster *index* lists into `requests` (4 bytes
+/// per routed request instead of a `Request` clone — routing a
+/// 10^6-request stream for every cell stays cheap); each list is
+/// ascending, so materializing it yields a subsequence of the sorted
+/// stream that feeds [`simulate_stream_sink`] directly.
+///
+/// Since the DES rebuild this delegates to [`route_des`]: an
+/// event-driven simulation over heap-indexed routing state, O(log C)
+/// per decision, with decisions identical to the legacy [`route_scan`]
+/// reference (property-pinned in `rust/tests/fleet_des.rs`).
 pub fn route(
+    policy: RouterPolicy,
+    requests: &[Request],
+    clusters: &[FleetCluster],
+) -> Vec<Vec<u32>> {
+    route_des(policy, requests, clusters)
+}
+
+/// The legacy O(C)-per-decision routing scan, kept verbatim as the
+/// decision reference for [`route_des`] (property tests, and the
+/// `fleet_stream_1M_scan` bench side of the DES-vs-scan pair).
+/// Sequential in global arrival order — the router sees only arrival
+/// times, step counts and the offline plans, and tracks one
+/// estimated-free-time scalar per cluster.
+pub fn route_scan(
     policy: RouterPolicy,
     requests: &[Request],
     clusters: &[FleetCluster],
@@ -398,6 +494,443 @@ fn argmin_alive(alive: &[bool], f: impl Fn(usize) -> f64) -> usize {
 }
 
 // ---------------------------------------------------------------------
+// Event-driven router: heap-indexed state on the DES engine.
+// ---------------------------------------------------------------------
+
+/// Version-stamped lazy min-heap entry: `(key, cluster index, version)`.
+/// Entries whose version no longer matches the cluster's are discarded
+/// on pop instead of being removed eagerly (classic lazy deletion — the
+/// heap never needs decrease-key).
+#[derive(Debug, Clone, Copy)]
+struct HeapEntry {
+    key: f64,
+    idx: usize,
+    version: u64,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // (key, index) lexicographic — index second reproduces the scan's
+        // ties-go-low rule among equal keys. Keys are never NaN (est_free
+        // advances by guarded `plan_rate`), so total_cmp == IEEE order.
+        self.key
+            .total_cmp(&other.key)
+            .then(self.idx.cmp(&other.idx))
+            .then(self.version.cmp(&other.version))
+    }
+}
+
+/// Per-cluster routing state of the event-driven router. Estimated free
+/// times are indexed three ways so every policy picks in O(log C):
+///
+/// * `idle_by_index` — idle clusters ordered by index (JSQ prefers the
+///   lowest-index zero-backlog cluster);
+/// * `idle_by_rank` — idle clusters ordered by `(planned rate, index)`
+///   (PlanAware's best idle candidate is the fastest idle cluster);
+/// * `free_heap` / `plan_heap` — busy clusters in version-stamped lazy
+///   min-heaps keyed by estimated free time, respectively estimated
+///   plan-finish time.
+///
+/// Decisions reproduce [`route_scan`]'s exactly (all clusters alive):
+/// the final comparison re-evaluates the scan's float expressions on the
+/// heap-selected candidates, and every tie breaks to the lowest index.
+/// Pinned by the heap-vs-scan property test in `rust/tests/fleet_des.rs`.
+struct RouterState {
+    policy: RouterPolicy,
+    plan_ok: bool,
+    /// Guarded planned s/token per cluster ([`plan_rate`]).
+    rates: Vec<f64>,
+    est_free: Vec<f64>,
+    /// Bumped on every estimate advance; stale heap entries are detected
+    /// by version mismatch.
+    version: Vec<u64>,
+    busy: Vec<bool>,
+    idle_by_index: BTreeSet<usize>,
+    /// Idle clusters stored as plan *ranks* (position in `by_rank`).
+    idle_by_rank: BTreeSet<usize>,
+    /// Cluster index at each plan rank — ascending `(rate, index)`.
+    by_rank: Vec<usize>,
+    rank_of: Vec<usize>,
+    free_heap: BinaryHeap<Reverse<HeapEntry>>,
+    /// Plan-finish keys are computed for `plan_steps` decode steps and
+    /// rebuilt (O(C log C)) whenever a request's step count differs, so
+    /// mixed-length streams stay exact.
+    plan_heap: BinaryHeap<Reverse<HeapEntry>>,
+    plan_steps: usize,
+}
+
+impl RouterState {
+    fn new(policy: RouterPolicy, clusters: &[FleetCluster]) -> RouterState {
+        let n = clusters.len();
+        assert!(n > 0, "routing needs at least one cluster");
+        let rates: Vec<f64> = (0..n).map(|c| plan_rate(clusters, c)).collect();
+        let mut by_rank: Vec<usize> = (0..n).collect();
+        by_rank.sort_by(|&a, &b| rates[a].total_cmp(&rates[b]).then(a.cmp(&b)));
+        let mut rank_of = vec![0usize; n];
+        for (rank, &c) in by_rank.iter().enumerate() {
+            rank_of[c] = rank;
+        }
+        RouterState {
+            policy,
+            plan_ok: plan_signal_ok(clusters),
+            rates,
+            est_free: vec![0.0; n],
+            version: vec![0; n],
+            busy: vec![false; n],
+            idle_by_index: (0..n).collect(),
+            idle_by_rank: (0..n).collect(),
+            by_rank,
+            rank_of,
+            free_heap: BinaryHeap::new(),
+            plan_heap: BinaryHeap::new(),
+            plan_steps: usize::MAX,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.est_free.len()
+    }
+
+    fn uses_plan(&self) -> bool {
+        self.policy == RouterPolicy::PlanAware && self.plan_ok
+    }
+
+    fn set_idle(&mut self, c: usize) {
+        if self.busy[c] {
+            self.busy[c] = false;
+            self.idle_by_index.insert(c);
+            self.idle_by_rank.insert(self.rank_of[c]);
+        }
+    }
+
+    fn set_busy(&mut self, c: usize) {
+        if self.busy[c] {
+            return;
+        }
+        self.busy[c] = true;
+        self.idle_by_index.remove(&c);
+        self.idle_by_rank.remove(&self.rank_of[c]);
+    }
+
+    /// Retire clusters whose estimate expired by `now` into the idle
+    /// sets. Amortized O(log C): each heap entry is popped once.
+    /// Decision-time sweeping is authoritative — completion-feedback
+    /// events only keep the idle sets warm, so same-timestamp event
+    /// ordering can never change a routing decision.
+    fn sweep(&mut self, now: f64) {
+        while let Some(&Reverse(top)) = self.free_heap.peek() {
+            if self.busy[top.idx] && self.version[top.idx] == top.version {
+                if top.key > now {
+                    break;
+                }
+                self.free_heap.pop();
+                self.set_idle(top.idx);
+            } else {
+                self.free_heap.pop(); // stale entry, lazily discarded
+            }
+        }
+    }
+
+    /// Fresh minimum of `free_heap` — the busy cluster freeing earliest.
+    fn busy_min_free(&mut self) -> Option<(f64, usize)> {
+        while let Some(&Reverse(top)) = self.free_heap.peek() {
+            if self.busy[top.idx] && self.version[top.idx] == top.version {
+                return Some((top.key, top.idx));
+            }
+            self.free_heap.pop();
+        }
+        None
+    }
+
+    /// Fresh minimum of `plan_heap` — the busy cluster with the earliest
+    /// plan-finish estimate for `plan_steps` decode steps.
+    fn busy_min_plan(&mut self) -> Option<(f64, usize)> {
+        while let Some(&Reverse(top)) = self.plan_heap.peek() {
+            if self.busy[top.idx] && self.version[top.idx] == top.version {
+                return Some((top.key, top.idx));
+            }
+            self.plan_heap.pop();
+        }
+        None
+    }
+
+    fn rebuild_plan_heap(&mut self, steps: usize) {
+        self.plan_steps = steps;
+        self.plan_heap.clear();
+        for c in 0..self.len() {
+            if self.busy[c] {
+                self.plan_heap.push(Reverse(HeapEntry {
+                    key: self.est_free[c] + steps as f64 * self.rates[c],
+                    idx: c,
+                    version: self.version[c],
+                }));
+            }
+        }
+    }
+
+    /// JSQ backlog of cluster `c` at `now` — the scan's exact expression.
+    fn backlog(&self, c: usize, now: f64) -> f64 {
+        (self.est_free[c] - now).max(0.0)
+    }
+
+    /// One routing decision for request `r` at global index `k` —
+    /// decision-identical to [`pick_cluster`] with every cluster alive.
+    fn pick(&mut self, k: usize, r: &Request) -> usize {
+        if self.policy == RouterPolicy::RoundRobin {
+            return k % self.len();
+        }
+        self.sweep(r.arrival);
+        if self.uses_plan() {
+            if self.plan_steps != r.steps {
+                self.rebuild_plan_heap(r.steps);
+            }
+            let s = r.steps as f64;
+            let idle = self.idle_by_rank.iter().next().map(|&rank| {
+                let c = self.by_rank[rank];
+                // The scan's key verbatim: on an idle cluster est_free is
+                // at most the arrival, so max() returns the arrival and
+                // the fastest idle cluster minimizes the key.
+                (self.est_free[c].max(r.arrival) + s * self.rates[c], c)
+            });
+            match (idle, self.busy_min_plan()) {
+                (Some((ik, ic)), Some((bk, bc))) => {
+                    // Busy keys were pushed as est_free + s·rate; busy
+                    // implies est_free > arrival, so that is bitwise the
+                    // scan's max(est_free, arrival) + s·rate. Ties break
+                    // to the lowest index, like the scan's strict argmin.
+                    if bk < ik || (bk == ik && bc < ic) {
+                        bc
+                    } else {
+                        ic
+                    }
+                }
+                (Some((_, ic)), None) => ic,
+                (None, Some((_, bc))) => bc,
+                (None, None) => unreachable!("every cluster is idle or busy"),
+            }
+        } else {
+            // JSQ (and PlanAware under a degenerate signal): idle
+            // clusters have exactly zero backlog and busy ones strictly
+            // positive, so the lowest idle index wins whenever one
+            // exists — precisely the scan's ties-go-low argmin.
+            match self.idle_by_index.iter().next() {
+                Some(&c) => c,
+                None => self.busy_min_free().expect("all clusters busy").1,
+            }
+        }
+    }
+
+    /// Advance `c`'s estimate for `r` — the same recurrence the scan
+    /// applies — and re-key the heaps. Returns the new estimated free
+    /// time (where the completion-feedback event aims).
+    fn commit(&mut self, c: usize, r: &Request) -> f64 {
+        let end = self.est_free[c].max(r.arrival) + r.steps as f64 * self.rates[c];
+        self.est_free[c] = end;
+        self.version[c] += 1;
+        self.set_busy(c);
+        self.free_heap.push(Reverse(HeapEntry {
+            key: end,
+            idx: c,
+            version: self.version[c],
+        }));
+        if self.uses_plan() && self.plan_steps != usize::MAX {
+            self.plan_heap.push(Reverse(HeapEntry {
+                key: end + self.plan_steps as f64 * self.rates[c],
+                idx: c,
+                version: self.version[c],
+            }));
+        }
+        end
+    }
+}
+
+/// World state of the event-driven router: the heap-indexed routing
+/// state plus the per-cluster armed-feedback flags. Fully owned (no
+/// borrows), so feedback closures satisfy the engine's `'static` event
+/// bound while capturing only a cluster index and a version stamp.
+struct RouteWorld {
+    state: RouterState,
+    /// Whether cluster `c` has a completion-feedback event armed. At
+    /// most one per cluster is ever on the calendar (a live event
+    /// re-aims itself on stale versions), so the calendar stays O(C)
+    /// regardless of stream length.
+    pending_free: Vec<bool>,
+}
+
+impl RouteWorld {
+    fn new(policy: RouterPolicy, clusters: &[FleetCluster]) -> RouteWorld {
+        RouteWorld {
+            state: RouterState::new(policy, clusters),
+            pending_free: vec![false; clusters.len()],
+        }
+    }
+}
+
+/// Arm a completion-feedback event for cluster `c` at its estimated free
+/// time.
+fn des_watch(eng: &mut DesEngine<RouteWorld>, w: &mut RouteWorld, c: usize, at: f64) {
+    if w.pending_free[c] {
+        return;
+    }
+    w.pending_free[c] = true;
+    let v = w.state.version[c];
+    eng.schedule_at(at.max(eng.now()), move |e, w| des_free(e, w, c, v));
+}
+
+/// Completion feedback: cluster `c`'s estimate expired. If the estimate
+/// advanced since scheduling (version mismatch), re-aim at the current
+/// estimate; otherwise retire the cluster to the idle sets. The
+/// decision-time sweep in [`RouterState::pick`] stays authoritative
+/// either way — feedback only keeps the idle sets warm between
+/// arrivals, so event tie-ordering can never change a decision.
+fn des_free(eng: &mut DesEngine<RouteWorld>, w: &mut RouteWorld, c: usize, v: u64) {
+    w.pending_free[c] = false;
+    if w.state.version[c] == v {
+        w.state.set_idle(c);
+    } else if w.state.busy[c] {
+        let at = w.state.est_free[c];
+        des_watch(eng, w, c, at);
+    }
+}
+
+/// [`route`]'s engine: the routing pass as a discrete-event simulation
+/// on [`crate::sim::Engine`]. The arrival cursor advances the calendar
+/// (`run_until` fires every completion-feedback event due by the
+/// arrival), each decision reads the heap-indexed [`RouterState`] in
+/// O(log C), and each commit arms a feedback event that retires the
+/// cluster's estimate mid-stream. Decisions are identical to
+/// [`route_scan`] (pinned in `rust/tests/fleet_des.rs`).
+fn route_des(
+    policy: RouterPolicy,
+    requests: &[Request],
+    clusters: &[FleetCluster],
+) -> Vec<Vec<u32>> {
+    let n = clusters.len();
+    assert!(n > 0, "routing needs at least one cluster");
+    assert!(u32::try_from(requests.len()).is_ok(), "stream exceeds u32 indexing");
+    let mut parts: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut eng: DesEngine<RouteWorld> = DesEngine::new();
+    let mut w = RouteWorld::new(policy, clusters);
+    for (k, r) in requests.iter().enumerate() {
+        eng.run_until(&mut w, r.arrival);
+        let pick = w.state.pick(k, r);
+        let end = w.state.commit(pick, r);
+        parts[pick].push(k as u32);
+        des_watch(&mut eng, &mut w, pick, end);
+        debug_assert!(eng.pending() <= n, "routing calendar must stay O(clusters)");
+    }
+    eng.run(&mut w);
+    parts
+}
+
+/// Output of [`route_affinity`]: per-cluster index lists, the parallel
+/// per-request reusable-prefix token counts, and the cell-level session
+/// counters.
+struct AffinityParts {
+    parts: Vec<Vec<u32>>,
+    /// `cached[c][i]` = reusable prefix tokens of request `parts[c][i]`.
+    cached: Vec<Vec<u32>>,
+    hits: u64,
+    reuse_tokens: u64,
+    spilled_sessions: u64,
+}
+
+/// Sticky-session routing on the DES router. The base `policy` proposes
+/// a cluster; a request whose session is resident elsewhere sticks to
+/// its resident cluster while the backlog penalty stays under the spill
+/// threshold, reusing the prompt prefix still resident in that
+/// cluster's [`KvPagePool`]. Returns the partition plus per-request
+/// cached-prefix tokens and the session counters.
+fn route_affinity(
+    policy: RouterPolicy,
+    requests: &[Request],
+    clusters: &[FleetCluster],
+    aff: &AffinitySpec,
+) -> AffinityParts {
+    let n = clusters.len();
+    assert!(n > 0, "routing needs at least one cluster");
+    assert!(u32::try_from(requests.len()).is_ok(), "stream exceeds u32 indexing");
+    let page_spec = KvPageSpec::new(aff.page_tokens, aff.budget_tokens);
+    // Session id → resident cluster. A session's pool context lives on
+    // exactly the cluster this map names.
+    let mut resident: HashMap<u64, usize> = HashMap::new();
+    let mut pools: Vec<KvPagePool> = (0..n).map(|_| KvPagePool::new(page_spec)).collect();
+    let mut out = AffinityParts {
+        parts: vec![Vec::new(); n],
+        cached: vec![Vec::new(); n],
+        hits: 0,
+        reuse_tokens: 0,
+        spilled_sessions: 0,
+    };
+    let mut eng: DesEngine<RouteWorld> = DesEngine::new();
+    let mut w = RouteWorld::new(policy, clusters);
+    for (k, r) in requests.iter().enumerate() {
+        eng.run_until(&mut w, r.arrival);
+        let policy_pick = w.state.pick(k, r);
+        let session = r.session_id;
+        let (pick, cached) = match resident.get(&session).copied() {
+            Some(c)
+                if c == policy_pick
+                    || w.state.backlog(c, r.arrival) - w.state.backlog(policy_pick, r.arrival)
+                        <= aff.spill_threshold_s =>
+            {
+                // Sticky hit: reuse whatever prefix is still resident
+                // (the budget may have spilled part of it since the last
+                // visit). At least the final prompt position is always
+                // recomputed, mirroring `applied_reuse` in the shard
+                // simulator.
+                let reuse = pools[c]
+                    .resident_tokens(session)
+                    .unwrap_or(0)
+                    .min(PROMPT_TOKENS - 1);
+                // Re-prefilling the non-resident suffix re-registers its
+                // pages.
+                pools[c].rewarm(session, PROMPT_TOKENS);
+                (c, reuse as u32)
+            }
+            Some(c) => {
+                // Backlog penalty above the threshold: the session
+                // spills to the policy's pick and its context migrates
+                // (old pages dropped — the new cluster prefills from
+                // scratch).
+                out.spilled_sessions += 1;
+                pools[c].release(session);
+                pools[policy_pick].register(session, PROMPT_TOKENS);
+                resident.insert(session, policy_pick);
+                (policy_pick, 0)
+            }
+            None => {
+                pools[policy_pick].register(session, PROMPT_TOKENS);
+                resident.insert(session, policy_pick);
+                (policy_pick, 0)
+            }
+        };
+        if cached > 0 {
+            out.hits += 1;
+            out.reuse_tokens += u64::from(cached);
+        }
+        let end = w.state.commit(pick, r);
+        out.parts[pick].push(k as u32);
+        out.cached[pick].push(cached);
+        des_watch(&mut eng, &mut w, pick, end);
+        debug_assert!(eng.pending() <= n, "routing calendar must stay O(clusters)");
+    }
+    eng.run(&mut w);
+    out
+}
+
+// ---------------------------------------------------------------------
 // Shard aggregation: O(1)-memory per-metric state.
 // ---------------------------------------------------------------------
 
@@ -502,6 +1035,12 @@ pub struct ShardResult {
     pub ttft: MetricShard,
     pub tbt: MetricShard,
     pub queueing: MetricShard,
+    /// Requests admitted with a nonzero cached prefix (0 unless the
+    /// fleet ran with affinity routing) — counted *in the simulator* at
+    /// admission, which the router's own tally must match.
+    pub affinity_hits: u64,
+    /// Prompt tokens skipped at prefill across those hits.
+    pub reuse_tokens_saved: u64,
 }
 
 /// Cell-level latency summary: mean plus weighted-reservoir percentiles
@@ -512,6 +1051,23 @@ pub struct CellMetric {
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
+}
+
+/// Session-affinity counters of one cell. `Some` if and only if the
+/// spec enabled affinity — absence keeps affinity-free artifacts
+/// byte-identical `lime-fleet-v1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellAffinity {
+    /// Requests that reused a nonzero cached prefix (Σ over shards —
+    /// the validator pins the sum).
+    pub hits: u64,
+    /// Prompt tokens skipped at prefill (Σ over shards; at least one per
+    /// hit).
+    pub reuse_tokens_saved: u64,
+    /// Sessions that abandoned their resident cluster for the policy's
+    /// pick because the backlog penalty exceeded the spill threshold —
+    /// a router-side count, cell-level only.
+    pub spilled_sessions: u64,
 }
 
 /// One (router, pattern) cell of the fleet matrix.
@@ -530,6 +1086,8 @@ pub struct CellResult {
     /// churn-free artifacts stay byte-identical to `lime-fleet-v1` before
     /// the churn axis existed.
     pub rerouted: Option<u64>,
+    /// Session-affinity counters; `Some` iff the spec enabled affinity.
+    pub affinity: Option<CellAffinity>,
 }
 
 /// Merge shard metrics into a cell metric: exact mean from the running
@@ -576,6 +1134,9 @@ struct ShardJob<'a> {
     pattern: Pattern,
     stream: &'a [Request],
     indices: Vec<u32>,
+    /// Reusable-prefix tokens per routed request, parallel to `indices`
+    /// — empty unless the fleet ran with affinity routing.
+    cached: Vec<u32>,
     exec_seed: u64,
     res_seed: u64,
 }
@@ -584,7 +1145,14 @@ fn run_shard(job: &ShardJob) -> ShardResult {
     let requests: Vec<Request> = job
         .indices
         .iter()
-        .map(|&i| job.stream[i as usize].clone())
+        .enumerate()
+        .map(|(i, &idx)| {
+            let mut r = job.stream[idx as usize].clone();
+            if let Some(&c) = job.cached.get(i) {
+                r.cached_prefix = c;
+            }
+            r
+        })
         .collect();
     let bw = BandwidthTrace::fixed_mbps(job.fc.bw_mbps);
     let opts = ExecOptions {
@@ -614,6 +1182,8 @@ fn run_shard(job: &ShardJob) -> ShardResult {
         ttft: sink.ttft.freeze(n),
         tbt: sink.tbt.freeze(n),
         queueing: sink.queueing.freeze(n),
+        affinity_hits: stats.affinity_hits,
+        reuse_tokens_saved: stats.reuse_tokens_saved,
     }
 }
 
@@ -634,12 +1204,18 @@ pub fn run_fleet_sequential(spec: &FleetSpec) -> Vec<CellResult> {
 pub fn run_fleet_on(spec: &FleetSpec, pool: Option<&Pool>) -> Vec<CellResult> {
     assert!(!spec.clusters.is_empty(), "fleet needs at least one cluster");
     assert!(!spec.routers.is_empty() && !spec.patterns.is_empty());
+    assert!(
+        spec.affinity.is_none() || spec.churn.churn.is_empty(),
+        "affinity routing does not compose with the fleet churn channel yet"
+    );
     let nc = spec.clusters.len();
 
     // One request stream per pattern, shared by every router so policies
     // are compared on identical arrivals. Prompts are empty (prefill is
     // charged from `PROMPT_TOKENS`), keeping 10^6-request streams flat.
-    let streams: Vec<Vec<Request>> = spec
+    // Affinity specs overlay Zipf session ids from a salted side stream —
+    // the base arrival/step fields stay bit-identical to the v1 stream.
+    let mut streams: Vec<Vec<Request>> = spec
         .patterns
         .iter()
         .enumerate()
@@ -647,22 +1223,40 @@ pub fn run_fleet_on(spec: &FleetSpec, pool: Option<&Pool>) -> Vec<CellResult> {
             stream_requests(p, spec.seed.wrapping_add(pi as u64), spec.count, spec.lambda, 0, spec.steps)
         })
         .collect();
+    if let Some(aff) = &spec.affinity {
+        for (pi, s) in streams.iter_mut().enumerate() {
+            assign_sessions(s, spec.seed.wrapping_add(pi as u64), aff.sessions, aff.zipf_s);
+        }
+    }
+    let streams = streams;
 
-    // Phase 1 — sequential routing, cheap: O(count · clusters) per cell.
-    // The churn-aware router runs only when the spec's churn channel is
-    // non-empty; otherwise this is exactly the pre-churn path.
+    // Phase 1 — event-driven routing on the DES engine, O(count · log C)
+    // per cell. The churn-aware router runs only when the spec's churn
+    // channel is non-empty; otherwise this is exactly the pre-churn path.
     let mut jobs: Vec<ShardJob> = Vec::with_capacity(spec.routers.len() * spec.patterns.len() * nc);
     let mut cell_rerouted: Vec<Option<u64>> =
         Vec::with_capacity(spec.routers.len() * spec.patterns.len());
+    let mut cell_affinity: Vec<Option<CellAffinity>> =
+        Vec::with_capacity(spec.routers.len() * spec.patterns.len());
     for (ri, &router) in spec.routers.iter().enumerate() {
         for (pi, &pattern) in spec.patterns.iter().enumerate() {
-            let (parts, rerouted) = if spec.churn.churn.is_empty() {
-                (route(router, &streams[pi], &spec.clusters), None)
+            let (parts, cached, rerouted, affinity) = if let Some(aff) = &spec.affinity {
+                let routed = route_affinity(router, &streams[pi], &spec.clusters, aff);
+                let counters = CellAffinity {
+                    hits: routed.hits,
+                    reuse_tokens_saved: routed.reuse_tokens,
+                    spilled_sessions: routed.spilled_sessions,
+                };
+                (routed.parts, Some(routed.cached), None, Some(counters))
+            } else if spec.churn.churn.is_empty() {
+                (route(router, &streams[pi], &spec.clusters), None, None, None)
             } else {
                 let (p, n) = route_churn(router, &streams[pi], &spec.clusters, &spec.churn.churn);
-                (p, Some(n))
+                (p, None, Some(n), None)
             };
             cell_rerouted.push(rerouted);
+            cell_affinity.push(affinity);
+            let mut cached = cached;
             for (ci, indices) in parts.into_iter().enumerate() {
                 let idx = ((ri * 97 + pi) * 97 + ci) as u64 + 1;
                 jobs.push(ShardJob {
@@ -670,6 +1264,10 @@ pub fn run_fleet_on(spec: &FleetSpec, pool: Option<&Pool>) -> Vec<CellResult> {
                     pattern,
                     stream: &streams[pi],
                     indices,
+                    cached: cached
+                        .as_mut()
+                        .map(|c| std::mem::take(&mut c[ci]))
+                        .unwrap_or_default(),
                     exec_seed: spec.seed,
                     res_seed: spec.seed ^ idx.wrapping_mul(0x9E37_79B9_7F4A_7C15),
                 });
@@ -706,14 +1304,41 @@ pub fn run_fleet_on(spec: &FleetSpec, pool: Option<&Pool>) -> Vec<CellResult> {
                 queueing: pick(|s| &s.queueing),
                 shards: chunk.to_vec(),
                 rerouted: cell_rerouted[cell_i],
+                affinity: cell_affinity[cell_i].map(|router_side| {
+                    // The cell's hit/reuse counters come from the shard
+                    // simulators (what was actually admitted); the
+                    // router's own tally must agree because the router
+                    // caps reuse at PROMPT_TOKENS − 1, below the shard
+                    // charge base.
+                    let sim_side = CellAffinity {
+                        hits: chunk.iter().map(|s| s.affinity_hits).sum(),
+                        reuse_tokens_saved: chunk.iter().map(|s| s.reuse_tokens_saved).sum(),
+                        spilled_sessions: router_side.spilled_sessions,
+                    };
+                    debug_assert_eq!(sim_side, router_side, "router and simulator reuse tallies must agree");
+                    sim_side
+                }),
             }
         })
         .collect()
 }
 
 // ---------------------------------------------------------------------
-// Artifact: schema lime-fleet-v1.
+// Artifact: schema lime-fleet-v1 / lime-fleet-v2.
 // ---------------------------------------------------------------------
+
+/// Schema tag this spec serializes under. `lime-fleet-v2` is a strict
+/// superset of v1 (an `affinity` header plus per-cell/per-shard reuse
+/// counters) emitted if and only if the spec enables affinity — the
+/// singleton-downgrade rule [`validate_fleet`] enforces from the other
+/// side.
+pub fn schema_tag(spec: &FleetSpec) -> &'static str {
+    if spec.affinity.is_some() {
+        "lime-fleet-v2"
+    } else {
+        "lime-fleet-v1"
+    }
+}
 
 fn metric_json(m: &CellMetric) -> Json {
     obj(&[
@@ -724,7 +1349,7 @@ fn metric_json(m: &CellMetric) -> Json {
     ])
 }
 
-fn shard_json(s: &ShardResult) -> Json {
+fn shard_json(s: &ShardResult, affinity: bool) -> Json {
     let stat = |m: &MetricShard| {
         let mean = if s.count == 0 { 0.0 } else { m.sum / s.count as f64 };
         obj(&[
@@ -734,42 +1359,63 @@ fn shard_json(s: &ShardResult) -> Json {
             ("p99", m.p99.into()),
         ])
     };
-    obj(&[
-        ("count", s.count.into()),
-        ("decode_s", s.decode_time.into()),
-        ("label", s.label.as_str().into()),
-        ("makespan_s", s.makespan.into()),
-        ("queueing_delay_s", stat(&s.queueing)),
-        ("tbt_s", stat(&s.tbt)),
-        ("ttft_s", stat(&s.ttft)),
-    ])
+    // Keys ascending; the two counter keys appear only on v2 artifacts.
+    let mut fields: Vec<(&str, Json)> = Vec::with_capacity(9);
+    if affinity {
+        fields.push(("affinity_hits", s.affinity_hits.into()));
+    }
+    fields.push(("count", s.count.into()));
+    fields.push(("decode_s", s.decode_time.into()));
+    fields.push(("label", s.label.as_str().into()));
+    fields.push(("makespan_s", s.makespan.into()));
+    fields.push(("queueing_delay_s", stat(&s.queueing)));
+    if affinity {
+        fields.push(("reuse_tokens_saved", s.reuse_tokens_saved.into()));
+    }
+    fields.push(("tbt_s", stat(&s.tbt)));
+    fields.push(("ttft_s", stat(&s.ttft)));
+    obj(&fields)
 }
 
 fn cell_json(c: &CellResult) -> Json {
     // Keys ascending; "rerouted" slots between "queueing_delay_s" and
-    // "router" and appears only on churn runs.
-    let mut fields: Vec<(&str, Json)> = vec![
-        ("count", c.count.into()),
-        ("makespan_s", c.makespan.into()),
-        ("pattern", pattern_key(c.pattern).into()),
-        (
-            "per_cluster",
-            Json::Arr(c.shards.iter().map(shard_json).collect()),
+    // "router" and appears only on churn runs; the three affinity
+    // counters appear only on v2 runs.
+    let mut fields: Vec<(&str, Json)> = Vec::with_capacity(12);
+    if let Some(a) = &c.affinity {
+        fields.push(("affinity_hits", a.hits.into()));
+    }
+    fields.push(("count", c.count.into()));
+    fields.push(("makespan_s", c.makespan.into()));
+    fields.push(("pattern", pattern_key(c.pattern).into()));
+    fields.push((
+        "per_cluster",
+        Json::Arr(
+            c.shards
+                .iter()
+                .map(|s| shard_json(s, c.affinity.is_some()))
+                .collect(),
         ),
-        ("queueing_delay_s", metric_json(&c.queueing)),
-    ];
+    ));
+    fields.push(("queueing_delay_s", metric_json(&c.queueing)));
     if let Some(n) = c.rerouted {
         fields.push(("rerouted", n.into()));
     }
+    if let Some(a) = &c.affinity {
+        fields.push(("reuse_tokens_saved", a.reuse_tokens_saved.into()));
+    }
     fields.push(("router", c.router.key().into()));
+    if let Some(a) = &c.affinity {
+        fields.push(("spilled_sessions", a.spilled_sessions.into()));
+    }
     fields.push(("tbt_s", metric_json(&c.tbt)));
     fields.push(("ttft_s", metric_json(&c.ttft)));
     obj(&fields)
 }
 
-/// Stream the `lime-fleet-v1` artifact to `out` cell by cell — the whole
-/// tree is never materialized (bytes are pinned identical to
-/// `Json::Display`). Returns the sink.
+/// Stream the `lime-fleet-v1`/`lime-fleet-v2` artifact to `out` cell by
+/// cell — the whole tree is never materialized (bytes are pinned
+/// identical to `Json::Display`). Returns the sink.
 pub fn write_fleet<W: std::io::Write>(
     spec: &FleetSpec,
     cells: &[CellResult],
@@ -777,6 +1423,18 @@ pub fn write_fleet<W: std::io::Write>(
 ) -> std::io::Result<W> {
     let mut w = StreamWriter::new(out);
     w.begin_obj()?;
+    // "affinity" < "cells": the v2 header leads, and is absent entirely
+    // on affinity-free runs (byte-identity with v1 artifacts).
+    if let Some(aff) = &spec.affinity {
+        w.key("affinity")?;
+        w.value(&obj(&[
+            ("budget_tokens", aff.budget_tokens.into()),
+            ("page_tokens", aff.page_tokens.into()),
+            ("sessions", aff.sessions.into()),
+            ("spill_threshold_s", aff.spill_threshold_s.into()),
+            ("zipf_s", aff.zipf_s.into()),
+        ]))?;
+    }
     w.key("cells")?;
     w.begin_arr()?;
     for c in cells {
@@ -826,7 +1484,7 @@ pub fn write_fleet<W: std::io::Write>(
         spec.routers.iter().map(|r| r.key().into()).collect(),
     ))?;
     w.key("schema")?;
-    w.value(&"lime-fleet-v1".into())?;
+    w.value(&schema_tag(spec).into())?;
     w.key("seed")?;
     w.value(&spec.seed.into())?;
     w.key("steps")?;
@@ -886,14 +1544,21 @@ fn check_stat(json: &Json, key: &str, what: &str, populated: bool) -> Result<(),
     Ok(())
 }
 
-/// Validate one artifact strictly against the `lime-fleet-v1` schema —
-/// the machine check behind `lime sweep-check` for `FLEET_*.json` files
-/// and the CI artifact gate.
+/// Validate one artifact strictly against the `lime-fleet-v1` /
+/// `lime-fleet-v2` schemas — the machine check behind `lime sweep-check`
+/// for `FLEET_*.json` files and the CI artifact gate. v2 must carry the
+/// `affinity` header and its counters everywhere; v1 must carry none of
+/// them (the singleton-downgrade rule, enforced in both directions).
 pub fn validate_fleet(json: &Json) -> Result<FleetSummary, String> {
-    match json.get("schema").and_then(Json::as_str) {
-        Some("lime-fleet-v1") => {}
-        other => return Err(format!("expected schema lime-fleet-v1, got {other:?}")),
-    }
+    let schema = match json.get("schema").and_then(Json::as_str) {
+        Some(s @ ("lime-fleet-v1" | "lime-fleet-v2")) => s.to_string(),
+        other => {
+            return Err(format!(
+                "expected schema lime-fleet-v1 or lime-fleet-v2, got {other:?}"
+            ))
+        }
+    };
+    let v2 = schema == "lime-fleet-v2";
     let name = field(json, "name", "artifact")?
         .as_str()
         .ok_or("'name' must be a string")?
@@ -978,6 +1643,52 @@ pub fn validate_fleet(json: &Json) -> Result<FleetSummary, String> {
     let routers = keyset("routers", &["rr", "jsq", "plan"])?;
     let patterns = keyset("patterns", &["sporadic", "bursty"])?;
 
+    // Header: affinity — present iff the schema says v2 (the
+    // singleton-downgrade rule: an affinity-free run must serialize as
+    // plain lime-fleet-v1).
+    let has_affinity = match json.get("affinity") {
+        None => {
+            if v2 {
+                return Err(
+                    "lime-fleet-v2 requires an 'affinity' header (affinity-free runs must \
+                     downgrade to lime-fleet-v1)"
+                        .into(),
+                );
+            }
+            false
+        }
+        Some(a) => {
+            if !v2 {
+                return Err("an 'affinity' header requires schema lime-fleet-v2".into());
+            }
+            let what = "affinity";
+            field(a, "sessions", what)?
+                .as_u64()
+                .filter(|&s| s >= 1)
+                .ok_or("affinity.sessions must be a positive integer")?;
+            let z = field(a, "zipf_s", what)?
+                .as_f64()
+                .ok_or("affinity.zipf_s must be a number")?;
+            if !z.is_finite() || z <= 0.0 {
+                return Err(format!("affinity.zipf_s must be finite and positive, got {z}"));
+            }
+            finite_ge0(a, "spill_threshold_s", what)?;
+            let pt = field(a, "page_tokens", what)?
+                .as_usize()
+                .filter(|&p| p >= 1)
+                .ok_or("affinity.page_tokens must be a positive integer")?;
+            let bt = field(a, "budget_tokens", what)?
+                .as_usize()
+                .ok_or("affinity.budget_tokens must be an integer")?;
+            if bt < pt {
+                return Err(format!(
+                    "affinity.budget_tokens {bt} must hold at least one page of {pt} tokens"
+                ));
+            }
+            true
+        }
+    };
+
     // Header: optional churn channel (absent on churn-free artifacts — its
     // absence is part of the byte-identity contract with older runs).
     let has_churn = match json.get("churn") {
@@ -1011,6 +1722,9 @@ pub fn validate_fleet(json: &Json) -> Result<FleetSummary, String> {
             true
         }
     };
+    if has_affinity && has_churn {
+        return Err("'affinity' and 'churn' headers cannot coexist (the runner rejects the combination)".into());
+    }
 
     // Cells: exactly the router × pattern cross, each cell a partition of
     // the stream across the header's clusters.
@@ -1060,6 +1774,35 @@ pub fn validate_fleet(json: &Json) -> Result<FleetSummary, String> {
         } else if cell.get("rerouted").is_some() {
             return Err(format!("{what}.rerouted requires a 'churn' header"));
         }
+        let cell_counters = if has_affinity {
+            let hits = field(cell, "affinity_hits", &what)?
+                .as_u64()
+                .ok_or_else(|| format!("{what}.affinity_hits must be a non-negative integer"))?;
+            if hits > cell_count as u64 {
+                return Err(format!(
+                    "{what}.affinity_hits {hits} exceeds the cell's {cell_count} requests"
+                ));
+            }
+            let reuse = field(cell, "reuse_tokens_saved", &what)?
+                .as_u64()
+                .ok_or_else(|| format!("{what}.reuse_tokens_saved must be a non-negative integer"))?;
+            if reuse < hits {
+                return Err(format!(
+                    "{what}: reuse_tokens_saved {reuse} < affinity_hits {hits} (every hit reuses at least one token)"
+                ));
+            }
+            field(cell, "spilled_sessions", &what)?
+                .as_u64()
+                .ok_or_else(|| format!("{what}.spilled_sessions must be a non-negative integer"))?;
+            Some((hits, reuse))
+        } else {
+            for key in ["affinity_hits", "reuse_tokens_saved", "spilled_sessions"] {
+                if cell.get(key).is_some() {
+                    return Err(format!("{what}.{key} requires an 'affinity' header"));
+                }
+            }
+            None
+        };
         check_stat(cell, "queueing_delay_s", &what, cell_count > 0)?;
         check_stat(cell, "tbt_s", &what, cell_count > 0)?;
         check_stat(cell, "ttft_s", &what, cell_count > 0)?;
@@ -1076,6 +1819,8 @@ pub fn validate_fleet(json: &Json) -> Result<FleetSummary, String> {
         }
         let mut sum = 0usize;
         let mut max_shard_makespan = 0.0f64;
+        let mut shard_hits = 0u64;
+        let mut shard_reuse = 0u64;
         for (j, shard) in per.iter().enumerate() {
             let swhat = format!("{what}.per_cluster[{j}]");
             let label = field(shard, "label", &swhat)?
@@ -1094,6 +1839,34 @@ pub fn validate_fleet(json: &Json) -> Result<FleetSummary, String> {
             let mk = finite_ge0(shard, "makespan_s", &swhat)?;
             max_shard_makespan = max_shard_makespan.max(mk);
             finite_ge0(shard, "decode_s", &swhat)?;
+            if has_affinity {
+                let h = field(shard, "affinity_hits", &swhat)?
+                    .as_u64()
+                    .ok_or_else(|| format!("{swhat}.affinity_hits must be a non-negative integer"))?;
+                if h > n as u64 {
+                    return Err(format!(
+                        "{swhat}.affinity_hits {h} exceeds the shard's {n} requests"
+                    ));
+                }
+                let rt = field(shard, "reuse_tokens_saved", &swhat)?
+                    .as_u64()
+                    .ok_or_else(|| {
+                        format!("{swhat}.reuse_tokens_saved must be a non-negative integer")
+                    })?;
+                if rt < h {
+                    return Err(format!(
+                        "{swhat}: reuse_tokens_saved {rt} < affinity_hits {h}"
+                    ));
+                }
+                shard_hits += h;
+                shard_reuse += rt;
+            } else {
+                for key in ["affinity_hits", "reuse_tokens_saved"] {
+                    if shard.get(key).is_some() {
+                        return Err(format!("{swhat}.{key} requires an 'affinity' header"));
+                    }
+                }
+            }
             check_stat(shard, "queueing_delay_s", &swhat, n > 0)?;
             check_stat(shard, "tbt_s", &swhat, n > 0)?;
             check_stat(shard, "ttft_s", &swhat, n > 0)?;
@@ -1102,6 +1875,14 @@ pub fn validate_fleet(json: &Json) -> Result<FleetSummary, String> {
             return Err(format!(
                 "{what}: per-cluster counts sum to {sum}, cell count is {cell_count}"
             ));
+        }
+        if let Some((hits, reuse)) = cell_counters {
+            if shard_hits != hits || shard_reuse != reuse {
+                return Err(format!(
+                    "{what}: cell counters (hits {hits}, reuse {reuse}) must equal the \
+                     per-cluster sums (hits {shard_hits}, reuse {shard_reuse})"
+                ));
+            }
         }
         if cell_makespan != max_shard_makespan {
             return Err(format!(
@@ -1112,7 +1893,7 @@ pub fn validate_fleet(json: &Json) -> Result<FleetSummary, String> {
     Ok(FleetSummary {
         name,
         model,
-        schema: "lime-fleet-v1".to_string(),
+        schema,
         clusters: clusters.len(),
         cells: cells.len(),
         requests: count,
@@ -1142,7 +1923,23 @@ mod tests {
             steps: 3,
             seed: 7,
             churn: Script::none(),
+            affinity: None,
         }
+    }
+
+    /// [`tiny_fleet`] with a small hot session population and a generous
+    /// spill threshold — every repeat visit should stick and hit.
+    fn tiny_affinity_fleet(count: usize) -> FleetSpec {
+        let mut spec = tiny_fleet(count);
+        spec.name = "tiny-fleet-affinity".to_string();
+        spec.affinity = Some(AffinitySpec {
+            sessions: 8,
+            zipf_s: 1.2,
+            spill_threshold_s: 5.0,
+            page_tokens: 16,
+            budget_tokens: 16 * PROMPT_TOKENS,
+        });
+        spec
     }
 
     #[test]
@@ -1390,5 +2187,144 @@ mod tests {
             }
         })
         .is_err());
+    }
+
+    #[test]
+    fn des_router_matches_the_legacy_scan() {
+        // In-module smoke; the full property sweep (tie-heavy rate
+        // tables, mixed-length streams, degenerate signals) lives in
+        // rust/tests/fleet_des.rs.
+        let spec = tiny_fleet(200);
+        for &pattern in &[Pattern::Sporadic, Pattern::Bursty] {
+            let reqs = stream_requests(pattern, 23, 200, 5.0, 0, 3);
+            for router in RouterPolicy::all() {
+                assert_eq!(
+                    route(router, &reqs, &spec.clusters),
+                    route_scan(router, &reqs, &spec.clusters),
+                    "{router:?}/{pattern:?}: DES decisions must equal the scan's"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_fleet_counts_hits_and_validates_v2() {
+        let spec = tiny_affinity_fleet(24);
+        let seq = run_fleet_sequential(&spec);
+        let pool = Pool::new(4);
+        let par = run_fleet_on(&spec, Some(&pool));
+        let seq_bytes = fleet_artifact_bytes(&spec, &seq);
+        assert_eq!(
+            seq_bytes,
+            fleet_artifact_bytes(&spec, &par),
+            "affinity pool fleet must serialize byte-identically to sequential"
+        );
+
+        let parsed = Json::parse(std::str::from_utf8(&seq_bytes).unwrap()).unwrap();
+        let summary = validate_fleet(&parsed).expect("v2 artifact validates");
+        assert_eq!(summary.schema, "lime-fleet-v2");
+        assert!(parsed.get("affinity").is_some(), "v2 header must be emitted");
+
+        for cell in &seq {
+            let aff = cell.affinity.expect("every cell carries counters");
+            // 24 requests over 8 Zipf(1.2) sessions with a generous spill
+            // threshold: repeats stick and reuse the resident prefix.
+            assert!(aff.hits > 0, "{:?}: expected session hits", cell.router);
+            assert!(aff.reuse_tokens_saved >= aff.hits);
+            assert_eq!(
+                aff.hits,
+                cell.shards.iter().map(|s| s.affinity_hits).sum::<u64>(),
+                "cell hits must be the shard sum"
+            );
+            assert_eq!(cell.count, 24, "affinity must not drop requests");
+        }
+    }
+
+    #[test]
+    fn affinity_free_spec_serializes_as_v1() {
+        let spec = tiny_fleet(12);
+        assert_eq!(schema_tag(&spec), "lime-fleet-v1");
+        let bytes = fleet_artifact_bytes(&spec, &run_fleet_sequential(&spec));
+        let text = std::str::from_utf8(&bytes).unwrap();
+        for key in ["affinity", "affinity_hits", "reuse_tokens_saved", "spilled_sessions"] {
+            assert!(
+                !text.contains(key),
+                "affinity-free artifact must not mention {key:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn validator_enforces_the_affinity_downgrade_rule() {
+        let v1_spec = tiny_fleet(12);
+        let v1_bytes = fleet_artifact_bytes(&v1_spec, &run_fleet_sequential(&v1_spec));
+        let v1 = Json::parse(std::str::from_utf8(&v1_bytes).unwrap()).unwrap();
+        let v2_spec = tiny_affinity_fleet(12);
+        let v2_bytes = fleet_artifact_bytes(&v2_spec, &run_fleet_sequential(&v2_spec));
+        let v2 = Json::parse(std::str::from_utf8(&v2_bytes).unwrap()).unwrap();
+        assert!(validate_fleet(&v1).is_ok());
+        assert!(validate_fleet(&v2).is_ok());
+
+        let corrupt = |base: &Json, f: &dyn Fn(&mut std::collections::BTreeMap<String, Json>)| {
+            let Json::Obj(mut map) = base.clone() else {
+                panic!("artifact must be an object")
+            };
+            f(&mut map);
+            validate_fleet(&Json::Obj(map))
+        };
+
+        // A v2 tag without the affinity header must downgrade, not pass.
+        assert!(corrupt(&v1, &|m| {
+            m.insert("schema".into(), "lime-fleet-v2".into());
+        })
+        .is_err());
+        // An affinity header under the v1 tag is equally malformed.
+        assert!(corrupt(&v2, &|m| {
+            m.insert("schema".into(), "lime-fleet-v1".into());
+        })
+        .is_err());
+        // v1 cells must not carry counter keys.
+        assert!(corrupt(&v1, &|m| {
+            if let Some(Json::Arr(cells)) = m.get_mut("cells") {
+                if let Json::Obj(c0) = &mut cells[0] {
+                    c0.insert("affinity_hits".into(), 1usize.into());
+                }
+            }
+        })
+        .is_err());
+        // Cell counters must equal the per-cluster sums.
+        assert!(corrupt(&v2, &|m| {
+            if let Some(Json::Arr(cells)) = m.get_mut("cells") {
+                if let Json::Obj(c0) = &mut cells[0] {
+                    let hits = c0.get("affinity_hits").and_then(Json::as_u64).unwrap();
+                    c0.insert("affinity_hits".into(), (hits + 1).into());
+                }
+            }
+        })
+        .is_err());
+        // Every hit saves at least one token.
+        assert!(corrupt(&v2, &|m| {
+            if let Some(Json::Arr(cells)) = m.get_mut("cells") {
+                if let Json::Obj(c0) = &mut cells[0] {
+                    c0.insert("reuse_tokens_saved".into(), 0usize.into());
+                }
+            }
+        })
+        .is_err());
+        // A degenerate affinity header (zero sessions) is rejected.
+        assert!(corrupt(&v2, &|m| {
+            if let Some(Json::Obj(a)) = m.get_mut("affinity") {
+                a.insert("sessions".into(), 0usize.into());
+            }
+        })
+        .is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "affinity routing does not compose")]
+    fn affinity_and_churn_do_not_compose() {
+        let mut spec = tiny_affinity_fleet(12);
+        spec.churn = Script::device_down_up("c0-blip", 0, 3, 9);
+        run_fleet_sequential(&spec);
     }
 }

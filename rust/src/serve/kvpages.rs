@@ -200,6 +200,44 @@ impl KvPagePool {
         self.note_fragmentation();
     }
 
+    /// Whether context `id` is live in the pool.
+    pub fn is_registered(&self, id: u64) -> bool {
+        self.contexts.contains_key(&id)
+    }
+
+    /// Tokens of context `id` still backed by resident pages (`None` if
+    /// the context is not live). This is what session-affinity routing
+    /// reads to size a hit's reusable prefix: spilled pages are modeled
+    /// write-only, so only the resident portion skips re-prefill.
+    pub fn resident_tokens(&self, id: u64) -> Option<usize> {
+        self.contexts.get(&id).map(|c| c.resident_tokens)
+    }
+
+    /// Re-warm context `id` up to `target_tokens` resident tokens (capped
+    /// at the context's own size), re-taking one page per spilled page —
+    /// the affinity-hit path: the re-prefill of the non-resident suffix
+    /// puts its pages back in the pool. Stops early if the only spill
+    /// victim left is `id` itself (re-warming by cannibalizing the same
+    /// context would not terminate); reuse simply decays in that regime.
+    pub fn rewarm(&mut self, id: u64, target_tokens: usize) {
+        let page_tokens = self.spec.page_tokens;
+        let ctx = self.contexts.get(&id).expect("context not registered");
+        let target = target_tokens.min(ctx.tokens);
+        let mut resident = ctx.resident_tokens;
+        while resident < target {
+            if self.free_pages == 0 && self.spill_victim() == Some(id) {
+                break;
+            }
+            self.take_page_for(id);
+            let ctx = self.contexts.get_mut(&id).expect("context is live");
+            let credit = (target - resident).min(page_tokens);
+            ctx.resident_tokens += credit;
+            ctx.spilled_pages = ctx.spilled_pages.saturating_sub(1);
+            resident += credit;
+        }
+        self.note_fragmentation();
+    }
+
     /// Hand one page to `ctx_id`, spilling a victim's page when the free
     /// list is empty.
     fn take_page_for(&mut self, ctx_id: u64) {
@@ -222,11 +260,7 @@ impl KvPagePool {
     /// costing via [`KvPagePool::take_spilled_tokens`].
     fn spill_one(&mut self, _requester: u64) {
         let victim = self
-            .contexts
-            .iter()
-            .filter(|(_, c)| c.resident_pages > 0)
-            .max_by_key(|(id, c)| (c.resident_pages, std::cmp::Reverse(**id)))
-            .map(|(id, _)| *id)
+            .spill_victim()
             .expect("a pool with zero free pages holds resident pages");
         let page_tokens = self.spec.page_tokens;
         let ctx = self.contexts.get_mut(&victim).expect("victim is live");
@@ -237,6 +271,16 @@ impl KvPagePool {
         self.free_pages += 1;
         self.pages_spilled += 1;
         self.spilled_tokens_pending += moved;
+    }
+
+    /// The context the next spill would take a page from: most resident
+    /// pages, ties toward the lowest id (as in vLLM preemption).
+    fn spill_victim(&self) -> Option<u64> {
+        self.contexts
+            .iter()
+            .filter(|(_, c)| c.resident_pages > 0)
+            .max_by_key(|(id, c)| (c.resident_pages, std::cmp::Reverse(**id)))
+            .map(|(id, _)| *id)
     }
 
     /// Tokens spilled since the last drain — the driver converts these to
@@ -358,6 +402,41 @@ mod tests {
         pool.release(3);
         assert_eq!(pool.free_pages(), 0);
         pool.release(7);
+        assert_eq!(pool.free_pages(), 2);
+    }
+
+    #[test]
+    fn rewarm_restores_spilled_residency() {
+        // 4 pages of 2 tokens. Ctx 10 loses a page to ctx 20's growth,
+        // then re-warms: residency and page conservation both recover.
+        let mut pool = KvPagePool::new(KvPageSpec::new(2, 8));
+        pool.register(10, 6); // 3 pages
+        pool.register(20, 2); // 1 page — pool full
+        pool.append_token(20); // spills a page of ctx 10
+        assert_eq!(pool.resident_tokens(10), Some(4));
+        assert!(pool.is_registered(10) && !pool.is_registered(99));
+        pool.release(20); // frees ctx 20's 2 pages
+        pool.rewarm(10, 6);
+        assert_eq!(pool.resident_tokens(10), Some(6));
+        assert_eq!(
+            pool.pages_in_use() + pool.free_pages(),
+            pool.spec().total_pages()
+        );
+        pool.release(10);
+        assert_eq!(pool.free_pages(), pool.spec().total_pages());
+    }
+
+    #[test]
+    fn rewarm_gives_up_rather_than_cannibalize_itself() {
+        // 2 pages of 2 tokens; a single 6-token context can keep at most
+        // 2 pages resident. Rewarming to full size must terminate with
+        // whatever fits instead of spilling its own pages forever.
+        let mut pool = KvPagePool::new(KvPageSpec::new(2, 4));
+        pool.register(1, 6); // 3 pages needed → 1 already spilled
+        assert_eq!(pool.resident_tokens(1), Some(4));
+        pool.rewarm(1, 6);
+        assert_eq!(pool.resident_tokens(1), Some(4), "capped by the pool");
+        pool.release(1);
         assert_eq!(pool.free_pages(), 2);
     }
 

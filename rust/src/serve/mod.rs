@@ -12,9 +12,11 @@
 //! [`BatchingOpts`]) that the scenario matrix's arrival-process and
 //! batching axes evaluate — [`kvpages`], the paged KV allocator model the
 //! continuous driver can account pages through — and [`fleet`], the
-//! multi-cluster admission-router layer that shards million-request
-//! streams across the work-stealing pool and streams `lime-fleet-v1`
-//! tail-latency artifacts.
+//! multi-cluster admission-router layer: an event-driven DES router
+//! (O(log C) heap decisions, optional sticky-session affinity with KV
+//! reuse) that shards million-request streams across the work-stealing
+//! pool and streams `lime-fleet-v1`/`lime-fleet-v2` tail-latency
+//! artifacts.
 
 pub mod deployment;
 #[cfg(feature = "pjrt")]
@@ -27,8 +29,8 @@ pub mod simqueue;
 
 pub use deployment::{plan_tiny, residency_plan, virtual_cluster};
 pub use fleet::{
-    run_fleet, run_fleet_sequential, validate_fleet, write_fleet, FleetCluster, FleetSpec,
-    FleetSummary, RouterPolicy,
+    run_fleet, run_fleet_sequential, validate_fleet, write_fleet, AffinitySpec, FleetCluster,
+    FleetSpec, FleetSummary, RouterPolicy,
 };
 pub use kvpages::{KvPageConfig, KvPagePool, KvPageSpec};
 pub use simqueue::{

@@ -177,6 +177,14 @@ pub struct StreamResult {
     /// Peak internal fragmentation of the paged allocator
     /// ([`KvPagePool::fragmentation_peak`]); 0.0 without paging.
     pub kv_fragmentation: f64,
+    /// Requests admitted with a nonzero reused KV prefix
+    /// (`Request::cached_prefix` after the at-least-one-token cap) —
+    /// session-affinity hits routed back to their resident cluster.
+    /// Always 0 outside affinity-routed fleet shards.
+    pub affinity_hits: u64,
+    /// Prompt tokens whose prefill was skipped thanks to KV reuse
+    /// (Σ applied cached prefix over admitted requests).
+    pub reuse_tokens_saved: u64,
 }
 
 impl StreamResult {
@@ -251,6 +259,8 @@ pub struct StreamStats {
     pub kv_pages_allocated: u64,
     pub kv_pages_spilled: u64,
     pub kv_fragmentation: f64,
+    pub affinity_hits: u64,
+    pub reuse_tokens_saved: u64,
 }
 
 /// Serve `requests` (sorted by arrival) through `policy` on one shared
@@ -347,6 +357,8 @@ pub fn simulate_stream_opts<P: SchedulePolicy>(
         kv_pages_allocated: stats.kv_pages_allocated,
         kv_pages_spilled: stats.kv_pages_spilled,
         kv_fragmentation: stats.kv_fragmentation,
+        affinity_hits: stats.affinity_hits,
+        reuse_tokens_saved: stats.reuse_tokens_saved,
     }
 }
 
@@ -436,11 +448,26 @@ pub fn simulate_stream_sink_opts<P: SchedulePolicy, S: StreamSink>(
 /// pre-mix caller that never materialized tokens relied on the knob. A
 /// non-empty prompt always wins over the knob.
 fn slot_prompt(r: &Request, common: &CommonOptions) -> usize {
+    slot_base(r, common) - applied_reuse(r, common)
+}
+
+/// The request's raw prompt length before KV reuse (empty prompt ⇒ the
+/// global knob).
+fn slot_base(r: &Request, common: &CommonOptions) -> usize {
     if r.prompt.is_empty() {
         common.prompt_tokens
     } else {
         r.prompt.len()
     }
+}
+
+/// Prompt-prefix tokens actually skipped for `r`: the session-affinity
+/// cached prefix, capped so at least one prompt token is always recomputed
+/// — even a full-prefix hit must run the final prompt position to produce
+/// the first logits. Zero (and `slot_prompt == slot_base`) whenever
+/// `cached_prefix` is zero, i.e. on every non-affinity path.
+fn applied_reuse(r: &Request, common: &CommonOptions) -> usize {
+    (r.cached_prefix as usize).min(slot_base(r, common).saturating_sub(1))
 }
 
 /// The FIFO admission loop. The batch loop replicates
@@ -466,6 +493,8 @@ fn run_fifo<P: SchedulePolicy, S: StreamSink>(
     core.retain_step_times(retain_step_times);
     let mut batches = 0usize;
     let mut makespan = 0.0f64;
+    let mut affinity_hits = 0u64;
+    let mut reuse_tokens_saved = 0u64;
     let mut t_free = 0.0f64;
     let mut i = 0usize;
     // Reused across batches: per-step completion times and the per-slot
@@ -483,6 +512,13 @@ fn run_fifo<P: SchedulePolicy, S: StreamSink>(
         let micro = batch.len().max(1);
         slots.clear();
         slots.extend(batch.iter().map(|r| (slot_prompt(r, common), 0usize)));
+        for r in batch {
+            let cached = applied_reuse(r, common);
+            if cached > 0 {
+                affinity_hits += 1;
+                reuse_tokens_saved += cached as u64;
+            }
+        }
         core.policy.set_slot_lengths(&slots);
         let g = core.global_step();
         let decode_start = core.policy.begin_request(&mut core.state, t_start, micro, g);
@@ -562,6 +598,8 @@ fn run_fifo<P: SchedulePolicy, S: StreamSink>(
         kv_pages_allocated: 0,
         kv_pages_spilled: 0,
         kv_fragmentation: 0.0,
+        affinity_hits,
+        reuse_tokens_saved,
     }
 }
 
@@ -630,6 +668,8 @@ fn run_continuous<P: SchedulePolicy, S: StreamSink>(
     let mut next = 0usize; // FIFO cursor into `requests`
     let mut batches = 0usize;
     let mut makespan = 0.0f64;
+    let mut affinity_hits = 0u64;
+    let mut reuse_tokens_saved = 0u64;
     let mut t = 0.0f64;
     // Reused per-slot (prompt_len, completed_steps) buffer, installed
     // through `SchedulePolicy::set_slot_lengths` before every admission
@@ -718,6 +758,11 @@ fn run_continuous<P: SchedulePolicy, S: StreamSink>(
                 batches += 1;
                 for idx in next..j {
                     let r = &requests[idx];
+                    let cached = applied_reuse(r, common);
+                    if cached > 0 {
+                        affinity_hits += 1;
+                        reuse_tokens_saved += cached as u64;
+                    }
                     if r.steps == 0 {
                         emit(
                             sink,
@@ -758,6 +803,11 @@ fn run_continuous<P: SchedulePolicy, S: StreamSink>(
             && requests[next].arrival <= t
         {
             let r = &requests[next];
+            let cached = applied_reuse(r, common);
+            if cached > 0 {
+                affinity_hits += 1;
+                reuse_tokens_saved += cached as u64;
+            }
             core.policy.set_slot_lengths(&[(slot_prompt(r, common), 0)]);
             let g = core.global_step();
             let ready_at = core.policy.prefill_end(&mut core.state, t, 1, g);
@@ -881,6 +931,8 @@ fn run_continuous<P: SchedulePolicy, S: StreamSink>(
         kv_pages_allocated,
         kv_pages_spilled,
         kv_fragmentation,
+        affinity_hits,
+        reuse_tokens_saved,
     }
 }
 

@@ -76,6 +76,13 @@ impl<W> Engine<W> {
         self.executed
     }
 
+    /// Events currently on the calendar. Streaming drivers (the fleet DES
+    /// router) assert on this to guarantee the calendar stays O(clusters)
+    /// instead of O(requests) — flat memory at 10^6-request scale.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
     /// Schedule `f` to run `delay` seconds from now (FIFO among ties).
     pub fn schedule(&mut self, delay: Time, f: impl FnOnce(&mut Engine<W>, &mut W) + 'static) {
         assert!(delay >= 0.0, "cannot schedule into the past");
@@ -242,6 +249,19 @@ mod tests {
         });
         eng.run(&mut world);
         assert_eq!(world, vec![3.0]);
+    }
+
+    #[test]
+    fn pending_tracks_the_calendar() {
+        let mut eng: Engine<u32> = Engine::new();
+        assert_eq!(eng.pending(), 0);
+        eng.schedule(1.0, |_, w: &mut u32| *w += 1);
+        eng.schedule(2.0, |_, w| *w += 1);
+        assert_eq!(eng.pending(), 2);
+        let mut world = 0u32;
+        eng.run(&mut world);
+        assert_eq!(eng.pending(), 0);
+        assert_eq!(world, 2);
     }
 
     #[test]

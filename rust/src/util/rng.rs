@@ -106,6 +106,46 @@ impl Rng {
         self.f64() < p
     }
 
+    /// Zipf-distributed integer in `[1, n]` with `P(k) ∝ k^{-s}`, via
+    /// Hörmann–Derflinger rejection-inversion: O(1) expected draws, no
+    /// precomputed table, so the session-id sampler stays cheap at 10^6
+    /// requests. `s` must be finite and positive; `s > 1` concentrates
+    /// mass on the head (hot sessions), `s < 1` flattens the tail.
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        assert!(n >= 1, "zipf support must be non-empty");
+        assert!(s.is_finite() && s > 0.0, "zipf exponent must be positive");
+        if n == 1 {
+            return 1;
+        }
+        // H is (a shifted antiderivative of) the hull x^{-s}; H_inv inverts it.
+        let h = |x: f64| (-s * x.ln()).exp();
+        let big_h = |x: f64| {
+            if s == 1.0 {
+                x.ln()
+            } else {
+                (x.powf(1.0 - s) - 1.0) / (1.0 - s)
+            }
+        };
+        let big_h_inv = |y: f64| {
+            if s == 1.0 {
+                y.exp()
+            } else {
+                (1.0 + y * (1.0 - s)).powf(1.0 / (1.0 - s))
+            }
+        };
+        let h_x1 = big_h(1.5) - 1.0; // H(1.5) − h(1), h(1) = 1
+        let h_n = big_h(n as f64 + 0.5);
+        let guard = 2.0 - big_h_inv(big_h(2.5) - h(2.0));
+        loop {
+            let u = h_n + self.f64() * (h_x1 - h_n);
+            let x = big_h_inv(u);
+            let k = x.round().clamp(1.0, n as f64);
+            if k - x <= guard || u >= big_h(k + 0.5) - h(k) {
+                return k as u64;
+            }
+        }
+    }
+
     /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -186,6 +226,48 @@ mod tests {
         let mut sorted = xs.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_is_deterministic_and_in_range() {
+        let mut a = Rng::new(21);
+        let mut b = Rng::new(21);
+        for _ in 0..5_000 {
+            let x = a.zipf(1000, 1.1);
+            assert_eq!(x, b.zipf(1000, 1.1));
+            assert!((1..=1000).contains(&x));
+        }
+    }
+
+    #[test]
+    fn zipf_head_is_hot() {
+        // P(1) ∝ 1, P(2) ∝ 2^{-1.2}: rank 1 must dominate rank 2, and the
+        // top-10 ranks must hold a large share of the mass.
+        let mut r = Rng::new(17);
+        let n = 50_000;
+        let mut counts = vec![0usize; 1001];
+        for _ in 0..n {
+            counts[r.zipf(1000, 1.2) as usize] += 1;
+        }
+        assert!(counts[1] > counts[2], "{} vs {}", counts[1], counts[2]);
+        assert!(counts[2] > counts[10], "{} vs {}", counts[2], counts[10]);
+        let head: usize = counts[1..=10].iter().sum();
+        assert!(head * 2 > n, "top-10 share too small: {head}/{n}");
+    }
+
+    #[test]
+    fn zipf_exponent_one_uses_log_branch() {
+        let mut r = Rng::new(29);
+        for _ in 0..2_000 {
+            let x = r.zipf(64, 1.0);
+            assert!((1..=64).contains(&x));
+        }
+    }
+
+    #[test]
+    fn zipf_singleton_support() {
+        let mut r = Rng::new(1);
+        assert_eq!(r.zipf(1, 1.5), 1);
     }
 
     #[test]

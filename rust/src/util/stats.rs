@@ -418,6 +418,38 @@ mod tests {
     }
 
     #[test]
+    fn p2_error_is_bounded_at_a_million_samples() {
+        // The fleet-scale contract: at 10^6 heavy-tailed (lognormal)
+        // observations — the size of one `fleet_stream_1M_des` cell — the
+        // five-marker P² estimate must sit within ~1.5 rank-points of the
+        // exact sorted quantile, while holding O(1) state. Value-space
+        // error is unbounded on the lognormal tail; rank space is the
+        // bound the estimator actually provides.
+        let mut rng = Rng::new(0x9_1E6_2026);
+        let n = 1_000_000usize;
+        let mut xs = Vec::with_capacity(n);
+        let mut ests: Vec<P2Quantile> =
+            [0.5, 0.9, 0.99].iter().map(|&q| P2Quantile::new(q)).collect();
+        for _ in 0..n {
+            let x = rng.normal().exp();
+            xs.push(x);
+            for est in &mut ests {
+                est.push(x);
+            }
+        }
+        for est in &ests {
+            assert_eq!(est.count(), n);
+            let rank = rank_of(&xs, est.value());
+            assert!(
+                (rank - est.quantile()).abs() <= 0.015,
+                "q {}: estimate {} sits at rank {rank}",
+                est.quantile(),
+                est.value()
+            );
+        }
+    }
+
+    #[test]
     fn reservoir_keeps_everything_under_capacity() {
         let xs = [5.0, 1.0, 3.0];
         let mut r = Reservoir::new(8, 42);

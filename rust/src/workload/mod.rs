@@ -6,7 +6,8 @@ pub mod requests;
 
 pub use lengths::LengthDist;
 pub use requests::{
-    poisson_arrivals, stream_requests, stream_requests_mix, Request, RequestGen,
+    assign_sessions, poisson_arrivals, stream_requests, stream_requests_mix,
+    stream_requests_sessions, Request, RequestGen,
 };
 
 use crate::cluster::Cluster;

@@ -14,6 +14,18 @@ pub struct Request {
     pub prompt: Vec<i32>,
     /// Decode steps requested.
     pub steps: usize,
+    /// Session this request belongs to (sticky-session fleet routing).
+    /// Generators default it to the request id — every request its own
+    /// session — so session-free paths behave exactly as before; fleet
+    /// affinity specs overwrite it via [`assign_sessions`].
+    pub session_id: u64,
+    /// Prompt-prefix tokens already resident in the serving cluster's KV
+    /// pool (a session-affinity hit). The simulator skips re-prefill
+    /// FLOPs, activation volume and page registration for this prefix —
+    /// capped so at least one prompt token is always recomputed (the
+    /// final position's logits are needed regardless). Always 0 outside
+    /// affinity-routed fleet shards.
+    pub cached_prefix: u32,
 }
 
 /// Poisson arrival times with rate `lambda` (req/s) for `count` requests.
@@ -80,8 +92,48 @@ impl RequestGen {
             arrival,
             prompt,
             steps,
+            session_id: id,
+            cached_prefix: 0,
         }
     }
+}
+
+/// Salt for the session-id stream: sessions draw from their own derived
+/// generator, so attaching sessions to a stream never perturbs the
+/// arrival/shape/prompt draw sequence — a sessioned stream is
+/// bit-identical to [`stream_requests`] in every pre-existing field
+/// (pinned in the tests below).
+const SESSION_STREAM_SALT: u64 = 0x5E55_1011_D00D_F00D;
+
+/// Overwrite each request's `session_id` with a Zipf(`zipf_s`) draw over
+/// `[0, sessions)` — hot sessions exist by construction, which is what
+/// gives sticky-session fleet routing something to reuse. Deterministic
+/// given `seed`; uses a salted generator independent of the stream RNG.
+pub fn assign_sessions(requests: &mut [Request], seed: u64, sessions: u64, zipf_s: f64) {
+    assert!(sessions >= 1, "need at least one session");
+    let mut rng = Rng::new(seed ^ SESSION_STREAM_SALT);
+    for r in requests.iter_mut() {
+        r.session_id = rng.zipf(sessions, zipf_s) - 1;
+    }
+}
+
+/// [`stream_requests`] plus Zipf-distributed session ids (see
+/// [`assign_sessions`]). The non-session fields are bit-identical to the
+/// plain stream for the same arguments.
+#[allow(clippy::too_many_arguments)]
+pub fn stream_requests_sessions(
+    pattern: Pattern,
+    seed: u64,
+    count: usize,
+    lambda: f64,
+    prompt_len: usize,
+    steps: usize,
+    sessions: u64,
+    zipf_s: f64,
+) -> Vec<Request> {
+    let mut reqs = stream_requests(pattern, seed, count, lambda, prompt_len, steps);
+    assign_sessions(&mut reqs, seed, sessions, zipf_s);
+    reqs
 }
 
 /// Synthetic vocabulary for stream prompts. Prompt *content* only matters
@@ -184,6 +236,43 @@ mod tests {
                 stream_requests_mix(pattern, 9, 8, 0.5, &LengthDist::fixed(64, 6));
             assert_eq!(plain, mixed, "{pattern:?}");
         }
+    }
+
+    #[test]
+    fn sessions_never_perturb_the_base_stream() {
+        for pattern in [Pattern::Sporadic, Pattern::Bursty] {
+            let plain = stream_requests(pattern, 11, 32, 1.5, 0, 4);
+            let sessioned =
+                stream_requests_sessions(pattern, 11, 32, 1.5, 0, 4, 8, 1.1);
+            assert_eq!(plain.len(), sessioned.len());
+            for (p, s) in plain.iter().zip(&sessioned) {
+                assert_eq!(p.id, s.id);
+                assert_eq!(p.arrival, s.arrival);
+                assert_eq!(p.prompt, s.prompt);
+                assert_eq!(p.steps, s.steps);
+                assert_eq!(p.cached_prefix, 0);
+                assert_eq!(s.cached_prefix, 0);
+                assert!(s.session_id < 8);
+            }
+            // Default sessions are one-per-request (the id).
+            assert!(plain.iter().all(|r| r.session_id == r.id));
+        }
+    }
+
+    #[test]
+    fn session_assignment_is_deterministic_and_zipf_hot() {
+        let a = stream_requests_sessions(Pattern::Sporadic, 23, 400, 2.0, 0, 3, 16, 1.2);
+        let b = stream_requests_sessions(Pattern::Sporadic, 23, 400, 2.0, 0, 3, 16, 1.2);
+        assert_eq!(a, b);
+        let mut counts = [0usize; 16];
+        for r in &a {
+            counts[r.session_id as usize] += 1;
+        }
+        assert!(
+            counts[0] > counts[8] && counts[0] * 4 > a.len() / 2,
+            "session 0 must be hot: {counts:?}"
+        );
+        assert!(counts.iter().filter(|&&c| c > 0).count() >= 4, "{counts:?}");
     }
 
     #[test]

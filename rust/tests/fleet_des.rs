@@ -1,0 +1,167 @@
+//! Event-driven router properties: the heap-indexed DES router must make
+//! *exactly* the legacy scan's decisions whenever affinity is off (any
+//! policy, any pattern, tie-heavy and degenerate plan signals included);
+//! the affinity-enabled fleet must serialize its `lime-fleet-v2`
+//! artifact byte-for-byte identically at any worker count; and the
+//! MTBF churn generator must drive the fleet churn channel
+//! deterministically. CI runs this suite on both determinism legs.
+
+use lime::adapt::Script;
+use lime::serve::fleet::{
+    fleet_artifact_bytes, route, route_scan, run_fleet_on, run_fleet_sequential, schema_tag,
+    validate_fleet, FleetCluster, FleetSpec, RouterPolicy,
+};
+use lime::util::json::Json;
+use lime::util::pool::Pool;
+use lime::workload::{stream_requests, stream_requests_mix, LengthDist, Pattern, Request};
+
+/// The demo fleet's four heterogeneous clusters, plus two adversarial
+/// variants of the plan signal: all-equal rates (every PlanAware key
+/// collides; ties must all break low) and a NaN rate (PlanAware must
+/// fall back to the JSQ criterion in both implementations).
+fn cluster_tables() -> Vec<(&'static str, Vec<FleetCluster>)> {
+    let base = FleetSpec::demo(1, 1).clusters;
+    let mut equal = base.clone();
+    for c in &mut equal {
+        c.planned_s_per_token = 0.25;
+    }
+    let mut degenerate = base.clone();
+    degenerate[2].planned_s_per_token = f64::NAN;
+    vec![
+        ("heterogeneous", base),
+        ("tie-heavy", equal),
+        ("degenerate-plan", degenerate),
+    ]
+}
+
+fn assert_routes_match(label: &str, requests: &[Request], clusters: &[FleetCluster]) {
+    for policy in RouterPolicy::all() {
+        let des = route(policy, requests, clusters);
+        let scan = route_scan(policy, requests, clusters);
+        assert_eq!(
+            des,
+            scan,
+            "DES router diverged from the scan: {label}, policy {}",
+            policy.key()
+        );
+        let routed: usize = des.iter().map(Vec::len).sum();
+        assert_eq!(routed, requests.len(), "{label}: requests dropped or duplicated");
+    }
+}
+
+#[test]
+fn des_router_decisions_match_the_legacy_scan_exactly() {
+    for (label, clusters) in cluster_tables() {
+        for pattern in [Pattern::Sporadic, Pattern::Bursty] {
+            for seed in [1u64, 0xBADC_0FFE, 42] {
+                let requests = stream_requests(pattern, seed, 600, 200.0, 64, 4);
+                assert_routes_match(label, &requests, &clusters);
+            }
+        }
+    }
+}
+
+#[test]
+fn des_router_matches_the_scan_on_mixed_length_streams() {
+    // Ragged step counts force the plan-finish heap to rebuild whenever
+    // the request length changes — the mixed-length exactness path.
+    let dist = LengthDist::Bimodal {
+        short: (32, 2),
+        long: (128, 12),
+        long_frac: 0.4,
+    };
+    for (label, clusters) in cluster_tables() {
+        for seed in [7u64, 0x51DE] {
+            let requests = stream_requests_mix(Pattern::Sporadic, seed, 500, 200.0, &dist);
+            assert!(
+                requests.iter().any(|r| r.steps != requests[0].steps),
+                "stream must actually be ragged"
+            );
+            assert_routes_match(label, &requests, &clusters);
+        }
+    }
+}
+
+#[test]
+fn affinity_artifact_is_byte_identical_across_worker_counts_and_validates_v2() {
+    let spec = FleetSpec::demo_affinity(120, 2);
+    assert_eq!(schema_tag(&spec), "lime-fleet-v2");
+    let reference = fleet_artifact_bytes(&spec, &run_fleet_sequential(&spec));
+    for workers in [1usize, 4] {
+        let pool = Pool::new(workers);
+        let bytes = fleet_artifact_bytes(&spec, &run_fleet_on(&spec, Some(&pool)));
+        assert_eq!(
+            bytes, reference,
+            "affinity fleet artifact differs at {workers} workers"
+        );
+    }
+    let parsed = Json::parse(std::str::from_utf8(&reference).unwrap()).unwrap();
+    let summary = validate_fleet(&parsed).expect("v2 artifact validates");
+    assert_eq!(summary.schema, "lime-fleet-v2");
+    assert_eq!(summary.name, "e3-demo-fleet-affinity");
+    assert!(parsed.get("affinity").is_some(), "v2 must carry the affinity header");
+
+    // Counters flow end-to-end: the Zipf(1.1) head revisits sessions
+    // within 120 requests, so sticky routing must record hits, every hit
+    // must reuse at least one resident token, and the per-shard counters
+    // must sum to each cell's totals.
+    let cells = run_fleet_sequential(&spec);
+    let mut total_hits = 0u64;
+    for cell in &cells {
+        let aff = cell.affinity.expect("every v2 cell carries counters");
+        assert!(aff.reuse_tokens_saved >= aff.hits, "a hit reuses >= 1 token");
+        assert!(aff.hits <= cell.count as u64);
+        let shard_hits: u64 = cell.shards.iter().map(|s| s.affinity_hits).sum();
+        let shard_reuse: u64 = cell.shards.iter().map(|s| s.reuse_tokens_saved).sum();
+        assert_eq!(shard_hits, aff.hits, "shard hit counters must sum to the cell");
+        assert_eq!(shard_reuse, aff.reuse_tokens_saved);
+        total_hits += aff.hits;
+    }
+    assert!(total_hits > 0, "the Zipf head must produce affinity hits");
+}
+
+#[test]
+fn affinity_free_spec_still_serializes_as_v1() {
+    // The singleton-downgrade rule end-to-end: no affinity on the spec
+    // means the artifact is tagged v1 and carries no affinity header or
+    // counter keys anywhere.
+    let spec = FleetSpec::demo(60, 2);
+    assert_eq!(schema_tag(&spec), "lime-fleet-v1");
+    let bytes = fleet_artifact_bytes(&spec, &run_fleet_sequential(&spec));
+    let text = std::str::from_utf8(&bytes).unwrap();
+    let parsed = Json::parse(text).unwrap();
+    assert_eq!(validate_fleet(&parsed).unwrap().schema, "lime-fleet-v1");
+    assert!(parsed.get("affinity").is_none());
+    assert!(!text.contains("affinity_hits"));
+}
+
+#[test]
+fn mtbf_churn_drives_the_fleet_deterministically() {
+    // Probabilistic (MTBF-driven) churn on cluster 1 only: the generated
+    // timeline is a plain ChurnEvent list, so the fleet must stay
+    // byte-identical across worker counts and validator-clean, re-route
+    // counters included.
+    let mut spec = FleetSpec::demo(120, 2);
+    spec.churn = Script::churn_mtbf("mtbf-blip", 0xD1CE, 0.05, &[1], spec.count);
+    assert!(
+        spec.churn.churn.iter().any(|e| e.at_step < spec.count),
+        "the MTBF script must actually fire within the stream"
+    );
+    let reference = fleet_artifact_bytes(&spec, &run_fleet_sequential(&spec));
+    for workers in [1usize, 4] {
+        let pool = Pool::new(workers);
+        let bytes = fleet_artifact_bytes(&spec, &run_fleet_on(&spec, Some(&pool)));
+        assert_eq!(
+            bytes, reference,
+            "MTBF-churned fleet artifact differs at {workers} workers"
+        );
+    }
+    let parsed = Json::parse(std::str::from_utf8(&reference).unwrap()).unwrap();
+    let summary = validate_fleet(&parsed).expect("MTBF-churned artifact validates");
+    assert_eq!(summary.schema, "lime-fleet-v1");
+    assert!(parsed.get("churn").is_some(), "churn header must be emitted");
+    for cell in run_fleet_sequential(&spec) {
+        let shard_sum: usize = cell.shards.iter().map(|s| s.count).sum();
+        assert_eq!(shard_sum, spec.count, "churn re-routing must conserve requests");
+    }
+}

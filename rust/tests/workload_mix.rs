@@ -406,6 +406,8 @@ fn heterogeneous_steps_finish_independently_and_tbt_uses_own_step_count() {
         arrival: 0.0,
         prompt: vec![7; 64],
         steps,
+        session_id: id,
+        cached_prefix: 0,
     };
     let reqs = vec![mk(0, 8), mk(1, 2)];
     let r = serve_interleaved(&alloc, &cluster, &bw, 2, &opts, &Script::none(), &reqs);
